@@ -1,0 +1,54 @@
+//! E3: sensitivity analysis — τ, Y, and guardrail bounds (plus an
+//! admission-control demo, §2.3).
+//!
+//! Run: `cargo run --release --example sensitivity_sweep [-- --fast]`
+
+use predserve::cli::Args;
+use predserve::controller::admission::{admit, AdmissionRequest, Verdict};
+use predserve::controller::Levers;
+use predserve::experiments::harness::Repeats;
+use predserve::experiments::runs;
+use predserve::gpu::MigProfile;
+use predserve::platform::{Scenario, SimWorld};
+use predserve::tenants::TenantId;
+
+fn main() {
+    let args = Args::from_env();
+    let mut repeats = Repeats::fast();
+    if !args.flag("fast") {
+        repeats.count = 3;
+        repeats.horizon_s = 1200.0;
+    }
+    println!("{}", runs::run_sensitivity(&repeats));
+
+    // Admission control demo: ask for slots on a host under load.
+    let mut world = SimWorld::new(Scenario::paper_single_host(11, Levers::full()));
+    let (snap, view) = world.sample_for_bench();
+    for (profile, gbps) in [
+        (MigProfile::P1g10gb, 0.2),
+        (MigProfile::P3g40gb, 2.0),
+        (MigProfile::P7g80gb, 20.0),
+    ] {
+        let verdict = admit(
+            &AdmissionRequest {
+                tenant: TenantId(9),
+                min_profile: profile,
+                expected_pcie_gbps: gbps,
+            },
+            &snap,
+            &view,
+        );
+        println!("admission ask {:8} @ {gbps:4.1} GB/s -> {verdict:?}", profile.name());
+    }
+    // A modest ask must be admittable on the mostly-idle host.
+    let v = admit(
+        &AdmissionRequest {
+            tenant: TenantId(9),
+            min_profile: MigProfile::P1g10gb,
+            expected_pcie_gbps: 0.2,
+        },
+        &snap,
+        &view,
+    );
+    assert!(matches!(v, Verdict::Admit { .. }));
+}

@@ -1,0 +1,175 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernels) to HLO
+TEXT artifacts the Rust PJRT runtime loads at startup.
+
+Interchange is HLO *text*, never a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``--out-dir``, default ../artifacts):
+  prefill.hlo.txt   prompt-batch prefill executable
+  decode.hlo.txt    one-token decode executable (paged-attention kernel)
+  smoke.hlo.txt     2x2 matmul+2 sanity executable for runtime tests
+  params.bin        raw little-endian f32 parameter blob (flat order)
+  manifest.json     ABI: config, param spec, per-artifact I/O signatures
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in args
+    ]
+
+
+def smoke_fn(x, y):
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    params = M.init_params(cfg, seed=args.seed)
+    spec = M.param_spec(cfg)
+
+    # ---- params.bin (flat f32 little-endian, order == param_spec) ----
+    blob = b"".join(np.asarray(p, dtype="<f4").tobytes() for p in params)
+    with open(os.path.join(args.out_dir, "params.bin"), "wb") as f:
+        f.write(blob)
+
+    param_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+    kv_shape = jax.ShapeDtypeStruct(M.kv_pool_shape(cfg), jnp.float32)
+
+    artifacts = {}
+
+    # ---- prefill ----
+    def prefill_fn(*a):
+        n = len(spec)
+        return M.prefill(cfg, a[:n], a[n], a[n + 1], a[n + 2], a[n + 3], a[n + 4])
+
+    prefill_args = param_shapes + [
+        jax.ShapeDtypeStruct((cfg.batch, cfg.prompt_len), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),  # seq_lens
+        jax.ShapeDtypeStruct((cfg.batch, cfg.max_pages_per_seq), jnp.int32),
+        kv_shape,
+        kv_shape,
+    ]
+    lowered = jax.jit(prefill_fn).lower(*prefill_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(args.out_dir, "prefill.hlo.txt")
+    open(path, "w").write(text)
+    artifacts["prefill"] = {
+        "file": "prefill.hlo.txt",
+        "inputs": _sig(prefill_args),
+        "num_params": len(spec),
+        "outputs": [
+            {"shape": [cfg.batch, cfg.vocab_size], "dtype": "float32"},
+            {"shape": list(M.kv_pool_shape(cfg)), "dtype": "float32"},
+            {"shape": list(M.kv_pool_shape(cfg)), "dtype": "float32"},
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    # ---- decode ----
+    def decode_fn(*a):
+        n = len(spec)
+        return M.decode_step(cfg, a[:n], a[n], a[n + 1], a[n + 2], a[n + 3], a[n + 4])
+
+    decode_args = param_shapes + [
+        jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),  # positions
+        jax.ShapeDtypeStruct((cfg.batch, cfg.max_pages_per_seq), jnp.int32),
+        kv_shape,
+        kv_shape,
+    ]
+    lowered = jax.jit(decode_fn).lower(*decode_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(args.out_dir, "decode.hlo.txt")
+    open(path, "w").write(text)
+    artifacts["decode"] = {
+        "file": "decode.hlo.txt",
+        "inputs": _sig(decode_args),
+        "num_params": len(spec),
+        "outputs": [
+            {"shape": [cfg.batch, cfg.vocab_size], "dtype": "float32"},
+            {"shape": list(M.kv_pool_shape(cfg)), "dtype": "float32"},
+            {"shape": list(M.kv_pool_shape(cfg)), "dtype": "float32"},
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    # ---- smoke ----
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(smoke_fn).lower(s, s))
+    path = os.path.join(args.out_dir, "smoke.hlo.txt")
+    open(path, "w").write(text)
+    artifacts["smoke"] = {
+        "file": "smoke.hlo.txt",
+        "inputs": [{"shape": [2, 2], "dtype": "float32"}] * 2,
+        "num_params": 0,
+        "outputs": [{"shape": [2, 2], "dtype": "float32"}],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "format": 1,
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "page_size": cfg.page_size,
+            "num_pages": cfg.num_pages,
+            "max_pages_per_seq": cfg.max_pages_per_seq,
+            "batch": cfg.batch,
+            "prompt_len": cfg.prompt_len,
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in spec],
+        "params_bin": "params.bin",
+        "artifacts": artifacts,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

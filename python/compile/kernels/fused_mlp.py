@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: fused SwiGLU MLP (gate/up matmuls + silu + down matmul).
+
+The transformer MLP is the second-largest FLOP sink on the decode path after
+attention. The CUDA equivalent fuses the three GEMMs through registers /
+shared memory; the Pallas/TPU rethink tiles the *row* (token) dimension so
+each program holds an (block_rows x d_model) activation tile plus the full
+weight panels in VMEM and performs all three MXU contractions without
+round-tripping the (block_rows x d_ff) intermediate through HBM.
+
+VMEM budget (see DESIGN.md §Perf): weights d*f*3 + tiles — sized for the
+tiny AOT model this stays well under the ~16 MiB/core budget; for a 7B-class
+model the same kernel takes an extra f-chunk grid axis.
+
+interpret=True (CPU PJRT cannot run Mosaic); oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_mlp_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # [BN, D]
+    g = x @ wg_ref[...].astype(jnp.float32)  # [BN, F]  (MXU)
+    u = x @ wu_ref[...].astype(jnp.float32)  # [BN, F]  (MXU)
+    h = (g * jax.nn.sigmoid(g)) * u  # silu(g) * u  (VPU)
+    o_ref[...] = (h @ wd_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fused_mlp(x, wg, wu, wd, *, block_rows: int = 8):
+    """SwiGLU MLP: ``silu(x @ wg) * (x @ wu) @ wd``.
+
+    Args:
+      x: ``[n, d_model]`` activations.
+      wg, wu: ``[d_model, d_ff]`` gate / up projections.
+      wd: ``[d_ff, d_model]`` down projection.
+      block_rows: row-tile size (static). ``n`` is padded up to a multiple.
+
+    Returns:
+      ``[n, d_model]`` float32.
+    """
+    n, d = x.shape
+    f = wg.shape[1]
+    padded = (n + block_rows - 1) // block_rows * block_rows
+    if padded != n:
+        x = jnp.pad(x, ((0, padded - n), (0, 0)))
+    grid = (padded // block_rows,)
+    out = pl.pallas_call(
+        _fused_mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, d), jnp.float32),
+        interpret=True,
+    )(x, wg, wu, wd)
+    return out[:n]

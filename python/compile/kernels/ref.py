@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package must match its oracle to float32 tolerance for
+all shapes/dtypes swept by pytest + hypothesis (python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens, *, page_size):
+    """Gather pages into contiguous KV, then run masked softmax attention."""
+    num_seqs, num_heads, head_dim = q.shape
+    max_pages = page_table.shape[1]
+    num_kv_heads = k_pages.shape[2]
+    group = num_heads // num_kv_heads
+    max_len = max_pages * page_size
+
+    # [S, max_pages, page_size, KH, D] -> [S, max_len, KH, D]
+    k = k_pages[page_table].reshape(num_seqs, max_len, num_kv_heads, head_dim)
+    v = v_pages[page_table].reshape(num_seqs, max_len, num_kv_heads, head_dim)
+    k = jnp.repeat(k, group, axis=2)  # [S, max_len, H, D]
+    v = jnp.repeat(v, group, axis=2)
+
+    scale = 1.0 / (head_dim**0.5)
+    s = jnp.einsum("shd,sthd->sht", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    pos = jnp.arange(max_len)[None, None, :]
+    mask = pos < seq_lens[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("sht,sthd->shd", p, v.astype(jnp.float32))
+
+
+def fused_mlp_ref(x, wg, wu, wd):
+    """SwiGLU MLP reference."""
+    x = x.astype(jnp.float32)
+    g = x @ wg.astype(jnp.float32)
+    u = x @ wu.astype(jnp.float32)
+    return (jax.nn.silu(g) * u) @ wd.astype(jnp.float32)
+
+
+def attention_prefill_ref(q, k, v, seq_lens):
+    """Causal (prefill) attention oracle with per-sequence length masking.
+
+    q/k/v: [S, L, H, D] (k/v already GQA-expanded). Returns [S, L, H, D].
+    """
+    s_len = q.shape[1]
+    head_dim = q.shape[3]
+    scale = 1.0 / (head_dim**0.5)
+    s = jnp.einsum("sqhd,skhd->shqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    qpos = jnp.arange(s_len)[None, None, :, None]
+    kpos = jnp.arange(s_len)[None, None, None, :]
+    causal = kpos <= qpos
+    live = kpos < seq_lens[:, None, None, None]
+    s = jnp.where(causal & live, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("shqk,skhd->sqhd", p, v.astype(jnp.float32))

@@ -1,0 +1,265 @@
+"""L2: OLMo-2-style decoder-only transformer over a paged KV cache.
+
+This is the model side of the paper's LLM case study (vLLM + OLMo 2 7B
+Instruct), scaled to a tiny configuration that executes in milliseconds on
+the CPU PJRT client so the Rust serving engine can drive real batched
+requests end-to-end (examples/llm_serving.rs). The architecture keeps the
+OLMo-2 ingredients: RMSNorm, rotary embeddings, grouped-query attention,
+SwiGLU MLP — with the decode hot path running through the L1 Pallas kernels
+(paged_attention, fused_mlp).
+
+Two entry points are AOT-lowered by aot.py:
+
+  * ``prefill``     — process a padded prompt batch, write K/V into the
+                      paged pool, return next-token logits.
+  * ``decode_step`` — one token per sequence through the paged-attention
+                      kernel (the vLLM decode loop).
+
+Both take a *flat tuple* of parameter tensors in the order produced by
+``flatten_params`` so the Rust runtime can feed buffers positionally; the
+manifest written by aot.py records names/shapes/dtypes.
+
+The paged KV pool (``k_pages``/``v_pages``) and the ``page_table`` are OWNED
+BY THE RUST KV-CACHE MANAGER (serving::kvcache): Python never allocates
+pages; it only reads/writes the slots it is told to.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_mlp import fused_mlp
+from compile.kernels.paged_attention import paged_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny OLMo-2-style configuration (must match rust/src/runtime/spec.rs)."""
+
+    vocab_size: int = 288  # 256 bytes + specials, rounded up
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    d_ff: int = 352
+    rope_theta: float = 10000.0
+    # Paged KV cache geometry (pool shared across sequences, per layer).
+    page_size: int = 16
+    num_pages: int = 64
+    max_pages_per_seq: int = 4
+    # AOT batch geometry.
+    batch: int = 4
+    prompt_len: int = 32
+
+    @property
+    def max_seq_len(self) -> int:
+        return self.max_pages_per_seq * self.page_size
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+PARAM_LAYER_NAMES = ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the positional ABI with the Rust runtime."""
+    spec = [("embed", (cfg.vocab_size, cfg.d_model))]
+    qd = cfg.n_heads * cfg.head_dim
+    kd = cfg.n_kv_heads * cfg.head_dim
+    for layer in range(cfg.n_layers):
+        shapes = {
+            "ln1": (cfg.d_model,),
+            "wq": (cfg.d_model, qd),
+            "wk": (cfg.d_model, kd),
+            "wv": (cfg.d_model, kd),
+            "wo": (qd, cfg.d_model),
+            "ln2": (cfg.d_model,),
+            "wg": (cfg.d_model, cfg.d_ff),
+            "wu": (cfg.d_model, cfg.d_ff),
+            "wd": (cfg.d_ff, cfg.d_model),
+        }
+        for name in PARAM_LAYER_NAMES:
+            spec.append((f"layer{layer}.{name}", shapes[name]))
+    spec.append(("final_ln", (cfg.d_model,)))
+    spec.append(("unembed", (cfg.d_model, cfg.vocab_size)))
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Deterministic scaled-normal init, flat order per ``param_spec``."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "final_ln":
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            out.append(
+                jax.random.normal(sub, shape, jnp.float32) * (1.0 / max(fan_in, 1)) ** 0.5
+            )
+    return out
+
+
+def _unflatten(cfg: ModelConfig, flat):
+    names = [n for n, _ in param_spec(cfg)]
+    assert len(flat) == len(names), (len(flat), len(names))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [..., T, H, D]; positions: [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _scatter_kv(cfg: ModelConfig, pages, layer: int, vals, flat_idx):
+    """Write vals [N, KH, D] into pages[layer] at flat token slots.
+
+    Out-of-range indices (padded positions) are dropped.
+    """
+    pool = pages[layer].reshape(cfg.num_pages * cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
+    pool = pool.at[flat_idx].set(vals, mode="drop")
+    return pages.at[layer].set(
+        pool.reshape(cfg.num_pages, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, flat_params, tokens, seq_lens, page_table, k_pages, v_pages):
+    """Run the prompt through the stack; returns (logits, k_pages', v_pages').
+
+    tokens:      [S, L] int32 (padded with anything beyond seq_lens)
+    seq_lens:    [S] int32
+    page_table:  [S, max_pages_per_seq] int32
+    k_pages/v_pages: [n_layers, num_pages, page_size, n_kv_heads, head_dim]
+    """
+    p = _unflatten(cfg, flat_params)
+    s_n, s_l = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s_l, dtype=jnp.int32), (s_n, s_l))
+    h = p["embed"][tokens]  # [S, L, D]
+
+    # Token slot -> flat pool index (drop padded positions).
+    page_of = positions // cfg.page_size  # [S, L]
+    slot_of = positions % cfg.page_size
+    page_ids = jnp.take_along_axis(page_table, page_of, axis=1)  # [S, L]
+    flat_idx = page_ids * cfg.page_size + slot_of
+    live = positions < seq_lens[:, None]
+    flat_idx = jnp.where(live, flat_idx, cfg.num_pages * cfg.page_size)  # drop
+    flat_idx = flat_idx.reshape(-1)
+
+    scale = 1.0 / (cfg.head_dim**0.5)
+    group = cfg.n_heads // cfg.n_kv_heads
+    for layer in range(cfg.n_layers):
+        lp = {k: p[f"layer{layer}.{k}"] for k in PARAM_LAYER_NAMES}
+        x = rms_norm(h, lp["ln1"])
+        q = (x @ lp["wq"]).reshape(s_n, s_l, cfg.n_heads, cfg.head_dim)
+        k = (x @ lp["wk"]).reshape(s_n, s_l, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ lp["wv"]).reshape(s_n, s_l, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+        k_pages = _scatter_kv(cfg, k_pages, layer, k.reshape(-1, cfg.n_kv_heads, cfg.head_dim), flat_idx)
+        v_pages = _scatter_kv(cfg, v_pages, layer, v.reshape(-1, cfg.n_kv_heads, cfg.head_dim), flat_idx)
+
+        # Dense causal attention over the (short) prompt — prefill is
+        # compute-bound; the paged kernel is the *decode* hot path.
+        kx = jnp.repeat(k, group, axis=2)
+        vx = jnp.repeat(v, group, axis=2)
+        s = jnp.einsum("sqhd,skhd->shqk", q, kx) * scale
+        qpos = positions[:, None, :, None]
+        kpos = positions[:, None, None, :]
+        mask = (kpos <= qpos) & (kpos < seq_lens[:, None, None, None])
+        s = jnp.where(mask, s, -1e30)
+        attn = jnp.einsum("shqk,skhd->sqhd", jax.nn.softmax(s, axis=-1), vx)
+        h = h + attn.reshape(s_n, s_l, -1) @ lp["wo"]
+
+        x = rms_norm(h, lp["ln2"])
+        h = h + fused_mlp(x.reshape(s_n * s_l, cfg.d_model), lp["wg"], lp["wu"], lp["wd"]).reshape(
+            s_n, s_l, cfg.d_model
+        )
+
+    h = rms_norm(h, p["final_ln"])
+    last = jnp.clip(seq_lens - 1, 0, s_l - 1)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]  # [S, D]
+    logits = h_last @ p["unembed"]
+    return logits, k_pages, v_pages
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, flat_params, tokens, positions, page_table, k_pages, v_pages):
+    """One decode step per sequence; returns (logits, k_pages', v_pages').
+
+    tokens:    [S] int32 current token per sequence
+    positions: [S] int32 0-based position of that token
+    """
+    p = _unflatten(cfg, flat_params)
+    s_n = tokens.shape[0]
+    h = p["embed"][tokens]  # [S, D]
+    seq_lens = positions + 1
+
+    page_of = positions // cfg.page_size
+    slot_of = positions % cfg.page_size
+    page_ids = jnp.take_along_axis(page_table, page_of[:, None], axis=1)[:, 0]
+    flat_idx = page_ids * cfg.page_size + slot_of  # [S]
+
+    for layer in range(cfg.n_layers):
+        lp = {k: p[f"layer{layer}.{k}"] for k in PARAM_LAYER_NAMES}
+        x = rms_norm(h, lp["ln1"])
+        q = (x @ lp["wq"]).reshape(s_n, cfg.n_heads, cfg.head_dim)
+        k = (x @ lp["wk"]).reshape(s_n, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ lp["wv"]).reshape(s_n, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+        k = rope(k[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+
+        k_pages = _scatter_kv(cfg, k_pages, layer, k, flat_idx)
+        v_pages = _scatter_kv(cfg, v_pages, layer, v, flat_idx)
+
+        # L1 Pallas paged-attention kernel — the decode hot path.
+        attn = paged_attention(
+            q, k_pages[layer], v_pages[layer], page_table, seq_lens, page_size=cfg.page_size
+        )
+        h = h + attn.reshape(s_n, -1) @ lp["wo"]
+
+        x = rms_norm(h, lp["ln2"])
+        h = h + fused_mlp(x, lp["wg"], lp["wu"], lp["wd"])
+
+    h = rms_norm(h, p["final_ln"])
+    logits = h @ p["unembed"]
+    return logits, k_pages, v_pages
+
+
+def kv_pool_shape(cfg: ModelConfig) -> Tuple[int, ...]:
+    return (cfg.n_layers, cfg.num_pages, cfg.page_size, cfg.n_kv_heads, cfg.head_dim)

@@ -1,0 +1,78 @@
+"""AOT artifact checks: the manifest ABI the Rust runtime depends on."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_files_exist(self, manifest):
+        for art in manifest["artifacts"].values():
+            assert os.path.exists(os.path.join(ART, art["file"]))
+        assert os.path.exists(os.path.join(ART, manifest["params_bin"]))
+
+    def test_hlo_text_parses_as_module(self, manifest):
+        """Artifacts must be HLO text (not proto): check the header and that
+        entry computation exists."""
+        for name, art in manifest["artifacts"].items():
+            text = open(os.path.join(ART, art["file"])).read()
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_param_blob_size_matches_spec(self, manifest):
+        n_floats = sum(int(np.prod(p["shape"])) for p in manifest["params"])
+        size = os.path.getsize(os.path.join(ART, manifest["params_bin"]))
+        assert size == 4 * n_floats
+
+    def test_param_spec_matches_model(self, manifest):
+        cfg = M.ModelConfig()
+        spec = M.param_spec(cfg)
+        assert len(spec) == len(manifest["params"])
+        for (name, shape), entry in zip(spec, manifest["params"]):
+            assert entry["name"] == name
+            assert entry["shape"] == list(shape)
+
+    def test_artifact_input_counts(self, manifest):
+        n = len(manifest["params"])
+        pre = manifest["artifacts"]["prefill"]
+        dec = manifest["artifacts"]["decode"]
+        assert len(pre["inputs"]) == n + 5
+        assert len(dec["inputs"]) == n + 5
+        assert pre["num_params"] == n and dec["num_params"] == n
+
+    def test_kv_shapes_consistent(self, manifest):
+        cfg = M.ModelConfig()
+        kv = list(M.kv_pool_shape(cfg))
+        for which in ("prefill", "decode"):
+            art = manifest["artifacts"][which]
+            assert art["inputs"][-1]["shape"] == kv
+            assert art["inputs"][-2]["shape"] == kv
+            assert art["outputs"][1]["shape"] == kv
+            assert art["outputs"][2]["shape"] == kv
+
+    def test_params_bin_reproducible(self, manifest):
+        """init_params(seed=0) must regenerate the exact blob (determinism of
+        the build — rust golden tests rely on it)."""
+        cfg = M.ModelConfig()
+        params = M.init_params(cfg, seed=0)
+        blob = b"".join(np.asarray(p, dtype="<f4").tobytes() for p in params)
+        with open(os.path.join(ART, manifest["params_bin"]), "rb") as f:
+            assert f.read() == blob

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE numeric signal of the compile path: if these pass, the HLO
+the Rust runtime executes computes the paper's serving math. Hypothesis
+sweeps shapes/dtypes; fixed cases pin the AOT geometry.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_mlp import fused_mlp
+from compile.kernels.paged_attention import paged_attention
+
+
+def _mk_paged(seed, num_seqs, num_heads, num_kv_heads, head_dim, page_size, max_pages, pool_pages, dtype):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (num_seqs, num_heads, head_dim), dtype)
+    kp = jax.random.normal(ks[1], (pool_pages, page_size, num_kv_heads, head_dim), dtype)
+    vp = jax.random.normal(ks[2], (pool_pages, page_size, num_kv_heads, head_dim), dtype)
+    pt = jax.random.randint(ks[3], (num_seqs, max_pages), 0, pool_pages, jnp.int32)
+    max_len = max_pages * page_size
+    sl = jax.random.randint(ks[4], (num_seqs,), 1, max_len + 1, jnp.int32)
+    return q, kp, vp, pt, sl
+
+
+class TestPagedAttentionFixed:
+    def test_aot_geometry(self):
+        """Exactly the geometry the AOT decode artifact uses."""
+        q, kp, vp, pt, sl = _mk_paged(0, 4, 4, 2, 32, 16, 4, 64, jnp.float32)
+        out = paged_attention(q, kp, vp, pt, sl, page_size=16)
+        exp = ref.paged_attention_ref(q, kp, vp, pt, sl, page_size=16)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+    def test_single_token_sequence(self):
+        q, kp, vp, pt, _ = _mk_paged(1, 2, 4, 4, 16, 8, 2, 8, jnp.float32)
+        sl = jnp.ones((2,), jnp.int32)
+        out = paged_attention(q, kp, vp, pt, sl, page_size=8)
+        exp = ref.paged_attention_ref(q, kp, vp, pt, sl, page_size=8)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+    def test_full_pages(self):
+        """Length exactly fills every page (mask boundary)."""
+        q, kp, vp, pt, _ = _mk_paged(2, 3, 8, 2, 16, 4, 3, 12, jnp.float32)
+        sl = jnp.full((3,), 12, jnp.int32)
+        out = paged_attention(q, kp, vp, pt, sl, page_size=4)
+        exp = ref.paged_attention_ref(q, kp, vp, pt, sl, page_size=4)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+    def test_page_boundary_plus_one(self):
+        q, kp, vp, pt, _ = _mk_paged(3, 2, 2, 2, 8, 4, 4, 9, jnp.float32)
+        sl = jnp.array([5, 13], jnp.int32)  # one past a page boundary
+        out = paged_attention(q, kp, vp, pt, sl, page_size=4)
+        exp = ref.paged_attention_ref(q, kp, vp, pt, sl, page_size=4)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+    def test_shared_pages_between_sequences(self):
+        """Two sequences pointing at the SAME pages (prefix sharing / COW
+        read path in the rust KV manager) must read identical values."""
+        q, kp, vp, _, _ = _mk_paged(4, 2, 4, 2, 16, 8, 2, 4, jnp.float32)
+        pt = jnp.array([[0, 1], [0, 1]], jnp.int32)
+        sl = jnp.array([10, 10], jnp.int32)
+        q = q.at[1].set(q[0])
+        out = paged_attention(q, kp, vp, pt, sl, page_size=8)
+        np.testing.assert_allclose(out[0], out[1], rtol=1e-6, atol=1e-6)
+
+    def test_mha_group_of_one(self):
+        """num_heads == num_kv_heads (no GQA broadcast)."""
+        q, kp, vp, pt, sl = _mk_paged(5, 2, 4, 4, 16, 8, 2, 6, jnp.float32)
+        out = paged_attention(q, kp, vp, pt, sl, page_size=8)
+        exp = ref.paged_attention_ref(q, kp, vp, pt, sl, page_size=8)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+    def test_softmax_scale_invariance_shift(self):
+        """Online softmax must be shift-stable: huge logits do not overflow."""
+        q, kp, vp, pt, sl = _mk_paged(6, 2, 2, 2, 8, 4, 2, 4, jnp.float32)
+        out = paged_attention(q * 100.0, kp * 100.0, vp, pt, sl, page_size=4)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_bfloat16_inputs(self):
+        q, kp, vp, pt, sl = _mk_paged(7, 2, 4, 2, 16, 8, 2, 6, jnp.bfloat16)
+        out = paged_attention(q, kp, vp, pt, sl, page_size=8)
+        exp = ref.paged_attention_ref(q, kp, vp, pt, sl, page_size=8)
+        np.testing.assert_allclose(out, exp, rtol=3e-2, atol=3e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    num_seqs=st.integers(1, 5),
+    kv_heads=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    head_dim=st.sampled_from([4, 8, 16, 32]),
+    page_size=st.sampled_from([2, 4, 8, 16]),
+    max_pages=st.integers(1, 5),
+)
+def test_paged_attention_hypothesis(seed, num_seqs, kv_heads, group, head_dim, page_size, max_pages):
+    pool = max_pages * num_seqs + 1
+    q, kp, vp, pt, sl = _mk_paged(
+        seed, num_seqs, kv_heads * group, kv_heads, head_dim, page_size, max_pages, pool, jnp.float32
+    )
+    out = paged_attention(q, kp, vp, pt, sl, page_size=page_size)
+    exp = ref.paged_attention_ref(q, kp, vp, pt, sl, page_size=page_size)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+class TestFusedMlpFixed:
+    def _mk(self, seed, n, d, f, dtype=jnp.float32):
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (n, d), dtype)
+        wg = jax.random.normal(ks[1], (d, f), dtype) * 0.1
+        wu = jax.random.normal(ks[2], (d, f), dtype) * 0.1
+        wd = jax.random.normal(ks[3], (f, d), dtype) * 0.1
+        return x, wg, wu, wd
+
+    def test_aot_geometry(self):
+        x, wg, wu, wd = self._mk(0, 4, 128, 352)
+        np.testing.assert_allclose(
+            fused_mlp(x, wg, wu, wd), ref.fused_mlp_ref(x, wg, wu, wd), rtol=1e-4, atol=1e-5
+        )
+
+    def test_row_padding(self):
+        """n not divisible by block_rows exercises the pad/slice path."""
+        x, wg, wu, wd = self._mk(1, 13, 16, 24)
+        np.testing.assert_allclose(
+            fused_mlp(x, wg, wu, wd, block_rows=8),
+            ref.fused_mlp_ref(x, wg, wu, wd),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_single_row(self):
+        x, wg, wu, wd = self._mk(2, 1, 8, 16)
+        np.testing.assert_allclose(
+            fused_mlp(x, wg, wu, wd), ref.fused_mlp_ref(x, wg, wu, wd), rtol=1e-4, atol=1e-5
+        )
+
+    def test_zero_input_is_zero(self):
+        x, wg, wu, wd = self._mk(3, 4, 8, 16)
+        out = fused_mlp(jnp.zeros_like(x), wg, wu, wd)
+        np.testing.assert_allclose(out, jnp.zeros((4, 8)), atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 33),
+    d=st.sampled_from([4, 8, 16, 64]),
+    f=st.sampled_from([4, 16, 48]),
+    block_rows=st.sampled_from([1, 4, 8]),
+)
+def test_fused_mlp_hypothesis(seed, n, d, f, block_rows):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (n, d), jnp.float32)
+    wg = jax.random.normal(ks[1], (d, f), jnp.float32) * 0.2
+    wu = jax.random.normal(ks[2], (d, f), jnp.float32) * 0.2
+    wd = jax.random.normal(ks[3], (f, d), jnp.float32) * 0.2
+    np.testing.assert_allclose(
+        fused_mlp(x, wg, wu, wd, block_rows=block_rows),
+        ref.fused_mlp_ref(x, wg, wu, wd),
+        rtol=2e-4,
+        atol=1e-5,
+    )

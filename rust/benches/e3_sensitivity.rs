@@ -1,0 +1,15 @@
+//! Regenerates **E3** (sensitivity analysis): SLO threshold tau, the
+//! persistence window Y, and the IO-throttle bounds.
+use predserve::bench::banner;
+use predserve::experiments::harness::Repeats;
+use predserve::experiments::runs;
+
+fn main() {
+    banner("E3 — sensitivity analysis");
+    let mut repeats = Repeats::fast();
+    if std::env::var("PREDSERVE_FAST").is_err() {
+        repeats.count = 3;
+        repeats.horizon_s = 1200.0;
+    }
+    println!("{}", runs::run_sensitivity(&repeats));
+}

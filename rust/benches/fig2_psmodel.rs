@@ -1,0 +1,16 @@
+//! Regenerates **Figure 2** (PCIe contention model): per-tenant bandwidth
+//! under processor sharing as co-active tenant count grows, with and
+//! without per-flow caps g_i; plus the Claim-1 stability check.
+use predserve::bench::banner;
+use predserve::experiments::runs;
+use predserve::model::queueing::ps_utilization_stable;
+
+fn main() {
+    banner("Figure 2 — PS contention model & caps");
+    let (table, rows) = runs::run_fig2();
+    println!("{table}");
+    // Claim 1: sum of caps below capacity => stable.
+    let (rho, stable) = ps_utilization_stable(&[2.0, 2.0, 2.0], 25.0);
+    println!("Claim 1 check: caps 3x2 GB/s on B=25 GB/s -> rho={rho:.2}, stable={stable}");
+    assert!(rows.len() == 8);
+}

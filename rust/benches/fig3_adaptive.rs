@@ -1,0 +1,12 @@
+//! Regenerates **Figure 3**: (a) the controller's adaptive action
+//! timeline under interference bursts; (b) the efficiency-compliance
+//! scatter over the five configurations.
+use predserve::bench::banner;
+use predserve::experiments::harness::Repeats;
+use predserve::experiments::runs;
+
+fn main() {
+    banner("Figure 3 — adaptive behavior & efficiency-compliance");
+    let repeats = Repeats::from_env();
+    println!("{}", runs::run_fig3(&repeats));
+}

@@ -1,0 +1,12 @@
+//! Regenerates **Figure 4**: latency distribution tails under PCIe/SM
+//! contention (CCDF series to target/paper/), showing the heavy tail
+//! under high contention and its mitigation by the full system.
+use predserve::bench::banner;
+use predserve::experiments::harness::Repeats;
+use predserve::experiments::runs;
+
+fn main() {
+    banner("Figure 4 — tail distributions under contention");
+    let repeats = Repeats::from_env();
+    println!("{}", runs::run_fig4(&repeats));
+}

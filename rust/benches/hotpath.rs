@@ -1,0 +1,129 @@
+//! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md): the L3 components
+//! that sit on the request/decision path, plus the end-to-end decode step
+//! through PJRT.
+
+use predserve::bench::{banner, bench_fn, bench_throughput};
+use predserve::controller::{Controller, ControllerConfig, Levers};
+use predserve::fabric::ps::{ps_rates, FlowDemand};
+use predserve::fabric::Fabric;
+use predserve::platform::{Scenario, SimWorld};
+use predserve::serving::PagedKvCache;
+use predserve::sim::EventQueue;
+use predserve::topo::{HostTopology, LinkId};
+use predserve::util::histogram::Histogram;
+use predserve::util::quantile::{P2Quantile, WindowQuantiles};
+use predserve::util::rng::Pcg64;
+
+fn main() {
+    banner("hot-path microbenchmarks");
+
+    // PS solver: 8 flows with mixed caps (the per-mutation fabric cost).
+    let flows: Vec<FlowDemand> = (0..8)
+        .map(|i| FlowDemand {
+            weight: 1.0 + i as f64 * 0.2,
+            cap: if i % 2 == 0 { Some(2.0 + i as f64) } else { None },
+        })
+        .collect();
+    bench_fn("fabric: ps_rates (8 flows, caps)", 300, || {
+        std::hint::black_box(ps_rates(25.0, &flows));
+    });
+
+    // Fabric mutation + completion query.
+    let topo = HostTopology::p4d();
+    let mut fabric = Fabric::new(&topo);
+    let mut i = 0u64;
+    bench_fn("fabric: start+next_completion+remove", 300, || {
+        let id = fabric.start(LinkId((i % 4) as usize), 1.0, 1.0, None, 0);
+        std::hint::black_box(fabric.next_completion());
+        fabric.remove(id);
+        i += 1;
+    });
+
+    // Streaming quantiles.
+    let mut p2 = P2Quantile::new(0.99);
+    let mut rng = Pcg64::seeded(1);
+    bench_fn("telemetry: P2 quantile observe", 200, || {
+        p2.observe(rng.f64() * 20.0);
+    });
+    let mut win = WindowQuantiles::new(4096);
+    for _ in 0..4096 {
+        win.observe(rng.f64());
+    }
+    bench_fn("telemetry: window observe", 200, || {
+        win.observe(rng.f64() * 20.0);
+    });
+    bench_fn("telemetry: window p99 query (4096)", 300, || {
+        std::hint::black_box(win.quantile(0.99));
+    });
+    let mut h = Histogram::new();
+    bench_fn("telemetry: histogram record", 200, || {
+        h.record(rng.below(100_000));
+    });
+
+    // Event queue.
+    let mut q: EventQueue<u32> = EventQueue::new();
+    bench_fn("sim: event queue push+pop", 200, || {
+        q.push_after(rng.f64(), 1);
+        std::hint::black_box(q.pop());
+    });
+
+    // KV cache alloc/append/release cycle.
+    let mut cache = PagedKvCache::new(64, 16, 4);
+    bench_fn("serving: kv alloc+append+release", 200, || {
+        let id = cache.allocate(20).unwrap();
+        cache.append_token(id).unwrap();
+        cache.release(id).unwrap();
+    });
+
+    // Controller tick on a live snapshot/view (decision latency).
+    let scenario = Scenario::paper_single_host(11, Levers::full());
+    let mut world = SimWorld::new(scenario);
+    let (snap, view) = world.sample_for_bench();
+    let mut cfg = ControllerConfig::default();
+    cfg.warmup_obs = 0; // measure the live decision path, not the warmup gate
+    let mut ctl = Controller::new(cfg);
+    bench_fn("controller: on_observation tick", 300, || {
+        std::hint::black_box(ctl.on_observation(&snap, &view));
+    });
+
+    // Whole-run simulation throughput.
+    let r = bench_throughput("sim: full-system 1800s run", 1, "runs", || {
+        SimWorld::new(Scenario::paper_single_host(11, Levers::full())).run()
+    });
+    println!(
+        "  (run completed {} requests; ~{:.0} sim-events/wall-second implied)",
+        r.completed,
+        r.completed as f64 * 5.0
+    );
+
+    // End-to-end decode step through PJRT (needs artifacts).
+    match predserve::serving::Engine::load_default() {
+        Ok(mut engine) => {
+            use predserve::serving::request::SamplingParams;
+            for i in 0..4 {
+                engine.submit_text(
+                    &format!("benchmark prompt {i}"),
+                    SamplingParams {
+                        top_k: 0,
+                        seed: i,
+                        max_new_tokens: 10_000, // keep rows busy
+                    },
+                );
+            }
+            // Prefill once, then measure steady-state decode steps.
+            engine.step().unwrap();
+            let t0 = std::time::Instant::now();
+            let steps = 40;
+            for _ in 0..steps {
+                engine.step().unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "serving: decode step (batch=4, PJRT)           {:10.2} ms/step  ({:.0} tok/s)",
+                dt / steps as f64 * 1e3,
+                4.0 * steps as f64 / dt
+            );
+        }
+        Err(e) => println!("serving decode bench skipped (run `make artifacts`): {e}"),
+    }
+}

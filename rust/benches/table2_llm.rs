@@ -1,0 +1,15 @@
+//! Regenerates **Table 2** (LLM serving case study): TTFT p99 and
+//! normalized throughput for static MIG vs the full system under the
+//! same T2/T3 interference, SLO TTFT p99 <= 200 ms.
+use predserve::bench::{banner, bench_throughput};
+use predserve::experiments::harness::Repeats;
+use predserve::experiments::runs;
+
+fn main() {
+    banner("Table 2 — LLM serving (vLLM-like engine workload, TTFT)");
+    let repeats = Repeats::from_env();
+    let sums = bench_throughput("llm case: 2 configs x repeats", (repeats.count * 2) as u64, "runs", || {
+        runs::run_table2(&repeats)
+    });
+    println!("\n{}", runs::render_table2(&sums));
+}

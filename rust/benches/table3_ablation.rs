@@ -1,0 +1,17 @@
+//! Regenerates **Table 3** (E2 ablation): SLO miss-rate, p99, normalized
+//! throughput for the five configurations, mean ± 95% CI over the repeat
+//! set (7 × 1800 s by default; set PREDSERVE_FAST=1 for a 3 × 600 s smoke).
+use predserve::bench::{banner, bench_throughput};
+use predserve::experiments::harness::Repeats;
+use predserve::experiments::runs;
+
+fn main() {
+    banner("Table 3 — ablation study (E2)");
+    let repeats = Repeats::from_env();
+    let runs_total = (repeats.count * 5) as u64;
+    let sums = bench_throughput("ablation: 5 configs x repeats", runs_total, "runs", || {
+        runs::run_ablation(&repeats)
+    });
+    println!("\n{}", runs::render_table3(&sums));
+    println!("(paper columns reproduced from Table 3 for side-by-side comparison)");
+}

@@ -1,0 +1,15 @@
+//! Regenerates **Table 4** (controller overheads): MIG reconfiguration
+//! wall time, disruptive move frequency, controller CPU share.
+use predserve::bench::{banner, bench_throughput};
+use predserve::experiments::harness::Repeats;
+use predserve::experiments::runs;
+
+fn main() {
+    banner("Table 4 — controller overheads");
+    let repeats = Repeats::from_env();
+    let sums = bench_throughput("full-system repeats", repeats.count as u64, "runs", || {
+        runs::run_ablation(&repeats)
+    });
+    let full = sums.iter().find(|s| s.label == "Full System").unwrap();
+    println!("\n{}", runs::render_table4(full));
+}

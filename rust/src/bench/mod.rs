@@ -1,0 +1,71 @@
+//! Minimal benchmark harness (criterion substitute for the offline
+//! build). Benches are built with `harness = false` and call
+//! [`bench_fn`] / [`bench_throughput`] directly.
+
+use std::time::Instant;
+
+/// Run `f` repeatedly for ~`target_ms` of wall time after a warmup and
+/// report ns/iter statistics.
+pub fn bench_fn<F: FnMut()>(name: &str, target_ms: u64, mut f: F) {
+    // Warmup.
+    let warm_until = Instant::now() + std::time::Duration::from_millis(target_ms / 5 + 1);
+    let mut iters_hint = 0u64;
+    while Instant::now() < warm_until {
+        f();
+        iters_hint += 1;
+    }
+    let iters = iters_hint.max(1);
+
+    let mut samples = Vec::new();
+    let run_until = Instant::now() + std::time::Duration::from_millis(target_ms);
+    while Instant::now() < run_until {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let p5 = samples[samples.len() / 20];
+    let p95 = samples[samples.len() * 19 / 20];
+    println!("{name:48} {median:12.1} ns/iter  [{p5:.1} .. {p95:.1}]");
+}
+
+/// Time one invocation of `f`, printing seconds and a caller-supplied
+/// unit count per second.
+pub fn bench_throughput<T>(name: &str, units: u64, unit_name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:48} {dt:8.3} s   {:12.0} {unit_name}/s",
+        units as f64 / dt
+    );
+    out
+}
+
+/// Banner printed by every paper-table bench.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_runs() {
+        let mut x = 0u64;
+        bench_fn("noop-ish", 10, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn bench_throughput_returns_value() {
+        let v = bench_throughput("compute", 100, "items", || 42);
+        assert_eq!(v, 42);
+    }
+}

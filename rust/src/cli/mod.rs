@@ -1,0 +1,108 @@
+//! Minimal CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        // Bare flags bind a following bare word as their value, so place
+        // flags last or use `=` (documented behavior).
+        let a = parse("sim extra --seed 7 --levers=full --fast");
+        assert_eq!(a.positional, vec!["sim", "extra"]);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert_eq!(a.get_str("levers", "none"), "full");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_f64("horizon", 1800.0), 1800.0);
+        assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse("--verbose cmd");
+        // "--verbose cmd": cmd is consumed as the value of --verbose
+        // (documented behavior: place flags after positionals or use =).
+        assert_eq!(a.get_str("verbose", ""), "cmd");
+    }
+}

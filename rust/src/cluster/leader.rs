@@ -1,0 +1,123 @@
+//! Leader: Slurm-like launcher + aggregator for the 2-node experiment
+//! (the paper's contribution (2): "First SLO-safe, multi-tenant control
+//! demo on a multi-node (16-GPU) cloud cluster without fabric
+//! privileges"). Control stays per-host; the leader only dispatches
+//! work and aggregates results.
+
+use std::net::TcpListener;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::proto::{read_msg, write_msg, Msg};
+use super::worker::Worker;
+
+/// Aggregated cluster results.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub per_node: Vec<(String, f64, f64, f64)>, // (node, miss, p99, rps)
+    pub mean_miss_rate: f64,
+    pub mean_p99_ms: f64,
+    pub total_completed: u64,
+    pub total_rps: f64,
+}
+
+/// The cluster leader.
+pub struct Leader;
+
+impl Leader {
+    /// Launch `nodes` in-process workers connected over real TCP
+    /// (localhost), dispatch the same scenario to every node, and
+    /// aggregate. This is the Slurm-like `srun` of the repro: every node
+    /// runs its own controller over its own 8 GPUs.
+    pub fn run_cluster(
+        nodes: usize,
+        seed: u64,
+        levers: &str,
+        horizon_s: f64,
+        workload: &str,
+    ) -> Result<ClusterReport> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+
+        // Launch workers.
+        let mut joins = Vec::new();
+        for n in 0..nodes {
+            let node = format!("node{n}");
+            let addr_s = addr.to_string();
+            joins.push(thread::spawn(move || {
+                let w = Worker::new(node);
+                w.serve(&addr_s)
+            }));
+        }
+
+        // Accept connections, dispatch, gather.
+        let mut results = Vec::new();
+        let mut streams = Vec::new();
+        for n in 0..nodes {
+            let (mut stream, _) = listener.accept()?;
+            let hello = read_msg(&mut stream)?;
+            let node = match hello {
+                Msg::Hello { node, gpus } => {
+                    assert_eq!(gpus, 8, "p4d node must expose 8 GPUs");
+                    node
+                }
+                other => return Err(anyhow!("expected Hello, got {other:?}")),
+            };
+            // Distinct seed per node: independent hosts, same config.
+            write_msg(
+                &mut stream,
+                &Msg::RunScenario {
+                    seed: seed + n as u64,
+                    levers: levers.to_string(),
+                    horizon_s,
+                    workload: workload.to_string(),
+                },
+            )?;
+            streams.push((node, stream));
+        }
+        for (node, stream) in streams.iter_mut() {
+            match read_msg(stream)? {
+                Msg::RunDone {
+                    miss_rate,
+                    p99_ms,
+                    rps,
+                    completed,
+                    ..
+                } => results.push((node.clone(), miss_rate, p99_ms, rps, completed)),
+                other => return Err(anyhow!("expected RunDone, got {other:?}")),
+            }
+            write_msg(stream, &Msg::Shutdown)?;
+        }
+        for j in joins {
+            j.join().map_err(|_| anyhow!("worker panicked"))??;
+        }
+
+        let n = results.len() as f64;
+        Ok(ClusterReport {
+            mean_miss_rate: results.iter().map(|r| r.1).sum::<f64>() / n,
+            mean_p99_ms: results.iter().map(|r| r.2).sum::<f64>() / n,
+            total_rps: results.iter().map(|r| r.3).sum::<f64>(),
+            total_completed: results.iter().map(|r| r.4).sum::<u64>(),
+            per_node: results
+                .into_iter()
+                .map(|(node, m, p, r, _)| (node, m, p, r))
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_node_cluster_roundtrip() {
+        let report = Leader::run_cluster(2, 21, "static", 45.0, "single").unwrap();
+        assert_eq!(report.per_node.len(), 2);
+        assert!(report.total_completed > 4_000);
+        assert!(report.mean_p99_ms > 0.0);
+        // Distinct nodes reported.
+        assert_ne!(report.per_node[0].0, report.per_node[1].0);
+    }
+}

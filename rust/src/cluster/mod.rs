@@ -1,0 +1,20 @@
+//! Multi-node cluster runtime (the paper's 2-node / 16-GPU deployment,
+//! §3.1, orchestrated there by Slurm; here by a Slurm-like launcher).
+//!
+//! * Each **worker** owns one simulated host (or a local serving engine)
+//!   and runs its own host-level controller — the paper's design point:
+//!   control is per-host, no fabric privileges needed.
+//! * The **leader** launches workers, routes work with
+//!   [`crate::serving::Router`] semantics, and aggregates per-host
+//!   results into cluster-level tables.
+//!
+//! Transport is length-prefixed JSON over TCP (`std::net`, no tokio in
+//! the offline vendor set — see DESIGN.md).
+
+pub mod proto;
+pub mod worker;
+pub mod leader;
+
+pub use leader::{ClusterReport, Leader};
+pub use proto::{read_msg, write_msg, Msg};
+pub use worker::Worker;

@@ -1,0 +1,173 @@
+//! Wire protocol: length-prefixed JSON messages over TCP.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Cluster messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Leader → worker: run a scenario.
+    RunScenario {
+        seed: u64,
+        levers: String,
+        horizon_s: f64,
+        /// "single" (E1 world) or "llm" (Table 2 world).
+        workload: String,
+    },
+    /// Worker → leader: run finished.
+    RunDone {
+        node: String,
+        miss_rate: f64,
+        p99_ms: f64,
+        p95_ms: f64,
+        rps: f64,
+        completed: u64,
+        moves_per_hour: f64,
+    },
+    /// Leader → worker: shut down.
+    Shutdown,
+    /// Worker → leader: hello (registration).
+    Hello { node: String, gpus: usize },
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Msg::RunScenario {
+                seed,
+                levers,
+                horizon_s,
+                workload,
+            } => Json::obj(vec![
+                ("type", Json::Str("run".into())),
+                ("seed", Json::Num(*seed as f64)),
+                ("levers", Json::Str(levers.clone())),
+                ("horizon_s", Json::Num(*horizon_s)),
+                ("workload", Json::Str(workload.clone())),
+            ]),
+            Msg::RunDone {
+                node,
+                miss_rate,
+                p99_ms,
+                p95_ms,
+                rps,
+                completed,
+                moves_per_hour,
+            } => Json::obj(vec![
+                ("type", Json::Str("done".into())),
+                ("node", Json::Str(node.clone())),
+                ("miss_rate", Json::Num(*miss_rate)),
+                ("p99_ms", Json::Num(*p99_ms)),
+                ("p95_ms", Json::Num(*p95_ms)),
+                ("rps", Json::Num(*rps)),
+                ("completed", Json::Num(*completed as f64)),
+                ("moves_per_hour", Json::Num(*moves_per_hour)),
+            ]),
+            Msg::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".into()))]),
+            Msg::Hello { node, gpus } => Json::obj(vec![
+                ("type", Json::Str("hello".into())),
+                ("node", Json::Str(node.clone())),
+                ("gpus", Json::Num(*gpus as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Msg> {
+        let ty = j
+            .get("type")
+            .as_str()
+            .ok_or_else(|| anyhow!("message missing type"))?;
+        Ok(match ty {
+            "run" => Msg::RunScenario {
+                seed: j.get("seed").as_f64().unwrap_or(0.0) as u64,
+                levers: j.get("levers").as_str().unwrap_or("full").to_string(),
+                horizon_s: j.get("horizon_s").as_f64().unwrap_or(600.0),
+                workload: j.get("workload").as_str().unwrap_or("single").to_string(),
+            },
+            "done" => Msg::RunDone {
+                node: j.get("node").as_str().unwrap_or("?").to_string(),
+                miss_rate: j.get("miss_rate").as_f64().unwrap_or(0.0),
+                p99_ms: j.get("p99_ms").as_f64().unwrap_or(0.0),
+                p95_ms: j.get("p95_ms").as_f64().unwrap_or(0.0),
+                rps: j.get("rps").as_f64().unwrap_or(0.0),
+                completed: j.get("completed").as_f64().unwrap_or(0.0) as u64,
+                moves_per_hour: j.get("moves_per_hour").as_f64().unwrap_or(0.0),
+            },
+            "shutdown" => Msg::Shutdown,
+            "hello" => Msg::Hello {
+                node: j.get("node").as_str().unwrap_or("?").to_string(),
+                gpus: j.get("gpus").as_usize().unwrap_or(0),
+            },
+            other => bail!("unknown message type {other}"),
+        })
+    }
+}
+
+/// Write a length-prefixed message.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let body = msg.to_json().to_string().into_bytes();
+    w.write_all(&(body.len() as u32).to_be_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a length-prefixed message.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > 1 << 20 {
+        bail!("oversized message ({len} bytes)");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let text = String::from_utf8(body)?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("bad message json: {e}"))?;
+    Msg::from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let msgs = vec![
+            Msg::Hello {
+                node: "node0".into(),
+                gpus: 8,
+            },
+            Msg::RunScenario {
+                seed: 7,
+                levers: "full".into(),
+                horizon_s: 600.0,
+                workload: "llm".into(),
+            },
+            Msg::RunDone {
+                node: "node1".into(),
+                miss_rate: 0.11,
+                p99_ms: 16.5,
+                p95_ms: 12.0,
+                rps: 79.9,
+                completed: 144_000,
+                moves_per_hour: 3.0,
+            },
+            Msg::Shutdown,
+        ];
+        for m in msgs {
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &m).unwrap();
+            let got = read_msg(&mut &buf[..]).unwrap();
+            assert_eq!(got, m);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        assert!(read_msg(&mut &buf[..]).is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Worker: one node of the cluster. Owns a simulated p4d host (8 GPUs)
+//! with its own host-level controller and runs scenarios on demand.
+
+use std::net::TcpStream;
+
+use anyhow::Result;
+
+use crate::controller::Levers;
+use crate::platform::{Scenario, SimWorld};
+
+use super::proto::{read_msg, write_msg, Msg};
+
+/// A cluster worker process/thread.
+pub struct Worker {
+    pub node: String,
+}
+
+fn levers_from_str(s: &str) -> Levers {
+    match s {
+        "none" | "static" => Levers::none(),
+        "guards" => Levers::guards_only(),
+        "placement" => Levers::placement_only(),
+        "mig" => Levers::mig_only(),
+        _ => Levers::full(),
+    }
+}
+
+impl Worker {
+    pub fn new(node: impl Into<String>) -> Worker {
+        Worker { node: node.into() }
+    }
+
+    /// Execute one scenario request locally.
+    pub fn run_scenario(&self, seed: u64, levers: &str, horizon_s: f64, workload: &str) -> Msg {
+        let lv = levers_from_str(levers);
+        let mut scenario = match workload {
+            "llm" => Scenario::paper_llm_case(seed, lv),
+            _ => Scenario::paper_single_host(seed, lv),
+        };
+        scenario.horizon = horizon_s;
+        let r = SimWorld::new(scenario).run();
+        Msg::RunDone {
+            node: self.node.clone(),
+            miss_rate: r.miss_rate,
+            p99_ms: r.p99_ms,
+            p95_ms: r.p95_ms,
+            rps: r.rps,
+            completed: r.completed,
+            moves_per_hour: r.moves_per_hour,
+        }
+    }
+
+    /// Connect to the leader and serve until `Shutdown`.
+    pub fn serve(&self, leader_addr: &str) -> Result<()> {
+        let mut stream = TcpStream::connect(leader_addr)?;
+        write_msg(
+            &mut stream,
+            &Msg::Hello {
+                node: self.node.clone(),
+                gpus: 8,
+            },
+        )?;
+        loop {
+            match read_msg(&mut stream)? {
+                Msg::RunScenario {
+                    seed,
+                    levers,
+                    horizon_s,
+                    workload,
+                } => {
+                    let done = self.run_scenario(seed, &levers, horizon_s, &workload);
+                    write_msg(&mut stream, &done)?;
+                }
+                Msg::Shutdown => return Ok(()),
+                other => {
+                    crate::log_warn!("cluster.worker", "unexpected message {other:?}");
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_run_produces_stats() {
+        let w = Worker::new("test-node");
+        let msg = w.run_scenario(3, "static", 60.0, "single");
+        match msg {
+            Msg::RunDone {
+                node,
+                completed,
+                p99_ms,
+                ..
+            } => {
+                assert_eq!(node, "test-node");
+                assert!(completed > 3_000);
+                assert!(p99_ms > 0.0);
+            }
+            _ => panic!("expected RunDone"),
+        }
+    }
+
+    #[test]
+    fn lever_parsing() {
+        assert_eq!(levers_from_str("mig"), Levers::mig_only());
+        assert_eq!(levers_from_str("bogus-default"), Levers::full());
+        assert_eq!(levers_from_str("static"), Levers::none());
+    }
+}

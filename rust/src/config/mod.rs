@@ -1,0 +1,110 @@
+//! Config system: JSON config files overriding scenario / controller
+//! parameters (serde substitute; schema documented in README).
+//!
+//! Example:
+//! ```json
+//! {
+//!   "controller": {"tau_ms": 12.5, "persistence_y": 3, "levers": "full"},
+//!   "workload":   {"arrival_rps": 80.0, "slo_ms": 15.0},
+//!   "run":        {"horizon_s": 1800.0, "sample_dt": 2.0, "seed": 11}
+//! }
+//! ```
+
+use crate::controller::Levers;
+use crate::platform::Scenario;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Parse a lever set name.
+pub fn parse_levers(s: &str) -> Result<Levers> {
+    Ok(match s {
+        "full" => Levers::full(),
+        "none" | "static" => Levers::none(),
+        "mig" | "mig-only" => Levers::mig_only(),
+        "placement" | "placement-only" => Levers::placement_only(),
+        "guards" | "guards-only" => Levers::guards_only(),
+        other => return Err(anyhow!("unknown lever set '{other}'")),
+    })
+}
+
+/// Apply a parsed config JSON onto a scenario.
+pub fn apply(scenario: &mut Scenario, j: &Json) -> Result<()> {
+    let ctl = j.get("controller");
+    if let Some(v) = ctl.get("tau_ms").as_f64() {
+        scenario.controller.tau_ms = v;
+    }
+    if let Some(v) = ctl.get("persistence_y").as_f64() {
+        scenario.controller.persistence_y = v as u32;
+    }
+    if let Some(v) = ctl.get("dwell_obs").as_f64() {
+        scenario.controller.dwell_obs = v as u64;
+    }
+    if let Some(v) = ctl.get("cooldown_obs").as_f64() {
+        scenario.controller.cooldown_obs = v as u64;
+    }
+    if let Some(s) = ctl.get("levers").as_str() {
+        scenario.controller.levers = parse_levers(s)?;
+    }
+    let wl = j.get("workload");
+    if let Some(v) = wl.get("arrival_rps").as_f64() {
+        scenario.t1.arrival_rps = v;
+    }
+    if let Some(v) = wl.get("slo_ms").as_f64() {
+        scenario.t1.slo_ms = v;
+        scenario.controller.tau_ms = v;
+    }
+    let run = j.get("run");
+    if let Some(v) = run.get("horizon_s").as_f64() {
+        scenario.horizon = v;
+    }
+    if let Some(v) = run.get("sample_dt").as_f64() {
+        scenario.sample_dt = v;
+    }
+    if let Some(v) = run.get("seed").as_f64() {
+        scenario.seed = v as u64;
+    }
+    Ok(())
+}
+
+/// Load and apply a config file.
+pub fn load_into(scenario: &mut Scenario, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("config parse: {e}"))?;
+    apply(scenario, &j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_overrides() {
+        let mut s = Scenario::paper_single_host(1, Levers::none());
+        let j = Json::parse(
+            r#"{"controller":{"tau_ms":12.5,"levers":"mig"},
+                "workload":{"arrival_rps":50},
+                "run":{"horizon_s":300,"seed":9}}"#,
+        )
+        .unwrap();
+        apply(&mut s, &j).unwrap();
+        assert_eq!(s.controller.tau_ms, 12.5);
+        assert_eq!(s.controller.levers, Levers::mig_only());
+        assert_eq!(s.t1.arrival_rps, 50.0);
+        assert_eq!(s.horizon, 300.0);
+        assert_eq!(s.seed, 9);
+    }
+
+    #[test]
+    fn bad_levers_rejected() {
+        assert!(parse_levers("turbo").is_err());
+        assert!(parse_levers("full").is_ok());
+    }
+
+    #[test]
+    fn partial_config_ok() {
+        let mut s = Scenario::paper_single_host(1, Levers::full());
+        let before_tau = s.controller.tau_ms;
+        apply(&mut s, &Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(s.controller.tau_ms, before_tau);
+    }
+}

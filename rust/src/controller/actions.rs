@@ -1,0 +1,120 @@
+//! Actions the controller can emit — the §2.2 decision space.
+
+use crate::gpu::MigProfile;
+use crate::tenants::TenantId;
+
+/// Isolation changes bundle the MIG/placement levers (§2.3 "upgrade the
+/// tenant's isolation" = increase MIG share *or* migrate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum IsolationChange {
+    /// Reconfigure the tenant's instance to a larger/smaller profile on
+    /// its current GPU (dynamic MIG).
+    Resize { to: MigProfile },
+    /// Move the tenant to an existing free instance (placement lever; no
+    /// MIG reconfiguration needed).
+    MoveExisting { gpu: usize, to: MigProfile },
+    /// Create a new instance on `gpu` (dynamic MIG + placement) and move
+    /// the tenant into it.
+    CreateAndMove { gpu: usize, to: MigProfile },
+}
+
+/// One actuation command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    /// Upgrade/relax/move the tenant's isolation.
+    ChangeIsolation {
+        tenant: TenantId,
+        change: IsolationChange,
+        /// True when this is a relaxation (shrink to free resources).
+        relax: bool,
+    },
+    /// Cap a noisy peer's MPS active-thread percentage.
+    SetMpsQuota { tenant: TenantId, quota: f64 },
+    /// Apply (Some) or lift (None) a cgroup io.max throttle.
+    SetIoThrottle {
+        tenant: TenantId,
+        cap_gbps: Option<f64>,
+    },
+    /// Pin the tenant's host threads to a NUMA domain away from IRQ-heavy
+    /// cores (§2.3).
+    PinCpu { tenant: TenantId, numa: usize },
+    /// Revert to the last-known-good configuration (§2.4 rollback).
+    Rollback { tenant: TenantId },
+}
+
+impl Action {
+    /// Does this action pause the tenant (and hence count against the
+    /// dwell/cool-down budget)? Guardrails are "lightweight" — they do
+    /// not interrupt anything.
+    pub fn is_disruptive(&self) -> bool {
+        matches!(
+            self,
+            Action::ChangeIsolation { .. } | Action::Rollback { .. }
+        )
+    }
+
+    /// Short tag for audit logs / Figure 3a lanes.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Action::ChangeIsolation { relax: true, .. } => "relax",
+            Action::ChangeIsolation {
+                change: IsolationChange::Resize { .. },
+                ..
+            } => "mig",
+            Action::ChangeIsolation { .. } => "placement",
+            Action::SetMpsQuota { .. } => "mps_quota",
+            Action::SetIoThrottle { .. } => "io_throttle",
+            Action::PinCpu { .. } => "pin_cpu",
+            Action::Rollback { .. } => "rollback",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tenants::spec::T1;
+
+    #[test]
+    fn disruptive_classification() {
+        assert!(Action::ChangeIsolation {
+            tenant: T1,
+            change: IsolationChange::Resize {
+                to: MigProfile::P3g40gb
+            },
+            relax: false,
+        }
+        .is_disruptive());
+        assert!(!Action::SetMpsQuota {
+            tenant: T1,
+            quota: 50.0
+        }
+        .is_disruptive());
+        assert!(!Action::SetIoThrottle {
+            tenant: T1,
+            cap_gbps: Some(0.2)
+        }
+        .is_disruptive());
+    }
+
+    #[test]
+    fn kinds_for_fig3_lanes() {
+        let mig = Action::ChangeIsolation {
+            tenant: T1,
+            change: IsolationChange::Resize {
+                to: MigProfile::P3g40gb,
+            },
+            relax: false,
+        };
+        assert_eq!(mig.kind(), "mig");
+        let mv = Action::ChangeIsolation {
+            tenant: T1,
+            change: IsolationChange::MoveExisting {
+                gpu: 2,
+                to: MigProfile::P1g10gb,
+            },
+            relax: false,
+        };
+        assert_eq!(mv.kind(), "placement");
+    }
+}

@@ -1,0 +1,165 @@
+//! Admission control (§2.3 last sentence): "In cases where no safe
+//! placement can be found for a new tenant without violating the SLOs of
+//! existing tenants, an admission control mechanism will queue or reject
+//! the new workload."
+
+use crate::gpu::MigProfile;
+use crate::telemetry::SignalSnapshot;
+use crate::tenants::TenantId;
+
+use super::placement::{self, ScoreWeights};
+use super::view::PlannerView;
+
+/// Resource ask of a tenant requesting admission.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionRequest {
+    pub tenant: TenantId,
+    /// Smallest profile the workload can run on.
+    pub min_profile: MigProfile,
+    /// Expected sustained PCIe demand (GB/s).
+    pub expected_pcie_gbps: f64,
+}
+
+/// Admission verdict.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    /// Admit on this GPU / profile.
+    Admit { gpu: usize, profile: MigProfile },
+    /// No slot now, but capacity will exist once reconfiguration frees
+    /// slices — hold in queue.
+    Queue,
+    /// Structurally impossible without violating existing SLOs.
+    Reject,
+}
+
+/// Placement-score ceiling above which a slot would endanger the primary
+/// tenant's SLO.
+pub const SAFE_SCORE: f64 = 1.5;
+/// Link headroom required after adding the newcomer's expected traffic.
+pub const LINK_HEADROOM: f64 = 0.85;
+
+/// Decide admission for `req` given the current host state.
+pub fn admit(req: &AdmissionRequest, snap: &SignalSnapshot, view: &PlannerView) -> Verdict {
+    let w = ScoreWeights::default();
+    let cands = placement::candidates(
+        req.tenant,
+        snap,
+        view,
+        &w,
+        true,
+        req.min_profile,
+        crate::gpu::MigProfile::P7g80gb,
+    );
+    // Among safe candidates, admit on the *smallest* adequate profile —
+    // admission should not squat a whole GPU when a 1g slice suffices
+    // (the controller can always upgrade later).
+    let mut safe: Vec<&super::placement::Candidate> = cands
+        .iter()
+        .filter(|c| {
+            if c.score > SAFE_SCORE {
+                return false;
+            }
+            let link = view.topo.link_of_gpu(c.gpu);
+            let cap = view.topo.link_capacity(link);
+            let used = snap.link(link).map(|l| l.gbps).unwrap_or(0.0);
+            (used + req.expected_pcie_gbps) / cap <= LINK_HEADROOM
+        })
+        .collect();
+    safe.sort_by(|a, b| {
+        a.profile
+            .cmp(&b.profile)
+            .then(a.score.total_cmp(&b.score))
+    });
+    if let Some(c) = safe.first() {
+        return Verdict::Admit {
+            gpu: c.gpu,
+            profile: c.profile,
+        };
+    }
+    // Any candidate at all (even unsafe) means capacity exists: queue.
+    if !cands.is_empty() {
+        Verdict::Queue
+    } else {
+        Verdict::Reject
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::A100Gpu;
+    use crate::telemetry::signals::{LinkSignal, SignalSnapshot};
+    use crate::topo::{HostTopology, LinkId};
+
+    fn empty_snap() -> SignalSnapshot {
+        SignalSnapshot {
+            t: 0.0,
+            dt: 1.0,
+            tenants: vec![],
+            links: (0..6)
+                .map(|i| LinkSignal {
+                    link: LinkId(i),
+                    utilization: 0.0,
+                    gbps: 0.0,
+                })
+                .collect(),
+            gpu_sm_util: vec![0.0; 8],
+            numa_io_gbps: vec![0.0, 0.0],
+            numa_irq_rate: vec![0.0, 0.0],
+        }
+    }
+
+    fn view_with_free_gpus() -> PlannerView {
+        PlannerView {
+            topo: HostTopology::p4d(),
+            gpus: (0..8).map(A100Gpu::new).collect(),
+            tenants: vec![],
+            free_instances: vec![],
+            t1_base_rps: 120.0,
+        }
+    }
+
+    #[test]
+    fn admits_on_idle_host() {
+        let v = view_with_free_gpus();
+        let req = AdmissionRequest {
+            tenant: TenantId(9),
+            min_profile: MigProfile::P2g20gb,
+            expected_pcie_gbps: 2.0,
+        };
+        assert!(matches!(
+            admit(&req, &empty_snap(), &v),
+            Verdict::Admit { .. }
+        ));
+    }
+
+    #[test]
+    fn rejects_when_no_capacity() {
+        let mut v = view_with_free_gpus();
+        for g in v.gpus.iter_mut() {
+            g.create_at(MigProfile::P7g80gb, 0).unwrap();
+        }
+        let req = AdmissionRequest {
+            tenant: TenantId(9),
+            min_profile: MigProfile::P1g10gb,
+            expected_pcie_gbps: 0.5,
+        };
+        assert_eq!(admit(&req, &empty_snap(), &v), Verdict::Reject);
+    }
+
+    #[test]
+    fn queues_when_links_saturated() {
+        let v = view_with_free_gpus();
+        let mut snap = empty_snap();
+        for l in snap.links.iter_mut() {
+            l.gbps = 24.0; // every PCIe link nearly full
+            l.utilization = 0.96;
+        }
+        let req = AdmissionRequest {
+            tenant: TenantId(9),
+            min_profile: MigProfile::P1g10gb,
+            expected_pcie_gbps: 5.0,
+        };
+        assert_eq!(admit(&req, &snap, &v), Verdict::Queue);
+    }
+}

@@ -1,0 +1,105 @@
+//! Decision audit log (§2.4: "log all decisions with signal snapshots for
+//! audit") — also the data source for Table 4 (move frequency, reconfig
+//! durations) and the Figure 3a action timeline.
+
+/// One logged controller decision.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// Sim/wall time (seconds).
+    pub t: f64,
+    /// Observation counter at decision time.
+    pub obs: u64,
+    /// FSM edge ("trigger", "validate-ok", "validate-fail", "stable").
+    pub edge: String,
+    /// Action kind tag ("mig", "placement", "io_throttle", ...).
+    pub action: String,
+    /// p99 at decision time (the primary signal snapshot).
+    pub p99_ms: f64,
+    /// Free-form context (diagnosed cause, comparison values).
+    pub detail: String,
+}
+
+impl Decision {
+    pub fn new(
+        t: f64,
+        obs: u64,
+        edge: &str,
+        action: &str,
+        p99_ms: f64,
+        detail: String,
+    ) -> Decision {
+        Decision {
+            t,
+            obs,
+            edge: edge.to_string(),
+            action: action.to_string(),
+            p99_ms,
+            detail,
+        }
+    }
+}
+
+/// Append-only decision log with Table-4-style aggregations.
+#[derive(Clone, Debug, Default)]
+pub struct AuditLog {
+    entries: Vec<Decision>,
+}
+
+impl AuditLog {
+    pub fn new() -> AuditLog {
+        AuditLog::default()
+    }
+
+    pub fn record(&mut self, d: Decision) {
+        self.entries.push(d);
+    }
+
+    pub fn entries(&self) -> &[Decision] {
+        &self.entries
+    }
+
+    pub fn count_kind(&self, kind: &str) -> usize {
+        self.entries.iter().filter(|e| e.action == kind).count()
+    }
+
+    /// Disruptive moves (placement + mig + rollback) per hour over a run of
+    /// `duration_s` — Table 4 reports "< 5 /hr".
+    pub fn moves_per_hour(&self, duration_s: f64) -> f64 {
+        if duration_s <= 0.0 {
+            return 0.0;
+        }
+        let moves = self
+            .entries
+            .iter()
+            .filter(|e| matches!(e.action.as_str(), "mig" | "placement" | "rollback" | "relax"))
+            .count();
+        moves as f64 / (duration_s / 3600.0)
+    }
+
+    /// Timeline rows for Figure 3a: (t, action kind, p99 at decision).
+    pub fn timeline(&self) -> Vec<(f64, &str, f64)> {
+        self.entries
+            .iter()
+            .filter(|e| e.edge == "trigger" || e.edge == "stable")
+            .map(|e| (e.t, e.action.as_str(), e.p99_ms))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_rates() {
+        let mut log = AuditLog::new();
+        log.record(Decision::new(10.0, 5, "trigger", "io_throttle", 20.0, String::new()));
+        log.record(Decision::new(60.0, 30, "trigger", "mig", 21.0, String::new()));
+        log.record(Decision::new(90.0, 45, "validate-ok", "persist", 14.0, String::new()));
+        assert_eq!(log.count_kind("mig"), 1);
+        assert_eq!(log.count_kind("io_throttle"), 1);
+        // 1 disruptive move in 1800 s = 2/hr.
+        assert!((log.moves_per_hour(1800.0) - 2.0).abs() < 1e-12);
+        assert_eq!(log.timeline().len(), 2);
+    }
+}

@@ -1,0 +1,171 @@
+//! Controller parameters — defaults are the paper's Table 1.
+
+/// Which levers are enabled (the E2 ablation axis, Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Levers {
+    pub dynamic_mig: bool,
+    pub placement: bool,
+    pub guardrails: bool,
+}
+
+impl Levers {
+    /// Full system.
+    pub fn full() -> Levers {
+        Levers {
+            dynamic_mig: true,
+            placement: true,
+            guardrails: true,
+        }
+    }
+
+    /// Static baseline (controller observes but never acts).
+    pub fn none() -> Levers {
+        Levers {
+            dynamic_mig: false,
+            placement: false,
+            guardrails: false,
+        }
+    }
+
+    pub fn mig_only() -> Levers {
+        Levers {
+            dynamic_mig: true,
+            placement: false,
+            guardrails: false,
+        }
+    }
+
+    pub fn placement_only() -> Levers {
+        Levers {
+            dynamic_mig: false,
+            placement: true,
+            guardrails: false,
+        }
+    }
+
+    pub fn guards_only() -> Levers {
+        Levers {
+            dynamic_mig: false,
+            placement: false,
+            guardrails: true,
+        }
+    }
+
+    pub fn any(&self) -> bool {
+        self.dynamic_mig || self.placement || self.guardrails
+    }
+
+    pub fn name(&self) -> &'static str {
+        match (self.dynamic_mig, self.placement, self.guardrails) {
+            (true, true, true) => "Full System",
+            (true, false, false) => "MIG-only",
+            (false, true, false) => "Placement-only",
+            (false, false, true) => "Guards-only",
+            (false, false, false) => "Static MIG",
+            _ => "Custom",
+        }
+    }
+}
+
+/// Table 1: Key Controller Parameters (plus the implementation-note knobs
+/// of §2.4).
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Tail threshold τ: p99 latency that triggers a policy change (ms).
+    pub tau_ms: f64,
+    /// Persistence Y: consecutive windows the tail must exceed τ.
+    pub persistence_y: u32,
+    /// Dwell time: minimum observations between policy changes.
+    pub dwell_obs: u64,
+    /// Cool-down: grace observations after returning to performance mode.
+    pub cooldown_obs: u64,
+    /// MPS quota bounds (percent of active threads).
+    pub mps_quota_min: f64,
+    pub mps_quota_max: f64,
+    /// cgroup IO throttle bounds (GB/s; paper: 100-500 MB/s).
+    pub io_throttle_min_gbps: f64,
+    pub io_throttle_max_gbps: f64,
+    /// Bounded throttle window Z (seconds, §2.4 "tens of seconds").
+    pub throttle_window_s: f64,
+    /// Post-change validation window (observations) before persisting /
+    /// rolling back (§2.4).
+    pub validation_obs: u64,
+    /// Relaxation: tail must be below `relax_frac·τ` for `stable_obs`
+    /// observations (and throughput within budget) before shrinking.
+    pub relax_frac: f64,
+    pub stable_obs: u64,
+    /// Throughput budget: actions must keep T ≥ (1-budget)·T_base (§2).
+    pub throughput_budget: f64,
+    /// Observations to ignore at startup (cold-start quantiles are noise).
+    pub warmup_obs: u64,
+    /// Minimum window miss-rate for a *disruptive* action to be worth a
+    /// pause (keeps the Table-4 move budget under 5/hour).
+    pub material_miss: f64,
+    /// Enabled levers.
+    pub levers: Levers,
+    /// Placement-score margin: a move must beat the current placement by
+    /// this factor to be worth a pause.
+    pub placement_margin: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            tau_ms: 15.0,
+            persistence_y: 3,
+            dwell_obs: 256,
+            cooldown_obs: 128,
+            mps_quota_min: 50.0,
+            mps_quota_max: 100.0,
+            io_throttle_min_gbps: 0.1,
+            io_throttle_max_gbps: 0.5,
+            throttle_window_s: 30.0,
+            validation_obs: 64,
+            relax_frac: 0.6,
+            stable_obs: 512,
+            throughput_budget: 0.05,
+            warmup_obs: 30,
+            material_miss: 0.02,
+            levers: Levers::full(),
+            placement_margin: 0.25,
+        }
+    }
+}
+
+impl ControllerConfig {
+    pub fn with_levers(levers: Levers) -> ControllerConfig {
+        ControllerConfig {
+            levers,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = ControllerConfig::default();
+        assert_eq!(c.tau_ms, 15.0);
+        assert_eq!(c.persistence_y, 3);
+        assert_eq!(c.dwell_obs, 256);
+        assert_eq!(c.cooldown_obs, 128);
+        assert_eq!(c.mps_quota_min, 50.0);
+        assert_eq!(c.mps_quota_max, 100.0);
+        // 100-500 MB/s.
+        assert!((c.io_throttle_min_gbps - 0.1).abs() < 1e-12);
+        assert!((c.io_throttle_max_gbps - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lever_names() {
+        assert_eq!(Levers::full().name(), "Full System");
+        assert_eq!(Levers::none().name(), "Static MIG");
+        assert_eq!(Levers::mig_only().name(), "MIG-only");
+        assert_eq!(Levers::placement_only().name(), "Placement-only");
+        assert_eq!(Levers::guards_only().name(), "Guards-only");
+        assert!(!Levers::none().any());
+    }
+}

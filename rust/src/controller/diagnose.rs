@@ -1,0 +1,232 @@
+//! Root-cause diagnosis from secondary signals (§2.1, §2.3).
+//!
+//! "Upon triggering, the controller first attempts to diagnose the issue
+//! using its secondary signals. If high PCIe or I/O pressure is detected,
+//! it applies a cgroup I/O throttle ... If the primary cause appears to be
+//! compute or memory contention, or if throttling does not resolve the
+//! issue, the controller proceeds to upgrade the tenant's isolation."
+
+use crate::telemetry::SignalSnapshot;
+use crate::tenants::TenantId;
+
+use super::view::PlannerView;
+
+/// Diagnosed dominant interference cause.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cause {
+    /// Contention on the tenant's PCIe uplink (bandwidth-heavy neighbor).
+    PciePressure { culprit: TenantId },
+    /// Host block-I/O pressure on the tenant's NUMA domain.
+    IoPressure { culprit: TenantId },
+    /// SM/memory contention from an MPS-shared peer.
+    ComputeContention { culprit: TenantId },
+    /// Nothing stands out — tail inflation is endogenous (queueing) or the
+    /// slice is simply too small.
+    Unattributed,
+}
+
+/// Utilization above which a link counts as "hot".
+pub const LINK_HOT: f64 = 0.55;
+/// Per-tenant PCIe rate (GB/s) above which a neighbor counts as
+/// bandwidth-heavy.
+pub const NEIGHBOR_HEAVY_GBPS: f64 = 1.0;
+
+/// Rank causes for `primary`'s tail violation by signal excess.
+pub fn diagnose(primary: TenantId, snap: &SignalSnapshot, view: &PlannerView) -> Cause {
+    let Some(me) = view.tenant(primary) else {
+        return Cause::Unattributed;
+    };
+    let my_link = view.topo.link_of_gpu(me.gpu);
+    let my_numa = me.numa;
+
+    // Score each candidate cause; pick the largest.
+    let mut best = (0.0f64, Cause::Unattributed);
+
+    // PCIe: my uplink is hot AND a neighbor is pushing serious bytes
+    // through it.
+    if let Some(link) = snap.link(my_link) {
+        if link.utilization > LINK_HOT {
+            for t in &snap.tenants {
+                if t.tenant == primary || !t.active {
+                    continue;
+                }
+                let Some(tv) = view.tenant(t.tenant) else {
+                    continue;
+                };
+                let shares_link = view.topo.link_of_gpu(tv.gpu) == my_link;
+                if shares_link && t.pcie_gbps > NEIGHBOR_HEAVY_GBPS {
+                    let score = link.utilization * t.pcie_gbps;
+                    if score > best.0 {
+                        best = (score, Cause::PciePressure { culprit: t.tenant });
+                    }
+                }
+            }
+        }
+    }
+
+    // Block I/O on my NUMA domain.
+    if let Some(&io) = snap.numa_io_gbps.get(my_numa) {
+        if io > 0.5 {
+            for t in &snap.tenants {
+                if t.tenant == primary || !t.active {
+                    continue;
+                }
+                let Some(tv) = view.tenant(t.tenant) else {
+                    continue;
+                };
+                if tv.numa == my_numa && t.block_io_gbps > 0.25 {
+                    let score = 0.8 * io * t.block_io_gbps;
+                    if score > best.0 {
+                        best = (score, Cause::IoPressure { culprit: t.tenant });
+                    }
+                }
+            }
+        }
+    }
+
+    // SM contention: an active MPS peer on my instance.
+    for peer in &me.mps_peers {
+        if let Some(p) = snap.tenant(*peer) {
+            if p.active {
+                // Shared-instance compute contention dominates when present:
+                // MIG would have isolated it, so weight it above any
+                // plausible PCIe score (util × GB/s tops out well below 10
+                // on a 25 GB/s Gen4 uplink... after throttling).
+                let util = snap.gpu_sm_util.get(me.gpu).copied().unwrap_or(0.0);
+                let score = 10.0 + util;
+                if score > best.0 {
+                    best = (score, Cause::ComputeContention { culprit: *peer });
+                }
+            }
+        }
+    }
+
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{A100Gpu, InstanceId, MigProfile};
+    use crate::telemetry::signals::{LinkSignal, TailStats, TenantSignal};
+    use crate::tenants::spec::{T1, T2, T3};
+    use crate::topo::{HostTopology, LinkId};
+
+    fn view(shared_with_t3: bool, t2_gpu: usize) -> PlannerView {
+        let topo = HostTopology::p4d();
+        let mut gpus: Vec<A100Gpu> = (0..8).map(A100Gpu::new).collect();
+        gpus[0].create_at(MigProfile::P4g40gb, 0).unwrap();
+        gpus[0].create_at(MigProfile::P3g40gb, 4).unwrap();
+        PlannerView {
+            topo,
+            gpus,
+            tenants: vec![
+                super::super::view::TenantView {
+                    tenant: T1,
+                    gpu: 0,
+                    instance: InstanceId(1),
+                    profile: MigProfile::P4g40gb,
+                    mps_peers: if shared_with_t3 { vec![T3] } else { vec![] },
+                    numa: 0,
+                    mps_quota: 100.0,
+                    io_throttle_gbps: None,
+                },
+                super::super::view::TenantView {
+                    tenant: T2,
+                    gpu: t2_gpu,
+                    instance: InstanceId(2),
+                    profile: MigProfile::P3g40gb,
+                    mps_peers: vec![],
+                    numa: 0,
+                    mps_quota: 100.0,
+                    io_throttle_gbps: None,
+                },
+            ],
+            free_instances: vec![],
+            t1_base_rps: 120.0,
+        }
+    }
+
+    fn snap(link0_util: f64, t2_pcie: f64, t2_io: f64, t3_active: bool) -> SignalSnapshot {
+        SignalSnapshot {
+            t: 100.0,
+            dt: 2.0,
+            tenants: vec![
+                TenantSignal {
+                    tenant: T1,
+                    tails: TailStats::default(),
+                    pcie_gbps: 0.5,
+                    block_io_gbps: 0.1,
+                    active: true,
+                },
+                TenantSignal {
+                    tenant: T2,
+                    tails: TailStats::default(),
+                    pcie_gbps: t2_pcie,
+                    block_io_gbps: t2_io,
+                    active: t2_pcie > 0.0,
+                },
+                TenantSignal {
+                    tenant: T3,
+                    tails: TailStats::default(),
+                    pcie_gbps: 0.05,
+                    block_io_gbps: 0.0,
+                    active: t3_active,
+                },
+            ],
+            links: vec![LinkSignal {
+                link: LinkId(0),
+                utilization: link0_util,
+                gbps: link0_util * 25.0,
+            }],
+            gpu_sm_util: vec![0.9; 8],
+            numa_io_gbps: vec![t2_io, 0.0],
+            numa_irq_rate: vec![500.0, 100.0],
+        }
+    }
+
+    #[test]
+    fn pcie_pressure_detected() {
+        let v = view(false, 0);
+        let s = snap(0.9, 8.0, 0.2, false);
+        assert_eq!(diagnose(T1, &s, &v), Cause::PciePressure { culprit: T2 });
+    }
+
+    #[test]
+    fn compute_contention_dominates_when_shared() {
+        let v = view(true, 0);
+        let s = snap(0.9, 8.0, 0.2, true);
+        assert_eq!(
+            diagnose(T1, &s, &v),
+            Cause::ComputeContention { culprit: T3 }
+        );
+    }
+
+    #[test]
+    fn inactive_t3_not_blamed() {
+        let v = view(true, 0);
+        let s = snap(0.3, 0.0, 0.0, false);
+        assert_eq!(diagnose(T1, &s, &v), Cause::Unattributed);
+    }
+
+    #[test]
+    fn remote_t2_not_blamed_for_pcie() {
+        // T2 on GPU 4 (different switch) cannot be the PCIe culprit.
+        let v = view(false, 4);
+        let s = snap(0.9, 8.0, 0.0, false);
+        assert!(!matches!(
+            diagnose(T1, &s, &v),
+            Cause::PciePressure { .. }
+        ));
+    }
+
+    #[test]
+    fn io_pressure_detected_without_link_heat() {
+        let v = view(false, 4); // T2 elsewhere on PCIe but same NUMA? gpu4 => numa1
+        // Put T2 on numa0 via its view: gpu 2 is numa 0, switch 1.
+        let v2 = view(false, 2);
+        let s = snap(0.2, 0.3, 3.0, false);
+        let _ = v;
+        assert_eq!(diagnose(T1, &s, &v2), Cause::IoPressure { culprit: T2 });
+    }
+}

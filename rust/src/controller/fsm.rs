@@ -1,0 +1,770 @@
+//! The decision state machine (Algorithm 1 + §2.3 policy).
+//!
+//! Escalation ladder on persistent tail violations (Figure 3a):
+//! guardrails → placement move → MIG resize; each disruptive action opens
+//! a validation window with rollback, then a cool-down. A relaxation path
+//! shrinks isolation again after sustained stability (and returns
+//! guardrails to their defaults).
+
+use crate::gpu::MigProfile;
+use crate::telemetry::SignalSnapshot;
+use crate::tenants::spec::T1;
+use crate::tenants::TenantId;
+use crate::util::ewma::Persistence;
+
+use super::actions::{Action, IsolationChange};
+use super::audit::{AuditLog, Decision};
+use super::config::ControllerConfig;
+use super::diagnose::{diagnose, Cause};
+use super::guardrails;
+use super::placement::{self, ScoreWeights};
+use super::view::PlannerView;
+
+/// Controller FSM state (the `W`/`C`/`T_cd` of Algorithm 1 live in
+/// [`Controller`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CtlState {
+    Stable,
+    /// A disruptive change was applied; watching the post-change window.
+    Validating { started_obs: u64, prev_p99: f64 },
+    /// Grace period after a change persisted / rolled back.
+    Cooldown { until_obs: u64 },
+}
+
+/// The multi-tenancy controller.
+pub struct Controller {
+    pub cfg: ControllerConfig,
+    state: CtlState,
+    obs: u64,
+    last_disruptive_obs: i64,
+    last_guard_obs: i64,
+    persistence: Persistence,
+    stable_streak: u64,
+    /// Guardrail attempts since the last isolation change — "throttling
+    /// does not resolve the issue" escalation memory (§2.3).
+    guard_attempts: u32,
+    weights: ScoreWeights,
+    audit: AuditLog,
+    primary: TenantId,
+}
+
+impl Controller {
+    pub fn new(cfg: ControllerConfig) -> Controller {
+        Controller {
+            persistence: Persistence::new(cfg.tau_ms, cfg.persistence_y),
+            cfg,
+            state: CtlState::Stable,
+            obs: 0,
+            last_disruptive_obs: i64::MIN / 2,
+            last_guard_obs: i64::MIN / 2,
+            stable_streak: 0,
+            guard_attempts: 0,
+            weights: ScoreWeights::default(),
+            audit: AuditLog::new(),
+            primary: T1,
+        }
+    }
+
+    pub fn state(&self) -> CtlState {
+        self.state
+    }
+
+    pub fn audit(&self) -> &AuditLog {
+        &self.audit
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.obs
+    }
+
+    fn dwell_ok(&self) -> bool {
+        self.obs as i64 - self.last_disruptive_obs >= self.cfg.dwell_obs as i64
+    }
+
+    fn guard_dwell_ok(&self) -> bool {
+        // Guardrails are lightweight; allow them 4× as often as
+        // disruptive changes but still rate-limited.
+        self.obs as i64 - self.last_guard_obs >= (self.cfg.dwell_obs / 4) as i64
+    }
+
+    fn throughput_ok(&self, snap: &SignalSnapshot, view: &PlannerView) -> bool {
+        let Some(t1) = snap.tenant(self.primary) else {
+            return false;
+        };
+        t1.tails.rps >= (1.0 - self.cfg.throughput_budget) * view.t1_base_rps
+    }
+
+    /// One observation tick (Algorithm 1 `OnObservation`). Returns the
+    /// actions the platform must apply, in order.
+    pub fn on_observation(&mut self, snap: &SignalSnapshot, view: &PlannerView) -> Vec<Action> {
+        self.obs += 1;
+        let Some(t1sig) = snap.tenant(self.primary) else {
+            return Vec::new();
+        };
+        let p99 = t1sig.tails.p99_ms;
+        let triggered = self.persistence.observe(p99) && t1sig.tails.completed > 0;
+        if p99 <= self.cfg.tau_ms * self.cfg.relax_frac && t1sig.tails.completed > 0 {
+            self.stable_streak += 1;
+        } else {
+            self.stable_streak = 0;
+        }
+
+        // --- validation / cooldown bookkeeping -----------------------------
+        match self.state {
+            CtlState::Validating { started_obs, prev_p99 } => {
+                if self.obs - started_obs >= self.cfg.validation_obs {
+                    if p99 > prev_p99 * 1.02 && t1sig.tails.completed > 0 {
+                        // Post-change p99 worsened: roll back (§2.4).
+                        self.state = CtlState::Cooldown {
+                            until_obs: self.obs + self.cfg.cooldown_obs,
+                        };
+                        let act = Action::Rollback {
+                            tenant: self.primary,
+                        };
+                        self.audit.record(Decision::new(
+                            snap.t,
+                            self.obs,
+                            "validate-fail",
+                            act.kind(),
+                            p99,
+                            format!("p99 {p99:.2} > pre-change {prev_p99:.2}"),
+                        ));
+                        return vec![act];
+                    }
+                    self.audit.record(Decision::new(
+                        snap.t,
+                        self.obs,
+                        "validate-ok",
+                        "persist",
+                        p99,
+                        format!("p99 {p99:.2} vs pre-change {prev_p99:.2}"),
+                    ));
+                    self.state = CtlState::Cooldown {
+                        until_obs: self.obs + self.cfg.cooldown_obs,
+                    };
+                }
+                return Vec::new();
+            }
+            CtlState::Cooldown { until_obs } => {
+                if self.obs >= until_obs {
+                    self.state = CtlState::Stable;
+                } else {
+                    return Vec::new(); // is_cooling_down(): no actions.
+                }
+            }
+            CtlState::Stable => {}
+        }
+
+        if !self.cfg.levers.any() {
+            return Vec::new(); // static baseline: observe only.
+        }
+        // Warmup: tiny cold-start windows produce noisy quantiles; never
+        // act on them (a real deployment samples for a minute first).
+        if self.obs < self.cfg.warmup_obs {
+            return Vec::new();
+        }
+
+        // --- escalation on persistent violation ----------------------------
+        if triggered {
+            let cause = diagnose(self.primary, snap, view);
+            // Rung 1: guardrails (lightweight, non-disruptive).
+            if self.cfg.levers.guardrails && self.guard_dwell_ok() {
+                if let Some(act) = self.try_guardrail(cause, snap, view) {
+                    self.last_guard_obs = self.obs as i64;
+                    self.guard_attempts += 1;
+                    self.persistence.reset(); // give the guard Y windows to work
+                    self.audit.record(Decision::new(
+                        snap.t,
+                        self.obs,
+                        "trigger",
+                        act.kind(),
+                        p99,
+                        format!("{cause:?}"),
+                    ));
+                    return vec![act];
+                }
+            }
+            // Rungs 2-3: isolation upgrade (move first, then resize —
+            // §2.2.1), once guards are exhausted/ineffective/disabled.
+            // Disruptive changes additionally require a *material* SLO
+            // problem (window miss-rate above 2%): a p99 hovering a hair
+            // over τ is not worth a pause, and this is what keeps the
+            // Table-4 move budget under 5/hour.
+            let material = t1sig.tails.miss_rate > self.cfg.material_miss;
+            if self.dwell_ok() && material {
+                if let Some(act) = self.plan_isolation_upgrade(cause, snap, view) {
+                    self.last_disruptive_obs = self.obs as i64;
+                    self.guard_attempts = 0;
+                    self.persistence.reset();
+                    self.state = CtlState::Validating {
+                        started_obs: self.obs,
+                        prev_p99: p99,
+                    };
+                    self.audit.record(Decision::new(
+                        snap.t,
+                        self.obs,
+                        "trigger",
+                        act.kind(),
+                        p99,
+                        format!("{cause:?}"),
+                    ));
+                    return vec![act];
+                }
+            }
+            return Vec::new();
+        }
+
+        // --- relaxation path -----------------------------------------------
+        if self.stable_streak >= self.cfg.stable_obs
+            && self.dwell_ok()
+            && self.throughput_ok(snap, view)
+        {
+            let mut acts = Vec::new();
+            // Return guardrails toward defaults first (cheap).
+            if self.cfg.levers.guardrails {
+                if let Some(t2v) = view.tenants.iter().find(|t| t.io_throttle_gbps.is_some()) {
+                    acts.push(Action::SetIoThrottle {
+                        tenant: t2v.tenant,
+                        cap_gbps: None,
+                    });
+                }
+                for tv in &view.tenants {
+                    if tv.tenant != self.primary && tv.mps_quota < self.cfg.mps_quota_max {
+                        if let Some(q) = guardrails::relax_mps(&self.cfg, tv.mps_quota) {
+                            acts.push(Action::SetMpsQuota {
+                                tenant: tv.tenant,
+                                quota: q,
+                            });
+                        }
+                    }
+                }
+            }
+            if acts.is_empty() && self.cfg.levers.dynamic_mig {
+                if let Some(act) = self.plan_relax(snap, view) {
+                    acts.push(act);
+                }
+            }
+            if !acts.is_empty() {
+                self.stable_streak = 0;
+                self.last_disruptive_obs = self.obs as i64;
+                self.state = CtlState::Cooldown {
+                    until_obs: self.obs + self.cfg.cooldown_obs,
+                };
+                self.audit.record(Decision::new(
+                    snap.t,
+                    self.obs,
+                    "stable",
+                    acts[0].kind(),
+                    p99,
+                    "relaxation".to_string(),
+                ));
+                return acts;
+            }
+        }
+
+        Vec::new()
+    }
+
+    /// Rung 1: choose a guardrail for the diagnosed cause.
+    fn try_guardrail(
+        &self,
+        cause: Cause,
+        snap: &SignalSnapshot,
+        view: &PlannerView,
+    ) -> Option<Action> {
+        match cause {
+            Cause::PciePressure { culprit } | Cause::IoPressure { culprit } => {
+                let already = view
+                    .tenant(culprit)
+                    .and_then(|t| t.io_throttle_gbps)
+                    .is_some();
+                if already {
+                    return None; // throttle in place and still violating.
+                }
+                Some(Action::SetIoThrottle {
+                    tenant: culprit,
+                    cap_gbps: Some(guardrails::pick_io_throttle(&self.cfg, snap, culprit)),
+                })
+            }
+            Cause::ComputeContention { culprit } => {
+                let quota = view.tenant(culprit).map(|t| t.mps_quota)?;
+                let next = guardrails::tighten_mps(&self.cfg, quota)?;
+                Some(Action::SetMpsQuota {
+                    tenant: culprit,
+                    quota: next,
+                })
+            }
+            Cause::Unattributed => None,
+        }
+    }
+
+    /// Rungs 2-3 (§2.2.1): intra-host move to the least-penalized instance
+    /// first; enlarge the MIG slice only if no move is good enough.
+    fn plan_isolation_upgrade(
+        &self,
+        cause: Cause,
+        snap: &SignalSnapshot,
+        view: &PlannerView,
+    ) -> Option<Action> {
+        let me = view.tenant(self.primary)?;
+        let cur_score = placement::current_score(self.primary, snap, view, &self.weights)?;
+
+        // Greedy one-notch isolation bound (§2.5.2: upgrades step through
+        // M; never jump to max isolation): a shared instance counts as
+        // roughly half its profile for budgeting purposes.
+        let shared = !me.mps_peers.is_empty();
+        let effective = if shared {
+            MigProfile::P2g20gb
+        } else {
+            me.profile
+        };
+        let max_profile = effective.upgrade().unwrap_or(effective);
+
+        // Placement rung: consider existing instances always; creatable
+        // slots only with dynamic MIG.
+        if self.cfg.levers.placement {
+            let min_profile = MigProfile::P1g10gb;
+            let cands = placement::candidates(
+                self.primary,
+                snap,
+                view,
+                &self.weights,
+                self.cfg.levers.dynamic_mig,
+                min_profile,
+                max_profile,
+            );
+            if let Some(best) = cands.first() {
+                if best.score < cur_score - self.cfg.placement_margin {
+                    let change = if best.existing {
+                        IsolationChange::MoveExisting {
+                            gpu: best.gpu,
+                            to: best.profile,
+                        }
+                    } else {
+                        IsolationChange::CreateAndMove {
+                            gpu: best.gpu,
+                            to: best.profile,
+                        }
+                    };
+                    return Some(Action::ChangeIsolation {
+                        tenant: self.primary,
+                        change,
+                        relax: false,
+                    });
+                }
+            }
+        }
+
+        // MIG rung: dedicate/enlarge in place.
+        if self.cfg.levers.dynamic_mig {
+            let shared = !me.mps_peers.is_empty();
+            let gpu = &view.gpus[me.gpu];
+            if shared {
+                // Carve a dedicated slice out of the shared instance: pick
+                // the biggest profile that fits in the freed slices while
+                // leaving at least one slice for the peer.
+                let freed = me.profile.compute_slices();
+                let target = [MigProfile::P3g40gb, MigProfile::P2g20gb, MigProfile::P1g10gb]
+                    .into_iter()
+                    .find(|p| p.compute_slices() + 1 <= freed)?;
+                return Some(Action::ChangeIsolation {
+                    tenant: self.primary,
+                    change: IsolationChange::Resize { to: target },
+                    relax: false,
+                });
+            }
+            if matches!(cause, Cause::ComputeContention { .. } | Cause::Unattributed)
+                || self.guard_attempts > 0
+                || !self.cfg.levers.guardrails
+            {
+                if let Some(bigger) = me.profile.upgrade() {
+                    if gpu.can_place_after_destroy(bigger, me.instance) {
+                        return Some(Action::ChangeIsolation {
+                            tenant: self.primary,
+                            change: IsolationChange::Resize { to: bigger },
+                            relax: false,
+                        });
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Relaxation: shrink one step if the smaller profile's placement
+    /// score stays below a conservative threshold (§2.2.1 last sentence).
+    fn plan_relax(&self, snap: &SignalSnapshot, view: &PlannerView) -> Option<Action> {
+        let me = view.tenant(self.primary)?;
+        if !me.mps_peers.is_empty() {
+            return None; // already shared: nothing to give back.
+        }
+        let smaller = me.profile.relax()?;
+        if smaller < MigProfile::P2g20gb {
+            return None; // conservative floor for the latency tenant.
+        }
+        let score =
+            placement::placement_score(self.primary, me.gpu, smaller, snap, view, &self.weights);
+        if score > 1.0 {
+            return None; // §2.2.1: only relax when the score stays low.
+        }
+        Some(Action::ChangeIsolation {
+            tenant: self.primary,
+            change: IsolationChange::Resize { to: smaller },
+            relax: true,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::config::Levers;
+    use crate::gpu::{A100Gpu, InstanceId};
+    use crate::telemetry::signals::{LinkSignal, TailStats, TenantSignal};
+    use crate::tenants::spec::{T2, T3};
+    use crate::topo::{HostTopology, LinkId};
+
+    fn mk_view(shared: bool) -> PlannerView {
+        let topo = HostTopology::p4d();
+        let mut gpus: Vec<A100Gpu> = (0..8).map(A100Gpu::new).collect();
+        gpus[0].create_at(MigProfile::P4g40gb, 0).unwrap();
+        gpus[0].create_at(MigProfile::P3g40gb, 4).unwrap();
+        gpus[2].create_at(MigProfile::P2g20gb, 0).unwrap();
+        PlannerView {
+            topo,
+            gpus,
+            tenants: vec![
+                super::super::view::TenantView {
+                    tenant: T1,
+                    gpu: 0,
+                    instance: InstanceId(1),
+                    profile: MigProfile::P4g40gb,
+                    mps_peers: if shared { vec![T3] } else { vec![] },
+                    numa: 0,
+                    mps_quota: 100.0,
+                    io_throttle_gbps: None,
+                },
+                super::super::view::TenantView {
+                    tenant: T2,
+                    gpu: 0,
+                    instance: InstanceId(2),
+                    profile: MigProfile::P3g40gb,
+                    mps_peers: vec![],
+                    numa: 0,
+                    mps_quota: 100.0,
+                    io_throttle_gbps: None,
+                },
+                super::super::view::TenantView {
+                    tenant: T3,
+                    gpu: 0,
+                    instance: InstanceId(1),
+                    profile: MigProfile::P4g40gb,
+                    mps_peers: if shared { vec![T1] } else { vec![] },
+                    numa: 0,
+                    mps_quota: 100.0,
+                    io_throttle_gbps: None,
+                },
+            ],
+            free_instances: vec![super::super::view::InstanceView {
+                gpu: 2,
+                existing: Some(InstanceId(1)),
+                profile: MigProfile::P2g20gb,
+            }],
+            t1_base_rps: 120.0,
+        }
+    }
+
+    fn mk_snap(p99: f64, t2_active: bool, t3_active: bool) -> SignalSnapshot {
+        SignalSnapshot {
+            t: 0.0,
+            dt: 2.0,
+            tenants: vec![
+                TenantSignal {
+                    tenant: T1,
+                    tails: TailStats {
+                        p50_ms: p99 * 0.5,
+                        p95_ms: p99 * 0.9,
+                        p99_ms: p99,
+                        p999_ms: p99 * 1.2,
+                        miss_rate: if p99 > 15.0 { 0.2 } else { 0.0 },
+                        completed: 240,
+                        rps: 120.0,
+                    },
+                    pcie_gbps: 0.5,
+                    block_io_gbps: 0.1,
+                    active: true,
+                },
+                TenantSignal {
+                    tenant: T2,
+                    tails: TailStats::default(),
+                    pcie_gbps: if t2_active { 8.0 } else { 0.0 },
+                    block_io_gbps: if t2_active { 2.0 } else { 0.0 },
+                    active: t2_active,
+                },
+                TenantSignal {
+                    tenant: T3,
+                    tails: TailStats::default(),
+                    pcie_gbps: 0.05,
+                    block_io_gbps: 0.0,
+                    active: t3_active,
+                },
+            ],
+            links: (0..6)
+                .map(|i| LinkSignal {
+                    link: LinkId(i),
+                    utilization: if i == 0 && t2_active { 0.9 } else { 0.05 },
+                    gbps: 0.0,
+                })
+                .collect(),
+            gpu_sm_util: vec![0.9; 8],
+            numa_io_gbps: vec![if t2_active { 2.0 } else { 0.0 }, 0.0],
+            numa_irq_rate: vec![400.0, 50.0],
+        }
+    }
+
+    fn no_warmup(mut cfg: ControllerConfig) -> ControllerConfig {
+        cfg.warmup_obs = 0;
+        cfg
+    }
+
+    fn run_until_action(
+        ctl: &mut Controller,
+        snap: &SignalSnapshot,
+        view: &PlannerView,
+        max_obs: usize,
+    ) -> Option<Vec<Action>> {
+        for _ in 0..max_obs {
+            let acts = ctl.on_observation(snap, view);
+            if !acts.is_empty() {
+                return Some(acts);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn baseline_never_acts() {
+        let mut ctl = Controller::new(no_warmup(ControllerConfig::with_levers(Levers::none())));
+        let view = mk_view(true);
+        let snap = mk_snap(25.0, true, true);
+        assert!(run_until_action(&mut ctl, &snap, &view, 2000).is_none());
+    }
+
+    #[test]
+    fn persistence_gates_trigger() {
+        let mut ctl = Controller::new(no_warmup(ControllerConfig::default()));
+        let view = mk_view(true);
+        let hot = mk_snap(25.0, true, true);
+        // First two violations: no action (Y = 3).
+        assert!(ctl.on_observation(&hot, &view).is_empty());
+        assert!(ctl.on_observation(&hot, &view).is_empty());
+        // Third consecutive violation triggers the first rung.
+        let acts = ctl.on_observation(&hot, &view);
+        assert_eq!(acts.len(), 1);
+    }
+
+    #[test]
+    fn first_action_is_guardrail_under_compute_contention() {
+        let mut ctl = Controller::new(no_warmup(ControllerConfig::default()));
+        let view = mk_view(true);
+        let hot = mk_snap(25.0, false, true); // only T3 active
+        let acts = run_until_action(&mut ctl, &hot, &view, 10).unwrap();
+        assert!(
+            matches!(acts[0], Action::SetMpsQuota { tenant, .. } if tenant == T3),
+            "expected MPS quota first, got {acts:?}"
+        );
+    }
+
+    #[test]
+    fn io_throttle_for_pcie_pressure() {
+        let mut ctl = Controller::new(no_warmup(ControllerConfig::default()));
+        let view = mk_view(false); // dedicated: no compute contention
+        let hot = mk_snap(25.0, true, false);
+        let acts = run_until_action(&mut ctl, &hot, &view, 10).unwrap();
+        assert!(
+            matches!(acts[0], Action::SetIoThrottle { tenant, cap_gbps: Some(_) } if tenant == T2),
+            "expected IO throttle, got {acts:?}"
+        );
+    }
+
+    #[test]
+    fn guards_escalate_to_isolation() {
+        let mut cfg = ControllerConfig::default();
+        cfg.dwell_obs = 8; // speed the test up
+        let mut ctl = Controller::new(no_warmup(cfg));
+        let mut view = mk_view(true);
+        let hot = mk_snap(25.0, true, true);
+        let mut kinds = Vec::new();
+        for _ in 0..400 {
+            for a in ctl.on_observation(&hot, &view) {
+                kinds.push(a.kind());
+                // Reflect guardrail state so the controller sees its own
+                // actions (platform behavior).
+                match a {
+                    Action::SetMpsQuota { tenant, quota } => {
+                        for tv in view.tenants.iter_mut() {
+                            if tv.tenant == tenant {
+                                tv.mps_quota = quota;
+                            }
+                        }
+                    }
+                    Action::SetIoThrottle { tenant, cap_gbps } => {
+                        for tv in view.tenants.iter_mut() {
+                            if tv.tenant == tenant {
+                                tv.io_throttle_gbps = cap_gbps;
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if kinds.iter().any(|k| *k == "placement" || *k == "mig") {
+                break;
+            }
+        }
+        assert!(
+            kinds.iter().any(|k| *k == "mps_quota" || *k == "io_throttle"),
+            "guardrails first: {kinds:?}"
+        );
+        assert!(
+            kinds.iter().any(|k| *k == "placement" || *k == "mig"),
+            "must escalate: {kinds:?}"
+        );
+    }
+
+    #[test]
+    fn mig_only_dedicates_shared_instance() {
+        let mut cfg = ControllerConfig::with_levers(Levers::mig_only());
+        cfg.dwell_obs = 4;
+        let mut ctl = Controller::new(no_warmup(cfg));
+        let view = mk_view(true);
+        let hot = mk_snap(25.0, true, true);
+        let acts = run_until_action(&mut ctl, &hot, &view, 20).unwrap();
+        assert!(
+            matches!(
+                acts[0],
+                Action::ChangeIsolation {
+                    change: IsolationChange::Resize {
+                        to: MigProfile::P3g40gb
+                    },
+                    relax: false,
+                    ..
+                }
+            ),
+            "expected dedicate-resize, got {acts:?}"
+        );
+    }
+
+    #[test]
+    fn placement_only_moves_to_spare() {
+        let mut cfg = ControllerConfig::with_levers(Levers::placement_only());
+        cfg.dwell_obs = 4;
+        let mut ctl = Controller::new(no_warmup(cfg));
+        let view = mk_view(true);
+        let hot = mk_snap(25.0, true, true);
+        let acts = run_until_action(&mut ctl, &hot, &view, 20).unwrap();
+        assert!(
+            matches!(
+                acts[0],
+                Action::ChangeIsolation {
+                    change: IsolationChange::MoveExisting { gpu: 2, .. },
+                    ..
+                }
+            ),
+            "expected move to spare on gpu2, got {acts:?}"
+        );
+    }
+
+    #[test]
+    fn dwell_blocks_consecutive_disruptive_actions() {
+        let mut cfg = ControllerConfig::with_levers(Levers::mig_only());
+        cfg.dwell_obs = 50;
+        cfg.validation_obs = 4;
+        let mut ctl = Controller::new(no_warmup(cfg));
+        let view = mk_view(true);
+        let hot = mk_snap(25.0, true, true);
+        let mut action_obs = Vec::new();
+        for _ in 0..300 {
+            if !ctl.on_observation(&hot, &view).is_empty() {
+                action_obs.push(ctl.observations());
+            }
+        }
+        for w in action_obs.windows(2) {
+            assert!(
+                w[1] - w[0] >= 50,
+                "dwell violated: actions at {action_obs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn validation_rolls_back_when_worse() {
+        let mut cfg = ControllerConfig::with_levers(Levers::mig_only());
+        cfg.dwell_obs = 4;
+        cfg.validation_obs = 8;
+        let mut ctl = Controller::new(no_warmup(cfg));
+        let view = mk_view(true);
+        let hot = mk_snap(25.0, true, true);
+        let acts = run_until_action(&mut ctl, &hot, &view, 20).unwrap();
+        assert!(acts[0].is_disruptive());
+        // Post-change, things get WORSE (30 > 25): expect rollback after
+        // the validation window.
+        let worse = mk_snap(30.0, true, true);
+        let acts2 = run_until_action(&mut ctl, &worse, &view, 20).unwrap();
+        assert!(matches!(acts2[0], Action::Rollback { .. }), "{acts2:?}");
+    }
+
+    #[test]
+    fn validation_persists_when_better() {
+        let mut cfg = ControllerConfig::with_levers(Levers::mig_only());
+        cfg.dwell_obs = 4;
+        cfg.validation_obs = 8;
+        let mut ctl = Controller::new(no_warmup(cfg));
+        let view = mk_view(true);
+        let hot = mk_snap(25.0, true, true);
+        run_until_action(&mut ctl, &hot, &view, 20).unwrap();
+        let better = mk_snap(12.0, true, true);
+        for _ in 0..20 {
+            let acts = ctl.on_observation(&better, &view);
+            assert!(acts.is_empty(), "unexpected action {acts:?}");
+        }
+        assert!(matches!(ctl.state(), CtlState::Cooldown { .. }));
+    }
+
+    #[test]
+    fn relaxation_after_sustained_stability() {
+        let mut cfg = ControllerConfig::default();
+        cfg.stable_obs = 16;
+        cfg.dwell_obs = 4;
+        let mut ctl = Controller::new(no_warmup(cfg));
+        // T1 dedicated on a big profile, everything quiet.
+        let mut view = mk_view(false);
+        view.tenants[0].profile = MigProfile::P4g40gb;
+        view.tenants[1].io_throttle_gbps = Some(0.2); // leftover throttle
+        let calm = mk_snap(6.0, false, false);
+        let acts = run_until_action(&mut ctl, &calm, &view, 64).unwrap();
+        // First relaxation action lifts the leftover throttle.
+        assert!(
+            matches!(acts[0], Action::SetIoThrottle { cap_gbps: None, .. }),
+            "{acts:?}"
+        );
+    }
+
+    #[test]
+    fn relaxation_respects_throughput_budget() {
+        let mut cfg = ControllerConfig::default();
+        cfg.stable_obs = 16;
+        cfg.dwell_obs = 4;
+        let mut ctl = Controller::new(no_warmup(cfg));
+        let mut view = mk_view(false);
+        view.tenants[1].io_throttle_gbps = Some(0.2);
+        let mut calm = mk_snap(6.0, false, false);
+        // Throughput collapsed below 95% of base: must NOT relax.
+        for t in calm.tenants.iter_mut() {
+            if t.tenant == T1 {
+                t.tails.rps = 100.0; // < 0.95 * 120
+            }
+        }
+        assert!(run_until_action(&mut ctl, &calm, &view, 128).is_none());
+    }
+}

@@ -1,0 +1,103 @@
+//! Lightweight guardrails: MPS quotas + bounded cgroup I/O throttles
+//! (§2.2 "3", §2.4 implementation notes).
+
+use super::config::ControllerConfig;
+use crate::telemetry::SignalSnapshot;
+use crate::tenants::TenantId;
+
+/// Pick an `io.max`-style cap for a bandwidth-noisy tenant, within the
+/// Table 1 bounds (100-500 MB/s). Proportional policy: cut the offender to
+/// ~20% of its current rate, clamped to the bounds — aggressive enough to
+/// free the link, bounded enough to avoid starving it (§2.4 "bounded
+/// windows ... to reduce collateral damage").
+pub fn pick_io_throttle(cfg: &ControllerConfig, snap: &SignalSnapshot, culprit: TenantId) -> f64 {
+    let current = snap
+        .tenant(culprit)
+        .map(|t| t.pcie_gbps.max(t.block_io_gbps))
+        .unwrap_or(cfg.io_throttle_max_gbps);
+    (current * 0.2).clamp(cfg.io_throttle_min_gbps, cfg.io_throttle_max_gbps)
+}
+
+/// Tighten an MPS quota one notch (multiplicative decrease toward the
+/// lower bound). Returns `None` when already at the bound — the signal to
+/// escalate to isolation upgrades instead.
+pub fn tighten_mps(cfg: &ControllerConfig, current_quota: f64) -> Option<f64> {
+    let next = (current_quota * 0.7).max(cfg.mps_quota_min);
+    if next >= current_quota - 1e-9 {
+        None
+    } else {
+        Some(next)
+    }
+}
+
+/// Relax an MPS quota one notch after recovery (additive increase).
+pub fn relax_mps(cfg: &ControllerConfig, current_quota: f64) -> Option<f64> {
+    let next = (current_quota + 15.0).min(cfg.mps_quota_max);
+    if next <= current_quota + 1e-9 {
+        None
+    } else {
+        Some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::signals::{SignalSnapshot, TailStats, TenantSignal};
+    use crate::tenants::spec::T2;
+
+    fn snap(t2_gbps: f64) -> SignalSnapshot {
+        SignalSnapshot {
+            t: 0.0,
+            dt: 1.0,
+            tenants: vec![TenantSignal {
+                tenant: T2,
+                tails: TailStats::default(),
+                pcie_gbps: t2_gbps,
+                block_io_gbps: 0.0,
+                active: true,
+            }],
+            links: vec![],
+            gpu_sm_util: vec![],
+            numa_io_gbps: vec![],
+            numa_irq_rate: vec![],
+        }
+    }
+
+    #[test]
+    fn throttle_within_table1_bounds() {
+        let cfg = ControllerConfig::default();
+        for gbps in [0.05, 0.5, 2.0, 10.0, 100.0] {
+            let cap = pick_io_throttle(&cfg, &snap(gbps), T2);
+            assert!(
+                (cfg.io_throttle_min_gbps..=cfg.io_throttle_max_gbps).contains(&cap),
+                "cap {cap} out of bounds for rate {gbps}"
+            );
+        }
+    }
+
+    #[test]
+    fn throttle_proportional_in_band() {
+        let cfg = ControllerConfig::default();
+        let cap = pick_io_throttle(&cfg, &snap(2.0), T2);
+        assert!((cap - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mps_tighten_hits_floor() {
+        let cfg = ControllerConfig::default();
+        let q1 = tighten_mps(&cfg, 100.0).unwrap();
+        assert!((q1 - 70.0).abs() < 1e-9);
+        let q2 = tighten_mps(&cfg, q1).unwrap();
+        assert!((q2 - cfg.mps_quota_min).abs() < 1e-9);
+        assert_eq!(tighten_mps(&cfg, q2), None);
+    }
+
+    #[test]
+    fn mps_relax_hits_ceiling() {
+        let cfg = ControllerConfig::default();
+        let q = relax_mps(&cfg, 90.0).unwrap();
+        assert!((q - 100.0).abs() < 1e-9);
+        assert_eq!(relax_mps(&cfg, 100.0), None);
+    }
+}

@@ -1,0 +1,37 @@
+//! The paper's contribution: the host-level multi-tenancy controller.
+//!
+//! A conservative control loop (§2.3, Algorithm 1) that watches per-tenant
+//! tails and system signals and escalates through three levers:
+//!
+//! 1. **Guardrails** — MPS active-thread quotas on compute-noisy peers and
+//!    bounded cgroup-`io.max` throttles on I/O-noisy peers (§2.2 "3").
+//! 2. **PCIe-aware placement** — migrate the tenant to the least-penalized
+//!    MIG instance using the topology score of §2.2.1.
+//! 3. **Dynamic MIG reconfiguration** — enlarge (or, when stable, shrink)
+//!    the tenant's MIG profile (§2.2 "1").
+//!
+//! Actions are gated by persistence (`p99 > τ` for Y windows), dwell time,
+//! cool-down, and a post-change validation window with rollback to the
+//! last-known-good configuration (§2.4).
+//!
+//! The controller is *pure* with respect to the platform: it consumes a
+//! [`crate::telemetry::SignalSnapshot`] plus a [`view::PlannerView`] and
+//! emits [`actions::Action`]s. That separation is the "fabric-agnostic,
+//! VM-deployable" property — the same decision logic drives the simulated
+//! host and the local serving engine.
+
+pub mod config;
+pub mod actions;
+pub mod view;
+pub mod diagnose;
+pub mod placement;
+pub mod guardrails;
+pub mod fsm;
+pub mod audit;
+pub mod admission;
+
+pub use actions::{Action, IsolationChange};
+pub use audit::{AuditLog, Decision};
+pub use config::{ControllerConfig, Levers};
+pub use fsm::{Controller, CtlState};
+pub use view::{InstanceView, PlannerView, TenantView};

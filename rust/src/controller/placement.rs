@@ -1,0 +1,292 @@
+//! Topology-aware placement heuristic (§2.2.1).
+//!
+//! "We query GPU and PCIe topology ... to form a simple placement score
+//! for each candidate MIG instance. The score penalizes (i) sharing a
+//! PCIe root complex with a bandwidth-heavy tenant, (ii) colocating with
+//! a NUMA domain exhibiting high block I/O, and (iii) recent IRQ bursts
+//! on adjacent CPU cores."
+
+use crate::gpu::MigProfile;
+use crate::telemetry::SignalSnapshot;
+use crate::tenants::TenantId;
+
+use super::view::{InstanceView, PlannerView};
+
+/// Score weights (α, β, γ) for the three penalty terms, plus a slice-size
+/// bonus so bigger candidate profiles win ties.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoreWeights {
+    pub alpha_pcie: f64,
+    pub beta_numa_io: f64,
+    pub gamma_irq: f64,
+    /// Penalty per unit of *lost* service rate μ relative to the largest
+    /// candidate (placement must not silently starve compute).
+    pub mu_loss: f64,
+}
+
+impl Default for ScoreWeights {
+    fn default() -> Self {
+        ScoreWeights {
+            alpha_pcie: 1.0,
+            beta_numa_io: 0.6,
+            gamma_irq: 0.002,
+            mu_loss: 0.8,
+        }
+    }
+}
+
+/// A scored candidate placement.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub gpu: usize,
+    pub profile: MigProfile,
+    /// Existing free instance (no reconfig) vs must-create (dynamic MIG).
+    pub existing: bool,
+    pub score: f64,
+}
+
+/// Penalty score for placing `tenant` on `gpu` (lower is better).
+pub fn placement_score(
+    tenant: TenantId,
+    gpu: usize,
+    profile: MigProfile,
+    snap: &SignalSnapshot,
+    view: &PlannerView,
+    w: &ScoreWeights,
+) -> f64 {
+    let link = view.topo.link_of_gpu(gpu);
+    let numa = view.topo.numa_of_gpu(gpu);
+
+    // (i) bandwidth-heavy tenants sharing the candidate's root complex.
+    let mut pcie_pen = 0.0;
+    for t in &snap.tenants {
+        if t.tenant == tenant || !t.active {
+            continue;
+        }
+        if let Some(tv) = view.tenant(t.tenant) {
+            if view.topo.link_of_gpu(tv.gpu) == link {
+                pcie_pen += t.pcie_gbps;
+            }
+        }
+    }
+
+    // (ii) NUMA-domain block I/O.
+    let io_pen = snap.numa_io_gbps.get(numa).copied().unwrap_or(0.0);
+
+    // (iii) IRQ bursts on adjacent cores.
+    let irq_pen = snap.numa_irq_rate.get(numa).copied().unwrap_or(0.0);
+
+    // Slice-size term: losing μ vs the full GPU costs score.
+    let mu_pen = (MigProfile::P7g80gb.mu() - profile.mu()) / MigProfile::P7g80gb.mu();
+
+    w.alpha_pcie * pcie_pen + w.beta_numa_io * io_pen + w.gamma_irq * irq_pen + w.mu_loss * mu_pen
+}
+
+/// Enumerate and score candidate placements for `tenant`.
+///
+/// * Existing free instances are always candidates (a pure placement
+///   move, no `nvidia-smi mig` call).
+/// * If `allow_create`, profiles creatable on free slices are candidates
+///   too (dynamic-MIG + placement combined — used for upgrades).
+///
+/// Returned sorted by ascending score (best first).
+pub fn candidates(
+    tenant: TenantId,
+    snap: &SignalSnapshot,
+    view: &PlannerView,
+    w: &ScoreWeights,
+    allow_create: bool,
+    min_profile: MigProfile,
+    max_profile: MigProfile,
+) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for inst in &view.free_instances {
+        if inst.profile < min_profile || inst.profile > max_profile {
+            continue;
+        }
+        out.push(Candidate {
+            gpu: inst.gpu,
+            profile: inst.profile,
+            existing: true,
+            score: placement_score(tenant, inst.gpu, inst.profile, snap, view, w),
+        });
+    }
+    if allow_create {
+        for profile in MigProfile::ALL {
+            if profile < min_profile || profile > max_profile {
+                continue;
+            }
+            for gpu in view.creatable_on(profile) {
+                out.push(Candidate {
+                    gpu,
+                    profile,
+                    existing: false,
+                    // Creation implies an 18s reconfig pause; nudge the
+                    // score so equal-quality existing instances win.
+                    score: placement_score(tenant, gpu, profile, snap, view, w) + 0.05,
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| a.score.total_cmp(&b.score));
+    out
+}
+
+/// Score of the tenant's *current* placement (for the improvement-margin
+/// test: only move when the best candidate wins by a clear margin).
+pub fn current_score(
+    tenant: TenantId,
+    snap: &SignalSnapshot,
+    view: &PlannerView,
+    w: &ScoreWeights,
+) -> Option<f64> {
+    let tv = view.tenant(tenant)?;
+    let mut s = placement_score(tenant, tv.gpu, tv.profile, snap, view, w);
+    // An active MPS peer on the same instance is the worst hot spot of
+    // all — naive co-placement. Penalize accordingly so the planner
+    // prefers any dedicated candidate.
+    for peer in &tv.mps_peers {
+        if snap.tenant(*peer).map(|p| p.active).unwrap_or(false) {
+            s += 2.0;
+        }
+    }
+    Some(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{A100Gpu, InstanceId};
+    use crate::telemetry::signals::{LinkSignal, TailStats, TenantSignal};
+    use crate::tenants::spec::{T1, T2};
+    use crate::topo::{HostTopology, LinkId};
+
+    fn mk_view() -> PlannerView {
+        let topo = HostTopology::p4d();
+        let mut gpus: Vec<A100Gpu> = (0..8).map(A100Gpu::new).collect();
+        gpus[0].create_at(MigProfile::P4g40gb, 0).unwrap(); // T1 (+T3)
+        gpus[0].create_at(MigProfile::P3g40gb, 4).unwrap(); // T2
+        gpus[2].create_at(MigProfile::P2g20gb, 0).unwrap(); // spare
+        PlannerView {
+            topo,
+            gpus,
+            tenants: vec![
+                super::super::view::TenantView {
+                    tenant: T1,
+                    gpu: 0,
+                    instance: InstanceId(1),
+                    profile: MigProfile::P4g40gb,
+                    mps_peers: vec![],
+                    numa: 0,
+                    mps_quota: 100.0,
+                    io_throttle_gbps: None,
+                },
+                super::super::view::TenantView {
+                    tenant: T2,
+                    gpu: 0,
+                    instance: InstanceId(2),
+                    profile: MigProfile::P3g40gb,
+                    mps_peers: vec![],
+                    numa: 0,
+                    mps_quota: 100.0,
+                    io_throttle_gbps: None,
+                },
+            ],
+            free_instances: vec![InstanceView {
+                gpu: 2,
+                existing: Some(InstanceId(1)),
+                profile: MigProfile::P2g20gb,
+            }],
+            t1_base_rps: 120.0,
+        }
+    }
+
+    fn mk_snap(t2_pcie: f64, numa0_io: f64) -> SignalSnapshot {
+        SignalSnapshot {
+            t: 10.0,
+            dt: 2.0,
+            tenants: vec![
+                TenantSignal {
+                    tenant: T1,
+                    tails: TailStats::default(),
+                    pcie_gbps: 0.4,
+                    block_io_gbps: 0.0,
+                    active: true,
+                },
+                TenantSignal {
+                    tenant: T2,
+                    tails: TailStats::default(),
+                    pcie_gbps: t2_pcie,
+                    block_io_gbps: numa0_io,
+                    active: true,
+                },
+            ],
+            links: (0..6)
+                .map(|i| LinkSignal {
+                    link: LinkId(i),
+                    utilization: if i == 0 { 0.9 } else { 0.05 },
+                    gbps: 0.0,
+                })
+                .collect(),
+            gpu_sm_util: vec![0.5; 8],
+            numa_io_gbps: vec![numa0_io, 0.0],
+            numa_irq_rate: vec![800.0, 50.0],
+        }
+    }
+
+    #[test]
+    fn hot_switch_penalized() {
+        let view = mk_view();
+        let snap = mk_snap(10.0, 2.0);
+        let w = ScoreWeights::default();
+        let s_gpu0 = placement_score(T1, 0, MigProfile::P2g20gb, &snap, &view, &w);
+        let s_gpu2 = placement_score(T1, 2, MigProfile::P2g20gb, &snap, &view, &w);
+        let s_gpu4 = placement_score(T1, 4, MigProfile::P2g20gb, &snap, &view, &w);
+        assert!(s_gpu0 > s_gpu2, "same switch as T2 must score worse");
+        // gpu4 is on NUMA 1: avoids T2's block-I/O too.
+        assert!(s_gpu4 < s_gpu2, "other NUMA should beat same-NUMA");
+    }
+
+    #[test]
+    fn bigger_profile_preferred_all_else_equal() {
+        let view = mk_view();
+        let snap = mk_snap(0.0, 0.0);
+        let w = ScoreWeights::default();
+        let small = placement_score(T1, 4, MigProfile::P1g10gb, &snap, &view, &w);
+        let big = placement_score(T1, 4, MigProfile::P3g40gb, &snap, &view, &w);
+        assert!(big < small);
+    }
+
+    #[test]
+    fn candidates_sorted_and_respect_min_profile() {
+        let view = mk_view();
+        let snap = mk_snap(10.0, 2.0);
+        let w = ScoreWeights::default();
+        let cands = candidates(T1, &snap, &view, &w, true, MigProfile::P2g20gb, MigProfile::P7g80gb);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            assert!(c.profile >= MigProfile::P2g20gb);
+        }
+        for pair in cands.windows(2) {
+            assert!(pair[0].score <= pair[1].score);
+        }
+    }
+
+    #[test]
+    fn existing_instance_beats_create_on_equal_topology() {
+        let view = mk_view();
+        let snap = mk_snap(0.0, 0.0);
+        let w = ScoreWeights::default();
+        let cands = candidates(T1, &snap, &view, &w, true, MigProfile::P2g20gb, MigProfile::P7g80gb);
+        let existing = cands
+            .iter()
+            .find(|c| c.existing && c.gpu == 2 && c.profile == MigProfile::P2g20gb)
+            .unwrap();
+        let created = cands
+            .iter()
+            .find(|c| !c.existing && c.gpu == 2 && c.profile == MigProfile::P2g20gb);
+        if let Some(created) = created {
+            assert!(existing.score < created.score);
+        }
+    }
+}

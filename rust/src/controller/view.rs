@@ -1,0 +1,64 @@
+//! Planner view: the placement/MIG state the controller plans against.
+//!
+//! Built by the platform at each sampling tick; the controller never
+//! touches the simulator directly (fabric-agnosticism).
+
+use crate::gpu::{A100Gpu, InstanceId, MigProfile};
+use crate::tenants::TenantId;
+use crate::topo::HostTopology;
+
+/// One tenant's current placement.
+#[derive(Clone, Debug)]
+pub struct TenantView {
+    pub tenant: TenantId,
+    pub gpu: usize,
+    pub instance: InstanceId,
+    pub profile: MigProfile,
+    /// Tenants sharing the same MIG instance via MPS (naive co-placement).
+    pub mps_peers: Vec<TenantId>,
+    /// NUMA domain the tenant's host threads are pinned to.
+    pub numa: usize,
+    /// Current MPS active-thread quota (100 = uncapped).
+    pub mps_quota: f64,
+    /// Current IO throttle (GB/s) if any.
+    pub io_throttle_gbps: Option<f64>,
+}
+
+/// A MIG instance that could host the latency-sensitive tenant.
+#[derive(Clone, Debug)]
+pub struct InstanceView {
+    pub gpu: usize,
+    /// Existing unoccupied instance — `Some(id)`; `None` means the slot
+    /// would have to be created on free slices (requires `dynamic_mig`).
+    pub existing: Option<InstanceId>,
+    pub profile: MigProfile,
+}
+
+/// Everything the planner needs.
+#[derive(Clone, Debug)]
+pub struct PlannerView {
+    pub topo: HostTopology,
+    pub gpus: Vec<A100Gpu>,
+    pub tenants: Vec<TenantView>,
+    /// Unoccupied existing instances (movable targets without reconfig).
+    pub free_instances: Vec<InstanceView>,
+    /// Expected baseline throughput of the primary tenant (req/s) for the
+    /// ≥95% budget check.
+    pub t1_base_rps: f64,
+}
+
+impl PlannerView {
+    pub fn tenant(&self, id: TenantId) -> Option<&TenantView> {
+        self.tenants.iter().find(|t| t.tenant == id)
+    }
+
+    /// Creatable placements for `profile`: GPUs with legal free slices
+    /// (requires dynamic MIG).
+    pub fn creatable_on(&self, profile: MigProfile) -> Vec<usize> {
+        self.gpus
+            .iter()
+            .filter(|g| !g.placements(profile).is_empty())
+            .map(|g| g.index)
+            .collect()
+    }
+}

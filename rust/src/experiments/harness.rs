@@ -1,0 +1,130 @@
+//! Repeat-run machinery: fixed seeds, mean ± 95% CI (§3.1: 7 repeats).
+
+use crate::controller::Levers;
+use crate::platform::{RunResult, Scenario, SimWorld};
+use crate::util::stats::Summary;
+
+/// Repeat policy. The paper uses 7 fixed seeds; `fast()` trims for CI
+/// and smoke runs (`PREDSERVE_FAST=1`).
+#[derive(Clone, Copy, Debug)]
+pub struct Repeats {
+    pub seeds: [u64; 7],
+    pub count: usize,
+    pub horizon_s: f64,
+}
+
+impl Repeats {
+    pub fn paper() -> Repeats {
+        Repeats {
+            seeds: [11, 12, 13, 14, 15, 16, 17],
+            count: 7,
+            horizon_s: 1800.0,
+        }
+    }
+
+    pub fn fast() -> Repeats {
+        Repeats {
+            seeds: [11, 12, 13, 14, 15, 16, 17],
+            count: 3,
+            horizon_s: 600.0,
+        }
+    }
+
+    /// Honor `PREDSERVE_FAST` for quick smoke regeneration.
+    pub fn from_env() -> Repeats {
+        if std::env::var("PREDSERVE_FAST").map(|v| v == "1").unwrap_or(false) {
+            Repeats::fast()
+        } else {
+            Repeats::paper()
+        }
+    }
+
+    pub fn active_seeds(&self) -> &[u64] {
+        &self.seeds[..self.count]
+    }
+}
+
+/// Aggregated metrics for one configuration across repeats.
+#[derive(Clone, Debug)]
+pub struct ConfigSummary {
+    pub label: String,
+    pub miss_rate_pct: Summary,
+    pub p95_ms: Summary,
+    pub p99_ms: Summary,
+    pub p999_ms: Summary,
+    pub rps: Summary,
+    pub moves_per_hour: Summary,
+    pub mean_sm_util: Summary,
+    pub reconfig_s: Summary,
+    pub controller_cpu_pct: Summary,
+    pub runs: Vec<RunResult>,
+}
+
+impl ConfigSummary {
+    pub fn of(label: &str, runs: Vec<RunResult>) -> ConfigSummary {
+        let take = |f: &dyn Fn(&RunResult) -> f64| {
+            Summary::of(&runs.iter().map(|r| f(r)).collect::<Vec<_>>())
+        };
+        let reconfigs: Vec<f64> = runs
+            .iter()
+            .flat_map(|r| r.reconfig_durations_s.iter().copied())
+            .collect();
+        ConfigSummary {
+            label: label.to_string(),
+            miss_rate_pct: take(&|r| r.miss_rate * 100.0),
+            p95_ms: take(&|r| r.p95_ms),
+            p99_ms: take(&|r| r.p99_ms),
+            p999_ms: take(&|r| r.p999_ms),
+            rps: take(&|r| r.rps),
+            moves_per_hour: take(&|r| r.moves_per_hour),
+            mean_sm_util: take(&|r| r.mean_sm_util),
+            reconfig_s: Summary::of(&reconfigs),
+            controller_cpu_pct: take(&|r| r.controller_cpu_frac * 100.0),
+            runs,
+        }
+    }
+}
+
+/// Run `levers` over the repeat set on the scenario produced by `mk`.
+pub fn repeat_runs(
+    label: &str,
+    levers: Levers,
+    repeats: &Repeats,
+    mk: impl Fn(u64, Levers) -> Scenario,
+) -> ConfigSummary {
+    let mut runs = Vec::new();
+    for &seed in repeats.active_seeds() {
+        let mut scenario = mk(seed, levers);
+        scenario.horizon = repeats.horizon_s;
+        runs.push(SimWorld::new(scenario).run());
+    }
+    ConfigSummary::of(label, runs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_summary_aggregates() {
+        let repeats = Repeats {
+            seeds: [1, 2, 3, 4, 5, 6, 7],
+            count: 2,
+            horizon_s: 60.0,
+        };
+        let s = repeat_runs("Static MIG", Levers::none(), &repeats, |seed, lv| {
+            Scenario::paper_single_host(seed, lv)
+        });
+        assert_eq!(s.runs.len(), 2);
+        assert_eq!(s.miss_rate_pct.n, 2);
+        assert!(s.p99_ms.mean > 0.0);
+        assert!(s.rps.mean > 0.0);
+    }
+
+    #[test]
+    fn fast_env_toggle() {
+        let r = Repeats::fast();
+        assert_eq!(r.count, 3);
+        assert_eq!(Repeats::paper().count, 7);
+    }
+}

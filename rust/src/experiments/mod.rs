@@ -1,0 +1,13 @@
+//! Experiment harness: runs the paper's evaluation (E1-E3, Tables 2-4,
+//! Figures 2-4) and prints paper-vs-measured reports.
+//!
+//! Every bench in `rust/benches/` and every example is a thin wrapper
+//! over these functions, so the tables can also be regenerated from the
+//! CLI (`predserve experiment <id>`).
+
+pub mod harness;
+pub mod report;
+pub mod runs;
+
+pub use harness::{repeat_runs, ConfigSummary, Repeats};
+pub use report::{fmt_row, markdown_table};

@@ -1,0 +1,60 @@
+//! Report formatting: markdown tables with paper-vs-measured columns.
+
+/// Format one `value ± ci` cell.
+pub fn fmt_row(mean: f64, ci: f64, decimals: usize) -> String {
+    format!("{:.d$} ± {:.d$}", mean, ci, d = decimals)
+}
+
+/// Render a markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&header.join(" | "));
+    out.push_str(" |\n|");
+    for _ in header {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+/// Write a CSV series (figure data) to `target/paper/<name>.csv`.
+pub fn write_series(name: &str, header: &str, rows: &[Vec<f64>]) -> std::io::Result<String> {
+    let dir = std::path::Path::new("target/paper");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut body = String::from(header);
+    body.push('\n');
+    for r in rows {
+        let cells: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+        body.push_str(&cells.join(","));
+        body.push('\n');
+    }
+    std::fs::write(&path, body)?;
+    Ok(path.display().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let t = markdown_table(
+            &["Configuration", "p99 (ms)"],
+            &[vec!["Static MIG".into(), "20.0 ± 1.2".into()]],
+        );
+        assert!(t.contains("| Configuration | p99 (ms) |"));
+        assert!(t.contains("| Static MIG | 20.0 ± 1.2 |"));
+    }
+
+    #[test]
+    fn fmt_matches_paper_style() {
+        assert_eq!(fmt_row(16.5, 0.7, 1), "16.5 ± 0.7");
+    }
+}

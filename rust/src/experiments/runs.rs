@@ -1,0 +1,358 @@
+//! Experiment runners — one per paper table/figure (see DESIGN.md index).
+
+use crate::controller::Levers;
+use crate::fabric::ps::{ps_rates, FlowDemand};
+use crate::platform::Scenario;
+use crate::tenants::InterferenceSchedule;
+
+use super::harness::{repeat_runs, ConfigSummary, Repeats};
+use super::report::{fmt_row, markdown_table, write_series};
+
+/// The five E2 configurations in paper order (Table 3).
+pub fn ablation_levers() -> [(&'static str, Levers); 5] {
+    [
+        ("Static MIG", Levers::none()),
+        ("Guards-only", Levers::guards_only()),
+        ("Placement-only", Levers::placement_only()),
+        ("MIG-only", Levers::mig_only()),
+        ("Full System", Levers::full()),
+    ]
+}
+
+/// E2 / Table 3: the ablation study.
+pub fn run_ablation(repeats: &Repeats) -> Vec<ConfigSummary> {
+    ablation_levers()
+        .into_iter()
+        .map(|(label, lv)| repeat_runs(label, lv, repeats, Scenario::paper_single_host))
+        .collect()
+}
+
+/// Paper's Table 3 reference values: (label, miss%, p99, norm tput).
+pub const TABLE3_PAPER: [(&str, f64, f64, f64); 5] = [
+    ("Static MIG", 16.4, 20.0, 1.00),
+    ("Guards-only", 14.5, 19.0, 0.99),
+    ("Placement-only", 13.0, 17.8, 0.98),
+    ("MIG-only", 12.2, 17.2, 0.98),
+    ("Full System", 11.1, 16.5, 0.97),
+];
+
+/// Render Table 3 with paper-vs-measured columns. Throughput is
+/// normalized to the Static MIG run, as in the paper.
+pub fn render_table3(sums: &[ConfigSummary]) -> String {
+    let base_rps = sums
+        .iter()
+        .find(|s| s.label == "Static MIG")
+        .map(|s| s.rps.mean)
+        .unwrap_or(1.0);
+    let rows: Vec<Vec<String>> = sums
+        .iter()
+        .map(|s| {
+            let paper = TABLE3_PAPER
+                .iter()
+                .find(|(l, ..)| *l == s.label)
+                .copied()
+                .unwrap_or((s.label.as_str(), f64::NAN, f64::NAN, f64::NAN));
+            vec![
+                s.label.clone(),
+                format!("{}%", fmt_row(s.miss_rate_pct.mean, s.miss_rate_pct.ci95, 1)),
+                format!("{:.1}%", paper.1),
+                fmt_row(s.p99_ms.mean, s.p99_ms.ci95, 1),
+                format!("{:.1}", paper.2),
+                format!("{:.2}", s.rps.mean / base_rps),
+                format!("{:.2}", paper.3),
+            ]
+        })
+        .collect();
+    markdown_table(
+        &[
+            "Configuration",
+            "SLO miss (meas.)",
+            "SLO miss (paper)",
+            "p99 ms (meas.)",
+            "p99 ms (paper)",
+            "Norm. tput (meas.)",
+            "Norm. tput (paper)",
+        ],
+        &rows,
+    )
+}
+
+/// Table 2 (LLM case study): static vs full on the TTFT workload.
+pub fn run_table2(repeats: &Repeats) -> Vec<ConfigSummary> {
+    [("Static MIG", Levers::none()), ("Full System", Levers::full())]
+        .into_iter()
+        .map(|(label, lv)| repeat_runs(label, lv, repeats, Scenario::paper_llm_case))
+        .collect()
+}
+
+pub fn render_table2(sums: &[ConfigSummary]) -> String {
+    let base_rps = sums
+        .iter()
+        .find(|s| s.label == "Static MIG")
+        .map(|s| s.rps.mean)
+        .unwrap_or(1.0);
+    let paper = [("Static MIG", 232.0, 1.00), ("Full System", 199.0, 0.96)];
+    let rows: Vec<Vec<String>> = sums
+        .iter()
+        .map(|s| {
+            let p = paper.iter().find(|(l, ..)| *l == s.label).unwrap();
+            vec![
+                s.label.clone(),
+                fmt_row(s.p99_ms.mean, s.p99_ms.ci95, 0),
+                format!("{:.0}", p.1),
+                format!("{:.2}", s.rps.mean / base_rps),
+                format!("{:.2}", p.2),
+            ]
+        })
+        .collect();
+    markdown_table(
+        &[
+            "Configuration",
+            "TTFT p99 ms (meas.)",
+            "TTFT p99 ms (paper)",
+            "Norm. tput (meas.)",
+            "Norm. tput (paper)",
+        ],
+        &rows,
+    )
+}
+
+/// Table 4 (controller overheads) from the Full System runs.
+pub fn render_table4(full: &ConfigSummary) -> String {
+    let rows = vec![
+        vec![
+            "MIG reconfig time (s)".to_string(),
+            fmt_row(full.reconfig_s.mean, full.reconfig_s.ci95, 0),
+            "18 ± 6".to_string(),
+        ],
+        vec![
+            "Move frequency (/hr)".to_string(),
+            format!("{:.1}", full.moves_per_hour.mean),
+            "< 5".to_string(),
+        ],
+        vec![
+            "Controller CPU (%)".to_string(),
+            format!("{:.3}", full.controller_cpu_pct.mean),
+            "< 2%".to_string(),
+        ],
+    ];
+    markdown_table(&["Metric", "Measured", "Paper"], &rows)
+}
+
+/// Figure 2: PS bandwidth sharing curves — per-tenant bandwidth vs number
+/// of co-active tenants, with and without caps. Writes CSV, returns the
+/// rendered rows.
+pub fn run_fig2() -> (String, Vec<Vec<f64>>) {
+    let capacity = 25.0;
+    let mut rows = Vec::new();
+    for n in 1..=8usize {
+        let uncapped: Vec<FlowDemand> = (0..n)
+            .map(|_| FlowDemand {
+                weight: 1.0,
+                cap: None,
+            })
+            .collect();
+        let share = ps_rates(capacity, &uncapped)[0];
+        // One capped "noisy" tenant (g = 2 GB/s) + n-1 fair tenants.
+        let mut capped = uncapped.clone();
+        capped[0].cap = Some(2.0);
+        let rates = ps_rates(capacity, &capped);
+        let victim = if n > 1 { rates[1] } else { rates[0] };
+        rows.push(vec![n as f64, share, rates[0], victim]);
+    }
+    let path = write_series(
+        "fig2_ps_model",
+        "tenants,fair_share_gbps,capped_offender_gbps,victim_share_gbps",
+        &rows,
+    )
+    .unwrap_or_default();
+    let table = markdown_table(
+        &["co-active tenants", "fair share GB/s", "offender (g=2) GB/s", "victim GB/s"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r[0] as usize),
+                    format!("{:.2}", r[1]),
+                    format!("{:.2}", r[2]),
+                    format!("{:.2}", r[3]),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    (format!("{table}\n(series: {path})\n"), rows)
+}
+
+/// Figure 3a: one Full System run's action timeline + p99 series.
+/// Figure 3b: compliance vs efficiency scatter across the 5 configs.
+pub fn run_fig3(repeats: &Repeats) -> String {
+    let mut out = String::new();
+    // 3a: single representative seed.
+    let mut scenario = Scenario::paper_single_host(repeats.seeds[0], Levers::full());
+    scenario.horizon = repeats.horizon_s;
+    let r = crate::platform::SimWorld::new(scenario).run();
+    let series: Vec<Vec<f64>> = r.p99_series.iter().map(|(t, p)| vec![*t, *p]).collect();
+    let p1 = write_series("fig3a_p99_series", "t_s,p99_ms", &series).unwrap_or_default();
+    out.push_str(&format!(
+        "Fig 3a: p99 timeline -> {p1}; controller actions:\n"
+    ));
+    for (t, kind, p99) in &r.timeline {
+        out.push_str(&format!("  t={t:7.1}s  {kind:12}  (p99 at decision {p99:.1} ms)\n"));
+    }
+    // 3b: scatter.
+    let sums = run_ablation(repeats);
+    let rows: Vec<Vec<f64>> = sums
+        .iter()
+        .map(|s| {
+            vec![
+                s.mean_sm_util.mean,
+                100.0 - s.miss_rate_pct.mean,
+            ]
+        })
+        .collect();
+    let p2 = write_series("fig3b_efficiency_compliance", "sm_util,slo_compliance_pct", &rows)
+        .unwrap_or_default();
+    out.push_str(&format!("Fig 3b: efficiency-compliance scatter -> {p2}\n"));
+    for (s, row) in sums.iter().zip(&rows) {
+        out.push_str(&format!(
+            "  {:16} util={:.2} compliance={:.1}%\n",
+            s.label, row[0], row[1]
+        ));
+    }
+    out
+}
+
+/// Figure 4: latency distribution under low/high contention, static vs
+/// full. Emits CCDF series and the p99 markers.
+pub fn run_fig4(repeats: &Repeats) -> String {
+    let mut out = String::new();
+    let cases = [
+        ("low_contention_static", Levers::none(), false),
+        ("high_contention_static", Levers::none(), true),
+        ("high_contention_full", Levers::full(), true),
+    ];
+    for (name, lv, on) in cases {
+        let mut scenario = Scenario::steady_contention(repeats.seeds[0], lv, on);
+        scenario.horizon = repeats.horizon_s;
+        let r = crate::platform::SimWorld::new(scenario).run();
+        let ccdf: Vec<Vec<f64>> = r
+            .histogram
+            .ccdf()
+            .into_iter()
+            .map(|(us, p)| vec![us as f64 / 1000.0, p])
+            .collect();
+        let path = write_series(&format!("fig4_{name}"), "latency_ms,ccdf", &ccdf)
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "{name:24} p99={:6.2} ms p999={:7.2} ms miss={:5.1}% -> {path}\n",
+            r.p99_ms,
+            r.p999_ms,
+            r.miss_rate * 100.0
+        ));
+    }
+    out
+}
+
+/// E3: sensitivity sweep over τ and Y (+ guardrail bounds).
+pub fn run_sensitivity(repeats: &Repeats) -> String {
+    let mut rows = Vec::new();
+    for tau in [10.0, 12.5, 15.0, 20.0, 25.0] {
+        let sum = repeat_runs("full", Levers::full(), repeats, |seed, lv| {
+            let mut s = Scenario::paper_single_host(seed, lv);
+            s.controller.tau_ms = tau;
+            s
+        });
+        let actions: usize = sum
+            .runs
+            .iter()
+            .map(|r| r.actions.iter().map(|(_, c)| c).sum::<usize>())
+            .sum();
+        rows.push(vec![
+            format!("τ={tau}ms"),
+            format!("{}%", fmt_row(sum.miss_rate_pct.mean, sum.miss_rate_pct.ci95, 1)),
+            fmt_row(sum.p99_ms.mean, sum.p99_ms.ci95, 1),
+            format!("{:.1}", actions as f64 / sum.runs.len() as f64),
+        ]);
+    }
+    for y in [1u32, 2, 3, 5, 8] {
+        let sum = repeat_runs("full", Levers::full(), repeats, |seed, lv| {
+            let mut s = Scenario::paper_single_host(seed, lv);
+            s.controller.persistence_y = y;
+            s
+        });
+        let actions: usize = sum
+            .runs
+            .iter()
+            .map(|r| r.actions.iter().map(|(_, c)| c).sum::<usize>())
+            .sum();
+        rows.push(vec![
+            format!("Y={y}"),
+            format!("{}%", fmt_row(sum.miss_rate_pct.mean, sum.miss_rate_pct.ci95, 1)),
+            fmt_row(sum.p99_ms.mean, sum.p99_ms.ci95, 1),
+            format!("{:.1}", actions as f64 / sum.runs.len() as f64),
+        ]);
+    }
+    for (lo, hi, label) in [(0.05, 0.25, "IO 50-250MB/s"), (0.1, 0.5, "IO 100-500MB/s"), (0.25, 1.0, "IO 250MB-1GB/s")] {
+        let sum = repeat_runs("full", Levers::full(), repeats, |seed, lv| {
+            let mut s = Scenario::paper_single_host(seed, lv);
+            s.controller.io_throttle_min_gbps = lo;
+            s.controller.io_throttle_max_gbps = hi;
+            s
+        });
+        rows.push(vec![
+            label.to_string(),
+            format!("{}%", fmt_row(sum.miss_rate_pct.mean, sum.miss_rate_pct.ci95, 1)),
+            fmt_row(sum.p99_ms.mean, sum.p99_ms.ci95, 1),
+            "-".to_string(),
+        ]);
+    }
+    markdown_table(
+        &["Parameter", "SLO miss", "p99 (ms)", "actions/run"],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Repeats {
+        Repeats {
+            seeds: [11, 12, 13, 14, 15, 16, 17],
+            count: 1,
+            horizon_s: 60.0,
+        }
+    }
+
+    #[test]
+    fn ablation_produces_five_configs() {
+        let sums = run_ablation(&tiny());
+        assert_eq!(sums.len(), 5);
+        let t = render_table3(&sums);
+        assert!(t.contains("Static MIG"));
+        assert!(t.contains("Full System"));
+        assert!(t.contains("16.4%")); // paper reference present
+    }
+
+    #[test]
+    fn fig2_monotone_sharing() {
+        let (_, rows) = run_fig2();
+        // Fair share decreases with tenant count; victim share with a
+        // capped offender exceeds the uncapped fair share.
+        for w in rows.windows(2) {
+            assert!(w[1][1] <= w[0][1] + 1e-9);
+        }
+        let n4 = &rows[3];
+        assert!(n4[3] > n4[1], "victim {} !> fair {}", n4[3], n4[1]);
+        assert!((n4[2] - 2.0).abs() < 1e-9, "offender capped at 2");
+    }
+
+    #[test]
+    fn table4_renders() {
+        let sums = run_ablation(&tiny());
+        let full = sums.iter().find(|s| s.label == "Full System").unwrap();
+        let t = render_table4(full);
+        assert!(t.contains("MIG reconfig time"));
+        assert!(t.contains("< 5"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared-bandwidth fabric: the paper's §2.5.1 processor-sharing model.
+//!
+//! "We model the PCIe fabric as a single processor-sharing (PS) server of
+//! capacity B. When a set A(t) of tenants is active, tenant i receives
+//! instantaneous bandwidth b_i(t) = min(B·w_i / Σ_j w_j, g_i)."
+//!
+//! [`ps`] implements that allocation exactly (weighted PS with optional
+//! per-flow caps, via water-filling) for every shared-bandwidth domain on
+//! the host (PCIe upstream links, NUMA-local NVMe paths). [`transfer`]
+//! runs fluid-flow transfers over it for the discrete-event simulator.
+
+pub mod ps;
+pub mod transfer;
+
+pub use ps::{ps_rates, FlowDemand};
+pub use transfer::{Fabric, FlowId, LinkCounters};

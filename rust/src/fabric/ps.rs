@@ -1,0 +1,186 @@
+//! Weighted processor-sharing rate allocation with per-flow caps.
+//!
+//! Implements §2.5.1: `b_i = min(B·w_i / Σ_j w_j, g_i)` — with the standard
+//! water-filling refinement so that bandwidth a capped flow cannot use is
+//! redistributed to the uncapped flows (equal weights recover equal
+//! sharing; caps recover explicit host throttles).
+
+/// One flow's demand on a shared link.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowDemand {
+    /// PS weight w_i (> 0; equal weights = equal sharing).
+    pub weight: f64,
+    /// Optional host-level throttle g_i in the same units as capacity.
+    pub cap: Option<f64>,
+}
+
+/// Compute the PS rate vector for `flows` on a link of `capacity`.
+///
+/// Water-filling: repeatedly give every unfixed flow its weighted share of
+/// the remaining capacity; any flow whose share exceeds its cap is fixed
+/// at the cap and removed from the pool. Terminates in ≤ n rounds.
+pub fn ps_rates(capacity: f64, flows: &[FlowDemand]) -> Vec<f64> {
+    let n = flows.len();
+    let mut rates = vec![0.0; n];
+    if n == 0 || capacity <= 0.0 {
+        return rates;
+    }
+    let mut fixed = vec![false; n];
+    let mut cap_left = capacity;
+    loop {
+        let w_total: f64 = flows
+            .iter()
+            .zip(&fixed)
+            .filter(|(_, &f)| !f)
+            .map(|(d, _)| d.weight)
+            .sum();
+        if w_total <= 0.0 || cap_left <= 0.0 {
+            break;
+        }
+        let mut any_fixed = false;
+        for i in 0..n {
+            if fixed[i] {
+                continue;
+            }
+            let share = cap_left * flows[i].weight / w_total;
+            if let Some(cap) = flows[i].cap {
+                if cap < share {
+                    rates[i] = cap;
+                    fixed[i] = true;
+                    cap_left -= cap;
+                    any_fixed = true;
+                }
+            }
+        }
+        if !any_fixed {
+            // No more caps bind: distribute the remainder proportionally.
+            for i in 0..n {
+                if !fixed[i] {
+                    rates[i] = cap_left * flows[i].weight / w_total;
+                }
+            }
+            break;
+        }
+    }
+    rates
+}
+
+/// Utilization ρ = Σ min(g_j, fair share) / B under the current flow set —
+/// the stability quantity of Claim 1 (Σ g_j < B ⇒ ρ < 1).
+pub fn utilization(capacity: f64, flows: &[FlowDemand]) -> f64 {
+    if capacity <= 0.0 {
+        return 0.0;
+    }
+    ps_rates(capacity, flows).iter().sum::<f64>() / capacity
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(weight: f64, cap: Option<f64>) -> FlowDemand {
+        FlowDemand { weight, cap }
+    }
+
+    #[test]
+    fn equal_weights_equal_share() {
+        let r = ps_rates(24.0, &[d(1.0, None), d(1.0, None), d(1.0, None)]);
+        for x in &r {
+            assert!((x - 8.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn weighted_share() {
+        let r = ps_rates(30.0, &[d(2.0, None), d(1.0, None)]);
+        assert!((r[0] - 20.0).abs() < 1e-12);
+        assert!((r[1] - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cap_binds_and_redistributes() {
+        // Paper's g_i: the capped flow gets its throttle; the rest goes to
+        // the uncapped flow (NOT wasted).
+        let r = ps_rates(20.0, &[d(1.0, Some(4.0)), d(1.0, None)]);
+        assert!((r[0] - 4.0).abs() < 1e-12);
+        assert!((r[1] - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cascade_of_caps() {
+        let r = ps_rates(30.0, &[d(1.0, Some(2.0)), d(1.0, Some(8.0)), d(1.0, None)]);
+        assert!((r[0] - 2.0).abs() < 1e-12);
+        assert!((r[1] - 8.0).abs() < 1e-12);
+        assert!((r[2] - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loose_caps_do_not_bind() {
+        let r = ps_rates(10.0, &[d(1.0, Some(100.0)), d(1.0, Some(100.0))]);
+        assert!((r[0] - 5.0).abs() < 1e-12);
+        assert!((r[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conservation_never_exceeds_capacity() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(31);
+        for _ in 0..500 {
+            let n = 1 + rng.below(8) as usize;
+            let flows: Vec<FlowDemand> = (0..n)
+                .map(|_| FlowDemand {
+                    weight: rng.range_f64(0.1, 4.0),
+                    cap: if rng.chance(0.5) {
+                        Some(rng.range_f64(0.5, 10.0))
+                    } else {
+                        None
+                    },
+                })
+                .collect();
+            let cap = rng.range_f64(1.0, 40.0);
+            let rates = ps_rates(cap, &flows);
+            let total: f64 = rates.iter().sum();
+            assert!(total <= cap + 1e-9, "total {total} > capacity {cap}");
+            for (r, f) in rates.iter().zip(&flows) {
+                assert!(*r >= -1e-12);
+                if let Some(g) = f.cap {
+                    assert!(*r <= g + 1e-9, "rate {r} exceeds cap {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn work_conserving_when_uncapped_flow_present() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(32);
+        for _ in 0..200 {
+            let n = 1 + rng.below(6) as usize;
+            let mut flows: Vec<FlowDemand> = (0..n)
+                .map(|_| FlowDemand {
+                    weight: rng.range_f64(0.1, 4.0),
+                    cap: Some(rng.range_f64(0.5, 5.0)),
+                })
+                .collect();
+            flows.push(d(1.0, None)); // one uncapped flow
+            let cap = rng.range_f64(5.0, 40.0);
+            let total: f64 = ps_rates(cap, &flows).iter().sum();
+            assert!((total - cap).abs() < 1e-9, "not work conserving: {total} vs {cap}");
+        }
+    }
+
+    #[test]
+    fn utilization_below_one_when_caps_sum_below_capacity() {
+        // Claim 1(iii): Σ g_j < B ⇒ ρ < 1.
+        let flows = [d(1.0, Some(3.0)), d(1.0, Some(4.0))];
+        let rho = utilization(10.0, &flows);
+        assert!(rho < 1.0);
+        assert!((rho - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        assert!(ps_rates(10.0, &[]).is_empty());
+        assert_eq!(ps_rates(0.0, &[d(1.0, None)]), vec![0.0]);
+    }
+}

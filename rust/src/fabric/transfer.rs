@@ -1,0 +1,315 @@
+//! Fluid-flow transfer engine over the PS links.
+//!
+//! The simulator advances in events; between events every active flow
+//! progresses at its current PS rate. Whenever the flow set (or a throttle)
+//! changes, rates are recomputed and the earliest completion time shifts —
+//! the sim world re-queries [`Fabric::next_completion`] after every
+//! mutation and versions its pending completion events.
+
+use super::ps::{ps_rates, FlowDemand};
+use crate::topo::{HostTopology, LinkId};
+use std::collections::BTreeMap;
+
+/// Identifies an active transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FlowId(pub u64);
+
+#[derive(Clone, Debug)]
+struct Flow {
+    link: LinkId,
+    weight: f64,
+    cap: Option<f64>,
+    /// Remaining payload in GB.
+    remaining: f64,
+    /// Opaque owner tag (tenant index) for telemetry attribution.
+    owner: usize,
+}
+
+/// Cumulative per-link counters (the "PCIe counters (bytes/s)" the
+/// controller samples, §2.1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkCounters {
+    /// Total GB moved through the link.
+    pub gb_total: f64,
+    /// Time-integral of utilization (for mean-utilization queries).
+    pub util_integral: f64,
+}
+
+/// All shared links on a host plus the active flows crossing them.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    capacities: Vec<f64>,
+    flows: BTreeMap<FlowId, Flow>,
+    next_id: u64,
+    counters: Vec<LinkCounters>,
+    /// Per-owner cumulative GB (tenant attribution).
+    owner_gb: BTreeMap<usize, f64>,
+}
+
+impl Fabric {
+    pub fn new(topo: &HostTopology) -> Fabric {
+        let mut capacities = vec![0.0; topo.num_links];
+        for s in &topo.switches {
+            capacities[s.link.0] = s.bandwidth_gbps;
+        }
+        for n in &topo.numa_nodes {
+            capacities[n.nvme_link.0] = n.nvme_gbps;
+        }
+        Fabric {
+            counters: vec![LinkCounters::default(); capacities.len()],
+            capacities,
+            flows: BTreeMap::new(),
+            next_id: 1,
+            owner_gb: BTreeMap::new(),
+        }
+    }
+
+    /// Start a transfer of `gb` on `link`. Returns its id.
+    pub fn start(
+        &mut self,
+        link: LinkId,
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+        owner: usize,
+    ) -> FlowId {
+        debug_assert!(gb > 0.0 && weight > 0.0);
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.insert(
+            id,
+            Flow {
+                link,
+                weight,
+                cap,
+                remaining: gb,
+                owner,
+            },
+        );
+        id
+    }
+
+    /// Remove a flow (normally after it completes). Returns the owner.
+    pub fn remove(&mut self, id: FlowId) -> Option<usize> {
+        self.flows.remove(&id).map(|f| f.owner)
+    }
+
+    /// Apply/remove a throttle g_i on every flow owned by `owner`
+    /// (the cgroup `io.max` guardrail acts per-tenant, not per-flow).
+    pub fn set_owner_cap(&mut self, owner: usize, cap: Option<f64>) {
+        for f in self.flows.values_mut() {
+            if f.owner == owner {
+                f.cap = cap;
+            }
+        }
+    }
+
+    pub fn flow_exists(&self, id: FlowId) -> bool {
+        self.flows.contains_key(&id)
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Current rate of each flow (GB/s), keyed by flow id.
+    pub fn rates(&self) -> BTreeMap<FlowId, f64> {
+        let mut out = BTreeMap::new();
+        for link in 0..self.capacities.len() {
+            let ids: Vec<FlowId> = self
+                .flows
+                .iter()
+                .filter(|(_, f)| f.link.0 == link)
+                .map(|(&id, _)| id)
+                .collect();
+            if ids.is_empty() {
+                continue;
+            }
+            let demands: Vec<FlowDemand> = ids
+                .iter()
+                .map(|id| {
+                    let f = &self.flows[id];
+                    FlowDemand {
+                        weight: f.weight,
+                        cap: f.cap,
+                    }
+                })
+                .collect();
+            let rates = ps_rates(self.capacities[link], &demands);
+            for (id, r) in ids.into_iter().zip(rates) {
+                out.insert(id, r);
+            }
+        }
+        out
+    }
+
+    /// Instantaneous rate of one flow.
+    pub fn rate_of(&self, id: FlowId) -> f64 {
+        *self.rates().get(&id).unwrap_or(&0.0)
+    }
+
+    /// Earliest (dt, flow) completion under current rates, if any flow is
+    /// active and draining.
+    pub fn next_completion(&self) -> Option<(f64, FlowId)> {
+        let rates = self.rates();
+        let mut best: Option<(f64, FlowId)> = None;
+        for (&id, f) in &self.flows {
+            let r = rates[&id];
+            if r <= 0.0 {
+                continue;
+            }
+            let dt = f.remaining / r;
+            if best.map(|(bt, _)| dt < bt).unwrap_or(true) {
+                best = Some((dt, id));
+            }
+        }
+        best
+    }
+
+    /// Advance all flows by `dt` seconds at current rates, accumulating
+    /// telemetry counters. Flows that hit zero are left at zero remaining
+    /// (the caller removes them when their completion event fires).
+    pub fn advance(&mut self, dt: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        let rates = self.rates();
+        for (&id, f) in self.flows.iter_mut() {
+            let r = rates[&id];
+            let moved = (r * dt).min(f.remaining);
+            f.remaining -= moved;
+            self.counters[f.link.0].gb_total += moved;
+            *self.owner_gb.entry(f.owner).or_insert(0.0) += moved;
+        }
+        for link in 0..self.capacities.len() {
+            let cap = self.capacities[link];
+            if cap <= 0.0 {
+                continue;
+            }
+            let link_rate: f64 = self
+                .flows
+                .iter()
+                .filter(|(_, f)| f.link.0 == link)
+                .map(|(id, _)| rates[id])
+                .sum();
+            self.counters[link].util_integral += (link_rate / cap) * dt;
+        }
+    }
+
+    /// Link utilization right now (0..1).
+    pub fn utilization(&self, link: LinkId) -> f64 {
+        let cap = self.capacities[link.0];
+        if cap <= 0.0 {
+            return 0.0;
+        }
+        let rates = self.rates();
+        let total: f64 = self
+            .flows
+            .iter()
+            .filter(|(_, f)| f.link == link)
+            .map(|(id, _)| rates[id])
+            .sum();
+        total / cap
+    }
+
+    pub fn counters(&self, link: LinkId) -> LinkCounters {
+        self.counters[link.0]
+    }
+
+    pub fn owner_gb(&self, owner: usize) -> f64 {
+        *self.owner_gb.get(&owner).unwrap_or(&0.0)
+    }
+
+    pub fn capacity(&self, link: LinkId) -> f64 {
+        self.capacities[link.0]
+    }
+
+    /// Remaining GB of a flow (tests / introspection).
+    pub fn remaining(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.remaining)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo::HostTopology;
+
+    fn fabric() -> Fabric {
+        Fabric::new(&HostTopology::p4d())
+    }
+
+    #[test]
+    fn single_flow_full_rate() {
+        let mut f = fabric();
+        let id = f.start(LinkId(0), 50.0, 1.0, None, 0);
+        assert!((f.rate_of(id) - 25.0).abs() < 1e-12);
+        let (dt, done) = f.next_completion().unwrap();
+        assert_eq!(done, id);
+        assert!((dt - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_flows_share_then_speed_up() {
+        let mut f = fabric();
+        let a = f.start(LinkId(0), 25.0, 1.0, None, 0);
+        let b = f.start(LinkId(0), 12.5, 1.0, None, 1);
+        // Equal share: 12.5 each; b finishes first at t=1.
+        let (dt, first) = f.next_completion().unwrap();
+        assert_eq!(first, b);
+        assert!((dt - 1.0).abs() < 1e-12);
+        f.advance(dt);
+        f.remove(b);
+        // a has 12.5 GB left, now at full 25 GB/s => 0.5 s more.
+        let (dt2, second) = f.next_completion().unwrap();
+        assert_eq!(second, a);
+        assert!((dt2 - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throttle_slows_owner() {
+        let mut f = fabric();
+        let a = f.start(LinkId(0), 100.0, 1.0, None, 2);
+        f.set_owner_cap(2, Some(5.0));
+        assert!((f.rate_of(a) - 5.0).abs() < 1e-12);
+        f.set_owner_cap(2, None);
+        assert!((f.rate_of(a) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn links_are_independent() {
+        let mut f = fabric();
+        let a = f.start(LinkId(0), 10.0, 1.0, None, 0);
+        let b = f.start(LinkId(1), 10.0, 1.0, None, 1);
+        assert!((f.rate_of(a) - 25.0).abs() < 1e-12);
+        assert!((f.rate_of(b) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut f = fabric();
+        f.start(LinkId(0), 10.0, 1.0, None, 7);
+        f.advance(0.2); // 5 GB moved
+        let c = f.counters(LinkId(0));
+        assert!((c.gb_total - 5.0).abs() < 1e-9);
+        assert!((f.owner_gb(7) - 5.0).abs() < 1e-9);
+        assert!((f.utilization(LinkId(0)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nvme_link_capacity() {
+        let mut f = fabric();
+        let a = f.start(LinkId(4), 16.0, 1.0, None, 0);
+        assert!((f.rate_of(a) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_does_not_overshoot() {
+        let mut f = fabric();
+        let a = f.start(LinkId(0), 10.0, 1.0, None, 0);
+        f.advance(100.0);
+        assert!((f.remaining(a).unwrap() - 0.0).abs() < 1e-12);
+        let c = f.counters(LinkId(0));
+        assert!((c.gb_total - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,244 @@
+//! Per-GPU MIG state: instance table, slice occupancy, reconfiguration.
+//!
+//! The controller plans against exactly what `nvidia-smi mig` would allow:
+//! instances occupy contiguous compute slices at legal start offsets,
+//! never overlap, and reconfiguration takes a real-time cost (paper
+//! Table 4: 18 ± 6 s on A100; we sample that distribution).
+
+use super::mig::MigProfile;
+use crate::util::rng::Pcg64;
+
+/// Identifies a MIG instance on its GPU (stable across unrelated
+/// create/destroy on other slices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct InstanceId(pub u64);
+
+/// A live MIG instance.
+#[derive(Clone, Debug)]
+pub struct MigInstance {
+    pub id: InstanceId,
+    pub profile: MigProfile,
+    /// First compute slice occupied.
+    pub start: usize,
+}
+
+impl MigInstance {
+    pub fn slices(&self) -> std::ops::Range<usize> {
+        self.start..self.start + self.profile.compute_slices()
+    }
+}
+
+/// MIG state machine for one A100-80GB.
+#[derive(Clone, Debug)]
+pub struct A100Gpu {
+    pub index: usize,
+    instances: Vec<MigInstance>,
+    next_id: u64,
+}
+
+/// Errors from MIG operations (mirror of `nvidia-smi mig` failures).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MigError {
+    IllegalStart { profile: MigProfile, start: usize },
+    Overlap { start: usize },
+    NoSuchInstance(InstanceId),
+    NoHeadroom { profile: MigProfile },
+}
+
+impl std::fmt::Display for MigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MigError::IllegalStart { profile, start } => {
+                write!(f, "profile {profile} cannot start at slice {start}")
+            }
+            MigError::Overlap { start } => write!(f, "slices at {start} already occupied"),
+            MigError::NoSuchInstance(id) => write!(f, "no MIG instance {id:?}"),
+            MigError::NoHeadroom { profile } => {
+                write!(f, "no placement available for {profile}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MigError {}
+
+impl A100Gpu {
+    pub fn new(index: usize) -> A100Gpu {
+        A100Gpu {
+            index,
+            instances: Vec::new(),
+            next_id: 1,
+        }
+    }
+
+    pub fn instances(&self) -> &[MigInstance] {
+        &self.instances
+    }
+
+    pub fn instance(&self, id: InstanceId) -> Option<&MigInstance> {
+        self.instances.iter().find(|i| i.id == id)
+    }
+
+    /// Occupied compute-slice bitmap.
+    fn occupancy(&self) -> [bool; 7] {
+        let mut occ = [false; 7];
+        for inst in &self.instances {
+            for s in inst.slices() {
+                occ[s] = true;
+            }
+        }
+        occ
+    }
+
+    /// Compute slices still free.
+    pub fn free_slices(&self) -> usize {
+        self.occupancy().iter().filter(|&&o| !o).count()
+    }
+
+    fn fits_at(&self, profile: MigProfile, start: usize) -> bool {
+        let occ = self.occupancy();
+        (start..start + profile.compute_slices()).all(|s| s < 7 && !occ[s])
+    }
+
+    /// All legal placements currently available for `profile`.
+    pub fn placements(&self, profile: MigProfile) -> Vec<usize> {
+        profile
+            .legal_starts()
+            .iter()
+            .copied()
+            .filter(|&s| self.fits_at(profile, s))
+            .collect()
+    }
+
+    /// Create an instance at an explicit start offset.
+    pub fn create_at(&mut self, profile: MigProfile, start: usize) -> Result<InstanceId, MigError> {
+        if !profile.legal_starts().contains(&start) {
+            return Err(MigError::IllegalStart { profile, start });
+        }
+        if !self.fits_at(profile, start) {
+            return Err(MigError::Overlap { start });
+        }
+        let id = InstanceId(self.next_id);
+        self.next_id += 1;
+        self.instances.push(MigInstance { id, profile, start });
+        Ok(id)
+    }
+
+    /// Create an instance at the first legal placement.
+    pub fn create(&mut self, profile: MigProfile) -> Result<InstanceId, MigError> {
+        let start = *self
+            .placements(profile)
+            .first()
+            .ok_or(MigError::NoHeadroom { profile })?;
+        self.create_at(profile, start)
+    }
+
+    /// Destroy an instance, freeing its slices.
+    pub fn destroy(&mut self, id: InstanceId) -> Result<MigInstance, MigError> {
+        let idx = self
+            .instances
+            .iter()
+            .position(|i| i.id == id)
+            .ok_or(MigError::NoSuchInstance(id))?;
+        Ok(self.instances.remove(idx))
+    }
+
+    /// Can `profile` be placed right now (possibly after destroying `freed`,
+    /// which the reconfig planner is about to remove)?
+    pub fn can_place_after_destroy(&self, profile: MigProfile, freed: InstanceId) -> bool {
+        let mut ghost = self.clone();
+        if ghost.destroy(freed).is_err() {
+            return false;
+        }
+        !ghost.placements(profile).is_empty()
+    }
+
+    /// Sample a reconfiguration duration in seconds — Table 4: 18 ± 6 s
+    /// (clamped to stay positive and under the paper's ≤ 30 s bound §2).
+    pub fn reconfig_duration(rng: &mut Pcg64) -> f64 {
+        rng.normal_ms(18.0, 3.0).clamp(6.0, 30.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_and_destroy_roundtrip() {
+        let mut g = A100Gpu::new(0);
+        let id = g.create(MigProfile::P3g40gb).unwrap();
+        assert_eq!(g.free_slices(), 4);
+        let inst = g.destroy(id).unwrap();
+        assert_eq!(inst.profile, MigProfile::P3g40gb);
+        assert_eq!(g.free_slices(), 7);
+    }
+
+    #[test]
+    fn overlap_rejected() {
+        let mut g = A100Gpu::new(0);
+        g.create_at(MigProfile::P4g40gb, 0).unwrap();
+        assert_eq!(
+            g.create_at(MigProfile::P2g20gb, 2),
+            Err(MigError::Overlap { start: 2 })
+        );
+        // 3g at 4 still fits.
+        assert!(g.create_at(MigProfile::P3g40gb, 4).is_ok());
+        assert_eq!(g.free_slices(), 0);
+    }
+
+    #[test]
+    fn illegal_start_rejected() {
+        let mut g = A100Gpu::new(0);
+        assert_eq!(
+            g.create_at(MigProfile::P2g20gb, 1),
+            Err(MigError::IllegalStart {
+                profile: MigProfile::P2g20gb,
+                start: 1
+            })
+        );
+    }
+
+    #[test]
+    fn classic_mixed_partition() {
+        // The paper's static baseline: 3g.40gb (T1) + 2g.20gb + 2g.20gb.
+        let mut g = A100Gpu::new(0);
+        g.create_at(MigProfile::P3g40gb, 0).unwrap();
+        g.create_at(MigProfile::P2g20gb, 4).unwrap();
+        // Slices 3 and 6 free; 2g can't legally start at either, 1g can.
+        assert!(g.placements(MigProfile::P2g20gb).is_empty());
+        assert_eq!(g.placements(MigProfile::P1g10gb), vec![3, 6]);
+    }
+
+    #[test]
+    fn seven_singles_fill_gpu() {
+        let mut g = A100Gpu::new(0);
+        for _ in 0..7 {
+            g.create(MigProfile::P1g10gb).unwrap();
+        }
+        assert_eq!(g.free_slices(), 0);
+        assert!(matches!(
+            g.create(MigProfile::P1g10gb),
+            Err(MigError::NoHeadroom { .. })
+        ));
+    }
+
+    #[test]
+    fn reconfig_duration_within_paper_bounds() {
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..1000 {
+            let d = A100Gpu::reconfig_duration(&mut rng);
+            assert!((6.0..=30.0).contains(&d));
+        }
+    }
+
+    #[test]
+    fn can_place_after_destroy_ghost() {
+        let mut g = A100Gpu::new(0);
+        let t1 = g.create_at(MigProfile::P3g40gb, 0).unwrap();
+        g.create_at(MigProfile::P3g40gb, 4).unwrap();
+        // 4g fits only if we free the slice-0 instance first.
+        assert!(g.placements(MigProfile::P4g40gb).is_empty());
+        assert!(g.can_place_after_destroy(MigProfile::P4g40gb, t1));
+    }
+}

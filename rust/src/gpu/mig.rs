@@ -1,0 +1,164 @@
+//! MIG profiles for the A100-80GB.
+//!
+//! An A100 exposes 7 compute slices (GPCs) and 8 memory slices (10 GB
+//! each). Profiles combine `Ng` compute slices with `M` GB of HBM; the
+//! hardware only allows instances to start at particular slice offsets
+//! (the "profile placement" rules from `nvidia-smi mig -lgipp`).
+
+/// A100-80GB MIG profile set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MigProfile {
+    /// `1g.10gb` — 1 compute slice, 10 GB.
+    P1g10gb,
+    /// `2g.20gb` — 2 compute slices, 20 GB.
+    P2g20gb,
+    /// `3g.40gb` — 3 compute slices, 40 GB.
+    P3g40gb,
+    /// `4g.40gb` — 4 compute slices, 40 GB.
+    P4g40gb,
+    /// `7g.80gb` — the whole GPU.
+    P7g80gb,
+}
+
+impl MigProfile {
+    pub const ALL: [MigProfile; 5] = [
+        MigProfile::P1g10gb,
+        MigProfile::P2g20gb,
+        MigProfile::P3g40gb,
+        MigProfile::P4g40gb,
+        MigProfile::P7g80gb,
+    ];
+
+    /// Compute slices (GPCs) the profile occupies.
+    pub fn compute_slices(self) -> usize {
+        match self {
+            MigProfile::P1g10gb => 1,
+            MigProfile::P2g20gb => 2,
+            MigProfile::P3g40gb => 3,
+            MigProfile::P4g40gb => 4,
+            MigProfile::P7g80gb => 7,
+        }
+    }
+
+    /// HBM capacity in GB.
+    pub fn memory_gb(self) -> usize {
+        match self {
+            MigProfile::P1g10gb => 10,
+            MigProfile::P2g20gb => 20,
+            MigProfile::P3g40gb => 40,
+            MigProfile::P4g40gb => 40,
+            MigProfile::P7g80gb => 80,
+        }
+    }
+
+    /// Legal start offsets on the 7-slice compute die (A100 placement
+    /// rules: 1g at any of 0..=6; 2g at even offsets 0/2/4; 3g at 0 or 4;
+    /// 4g only at 0; 7g only at 0).
+    pub fn legal_starts(self) -> &'static [usize] {
+        match self {
+            MigProfile::P1g10gb => &[0, 1, 2, 3, 4, 5, 6],
+            MigProfile::P2g20gb => &[0, 2, 4],
+            MigProfile::P3g40gb => &[0, 4],
+            MigProfile::P4g40gb => &[0],
+            MigProfile::P7g80gb => &[0],
+        }
+    }
+
+    /// Effective service-rate multiplier μ(m) relative to 1g (§2.5.2:
+    /// "μ(m) ∝ SM cores and memory in profile m"). Compute slices dominate
+    /// for the inference tenant; the memory term gives 4g a small edge
+    /// over 3g+extra-HBM workloads.
+    pub fn mu(self) -> f64 {
+        let c = self.compute_slices() as f64;
+        let m = self.memory_gb() as f64 / 10.0;
+        0.75 * c + 0.25 * m
+    }
+
+    /// Next-larger profile in the isolation-upgrade chain, if any.
+    pub fn upgrade(self) -> Option<MigProfile> {
+        match self {
+            MigProfile::P1g10gb => Some(MigProfile::P2g20gb),
+            MigProfile::P2g20gb => Some(MigProfile::P3g40gb),
+            MigProfile::P3g40gb => Some(MigProfile::P4g40gb),
+            MigProfile::P4g40gb => Some(MigProfile::P7g80gb),
+            MigProfile::P7g80gb => None,
+        }
+    }
+
+    /// Next-smaller profile (isolation relaxation), if any.
+    pub fn relax(self) -> Option<MigProfile> {
+        match self {
+            MigProfile::P1g10gb => None,
+            MigProfile::P2g20gb => Some(MigProfile::P1g10gb),
+            MigProfile::P3g40gb => Some(MigProfile::P2g20gb),
+            MigProfile::P4g40gb => Some(MigProfile::P3g40gb),
+            MigProfile::P7g80gb => Some(MigProfile::P4g40gb),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MigProfile::P1g10gb => "1g.10gb",
+            MigProfile::P2g20gb => "2g.20gb",
+            MigProfile::P3g40gb => "3g.40gb",
+            MigProfile::P4g40gb => "4g.40gb",
+            MigProfile::P7g80gb => "7g.80gb",
+        }
+    }
+}
+
+impl std::fmt::Display for MigProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upgrade_chain_is_finite_and_monotone() {
+        // §2.5.2: at most |M|-1 upgrades, each strictly increasing μ.
+        let mut p = MigProfile::P1g10gb;
+        let mut steps = 0;
+        while let Some(next) = p.upgrade() {
+            assert!(next.mu() > p.mu(), "{next:?} not stronger than {p:?}");
+            assert!(next.compute_slices() >= p.compute_slices());
+            p = next;
+            steps += 1;
+        }
+        assert_eq!(steps, MigProfile::ALL.len() - 1);
+        assert_eq!(p, MigProfile::P7g80gb);
+    }
+
+    #[test]
+    fn relax_is_inverse_of_upgrade() {
+        for p in MigProfile::ALL {
+            if let Some(u) = p.upgrade() {
+                assert_eq!(u.relax(), Some(p));
+            }
+        }
+    }
+
+    #[test]
+    fn legal_starts_fit_on_die() {
+        for p in MigProfile::ALL {
+            for &s in p.legal_starts() {
+                assert!(
+                    s + p.compute_slices() <= 7,
+                    "{p:?} at {s} exceeds 7 slices"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mu_reflects_paper_ordering() {
+        // Bigger profile => strictly larger service rate.
+        let mus: Vec<f64> = MigProfile::ALL.iter().map(|p| p.mu()).collect();
+        for w in mus.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

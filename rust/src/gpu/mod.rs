@@ -1,0 +1,12 @@
+//! NVIDIA A100 + MIG (Multi-Instance GPU) geometry model.
+//!
+//! Dynamic MIG reconfiguration is the controller's strongest lever (§2.2),
+//! so the legality rules it plans against must match the real device:
+//! profile sizes, slice placement constraints, and the ~18 s
+//! reconfiguration cost (Table 4) are all modeled here.
+
+pub mod mig;
+pub mod a100;
+
+pub use a100::{A100Gpu, InstanceId};
+pub use mig::MigProfile;

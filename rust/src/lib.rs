@@ -1,0 +1,40 @@
+//! # predserve — Predictable LLM Serving on GPU Clusters
+//!
+//! Reproduction of "Predictable LLM Serving on GPU Clusters" (CS.DC 2025):
+//! a host-level multi-tenancy controller that combines **dynamic MIG
+//! reconfiguration**, **PCIe-aware placement**, and **lightweight
+//! guardrails** (MPS quotas, cgroup I/O throttles) to keep tail latency of
+//! a latency-sensitive tenant inside its SLO on shared A100 hosts, plus a
+//! vLLM-like serving engine for the paper's LLM/TTFT case study.
+//!
+//! The crate is the L3 of a three-layer stack (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the controller, the simulated testbed (A100/MIG
+//!   geometry, PCIe processor-sharing fabric, NUMA topology, tenants,
+//!   NVML-like telemetry), the vLLM-like serving engine, the 2-node
+//!   cluster runtime, and the experiment/bench harnesses.
+//! * **L2** — a JAX decoder model (`python/compile/model.py`) AOT-lowered
+//!   to HLO text artifacts.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for paged
+//!   attention and the fused SwiGLU MLP, lowered into the same HLO.
+//!
+//! Python never runs on the request path: [`runtime`] loads the AOT
+//! artifacts through the PJRT C API (`xla` crate) once at startup.
+
+pub mod util;
+pub mod config;
+pub mod cli;
+pub mod topo;
+pub mod gpu;
+pub mod sim;
+pub mod fabric;
+pub mod tenants;
+pub mod telemetry;
+pub mod controller;
+pub mod platform;
+pub mod serving;
+pub mod runtime;
+pub mod cluster;
+pub mod model;
+pub mod experiments;
+pub mod bench;

@@ -1,0 +1,153 @@
+//! `predserve` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   serve        run the LLM serving engine on the AOT artifacts
+//!   sim          run one simulated single-host scenario
+//!   ablation     regenerate Table 3 (E2)
+//!   llm          regenerate Table 2 (LLM TTFT case study)
+//!   overheads    regenerate Table 4
+//!   sensitivity  regenerate E3
+//!   figures      regenerate Figure 2/3/4 series (CSV under target/paper/)
+//!   cluster      run the 2-node (16-GPU) cluster experiment (E9)
+
+use anyhow::Result;
+use predserve::cli::Args;
+use predserve::cluster::Leader;
+use predserve::config;
+use predserve::experiments::harness::Repeats;
+use predserve::experiments::runs;
+use predserve::platform::{Scenario, SimWorld};
+use predserve::serving::request::SamplingParams;
+use predserve::serving::Engine;
+
+const USAGE: &str = "usage: predserve <serve|sim|ablation|llm|overheads|sensitivity|figures|cluster> [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--fast] [--prompt TEXT] [--nodes N]";
+
+fn repeats(args: &Args) -> Repeats {
+    let mut r = if args.flag("fast") {
+        Repeats::fast()
+    } else {
+        Repeats::from_env()
+    };
+    if let Some(h) = args.get("horizon") {
+        r.horizon_s = h.parse().unwrap_or(r.horizon_s);
+    }
+    r
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "serve" => {
+            let mut engine = Engine::load_default()?;
+            let prompt = args.get_str("prompt", "predictable llm serving on gpu clusters");
+            let n = args.get_usize("requests", 8);
+            println!("loaded AOT model: {:?}", engine.spec());
+            for i in 0..n {
+                engine.submit_text(
+                    &format!("{prompt} #{i}"),
+                    SamplingParams {
+                        top_k: args.get_usize("top-k", 0),
+                        seed: i as u64,
+                        max_new_tokens: args.get_usize("max-new-tokens", 16),
+                    },
+                );
+            }
+            let done = engine.run_to_completion()?;
+            for c in &done {
+                println!(
+                    "req {:3}  ttft={:6.2} ms  e2e={:6.2} ms  tokens={:2}  text={:?}",
+                    c.id.0,
+                    c.ttft_s * 1e3,
+                    c.e2e_s * 1e3,
+                    c.generated.len(),
+                    engine.tokenizer.decode(&c.generated)
+                );
+            }
+            let s = &engine.stats;
+            println!(
+                "completed={} ttft_p99={:.2} ms decode_steps={} prefill_waves={} model_time={:.2}s",
+                s.completed,
+                s.ttft_us.quantile(0.99) as f64 / 1000.0,
+                s.decode_steps,
+                s.prefill_waves,
+                s.model_time_s
+            );
+        }
+        "sim" => {
+            let levers = config::parse_levers(args.get_str("levers", "full"))?;
+            let mut scenario =
+                Scenario::paper_single_host(args.get_u64("seed", 11), levers);
+            if let Some(path) = args.get("config") {
+                config::load_into(&mut scenario, path)?;
+            }
+            scenario.horizon = args.get_f64("horizon", scenario.horizon);
+            let r = SimWorld::new(scenario).run();
+            println!(
+                "{}: miss={:.1}% p95={:.2} p99={:.2} p999={:.2} ms rps={:.1} moves/hr={:.1}",
+                r.label,
+                r.miss_rate * 100.0,
+                r.p95_ms,
+                r.p99_ms,
+                r.p999_ms,
+                r.rps,
+                r.moves_per_hour
+            );
+            for (t, kind, p99) in &r.timeline {
+                println!("  t={t:7.1}s {kind:12} p99={p99:.1}ms");
+            }
+        }
+        "ablation" => {
+            let sums = runs::run_ablation(&repeats(&args));
+            println!("{}", runs::render_table3(&sums));
+        }
+        "llm" => {
+            let sums = runs::run_table2(&repeats(&args));
+            println!("{}", runs::render_table2(&sums));
+        }
+        "overheads" => {
+            let sums = runs::run_ablation(&repeats(&args));
+            let full = sums
+                .iter()
+                .find(|s| s.label == "Full System")
+                .expect("full system summary");
+            println!("{}", runs::render_table4(full));
+        }
+        "sensitivity" => {
+            println!("{}", runs::run_sensitivity(&repeats(&args)));
+        }
+        "figures" => {
+            let r = repeats(&args);
+            let (fig2, _) = runs::run_fig2();
+            println!("Figure 2 (PS contention model):\n{fig2}");
+            println!("Figure 3:\n{}", runs::run_fig3(&r));
+            println!("Figure 4:\n{}", runs::run_fig4(&r));
+        }
+        "cluster" => {
+            let nodes = args.get_usize("nodes", 2);
+            let report = Leader::run_cluster(
+                nodes,
+                args.get_u64("seed", 11),
+                args.get_str("levers", "full"),
+                args.get_f64("horizon", 600.0),
+                args.get_str("workload", "single"),
+            )?;
+            println!(
+                "cluster({} nodes, {} GPUs): mean miss={:.1}% mean p99={:.2} ms total rps={:.1}",
+                nodes,
+                nodes * 8,
+                report.mean_miss_rate * 100.0,
+                report.mean_p99_ms,
+                report.total_rps
+            );
+            for (node, miss, p99, rps) in &report.per_node {
+                println!("  {node}: miss={:.1}% p99={p99:.2} ms rps={rps:.1}", miss * 100.0);
+            }
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

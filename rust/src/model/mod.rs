@@ -1,0 +1,7 @@
+//! Analytic queueing models from §2.5 — used as oracles in tests and to
+//! annotate experiment reports (the paper uses Kingman "qualitatively to
+//! explain how saturation inflates tails").
+
+pub mod queueing;
+
+pub use queueing::{kingman_wait, mm1_p99_sojourn, ps_utilization_stable};

@@ -1,0 +1,18 @@
+//! Platform layer: composes topology + fabric + GPUs + tenants +
+//! telemetry + controller into a runnable testbed.
+//!
+//! * [`scenario`] — experiment configuration (the §3.1 setup: workloads,
+//!   schedules, SLOs, controller parameters, seeds).
+//! * [`sim_platform`] — the discrete-event world that reproduces the
+//!   paper's single-host testbed; the controller interacts with it only
+//!   through `SignalSnapshot`/`PlannerView`/`Action` (fabric-agnostic).
+//! * [`result`] — run outputs: tails, miss-rate, throughput, histograms,
+//!   action timeline (the raw material for every table and figure).
+
+pub mod scenario;
+pub mod sim_platform;
+pub mod result;
+
+pub use result::RunResult;
+pub use scenario::Scenario;
+pub use sim_platform::SimWorld;

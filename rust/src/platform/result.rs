@@ -1,0 +1,55 @@
+//! Run outputs: everything the experiment harness and benches consume.
+
+use crate::util::histogram::Histogram;
+
+/// Aggregated result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Configuration label ("Full System", "Static MIG", ...).
+    pub label: String,
+    pub seed: u64,
+    pub horizon_s: f64,
+    /// Lifetime SLO miss-rate of T1 (Table 3 column 1).
+    pub miss_rate: f64,
+    /// Lifetime tail latencies in ms (Table 3 column 2 et al.).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub mean_ms: f64,
+    /// Completed T1 requests and throughput.
+    pub completed: u64,
+    pub rps: f64,
+    /// Full latency histogram (µs) — Figure 4 source.
+    pub histogram: Histogram,
+    /// Controller action counts by kind.
+    pub actions: Vec<(String, usize)>,
+    /// Disruptive moves per hour (Table 4).
+    pub moves_per_hour: f64,
+    /// MIG reconfiguration durations sampled during the run (Table 4).
+    pub reconfig_durations_s: Vec<f64>,
+    /// Controller CPU share estimate (Table 4): decision-path wall time
+    /// divided by simulated time.
+    pub controller_cpu_frac: f64,
+    /// Action timeline for Figure 3a: (t, kind, p99_at_decision).
+    pub timeline: Vec<(f64, String, f64)>,
+    /// Mean SM utilization of the T1 GPU (Figure 3b efficiency axis).
+    pub mean_sm_util: f64,
+    /// p99 timeseries sampled at Δ (Figure 3a upper panel).
+    pub p99_series: Vec<(f64, f64)>,
+}
+
+impl RunResult {
+    /// SLO compliance = 1 - miss rate (Figure 3b y-axis).
+    pub fn compliance(&self) -> f64 {
+        1.0 - self.miss_rate
+    }
+
+    pub fn action_count(&self, kind: &str) -> usize {
+        self.actions
+            .iter()
+            .find(|(k, _)| k == kind)
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
+    }
+}

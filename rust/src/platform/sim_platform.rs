@@ -1,0 +1,1116 @@
+//! The simulated single-host testbed (discrete-event world).
+//!
+//! Reproduces the paper's §3.1 setup: one p4d-style host running
+//! T1 (latency-sensitive inference), T2 (bandwidth-heavy ETL) and
+//! T3 (compute-heavy training), with the controller sampling signals
+//! every Δ and acting through the §2.2 decision space.
+//!
+//! Interference channels (all emergent, none scripted):
+//! * T2's NVMe reads + H2D/D2H bursts share the PS fabric with T1's
+//!   staging + H2D transfers (PCIe + NUMA I/O contention).
+//! * T3, when MPS-co-scheduled on T1's MIG instance (the naive-placement
+//!   baseline), inflates T1's compute service times.
+//! * Controller actions have real costs: MIG reconfigs pause T1 for
+//!   ~18 s (Table 4), moves pause for ~2 s; paused requests queue and
+//!   their waiting time lands in the latency distribution.
+//!
+//! The T1 request pipeline: host staging read (NUMA NVMe link) → H2D
+//! (PCIe uplink of its GPU) → FIFO compute on its MIG instance → done;
+//! latency = c_i·(μ_ref/μ(m))·contention·ε + transfer components — exactly
+//! the §2.5.1 decomposition with the PS model supplying b_i(t).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::controller::{Action, Controller, IsolationChange, PlannerView};
+use crate::controller::view::{InstanceView, TenantView};
+use crate::fabric::{Fabric, FlowId};
+use crate::gpu::{A100Gpu, InstanceId, MigProfile};
+use crate::sim::EventQueue;
+use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TenantSignal};
+use crate::telemetry::TenantMonitor;
+use crate::tenants::spec::{T1, T2, T3};
+use crate::tenants::TenantId;
+use crate::util::rng::Pcg64;
+
+use super::result::RunResult;
+use super::scenario::Scenario;
+
+const N_TENANTS: usize = 3;
+
+/// What a completing fabric flow was doing.
+#[derive(Clone, Copy, Debug)]
+enum Purpose {
+    T1Stage(u64),
+    T1H2d(u64),
+    T2Read,
+    T2H2d,
+    T2D2h,
+    T3Sync,
+}
+
+/// T1 request lifecycle state.
+#[derive(Clone, Copy, Debug)]
+enum ReqPhase {
+    Staging,
+    H2d,
+    Queued,
+    Computing,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ReqState {
+    arrival: f64,
+    stage_gb: f64,
+    h2d_gb: f64,
+    compute_ref_ms: f64,
+    phase: ReqPhase,
+}
+
+/// Placement record per tenant.
+#[derive(Clone, Debug)]
+struct Placement {
+    gpu: usize,
+    instance: InstanceId,
+    profile: MigProfile,
+    /// Tenant indices sharing the instance via MPS.
+    peers: Vec<usize>,
+    numa: usize,
+}
+
+/// Saved last-known-good config for rollback.
+#[derive(Clone, Debug)]
+struct SavedConfig {
+    gpus: Vec<A100Gpu>,
+    placements: Vec<Placement>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum T2Phase {
+    Read,
+    H2d,
+    Transform,
+    D2h,
+    Idle,
+}
+
+/// Discrete events.
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    T1Arrival,
+    FlowsDone { version: u64 },
+    T1ComputeDone { req: u64 },
+    T2TransformDone,
+    T3StepDone,
+    ToggleT2,
+    ToggleT3,
+    Sample,
+    PauseDone,
+    ThrottleExpire { deadline_bits: u64 },
+}
+
+/// The world.
+pub struct SimWorld {
+    pub scenario: Scenario,
+    q: EventQueue<Event>,
+    fabric: Fabric,
+    fabric_synced_at: f64,
+    fabric_version: u64,
+    flow_purpose: BTreeMap<FlowId, Purpose>,
+    gpus: Vec<A100Gpu>,
+    placements: Vec<Placement>,
+
+    // RNG streams (workload streams independent of controller decisions).
+    arrival_rng: Pcg64,
+    size_rng: Pcg64,
+    service_rng: Pcg64,
+    t2_rng: Pcg64,
+    t3_rng: Pcg64,
+    reconfig_rng: Pcg64,
+
+    // T1 state.
+    next_req: u64,
+    reqs: BTreeMap<u64, ReqState>,
+    compute_queue: VecDeque<u64>,
+    computing: Option<u64>,
+    paused: bool,
+    pause_backlog: Vec<u64>,
+    /// Staging transfers waiting for a DMA slot (bounded I/O depth keeps
+    /// post-pause backlog drains from exploding the PS flow set).
+    stage_pending: VecDeque<u64>,
+    t1_inflight_transfers: usize,
+
+    // T2 state.
+    t2_active: bool,
+    t2_phase: T2Phase,
+    t2_cycle: (f64, f64, f64, f64),
+    t2_throttle: Option<f64>,
+    t2_throttle_deadline: Option<f64>,
+
+    // T3 state.
+    t3_active: bool,
+    t3_stepping: bool,
+    t3_quota: f64,
+
+    // Telemetry.
+    monitors: Vec<TenantMonitor>,
+    last_link_gb: Vec<f64>,
+    last_link_util_integral: Vec<f64>,
+    last_owner_gb: Vec<f64>,
+    last_sample_t: f64,
+    sm_util_integral: f64,
+    sm_util_samples: u64,
+    p99_series: Vec<(f64, f64)>,
+
+    // Controller + bookkeeping.
+    controller: Option<Controller>,
+    controller_wall_s: f64,
+    last_good: Option<SavedConfig>,
+    reconfig_durations: Vec<f64>,
+}
+
+impl SimWorld {
+    /// Build the baseline world: GPU0 = [4g.40gb: T1+T3 via MPS,
+    /// 3g.40gb: T2], spare 2g.20gb on GPU4 (other switch + other NUMA —
+    /// the static layout's idle headroom the placement lever can use).
+    pub fn new(scenario: Scenario) -> SimWorld {
+        let seed = scenario.seed;
+        let mut gpus: Vec<A100Gpu> = (0..scenario.topo.num_gpus).map(A100Gpu::new).collect();
+        let shared = gpus[0].create_at(MigProfile::P4g40gb, 0).expect("4g@0");
+        let t2_inst = gpus[0].create_at(MigProfile::P3g40gb, 4).expect("3g@4");
+        // Static spare: pre-provisioned but unused. GPU1 sits under the
+        // SAME PCIe switch as GPU0 (p4d pairs GPUs per switch), so a pure
+        // placement move escapes the MPS co-scheduling but not the PCIe /
+        // NUMA pressure — only dynamic MIG (create on a clean GPU) or
+        // guardrails address those.
+        let _spare = gpus[1].create_at(MigProfile::P3g40gb, 0).expect("3g@0 gpu1");
+
+        let placements = vec![
+            Placement {
+                gpu: 0,
+                instance: shared,
+                profile: MigProfile::P4g40gb,
+                peers: vec![2],
+                numa: 0,
+            },
+            Placement {
+                gpu: 0,
+                instance: t2_inst,
+                profile: MigProfile::P3g40gb,
+                peers: vec![],
+                numa: 0,
+            },
+            Placement {
+                gpu: 0,
+                instance: shared,
+                profile: MigProfile::P4g40gb,
+                peers: vec![0],
+                numa: 0,
+            },
+        ];
+
+        let fabric = Fabric::new(&scenario.topo);
+        let n_links = scenario.topo.num_links;
+        let monitors = vec![
+            TenantMonitor::new(scenario.t1.slo_ms, 4096),
+            TenantMonitor::new(f64::MAX, 64),
+            TenantMonitor::new(f64::MAX, 64),
+        ];
+        let controller = scenario
+            .controller
+            .levers
+            .any()
+            .then(|| Controller::new(scenario.controller.clone()));
+
+        let mut w = SimWorld {
+            q: EventQueue::new(),
+            fabric,
+            fabric_synced_at: 0.0,
+            fabric_version: 0,
+            flow_purpose: BTreeMap::new(),
+            gpus,
+            placements,
+            arrival_rng: Pcg64::new(seed, 1),
+            size_rng: Pcg64::new(seed, 2),
+            service_rng: Pcg64::new(seed, 3),
+            t2_rng: Pcg64::new(seed, 4),
+            t3_rng: Pcg64::new(seed, 5),
+            reconfig_rng: Pcg64::new(seed, 6),
+            next_req: 0,
+            reqs: BTreeMap::new(),
+            compute_queue: VecDeque::new(),
+            computing: None,
+            paused: false,
+            pause_backlog: Vec::new(),
+            stage_pending: VecDeque::new(),
+            t1_inflight_transfers: 0,
+            t2_active: false,
+            t2_phase: T2Phase::Idle,
+            t2_cycle: (0.0, 0.0, 0.0, 0.0),
+            t2_throttle: None,
+            t2_throttle_deadline: None,
+            t3_active: false,
+            t3_stepping: false,
+            t3_quota: 100.0,
+            monitors,
+            last_link_gb: vec![0.0; n_links],
+            last_link_util_integral: vec![0.0; n_links],
+            last_owner_gb: vec![0.0; N_TENANTS],
+            last_sample_t: 0.0,
+            sm_util_integral: 0.0,
+            sm_util_samples: 0,
+            p99_series: Vec::new(),
+            controller,
+            controller_wall_s: 0.0,
+            last_good: None,
+            reconfig_durations: Vec::new(),
+            scenario,
+        };
+        w.seed_events();
+        w
+    }
+
+    fn seed_events(&mut self) {
+        let gap = self.scenario.t1.next_gap(&mut self.arrival_rng);
+        self.q.push_at(gap, Event::T1Arrival);
+        for p in &self.scenario.t2_schedule.phases.clone() {
+            self.q.push_at(p.on, Event::ToggleT2);
+            self.q.push_at(p.off, Event::ToggleT2);
+        }
+        for p in &self.scenario.t3_schedule.phases.clone() {
+            self.q.push_at(p.on, Event::ToggleT3);
+            self.q.push_at(p.off, Event::ToggleT3);
+        }
+        let dt = self.scenario.sample_dt;
+        self.q.push_at(dt, Event::Sample);
+    }
+
+    // --- fabric helpers ---------------------------------------------------
+
+    fn sync_fabric(&mut self, now: f64) {
+        let dt = now - self.fabric_synced_at;
+        if dt > 0.0 {
+            self.fabric.advance(dt);
+            self.fabric_synced_at = now;
+        }
+    }
+
+    fn reschedule_fabric(&mut self, now: f64) {
+        self.fabric_version += 1;
+        if let Some((dt, _)) = self.fabric.next_completion() {
+            self.q.push_at(
+                now + dt.max(0.0),
+                Event::FlowsDone {
+                    version: self.fabric_version,
+                },
+            );
+        }
+    }
+
+    fn start_flow(&mut self, now: f64, link: crate::topo::LinkId, gb: f64, owner: usize, purpose: Purpose) {
+        self.sync_fabric(now);
+        let cap = if owner == 1 { self.t2_throttle } else { None };
+        let id = self.fabric.start(link, gb.max(1e-6), 1.0, cap, owner);
+        self.flow_purpose.insert(id, purpose);
+        self.reschedule_fabric(now);
+    }
+
+    // --- T1 pipeline --------------------------------------------------------
+
+    fn t1_links(&self) -> (crate::topo::LinkId, crate::topo::LinkId) {
+        let p = &self.placements[0];
+        let pcie = self.scenario.topo.link_of_gpu(p.gpu);
+        let nvme = self.scenario.topo.numa_nodes[p.numa].nvme_link;
+        (nvme, pcie)
+    }
+
+    fn on_t1_arrival(&mut self, now: f64) {
+        // Schedule next arrival first (open-loop Poisson).
+        let gap = self.scenario.t1.next_gap(&mut self.arrival_rng);
+        self.q.push_at(now + gap, Event::T1Arrival);
+
+        let id = self.next_req;
+        self.next_req += 1;
+        let r = self.scenario.t1.sample(&mut self.size_rng, id, now);
+        self.reqs.insert(
+            id,
+            ReqState {
+                arrival: now,
+                stage_gb: r.host_stage_gb,
+                h2d_gb: r.h2d_gb,
+                compute_ref_ms: r.compute_ref_ms,
+                phase: ReqPhase::Staging,
+            },
+        );
+        if self.paused {
+            self.pause_backlog.push(id);
+            return;
+        }
+        self.begin_staging(now, id);
+    }
+
+    /// Bounded transfer concurrency (DMA engines / io_uring depth): also
+    /// keeps post-pause backlog drains from creating thousands of PS flows.
+    const MAX_INFLIGHT: usize = 8;
+
+    fn begin_staging(&mut self, now: f64, id: u64) {
+        if self.t1_inflight_transfers >= Self::MAX_INFLIGHT {
+            self.stage_pending.push_back(id);
+            return;
+        }
+        self.t1_inflight_transfers += 1;
+        let (nvme, _) = self.t1_links();
+        let gb = self.reqs[&id].stage_gb;
+        self.start_flow(now, nvme, gb, 0, Purpose::T1Stage(id));
+    }
+
+    fn on_t1_stage_done(&mut self, now: f64, id: u64) {
+        if let Some(r) = self.reqs.get_mut(&id) {
+            r.phase = ReqPhase::H2d;
+        }
+        let (_, pcie) = self.t1_links();
+        let gb = self.reqs[&id].h2d_gb;
+        self.start_flow(now, pcie, gb, 0, Purpose::T1H2d(id));
+    }
+
+    fn on_t1_h2d_done(&mut self, now: f64, id: u64) {
+        if let Some(r) = self.reqs.get_mut(&id) {
+            r.phase = ReqPhase::Queued;
+        }
+        self.t1_inflight_transfers = self.t1_inflight_transfers.saturating_sub(1);
+        if !self.paused {
+            if let Some(next) = self.stage_pending.pop_front() {
+                self.begin_staging(now, next);
+            }
+        }
+        self.compute_queue.push_back(id);
+        self.maybe_start_compute(now);
+    }
+
+    fn t1_service_s(&mut self, work_ref_ms: f64) -> f64 {
+        let p = &self.placements[0];
+        let mu = p.profile.mu() / self.scenario.mu_ref_profile.mu();
+        // MPS-shared peer active => SM contention inflation.
+        let shared_with_active_t3 = p.peers.contains(&2) && self.t3_active;
+        let contention = if shared_with_active_t3 {
+            let mut t3 = self.scenario.t3.clone();
+            t3.mps_quota = self.t3_quota;
+            t3.contention_factor()
+        } else {
+            1.0
+        };
+        let eps = self.service_rng.lognormal(0.0, self.scenario.epsilon_sigma);
+        (work_ref_ms / 1000.0) / mu * contention * eps
+    }
+
+    fn maybe_start_compute(&mut self, now: f64) {
+        if self.computing.is_some() || self.paused {
+            return;
+        }
+        let Some(id) = self.compute_queue.pop_front() else {
+            return;
+        };
+        let work = self.reqs[&id].compute_ref_ms;
+        let st = self.t1_service_s(work);
+        if let Some(r) = self.reqs.get_mut(&id) {
+            r.phase = ReqPhase::Computing;
+        }
+        self.computing = Some(id);
+        self.q.push_at(now + st, Event::T1ComputeDone { req: id });
+    }
+
+    fn on_t1_compute_done(&mut self, now: f64, id: u64) {
+        if self.computing != Some(id) {
+            return; // stale event after rollback/pause rebuild
+        }
+        self.computing = None;
+        if let Some(r) = self.reqs.remove(&id) {
+            let latency_ms = (now - r.arrival) * 1000.0;
+            self.monitors[0].observe(latency_ms);
+        }
+        self.maybe_start_compute(now);
+    }
+
+    // --- T2 ETL cycle -------------------------------------------------------
+
+    fn t2_links(&self) -> (crate::topo::LinkId, crate::topo::LinkId) {
+        let p = &self.placements[1];
+        let pcie = self.scenario.topo.link_of_gpu(p.gpu);
+        let nvme = self.scenario.topo.numa_nodes[p.numa].nvme_link;
+        (nvme, pcie)
+    }
+
+    fn t2_begin_cycle(&mut self, now: f64) {
+        if !self.t2_active || self.t2_phase != T2Phase::Idle {
+            return;
+        }
+        self.t2_cycle = self.scenario.t2.sample_cycle(&mut self.t2_rng);
+        self.t2_phase = T2Phase::Read;
+        let (nvme, _) = self.t2_links();
+        let gb = self.t2_cycle.0;
+        self.start_flow(now, nvme, gb, 1, Purpose::T2Read);
+    }
+
+    fn on_t2_flow_done(&mut self, now: f64, which: Purpose) {
+        match which {
+            Purpose::T2Read => {
+                self.t2_phase = T2Phase::H2d;
+                let (_, pcie) = self.t2_links();
+                let gb = self.t2_cycle.1;
+                self.start_flow(now, pcie, gb, 1, Purpose::T2H2d);
+            }
+            Purpose::T2H2d => {
+                self.t2_phase = T2Phase::Transform;
+                self.q.push_at(now + self.t2_cycle.3, Event::T2TransformDone);
+            }
+            Purpose::T2D2h => {
+                self.t2_phase = T2Phase::Idle;
+                self.t2_begin_cycle(now); // next cycle if still active
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn on_t2_transform_done(&mut self, now: f64) {
+        if self.t2_phase != T2Phase::Transform {
+            return;
+        }
+        self.t2_phase = T2Phase::D2h;
+        let (_, pcie) = self.t2_links();
+        let gb = self.t2_cycle.2;
+        self.start_flow(now, pcie, gb, 1, Purpose::T2D2h);
+    }
+
+    // --- T3 training loop ---------------------------------------------------
+
+    fn t3_begin_step(&mut self, now: f64) {
+        if !self.t3_active || self.t3_stepping {
+            return;
+        }
+        self.t3_stepping = true;
+        let (step_s, _sync) = self.scenario.t3.sample_step(&mut self.t3_rng);
+        self.q.push_at(now + step_s, Event::T3StepDone);
+    }
+
+    fn on_t3_step_done(&mut self, now: f64) {
+        self.t3_stepping = false;
+        if self.t3_active {
+            // Gradient sync over the PCIe uplink of T3's GPU.
+            let p = &self.placements[2];
+            let link = self.scenario.topo.link_of_gpu(p.gpu);
+            let (_s, sync_gb) = self.scenario.t3.sample_step(&mut self.t3_rng);
+            self.start_flow(now, link, sync_gb, 2, Purpose::T3Sync);
+            self.t3_begin_step(now);
+        }
+    }
+
+    // --- controller actuation ------------------------------------------------
+
+    fn save_last_good(&mut self) {
+        self.last_good = Some(SavedConfig {
+            gpus: self.gpus.clone(),
+            placements: self.placements.clone(),
+        });
+    }
+
+    fn pause_t1(&mut self, now: f64, duration: f64) {
+        self.paused = true;
+        // In-flight compute finishes (we let the scheduled event stand);
+        // queued/incoming requests wait for PauseDone.
+        self.q.push_at(now + duration, Event::PauseDone);
+    }
+
+    /// Tenant-visible pause for a MIG reconfiguration. The full
+    /// `nvidia-smi mig` wall time (18±6 s, Table 4) is logged separately;
+    /// the tenant itself is only down for the bounded checkpoint/restore
+    /// window at the end of the operation (§5: "we limit frequency and
+    /// bound pauses") — new instances are created make-before-break on
+    /// free slices while the old one keeps serving.
+    fn bounded_pause(&self, reconfig_wall_s: f64) -> f64 {
+        (0.12 * reconfig_wall_s).clamp(0.5, 2.5)
+    }
+
+    fn on_pause_done(&mut self, now: f64) {
+        self.paused = false;
+        // Pending transfers (pre-pause) keep FIFO priority over the
+        // requests that arrived during the pause.
+        let mut work: Vec<u64> = self.stage_pending.drain(..).collect();
+        work.extend(self.pause_backlog.drain(..));
+        for id in work {
+            self.begin_staging(now, id); // cap re-queues the excess
+        }
+        self.maybe_start_compute(now);
+    }
+
+    /// Apply one controller action to the world.
+    fn apply_action(&mut self, now: f64, action: Action) {
+        match action {
+            Action::SetIoThrottle { tenant, cap_gbps } => {
+                if tenant == T2 {
+                    self.t2_throttle = cap_gbps;
+                    self.sync_fabric(now);
+                    self.fabric.set_owner_cap(1, cap_gbps);
+                    self.reschedule_fabric(now);
+                    if cap_gbps.is_some() {
+                        // Bounded window Z (§2.4): auto-expire.
+                        let deadline = now + self.scenario.controller.throttle_window_s;
+                        self.t2_throttle_deadline = Some(deadline);
+                        self.q.push_at(
+                            deadline,
+                            Event::ThrottleExpire {
+                                deadline_bits: deadline.to_bits(),
+                            },
+                        );
+                    } else {
+                        self.t2_throttle_deadline = None;
+                    }
+                }
+            }
+            Action::SetMpsQuota { tenant, quota } => {
+                if tenant == T3 {
+                    self.t3_quota = quota.clamp(0.0, 100.0);
+                }
+            }
+            Action::PinCpu { tenant, numa } => {
+                if let Some(p) = self.placements.get_mut(tenant.0) {
+                    p.numa = numa.min(self.scenario.topo.numa_nodes.len() - 1);
+                }
+            }
+            Action::ChangeIsolation { tenant, change, relax: _ } => {
+                if tenant != T1 {
+                    return;
+                }
+                self.save_last_good();
+                match change {
+                    IsolationChange::Resize { to } => self.resize_t1(now, to),
+                    IsolationChange::MoveExisting { gpu, to } => self.move_t1(now, gpu, to, false),
+                    IsolationChange::CreateAndMove { gpu, to } => self.move_t1(now, gpu, to, true),
+                }
+            }
+            Action::Rollback { tenant } => {
+                if tenant != T1 {
+                    return;
+                }
+                if let Some(saved) = self.last_good.take() {
+                    // Blue/green back to the last-known-good placement.
+                    self.gpus = saved.gpus;
+                    self.placements = saved.placements;
+                    self.pause_t1(now, self.scenario.move_pause_s);
+                }
+            }
+        }
+    }
+
+    /// Resize = give T1 a dedicated `to` instance on its current GPU,
+    /// repartitioning as needed. If T1 was MPS-shared, the peer (T3) gets
+    /// the biggest leftover slice.
+    fn resize_t1(&mut self, now: f64, to: MigProfile) {
+        let gpu_idx = self.placements[0].gpu;
+        let was_shared = !self.placements[0].peers.is_empty();
+        let old_instance = self.placements[0].instance;
+
+        let gpu = &mut self.gpus[gpu_idx];
+        if gpu.destroy(old_instance).is_err() {
+            return;
+        }
+        let new_t1 = match gpu.create(to) {
+            Ok(id) => id,
+            Err(_) => {
+                // Cannot place: restore by recreating the old instance.
+                let old_profile = self.placements[0].profile;
+                if let Ok(id) = gpu.create(old_profile) {
+                    self.placements[0].instance = id;
+                    if was_shared {
+                        self.placements[2].instance = id;
+                    }
+                }
+                return;
+            }
+        };
+        self.placements[0].instance = new_t1;
+        self.placements[0].profile = to;
+        self.placements[0].peers.clear();
+
+        if was_shared {
+            // Re-home T3 on the biggest profile that still fits.
+            let t3_profile = [
+                MigProfile::P3g40gb,
+                MigProfile::P2g20gb,
+                MigProfile::P1g10gb,
+            ]
+            .into_iter()
+            .find(|p| !self.gpus[gpu_idx].placements(*p).is_empty());
+            if let Some(p) = t3_profile {
+                if let Ok(id) = self.gpus[gpu_idx].create(p) {
+                    self.placements[2] = Placement {
+                        gpu: gpu_idx,
+                        instance: id,
+                        profile: p,
+                        peers: vec![],
+                        numa: self.placements[2].numa,
+                    };
+                }
+            }
+        }
+
+        let d = A100Gpu::reconfig_duration(&mut self.reconfig_rng);
+        self.reconfig_durations.push(d);
+        let pause = self.bounded_pause(d);
+        self.pause_t1(now, pause);
+    }
+
+    /// Move T1 to `gpu` — onto an existing free instance (cheap) or a
+    /// freshly created one (MIG call on the target GPU, but T1's pause is
+    /// still only the process move: creation happens on idle slices).
+    fn move_t1(&mut self, now: f64, gpu: usize, to: MigProfile, create: bool) {
+        let target = if create {
+            match self.gpus[gpu].create(to) {
+                Ok(id) => {
+                    let d = A100Gpu::reconfig_duration(&mut self.reconfig_rng);
+                    self.reconfig_durations.push(d);
+                    id
+                }
+                Err(_) => return,
+            }
+        } else {
+            // Find the free instance with that profile.
+            let occupied: Vec<InstanceId> = self
+                .placements
+                .iter()
+                .filter(|p| p.gpu == gpu)
+                .map(|p| p.instance)
+                .collect();
+            let Some(inst) = self.gpus[gpu]
+                .instances()
+                .iter()
+                .find(|i| i.profile == to && !occupied.contains(&i.id))
+            else {
+                return;
+            };
+            inst.id
+        };
+
+        // Leaving a shared instance: unlink peers.
+        let old_peers = std::mem::take(&mut self.placements[0].peers);
+        for peer in old_peers {
+            self.placements[peer].peers.retain(|&x| x != 0);
+        }
+
+        self.placements[0].gpu = gpu;
+        self.placements[0].instance = target;
+        self.placements[0].profile = to;
+        // CPU affinity follows the GPU's NUMA domain (§2.3 pinning).
+        self.placements[0].numa = self.scenario.topo.numa_of_gpu(gpu);
+
+        // Make-before-break: instance creation runs on idle slices while
+        // the tenant keeps serving; the only tenant-visible cost is the
+        // blue/green traffic switchover.
+        self.pause_t1(now, self.scenario.move_pause_s);
+    }
+
+    // --- telemetry -----------------------------------------------------------
+
+    /// Allocated-slice efficiency: busy compute slices / allocated compute
+    /// slices across all tenant instances (the Figure 3b "resource
+    /// efficiency" axis — static over-provisioned partitions idle their
+    /// slices; the adaptive system sizes slices to demand).
+    fn instantaneous_sm_util(&self) -> f64 {
+        let mut allocated = 0.0f64;
+        let mut busy = 0.0f64;
+        let mut seen = Vec::new();
+        for (idx, p) in self.placements.iter().enumerate() {
+            if !seen.contains(&(p.gpu, p.instance)) {
+                seen.push((p.gpu, p.instance));
+                allocated += p.profile.compute_slices() as f64;
+            }
+            let slices = p.profile.compute_slices() as f64;
+            match idx {
+                0 => {
+                    if self.computing.is_some() {
+                        // Shared instances split between peers.
+                        busy += if p.peers.is_empty() { slices } else { slices / 2.0 };
+                    }
+                }
+                1 => {
+                    if self.t2_active && self.t2_phase == T2Phase::Transform {
+                        busy += slices;
+                    }
+                }
+                _ => {
+                    if self.t3_active {
+                        let share = if p.peers.is_empty() { 1.0 } else { 0.5 };
+                        busy += slices * share * (self.t3_quota / 100.0);
+                    }
+                }
+            }
+        }
+        if allocated <= 0.0 {
+            0.0
+        } else {
+            (busy / allocated).min(1.0)
+        }
+    }
+
+    fn build_snapshot(&mut self, now: f64) -> SignalSnapshot {
+        self.sync_fabric(now);
+        let dt = (now - self.last_sample_t).max(1e-9);
+        let topo = &self.scenario.topo;
+
+        let mut links = Vec::new();
+        for l in 0..topo.num_links {
+            let c = self.fabric.counters(crate::topo::LinkId(l));
+            let gbps = (c.gb_total - self.last_link_gb[l]) / dt;
+            let util = (c.util_integral - self.last_link_util_integral[l]) / dt;
+            self.last_link_gb[l] = c.gb_total;
+            self.last_link_util_integral[l] = c.util_integral;
+            links.push(LinkSignal {
+                link: crate::topo::LinkId(l),
+                utilization: util.clamp(0.0, 1.0),
+                gbps,
+            });
+        }
+
+        let mut tenants = Vec::new();
+        for t in 0..N_TENANTS {
+            let gb = self.fabric.owner_gb(t);
+            let gbps = (gb - self.last_owner_gb[t]) / dt;
+            self.last_owner_gb[t] = gb;
+            let tails = self.monitors[t].sample(now);
+            let active = match t {
+                0 => true,
+                1 => self.t2_active,
+                _ => self.t3_active,
+            };
+            // T2's block I/O is its NVMe-side traffic.
+            let nvme_share = if t == 1 { gbps * 0.5 } else { 0.0 };
+            tenants.push(TenantSignal {
+                tenant: TenantId(t),
+                tails,
+                pcie_gbps: gbps,
+                block_io_gbps: nvme_share,
+                active,
+            });
+        }
+
+        // SM utilization: time-weighted approximation via current state.
+        let sm_now = self.instantaneous_sm_util();
+        self.sm_util_integral += sm_now;
+        self.sm_util_samples += 1;
+        let mut gpu_sm_util = vec![0.0; topo.num_gpus];
+        gpu_sm_util[self.placements[0].gpu] = sm_now;
+
+        let numa_io_gbps: Vec<f64> = topo
+            .numa_nodes
+            .iter()
+            .map(|n| links[n.nvme_link.0].gbps)
+            .collect();
+        let numa_irq_rate: Vec<f64> = numa_io_gbps
+            .iter()
+            .zip(topo.numa_nodes.iter())
+            .map(|(io, n)| {
+                // IRQ rate rises with storage + PCIe traffic in the domain.
+                let pcie: f64 = topo
+                    .switches
+                    .iter()
+                    .filter(|s| s.numa == n.id)
+                    .map(|s| links[s.link.0].gbps)
+                    .sum();
+                200.0 + 800.0 * io + 120.0 * pcie
+            })
+            .collect();
+
+        self.last_sample_t = now;
+        SignalSnapshot {
+            t: now,
+            dt,
+            tenants,
+            links,
+            gpu_sm_util,
+            numa_io_gbps,
+            numa_irq_rate,
+        }
+    }
+
+    fn build_view(&self) -> PlannerView {
+        let mut tenants = Vec::new();
+        for (i, p) in self.placements.iter().enumerate() {
+            tenants.push(TenantView {
+                tenant: TenantId(i),
+                gpu: p.gpu,
+                instance: p.instance,
+                profile: p.profile,
+                mps_peers: p.peers.iter().map(|&x| TenantId(x)).collect(),
+                numa: p.numa,
+                mps_quota: if i == 2 { self.t3_quota } else { 100.0 },
+                io_throttle_gbps: if i == 1 { self.t2_throttle } else { None },
+            });
+        }
+        // Free existing instances anywhere on the host.
+        let occupied: Vec<(usize, InstanceId)> = self
+            .placements
+            .iter()
+            .map(|p| (p.gpu, p.instance))
+            .collect();
+        let mut free_instances = Vec::new();
+        for g in &self.gpus {
+            for inst in g.instances() {
+                if !occupied.contains(&(g.index, inst.id)) {
+                    free_instances.push(InstanceView {
+                        gpu: g.index,
+                        existing: Some(inst.id),
+                        profile: inst.profile,
+                    });
+                }
+            }
+        }
+        PlannerView {
+            topo: self.scenario.topo.clone(),
+            gpus: self.gpus.clone(),
+            tenants,
+            free_instances,
+            t1_base_rps: self.scenario.t1.arrival_rps,
+        }
+    }
+
+    fn on_sample(&mut self, now: f64) {
+        let snap = self.build_snapshot(now);
+        if let Some(t1) = snap.tenant(T1) {
+            self.p99_series.push((now, t1.tails.p99_ms));
+        }
+        if self.controller.is_some() {
+            let view = self.build_view();
+            let wall = std::time::Instant::now();
+            let actions = self
+                .controller
+                .as_mut()
+                .unwrap()
+                .on_observation(&snap, &view);
+            self.controller_wall_s += wall.elapsed().as_secs_f64();
+            for a in actions {
+                self.apply_action(now, a);
+            }
+        }
+        self.q.push_at(now + self.scenario.sample_dt, Event::Sample);
+    }
+
+    /// Build a (snapshot, view) pair from the current world state —
+    /// used by benches to measure the controller tick in isolation.
+    pub fn sample_for_bench(&mut self) -> (SignalSnapshot, PlannerView) {
+        let snap = self.build_snapshot(1.0);
+        let view = self.build_view();
+        (snap, view)
+    }
+
+    // --- main loop -------------------------------------------------------------
+
+    fn handle(&mut self, now: f64, ev: Event) {
+        match ev {
+            Event::T1Arrival => self.on_t1_arrival(now),
+            Event::FlowsDone { version } => {
+                if version != self.fabric_version {
+                    return;
+                }
+                self.sync_fabric(now);
+                // Collect every flow that has drained.
+                let done: Vec<FlowId> = self
+                    .flow_purpose
+                    .keys()
+                    .copied()
+                    .filter(|id| self.fabric.remaining(*id).map(|r| r <= 1e-9).unwrap_or(false))
+                    .collect();
+                for id in done {
+                    self.fabric.remove(id);
+                    let purpose = self.flow_purpose.remove(&id).unwrap();
+                    match purpose {
+                        Purpose::T1Stage(r) => self.on_t1_stage_done(now, r),
+                        Purpose::T1H2d(r) => self.on_t1_h2d_done(now, r),
+                        Purpose::T2Read | Purpose::T2H2d | Purpose::T2D2h => {
+                            self.on_t2_flow_done(now, purpose)
+                        }
+                        Purpose::T3Sync => {}
+                    }
+                }
+                self.reschedule_fabric(now);
+            }
+            Event::T1ComputeDone { req } => self.on_t1_compute_done(now, req),
+            Event::T2TransformDone => self.on_t2_transform_done(now),
+            Event::T3StepDone => self.on_t3_step_done(now),
+            Event::ToggleT2 => {
+                self.t2_active = self.scenario.t2_schedule.active_at(now);
+                if self.t2_active {
+                    self.t2_begin_cycle(now);
+                }
+                // When toggled off mid-cycle the current flows drain and
+                // the cycle stops at the next Idle check.
+            }
+            Event::ToggleT3 => {
+                self.t3_active = self.scenario.t3_schedule.active_at(now);
+                if self.t3_active {
+                    self.t3_begin_step(now);
+                }
+            }
+            Event::Sample => self.on_sample(now),
+            Event::PauseDone => self.on_pause_done(now),
+            Event::ThrottleExpire { deadline_bits } => {
+                if self.t2_throttle_deadline.map(f64::to_bits) == Some(deadline_bits) {
+                    self.t2_throttle = None;
+                    self.t2_throttle_deadline = None;
+                    self.sync_fabric(now);
+                    self.fabric.set_owner_cap(1, None);
+                    self.reschedule_fabric(now);
+                }
+            }
+        }
+    }
+
+    /// Run to the scenario horizon and aggregate results.
+    pub fn run(mut self) -> RunResult {
+        let horizon = self.scenario.horizon;
+        while let Some(t) = self.q.peek_time() {
+            if t > horizon {
+                break;
+            }
+            let (clock, ev) = self.q.pop().unwrap();
+            self.handle(clock.secs(), ev);
+        }
+        self.finish(horizon)
+    }
+
+    fn finish(self, horizon: f64) -> RunResult {
+        let m = &self.monitors[0];
+        let label = self.scenario.controller.levers.name().to_string();
+        let (actions, timeline, moves_per_hour) = match &self.controller {
+            Some(c) => {
+                let audit = c.audit();
+                let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+                for e in audit.entries() {
+                    *counts.entry(e.action.clone()).or_insert(0) += 1;
+                }
+                (
+                    counts.into_iter().collect::<Vec<_>>(),
+                    audit
+                        .timeline()
+                        .into_iter()
+                        .map(|(t, k, p)| (t, k.to_string(), p))
+                        .collect(),
+                    audit.moves_per_hour(horizon),
+                )
+            }
+            None => (Vec::new(), Vec::new(), 0.0),
+        };
+        RunResult {
+            label,
+            seed: self.scenario.seed,
+            horizon_s: horizon,
+            miss_rate: m.lifetime_miss_rate(),
+            p50_ms: m.lifetime_quantile_ms(0.50),
+            p95_ms: m.lifetime_quantile_ms(0.95),
+            p99_ms: m.lifetime_quantile_ms(0.99),
+            p999_ms: m.lifetime_quantile_ms(0.999),
+            mean_ms: m.histogram().mean() / 1000.0,
+            completed: m.total_completed(),
+            rps: m.total_completed() as f64 / horizon,
+            histogram: m.histogram().clone(),
+            actions,
+            moves_per_hour,
+            reconfig_durations_s: self.reconfig_durations.clone(),
+            controller_cpu_frac: self.controller_wall_s / horizon,
+            timeline,
+            mean_sm_util: if self.sm_util_samples > 0 {
+                self.sm_util_integral / self.sm_util_samples as f64
+            } else {
+                0.0
+            },
+            p99_series: self.p99_series,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::Levers;
+
+    fn short_scenario(seed: u64, levers: Levers) -> Scenario {
+        let mut s = Scenario::paper_single_host(seed, levers);
+        s.horizon = 120.0;
+        s
+    }
+
+    #[test]
+    fn baseline_run_completes_requests() {
+        let r = SimWorld::new(short_scenario(1, Levers::none())).run();
+        // ~80 rps * 120 s; allow wide tolerance for in-flight tail.
+        assert!(r.completed > 8_500, "completed={}", r.completed);
+        assert!(r.p99_ms > r.p50_ms);
+        assert!(r.miss_rate >= 0.0 && r.miss_rate <= 1.0);
+    }
+
+    #[test]
+    fn deterministic_same_seed() {
+        let a = SimWorld::new(short_scenario(5, Levers::none())).run();
+        let b = SimWorld::new(short_scenario(5, Levers::none())).run();
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.p99_ms, b.p99_ms);
+        assert_eq!(a.miss_rate, b.miss_rate);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = SimWorld::new(short_scenario(5, Levers::none())).run();
+        let b = SimWorld::new(short_scenario(6, Levers::none())).run();
+        assert_ne!(a.completed, b.completed);
+    }
+
+    #[test]
+    fn contention_inflates_tail() {
+        let mut quiet = short_scenario(2, Levers::none());
+        quiet.t2_schedule = crate::tenants::InterferenceSchedule::always_off(120.0);
+        quiet.t3_schedule = crate::tenants::InterferenceSchedule::always_off(120.0);
+        let mut noisy = short_scenario(2, Levers::none());
+        noisy.t2_schedule = crate::tenants::InterferenceSchedule::always_on(120.0);
+        noisy.t3_schedule = crate::tenants::InterferenceSchedule::always_on(120.0);
+        let rq = SimWorld::new(quiet).run();
+        let rn = SimWorld::new(noisy).run();
+        assert!(
+            rn.p99_ms > rq.p99_ms * 1.2,
+            "noisy p99 {} vs quiet {}",
+            rn.p99_ms,
+            rq.p99_ms
+        );
+    }
+
+    #[test]
+    fn controller_acts_under_contention() {
+        let mut s = short_scenario(3, Levers::full());
+        s.horizon = 600.0;
+        s.t2_schedule = crate::tenants::InterferenceSchedule::always_on(600.0);
+        s.t3_schedule = crate::tenants::InterferenceSchedule::always_on(600.0);
+        let r = SimWorld::new(s).run();
+        let total_actions: usize = r.actions.iter().map(|(_, c)| c).sum();
+        assert!(total_actions > 0, "controller never acted: {:?}", r.actions);
+    }
+
+    #[test]
+    fn full_controller_beats_baseline() {
+        // The headline direction (E1) on a longer run.
+        let mk = |levers| {
+            let mut s = Scenario::paper_single_host(11, levers);
+            s.horizon = 900.0;
+            SimWorld::new(s).run()
+        };
+        let base = mk(Levers::none());
+        let full = mk(Levers::full());
+        assert!(
+            full.p99_ms < base.p99_ms,
+            "full {} !< base {}",
+            full.p99_ms,
+            base.p99_ms
+        );
+        assert!(
+            full.miss_rate < base.miss_rate,
+            "full miss {} !< base {}",
+            full.miss_rate,
+            base.miss_rate
+        );
+    }
+}

@@ -1,0 +1,237 @@
+//! `artifacts/manifest.json` — the compile-time ABI between the JAX AOT
+//! path and this runtime. Field-for-field mirror of what aot.py writes.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one executable input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSig> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensor sig missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .as_str()
+            .ok_or_else(|| anyhow!("tensor sig missing dtype"))?
+            .to_string();
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+/// One AOT executable (prefill / decode / smoke).
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub num_params: usize,
+    pub sha256: String,
+}
+
+/// Model geometry (mirror of python `ModelConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub page_size: usize,
+    pub num_pages: usize,
+    pub max_pages_per_seq: usize,
+    pub batch: usize,
+    pub prompt_len: usize,
+}
+
+impl ModelSpec {
+    pub fn max_seq_len(&self) -> usize {
+        self.max_pages_per_seq * self.page_size
+    }
+
+    /// Elements of one KV pool tensor [L, P, page, KH, D].
+    pub fn kv_pool_elements(&self) -> usize {
+        self.n_layers * self.num_pages * self.page_size * self.n_kv_heads * self.head_dim
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelSpec,
+    /// Ordered (name, shape) parameter list — the positional ABI.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub params_bin: String,
+    pub prefill: ArtifactSig,
+    pub decode: ArtifactSig,
+    pub smoke: ArtifactSig,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        if j.get("format").as_usize() != Some(1) {
+            bail!("unsupported manifest format");
+        }
+
+        let m = j.get("model");
+        let field = |k: &str| -> Result<usize> {
+            m.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest model missing {k}"))
+        };
+        let model = ModelSpec {
+            vocab_size: field("vocab_size")?,
+            d_model: field("d_model")?,
+            n_layers: field("n_layers")?,
+            n_heads: field("n_heads")?,
+            n_kv_heads: field("n_kv_heads")?,
+            head_dim: field("head_dim")?,
+            d_ff: field("d_ff")?,
+            page_size: field("page_size")?,
+            num_pages: field("num_pages")?,
+            max_pages_per_seq: field("max_pages_per_seq")?,
+            batch: field("batch")?,
+            prompt_len: field("prompt_len")?,
+        };
+
+        let params = j
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((name, shape))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifact = |name: &str| -> Result<ArtifactSig> {
+            let a = j.at(&["artifacts", name]);
+            if matches!(a, Json::Null) {
+                bail!("manifest missing artifact {name}");
+            }
+            Ok(ArtifactSig {
+                file: a
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                    .to_string(),
+                inputs: a
+                    .get("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                num_params: a.get("num_params").as_usize().unwrap_or(0),
+                sha256: a.get("sha256").as_str().unwrap_or("").to_string(),
+            })
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            params,
+            params_bin: j
+                .get("params_bin")
+                .as_str()
+                .ok_or_else(|| anyhow!("manifest missing params_bin"))?
+                .to_string(),
+            prefill: artifact("prefill")?,
+            decode: artifact("decode")?,
+            smoke: artifact("smoke")?,
+        })
+    }
+
+    /// Total f32 elements across all params (size check for params.bin).
+    pub fn total_param_elements(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Locate the artifacts directory: `$PREDSERVE_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts` (tests run from target dirs).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("PREDSERVE_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        assert_eq!(m.model.page_size * m.model.max_pages_per_seq, m.model.max_seq_len());
+        assert!(m.params.len() > 10);
+        assert_eq!(m.prefill.num_params, m.params.len());
+        // prefill inputs = params + tokens, seq_lens, page_table, k, v
+        assert_eq!(m.prefill.inputs.len(), m.params.len() + 5);
+        assert_eq!(m.prefill.outputs.len(), 3);
+        // KV pool shapes agree between manifest fields and spec.
+        let kv = &m.prefill.inputs[m.params.len() + 3];
+        assert_eq!(kv.elements(), m.model.kv_pool_elements());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! This is the only place the crate touches XLA. Python never runs at
+//! serving time — the artifacts + `params.bin` + `manifest.json` are the
+//! complete model. Interchange is HLO *text* (see aot.py / DESIGN.md for
+//! the xla_extension-0.5.1 proto-id rationale).
+//!
+//! Layout:
+//! * [`manifest`] — parses `manifest.json`, the positional ABI (param
+//!   order, input signatures, KV geometry) shared with the Python side.
+//! * [`params`] — loads `params.bin` (raw little-endian f32).
+//! * [`pjrt`] — the client wrapper: compile-once, execute-many, with a
+//!   buffer-resident parameter cache for the hot decode loop.
+
+pub mod manifest;
+pub mod params;
+pub mod pjrt;
+
+pub use manifest::{ArtifactSig, Manifest, ModelSpec, TensorSig};
+pub use pjrt::{ModelRuntime, StepOutput};

@@ -1,0 +1,73 @@
+//! Parameter blob loader: `artifacts/params.bin` is raw little-endian f32,
+//! concatenated in the exact order of `manifest.params` (the positional ABI
+//! with the JAX side — see `python/compile/aot.py`).
+
+use super::manifest::Manifest;
+use anyhow::{bail, Context, Result};
+
+/// All model parameters as host vectors, in manifest order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    /// (name, shape, data) in positional order.
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl ParamSet {
+    pub fn load(manifest: &Manifest) -> Result<ParamSet> {
+        let path = manifest.dir.join(&manifest.params_bin);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expect = manifest.total_param_elements() * 4;
+        if bytes.len() != expect {
+            bail!(
+                "params.bin size mismatch: got {} bytes, manifest implies {}",
+                bytes.len(),
+                expect
+            );
+        }
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        let mut off = 0usize;
+        for (name, shape) in &manifest.params {
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            for (i, chunk) in bytes[off..off + 4 * n].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            off += 4 * n;
+            tensors.push((name.clone(), shape.clone(), data));
+        }
+        Ok(ParamSet { tensors })
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.tensors.iter().map(|(_, _, d)| d.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn loads_and_is_finite() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let p = ParamSet::load(&m).unwrap();
+        assert_eq!(p.total_elements(), m.total_param_elements());
+        // Norm gains init to exactly 1.0 — spot-check the ABI ordering.
+        let ln1 = p
+            .tensors
+            .iter()
+            .find(|(n, _, _)| n == "layer0.ln1")
+            .expect("layer0.ln1 present");
+        assert!(ln1.2.iter().all(|&x| x == 1.0));
+        for (name, _, data) in &p.tensors {
+            assert!(data.iter().all(|x| x.is_finite()), "{name} has non-finite");
+        }
+    }
+}

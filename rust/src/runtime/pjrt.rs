@@ -1,0 +1,225 @@
+//! PJRT execution wrapper: compile the AOT artifacts once, execute many.
+//!
+//! The decode hot loop keeps the (large, immutable) parameter tensors
+//! resident as device buffers and uploads only the small per-step inputs
+//! (tokens/positions/page_table) plus the KV pools — see §Perf in
+//! EXPERIMENTS.md for the literal-path vs buffer-path numbers.
+
+use super::manifest::Manifest;
+use super::params::ParamSet;
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Output of one prefill/decode execution.
+#[derive(Debug)]
+pub struct StepOutput {
+    /// `[batch, vocab]` row-major logits.
+    pub logits: Vec<f32>,
+    /// Updated KV pools (row-major `[L, P, page, KH, D]`).
+    pub k_pages: Vec<f32>,
+    pub v_pages: Vec<f32>,
+}
+
+/// Compiled model + pre-built parameter literals.
+///
+/// NOTE: parameters are cached as host *literals*, not device buffers.
+/// The PJRT CPU client in `xla` 0.1.6 consumes (donates) input buffers on
+/// `execute_b`, so device-resident reuse across calls aborts; the literal
+/// path re-uploads per call (≈1.7 MB memcpy for this model — measured in
+/// EXPERIMENTS.md §Perf, negligible vs the HLO execution itself).
+pub struct ModelRuntime {
+    #[allow(dead_code)]
+    client: PjRtClient,
+    prefill: PjRtLoadedExecutable,
+    decode: PjRtLoadedExecutable,
+    /// Parameter literals in positional ABI order.
+    param_literals: Vec<Literal>,
+    pub manifest: Manifest,
+}
+
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+impl ModelRuntime {
+    /// Load artifacts from `dir`, compile, and upload parameters.
+    pub fn load(dir: &std::path::Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let params = ParamSet::load(&manifest)?;
+        let client = PjRtClient::cpu()?;
+
+        let compile = |file: &str| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.dir.join(file);
+            let proto = HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))
+        };
+        let prefill = compile(&manifest.prefill.file)?;
+        let decode = compile(&manifest.decode.file)?;
+
+        // Parameter literals built once; uploaded per call (see struct doc).
+        let mut param_literals = Vec::with_capacity(params.tensors.len());
+        for (_, shape, data) in &params.tensors {
+            param_literals.push(literal_f32(data, shape)?);
+        }
+
+        Ok(ModelRuntime {
+            client,
+            prefill,
+            decode,
+            param_literals,
+            manifest,
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<ModelRuntime> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    pub fn spec(&self) -> super::manifest::ModelSpec {
+        self.manifest.model
+    }
+
+    /// Fresh zeroed KV pool pair.
+    pub fn new_kv_pools(&self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.manifest.model.kv_pool_elements();
+        (vec![0f32; n], vec![0f32; n])
+    }
+
+    fn kv_shape(&self) -> Vec<usize> {
+        let m = &self.manifest.model;
+        vec![m.n_layers, m.num_pages, m.page_size, m.n_kv_heads, m.head_dim]
+    }
+
+    fn run(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        extra: Vec<Literal>,
+        k_pages: &[f32],
+        v_pages: &[f32],
+    ) -> Result<StepOutput> {
+        let kv_shape = self.kv_shape();
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(self.param_literals.len() + 5);
+        inputs.extend(self.param_literals.iter());
+        let kv_k = literal_f32(k_pages, &kv_shape)?;
+        let kv_v = literal_f32(v_pages, &kv_shape)?;
+        for lit in &extra {
+            inputs.push(lit);
+        }
+        inputs.push(&kv_k);
+        inputs.push(&kv_v);
+
+        let result = exe.execute::<&Literal>(&inputs)?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()?;
+        let (logits_l, k_l, v_l) = out.to_tuple3()?;
+        Ok(StepOutput {
+            logits: logits_l.to_vec::<f32>()?,
+            k_pages: k_l.to_vec::<f32>()?,
+            v_pages: v_l.to_vec::<f32>()?,
+        })
+    }
+
+    /// Execute prefill over a padded prompt batch.
+    ///
+    /// * `tokens` — `[batch * prompt_len]` row-major, padded.
+    /// * `seq_lens` — `[batch]` live prompt lengths (0 for inactive rows).
+    /// * `page_table` — `[batch * max_pages_per_seq]` page ids.
+    pub fn run_prefill(
+        &self,
+        tokens: &[i32],
+        seq_lens: &[i32],
+        page_table: &[i32],
+        k_pages: &[f32],
+        v_pages: &[f32],
+    ) -> Result<StepOutput> {
+        let m = &self.manifest.model;
+        if tokens.len() != m.batch * m.prompt_len {
+            bail!("tokens len {} != batch*prompt_len", tokens.len());
+        }
+        if seq_lens.len() != m.batch || page_table.len() != m.batch * m.max_pages_per_seq {
+            bail!("bad prefill input shapes");
+        }
+        let extra = vec![
+            literal_i32(tokens, &[m.batch, m.prompt_len])?,
+            literal_i32(seq_lens, &[m.batch])?,
+            literal_i32(page_table, &[m.batch, m.max_pages_per_seq])?,
+        ];
+        self.run(&self.prefill, extra, k_pages, v_pages)
+    }
+
+    /// Execute one decode step.
+    ///
+    /// * `tokens` — `[batch]` current token per row.
+    /// * `positions` — `[batch]` 0-based position of that token.
+    pub fn run_decode(
+        &self,
+        tokens: &[i32],
+        positions: &[i32],
+        page_table: &[i32],
+        k_pages: &[f32],
+        v_pages: &[f32],
+    ) -> Result<StepOutput> {
+        let m = &self.manifest.model;
+        if tokens.len() != m.batch || positions.len() != m.batch {
+            bail!("bad decode input shapes");
+        }
+        if page_table.len() != m.batch * m.max_pages_per_seq {
+            bail!("bad page table shape");
+        }
+        let extra = vec![
+            literal_i32(tokens, &[m.batch])?,
+            literal_i32(positions, &[m.batch])?,
+            literal_i32(page_table, &[m.batch, m.max_pages_per_seq])?,
+        ];
+        self.run(&self.decode, extra, k_pages, v_pages)
+    }
+
+    /// Compile + run the smoke artifact (used by tests to validate the
+    /// load-execute path independent of the model).
+    pub fn smoke_test(dir: &std::path::Path) -> Result<Vec<f32>> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        let proto = HloModuleProto::from_text_file(&manifest.dir.join(&manifest.smoke.file))?;
+        let exe = client.compile(&XlaComputation::from_proto(&proto))?;
+        let x = Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+        let y = Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+        let out = exe.execute::<Literal>(&[x, y])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> Option<std::path::PathBuf> {
+        let d = Manifest::default_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn smoke_artifact_executes() {
+        let Some(d) = dir() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let out = ModelRuntime::smoke_test(&d).unwrap();
+        assert_eq!(out, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+}

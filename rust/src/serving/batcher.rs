@@ -1,0 +1,250 @@
+//! Continuous batcher: waiting queue → fixed batch rows (vLLM-style).
+//!
+//! The AOT executables are compiled for a fixed row count (`batch`), so
+//! "continuous batching" here means: whenever a row frees up and the KV
+//! pool can host the prompt, the next waiting request is admitted and
+//! prefills while other rows keep decoding (prefill runs as its own wave,
+//! with occupied rows masked out via `seq_len = 0`).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::kvcache::{PagedKvCache, SeqId};
+use super::request::{RequestId, ServeRequest};
+
+/// A sequence occupying a batch row.
+#[derive(Clone, Debug)]
+pub struct RunningSeq {
+    pub req: ServeRequest,
+    pub seq: SeqId,
+    pub generated: Vec<i32>,
+    /// Token to feed next decode step.
+    pub last_token: i32,
+    /// Position (0-based) the next decode step writes.
+    pub position: usize,
+    pub ttft_s: Option<f64>,
+    pub prefill_at: Option<Instant>,
+}
+
+/// What the engine should do next.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Work {
+    /// Admit + prefill these waiting requests into the given rows.
+    Prefill { rows: Vec<usize> },
+    /// Run one decode step over the currently running rows.
+    Decode,
+    /// Nothing to do.
+    Idle,
+}
+
+/// Row-slot manager.
+#[derive(Debug)]
+pub struct Batcher {
+    rows: Vec<Option<RunningSeq>>,
+    waiting: VecDeque<ServeRequest>,
+    admitted_total: u64,
+}
+
+impl Batcher {
+    pub fn new(batch_rows: usize) -> Batcher {
+        Batcher {
+            rows: (0..batch_rows).map(|_| None).collect(),
+            waiting: VecDeque::new(),
+            admitted_total: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: ServeRequest) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.rows.iter().filter(|r| r.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running_len() == 0
+    }
+
+    pub fn rows(&self) -> &[Option<RunningSeq>] {
+        &self.rows
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut Option<RunningSeq> {
+        &mut self.rows[i]
+    }
+
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted_total
+    }
+
+    /// Decide the next wave. Prefill takes priority when a row AND pages
+    /// are available (prefill-first keeps TTFT low, matching vLLM's
+    /// default scheduler).
+    pub fn plan(&self, cache: &PagedKvCache) -> Work {
+        let free_rows: Vec<usize> = self
+            .rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        if !free_rows.is_empty() && !self.waiting.is_empty() {
+            // Admit as many as fit (head-of-line order; stop at the first
+            // request whose prompt cannot get pages yet).
+            let mut rows = Vec::new();
+            let mut pages_left = cache.free_pages();
+            for (slot, req) in free_rows.iter().zip(self.waiting.iter()) {
+                let need = cache.pages_for(req.prompt_tokens.len()).max(1);
+                if need > pages_left || !cache.can_admit(req.prompt_tokens.len()) {
+                    break;
+                }
+                pages_left -= need;
+                rows.push(*slot);
+            }
+            if !rows.is_empty() {
+                return Work::Prefill { rows };
+            }
+        }
+        if self.running_len() > 0 {
+            return Work::Decode;
+        }
+        Work::Idle
+    }
+
+    /// Head of the waiting queue (the request `admit` will pop next).
+    pub fn waiting_front(&self) -> Option<&ServeRequest> {
+        self.waiting.front()
+    }
+
+    /// Pop the next waiting request into `row` (the engine calls this for
+    /// each row in a `Work::Prefill` wave, after allocating its pages).
+    pub fn admit(&mut self, row: usize, seq: SeqId) -> &mut RunningSeq {
+        let req = self.waiting.pop_front().expect("admit without waiting");
+        self.admitted_total += 1;
+        self.rows[row] = Some(RunningSeq {
+            position: req.prompt_tokens.len(),
+            req,
+            seq,
+            generated: Vec::new(),
+            last_token: 0,
+            ttft_s: None,
+            prefill_at: None,
+        });
+        self.rows[row].as_mut().unwrap()
+    }
+
+    /// Free a row, returning the sequence.
+    pub fn evict(&mut self, row: usize) -> Option<RunningSeq> {
+        self.rows[row].take()
+    }
+
+    /// Requests in flight or queued, by id (ordering invariants in tests).
+    pub fn inflight_ids(&self) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> = self
+            .rows
+            .iter()
+            .flatten()
+            .map(|r| r.req.id)
+            .chain(self.waiting.iter().map(|r| r.id))
+            .collect();
+        ids.sort();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::request::SamplingParams;
+
+    fn req(id: u64, prompt: usize) -> ServeRequest {
+        ServeRequest {
+            id: RequestId(id),
+            prompt_tokens: vec![1; prompt],
+            params: SamplingParams::default(),
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn prefill_planned_when_rows_free() {
+        let cache = PagedKvCache::new(64, 16, 4);
+        let mut b = Batcher::new(4);
+        b.submit(req(1, 10));
+        b.submit(req(2, 10));
+        match b.plan(&cache) {
+            Work::Prefill { rows } => assert_eq!(rows, vec![0, 1]),
+            w => panic!("expected prefill, got {w:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_respects_page_budget() {
+        let cache = PagedKvCache::new(4, 16, 4); // 3 usable pages
+        let mut b = Batcher::new(4);
+        b.submit(req(1, 32)); // 2 pages
+        b.submit(req(2, 32)); // would exceed
+        match b.plan(&cache) {
+            Work::Prefill { rows } => assert_eq!(rows.len(), 1),
+            w => panic!("{w:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_when_no_free_rows() {
+        let mut cache = PagedKvCache::new(64, 16, 4);
+        let mut b = Batcher::new(1);
+        b.submit(req(1, 10));
+        let seq = cache.allocate(10).unwrap();
+        b.admit(0, seq);
+        b.submit(req(2, 10));
+        assert_eq!(b.plan(&cache), Work::Decode);
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let cache = PagedKvCache::new(64, 16, 4);
+        let b = Batcher::new(4);
+        assert_eq!(b.plan(&cache), Work::Idle);
+        assert!(b.is_idle());
+    }
+
+    #[test]
+    fn evict_frees_row() {
+        let mut cache = PagedKvCache::new(64, 16, 4);
+        let mut b = Batcher::new(1);
+        b.submit(req(7, 5));
+        let seq = cache.allocate(5).unwrap();
+        b.admit(0, seq);
+        assert_eq!(b.running_len(), 1);
+        let r = b.evict(0).unwrap();
+        assert_eq!(r.req.id, RequestId(7));
+        assert_eq!(b.running_len(), 0);
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        let mut cache = PagedKvCache::new(64, 16, 4);
+        let mut b = Batcher::new(2);
+        for i in 0..6 {
+            b.submit(req(i, 8));
+        }
+        // Admit two.
+        if let Work::Prefill { rows } = b.plan(&cache) {
+            for r in rows {
+                let seq = cache.allocate(8).unwrap();
+                b.admit(r, seq);
+            }
+        }
+        let ids = b.inflight_ids();
+        assert_eq!(ids.len(), 6);
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(*id, RequestId(i as u64));
+        }
+    }
+}

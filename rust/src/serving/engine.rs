@@ -1,0 +1,334 @@
+//! The serving engine: continuous-batched prefill/decode over the AOT
+//! executables, with real TTFT measurement.
+//!
+//! One `step()` = one scheduler wave (a prefill batch or a decode step),
+//! exactly like vLLM's engine loop. All tensor I/O goes through
+//! [`crate::runtime::ModelRuntime`]; the KV pool lives host-side between
+//! steps (CPU PJRT; on TPU it would stay device-resident via donation —
+//! see DESIGN.md §Perf).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::ModelRuntime;
+use crate::util::histogram::Histogram;
+use crate::util::rng::Pcg64;
+
+use super::batcher::{Batcher, Work};
+use super::kvcache::PagedKvCache;
+use super::request::{Completion, FinishReason, RequestId, SamplingParams, ServeRequest};
+use super::sampler;
+use super::tokenizer::{ByteTokenizer, EOS};
+
+/// Aggregate serving metrics (µs histograms).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub ttft_us: Histogram,
+    pub e2e_us: Histogram,
+    pub completed: u64,
+    pub generated_tokens: u64,
+    pub prefill_waves: u64,
+    pub decode_steps: u64,
+    /// Wall time spent inside PJRT execute calls.
+    pub model_time_s: f64,
+    /// Total engine step time.
+    pub step_time_s: f64,
+}
+
+impl EngineStats {
+    pub fn throughput_rps(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / wall_s
+        }
+    }
+}
+
+/// The engine.
+pub struct Engine {
+    rt: ModelRuntime,
+    cache: PagedKvCache,
+    batcher: Batcher,
+    k_pages: Vec<f32>,
+    v_pages: Vec<f32>,
+    next_id: u64,
+    rng: Pcg64,
+    pub tokenizer: ByteTokenizer,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Build from the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Ok(Self::new(ModelRuntime::load_default()?))
+    }
+
+    pub fn new(rt: ModelRuntime) -> Engine {
+        let spec = rt.spec();
+        let (k, v) = rt.new_kv_pools();
+        Engine {
+            cache: PagedKvCache::new(spec.num_pages, spec.page_size, spec.max_pages_per_seq),
+            batcher: Batcher::new(spec.batch),
+            k_pages: k,
+            v_pages: v,
+            next_id: 1,
+            rng: Pcg64::seeded(0xE47),
+            tokenizer: ByteTokenizer,
+            rt,
+            stats: EngineStats::default(),
+        }
+    }
+
+    pub fn spec(&self) -> crate::runtime::ModelSpec {
+        self.rt.spec()
+    }
+
+    /// Submit a text prompt; returns the request id.
+    pub fn submit_text(&mut self, text: &str, params: SamplingParams) -> RequestId {
+        let spec = self.rt.spec();
+        // Leave room for at least one generated token inside max_seq_len.
+        let max_prompt = spec.prompt_len.min(spec.max_seq_len() - 1);
+        let tokens = self.tokenizer.encode(text, max_prompt);
+        self.submit_tokens(tokens, params)
+    }
+
+    /// Submit pre-tokenized input.
+    pub fn submit_tokens(&mut self, tokens: Vec<i32>, params: SamplingParams) -> RequestId {
+        let id = RequestId(self.next_id);
+        self.next_id += 1;
+        self.batcher.submit(ServeRequest {
+            id,
+            prompt_tokens: tokens,
+            params,
+            submitted: Instant::now(),
+        });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.waiting_len() + self.batcher.running_len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.batcher.is_idle()
+    }
+
+    /// One scheduler wave. Returns completions that finished this step.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let t0 = Instant::now();
+        let out = match self.batcher.plan(&self.cache) {
+            Work::Prefill { rows } => self.do_prefill(rows),
+            Work::Decode => self.do_decode(),
+            Work::Idle => Ok(Vec::new()),
+        };
+        self.stats.step_time_s += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    /// Run until all submitted requests complete; returns all completions.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
+        while !self.batcher.is_idle() {
+            done.extend(self.step()?);
+        }
+        Ok(done)
+    }
+
+    fn do_prefill(&mut self, rows: Vec<usize>) -> Result<Vec<Completion>> {
+        let spec = self.rt.spec();
+        self.stats.prefill_waves += 1;
+
+        let mut tokens = vec![0i32; spec.batch * spec.prompt_len];
+        let mut seq_lens = vec![0i32; spec.batch];
+        let mut table = vec![super::kvcache::SCRATCH_PAGE; spec.batch * spec.max_pages_per_seq];
+        // Existing running rows keep seq_len 0 (no KV writes) and scratch
+        // tables — the executable leaves their state untouched.
+        for &row in &rows {
+            // Allocate pages for the prompt, then admit into the row
+            // (admit pops the queue head, so peek the front each time).
+            let prompt_len = self
+                .batcher
+                .waiting_front()
+                .map(|r| r.prompt_tokens.len())
+                .unwrap_or(0);
+            let seq = self
+                .cache
+                .allocate(prompt_len.max(1))
+                .map_err(|e| anyhow::anyhow!("kv allocation failed: {e:?}"))?;
+            let slot = self.batcher.admit(row, seq);
+            let plen = slot.req.prompt_tokens.len().min(spec.prompt_len);
+            tokens[row * spec.prompt_len..row * spec.prompt_len + plen]
+                .copy_from_slice(&slot.req.prompt_tokens[..plen]);
+            seq_lens[row] = plen as i32;
+            let trow = self.cache.table_row(slot.seq).unwrap();
+            table[row * spec.max_pages_per_seq..(row + 1) * spec.max_pages_per_seq]
+                .copy_from_slice(&trow);
+        }
+
+        let m0 = Instant::now();
+        let out = self
+            .rt
+            .run_prefill(&tokens, &seq_lens, &table, &self.k_pages, &self.v_pages)?;
+        self.stats.model_time_s += m0.elapsed().as_secs_f64();
+        self.k_pages = out.k_pages;
+        self.v_pages = out.v_pages;
+
+        // Sample the first token for each admitted row.
+        let vocab = spec.vocab_size;
+        let now = Instant::now();
+        for &row in &rows {
+            let logits = &out.logits[row * vocab..(row + 1) * vocab];
+            let slot = self.batcher.row_mut(row).as_mut().unwrap();
+            let tok = match slot.req.params.top_k {
+                0 => sampler::greedy(logits),
+                k => {
+                    let mut r = Pcg64::new(slot.req.params.seed, slot.req.id.0);
+                    sampler::top_k(logits, k, &mut r)
+                }
+            };
+            slot.generated.push(tok);
+            slot.last_token = tok;
+            slot.ttft_s = Some(now.duration_since(slot.req.submitted).as_secs_f64());
+            slot.prefill_at = Some(now);
+        }
+
+        // First-token EOS / single-token requests can finish immediately.
+        self.collect_finished(&rows)
+    }
+
+    fn do_decode(&mut self) -> Result<Vec<Completion>> {
+        let spec = self.rt.spec();
+        self.stats.decode_steps += 1;
+
+        let mut tokens = vec![0i32; spec.batch];
+        let mut positions = vec![0i32; spec.batch];
+        let mut table = vec![super::kvcache::SCRATCH_PAGE; spec.batch * spec.max_pages_per_seq];
+        let mut active_rows = Vec::new();
+        let mut length_capped = Vec::new();
+
+        for row in 0..spec.batch {
+            // Reserve capacity for the KV write at `position`; rows that
+            // cannot grow finish with LengthLimit before the step.
+            let (seq, position, last_token) = match self.batcher.rows()[row].as_ref() {
+                Some(s) => (s.seq, s.position, s.last_token),
+                None => continue,
+            };
+            let need_tokens = position + 1;
+            if self.cache.tokens(seq).unwrap_or(0) < need_tokens {
+                match self.cache.append_token(seq) {
+                    Ok(_) => {}
+                    Err(_) => {
+                        length_capped.push(row);
+                        continue;
+                    }
+                }
+            }
+            tokens[row] = last_token;
+            positions[row] = position as i32;
+            let trow = self.cache.table_row(seq).unwrap();
+            table[row * spec.max_pages_per_seq..(row + 1) * spec.max_pages_per_seq]
+                .copy_from_slice(&trow);
+            active_rows.push(row);
+        }
+
+        let mut completions = Vec::new();
+        for row in length_capped {
+            completions.push(self.finish_row(row, FinishReason::LengthLimit));
+        }
+        if active_rows.is_empty() {
+            return Ok(completions);
+        }
+
+        let m0 = Instant::now();
+        let out = self
+            .rt
+            .run_decode(&tokens, &positions, &table, &self.k_pages, &self.v_pages)?;
+        self.stats.model_time_s += m0.elapsed().as_secs_f64();
+        self.k_pages = out.k_pages;
+        self.v_pages = out.v_pages;
+
+        let vocab = spec.vocab_size;
+        for &row in &active_rows {
+            let logits = &out.logits[row * vocab..(row + 1) * vocab];
+            let slot = self.batcher.row_mut(row).as_mut().unwrap();
+            let tok = match slot.req.params.top_k {
+                0 => sampler::greedy(logits),
+                k => {
+                    let mut r = Pcg64::new(
+                        slot.req.params.seed ^ slot.position as u64,
+                        slot.req.id.0,
+                    );
+                    sampler::top_k(logits, k, &mut r)
+                }
+            };
+            slot.generated.push(tok);
+            slot.last_token = tok;
+            slot.position += 1;
+        }
+        completions.extend(self.collect_finished(&active_rows)?);
+        Ok(completions)
+    }
+
+    /// Check EOS / max-token termination on the given rows.
+    fn collect_finished(&mut self, rows: &[usize]) -> Result<Vec<Completion>> {
+        let spec = self.rt.spec();
+        let mut done = Vec::new();
+        for &row in rows {
+            let (finished, reason) = match self.batcher.rows()[row].as_ref() {
+                Some(s) => {
+                    if *s.generated.last().unwrap_or(&-1) == EOS {
+                        (true, FinishReason::Eos)
+                    } else if s.generated.len() >= s.req.params.max_new_tokens {
+                        (true, FinishReason::MaxTokens)
+                    } else if s.position >= spec.max_seq_len() {
+                        (true, FinishReason::LengthLimit)
+                    } else {
+                        (false, FinishReason::Eos)
+                    }
+                }
+                None => continue,
+            };
+            if finished {
+                done.push(self.finish_row(row, reason));
+            }
+        }
+        Ok(done)
+    }
+
+    fn finish_row(&mut self, row: usize, finish: FinishReason) -> Completion {
+        let slot = self.batcher.evict(row).expect("finish empty row");
+        self.cache.release(slot.seq).expect("release");
+        let e2e = slot.req.submitted.elapsed().as_secs_f64();
+        let ttft = slot.ttft_s.unwrap_or(e2e);
+        let n_decode = slot.generated.len().saturating_sub(1);
+        let tpot = if n_decode > 0 {
+            (e2e - ttft) / n_decode as f64
+        } else {
+            0.0
+        };
+        self.stats.completed += 1;
+        self.stats.generated_tokens += slot.generated.len() as u64;
+        self.stats.ttft_us.record((ttft * 1e6) as u64);
+        self.stats.e2e_us.record((e2e * 1e6) as u64);
+        Completion {
+            id: slot.req.id,
+            prompt_len: slot.req.prompt_tokens.len(),
+            generated: slot.generated,
+            finish,
+            ttft_s: ttft,
+            e2e_s: e2e,
+            tpot_s: tpot,
+        }
+    }
+
+    /// Sampling RNG access (tests).
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn kv_cache(&self) -> &PagedKvCache {
+        &self.cache
+    }
+}

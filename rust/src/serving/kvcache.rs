@@ -1,0 +1,352 @@
+//! Paged KV-cache manager (the vLLM block allocator).
+//!
+//! Owns the page pool geometry the AOT model was compiled against: a
+//! shared pool of `num_pages` pages, `page_size` tokens each, per-sequence
+//! page tables of `max_pages_per_seq` entries. Page 0 is reserved as the
+//! scratch target for inactive batch rows (their decode writes land there
+//! and are never read).
+//!
+//! Refcounted pages support copy-on-write prefix sharing: `fork` clones a
+//! table bumping refcounts; a shared page must be copied (by the caller)
+//! before being written, via `ensure_exclusive`.
+
+/// Sequence handle within the cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SeqId(pub u64);
+
+/// Allocation errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvError {
+    OutOfPages,
+    SeqLimit,
+    NoSuchSeq,
+}
+
+/// The scratch page id reserved for inactive batch rows.
+pub const SCRATCH_PAGE: i32 = 0;
+
+#[derive(Clone, Debug)]
+struct SeqEntry {
+    pages: Vec<u32>,
+    tokens: usize,
+}
+
+/// Paged allocator over the shared pool.
+#[derive(Clone, Debug)]
+pub struct PagedKvCache {
+    page_size: usize,
+    num_pages: usize,
+    max_pages_per_seq: usize,
+    refcount: Vec<u32>,
+    free: Vec<u32>,
+    seqs: std::collections::BTreeMap<SeqId, SeqEntry>,
+    next_seq: u64,
+}
+
+impl PagedKvCache {
+    pub fn new(num_pages: usize, page_size: usize, max_pages_per_seq: usize) -> PagedKvCache {
+        assert!(num_pages > 1);
+        let mut refcount = vec![0u32; num_pages];
+        refcount[SCRATCH_PAGE as usize] = 1; // permanently reserved
+        // LIFO free list over pages 1..num_pages.
+        let free = (1..num_pages as u32).rev().collect();
+        PagedKvCache {
+            page_size,
+            num_pages,
+            max_pages_per_seq,
+            refcount,
+            free,
+            seqs: std::collections::BTreeMap::new(),
+            next_seq: 1,
+        }
+    }
+
+    /// Pages still allocatable.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages needed for `tokens` tokens.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Can a sequence of `tokens` total tokens be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        let need = self.pages_for(tokens).max(1);
+        need <= self.max_pages_per_seq && need <= self.free.len()
+    }
+
+    /// Allocate a sequence with capacity for `tokens` tokens.
+    pub fn allocate(&mut self, tokens: usize) -> Result<SeqId, KvError> {
+        let need = self.pages_for(tokens).max(1);
+        if need > self.max_pages_per_seq {
+            return Err(KvError::SeqLimit);
+        }
+        if need > self.free.len() {
+            return Err(KvError::OutOfPages);
+        }
+        let mut pages = Vec::with_capacity(need);
+        for _ in 0..need {
+            let p = self.free.pop().unwrap();
+            self.refcount[p as usize] = 1;
+            pages.push(p);
+        }
+        let id = SeqId(self.next_seq);
+        self.next_seq += 1;
+        self.seqs.insert(
+            id,
+            SeqEntry {
+                pages,
+                tokens,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Grow a sequence by one token, allocating a fresh page on a page
+    /// boundary. Returns the (possibly new) page count.
+    pub fn append_token(&mut self, id: SeqId) -> Result<usize, KvError> {
+        let e = self.seqs.get_mut(&id).ok_or(KvError::NoSuchSeq)?;
+        let new_tokens = e.tokens + 1;
+        let need = new_tokens.div_ceil(self.page_size);
+        if need > e.pages.len() {
+            if need > self.max_pages_per_seq {
+                return Err(KvError::SeqLimit);
+            }
+            let Some(p) = self.free.pop() else {
+                return Err(KvError::OutOfPages);
+            };
+            self.refcount[p as usize] = 1;
+            e.pages.push(p);
+        }
+        e.tokens = new_tokens;
+        Ok(e.pages.len())
+    }
+
+    /// Release a sequence, returning its pages to the pool when their
+    /// refcount drains.
+    pub fn release(&mut self, id: SeqId) -> Result<(), KvError> {
+        let e = self.seqs.remove(&id).ok_or(KvError::NoSuchSeq)?;
+        for p in e.pages {
+            let rc = &mut self.refcount[p as usize];
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(p);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fork a sequence (prefix sharing): the clone references the same
+    /// pages with bumped refcounts.
+    pub fn fork(&mut self, id: SeqId) -> Result<SeqId, KvError> {
+        let e = self.seqs.get(&id).ok_or(KvError::NoSuchSeq)?.clone();
+        for &p in &e.pages {
+            self.refcount[p as usize] += 1;
+        }
+        let nid = SeqId(self.next_seq);
+        self.next_seq += 1;
+        self.seqs.insert(nid, e);
+        Ok(nid)
+    }
+
+    /// Ensure the *last* page of `id` is exclusively owned before a write
+    /// (copy-on-write). Returns `Some((old_page, new_page))` when the
+    /// caller must copy page contents in the backing store.
+    pub fn ensure_exclusive(&mut self, id: SeqId) -> Result<Option<(u32, u32)>, KvError> {
+        let e = self.seqs.get_mut(&id).ok_or(KvError::NoSuchSeq)?;
+        let Some(&last) = e.pages.last() else {
+            return Ok(None);
+        };
+        if self.refcount[last as usize] <= 1 {
+            return Ok(None);
+        }
+        let Some(fresh) = self.free.pop() else {
+            return Err(KvError::OutOfPages);
+        };
+        self.refcount[fresh as usize] = 1;
+        self.refcount[last as usize] -= 1;
+        *e.pages.last_mut().unwrap() = fresh;
+        Ok(Some((last, fresh)))
+    }
+
+    /// Padded page-table row for the AOT executable: `max_pages_per_seq`
+    /// entries, unused slots pointing at the scratch page.
+    pub fn table_row(&self, id: SeqId) -> Result<Vec<i32>, KvError> {
+        let e = self.seqs.get(&id).ok_or(KvError::NoSuchSeq)?;
+        let mut row = vec![SCRATCH_PAGE; self.max_pages_per_seq];
+        for (i, &p) in e.pages.iter().enumerate() {
+            row[i] = p as i32;
+        }
+        Ok(row)
+    }
+
+    /// Scratch row for inactive batch rows.
+    pub fn scratch_row(&self) -> Vec<i32> {
+        vec![SCRATCH_PAGE; self.max_pages_per_seq]
+    }
+
+    pub fn tokens(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|e| e.tokens)
+    }
+
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Invariant check (property tests): refcounts consistent with
+    /// free list and tables, no page both free and referenced.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut refs = vec![0u32; self.num_pages];
+        refs[SCRATCH_PAGE as usize] += 1;
+        for e in self.seqs.values() {
+            for &p in &e.pages {
+                refs[p as usize] += 1;
+            }
+            if e.pages.len() > self.max_pages_per_seq {
+                return Err("seq exceeds max pages".into());
+            }
+            if e.tokens.div_ceil(self.page_size) > e.pages.len() {
+                return Err("tokens exceed page capacity".into());
+            }
+        }
+        for &p in &self.free {
+            if refs[p as usize] != 0 {
+                return Err(format!("page {p} both free and referenced"));
+            }
+            refs[p as usize] = u32::MAX; // mark seen
+        }
+        for (p, (&rc, &computed)) in self.refcount.iter().zip(refs.iter()).enumerate() {
+            if computed == u32::MAX {
+                continue; // free page
+            }
+            if rc != computed {
+                return Err(format!("page {p} refcount {rc} != computed {computed}"));
+            }
+        }
+        let accounted = self.free.len()
+            + refs
+                .iter()
+                .filter(|&&r| r != u32::MAX && r > 0)
+                .count();
+        if accounted != self.num_pages {
+            return Err(format!(
+                "page leak: {} free + referenced != {}",
+                accounted, self.num_pages
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> PagedKvCache {
+        PagedKvCache::new(64, 16, 4)
+    }
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let mut c = cache();
+        let free0 = c.free_pages();
+        let id = c.allocate(20).unwrap(); // 2 pages
+        assert_eq!(c.free_pages(), free0 - 2);
+        assert_eq!(c.tokens(id), Some(20));
+        c.release(id).unwrap();
+        assert_eq!(c.free_pages(), free0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_allocates_on_boundary() {
+        let mut c = cache();
+        let id = c.allocate(16).unwrap(); // exactly 1 page
+        let free = c.free_pages();
+        assert_eq!(c.append_token(id).unwrap(), 2); // crosses boundary
+        assert_eq!(c.free_pages(), free - 1);
+        assert_eq!(c.append_token(id).unwrap(), 2); // within page 2
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn seq_limit_enforced() {
+        let mut c = cache();
+        assert_eq!(c.allocate(65), Err(KvError::SeqLimit)); // > 4 pages
+        let id = c.allocate(63).unwrap();
+        c.append_token(id).unwrap(); // 64 tokens: exactly 4 pages
+        assert_eq!(c.append_token(id), Err(KvError::SeqLimit));
+    }
+
+    #[test]
+    fn out_of_pages() {
+        let mut c = PagedKvCache::new(4, 16, 4); // 3 usable pages
+        let a = c.allocate(32).unwrap(); // 2 pages
+        assert_eq!(c.allocate(32), Err(KvError::OutOfPages));
+        c.release(a).unwrap();
+        assert!(c.allocate(32).is_ok());
+    }
+
+    #[test]
+    fn table_row_padded_with_scratch() {
+        let mut c = cache();
+        let id = c.allocate(17).unwrap(); // 2 pages
+        let row = c.table_row(id).unwrap();
+        assert_eq!(row.len(), 4);
+        assert!(row[0] > 0 && row[1] > 0);
+        assert_eq!(row[2], SCRATCH_PAGE);
+        assert_eq!(row[3], SCRATCH_PAGE);
+    }
+
+    #[test]
+    fn fork_shares_then_cow() {
+        let mut c = cache();
+        let a = c.allocate(16).unwrap();
+        let table_a = c.table_row(a).unwrap();
+        let b = c.fork(a).unwrap();
+        assert_eq!(c.table_row(b).unwrap(), table_a);
+        // Writing to b's last page must trigger a copy.
+        let cow = c.ensure_exclusive(b).unwrap();
+        assert!(cow.is_some());
+        let (old, fresh) = cow.unwrap();
+        assert_eq!(old as i32, table_a[0]);
+        assert_ne!(old, fresh);
+        assert_ne!(c.table_row(b).unwrap()[0], table_a[0]);
+        // a is untouched and exclusive again.
+        assert_eq!(c.ensure_exclusive(a).unwrap(), None);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_forked_pages_refcounted() {
+        let mut c = cache();
+        let free0 = c.free_pages();
+        let a = c.allocate(16).unwrap();
+        let b = c.fork(a).unwrap();
+        c.release(a).unwrap();
+        assert_eq!(c.free_pages(), free0 - 1); // page still held by b
+        c.release(b).unwrap();
+        assert_eq!(c.free_pages(), free0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn scratch_page_never_allocated() {
+        let mut c = cache();
+        let mut seen = std::collections::HashSet::new();
+        while let Ok(id) = c.allocate(64) {
+            for p in c.table_row(id).unwrap() {
+                if p != SCRATCH_PAGE {
+                    assert!(seen.insert(p), "page {p} double-allocated");
+                    assert_ne!(p, SCRATCH_PAGE);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! vLLM-style LLM serving engine (the paper's LLM case study substrate).
+//!
+//! Python never runs here: the engine drives the AOT-compiled HLO
+//! executables (prefill + paged decode, with the L1 Pallas paged-attention
+//! kernel inside) through [`crate::runtime::ModelRuntime`].
+//!
+//! Architecture mirrors vLLM:
+//! * [`kvcache`] — paged KV block manager (free list, per-sequence page
+//!   tables, refcounts for prefix sharing).
+//! * [`batcher`] — continuous batching: waiting queue admitted into fixed
+//!   batch rows as slots free up, gated by KV page availability.
+//! * [`engine`] — the prefill/decode step loop with token streaming,
+//!   TTFT/TPOT measurement and greedy/top-k sampling ([`sampler`]).
+//! * [`router`] — least-outstanding-requests routing across engine
+//!   replicas (used by the 2-node cluster runtime).
+//! * [`tokenizer`] — byte-level tokenizer matching the AOT vocab.
+
+pub mod tokenizer;
+pub mod sampler;
+pub mod kvcache;
+pub mod request;
+pub mod batcher;
+pub mod engine;
+pub mod router;
+
+pub use engine::{Engine, EngineStats};
+pub use kvcache::PagedKvCache;
+pub use request::{Completion, RequestId, ServeRequest};
+pub use router::Router;
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,59 @@
+//! Request / completion types for the serving engine.
+
+use std::time::Instant;
+
+/// Engine-unique request id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+/// Sampling parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// 0 = greedy; otherwise top-k.
+    pub top_k: usize,
+    pub seed: u64,
+    pub max_new_tokens: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            top_k: 0,
+            seed: 0,
+            max_new_tokens: 16,
+        }
+    }
+}
+
+/// A submitted request.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: RequestId,
+    pub prompt_tokens: Vec<i32>,
+    pub params: SamplingParams,
+    pub submitted: Instant,
+}
+
+/// Why a sequence finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// KV pages exhausted for this sequence (max_seq_len reached).
+    LengthLimit,
+}
+
+/// A finished request with its timings.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub generated: Vec<i32>,
+    pub finish: FinishReason,
+    /// Time to first token (seconds) — the paper's LLM SLO metric.
+    pub ttft_s: f64,
+    /// End-to-end latency (seconds).
+    pub e2e_s: f64,
+    /// Decode time per output token (seconds), excluding prefill.
+    pub tpot_s: f64,
+    pub prompt_len: usize,
+}

@@ -1,0 +1,124 @@
+//! Request router across engine replicas (vllm-project/router-style).
+//!
+//! Policies: round-robin and least-outstanding-requests (the default for
+//! latency-sensitive serving — joins the shortest queue).
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastOutstanding,
+}
+
+/// Tracks outstanding requests per replica and picks targets.
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: Policy,
+    outstanding: Vec<usize>,
+    total_routed: Vec<u64>,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(replicas: usize, policy: Policy) -> Router {
+        assert!(replicas > 0);
+        Router {
+            policy,
+            outstanding: vec![0; replicas],
+            total_routed: vec![0; replicas],
+            rr_next: 0,
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Choose a replica for the next request and account for it.
+    pub fn route(&mut self) -> usize {
+        let target = match self.policy {
+            Policy::RoundRobin => {
+                let t = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.outstanding.len();
+                t
+            }
+            Policy::LeastOutstanding => self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &o)| o)
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.outstanding[target] += 1;
+        self.total_routed[target] += 1;
+        target
+    }
+
+    /// A request completed on `replica`.
+    pub fn complete(&mut self, replica: usize) {
+        debug_assert!(self.outstanding[replica] > 0, "completion underflow");
+        self.outstanding[replica] = self.outstanding[replica].saturating_sub(1);
+    }
+
+    pub fn outstanding(&self, replica: usize) -> usize {
+        self.outstanding[replica]
+    }
+
+    pub fn total_routed(&self, replica: usize) -> u64 {
+        self.total_routed[replica]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, Policy::RoundRobin);
+        assert_eq!(r.route(), 0);
+        assert_eq!(r.route(), 1);
+        assert_eq!(r.route(), 2);
+        assert_eq!(r.route(), 0);
+    }
+
+    #[test]
+    fn least_outstanding_joins_shortest() {
+        let mut r = Router::new(2, Policy::LeastOutstanding);
+        assert_eq!(r.route(), 0);
+        assert_eq!(r.route(), 1);
+        assert_eq!(r.route(), 0); // tie → lowest index
+        r.complete(1);
+        assert_eq!(r.route(), 1);
+    }
+
+    #[test]
+    fn balances_under_uneven_completion() {
+        let mut r = Router::new(2, Policy::LeastOutstanding);
+        // Replica 0 is slow: never completes; replica 1 completes fast.
+        for _ in 0..10 {
+            let t = r.route();
+            if t == 1 {
+                r.complete(1);
+            }
+        }
+        assert!(r.total_routed(1) > r.total_routed(0));
+        assert!(r.outstanding(0) <= 2, "slow replica overloaded");
+    }
+
+    #[test]
+    fn conservation_of_outstanding() {
+        let mut r = Router::new(4, Policy::LeastOutstanding);
+        let mut live = Vec::new();
+        for _ in 0..100 {
+            live.push(r.route());
+        }
+        for &t in &live {
+            r.complete(t);
+        }
+        for i in 0..4 {
+            assert_eq!(r.outstanding(i), 0);
+        }
+    }
+}

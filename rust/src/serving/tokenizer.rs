@@ -1,0 +1,90 @@
+//! Byte-level tokenizer matching the AOT model's 288-token vocabulary.
+//!
+//! Layout: 0 = PAD, 1 = BOS, 2 = EOS, 3..=258 = raw bytes, 259.. unused
+//! (vocab rounded to 288 for MXU-friendly unembed shapes).
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const BYTE_BASE: i32 = 3;
+
+/// Stateless byte tokenizer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    /// Encode text as `[BOS, byte tokens...]`, truncated to `max_len`.
+    pub fn encode(&self, text: &str, max_len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len().min(max_len) + 1);
+        out.push(BOS);
+        for &b in text.as_bytes() {
+            if out.len() >= max_len {
+                break;
+            }
+            out.push(BYTE_BASE + b as i32);
+        }
+        out
+    }
+
+    /// Decode token ids back to text (specials skipped, non-byte ids
+    /// rendered as U+FFFD).
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(tokens.len());
+        for &t in tokens {
+            if t >= BYTE_BASE && t < BYTE_BASE + 256 {
+                bytes.push((t - BYTE_BASE) as u8);
+            } else if t == PAD || t == BOS || t == EOS {
+                continue;
+            } else {
+                bytes.extend_from_slice("\u{fffd}".as_bytes());
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        288
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let toks = t.encode("hello world", 64);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks.len(), 12);
+        assert_eq!(t.decode(&toks), "hello world");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "héllo →";
+        assert_eq!(t.decode(&t.encode(s, 64)), s);
+    }
+
+    #[test]
+    fn truncates_to_max_len() {
+        let t = ByteTokenizer;
+        let toks = t.encode("aaaaaaaaaa", 4);
+        assert_eq!(toks.len(), 4);
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[BOS, BYTE_BASE + b'x' as i32, EOS, PAD]), "x");
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let t = ByteTokenizer;
+        for tok in t.encode("\u{00ff}\u{0000}test", 64) {
+            assert!((tok as usize) < t.vocab_size());
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Discrete-event simulation engine.
+//!
+//! A deterministic event queue with stable tie-breaking and event
+//! versioning (fluid-flow completions get invalidated when the PS rate
+//! allocation changes — see [`crate::fabric`]). The testbed world that
+//! composes fabric + GPUs + tenants + controller lives in
+//! [`crate::platform::sim_platform`]; this module is only the clockwork.
+
+pub mod engine;
+
+pub use engine::{EventQueue, SimClock};

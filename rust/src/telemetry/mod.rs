@@ -1,0 +1,14 @@
+//! Telemetry: the NVML/DCGM-like monitoring domain of the controller.
+//!
+//! Every Δ seconds (§2.1) the platform produces a [`SignalSnapshot`]:
+//! per-tenant latency tails + SLO miss-rate, PCIe byte rates, SM
+//! utilization, host block-I/O and IRQ activity. The controller consumes
+//! only this struct — it never reaches into the simulator, which is what
+//! keeps it deployable against a real NVML backend (the paper's
+//! "fabric-agnostic, VM-deployable" claim).
+
+pub mod monitor;
+pub mod signals;
+
+pub use monitor::TenantMonitor;
+pub use signals::{LinkSignal, SignalSnapshot, TailStats, TenantSignal};

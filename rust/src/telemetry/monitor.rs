@@ -1,0 +1,127 @@
+//! Per-tenant latency monitor: sliding window tails + lifetime histogram.
+
+use super::signals::TailStats;
+use crate::util::histogram::Histogram;
+use crate::util::quantile::WindowQuantiles;
+
+/// Tracks one tenant's request latencies.
+///
+/// * A sliding window (Algorithm 1's `W`) drives the controller decisions.
+/// * A lifetime [`Histogram`] (microseconds) feeds the experiment reports
+///   (Table 3 columns, Figure 4 distributions).
+#[derive(Clone, Debug)]
+pub struct TenantMonitor {
+    pub slo_ms: f64,
+    window: WindowQuantiles,
+    lifetime: Histogram,
+    window_completed: u64,
+    window_started_at: f64,
+    total_completed: u64,
+    total_missed: u64,
+}
+
+impl TenantMonitor {
+    pub fn new(slo_ms: f64, window_capacity: usize) -> TenantMonitor {
+        TenantMonitor {
+            slo_ms,
+            window: WindowQuantiles::new(window_capacity),
+            lifetime: Histogram::new(),
+            window_completed: 0,
+            window_started_at: 0.0,
+            total_completed: 0,
+            total_missed: 0,
+        }
+    }
+
+    /// Record a completed request latency (ms).
+    pub fn observe(&mut self, latency_ms: f64) {
+        self.window.observe(latency_ms);
+        self.lifetime.record((latency_ms * 1000.0) as u64);
+        self.window_completed += 1;
+        self.total_completed += 1;
+        if latency_ms > self.slo_ms {
+            self.total_missed += 1;
+        }
+    }
+
+    /// Produce window tail stats and reset the per-interval counters.
+    /// `now`/`dt` give the throughput denominator.
+    pub fn sample(&mut self, now: f64) -> TailStats {
+        let dt = (now - self.window_started_at).max(1e-9);
+        let stats = TailStats {
+            p50_ms: self.window.quantile(0.50).unwrap_or(0.0),
+            p95_ms: self.window.quantile(0.95).unwrap_or(0.0),
+            p99_ms: self.window.quantile(0.99).unwrap_or(0.0),
+            p999_ms: self.window.quantile(0.999).unwrap_or(0.0),
+            miss_rate: self.window.frac_above(self.slo_ms),
+            completed: self.window_completed,
+            rps: self.window_completed as f64 / dt,
+        };
+        self.window_completed = 0;
+        self.window_started_at = now;
+        stats
+    }
+
+    /// Lifetime histogram (microseconds).
+    pub fn histogram(&self) -> &Histogram {
+        &self.lifetime
+    }
+
+    /// Lifetime SLO miss-rate (the number reported in Table 3).
+    pub fn lifetime_miss_rate(&self) -> f64 {
+        if self.total_completed == 0 {
+            return 0.0;
+        }
+        self.total_missed as f64 / self.total_completed as f64
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.total_completed
+    }
+
+    /// Lifetime p-quantile in ms.
+    pub fn lifetime_quantile_ms(&self, q: f64) -> f64 {
+        self.lifetime.quantile(q) as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_rate_counts_violations() {
+        let mut m = TenantMonitor::new(15.0, 64);
+        for _ in 0..9 {
+            m.observe(10.0);
+        }
+        m.observe(20.0);
+        assert!((m.lifetime_miss_rate() - 0.1).abs() < 1e-12);
+        let s = m.sample(1.0);
+        assert!((s.miss_rate - 0.1).abs() < 1e-12);
+        assert_eq!(s.completed, 10);
+        assert!((s.rps - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_resets_interval_counters() {
+        let mut m = TenantMonitor::new(15.0, 64);
+        m.observe(5.0);
+        m.sample(1.0);
+        let s2 = m.sample(2.0);
+        assert_eq!(s2.completed, 0);
+        assert_eq!(s2.rps, 0.0);
+        // Window quantiles persist across samples (sliding window).
+        assert!(s2.p50_ms > 0.0);
+    }
+
+    #[test]
+    fn lifetime_quantiles_in_ms() {
+        let mut m = TenantMonitor::new(15.0, 1024);
+        for i in 1..=100 {
+            m.observe(i as f64);
+        }
+        let p99 = m.lifetime_quantile_ms(0.99);
+        assert!((p99 - 99.0).abs() / 99.0 < 0.05, "p99={p99}");
+    }
+}

@@ -1,0 +1,70 @@
+//! Signal schema shared by the sim and (hypothetically) real backends.
+
+use crate::tenants::TenantId;
+use crate::topo::LinkId;
+
+/// Latency tail statistics over the current observation window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TailStats {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// Fraction of requests in the window above the SLO threshold.
+    pub miss_rate: f64,
+    /// Completed requests in the window.
+    pub completed: u64,
+    /// Throughput (requests/s) over the window.
+    pub rps: f64,
+}
+
+/// Per-tenant view.
+#[derive(Clone, Debug)]
+pub struct TenantSignal {
+    pub tenant: TenantId,
+    pub tails: TailStats,
+    /// GB/s this tenant moved over PCIe since the last sample.
+    pub pcie_gbps: f64,
+    /// GB/s of host block I/O attributable to this tenant.
+    pub block_io_gbps: f64,
+    /// Is the tenant currently active (background tenants toggle)?
+    pub active: bool,
+}
+
+/// Per shared-link view (PCIe switch uplinks + NVMe paths).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSignal {
+    pub link: LinkId,
+    /// Mean utilization since the last sample (0..1).
+    pub utilization: f64,
+    /// GB/s through the link since the last sample.
+    pub gbps: f64,
+}
+
+/// Everything the controller sees at one sampling tick (§2.1 signals).
+#[derive(Clone, Debug)]
+pub struct SignalSnapshot {
+    /// Sample time (sim seconds).
+    pub t: f64,
+    /// Sampling interval Δ that produced the rates below.
+    pub dt: f64,
+    pub tenants: Vec<TenantSignal>,
+    pub links: Vec<LinkSignal>,
+    /// SM utilization per GPU (0..1), NVML style.
+    pub gpu_sm_util: Vec<f64>,
+    /// Block-I/O rate per NUMA domain (GB/s).
+    pub numa_io_gbps: Vec<f64>,
+    /// IRQ rate per NUMA domain (interrupts/s, synthetic: scales with NIC
+    /// and storage activity).
+    pub numa_irq_rate: Vec<f64>,
+}
+
+impl SignalSnapshot {
+    pub fn tenant(&self, id: TenantId) -> Option<&TenantSignal> {
+        self.tenants.iter().find(|t| t.tenant == id)
+    }
+
+    pub fn link(&self, id: LinkId) -> Option<&LinkSignal> {
+        self.links.iter().find(|l| l.link == id)
+    }
+}

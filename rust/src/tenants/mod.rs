@@ -1,0 +1,16 @@
+//! Tenant workload generators — the paper's three co-located tenants
+//! (§3.1 Workloads) plus the interference schedule that toggles the noisy
+//! neighbors on and off.
+//!
+//! * **T1** — latency-sensitive inference (15 ms p99 SLO, batch 1, input
+//!   sizes from a realistic mixture inducing time-varying PCIe pressure).
+//! * **T2** — bandwidth-heavy ETL: NVMe → host → GPU → back, sustained
+//!   PCIe + block-I/O pressure.
+//! * **T3** — compute-heavy synthetic training: maximizes SM occupancy on
+//!   its (possibly MPS-shared) instance.
+
+pub mod spec;
+pub mod schedule;
+
+pub use schedule::{InterferenceSchedule, Phase};
+pub use spec::{T1Request, T1Spec, T2Spec, T3Spec, TenantId, TenantKind};

@@ -1,0 +1,158 @@
+//! Interference schedule: "an interference script toggles the activity of
+//! T2 and T3 to create dynamic periods of contention" (§3.1).
+//!
+//! Every configuration in a comparison runs the *identical* schedule
+//! (§3.2: "All reported comparisons use identical interference schedules
+//! across configurations"), which is why the schedule is generated ahead
+//! of time from its own RNG stream and stored as explicit phases.
+
+use crate::util::rng::Pcg64;
+
+/// A half-open activity interval `[on, off)` in sim seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Phase {
+    pub on: f64,
+    pub off: f64,
+}
+
+/// Pre-generated on/off phases for one background tenant.
+#[derive(Clone, Debug)]
+pub struct InterferenceSchedule {
+    pub phases: Vec<Phase>,
+    pub horizon: f64,
+}
+
+impl InterferenceSchedule {
+    /// Generate alternating off/on periods covering `[0, horizon)`.
+    /// `mean_off`/`mean_on` are exponential means (seconds); `min_*` floor
+    /// each period so phases are long enough for dwell/cool-down dynamics
+    /// to matter.
+    pub fn generate(
+        rng: &mut Pcg64,
+        horizon: f64,
+        mean_off: f64,
+        mean_on: f64,
+        min_period: f64,
+    ) -> InterferenceSchedule {
+        let mut phases = Vec::new();
+        let mut t = rng.exp(1.0 / mean_off).max(min_period);
+        while t < horizon {
+            let on = t;
+            let dur = rng.exp(1.0 / mean_on).max(min_period);
+            let off = (on + dur).min(horizon);
+            phases.push(Phase { on, off });
+            t = off + rng.exp(1.0 / mean_off).max(min_period);
+        }
+        InterferenceSchedule { phases, horizon }
+    }
+
+    /// Always-on over the horizon (steady contention experiments, Fig 4
+    /// "high contention").
+    pub fn always_on(horizon: f64) -> InterferenceSchedule {
+        InterferenceSchedule {
+            phases: vec![Phase {
+                on: 0.0,
+                off: horizon,
+            }],
+            horizon,
+        }
+    }
+
+    /// Never on (no-contention baseline, Fig 4 "low contention").
+    pub fn always_off(horizon: f64) -> InterferenceSchedule {
+        InterferenceSchedule {
+            phases: Vec::new(),
+            horizon,
+        }
+    }
+
+    /// Is the tenant active at time `t`?
+    pub fn active_at(&self, t: f64) -> bool {
+        self.phases.iter().any(|p| t >= p.on && t < p.off)
+    }
+
+    /// Next toggle time strictly after `t` (on or off edge), if any.
+    pub fn next_toggle_after(&self, t: f64) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for p in &self.phases {
+            for edge in [p.on, p.off] {
+                if edge > t && best.map(|b| edge < b).unwrap_or(true) {
+                    best = Some(edge);
+                }
+            }
+        }
+        best
+    }
+
+    /// Total active time within `[0, horizon)`.
+    pub fn duty_time(&self) -> f64 {
+        self.phases.iter().map(|p| p.off - p.on).sum()
+    }
+
+    /// Fraction of the horizon the tenant is active.
+    pub fn duty_cycle(&self) -> f64 {
+        if self.horizon <= 0.0 {
+            return 0.0;
+        }
+        self.duty_time() / self.horizon
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_phases_ordered_and_disjoint() {
+        let mut rng = Pcg64::seeded(51);
+        let s = InterferenceSchedule::generate(&mut rng, 3600.0, 60.0, 90.0, 10.0);
+        assert!(!s.phases.is_empty());
+        for w in s.phases.windows(2) {
+            assert!(w[0].off <= w[1].on, "phases overlap");
+        }
+        for p in &s.phases {
+            assert!(p.on < p.off);
+            assert!(p.off <= 3600.0);
+        }
+    }
+
+    #[test]
+    fn active_at_and_toggles_consistent() {
+        let s = InterferenceSchedule {
+            phases: vec![Phase { on: 10.0, off: 20.0 }, Phase { on: 30.0, off: 40.0 }],
+            horizon: 50.0,
+        };
+        assert!(!s.active_at(5.0));
+        assert!(s.active_at(10.0));
+        assert!(s.active_at(19.9));
+        assert!(!s.active_at(20.0));
+        assert_eq!(s.next_toggle_after(0.0), Some(10.0));
+        assert_eq!(s.next_toggle_after(10.0), Some(20.0));
+        assert_eq!(s.next_toggle_after(35.0), Some(40.0));
+        assert_eq!(s.next_toggle_after(40.0), None);
+    }
+
+    #[test]
+    fn duty_cycle_matches_means_roughly() {
+        let mut rng = Pcg64::seeded(52);
+        let s = InterferenceSchedule::generate(&mut rng, 100_000.0, 50.0, 50.0, 5.0);
+        let dc = s.duty_cycle();
+        assert!((dc - 0.5).abs() < 0.05, "duty cycle {dc}");
+    }
+
+    #[test]
+    fn always_on_off() {
+        assert!(InterferenceSchedule::always_on(10.0).active_at(5.0));
+        assert!(!InterferenceSchedule::always_off(10.0).active_at(5.0));
+        assert_eq!(InterferenceSchedule::always_on(10.0).duty_cycle(), 1.0);
+    }
+
+    #[test]
+    fn identical_seed_identical_schedule() {
+        let mut a = Pcg64::seeded(53);
+        let mut b = Pcg64::seeded(53);
+        let sa = InterferenceSchedule::generate(&mut a, 1000.0, 30.0, 40.0, 5.0);
+        let sb = InterferenceSchedule::generate(&mut b, 1000.0, 30.0, 40.0, 5.0);
+        assert_eq!(sa.phases, sb.phases);
+    }
+}

@@ -1,0 +1,241 @@
+//! Tenant specifications and per-request sampling.
+
+use crate::util::rng::Pcg64;
+
+/// Dense tenant index (T1 = 0, T2 = 1, T3 = 2 in the standard scenario).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub usize);
+
+pub const T1: TenantId = TenantId(0);
+pub const T2: TenantId = TenantId(1);
+pub const T3: TenantId = TenantId(2);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantKind {
+    /// T1: latency-sensitive inference.
+    LatencySensitive,
+    /// T2: bandwidth-heavy ETL.
+    BandwidthHeavy,
+    /// T3: compute-heavy training.
+    ComputeHeavy,
+}
+
+/// One T1 inference request, sampled at arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct T1Request {
+    /// Unique id.
+    pub id: u64,
+    /// Arrival time (sim seconds).
+    pub arrival: f64,
+    /// Host staging read (GB) on the tenant's NUMA NVMe path.
+    pub host_stage_gb: f64,
+    /// H2D transfer (GB) over the GPU's PCIe link.
+    pub h2d_gb: f64,
+    /// Compute work expressed as milliseconds on the μ-reference profile.
+    pub compute_ref_ms: f64,
+}
+
+/// T1 — latency-sensitive inference tenant.
+#[derive(Clone, Debug)]
+pub struct T1Spec {
+    /// Poisson arrival rate (requests/s).
+    pub arrival_rps: f64,
+    /// p99 latency SLO in ms (paper: 15 ms non-LLM, 200 ms TTFT for LLM).
+    pub slo_ms: f64,
+    /// Input-size mixture: (probability, mean GB) pairs — "input sizes are
+    /// drawn from a realistic mixture to induce time-varying PCIe
+    /// pressure" (§3.1).
+    pub size_mix: Vec<(f64, f64)>,
+    /// Compute work mean (ms at the reference profile μ(2g.20gb)).
+    pub compute_ref_ms: f64,
+    /// Lognormal sigma for compute-work jitter.
+    pub compute_sigma: f64,
+}
+
+impl Default for T1Spec {
+    fn default() -> Self {
+        T1Spec {
+            arrival_rps: 80.0,
+            slo_ms: 15.0,
+            // 70% small (20 MB), 25% medium (45 MB), 5% large (90 MB):
+            // ~0.8/1.8/3.6 ms over an idle 25 GB/s uplink, 2-3× that under
+            // PS sharing — the time-varying PCIe pressure of §3.1.
+            size_mix: vec![(0.65, 0.025), (0.28, 0.050), (0.07, 0.090)],
+            compute_ref_ms: 4.2,
+            compute_sigma: 0.18,
+        }
+    }
+}
+
+impl T1Spec {
+    /// Sample the next inter-arrival gap (s).
+    pub fn next_gap(&self, rng: &mut Pcg64) -> f64 {
+        rng.exp(self.arrival_rps)
+    }
+
+    /// Sample one request's demands.
+    pub fn sample(&self, rng: &mut Pcg64, id: u64, arrival: f64) -> T1Request {
+        let mut u = rng.f64();
+        let mut gb = self.size_mix.last().map(|&(_, m)| m).unwrap_or(0.05);
+        for &(p, mean) in &self.size_mix {
+            if u < p {
+                gb = mean;
+                break;
+            }
+            u -= p;
+        }
+        // Small lognormal spread around the component mean.
+        let gb = gb * rng.lognormal(0.0, 0.15);
+        let compute =
+            self.compute_ref_ms * rng.lognormal(0.0, self.compute_sigma);
+        T1Request {
+            id,
+            arrival,
+            host_stage_gb: gb * 0.3, // staging reads a compressed shard
+            h2d_gb: gb,
+            compute_ref_ms: compute,
+        }
+    }
+}
+
+/// T2 — bandwidth-heavy ETL tenant. Runs an endless cycle of
+/// read(NVMe) → H2D → GPU transform → D2H while toggled active.
+#[derive(Clone, Debug)]
+pub struct T2Spec {
+    /// NVMe shard read per cycle (GB).
+    pub read_gb: f64,
+    /// H2D payload per cycle (GB).
+    pub h2d_gb: f64,
+    /// D2H result per cycle (GB).
+    pub d2h_gb: f64,
+    /// GPU transform duration per cycle (ms, on its own instance).
+    pub transform_ms: f64,
+    /// Pareto shape for cycle-size burstiness.
+    pub burst_alpha: f64,
+}
+
+impl Default for T2Spec {
+    fn default() -> Self {
+        T2Spec {
+            read_gb: 1.5,
+            h2d_gb: 1.0,
+            d2h_gb: 0.5,
+            transform_ms: 30.0,
+            burst_alpha: 2.2,
+        }
+    }
+}
+
+impl T2Spec {
+    /// Sample one ETL cycle: (read_gb, h2d_gb, d2h_gb, transform_s).
+    pub fn sample_cycle(&self, rng: &mut Pcg64) -> (f64, f64, f64, f64) {
+        // Pareto burstiness with mean 1: alpha/(alpha-1) normalizer.
+        let norm = self.burst_alpha / (self.burst_alpha - 1.0);
+        let scale = rng.pareto(1.0, self.burst_alpha) / norm;
+        (
+            self.read_gb * scale,
+            self.h2d_gb * scale,
+            self.d2h_gb * scale,
+            self.transform_ms / 1000.0,
+        )
+    }
+}
+
+/// T3 — compute-heavy training tenant. Endless steps of SM-saturating
+/// kernels plus a small gradient sync transfer.
+#[derive(Clone, Debug)]
+pub struct T3Spec {
+    /// Step duration (ms) on its slice.
+    pub step_ms: f64,
+    /// Gradient sync payload per step (GB) over PCIe.
+    pub sync_gb: f64,
+    /// MPS active-thread percentage currently granted (the guardrail
+    /// tightens this; 100 = unconstrained).
+    pub mps_quota: f64,
+    /// SM-contention coefficient β: a co-scheduled (MPS-shared) T1 sees
+    /// compute inflated by `1 + β·(quota/100)` while T3 is active.
+    pub contention_beta: f64,
+}
+
+impl Default for T3Spec {
+    fn default() -> Self {
+        T3Spec {
+            step_ms: 120.0,
+            sync_gb: 0.10,
+            mps_quota: 100.0,
+            contention_beta: 1.6,
+        }
+    }
+}
+
+impl T3Spec {
+    /// Compute-time inflation factor T1 suffers when sharing an instance
+    /// with an active T3 under MPS.
+    pub fn contention_factor(&self) -> f64 {
+        1.0 + self.contention_beta * (self.mps_quota / 100.0)
+    }
+
+    /// Sample one training step: (step_s, sync_gb).
+    pub fn sample_step(&self, rng: &mut Pcg64) -> (f64, f64) {
+        let jitter = rng.lognormal(0.0, 0.05);
+        (self.step_ms / 1000.0 * jitter, self.sync_gb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t1_size_mixture_probabilities() {
+        let spec = T1Spec::default();
+        let mut rng = Pcg64::seeded(41);
+        let mut small = 0;
+        let n = 50_000;
+        for i in 0..n {
+            let r = spec.sample(&mut rng, i, 0.0);
+            assert!(r.h2d_gb > 0.0 && r.compute_ref_ms > 0.0);
+            if r.h2d_gb < 0.045 {
+                small += 1;
+            }
+        }
+        let frac = small as f64 / n as f64;
+        assert!((frac - 0.70).abs() < 0.05, "small fraction {frac}");
+    }
+
+    #[test]
+    fn t1_arrival_rate_mean() {
+        let spec = T1Spec::default();
+        let mut rng = Pcg64::seeded(42);
+        let n = 100_000;
+        let total: f64 = (0..n).map(|_| spec.next_gap(&mut rng)).sum();
+        let rate = n as f64 / total;
+        assert!((rate - spec.arrival_rps).abs() / spec.arrival_rps < 0.02);
+    }
+
+    #[test]
+    fn t2_cycle_means_close_to_spec() {
+        let spec = T2Spec::default();
+        let mut rng = Pcg64::seeded(43);
+        let n = 200_000;
+        let mut sum_read = 0.0;
+        for _ in 0..n {
+            sum_read += spec.sample_cycle(&mut rng).0;
+        }
+        let mean = sum_read / n as f64;
+        assert!(
+            (mean - spec.read_gb).abs() / spec.read_gb < 0.05,
+            "mean read {mean}"
+        );
+    }
+
+    #[test]
+    fn t3_contention_scales_with_quota() {
+        let mut spec = T3Spec::default();
+        let full = spec.contention_factor();
+        spec.mps_quota = 50.0;
+        let capped = spec.contention_factor();
+        assert!(capped < full);
+        assert!((capped - (1.0 + 1.6 * 0.5)).abs() < 1e-12);
+    }
+}

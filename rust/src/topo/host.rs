@@ -1,0 +1,180 @@
+//! Full-host topology: NUMA domains, PCIe switches, GPUs, NVMe links.
+
+use super::pcie::{LinkId, PcieSwitch, SwitchId};
+
+pub type NumaNodeId = usize;
+
+/// One NUMA domain: CPU cores + a local NVMe I/O path.
+#[derive(Clone, Debug)]
+pub struct NumaNode {
+    pub id: NumaNodeId,
+    pub cores: std::ops::Range<usize>,
+    /// Shared-bandwidth domain for local NVMe/storage traffic.
+    pub nvme_link: LinkId,
+    /// NVMe aggregate bandwidth in GB/s.
+    pub nvme_gbps: f64,
+}
+
+/// Immutable host topology (what `lspci` + NUMA maps would report).
+#[derive(Clone, Debug)]
+pub struct HostTopology {
+    pub numa_nodes: Vec<NumaNode>,
+    pub switches: Vec<PcieSwitch>,
+    pub num_gpus: usize,
+    /// Total number of shared-bandwidth domains (PCIe links + NVMe links).
+    pub num_links: usize,
+}
+
+impl HostTopology {
+    /// The paper's testbed node: 8 GPUs, 4 PCIe switches (2 GPUs each),
+    /// 2 NUMA domains (2 switches each), PCIe Gen4 x16 upstream links
+    /// (~25 GB/s usable), NVMe ~8 GB/s per domain, 48 physical cores.
+    pub fn p4d() -> HostTopology {
+        let mut switches = Vec::new();
+        for s in 0..4 {
+            switches.push(PcieSwitch {
+                id: SwitchId(s),
+                numa: s / 2,
+                link: LinkId(s),
+                gpus: vec![s * 2, s * 2 + 1],
+                bandwidth_gbps: 25.0,
+            });
+        }
+        let numa_nodes = vec![
+            NumaNode {
+                id: 0,
+                cores: 0..24,
+                nvme_link: LinkId(4),
+                nvme_gbps: 8.0,
+            },
+            NumaNode {
+                id: 1,
+                cores: 24..48,
+                nvme_link: LinkId(5),
+                nvme_gbps: 8.0,
+            },
+        ];
+        HostTopology {
+            numa_nodes,
+            switches,
+            num_gpus: 8,
+            num_links: 6,
+        }
+    }
+
+    /// A single-GPU development host (unit tests / quickstart).
+    pub fn single_gpu() -> HostTopology {
+        HostTopology {
+            numa_nodes: vec![NumaNode {
+                id: 0,
+                cores: 0..8,
+                nvme_link: LinkId(1),
+                nvme_gbps: 8.0,
+            }],
+            switches: vec![PcieSwitch {
+                id: SwitchId(0),
+                numa: 0,
+                link: LinkId(0),
+                gpus: vec![0],
+                bandwidth_gbps: 25.0,
+            }],
+            num_gpus: 1,
+            num_links: 2,
+        }
+    }
+
+    /// Switch hosting a GPU.
+    pub fn switch_of_gpu(&self, gpu: usize) -> &PcieSwitch {
+        self.switches
+            .iter()
+            .find(|s| s.hosts_gpu(gpu))
+            .expect("gpu not attached to any switch")
+    }
+
+    /// PCIe upstream link for a GPU.
+    pub fn link_of_gpu(&self, gpu: usize) -> LinkId {
+        self.switch_of_gpu(gpu).link
+    }
+
+    /// NUMA domain of a GPU (via its switch).
+    pub fn numa_of_gpu(&self, gpu: usize) -> NumaNodeId {
+        self.switch_of_gpu(gpu).numa
+    }
+
+    /// Do two GPUs share a PCIe switch (and hence host-link bandwidth)?
+    pub fn share_switch(&self, a: usize, b: usize) -> bool {
+        self.switch_of_gpu(a).id == self.switch_of_gpu(b).id
+    }
+
+    /// Link capacity in GB/s.
+    pub fn link_capacity(&self, link: LinkId) -> f64 {
+        for s in &self.switches {
+            if s.link == link {
+                return s.bandwidth_gbps;
+            }
+        }
+        for n in &self.numa_nodes {
+            if n.nvme_link == link {
+                return n.nvme_gbps;
+            }
+        }
+        panic!("unknown link {link:?}");
+    }
+
+    /// GPUs reachable from a NUMA domain without crossing sockets.
+    pub fn gpus_in_numa(&self, numa: NumaNodeId) -> Vec<usize> {
+        self.switches
+            .iter()
+            .filter(|s| s.numa == numa)
+            .flat_map(|s| s.gpus.iter().copied())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p4d_shape() {
+        let t = HostTopology::p4d();
+        assert_eq!(t.num_gpus, 8);
+        assert_eq!(t.switches.len(), 4);
+        assert_eq!(t.numa_nodes.len(), 2);
+        // Every GPU is attached exactly once.
+        for g in 0..8 {
+            assert_eq!(t.switches.iter().filter(|s| s.hosts_gpu(g)).count(), 1);
+        }
+    }
+
+    #[test]
+    fn switch_sharing() {
+        let t = HostTopology::p4d();
+        assert!(t.share_switch(0, 1));
+        assert!(!t.share_switch(1, 2));
+        assert_eq!(t.numa_of_gpu(0), 0);
+        assert_eq!(t.numa_of_gpu(7), 1);
+    }
+
+    #[test]
+    fn numa_gpu_partition() {
+        let t = HostTopology::p4d();
+        let n0 = t.gpus_in_numa(0);
+        let n1 = t.gpus_in_numa(1);
+        assert_eq!(n0, vec![0, 1, 2, 3]);
+        assert_eq!(n1, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn link_capacities() {
+        let t = HostTopology::p4d();
+        assert_eq!(t.link_capacity(LinkId(0)), 25.0);
+        assert_eq!(t.link_capacity(LinkId(4)), 8.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_link_panics() {
+        HostTopology::p4d().link_capacity(LinkId(99));
+    }
+}

@@ -1,0 +1,12 @@
+//! Host / PCIe / NUMA topology model.
+//!
+//! Mirrors the paper's testbed: AWS `p4d.24xlarge` — 8× A100 per node,
+//! GPUs paired behind PCIe switches, two NUMA domains, NVMe storage per
+//! domain. The controller's placement heuristic (§2.2.1) queries this
+//! model the way the real controller queries DCGM/NVML/`lspci`/NUMA maps.
+
+pub mod pcie;
+pub mod host;
+
+pub use host::{HostTopology, NumaNodeId};
+pub use pcie::{LinkId, PcieSwitch, SwitchId};

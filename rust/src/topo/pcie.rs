@@ -1,0 +1,55 @@
+//! PCIe tree: root complexes / switches and the shared links beneath them.
+//!
+//! The paper's key observation (after [7], Tang et al. HPC Asia '25) is
+//! that MIG isolates compute+HBM but *not* the PCIe path: instances on
+//! GPUs behind the same switch share host link bandwidth. Each
+//! [`PcieSwitch`] therefore maps to one processor-sharing server in
+//! [`crate::fabric`].
+
+/// Identifies a PCIe switch / root-complex segment on a host.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SwitchId(pub usize);
+
+/// Identifies a shared bandwidth domain (fabric server). Each switch owns
+/// one upstream link; NUMA-local NVMe I/O paths get their own links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LinkId(pub usize);
+
+/// A PCIe switch with its upstream (host) link.
+#[derive(Clone, Debug)]
+pub struct PcieSwitch {
+    pub id: SwitchId,
+    /// NUMA domain whose root complex this switch hangs off.
+    pub numa: usize,
+    /// Upstream shared-bandwidth domain.
+    pub link: LinkId,
+    /// GPUs attached below this switch (indices into the host GPU list).
+    pub gpus: Vec<usize>,
+    /// Upstream link capacity in GB/s (PCIe Gen4 x16 ≈ 25 GB/s usable govern
+    /// the A100 testbed; shared by both GPUs under the switch).
+    pub bandwidth_gbps: f64,
+}
+
+impl PcieSwitch {
+    pub fn hosts_gpu(&self, gpu: usize) -> bool {
+        self.gpus.contains(&gpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switch_gpu_lookup() {
+        let s = PcieSwitch {
+            id: SwitchId(0),
+            numa: 0,
+            link: LinkId(0),
+            gpus: vec![0, 1],
+            bandwidth_gbps: 25.0,
+        };
+        assert!(s.hosts_gpu(1));
+        assert!(!s.hosts_gpu(2));
+    }
+}

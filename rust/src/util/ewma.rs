@@ -1,0 +1,197 @@
+//! Exponential moving averages + hysteresis bands.
+//!
+//! §2 of the paper: "Signals are smoothed with exponential moving averages
+//! and hysteresis to reduce spurious triggers." These are the exact
+//! primitives the controller's monitoring domain uses.
+
+/// Exponentially-weighted moving average with configurable smoothing factor.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of range: {alpha}");
+        Ewma { alpha, value: None }
+    }
+
+    /// EWMA whose step response reaches ~63% after `n` observations
+    /// (alpha = 2/(n+1), the usual span parameterization).
+    pub fn with_span(n: usize) -> Self {
+        Self::new(2.0 / (n as f64 + 1.0))
+    }
+
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn value_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Two-threshold hysteresis: asserts when the smoothed signal crosses
+/// `high`, deasserts only after it falls below `low` (< high). Prevents the
+/// trigger from chattering when the tail hovers around τ.
+#[derive(Clone, Debug)]
+pub struct Hysteresis {
+    low: f64,
+    high: f64,
+    active: bool,
+}
+
+impl Hysteresis {
+    pub fn new(low: f64, high: f64) -> Self {
+        assert!(low <= high, "hysteresis band inverted: {low} > {high}");
+        Hysteresis {
+            low,
+            high,
+            active: false,
+        }
+    }
+
+    /// Symmetric band around a threshold: `threshold*(1±margin_frac)`.
+    pub fn around(threshold: f64, margin_frac: f64) -> Self {
+        Self::new(threshold * (1.0 - margin_frac), threshold * (1.0 + margin_frac))
+    }
+
+    /// Update with a new (already smoothed) observation.
+    pub fn observe(&mut self, x: f64) -> bool {
+        if self.active {
+            if x < self.low {
+                self.active = false;
+            }
+        } else if x > self.high {
+            self.active = true;
+        }
+        self.active
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+}
+
+/// Counts consecutive observations above a threshold — the paper's
+/// "p99 > τ for Y consecutive windows" persistence condition.
+#[derive(Clone, Debug)]
+pub struct Persistence {
+    threshold: f64,
+    required: u32,
+    streak: u32,
+}
+
+impl Persistence {
+    pub fn new(threshold: f64, required: u32) -> Self {
+        Persistence {
+            threshold,
+            required,
+            streak: 0,
+        }
+    }
+
+    /// Returns true when the condition has held for >= `required`
+    /// consecutive observations.
+    pub fn observe(&mut self, x: f64) -> bool {
+        if x > self.threshold {
+            self.streak = self.streak.saturating_add(1);
+        } else {
+            self.streak = 0;
+        }
+        self.streak >= self.required
+    }
+
+    pub fn streak(&self) -> u32 {
+        self.streak
+    }
+
+    pub fn reset(&mut self) {
+        self.streak = 0;
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    pub fn set_threshold(&mut self, t: f64) {
+        self.threshold = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_observation_passthrough() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.observe(10.0), 10.0);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..64 {
+            e.observe(3.0);
+        }
+        assert!((e.value().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_span_weighting() {
+        // span=1 => alpha=1 => tracks input exactly.
+        let mut e = Ewma::with_span(1);
+        e.observe(1.0);
+        assert_eq!(e.observe(9.0), 9.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ewma_rejects_zero_alpha() {
+        Ewma::new(0.0);
+    }
+
+    #[test]
+    fn hysteresis_latches() {
+        let mut h = Hysteresis::new(10.0, 20.0);
+        assert!(!h.observe(15.0)); // below high: stays off
+        assert!(h.observe(25.0)); // crosses high: on
+        assert!(h.observe(15.0)); // inside band: stays on
+        assert!(!h.observe(5.0)); // below low: off
+    }
+
+    #[test]
+    fn hysteresis_around_builds_band() {
+        let mut h = Hysteresis::around(100.0, 0.1);
+        assert!(h.observe(111.0));
+        assert!(h.observe(95.0)); // still >= 90
+        assert!(!h.observe(89.0));
+    }
+
+    #[test]
+    fn persistence_requires_consecutive() {
+        let mut p = Persistence::new(15.0, 3);
+        assert!(!p.observe(16.0));
+        assert!(!p.observe(16.0));
+        assert!(p.observe(16.0));
+        p.observe(14.0); // resets
+        assert_eq!(p.streak(), 0);
+        assert!(!p.observe(16.0));
+    }
+}

@@ -1,0 +1,267 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, base-2 sub-bucketed).
+//!
+//! Used for the full latency distributions behind Figure 4 and for the
+//! p95/p99/p999 columns of the result tables. Values are recorded in
+//! microseconds (u64); relative quantile error is bounded by the
+//! sub-bucket resolution (1/32 ≈ 3%, plenty for the paper's tables which
+//! report 0.1 ms granularity).
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per octave => <= ~3.1% rel. error
+const SUB: usize = 1 << SUB_BITS;
+
+/// Fixed-footprint log-linear histogram over u64 values.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 64 octaves x 32 sub-buckets covers the full u64 range.
+        Histogram {
+            counts: vec![0; 64 * SUB],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        if value < SUB as u64 {
+            return value as usize;
+        }
+        let msb = 63 - value.leading_zeros();
+        let shift = msb - SUB_BITS;
+        let sub = (value >> shift) as usize & (SUB - 1);
+        ((shift + 1) as usize) * SUB + sub
+    }
+
+    /// Lower edge of bucket `i` (representative value reported for
+    /// quantiles: midpoint of the bucket).
+    fn bucket_mid(i: usize) -> u64 {
+        let octave = i / SUB;
+        let sub = (i % SUB) as u64;
+        if octave == 0 {
+            return sub;
+        }
+        let shift = (octave - 1) as u32;
+        let lo = ((SUB as u64) + sub) << shift;
+        let width = 1u64 << shift;
+        lo + width / 2
+    }
+
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::index(value)] += 1;
+        self.total += 1;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+        self.sum += value as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Nearest-rank quantile, `q` in [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fraction of recorded values strictly greater than `threshold` —
+    /// computed from bucket edges (values inside the threshold's bucket
+    /// are resolved conservatively by midpoint).
+    pub fn frac_above(&self, threshold: u64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let t_idx = Self::index(threshold);
+        let mut above = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if i > t_idx {
+                above += c;
+            } else if i == t_idx && Self::bucket_mid(i) > threshold {
+                above += c;
+            }
+        }
+        above as f64 / self.total as f64
+    }
+
+    /// Merge another histogram into this one (per-repeat aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+        self.sum = 0;
+    }
+
+    /// Export non-empty buckets as (bucket_mid, count) — the series behind
+    /// the Figure 4 distribution plot.
+    pub fn series(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::bucket_mid(i), c))
+            .collect()
+    }
+
+    /// CCDF points (value, P(X > value)) for tail plots.
+    pub fn ccdf(&self) -> Vec<(u64, f64)> {
+        let mut out = Vec::new();
+        let mut above = self.total;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                above -= c;
+                out.push((Self::bucket_mid(i), above as f64 / self.total as f64));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn index_monotone_nonoverlapping() {
+        let mut last = 0usize;
+        for v in [0u64, 1, 31, 32, 33, 63, 64, 100, 1000, 1 << 20, u64::MAX / 2] {
+            let i = Histogram::index(v);
+            assert!(i >= last, "index not monotone at {v}");
+            last = i;
+        }
+    }
+
+    #[test]
+    fn quantile_within_relative_error() {
+        let mut rng = Pcg64::seeded(21);
+        let mut h = Histogram::new();
+        let mut xs = Vec::new();
+        for _ in 0..100_000 {
+            let x = (rng.lognormal(9.0, 0.7)) as u64; // ~8ms scale in us
+            h.record(x);
+            xs.push(x);
+        }
+        xs.sort_unstable();
+        for q in [0.5, 0.95, 0.99, 0.999] {
+            let exact = xs[((q * xs.len() as f64) as usize).min(xs.len() - 1)] as f64;
+            let est = h.quantile(q) as f64;
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.05, "q={q} exact={exact} est={est} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn mean_min_max_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 30);
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(5);
+        b.record(500);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 5);
+        assert_eq!(a.max(), 500);
+    }
+
+    #[test]
+    fn frac_above_boundaries() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        assert_eq!(h.frac_above(0), 1.0);
+        assert_eq!(h.frac_above(u64::MAX / 2), 0.0);
+        let f = h.frac_above(25);
+        assert!((f - 0.5).abs() < 0.26, "f={f}"); // bucket-resolution bound
+    }
+
+    #[test]
+    fn ccdf_is_monotone_decreasing() {
+        let mut rng = Pcg64::seeded(22);
+        let mut h = Histogram::new();
+        for _ in 0..10_000 {
+            h.record(rng.below(100_000));
+        }
+        let ccdf = h.ccdf();
+        for w in ccdf.windows(2) {
+            assert!(w[1].1 <= w[0].1);
+        }
+        assert!((ccdf.last().unwrap().1 - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.frac_above(10), 0.0);
+    }
+}

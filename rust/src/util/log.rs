@@ -1,0 +1,133 @@
+//! Structured event logging with levels and an in-memory sink for tests.
+//!
+//! §2.4: "We gate actions behind feature flags, log all decisions with
+//! signal snapshots for audit". The controller's audit trail
+//! (controller::audit) is built on this logger; stderr output is gated by
+//! `PREDSERVE_LOG` (error|warn|info|debug|trace).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+static CAPTURE: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+
+fn max_level() -> u8 {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    if v != 255 {
+        return v;
+    }
+    let lvl = std::env::var("PREDSERVE_LOG")
+        .map(|s| Level::from_env(&s))
+        .unwrap_or(Level::Warn) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the level programmatically (CLI `--log-level`).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Route log lines into an in-memory buffer (tests assert on decisions).
+pub fn capture() {
+    CAPTURE.get_or_init(|| Mutex::new(Vec::new()));
+}
+
+/// Drain captured lines.
+pub fn drain_captured() -> Vec<String> {
+    CAPTURE
+        .get()
+        .map(|m| std::mem::take(&mut *m.lock().unwrap()))
+        .unwrap_or_default()
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+pub fn log(level: Level, module: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let line = format!("[{}] {}: {}", level.as_str(), module, msg);
+    if let Some(buf) = CAPTURE.get() {
+        buf.lock().unwrap().push(line);
+    } else {
+        eprintln!("{line}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $module, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $module, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $module, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::from_env("DEBUG"), Level::Debug);
+        assert_eq!(Level::from_env("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn capture_collects_lines() {
+        capture();
+        set_level(Level::Info);
+        log(Level::Info, "test", "hello");
+        log(Level::Trace, "test", "filtered");
+        let lines = drain_captured();
+        assert!(lines.iter().any(|l| l.contains("hello")));
+        assert!(!lines.iter().any(|l| l.contains("filtered")));
+    }
+}

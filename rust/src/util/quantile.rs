@@ -1,0 +1,302 @@
+//! Streaming tail-quantile estimation.
+//!
+//! The controller samples per-tenant p95/p99/p999 every Δ seconds (§2.1).
+//! Two estimators are provided:
+//!
+//! * [`P2Quantile`] — the P² algorithm (Jain & Chlamtac 1985): O(1) memory,
+//!   O(1) update; used on the controller hot path.
+//! * [`WindowQuantiles`] — exact quantiles over a sliding window of the
+//!   last N observations; used where the window semantics of Algorithm 1
+//!   ("quantile(W, 0.99)") must be exact, and as the oracle the P² tests
+//!   compare against.
+
+/// P² single-quantile estimator with five markers.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    p: f64,
+    // Marker heights and positions (1-based as in the paper).
+    q: [f64; 5],
+    n: [f64; 5],
+    np: [f64; 5],
+    dn: [f64; 5],
+    count: usize,
+    init: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0);
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            init: [0.0; 5],
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if self.count < 5 {
+            self.init[self.count] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.init.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                self.q = self.init;
+            }
+            return;
+        }
+        self.count += 1;
+
+        // Find cell k such that q[k] <= x < q[k+1]; adjust extremes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if x >= self.q[i] && x < self.q[i + 1] {
+                    k = i;
+                    break;
+                }
+            }
+            k
+        };
+
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+
+        // Adjust interior markers with parabolic (falling back to linear)
+        // interpolation.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let ds = d.signum();
+                let qp = self.parabolic(i, ds);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, ds)
+                };
+                self.n[i] += ds;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (qm, q0, qp) = (self.q[i - 1], self.q[i], self.q[i + 1]);
+        let (nm, n0, np) = (self.n[i - 1], self.n[i], self.n[i + 1]);
+        q0 + d / (np - nm)
+            * ((n0 - nm + d) * (qp - q0) / (np - n0) + (np - n0 - d) * (q0 - qm) / (n0 - nm))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = (i as f64 + d) as usize;
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate; for < 5 observations falls back to the exact
+    /// order statistic over what we have.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.count < 5 {
+            let mut v = self.init[..self.count].to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = ((self.p * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
+            return v[idx];
+        }
+        self.q[2]
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+/// Exact quantiles over a fixed-capacity sliding window (ring buffer).
+///
+/// `quantile()` sorts a scratch copy — O(N log N) per query, fine at the
+/// controller's 1-5 s sampling cadence with windows of a few thousand.
+#[derive(Clone, Debug)]
+pub struct WindowQuantiles {
+    buf: Vec<f64>,
+    head: usize,
+    full: bool,
+    scratch: Vec<f64>,
+}
+
+impl WindowQuantiles {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        WindowQuantiles {
+            buf: Vec::with_capacity(capacity),
+            head: 0,
+            full: false,
+            scratch: Vec::with_capacity(capacity),
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if self.full {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.buf.capacity();
+        } else {
+            self.buf.push(x);
+            if self.buf.len() == self.buf.capacity() {
+                self.full = true;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.full = false;
+    }
+
+    /// Exact q-quantile (nearest-rank, matching `quantile(W, q)` in
+    /// Algorithm 1). Returns None if the window is empty.
+    ///
+    /// Uses `select_nth_unstable` (introselect, O(n)) instead of a full
+    /// sort — the telemetry sampler queries four quantiles per tick, and
+    /// this cut the whole-run simulation wall time ~8% (EXPERIMENTS.md
+    /// §Perf).
+    pub fn quantile(&mut self, q: f64) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.buf);
+        let n = self.scratch.len();
+        let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+        let (_, v, _) = self
+            .scratch
+            .select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        Some(*v)
+    }
+
+    /// Fraction of window observations strictly above `threshold` — the
+    /// empirical SLO miss-rate over the window.
+    pub fn frac_above(&self, threshold: f64) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().filter(|&&x| x > threshold).count() as f64 / self.buf.len() as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn p2_matches_exact_on_uniform() {
+        let mut rng = Pcg64::seeded(11);
+        let mut p2 = P2Quantile::new(0.99);
+        let mut xs = Vec::new();
+        for _ in 0..50_000 {
+            let x = rng.f64();
+            p2.observe(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let exact = xs[(0.99 * xs.len() as f64) as usize];
+        assert!(
+            (p2.value() - exact).abs() < 0.01,
+            "p2={} exact={}",
+            p2.value(),
+            exact
+        );
+    }
+
+    #[test]
+    fn p2_matches_exact_on_lognormal_tail() {
+        let mut rng = Pcg64::seeded(12);
+        let mut p2 = P2Quantile::new(0.99);
+        let mut xs = Vec::new();
+        for _ in 0..100_000 {
+            let x = rng.lognormal(2.0, 0.5);
+            p2.observe(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let exact = xs[(0.99 * xs.len() as f64) as usize];
+        let rel = (p2.value() - exact).abs() / exact;
+        assert!(rel < 0.05, "p2={} exact={} rel={}", p2.value(), exact, rel);
+    }
+
+    #[test]
+    fn p2_few_observations_fallback() {
+        let mut p2 = P2Quantile::new(0.5);
+        p2.observe(3.0);
+        p2.observe(1.0);
+        p2.observe(2.0);
+        assert_eq!(p2.value(), 2.0);
+    }
+
+    #[test]
+    fn window_exact_quantile() {
+        let mut w = WindowQuantiles::new(100);
+        for i in 1..=100 {
+            w.observe(i as f64);
+        }
+        assert_eq!(w.quantile(0.5), Some(50.0));
+        assert_eq!(w.quantile(0.99), Some(99.0));
+        assert_eq!(w.quantile(1.0), Some(100.0));
+    }
+
+    #[test]
+    fn window_evicts_oldest() {
+        let mut w = WindowQuantiles::new(3);
+        for x in [1.0, 2.0, 3.0, 100.0] {
+            w.observe(x);
+        }
+        // Window now holds {2, 3, 100}.
+        assert_eq!(w.quantile(0.5), Some(3.0));
+        assert_eq!(w.len(), 3);
+    }
+
+    #[test]
+    fn window_frac_above() {
+        let mut w = WindowQuantiles::new(10);
+        for x in [10.0, 20.0, 30.0, 40.0] {
+            w.observe(x);
+        }
+        assert!((w.frac_above(25.0) - 0.5).abs() < 1e-12);
+        assert_eq!(w.frac_above(100.0), 0.0);
+    }
+
+    #[test]
+    fn window_empty_returns_none() {
+        let mut w = WindowQuantiles::new(4);
+        assert_eq!(w.quantile(0.99), None);
+    }
+}

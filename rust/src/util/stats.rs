@@ -1,0 +1,176 @@
+//! Summary statistics across repeated runs: mean ± 95% confidence interval.
+//!
+//! §3.1: "Experiments were repeated 7 times with fixed seeds; we report
+//! means with 95% confidence intervals." The CI uses the Student-t
+//! critical value for small n (7 repeats ⇒ 6 dof ⇒ t = 2.447).
+
+/// Mean, standard deviation and 95% CI half-width over a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    /// Half-width of the 95% confidence interval of the mean.
+    pub ci95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let n = xs.len();
+        if n == 0 {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                ci95: 0.0,
+            };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        if n == 1 {
+            return Summary {
+                n,
+                mean,
+                std: 0.0,
+                ci95: 0.0,
+            };
+        }
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0);
+        let std = var.sqrt();
+        let se = std / (n as f64).sqrt();
+        Summary {
+            n,
+            mean,
+            std,
+            ci95: t_crit_95(n - 1) * se,
+        }
+    }
+
+    /// Format as `mean ± ci` with the given precision, e.g. `16.5 ± 0.7`.
+    pub fn fmt(&self, decimals: usize) -> String {
+        format!(
+            "{:.d$} ± {:.d$}",
+            self.mean,
+            self.ci95,
+            d = decimals
+        )
+    }
+}
+
+/// Two-sided 95% Student-t critical value for `dof` degrees of freedom.
+/// Table through 30 dof, then the normal approximation.
+pub fn t_crit_95(dof: usize) -> f64 {
+    const TABLE: [f64; 31] = [
+        f64::NAN,
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if dof == 0 {
+        return f64::NAN;
+    }
+    if dof <= 30 {
+        TABLE[dof]
+    } else {
+        1.960
+    }
+}
+
+/// Welford online mean/variance — used by telemetry counters that cannot
+/// buffer samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn observe(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n as f64 - 1.0)
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        // t(2 dof) = 4.303, se = 1/sqrt(3)
+        assert!((s.ci95 - 4.303 / 3f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_seven_repeats_uses_t6() {
+        let xs = [10.0, 11.0, 9.0, 10.5, 9.5, 10.2, 9.8];
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 7);
+        let mean = xs.iter().sum::<f64>() / 7.0;
+        assert!((s.mean - mean).abs() < 1e-12);
+        assert!(s.ci95 > 0.0);
+    }
+
+    #[test]
+    fn summary_degenerate() {
+        assert_eq!(Summary::of(&[]).n, 0);
+        let one = Summary::of(&[5.0]);
+        assert_eq!(one.mean, 5.0);
+        assert_eq!(one.ci95, 0.0);
+    }
+
+    #[test]
+    fn fmt_matches_paper_style() {
+        let s = Summary {
+            n: 7,
+            mean: 16.5,
+            std: 0.0,
+            ci95: 0.7,
+        };
+        assert_eq!(s.fmt(1), "16.5 ± 0.7");
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.observe(x);
+        }
+        let s = Summary::of(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-12);
+        assert!((w.std() - s.std).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_crit_monotone_decreasing() {
+        assert!(t_crit_95(1) > t_crit_95(6));
+        assert!(t_crit_95(6) > t_crit_95(30));
+        assert!((t_crit_95(100) - 1.96).abs() < 1e-9);
+    }
+}

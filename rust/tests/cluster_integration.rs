@@ -1,0 +1,48 @@
+//! Cluster integration: leader/worker over real TCP sockets (E9).
+
+use predserve::cluster::{Leader, Msg};
+use predserve::cluster::worker::Worker;
+
+#[test]
+fn two_node_cluster_static_vs_full() {
+    let stat = Leader::run_cluster(2, 31, "static", 240.0, "single").unwrap();
+    let full = Leader::run_cluster(2, 31, "full", 240.0, "single").unwrap();
+    assert_eq!(stat.per_node.len(), 2);
+    assert_eq!(full.per_node.len(), 2);
+    assert!(
+        full.mean_p99_ms < stat.mean_p99_ms,
+        "cluster: full {} !< static {}",
+        full.mean_p99_ms,
+        stat.mean_p99_ms
+    );
+    // 16 simulated GPUs worth of workers completed work.
+    assert!(full.total_completed > 30_000);
+}
+
+#[test]
+fn worker_runs_llm_workload() {
+    let w = Worker::new("llm-node");
+    match w.run_scenario(5, "full", 120.0, "llm") {
+        Msg::RunDone { p99_ms, completed, .. } => {
+            assert!(completed > 300); // 4 rps LLM workload x 120 s
+            assert!(p99_ms > 0.0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn cluster_seeds_differ_per_node() {
+    let rep = Leader::run_cluster(2, 77, "static", 120.0, "single").unwrap();
+    // Different seeds per node: identical stats would be suspicious.
+    let (_, m0, p0, _) = rep.per_node[0].clone();
+    let (_, m1, p1, _) = rep.per_node[1].clone();
+    assert!(m0 != m1 || p0 != p1, "nodes produced identical results");
+}
+
+#[test]
+fn four_node_scale_out() {
+    let rep = Leader::run_cluster(4, 41, "full", 120.0, "single").unwrap();
+    assert_eq!(rep.per_node.len(), 4);
+    assert!(rep.total_rps > 200.0);
+}

@@ -1,0 +1,177 @@
+//! Cross-module integration tests: the controller against the simulated
+//! testbed (E1/E2 direction and safety claims), config plumbing, and the
+//! report pipeline.
+
+use predserve::config;
+use predserve::controller::Levers;
+use predserve::experiments::harness::{repeat_runs, Repeats};
+use predserve::experiments::runs;
+use predserve::platform::{Scenario, SimWorld};
+use predserve::util::json::Json;
+
+fn fast() -> Repeats {
+    Repeats {
+        seeds: [11, 12, 13, 14, 15, 16, 17],
+        count: 2,
+        horizon_s: 1800.0,
+    }
+}
+
+#[test]
+fn e1_full_system_beats_static_on_all_metrics() {
+    let base = repeat_runs("Static MIG", Levers::none(), &fast(), Scenario::paper_single_host);
+    let full = repeat_runs("Full System", Levers::full(), &fast(), Scenario::paper_single_host);
+    assert!(
+        full.miss_rate_pct.mean < base.miss_rate_pct.mean,
+        "miss: {} !< {}",
+        full.miss_rate_pct.mean,
+        base.miss_rate_pct.mean
+    );
+    assert!(full.p99_ms.mean < base.p99_ms.mean);
+    // Throughput budget (≤5% cost).
+    assert!(full.rps.mean >= 0.95 * base.rps.mean);
+}
+
+#[test]
+fn e2_ablation_ordering_matches_paper_shape() {
+    let sums = runs::run_ablation(&fast());
+    let get = |label: &str| {
+        sums.iter()
+            .find(|s| s.label == label)
+            .unwrap()
+            .p99_ms
+            .mean
+    };
+    let base = get("Static MIG");
+    let guards = get("Guards-only");
+    let placement = get("Placement-only");
+    let mig = get("MIG-only");
+    let full = get("Full System");
+    // Paper Table 3 shape: every lever beats the baseline; the full
+    // system beats every single lever; guards are the weakest single
+    // lever; MIG and placement are comparable.
+    assert!(guards < base, "guards {guards} !< base {base}");
+    assert!(placement < base && mig < base);
+    assert!(full < guards && full < placement && full < mig);
+    assert!(guards.max(placement).max(mig) < base);
+    assert!(
+        (mig - placement).abs() < 0.35 * base,
+        "MIG ({mig}) and placement ({placement}) should contribute comparably"
+    );
+}
+
+#[test]
+fn dwell_and_cooldown_never_violated_in_full_run() {
+    // §4: "we verified that controller actions did not violate the
+    // dwell/cool-down policy". Disruptive actions must be >= dwell_obs
+    // observations apart.
+    let mut scenario = Scenario::paper_single_host(13, Levers::full());
+    scenario.horizon = 1800.0;
+    let dwell = scenario.controller.dwell_obs;
+    let dt = scenario.sample_dt;
+    let r = SimWorld::new(scenario).run();
+    let disruptive: Vec<f64> = r
+        .timeline
+        .iter()
+        .filter(|(_, k, _)| k == "mig" || k == "placement" || k == "relax")
+        .map(|(t, _, _)| *t)
+        .collect();
+    for w in disruptive.windows(2) {
+        let obs_gap = (w[1] - w[0]) / dt;
+        assert!(
+            obs_gap + 1e-6 >= dwell as f64,
+            "disruptive actions {:.1}s apart (= {:.0} obs) < dwell {} obs",
+            w[1] - w[0],
+            obs_gap,
+            dwell
+        );
+    }
+}
+
+#[test]
+fn identical_schedule_across_configurations() {
+    // §3.2: comparisons use identical interference schedules.
+    let a = Scenario::paper_single_host(17, Levers::none());
+    let b = Scenario::paper_single_host(17, Levers::full());
+    assert_eq!(a.t2_schedule.phases, b.t2_schedule.phases);
+    assert_eq!(a.t3_schedule.phases, b.t3_schedule.phases);
+}
+
+#[test]
+fn table4_overheads_within_paper_bounds() {
+    let full = repeat_runs("Full System", Levers::full(), &fast(), Scenario::paper_single_host);
+    // Reconfig wall time within the paper's ≤30s bound (when any happened).
+    if full.reconfig_s.n > 0 {
+        assert!(full.reconfig_s.mean >= 6.0 && full.reconfig_s.mean <= 30.0);
+    }
+    // Controller CPU share << 2%.
+    assert!(
+        full.controller_cpu_pct.mean < 2.0,
+        "controller CPU {}%",
+        full.controller_cpu_pct.mean
+    );
+}
+
+#[test]
+fn llm_case_direction_holds() {
+    let sums = runs::run_table2(&fast());
+    let stat = sums.iter().find(|s| s.label == "Static MIG").unwrap();
+    let full = sums.iter().find(|s| s.label == "Full System").unwrap();
+    assert!(
+        full.p99_ms.mean < stat.p99_ms.mean,
+        "TTFT p99 {} !< {}",
+        full.p99_ms.mean,
+        stat.p99_ms.mean
+    );
+    assert!(full.rps.mean >= 0.95 * stat.rps.mean);
+}
+
+#[test]
+fn config_file_roundtrip_drives_sim() {
+    let mut s = Scenario::paper_single_host(1, Levers::none());
+    let j = Json::parse(
+        r#"{"controller":{"levers":"full","tau_ms":18.0},"run":{"horizon_s":120.0}}"#,
+    )
+    .unwrap();
+    config::apply(&mut s, &j).unwrap();
+    assert_eq!(s.controller.tau_ms, 18.0);
+    let r = SimWorld::new(s).run();
+    assert_eq!(r.label, "Full System");
+    assert!(r.completed > 5_000);
+}
+
+#[test]
+fn report_tables_render_with_paper_columns() {
+    let tiny = Repeats {
+        seeds: [11, 12, 13, 14, 15, 16, 17],
+        count: 1,
+        horizon_s: 120.0,
+    };
+    let t3 = runs::render_table3(&runs::run_ablation(&tiny));
+    assert!(t3.contains("16.4%") && t3.contains("Full System"));
+    let t2 = runs::render_table2(&runs::run_table2(&tiny));
+    assert!(t2.contains("232") && t2.contains("199"));
+}
+
+#[test]
+fn rollback_restores_on_regression() {
+    // Force a pathological placement weight so the first move is bad:
+    // with validation enabled the controller must roll back rather than
+    // stick with a worse configuration. We emulate by checking that any
+    // rollback in a long noisy run is followed by eventual improvement.
+    let mut scenario = Scenario::paper_single_host(23, Levers::full());
+    scenario.horizon = 1800.0;
+    let r = SimWorld::new(scenario).run();
+    let rollbacks = r.action_count("rollback");
+    // Rollbacks are allowed, but the run must still end better than the
+    // static baseline (the safety net works).
+    let mut base_sc = Scenario::paper_single_host(23, Levers::none());
+    base_sc.horizon = 1800.0;
+    let base = SimWorld::new(base_sc).run();
+    assert!(
+        r.p99_ms <= base.p99_ms * 1.05,
+        "rollbacks={rollbacks}, full {} vs base {}",
+        r.p99_ms,
+        base.p99_ms
+    );
+}

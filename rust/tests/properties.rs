@@ -1,0 +1,281 @@
+//! Property-based tests (util::proptest_lite) on the coordinator
+//! invariants: PS conservation, KV-cache state, batcher bookkeeping,
+//! MIG legality, upgrade-chain termination, event ordering.
+
+use predserve::fabric::ps::{ps_rates, FlowDemand};
+use predserve::gpu::{A100Gpu, MigProfile};
+use predserve::serving::kvcache::{KvError, PagedKvCache};
+use predserve::sim::EventQueue;
+use predserve::util::proptest_lite::{check, Config};
+use predserve::util::rng::Pcg64;
+
+#[test]
+fn prop_ps_rates_conserve_and_respect_caps() {
+    check(
+        Config { cases: 512, seed: 0xA },
+        "ps conservation",
+        |rng| {
+            let n = 1 + rng.below(12) as usize;
+            let flows: Vec<(f64, Option<f64>)> = (0..n)
+                .map(|_| {
+                    (
+                        rng.range_f64(0.05, 5.0),
+                        rng.chance(0.6).then(|| rng.range_f64(0.1, 12.0)),
+                    )
+                })
+                .collect();
+            (rng.range_f64(0.5, 50.0), flows)
+        },
+        |(capacity, flows)| {
+            let demands: Vec<FlowDemand> = flows
+                .iter()
+                .map(|&(weight, cap)| FlowDemand { weight, cap })
+                .collect();
+            let rates = ps_rates(*capacity, &demands);
+            let total: f64 = rates.iter().sum();
+            if total > capacity + 1e-9 {
+                return Err(format!("sum {total} > capacity {capacity}"));
+            }
+            for (r, d) in rates.iter().zip(&demands) {
+                if *r < -1e-12 {
+                    return Err("negative rate".into());
+                }
+                if let Some(g) = d.cap {
+                    if *r > g + 1e-9 {
+                        return Err(format!("rate {r} > cap {g}"));
+                    }
+                }
+            }
+            // Work conservation when nobody is capped below fair share:
+            // at least one uncapped flow ⇒ full capacity used.
+            if demands.iter().any(|d| d.cap.is_none()) && (total - capacity).abs() > 1e-9 {
+                return Err(format!("not work conserving: {total} vs {capacity}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kvcache_invariants_under_random_ops() {
+    check(
+        Config { cases: 200, seed: 0xB },
+        "kv cache invariants",
+        |rng| {
+            let ops: Vec<u64> = (0..rng.range_u64(10, 120)).map(|_| rng.next_u64()).collect();
+            ops
+        },
+        |ops| {
+            let mut cache = PagedKvCache::new(32, 16, 4);
+            let mut live = Vec::new();
+            for &op in ops {
+                match op % 5 {
+                    0 | 1 => {
+                        let tokens = 1 + (op >> 3) as usize % 60;
+                        if let Ok(id) = cache.allocate(tokens) {
+                            live.push(id);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let id = live[(op >> 3) as usize % live.len()];
+                            let _ = cache.append_token(id);
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let idx = (op >> 3) as usize % live.len();
+                            let id = live.swap_remove(idx);
+                            cache.release(id).map_err(|e| format!("{e:?}"))?;
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let id = live[(op >> 3) as usize % live.len()];
+                            if let Ok(nid) = cache.fork(id) {
+                                live.push(nid);
+                                let _ = cache.ensure_exclusive(nid);
+                            }
+                        }
+                    }
+                }
+                cache.check_invariants()?;
+            }
+            // Drain: all pages must return.
+            for id in live {
+                cache.release(id).map_err(|e| format!("{e:?}"))?;
+            }
+            cache.check_invariants()?;
+            if cache.free_pages() != 31 {
+                return Err(format!("leak: {} free != 31", cache.free_pages()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mig_instances_never_overlap() {
+    check(
+        Config { cases: 300, seed: 0xC },
+        "mig occupancy",
+        |rng| (0..rng.range_u64(5, 40)).map(|_| rng.next_u64()).collect::<Vec<u64>>(),
+        |ops| {
+            let mut gpu = A100Gpu::new(0);
+            let mut live = Vec::new();
+            for &op in ops {
+                if op % 3 == 0 && !live.is_empty() {
+                    let idx = (op >> 4) as usize % live.len();
+                    let id = live.swap_remove(idx);
+                    gpu.destroy(id).map_err(|e| e.to_string())?;
+                } else {
+                    let profile = MigProfile::ALL[(op >> 4) as usize % 5];
+                    if let Ok(id) = gpu.create(profile) {
+                        live.push(id);
+                    }
+                }
+                // Invariant: no two instances overlap; every instance
+                // starts at a legal offset.
+                let mut occ = [0u8; 7];
+                for inst in gpu.instances() {
+                    if !inst.profile.legal_starts().contains(&inst.start) {
+                        return Err(format!("illegal start {}", inst.start));
+                    }
+                    for s in inst.slices() {
+                        occ[s] += 1;
+                        if occ[s] > 1 {
+                            return Err(format!("slice {s} double-booked"));
+                        }
+                    }
+                }
+                let used: usize = gpu
+                    .instances()
+                    .iter()
+                    .map(|i| i.profile.compute_slices())
+                    .sum();
+                if used + gpu.free_slices() != 7 {
+                    return Err("slice accounting broken".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_upgrade_chain_terminates_with_strict_mu_increase() {
+    // §2.5.2: at most |M|-1 upgrades, each strictly increasing μ.
+    check(
+        Config { cases: 64, seed: 0xD },
+        "upgrade termination",
+        |rng| MigProfile::ALL[rng.below(5) as usize],
+        |start| {
+            let mut p = *start;
+            let mut steps = 0;
+            while let Some(next) = p.upgrade() {
+                if next.mu() <= p.mu() {
+                    return Err(format!("non-monotone upgrade {p:?} -> {next:?}"));
+                }
+                p = next;
+                steps += 1;
+                if steps >= MigProfile::ALL.len() {
+                    return Err("upgrade chain did not terminate".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_queue_total_order() {
+    check(
+        Config { cases: 150, seed: 0xE },
+        "event ordering",
+        |rng| {
+            (0..rng.range_u64(2, 400))
+                .map(|_| rng.f64() * 1000.0)
+                .collect::<Vec<f64>>()
+        },
+        |times| {
+            let mut q = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.push_at(t, i);
+            }
+            let mut last = f64::NEG_INFINITY;
+            let mut popped = 0;
+            while let Some((t, _)) = q.pop() {
+                if t.secs() < last {
+                    return Err(format!("time went backwards: {} < {last}", t.secs()));
+                }
+                last = t.secs();
+                popped += 1;
+            }
+            if popped != times.len() {
+                return Err("lost events".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_router_conserves_outstanding() {
+    use predserve::serving::router::{Policy, Router};
+    check(
+        Config { cases: 150, seed: 0xF },
+        "router conservation",
+        |rng| {
+            let replicas = 1 + rng.below(6) as usize;
+            let ops: Vec<bool> = (0..rng.range_u64(1, 200)).map(|_| rng.chance(0.6)).collect();
+            (replicas, ops)
+        },
+        |(replicas, ops)| {
+            let mut r = Router::new(*replicas, Policy::LeastOutstanding);
+            let mut live: Vec<usize> = Vec::new();
+            for &route in ops {
+                if route || live.is_empty() {
+                    live.push(r.route());
+                } else {
+                    let t = live.pop().unwrap();
+                    r.complete(t);
+                }
+            }
+            let outstanding: usize = (0..*replicas).map(|i| r.outstanding(i)).sum();
+            if outstanding != live.len() {
+                return Err(format!("{outstanding} != {}", live.len()));
+            }
+            // Least-outstanding keeps the spread tight: max-min <= live+1.
+            let counts: Vec<usize> = (0..*replicas).map(|i| r.outstanding(i)).collect();
+            let spread = counts.iter().max().unwrap() - counts.iter().min().unwrap();
+            if live.is_empty() && spread != 0 {
+                return Err("drained but uneven".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_out_of_pages_is_clean_failure() {
+    // Failure injection: exhaust the pool; allocation must fail without
+    // corrupting state, and recovery must work after a release.
+    let mut rng = Pcg64::seeded(0x10);
+    for _ in 0..50 {
+        let pages = 2 + rng.below(10) as usize;
+        let mut cache = PagedKvCache::new(pages, 16, 4);
+        let mut live = Vec::new();
+        loop {
+            match cache.allocate(16) {
+                Ok(id) => live.push(id),
+                Err(KvError::OutOfPages) => break,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        cache.check_invariants().unwrap();
+        assert_eq!(live.len(), pages - 1);
+        cache.release(live.pop().unwrap()).unwrap();
+        assert!(cache.allocate(8).is_ok());
+        cache.check_invariants().unwrap();
+    }
+}

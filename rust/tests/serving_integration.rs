@@ -1,0 +1,147 @@
+//! Serving-engine integration over the REAL AOT artifacts (PJRT CPU).
+//! Skipped gracefully when `make artifacts` has not run.
+
+use predserve::serving::request::SamplingParams;
+use predserve::serving::Engine;
+
+fn engine() -> Option<Engine> {
+    match Engine::load_default() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping serving integration: {err}");
+            None
+        }
+    }
+}
+
+fn greedy(max_new: usize) -> SamplingParams {
+    SamplingParams {
+        top_k: 0,
+        seed: 0,
+        max_new_tokens: max_new,
+    }
+}
+
+#[test]
+fn single_request_completes_with_ttft() {
+    let Some(mut e) = engine() else { return };
+    e.submit_text("hello world", greedy(5));
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    let c = &done[0];
+    assert_eq!(c.generated.len(), 5);
+    assert!(c.ttft_s > 0.0 && c.ttft_s <= c.e2e_s);
+}
+
+#[test]
+fn greedy_is_deterministic_across_engines() {
+    let Some(mut e1) = engine() else { return };
+    let Some(mut e2) = engine() else { return };
+    e1.submit_text("determinism check", greedy(8));
+    e2.submit_text("determinism check", greedy(8));
+    let a = e1.run_to_completion().unwrap();
+    let b = e2.run_to_completion().unwrap();
+    assert_eq!(a[0].generated, b[0].generated);
+}
+
+#[test]
+fn prompt_changes_output() {
+    let Some(mut e) = engine() else { return };
+    e.submit_text("alpha prompt", greedy(8));
+    e.submit_text("a different beta prompt", greedy(8));
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    assert_ne!(done[0].generated, done[1].generated);
+}
+
+#[test]
+fn batched_equals_solo_generation() {
+    // Sequences in a shared batch must not leak into each other: the
+    // same prompt generates the same tokens whether run alone or next to
+    // three other requests.
+    let Some(mut solo) = engine() else { return };
+    solo.submit_text("isolation probe", greedy(6));
+    let solo_out = solo.run_to_completion().unwrap()[0].generated.clone();
+
+    let Some(mut batch) = engine() else { return };
+    batch.submit_text("noise one", greedy(6));
+    batch.submit_text("isolation probe", greedy(6));
+    batch.submit_text("noise two two", greedy(6));
+    batch.submit_text("noise three three", greedy(6));
+    let done = batch.run_to_completion().unwrap();
+    let probe = done
+        .iter()
+        .find(|c| c.prompt_len == "isolation probe".len() + 1)
+        .expect("probe request present");
+    assert_eq!(probe.generated, solo_out, "cross-sequence leakage");
+}
+
+#[test]
+fn continuous_batching_handles_more_requests_than_rows() {
+    let Some(mut e) = engine() else { return };
+    let n = 11; // > 4 rows
+    for i in 0..n {
+        e.submit_text(&format!("request number {i}"), greedy(3 + (i % 5)));
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), n);
+    // All requests completed, none duplicated.
+    let mut ids: Vec<u64> = done.iter().map(|c| c.id.0).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n);
+    // KV pages fully returned.
+    assert_eq!(e.kv_cache().live_seqs(), 0);
+    e.kv_cache().check_invariants().unwrap();
+    assert_eq!(e.stats.completed, n as u64);
+}
+
+#[test]
+fn top_k_seeded_sampling_is_reproducible() {
+    let mk = |seed| {
+        let mut e = Engine::load_default().ok()?;
+        e.submit_text(
+            "sampling prompt",
+            SamplingParams {
+                top_k: 8,
+                seed,
+                max_new_tokens: 8,
+            },
+        );
+        Some(e.run_to_completion().unwrap()[0].generated.clone())
+    };
+    let Some(a) = mk(42) else { return };
+    let b = mk(42).unwrap();
+    assert_eq!(a, b, "same seed must reproduce");
+}
+
+#[test]
+fn long_generation_hits_length_limit_cleanly() {
+    let Some(mut e) = engine() else { return };
+    let spec = e.spec();
+    // Prompt 32 + huge generation budget: must stop at max_seq_len (64).
+    e.submit_text(&"x".repeat(64), greedy(10_000));
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    let c = &done[0];
+    assert!(
+        c.prompt_len + c.generated.len() <= spec.max_seq_len() + 1,
+        "generated past the KV capacity"
+    );
+    assert_eq!(e.kv_cache().live_seqs(), 0);
+}
+
+#[test]
+fn stats_accumulate_consistently() {
+    let Some(mut e) = engine() else { return };
+    for i in 0..6 {
+        e.submit_text(&format!("stats {i}"), greedy(4));
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(e.stats.completed as usize, done.len());
+    let total_tokens: usize = done.iter().map(|c| c.generated.len()).sum();
+    assert_eq!(e.stats.generated_tokens as usize, total_tokens);
+    assert!(e.stats.prefill_waves >= 2); // 6 requests / 4 rows
+    assert!(e.stats.model_time_s > 0.0);
+    assert!(e.stats.ttft_us.count() == 6);
+}
