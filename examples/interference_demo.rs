@@ -19,11 +19,17 @@ fn main() {
     let mut base_sc = Scenario::paper_single_host(seed, Levers::none());
     base_sc.horizon = horizon;
     println!("interference schedule (identical across configurations):");
-    for p in base_sc.t2_schedule.phases.iter().take(8) {
-        println!("  T2 bandwidth-heavy ON  {:7.1}s .. {:7.1}s", p.on, p.off);
-    }
-    for p in base_sc.t3_schedule.phases.iter().take(8) {
-        println!("  T3 compute-heavy   ON  {:7.1}s .. {:7.1}s", p.on, p.off);
+    for i in base_sc.background_tenants() {
+        let t = &base_sc.tenants[i];
+        for p in t.schedule.phases.iter().take(8) {
+            println!(
+                "  {:10} {:17} ON  {:7.1}s .. {:7.1}s",
+                t.name,
+                t.kind().label(),
+                p.on,
+                p.off
+            );
+        }
     }
 
     let base = SimWorld::new(base_sc).run();

@@ -18,6 +18,10 @@ pub enum Msg {
     /// Worker → leader: run finished.
     RunDone {
         node: String,
+        /// Echo of the requested workload name when it resolved, or the
+        /// name of the fallback scenario that actually ran — a leader
+        /// detects a typo'd workload by `scenario != requested`.
+        scenario: String,
         miss_rate: f64,
         p99_ms: f64,
         p95_ms: f64,
@@ -48,6 +52,7 @@ impl Msg {
             ]),
             Msg::RunDone {
                 node,
+                scenario,
                 miss_rate,
                 p99_ms,
                 p95_ms,
@@ -57,6 +62,7 @@ impl Msg {
             } => Json::obj(vec![
                 ("type", Json::Str("done".into())),
                 ("node", Json::Str(node.clone())),
+                ("scenario", Json::Str(scenario.clone())),
                 ("miss_rate", Json::Num(*miss_rate)),
                 ("p99_ms", Json::Num(*p99_ms)),
                 ("p95_ms", Json::Num(*p95_ms)),
@@ -87,6 +93,7 @@ impl Msg {
             },
             "done" => Msg::RunDone {
                 node: j.get("node").as_str().unwrap_or("?").to_string(),
+                scenario: j.get("scenario").as_str().unwrap_or("?").to_string(),
                 miss_rate: j.get("miss_rate").as_f64().unwrap_or(0.0),
                 p99_ms: j.get("p99_ms").as_f64().unwrap_or(0.0),
                 p95_ms: j.get("p95_ms").as_f64().unwrap_or(0.0),
@@ -147,6 +154,7 @@ mod tests {
             },
             Msg::RunDone {
                 node: "node1".into(),
+                scenario: "paper_single_host".into(),
                 miss_rate: 0.11,
                 p99_ms: 16.5,
                 p95_ms: 12.0,

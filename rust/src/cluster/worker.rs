@@ -30,17 +30,34 @@ impl Worker {
         Worker { node: node.into() }
     }
 
-    /// Execute one scenario request locally.
+    /// Execute one scenario request locally. `workload` is any catalog
+    /// name (see [`Scenario::CATALOG`]); unknown names fall back to the
+    /// paper's single-host world (wire-protocol compatibility), with a
+    /// warning so a typo'd experiment name cannot pass silently.
     pub fn run_scenario(&self, seed: u64, levers: &str, horizon_s: f64, workload: &str) -> Msg {
         let lv = levers_from_str(levers);
-        let mut scenario = match workload {
-            "llm" => Scenario::paper_llm_case(seed, lv),
-            _ => Scenario::paper_single_host(seed, lv),
+        // Echo contract: a recognized request echoes the REQUESTED name
+        // verbatim (aliases included), so leaders can detect fallback
+        // with a plain equality check; only the unknown-name fallback
+        // echoes the name of what actually ran.
+        let (mut scenario, ran) = match Scenario::by_name(workload, seed, lv) {
+            Some(s) => (s, workload.to_string()),
+            None => {
+                crate::log_warn!(
+                    "cluster.worker",
+                    "unknown workload '{workload}', falling back to paper_single_host"
+                );
+                (
+                    Scenario::paper_single_host(seed, lv),
+                    "paper_single_host".to_string(),
+                )
+            }
         };
         scenario.horizon = horizon_s;
         let r = SimWorld::new(scenario).run();
         Msg::RunDone {
             node: self.node.clone(),
+            scenario: ran,
             miss_rate: r.miss_rate,
             p99_ms: r.p99_ms,
             p95_ms: r.p95_ms,
@@ -100,6 +117,38 @@ mod tests {
                 assert!(p99_ms > 0.0);
             }
             _ => panic!("expected RunDone"),
+        }
+    }
+
+    #[test]
+    fn catalog_workloads_run_on_workers() {
+        let w = Worker::new("cat-node");
+        for name in ["multi_ls_slo_mix", "pcie_hotspot", "diurnal_burst"] {
+            match w.run_scenario(3, "static", 45.0, name) {
+                Msg::RunDone {
+                    completed,
+                    scenario,
+                    ..
+                } => {
+                    assert!(completed > 500, "{name}: completed {completed}");
+                    // The worker echoes what it actually ran.
+                    assert_eq!(scenario, name);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn typoed_workload_is_detectable_from_the_echo() {
+        let w = Worker::new("typo-node");
+        match w.run_scenario(3, "static", 45.0, "pcie_hotpsot") {
+            Msg::RunDone { scenario, .. } => {
+                // Falls back for wire compatibility, but the echoed name
+                // exposes the mismatch to the caller.
+                assert_eq!(scenario, "paper_single_host");
+            }
+            other => panic!("unexpected {other:?}"),
         }
     }
 

@@ -47,10 +47,10 @@ pub fn apply(scenario: &mut Scenario, j: &Json) -> Result<()> {
     }
     let wl = j.get("workload");
     if let Some(v) = wl.get("arrival_rps").as_f64() {
-        scenario.t1.arrival_rps = v;
+        scenario.primary_spec_mut().arrival_rps = v;
     }
     if let Some(v) = wl.get("slo_ms").as_f64() {
-        scenario.t1.slo_ms = v;
+        scenario.primary_spec_mut().slo_ms = v;
         scenario.controller.tau_ms = v;
     }
     let run = j.get("run");
@@ -89,7 +89,7 @@ mod tests {
         apply(&mut s, &j).unwrap();
         assert_eq!(s.controller.tau_ms, 12.5);
         assert_eq!(s.controller.levers, Levers::mig_only());
-        assert_eq!(s.t1.arrival_rps, 50.0);
+        assert_eq!(s.primary_spec().arrival_rps, 50.0);
         assert_eq!(s.horizon, 300.0);
         assert_eq!(s.seed, 9);
     }

@@ -115,7 +115,7 @@ mod tests {
             gpus: (0..8).map(A100Gpu::new).collect(),
             tenants: vec![],
             free_instances: vec![],
-            t1_base_rps: 120.0,
+            primary_base_rps: 120.0,
         }
     }
 

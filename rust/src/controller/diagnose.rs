@@ -143,7 +143,7 @@ mod tests {
                 },
             ],
             free_instances: vec![],
-            t1_base_rps: 120.0,
+            primary_base_rps: 120.0,
         }
     }
 

@@ -49,7 +49,14 @@ pub struct Controller {
 }
 
 impl Controller {
+    /// Controller protecting the canonical primary slot (`T1`).
     pub fn new(cfg: ControllerConfig) -> Controller {
+        Controller::for_primary(cfg, T1)
+    }
+
+    /// Controller protecting an arbitrary latency-sensitive tenant (the
+    /// N-tenant scenarios choose the primary per scenario).
+    pub fn for_primary(cfg: ControllerConfig, primary: TenantId) -> Controller {
         Controller {
             persistence: Persistence::new(cfg.tau_ms, cfg.persistence_y),
             cfg,
@@ -61,8 +68,13 @@ impl Controller {
             guard_attempts: 0,
             weights: ScoreWeights::default(),
             audit: AuditLog::new(),
-            primary: T1,
+            primary,
         }
+    }
+
+    /// Which tenant this controller protects.
+    pub fn primary(&self) -> TenantId {
+        self.primary
     }
 
     pub fn state(&self) -> CtlState {
@@ -91,7 +103,7 @@ impl Controller {
         let Some(t1) = snap.tenant(self.primary) else {
             return false;
         };
-        t1.tails.rps >= (1.0 - self.cfg.throughput_budget) * view.t1_base_rps
+        t1.tails.rps >= (1.0 - self.cfg.throughput_budget) * view.primary_base_rps
     }
 
     /// One observation tick (Algorithm 1 `OnObservation`). Returns the
@@ -470,7 +482,7 @@ mod tests {
                 existing: Some(InstanceId(1)),
                 profile: MigProfile::P2g20gb,
             }],
-            t1_base_rps: 120.0,
+            primary_base_rps: 120.0,
         }
     }
 

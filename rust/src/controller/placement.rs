@@ -197,7 +197,7 @@ mod tests {
                 existing: Some(InstanceId(1)),
                 profile: MigProfile::P2g20gb,
             }],
-            t1_base_rps: 120.0,
+            primary_base_rps: 120.0,
         }
     }
 

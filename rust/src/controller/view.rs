@@ -44,7 +44,7 @@ pub struct PlannerView {
     pub free_instances: Vec<InstanceView>,
     /// Expected baseline throughput of the primary tenant (req/s) for the
     /// ≥95% budget check.
-    pub t1_base_rps: f64,
+    pub primary_base_rps: f64,
 }
 
 impl PlannerView {

@@ -20,7 +20,7 @@ use predserve::platform::{Scenario, SimWorld};
 use predserve::serving::request::SamplingParams;
 use predserve::serving::Engine;
 
-const USAGE: &str = "usage: predserve <serve|sim|ablation|llm|overheads|sensitivity|figures|cluster> [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--fast] [--prompt TEXT] [--nodes N]";
+const USAGE: &str = "usage: predserve <serve|sim|scenarios|ablation|llm|overheads|sensitivity|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--fast] [--prompt TEXT] [--nodes N]";
 
 fn repeats(args: &Args) -> Repeats {
     let mut r = if args.flag("fast") {
@@ -76,16 +76,23 @@ fn main() -> Result<()> {
         }
         "sim" => {
             let levers = config::parse_levers(args.get_str("levers", "full"))?;
-            let mut scenario =
-                Scenario::paper_single_host(args.get_u64("seed", 11), levers);
+            let name = args.get_str("scenario", "paper_single_host");
+            let mut scenario = Scenario::by_name(name, args.get_u64("seed", 11), levers)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scenario '{name}' (catalog: {})",
+                        Scenario::CATALOG.join(", ")
+                    )
+                })?;
             if let Some(path) = args.get("config") {
                 config::load_into(&mut scenario, path)?;
             }
             scenario.horizon = args.get_f64("horizon", scenario.horizon);
             let r = SimWorld::new(scenario).run();
             println!(
-                "{}: miss={:.1}% p95={:.2} p99={:.2} p999={:.2} ms rps={:.1} moves/hr={:.1}",
+                "{} [{}]: miss={:.1}% p95={:.2} p99={:.2} p999={:.2} ms rps={:.1} moves/hr={:.1}",
                 r.label,
+                r.scenario,
                 r.miss_rate * 100.0,
                 r.p95_ms,
                 r.p99_ms,
@@ -93,8 +100,34 @@ fn main() -> Result<()> {
                 r.rps,
                 r.moves_per_hour
             );
+            println!("per-tenant lifetime stats:");
+            for t in &r.per_tenant {
+                let slo = if t.slo_ms < f64::MAX {
+                    format!("{:.0} ms SLO, miss={:.1}%", t.slo_ms, t.miss_rate * 100.0)
+                } else {
+                    "background".to_string()
+                };
+                println!(
+                    "  {:16} {:18} completed={:8} p99={:9.2} ms rate={:7.1}/s gb={:8.1}  ({slo})",
+                    t.name,
+                    t.kind.label(),
+                    t.completed,
+                    t.p99_ms,
+                    t.rps,
+                    t.gb_moved
+                );
+            }
             for (t, kind, p99) in &r.timeline {
                 println!("  t={t:7.1}s {kind:12} p99={p99:.1}ms");
+            }
+        }
+        "scenarios" => {
+            println!("scenario catalog:");
+            for name in Scenario::CATALOG {
+                let s = Scenario::by_name(name, 11, config::parse_levers("full")?)
+                    .expect("catalog name must resolve");
+                let kinds: Vec<&str> = s.tenants.iter().map(|t| t.kind().label()).collect();
+                println!("  {:20} {} tenants: {}", name, s.n_tenants(), kinds.join(", "));
             }
         }
         "ablation" => {

@@ -1,18 +1,22 @@
 //! Platform layer: composes topology + fabric + GPUs + tenants +
 //! telemetry + controller into a runnable testbed.
 //!
-//! * [`scenario`] — experiment configuration (the §3.1 setup: workloads,
-//!   schedules, SLOs, controller parameters, seeds).
-//! * [`sim_platform`] — the discrete-event world that reproduces the
-//!   paper's single-host testbed; the controller interacts with it only
-//!   through `SignalSnapshot`/`PlannerView`/`Action` (fabric-agnostic).
+//! * [`scenario`] — experiment configuration as data: an N-tenant
+//!   workload mix (`Vec<TenantWorkload>`) with schedules, SLOs,
+//!   placements, controller parameters and seeds, built through
+//!   [`ScenarioBuilder`] or the named catalog ([`Scenario::by_name`]).
+//! * [`sim_platform`] — the discrete-event world that generalizes the
+//!   paper's single-host testbed to arbitrary tenant mixes; the
+//!   controller interacts with it only through
+//!   `SignalSnapshot`/`PlannerView`/`Action` (fabric-agnostic).
 //! * [`result`] — run outputs: tails, miss-rate, throughput, histograms,
-//!   action timeline (the raw material for every table and figure).
+//!   per-tenant stats, action timeline (the raw material for every table
+//!   and figure).
 
+pub mod result;
 pub mod scenario;
 pub mod sim_platform;
-pub mod result;
 
-pub use result::RunResult;
-pub use scenario::Scenario;
+pub use result::{RunResult, TenantRunStats};
+pub use scenario::{Scenario, ScenarioBuilder};
 pub use sim_platform::SimWorld;

@@ -1,27 +1,55 @@
 //! Run outputs: everything the experiment harness and benches consume.
 
+use crate::tenants::{TenantId, TenantKind};
 use crate::util::histogram::Histogram;
+
+/// Lifetime statistics for one tenant of a run.
+#[derive(Clone, Debug)]
+pub struct TenantRunStats {
+    pub tenant: TenantId,
+    pub name: String,
+    pub kind: TenantKind,
+    /// SLO threshold (ms); `f64::MAX` for background tenants.
+    pub slo_ms: f64,
+    /// Completed units: requests (latency-sensitive), ETL cycles
+    /// (bandwidth-heavy), or training steps (compute-heavy).
+    pub completed: u64,
+    pub miss_rate: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub rps: f64,
+    /// Total GB this tenant moved across all shared links.
+    pub gb_moved: f64,
+}
 
 /// Aggregated result of one simulated run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
     /// Configuration label ("Full System", "Static MIG", ...).
     pub label: String,
+    /// Scenario catalog name.
+    pub scenario: String,
     pub seed: u64,
     pub horizon_s: f64,
-    /// Lifetime SLO miss-rate of T1 (Table 3 column 1).
+    /// Lifetime SLO miss-rate of the primary tenant (Table 3 column 1).
     pub miss_rate: f64,
-    /// Lifetime tail latencies in ms (Table 3 column 2 et al.).
+    /// Primary tenant lifetime tail latencies in ms (Table 3 et al.).
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub p999_ms: f64,
     pub mean_ms: f64,
-    /// Completed T1 requests and throughput.
+    /// Completed primary requests and throughput.
     pub completed: u64,
     pub rps: f64,
-    /// Full latency histogram (µs) — Figure 4 source.
+    /// Full primary latency histogram (µs) — Figure 4 source.
     pub histogram: Histogram,
+    /// Per-tenant lifetime stats for EVERY tenant in the scenario.
+    pub per_tenant: Vec<TenantRunStats>,
+    /// Total GB through each shared link (PS conservation checks).
+    pub link_gb: Vec<f64>,
     /// Controller action counts by kind.
     pub actions: Vec<(String, usize)>,
     /// Disruptive moves per hour (Table 4).
@@ -33,9 +61,9 @@ pub struct RunResult {
     pub controller_cpu_frac: f64,
     /// Action timeline for Figure 3a: (t, kind, p99_at_decision).
     pub timeline: Vec<(f64, String, f64)>,
-    /// Mean SM utilization of the T1 GPU (Figure 3b efficiency axis).
+    /// Mean SM utilization of tenant-hosting GPUs (Figure 3b efficiency).
     pub mean_sm_util: f64,
-    /// p99 timeseries sampled at Δ (Figure 3a upper panel).
+    /// Primary p99 timeseries sampled at Δ (Figure 3a upper panel).
     pub p99_series: Vec<(f64, f64)>,
 }
 
@@ -51,5 +79,45 @@ impl RunResult {
             .find(|(k, _)| k == kind)
             .map(|(_, c)| *c)
             .unwrap_or(0)
+    }
+
+    pub fn tenant_stats(&self, id: TenantId) -> Option<&TenantRunStats> {
+        self.per_tenant.iter().find(|t| t.tenant == id)
+    }
+
+    /// Bit-exact digest of every deterministic metric (determinism tests:
+    /// same seed ⇒ identical fingerprint). Excludes wall-clock derived
+    /// fields (`controller_cpu_frac`).
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{}|{}|{}|{:x}|{:x}|{:x}|{:x}|{:x}|{:x}",
+            self.label,
+            self.seed,
+            self.completed,
+            self.miss_rate.to_bits(),
+            self.p50_ms.to_bits(),
+            self.p95_ms.to_bits(),
+            self.p99_ms.to_bits(),
+            self.p999_ms.to_bits(),
+            self.mean_sm_util.to_bits(),
+        );
+        for t in &self.per_tenant {
+            let _ = write!(
+                s,
+                ";{}:{}:{:x}:{:x}:{:x}",
+                t.name,
+                t.completed,
+                t.miss_rate.to_bits(),
+                t.p99_ms.to_bits(),
+                t.gb_moved.to_bits(),
+            );
+        }
+        for (t, kind, p99) in &self.timeline {
+            let _ = write!(s, ";@{:x}:{kind}:{:x}", t.to_bits(), p99.to_bits());
+        }
+        s
     }
 }

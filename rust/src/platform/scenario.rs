@@ -1,30 +1,47 @@
-//! Scenario configuration: the paper's §3.1 experimental setup as data.
+//! Scenario configuration: experiment setups as data.
+//!
+//! A [`Scenario`] drives the simulated testbed with an arbitrary mix of
+//! tenants (`Vec<TenantWorkload>`): any count of latency-sensitive /
+//! bandwidth-heavy / compute-heavy workloads, each with its own spec,
+//! schedule, SLO, and placement. Scenarios are composed through
+//! [`ScenarioBuilder`] or taken from the named catalog
+//! ([`Scenario::by_name`]), which includes the paper's §3.1 three-tenant
+//! setups plus larger N-tenant cases in the spirit of MIG-Serving /
+//! ParvaGPU evaluations.
+//!
+//! Identical schedules across configurations (§3.2) come from deriving
+//! them off `seed` only — the controller/lever settings never perturb
+//! workload RNG streams.
 
 use crate::controller::{ControllerConfig, Levers};
 use crate::gpu::MigProfile;
-use crate::tenants::{InterferenceSchedule, T1Spec, T2Spec, T3Spec};
+use crate::tenants::{
+    BwSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantKind, TenantWorkload,
+};
 use crate::topo::HostTopology;
 use crate::util::rng::Pcg64;
 
-/// Everything one run needs. Identical schedules across configurations
-/// (§3.2) come from deriving them off `seed` only — the controller/lever
-/// settings do not perturb workload RNG streams.
+/// Everything one run needs.
 #[derive(Clone, Debug)]
 pub struct Scenario {
+    /// Catalog / display name.
+    pub name: String,
     pub topo: HostTopology,
-    pub t1: T1Spec,
-    pub t2: T2Spec,
-    pub t3: T3Spec,
-    pub t2_schedule: InterferenceSchedule,
-    pub t3_schedule: InterferenceSchedule,
+    /// The tenant mix, in placement order.
+    pub tenants: Vec<TenantWorkload>,
+    /// Pre-provisioned idle spare instances `(gpu, profile, start)` —
+    /// the static layout's headroom the placement lever can use.
+    pub spares: Vec<(usize, MigProfile, usize)>,
+    /// Index of the controller's primary latency-sensitive tenant.
+    pub primary: usize,
     /// Run horizon (sim seconds).
     pub horizon: f64,
     /// Controller sampling interval Δ (§2.1: 1-5 s).
     pub sample_dt: f64,
     pub controller: ControllerConfig,
     pub seed: u64,
-    /// Reference service-rate profile for T1's `compute_ref_ms`
-    /// (work is expressed as ms on this profile).
+    /// Reference service-rate profile for latency-sensitive
+    /// `compute_ref_ms` (work is expressed as ms on this profile).
     pub mu_ref_profile: MigProfile,
     /// Placement/isolation pause for a pure move (s) — process restart +
     /// CUDA context, no `nvidia-smi mig` call.
@@ -34,52 +51,129 @@ pub struct Scenario {
 }
 
 impl Scenario {
-    /// The paper's main single-host experiment (E1): dynamic interference,
-    /// 15 ms SLO, Table 1 controller parameters.
-    pub fn paper_single_host(seed: u64, levers: Levers) -> Scenario {
-        let mut sched_rng = Pcg64::new(seed, 1000);
-        let horizon = 1800.0;
-        // T2/T3 toggle with ~90s on / ~60s off periods: long enough for
-        // dwell/cool-down to matter, short enough for many transitions.
-        let t2_schedule =
-            InterferenceSchedule::generate(&mut sched_rng, horizon, 60.0, 90.0, 20.0);
-        let t3_schedule =
-            InterferenceSchedule::generate(&mut sched_rng, horizon, 70.0, 80.0, 20.0);
-        Scenario {
-            topo: HostTopology::p4d(),
-            t1: T1Spec::default(),
-            t2: T2Spec::default(),
-            t3: T3Spec::default(),
-            t2_schedule,
-            t3_schedule,
-            horizon,
-            sample_dt: 2.0,
-            controller: ControllerConfig::with_levers(levers),
-            seed,
-            mu_ref_profile: MigProfile::P2g20gb,
-            move_pause_s: 0.05,
-            epsilon_sigma: 0.32,
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Spec of the primary latency-sensitive tenant.
+    pub fn primary_spec(&self) -> &LsSpec {
+        self.tenants[self.primary]
+            .spec
+            .as_ls()
+            .expect("primary tenant must be latency-sensitive")
+    }
+
+    pub fn primary_spec_mut(&mut self) -> &mut LsSpec {
+        self.tenants[self.primary]
+            .spec
+            .as_ls_mut()
+            .expect("primary tenant must be latency-sensitive")
+    }
+
+    /// Indexes of the background (non-latency-sensitive) tenants.
+    pub fn background_tenants(&self) -> Vec<usize> {
+        self.tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind() != TenantKind::LatencySensitive)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Replace every background tenant's schedule (steady-contention
+    /// experiments, ablation over interference intensity).
+    pub fn set_background_schedules(&mut self, sched: InterferenceSchedule) {
+        for t in self.tenants.iter_mut() {
+            if t.kind() != TenantKind::LatencySensitive {
+                t.schedule = sched.clone();
+            }
         }
     }
 
-    /// The LLM case study (Table 2): T1 becomes a vLLM-style serving
-    /// tenant measured on TTFT with a 200 ms p99 SLO. Prefill is
+    // --- named catalog ----------------------------------------------------
+
+    /// Catalog names accepted by [`Scenario::by_name`].
+    pub const CATALOG: [&'static str; 6] = [
+        "paper_single_host",
+        "paper_llm_case",
+        "steady_contention",
+        "multi_ls_slo_mix",
+        "pcie_hotspot",
+        "diurnal_burst",
+    ];
+
+    /// Look a scenario up by catalog name ("single" and "llm" are accepted
+    /// as aliases for the two paper cases, matching the cluster protocol).
+    pub fn by_name(name: &str, seed: u64, levers: Levers) -> Option<Scenario> {
+        Some(match name {
+            "paper_single_host" | "single" => Scenario::paper_single_host(seed, levers),
+            "paper_llm_case" | "llm" => Scenario::paper_llm_case(seed, levers),
+            // The on/off variants round-trip the names `steady_contention`
+            // assigns to its Scenario (and hence to RunResult::scenario).
+            "steady_contention" | "steady_contention_on" => {
+                Scenario::steady_contention(seed, levers, true)
+            }
+            "steady_contention_off" => Scenario::steady_contention(seed, levers, false),
+            "multi_ls_slo_mix" => Scenario::multi_ls_slo_mix(seed, levers),
+            "pcie_hotspot" => Scenario::pcie_hotspot(seed, levers),
+            "diurnal_burst" => Scenario::diurnal_burst(seed, levers),
+            _ => return None,
+        })
+    }
+
+    /// The paper's §3.1 interference script: ETL and trainer schedules
+    /// toggling with ~90s on / ~60s off periods — long enough for
+    /// dwell/cool-down to matter, short enough for many transitions.
+    /// Shared by every scenario that co-locates "the paper's two
+    /// interferers" so their dynamics cannot silently drift apart.
+    fn paper_interference_schedules(
+        seed: u64,
+        horizon: f64,
+    ) -> (InterferenceSchedule, InterferenceSchedule) {
+        let mut sched_rng = Pcg64::new(seed, 1000);
+        let etl = InterferenceSchedule::generate(&mut sched_rng, horizon, 60.0, 90.0, 20.0);
+        let train = InterferenceSchedule::generate(&mut sched_rng, horizon, 70.0, 80.0, 20.0);
+        (etl, train)
+    }
+
+    /// The paper's main single-host experiment (E1): one latency-sensitive
+    /// tenant (15 ms SLO) + bandwidth-heavy ETL + compute-heavy training
+    /// under dynamic interference, Table 1 controller parameters.
+    pub fn paper_single_host(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        let (etl_schedule, train_schedule) = Scenario::paper_interference_schedules(seed, horizon);
+        ScenarioBuilder::new("paper_single_host", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .tenant(TenantWorkload::latency_sensitive(
+                "t1-inference",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "t2-etl",
+                BwSpec::default(),
+                etl_schedule,
+                PlacementSpec::dedicated_at(0, MigProfile::P3g40gb, 4),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "t3-train",
+                CompSpec::default(),
+                train_schedule,
+                PlacementSpec::shared_with(0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build()
+    }
+
+    /// The LLM case study (Table 2): the primary becomes a vLLM-style
+    /// serving tenant measured on TTFT with a 200 ms p99 SLO. Prefill is
     /// compute-heavier and inputs (prompts/weights pages) are larger, so
     /// both PCIe and SM contention show up in TTFT.
     pub fn paper_llm_case(seed: u64, levers: Levers) -> Scenario {
         let mut s = Scenario::paper_single_host(seed, levers);
-        s.t1 = T1Spec {
-            arrival_rps: 4.0,
-            slo_ms: 200.0,
-            // Prompt+activation staging: bigger payloads than the non-LLM
-            // case — vLLM prefill pulls prompt tensors across PCIe.
-            // Utilization stays moderate (rho ~ 0.4 on the shared slice
-            // under contention) so TTFT tails are contention-driven, not
-            // saturation-driven.
-            size_mix: vec![(0.60, 0.12), (0.30, 0.28), (0.10, 0.55)],
-            compute_ref_ms: 55.0, // prefill on the reference slice
-            compute_sigma: 0.22,
-        };
+        s.name = "paper_llm_case".into();
+        *s.primary_spec_mut() = LsSpec::llm_ttft();
         s.controller.tau_ms = 200.0;
         s
     }
@@ -87,14 +181,319 @@ impl Scenario {
     /// Steady contention variants for Figure 4 (low vs high contention).
     pub fn steady_contention(seed: u64, levers: Levers, on: bool) -> Scenario {
         let mut s = Scenario::paper_single_host(seed, levers);
+        s.name = format!("steady_contention_{}", if on { "on" } else { "off" });
         let h = s.horizon;
-        s.t2_schedule = if on {
+        s.set_background_schedules(if on {
             InterferenceSchedule::always_on(h)
         } else {
             InterferenceSchedule::always_off(h)
-        };
-        s.t3_schedule = s.t2_schedule.clone();
+        });
         s
+    }
+
+    /// Two latency-sensitive tenants with distinct SLOs (interactive chat
+    /// vs relaxed batch API) sharing the host with the paper's two
+    /// interferers. Exercises per-tenant SLO accounting: the controller
+    /// protects the primary while the second service's tails are reported
+    /// independently.
+    pub fn multi_ls_slo_mix(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        let (etl_schedule, train_schedule) = Scenario::paper_interference_schedules(seed, horizon);
+        let chat = LsSpec {
+            arrival_rps: 60.0,
+            slo_ms: 15.0,
+            ..LsSpec::default()
+        };
+        let batch = LsSpec {
+            arrival_rps: 25.0,
+            slo_ms: 60.0,
+            compute_ref_ms: 8.0,
+            ..LsSpec::default()
+        };
+        ScenarioBuilder::new("multi_ls_slo_mix", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .tenant(TenantWorkload::latency_sensitive(
+                "chat-api",
+                chat,
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::latency_sensitive(
+                "batch-api",
+                batch,
+                PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl",
+                BwSpec::default(),
+                etl_schedule,
+                PlacementSpec::dedicated_at(0, MigProfile::P3g40gb, 4),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train",
+                CompSpec::default(),
+                train_schedule,
+                PlacementSpec::shared_with(0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build()
+    }
+
+    /// Many-interferer PCIe hot-spot: five bandwidth-heavy tenants crowd
+    /// the primary's PCIe switch and NUMA-0 NVMe path (ParvaGPU-style
+    /// dense co-location); the spare lives on the cool NUMA-1 switch so
+    /// only a topology-aware move escapes the pressure.
+    pub fn pcie_hotspot(seed: u64, levers: Levers) -> Scenario {
+        let mut sched_rng = Pcg64::new(seed, 1000);
+        let horizon = 1800.0;
+        let mut b = ScenarioBuilder::new("pcie_hotspot", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .tenant(TenantWorkload::latency_sensitive(
+                "frontend",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ));
+        // (gpu, start): three on the primary's switch (GPUs 0-1), two more
+        // on switch 1 — every one of them on NUMA 0's NVMe path.
+        let slots = [(0usize, 4usize), (1, 0), (1, 4), (2, 0), (3, 0)];
+        for (i, (gpu, start)) in slots.into_iter().enumerate() {
+            let schedule = InterferenceSchedule::generate(
+                &mut sched_rng,
+                horizon,
+                30.0 + 10.0 * i as f64,
+                120.0,
+                20.0,
+            );
+            b = b.tenant(TenantWorkload::bandwidth_heavy(
+                format!("etl-{i}"),
+                BwSpec::default(),
+                schedule,
+                PlacementSpec::dedicated_at(gpu, MigProfile::P3g40gb, start),
+            ));
+        }
+        b.spare(4, MigProfile::P3g40gb, 0).build()
+    }
+
+    /// Diurnal burst: background load waxes and wanes on deterministic
+    /// phase-shifted periods (day/night ETL waves, scheduled training
+    /// jobs), so contention arrives in coordinated bursts rather than
+    /// independent toggles.
+    pub fn diurnal_burst(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        let period = 600.0;
+        ScenarioBuilder::new("diurnal_burst", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .tenant(TenantWorkload::latency_sensitive(
+                "serving",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train-shared",
+                CompSpec::default(),
+                InterferenceSchedule::periodic(horizon, period, 0.5, 120.0),
+                PlacementSpec::shared_with(0),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl-day",
+                BwSpec::default(),
+                InterferenceSchedule::periodic(horizon, period, 0.45, 0.0),
+                PlacementSpec::dedicated_at(0, MigProfile::P3g40gb, 4),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl-night",
+                BwSpec::default(),
+                InterferenceSchedule::periodic(horizon, period, 0.45, 300.0),
+                PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train-batch",
+                CompSpec {
+                    step_ms: 200.0,
+                    sync_gb: 0.25,
+                    ..CompSpec::default()
+                },
+                InterferenceSchedule::periodic(horizon, period, 0.6, 450.0),
+                PlacementSpec::dedicated_at(3, MigProfile::P3g40gb, 0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build()
+    }
+}
+
+/// Composable scenario construction; see the README's "Defining a
+/// scenario" section. `build()` validates the tenant mix (at least one
+/// latency-sensitive tenant; MPS sharing must reference an earlier
+/// tenant) and resolves shared placements.
+#[derive(Clone, Debug)]
+pub struct ScenarioBuilder {
+    name: String,
+    seed: u64,
+    topo: HostTopology,
+    tenants: Vec<TenantWorkload>,
+    spares: Vec<(usize, MigProfile, usize)>,
+    primary: Option<usize>,
+    horizon: f64,
+    sample_dt: f64,
+    controller: ControllerConfig,
+    mu_ref_profile: MigProfile,
+    move_pause_s: f64,
+    epsilon_sigma: f64,
+}
+
+impl ScenarioBuilder {
+    pub fn new(name: impl Into<String>, seed: u64) -> ScenarioBuilder {
+        ScenarioBuilder {
+            name: name.into(),
+            seed,
+            topo: HostTopology::p4d(),
+            tenants: Vec::new(),
+            spares: Vec::new(),
+            primary: None,
+            horizon: 1800.0,
+            sample_dt: 2.0,
+            controller: ControllerConfig::with_levers(Levers::full()),
+            mu_ref_profile: MigProfile::P2g20gb,
+            move_pause_s: 0.05,
+            epsilon_sigma: 0.32,
+        }
+    }
+
+    pub fn topo(mut self, topo: HostTopology) -> Self {
+        self.topo = topo;
+        self
+    }
+
+    /// Shorthand for `controller(ControllerConfig::with_levers(..))`.
+    pub fn levers(mut self, levers: Levers) -> Self {
+        self.controller = ControllerConfig::with_levers(levers);
+        self
+    }
+
+    pub fn controller(mut self, cfg: ControllerConfig) -> Self {
+        self.controller = cfg;
+        self
+    }
+
+    pub fn horizon(mut self, horizon: f64) -> Self {
+        self.horizon = horizon;
+        self
+    }
+
+    pub fn sample_dt(mut self, dt: f64) -> Self {
+        self.sample_dt = dt;
+        self
+    }
+
+    pub fn epsilon_sigma(mut self, sigma: f64) -> Self {
+        self.epsilon_sigma = sigma;
+        self
+    }
+
+    pub fn mu_ref_profile(mut self, p: MigProfile) -> Self {
+        self.mu_ref_profile = p;
+        self
+    }
+
+    pub fn move_pause_s(mut self, s: f64) -> Self {
+        self.move_pause_s = s;
+        self
+    }
+
+    /// Append a tenant (index = insertion order).
+    pub fn tenant(mut self, t: TenantWorkload) -> Self {
+        self.tenants.push(t);
+        self
+    }
+
+    /// Pre-provision an idle spare instance.
+    pub fn spare(mut self, gpu: usize, profile: MigProfile, start: usize) -> Self {
+        self.spares.push((gpu, profile, start));
+        self
+    }
+
+    /// Override the primary tenant (defaults to the first
+    /// latency-sensitive tenant).
+    pub fn primary(mut self, idx: usize) -> Self {
+        self.primary = Some(idx);
+        self
+    }
+
+    pub fn build(self) -> Scenario {
+        assert!(!self.tenants.is_empty(), "scenario needs at least one tenant");
+        // Validate MPS-shared placements; the actual gpu/profile/instance
+        // of a sharer comes from its peer when `SimWorld::new` builds the
+        // world (single resolution point — the sharer's own placement
+        // fields are placeholders).
+        for (i, t) in self.tenants.iter().enumerate() {
+            if let Some(peer) = t.placement.share_with {
+                assert!(
+                    peer < i,
+                    "tenant {i} shares with tenant {peer}, which must come earlier"
+                );
+                assert!(
+                    self.tenants[peer].placement.share_with.is_none(),
+                    "tenant {peer} is itself MPS-shared; chain sharing is not supported"
+                );
+                // The world only models MPS contention from compute-heavy
+                // sharers (diagnosis + quota guardrails assume it); other
+                // kinds would silently diverge from the controller's model.
+                assert_eq!(
+                    t.kind(),
+                    TenantKind::ComputeHeavy,
+                    "tenant {i} is an MPS sharer but not compute-heavy"
+                );
+            }
+        }
+        if let Some(p) = self.primary {
+            assert!(
+                p < self.tenants.len(),
+                "primary index {p} out of range ({} tenants)",
+                self.tenants.len()
+            );
+        }
+        let primary = self.primary.unwrap_or_else(|| {
+            self.tenants
+                .iter()
+                .position(|t| t.kind() == TenantKind::LatencySensitive)
+                .expect("scenario needs a latency-sensitive tenant as primary")
+        });
+        assert_eq!(
+            self.tenants[primary].kind(),
+            TenantKind::LatencySensitive,
+            "primary tenant must be latency-sensitive"
+        );
+        for (gpu, _, _) in &self.spares {
+            assert!(*gpu < self.topo.num_gpus, "spare on unknown gpu {gpu}");
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            // Sharers carry placeholder placement fields; their real
+            // placement is the peer's.
+            if t.placement.share_with.is_some() {
+                continue;
+            }
+            assert!(
+                t.placement.gpu < self.topo.num_gpus,
+                "tenant {i} placed on unknown gpu {}",
+                t.placement.gpu
+            );
+        }
+        Scenario {
+            name: self.name,
+            topo: self.topo,
+            tenants: self.tenants,
+            spares: self.spares,
+            primary,
+            horizon: self.horizon,
+            sample_dt: self.sample_dt,
+            controller: self.controller,
+            seed: self.seed,
+            mu_ref_profile: self.mu_ref_profile,
+            move_pause_s: self.move_pause_s,
+            epsilon_sigma: self.epsilon_sigma,
+        }
     }
 }
 
@@ -107,23 +506,117 @@ mod tests {
         // §3.2: comparisons use identical interference schedules.
         let a = Scenario::paper_single_host(7, Levers::full());
         let b = Scenario::paper_single_host(7, Levers::none());
-        assert_eq!(a.t2_schedule.phases, b.t2_schedule.phases);
-        assert_eq!(a.t3_schedule.phases, b.t3_schedule.phases);
+        for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(ta.schedule.phases, tb.schedule.phases);
+        }
     }
 
     #[test]
     fn llm_case_overrides_slo() {
         let s = Scenario::paper_llm_case(1, Levers::full());
-        assert_eq!(s.t1.slo_ms, 200.0);
+        assert_eq!(s.primary_spec().slo_ms, 200.0);
         assert_eq!(s.controller.tau_ms, 200.0);
-        assert!(s.t1.compute_ref_ms > 50.0);
+        assert!(s.primary_spec().compute_ref_ms > 50.0);
     }
 
     #[test]
     fn schedules_have_toggles_within_horizon() {
         let s = Scenario::paper_single_host(3, Levers::full());
-        assert!(s.t2_schedule.phases.len() >= 3, "want several phases");
-        assert!(s.t2_schedule.duty_cycle() > 0.3);
-        assert!(s.t2_schedule.duty_cycle() < 0.9);
+        let etl = &s.tenants[1].schedule;
+        assert!(etl.phases.len() >= 3, "want several phases");
+        assert!(etl.duty_cycle() > 0.3);
+        assert!(etl.duty_cycle() < 0.9);
+    }
+
+    #[test]
+    fn paper_world_keeps_three_tenant_shape() {
+        let s = Scenario::paper_single_host(1, Levers::full());
+        assert_eq!(s.n_tenants(), 3);
+        assert_eq!(s.primary, 0);
+        assert_eq!(s.tenants[0].kind(), TenantKind::LatencySensitive);
+        assert_eq!(s.tenants[1].kind(), TenantKind::BandwidthHeavy);
+        assert_eq!(s.tenants[2].kind(), TenantKind::ComputeHeavy);
+        // The trainer is MPS-co-scheduled on the primary's instance.
+        assert_eq!(s.tenants[2].placement.share_with, Some(0));
+        assert_eq!(s.background_tenants(), vec![1, 2]);
+    }
+
+    #[test]
+    fn catalog_resolves_every_name() {
+        for name in Scenario::CATALOG {
+            let s = Scenario::by_name(name, 5, Levers::full())
+                .unwrap_or_else(|| panic!("catalog name {name} did not resolve"));
+            assert!(s.n_tenants() >= 3, "{name} has {} tenants", s.n_tenants());
+        }
+        assert!(Scenario::by_name("single", 5, Levers::none()).is_some());
+        assert!(Scenario::by_name("llm", 5, Levers::none()).is_some());
+        assert!(Scenario::by_name("bogus", 5, Levers::none()).is_none());
+    }
+
+    #[test]
+    fn new_catalog_scenarios_have_at_least_four_tenants() {
+        for name in ["multi_ls_slo_mix", "pcie_hotspot", "diurnal_burst"] {
+            let s = Scenario::by_name(name, 9, Levers::full()).unwrap();
+            assert!(
+                s.n_tenants() >= 4,
+                "{name}: {} tenants, want >= 4",
+                s.n_tenants()
+            );
+            // Primary resolves to a latency-sensitive tenant.
+            assert_eq!(s.tenants[s.primary].kind(), TenantKind::LatencySensitive);
+        }
+    }
+
+    #[test]
+    fn builder_keeps_share_links_for_the_world_to_resolve() {
+        let s = Scenario::paper_single_host(2, Levers::none());
+        assert_eq!(s.tenants[2].placement.share_with, Some(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "chain sharing")]
+    fn builder_rejects_chained_mps_sharing() {
+        ScenarioBuilder::new("chain", 1)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "a",
+                CompSpec::default(),
+                InterferenceSchedule::always_on(100.0),
+                PlacementSpec::shared_with(0),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "b",
+                CompSpec::default(),
+                InterferenceSchedule::always_on(100.0),
+                PlacementSpec::shared_with(1),
+            ))
+            .build();
+    }
+
+    #[test]
+    #[should_panic(expected = "latency-sensitive")]
+    fn builder_requires_a_primary_ls_tenant() {
+        ScenarioBuilder::new("no-ls", 1)
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl",
+                BwSpec::default(),
+                InterferenceSchedule::always_on(100.0),
+                PlacementSpec::dedicated(0, MigProfile::P3g40gb),
+            ))
+            .build();
+    }
+
+    #[test]
+    fn steady_contention_toggles_all_backgrounds() {
+        let on = Scenario::steady_contention(3, Levers::none(), true);
+        let off = Scenario::steady_contention(3, Levers::none(), false);
+        for i in on.background_tenants() {
+            assert!(on.tenants[i].schedule.active_at(on.horizon / 2.0));
+            assert!(!off.tenants[i].schedule.active_at(off.horizon / 2.0));
+        }
     }
 }

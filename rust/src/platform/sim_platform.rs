@@ -1,54 +1,61 @@
 //! The simulated single-host testbed (discrete-event world).
 //!
-//! Reproduces the paper's §3.1 setup: one p4d-style host running
-//! T1 (latency-sensitive inference), T2 (bandwidth-heavy ETL) and
-//! T3 (compute-heavy training), with the controller sampling signals
-//! every Δ and acting through the §2.2 decision space.
+//! Generalizes the paper's §3.1 setup to N tenants: one p4d-style host
+//! running any mix of latency-sensitive, bandwidth-heavy and
+//! compute-heavy [`crate::tenants::TenantWorkload`]s, with the
+//! controller sampling
+//! signals every Δ and acting through the §2.2 decision space. The
+//! paper's fixed T1/T2/T3 world is just the `paper_single_host` catalog
+//! scenario.
 //!
 //! Interference channels (all emergent, none scripted):
-//! * T2's NVMe reads + H2D/D2H bursts share the PS fabric with T1's
-//!   staging + H2D transfers (PCIe + NUMA I/O contention).
-//! * T3, when MPS-co-scheduled on T1's MIG instance (the naive-placement
-//!   baseline), inflates T1's compute service times.
-//! * Controller actions have real costs: MIG reconfigs pause T1 for
-//!   ~18 s (Table 4), moves pause for ~2 s; paused requests queue and
-//!   their waiting time lands in the latency distribution.
+//! * Bandwidth-heavy NVMe reads + H2D/D2H bursts share the PS fabric
+//!   with latency-sensitive staging + H2D transfers (PCIe + NUMA I/O
+//!   contention).
+//! * A compute-heavy tenant MPS-co-scheduled on a latency-sensitive
+//!   tenant's MIG instance (the naive-placement baseline) inflates its
+//!   compute service times.
+//! * Controller actions have real costs: MIG reconfigs pause the primary
+//!   for ~18 s wall (Table 4), moves pause for ~2 s; paused requests
+//!   queue and their waiting time lands in the latency distribution.
 //!
-//! The T1 request pipeline: host staging read (NUMA NVMe link) → H2D
-//! (PCIe uplink of its GPU) → FIFO compute on its MIG instance → done;
-//! latency = c_i·(μ_ref/μ(m))·contention·ε + transfer components — exactly
-//! the §2.5.1 decomposition with the PS model supplying b_i(t).
+//! The latency-sensitive request pipeline: host staging read (NUMA NVMe
+//! link) → H2D (PCIe uplink of its GPU) → FIFO compute on its MIG
+//! instance → done; latency = c_i·(μ_ref/μ(m))·contention·ε + transfer
+//! components — exactly the §2.5.1 decomposition with the PS model
+//! supplying b_i(t).
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::controller::{Action, Controller, IsolationChange, PlannerView};
 use crate::controller::view::{InstanceView, TenantView};
+use crate::controller::{Action, Controller, IsolationChange, PlannerView};
 use crate::fabric::{Fabric, FlowId};
 use crate::gpu::{A100Gpu, InstanceId, MigProfile};
 use crate::sim::EventQueue;
 use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TenantSignal};
 use crate::telemetry::TenantMonitor;
-use crate::tenants::spec::{T1, T2, T3};
-use crate::tenants::TenantId;
+use crate::tenants::{TenantId, TenantKind, WorkloadSpec};
 use crate::util::rng::Pcg64;
 
-use super::result::RunResult;
+use super::result::{RunResult, TenantRunStats};
 use super::scenario::Scenario;
 
-const N_TENANTS: usize = 3;
-
-/// What a completing fabric flow was doing.
+/// What a completing fabric flow was doing, tagged by tenant index.
 #[derive(Clone, Copy, Debug)]
 enum Purpose {
-    T1Stage(u64),
-    T1H2d(u64),
-    T2Read,
-    T2H2d,
-    T2D2h,
-    T3Sync,
+    /// Latency-sensitive host staging read for request `req`.
+    Stage { tenant: usize, req: u64 },
+    /// Latency-sensitive H2D transfer for request `req`.
+    H2d { tenant: usize, req: u64 },
+    /// Bandwidth-heavy cycle phases.
+    CycleRead { tenant: usize },
+    CycleH2d { tenant: usize },
+    CycleD2h { tenant: usize },
+    /// Compute-heavy gradient sync.
+    StepSync { tenant: usize },
 }
 
-/// T1 request lifecycle state.
+/// Latency-sensitive request lifecycle state.
 #[derive(Clone, Copy, Debug)]
 enum ReqPhase {
     Staging,
@@ -85,7 +92,7 @@ struct SavedConfig {
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
-enum T2Phase {
+enum CyclePhase {
     Read,
     H2d,
     Transform,
@@ -93,20 +100,82 @@ enum T2Phase {
     Idle,
 }
 
-/// Discrete events.
+/// Discrete events, generic over the tenant index.
 #[derive(Clone, Copy, Debug)]
 enum Event {
-    T1Arrival,
+    /// Next open-loop arrival for a latency-sensitive tenant.
+    Arrival { tenant: usize },
     FlowsDone { version: u64 },
-    T1ComputeDone { req: u64 },
-    T2TransformDone,
-    T3StepDone,
-    ToggleT2,
-    ToggleT3,
+    /// Latency-sensitive compute finished.
+    ComputeDone { tenant: usize, req: u64 },
+    /// Bandwidth-heavy GPU transform finished.
+    CycleDone { tenant: usize },
+    /// Compute-heavy training step finished.
+    StepDone { tenant: usize },
+    /// Background tenant schedule edge.
+    Toggle { tenant: usize },
     Sample,
-    PauseDone,
-    ThrottleExpire { deadline_bits: u64 },
+    PauseDone { tenant: usize },
+    ThrottleExpire { tenant: usize, deadline_bits: u64 },
 }
+
+/// Per-tenant runtime state for a latency-sensitive tenant.
+#[derive(Clone, Debug)]
+struct LsRt {
+    arrival_rng: Pcg64,
+    size_rng: Pcg64,
+    service_rng: Pcg64,
+    next_req: u64,
+    reqs: BTreeMap<u64, ReqState>,
+    compute_queue: VecDeque<u64>,
+    computing: Option<u64>,
+    paused: bool,
+    pause_backlog: Vec<u64>,
+    /// Staging transfers waiting for a DMA slot (bounded I/O depth keeps
+    /// post-pause backlog drains from exploding the PS flow set).
+    stage_pending: VecDeque<u64>,
+    inflight_transfers: usize,
+}
+
+/// Per-tenant runtime state for a bandwidth-heavy tenant.
+#[derive(Clone, Debug)]
+struct BwRt {
+    rng: Pcg64,
+    phase: CyclePhase,
+    cycle: (f64, f64, f64, f64),
+    cycle_started: f64,
+}
+
+/// Per-tenant runtime state for a compute-heavy tenant.
+#[derive(Clone, Debug)]
+struct CompRt {
+    rng: Pcg64,
+    stepping: bool,
+    quota: f64,
+    step_started: f64,
+}
+
+#[derive(Clone, Debug)]
+enum TenantRt {
+    Ls(LsRt),
+    Bw(BwRt),
+    Comp(CompRt),
+}
+
+/// Workload RNG stream ids. The paper's three-tenant layout keeps its
+/// historical stream numbers (so seeded runs replay the seed repo's
+/// dynamics bit-for-bit); other (index, kind) combinations get a
+/// disjoint block per tenant.
+fn stream_base(index: usize, kind: TenantKind) -> u64 {
+    match (index, kind) {
+        (0, TenantKind::LatencySensitive) => 1, // +0 arrival, +1 size, +2 service
+        (1, TenantKind::BandwidthHeavy) => 4,
+        (2, TenantKind::ComputeHeavy) => 5,
+        _ => 100 + 8 * index as u64,
+    }
+}
+
+const RECONFIG_STREAM: u64 = 6;
 
 /// The world.
 pub struct SimWorld {
@@ -119,37 +188,15 @@ pub struct SimWorld {
     gpus: Vec<A100Gpu>,
     placements: Vec<Placement>,
 
-    // RNG streams (workload streams independent of controller decisions).
-    arrival_rng: Pcg64,
-    size_rng: Pcg64,
-    service_rng: Pcg64,
-    t2_rng: Pcg64,
-    t3_rng: Pcg64,
+    // Per-tenant runtime state (workload streams independent of
+    // controller decisions).
+    rt: Vec<TenantRt>,
+    /// Background tenants toggle; latency-sensitive tenants stay true.
+    active: Vec<bool>,
+    /// Per-tenant cgroup io.max throttle (GB/s) and its expiry deadline.
+    throttles: Vec<Option<f64>>,
+    throttle_deadlines: Vec<Option<f64>>,
     reconfig_rng: Pcg64,
-
-    // T1 state.
-    next_req: u64,
-    reqs: BTreeMap<u64, ReqState>,
-    compute_queue: VecDeque<u64>,
-    computing: Option<u64>,
-    paused: bool,
-    pause_backlog: Vec<u64>,
-    /// Staging transfers waiting for a DMA slot (bounded I/O depth keeps
-    /// post-pause backlog drains from exploding the PS flow set).
-    stage_pending: VecDeque<u64>,
-    t1_inflight_transfers: usize,
-
-    // T2 state.
-    t2_active: bool,
-    t2_phase: T2Phase,
-    t2_cycle: (f64, f64, f64, f64),
-    t2_throttle: Option<f64>,
-    t2_throttle_deadline: Option<f64>,
-
-    // T3 state.
-    t3_active: bool,
-    t3_stepping: bool,
-    t3_quota: f64,
 
     // Telemetry.
     monitors: Vec<TenantMonitor>,
@@ -169,57 +216,103 @@ pub struct SimWorld {
 }
 
 impl SimWorld {
-    /// Build the baseline world: GPU0 = [4g.40gb: T1+T3 via MPS,
-    /// 3g.40gb: T2], spare 2g.20gb on GPU4 (other switch + other NUMA —
-    /// the static layout's idle headroom the placement lever can use).
+    /// Build the world from a scenario: create each tenant's MIG instance
+    /// (or join an MPS-shared peer), then the pre-provisioned spares.
+    /// The paper baseline: GPU0 = [4g.40gb: primary + trainer via MPS,
+    /// 3g.40gb: ETL], spare 3g.40gb on GPU1.
     pub fn new(scenario: Scenario) -> SimWorld {
         let seed = scenario.seed;
+        let n = scenario.n_tenants();
         let mut gpus: Vec<A100Gpu> = (0..scenario.topo.num_gpus).map(A100Gpu::new).collect();
-        let shared = gpus[0].create_at(MigProfile::P4g40gb, 0).expect("4g@0");
-        let t2_inst = gpus[0].create_at(MigProfile::P3g40gb, 4).expect("3g@4");
-        // Static spare: pre-provisioned but unused. GPU1 sits under the
-        // SAME PCIe switch as GPU0 (p4d pairs GPUs per switch), so a pure
-        // placement move escapes the MPS co-scheduling but not the PCIe /
-        // NUMA pressure — only dynamic MIG (create on a clean GPU) or
-        // guardrails address those.
-        let _spare = gpus[1].create_at(MigProfile::P3g40gb, 0).expect("3g@0 gpu1");
 
-        let placements = vec![
-            Placement {
-                gpu: 0,
-                instance: shared,
-                profile: MigProfile::P4g40gb,
-                peers: vec![2],
-                numa: 0,
-            },
-            Placement {
-                gpu: 0,
-                instance: t2_inst,
-                profile: MigProfile::P3g40gb,
-                peers: vec![],
-                numa: 0,
-            },
-            Placement {
-                gpu: 0,
-                instance: shared,
-                profile: MigProfile::P4g40gb,
-                peers: vec![0],
-                numa: 0,
-            },
-        ];
+        // Instances in tenant order; MPS sharers reuse the peer's.
+        let mut placements: Vec<Placement> = Vec::with_capacity(n);
+        for (i, t) in scenario.tenants.iter().enumerate() {
+            let p = t.placement;
+            if let Some(peer) = p.share_with {
+                assert!(peer < i, "share_with must reference an earlier tenant");
+                let shared = placements[peer].clone();
+                placements[peer].peers.push(i);
+                placements.push(Placement {
+                    gpu: shared.gpu,
+                    instance: shared.instance,
+                    profile: shared.profile,
+                    peers: vec![peer],
+                    numa: shared.numa,
+                });
+                continue;
+            }
+            let gpu = &mut gpus[p.gpu];
+            let instance = match p.start {
+                Some(s) => gpu.create_at(p.profile, s).unwrap_or_else(|e| {
+                    panic!("tenant {i} ({}) placement failed: {e:?}", t.name)
+                }),
+                None => gpu.create(p.profile).unwrap_or_else(|e| {
+                    panic!("tenant {i} ({}) placement failed: {e:?}", t.name)
+                }),
+            };
+            placements.push(Placement {
+                gpu: p.gpu,
+                instance,
+                profile: p.profile,
+                peers: Vec::new(),
+                numa: scenario.topo.numa_of_gpu(p.gpu),
+            });
+        }
+        for &(gpu, profile, start) in &scenario.spares {
+            gpus[gpu]
+                .create_at(profile, start)
+                .unwrap_or_else(|e| panic!("spare on gpu{gpu} failed: {e:?}"));
+        }
+
+        // Per-tenant runtime state + monitors, with seed-stable streams.
+        let mut rt = Vec::with_capacity(n);
+        let mut monitors = Vec::with_capacity(n);
+        for (i, t) in scenario.tenants.iter().enumerate() {
+            let base = stream_base(i, t.kind());
+            match &t.spec {
+                WorkloadSpec::LatencySensitive(spec) => {
+                    rt.push(TenantRt::Ls(LsRt {
+                        arrival_rng: Pcg64::new(seed, base),
+                        size_rng: Pcg64::new(seed, base + 1),
+                        service_rng: Pcg64::new(seed, base + 2),
+                        next_req: 0,
+                        reqs: BTreeMap::new(),
+                        compute_queue: VecDeque::new(),
+                        computing: None,
+                        paused: false,
+                        pause_backlog: Vec::new(),
+                        stage_pending: VecDeque::new(),
+                        inflight_transfers: 0,
+                    }));
+                    monitors.push(TenantMonitor::new(spec.slo_ms, 4096));
+                }
+                WorkloadSpec::BandwidthHeavy(_) => {
+                    rt.push(TenantRt::Bw(BwRt {
+                        rng: Pcg64::new(seed, base),
+                        phase: CyclePhase::Idle,
+                        cycle: (0.0, 0.0, 0.0, 0.0),
+                        cycle_started: 0.0,
+                    }));
+                    monitors.push(TenantMonitor::new(f64::MAX, 64));
+                }
+                WorkloadSpec::ComputeHeavy(spec) => {
+                    rt.push(TenantRt::Comp(CompRt {
+                        rng: Pcg64::new(seed, base),
+                        stepping: false,
+                        quota: spec.mps_quota,
+                        step_started: 0.0,
+                    }));
+                    monitors.push(TenantMonitor::new(f64::MAX, 64));
+                }
+            }
+        }
 
         let fabric = Fabric::new(&scenario.topo);
         let n_links = scenario.topo.num_links;
-        let monitors = vec![
-            TenantMonitor::new(scenario.t1.slo_ms, 4096),
-            TenantMonitor::new(f64::MAX, 64),
-            TenantMonitor::new(f64::MAX, 64),
-        ];
-        let controller = scenario
-            .controller
-            .levers
-            .any()
-            .then(|| Controller::new(scenario.controller.clone()));
+        let controller = scenario.controller.levers.any().then(|| {
+            Controller::for_primary(scenario.controller.clone(), TenantId(scenario.primary))
+        });
 
         let mut w = SimWorld {
             q: EventQueue::new(),
@@ -229,32 +322,15 @@ impl SimWorld {
             flow_purpose: BTreeMap::new(),
             gpus,
             placements,
-            arrival_rng: Pcg64::new(seed, 1),
-            size_rng: Pcg64::new(seed, 2),
-            service_rng: Pcg64::new(seed, 3),
-            t2_rng: Pcg64::new(seed, 4),
-            t3_rng: Pcg64::new(seed, 5),
-            reconfig_rng: Pcg64::new(seed, 6),
-            next_req: 0,
-            reqs: BTreeMap::new(),
-            compute_queue: VecDeque::new(),
-            computing: None,
-            paused: false,
-            pause_backlog: Vec::new(),
-            stage_pending: VecDeque::new(),
-            t1_inflight_transfers: 0,
-            t2_active: false,
-            t2_phase: T2Phase::Idle,
-            t2_cycle: (0.0, 0.0, 0.0, 0.0),
-            t2_throttle: None,
-            t2_throttle_deadline: None,
-            t3_active: false,
-            t3_stepping: false,
-            t3_quota: 100.0,
+            rt,
+            active: vec![false; n],
+            throttles: vec![None; n],
+            throttle_deadlines: vec![None; n],
+            reconfig_rng: Pcg64::new(seed, RECONFIG_STREAM),
             monitors,
             last_link_gb: vec![0.0; n_links],
             last_link_util_integral: vec![0.0; n_links],
-            last_owner_gb: vec![0.0; N_TENANTS],
+            last_owner_gb: vec![0.0; n],
             last_sample_t: 0.0,
             sm_util_integral: 0.0,
             sm_util_samples: 0,
@@ -270,21 +346,74 @@ impl SimWorld {
     }
 
     fn seed_events(&mut self) {
-        let gap = self.scenario.t1.next_gap(&mut self.arrival_rng);
-        self.q.push_at(gap, Event::T1Arrival);
-        for p in &self.scenario.t2_schedule.phases.clone() {
-            self.q.push_at(p.on, Event::ToggleT2);
-            self.q.push_at(p.off, Event::ToggleT2);
-        }
-        for p in &self.scenario.t3_schedule.phases.clone() {
-            self.q.push_at(p.on, Event::ToggleT3);
-            self.q.push_at(p.off, Event::ToggleT3);
+        for i in 0..self.scenario.n_tenants() {
+            match self.scenario.tenants[i].kind() {
+                TenantKind::LatencySensitive => {
+                    self.active[i] = true;
+                    let gap = {
+                        let (spec, ls) = self.ls_parts(i);
+                        spec.next_gap(&mut ls.arrival_rng)
+                    };
+                    self.q.push_at(gap, Event::Arrival { tenant: i });
+                }
+                TenantKind::BandwidthHeavy | TenantKind::ComputeHeavy => {
+                    for p in self.scenario.tenants[i].schedule.phases.clone() {
+                        self.q.push_at(p.on, Event::Toggle { tenant: i });
+                        self.q.push_at(p.off, Event::Toggle { tenant: i });
+                    }
+                }
+            }
         }
         let dt = self.scenario.sample_dt;
         self.q.push_at(dt, Event::Sample);
     }
 
-    // --- fabric helpers ---------------------------------------------------
+    // --- per-tenant state accessors ----------------------------------------
+
+    fn ls_parts(&mut self, i: usize) -> (&crate::tenants::LsSpec, &mut LsRt) {
+        let spec = match &self.scenario.tenants[i].spec {
+            WorkloadSpec::LatencySensitive(s) => s,
+            other => panic!("tenant {i} is not latency-sensitive: {:?}", other.kind()),
+        };
+        let rt = match &mut self.rt[i] {
+            TenantRt::Ls(l) => l,
+            _ => unreachable!("rt/spec kind mismatch for tenant {i}"),
+        };
+        (spec, rt)
+    }
+
+    fn bw_parts(&mut self, i: usize) -> (&crate::tenants::BwSpec, &mut BwRt) {
+        let spec = match &self.scenario.tenants[i].spec {
+            WorkloadSpec::BandwidthHeavy(s) => s,
+            other => panic!("tenant {i} is not bandwidth-heavy: {:?}", other.kind()),
+        };
+        let rt = match &mut self.rt[i] {
+            TenantRt::Bw(b) => b,
+            _ => unreachable!("rt/spec kind mismatch for tenant {i}"),
+        };
+        (spec, rt)
+    }
+
+    fn comp_parts(&mut self, i: usize) -> (&crate::tenants::CompSpec, &mut CompRt) {
+        let spec = match &self.scenario.tenants[i].spec {
+            WorkloadSpec::ComputeHeavy(s) => s,
+            other => panic!("tenant {i} is not compute-heavy: {:?}", other.kind()),
+        };
+        let rt = match &mut self.rt[i] {
+            TenantRt::Comp(c) => c,
+            _ => unreachable!("rt/spec kind mismatch for tenant {i}"),
+        };
+        (spec, rt)
+    }
+
+    fn comp_quota(&self, i: usize) -> f64 {
+        match &self.rt[i] {
+            TenantRt::Comp(c) => c.quota,
+            _ => 100.0,
+        }
+    }
+
+    // --- fabric helpers -----------------------------------------------------
 
     fn sync_fabric(&mut self, now: f64) {
         let dt = now - self.fabric_synced_at;
@@ -306,200 +435,277 @@ impl SimWorld {
         }
     }
 
-    fn start_flow(&mut self, now: f64, link: crate::topo::LinkId, gb: f64, owner: usize, purpose: Purpose) {
+    fn start_flow(
+        &mut self,
+        now: f64,
+        link: crate::topo::LinkId,
+        gb: f64,
+        owner: usize,
+        purpose: Purpose,
+    ) {
         self.sync_fabric(now);
-        let cap = if owner == 1 { self.t2_throttle } else { None };
+        let cap = self.throttles[owner];
         let id = self.fabric.start(link, gb.max(1e-6), 1.0, cap, owner);
         self.flow_purpose.insert(id, purpose);
         self.reschedule_fabric(now);
     }
 
-    // --- T1 pipeline --------------------------------------------------------
-
-    fn t1_links(&self) -> (crate::topo::LinkId, crate::topo::LinkId) {
-        let p = &self.placements[0];
+    /// (NVMe link, PCIe uplink) of a tenant's current placement.
+    fn tenant_links(&self, i: usize) -> (crate::topo::LinkId, crate::topo::LinkId) {
+        let p = &self.placements[i];
         let pcie = self.scenario.topo.link_of_gpu(p.gpu);
         let nvme = self.scenario.topo.numa_nodes[p.numa].nvme_link;
         (nvme, pcie)
     }
 
-    fn on_t1_arrival(&mut self, now: f64) {
-        // Schedule next arrival first (open-loop Poisson).
-        let gap = self.scenario.t1.next_gap(&mut self.arrival_rng);
-        self.q.push_at(now + gap, Event::T1Arrival);
+    // --- latency-sensitive pipeline ----------------------------------------
 
-        let id = self.next_req;
-        self.next_req += 1;
-        let r = self.scenario.t1.sample(&mut self.size_rng, id, now);
-        self.reqs.insert(
-            id,
-            ReqState {
-                arrival: now,
-                stage_gb: r.host_stage_gb,
-                h2d_gb: r.h2d_gb,
-                compute_ref_ms: r.compute_ref_ms,
-                phase: ReqPhase::Staging,
-            },
-        );
-        if self.paused {
-            self.pause_backlog.push(id);
-            return;
+    fn on_arrival(&mut self, now: f64, i: usize) {
+        // Schedule the next arrival first (open-loop Poisson).
+        let gap = {
+            let (spec, ls) = self.ls_parts(i);
+            spec.next_gap(&mut ls.arrival_rng)
+        };
+        self.q.push_at(now + gap, Event::Arrival { tenant: i });
+
+        let (id, paused) = {
+            let (spec, ls) = self.ls_parts(i);
+            let id = ls.next_req;
+            ls.next_req += 1;
+            let r = spec.sample(&mut ls.size_rng, id, now);
+            ls.reqs.insert(
+                id,
+                ReqState {
+                    arrival: now,
+                    stage_gb: r.host_stage_gb,
+                    h2d_gb: r.h2d_gb,
+                    compute_ref_ms: r.compute_ref_ms,
+                    phase: ReqPhase::Staging,
+                },
+            );
+            if ls.paused {
+                ls.pause_backlog.push(id);
+            }
+            (id, ls.paused)
+        };
+        if !paused {
+            self.begin_staging(now, i, id);
         }
-        self.begin_staging(now, id);
     }
 
     /// Bounded transfer concurrency (DMA engines / io_uring depth): also
     /// keeps post-pause backlog drains from creating thousands of PS flows.
     const MAX_INFLIGHT: usize = 8;
 
-    fn begin_staging(&mut self, now: f64, id: u64) {
-        if self.t1_inflight_transfers >= Self::MAX_INFLIGHT {
-            self.stage_pending.push_back(id);
-            return;
-        }
-        self.t1_inflight_transfers += 1;
-        let (nvme, _) = self.t1_links();
-        let gb = self.reqs[&id].stage_gb;
-        self.start_flow(now, nvme, gb, 0, Purpose::T1Stage(id));
+    fn begin_staging(&mut self, now: f64, i: usize, id: u64) {
+        let gb = {
+            let (_, ls) = self.ls_parts(i);
+            if ls.inflight_transfers >= Self::MAX_INFLIGHT {
+                ls.stage_pending.push_back(id);
+                return;
+            }
+            ls.inflight_transfers += 1;
+            ls.reqs[&id].stage_gb
+        };
+        let (nvme, _) = self.tenant_links(i);
+        self.start_flow(now, nvme, gb, i, Purpose::Stage { tenant: i, req: id });
     }
 
-    fn on_t1_stage_done(&mut self, now: f64, id: u64) {
-        if let Some(r) = self.reqs.get_mut(&id) {
-            r.phase = ReqPhase::H2d;
-        }
-        let (_, pcie) = self.t1_links();
-        let gb = self.reqs[&id].h2d_gb;
-        self.start_flow(now, pcie, gb, 0, Purpose::T1H2d(id));
+    fn on_stage_done(&mut self, now: f64, i: usize, id: u64) {
+        let gb = {
+            let (_, ls) = self.ls_parts(i);
+            if let Some(r) = ls.reqs.get_mut(&id) {
+                r.phase = ReqPhase::H2d;
+            }
+            ls.reqs[&id].h2d_gb
+        };
+        let (_, pcie) = self.tenant_links(i);
+        self.start_flow(now, pcie, gb, i, Purpose::H2d { tenant: i, req: id });
     }
 
-    fn on_t1_h2d_done(&mut self, now: f64, id: u64) {
-        if let Some(r) = self.reqs.get_mut(&id) {
-            r.phase = ReqPhase::Queued;
+    fn on_h2d_done(&mut self, now: f64, i: usize, id: u64) {
+        let next_stage = {
+            let (_, ls) = self.ls_parts(i);
+            if let Some(r) = ls.reqs.get_mut(&id) {
+                r.phase = ReqPhase::Queued;
+            }
+            ls.inflight_transfers = ls.inflight_transfers.saturating_sub(1);
+            if !ls.paused {
+                ls.stage_pending.pop_front()
+            } else {
+                None
+            }
+        };
+        if let Some(next) = next_stage {
+            self.begin_staging(now, i, next);
         }
-        self.t1_inflight_transfers = self.t1_inflight_transfers.saturating_sub(1);
-        if !self.paused {
-            if let Some(next) = self.stage_pending.pop_front() {
-                self.begin_staging(now, next);
+        {
+            let (_, ls) = self.ls_parts(i);
+            ls.compute_queue.push_back(id);
+        }
+        self.maybe_start_compute(now, i);
+    }
+
+    /// Service time on the tenant's current instance: μ-scaling ×
+    /// MPS-contention from active compute-heavy peers × lognormal ε.
+    fn service_s(&mut self, i: usize, work_ref_ms: f64) -> f64 {
+        let p = &self.placements[i];
+        let mu = p.profile.mu() / self.scenario.mu_ref_profile.mu();
+        let mut contention = 1.0;
+        for &peer in &p.peers {
+            if !self.active[peer] {
+                continue;
+            }
+            if let WorkloadSpec::ComputeHeavy(spec) = &self.scenario.tenants[peer].spec {
+                contention *= spec.contention_factor_at(self.comp_quota(peer));
             }
         }
-        self.compute_queue.push_back(id);
-        self.maybe_start_compute(now);
-    }
-
-    fn t1_service_s(&mut self, work_ref_ms: f64) -> f64 {
-        let p = &self.placements[0];
-        let mu = p.profile.mu() / self.scenario.mu_ref_profile.mu();
-        // MPS-shared peer active => SM contention inflation.
-        let shared_with_active_t3 = p.peers.contains(&2) && self.t3_active;
-        let contention = if shared_with_active_t3 {
-            let mut t3 = self.scenario.t3.clone();
-            t3.mps_quota = self.t3_quota;
-            t3.contention_factor()
-        } else {
-            1.0
-        };
-        let eps = self.service_rng.lognormal(0.0, self.scenario.epsilon_sigma);
+        let sigma = self.scenario.epsilon_sigma;
+        let (_, ls) = self.ls_parts(i);
+        let eps = ls.service_rng.lognormal(0.0, sigma);
         (work_ref_ms / 1000.0) / mu * contention * eps
     }
 
-    fn maybe_start_compute(&mut self, now: f64) {
-        if self.computing.is_some() || self.paused {
-            return;
-        }
-        let Some(id) = self.compute_queue.pop_front() else {
-            return;
+    fn maybe_start_compute(&mut self, now: f64, i: usize) {
+        let (id, work) = {
+            let (_, ls) = self.ls_parts(i);
+            if ls.computing.is_some() || ls.paused {
+                return;
+            }
+            let Some(id) = ls.compute_queue.pop_front() else {
+                return;
+            };
+            (id, ls.reqs[&id].compute_ref_ms)
         };
-        let work = self.reqs[&id].compute_ref_ms;
-        let st = self.t1_service_s(work);
-        if let Some(r) = self.reqs.get_mut(&id) {
-            r.phase = ReqPhase::Computing;
+        let st = self.service_s(i, work);
+        {
+            let (_, ls) = self.ls_parts(i);
+            if let Some(r) = ls.reqs.get_mut(&id) {
+                r.phase = ReqPhase::Computing;
+            }
+            ls.computing = Some(id);
         }
-        self.computing = Some(id);
-        self.q.push_at(now + st, Event::T1ComputeDone { req: id });
+        self.q
+            .push_at(now + st, Event::ComputeDone { tenant: i, req: id });
     }
 
-    fn on_t1_compute_done(&mut self, now: f64, id: u64) {
-        if self.computing != Some(id) {
-            return; // stale event after rollback/pause rebuild
+    fn on_compute_done(&mut self, now: f64, i: usize, id: u64) {
+        let latency_ms = {
+            let (_, ls) = self.ls_parts(i);
+            if ls.computing != Some(id) {
+                return; // stale event after rollback/pause rebuild
+            }
+            ls.computing = None;
+            ls.reqs.remove(&id).map(|r| (now - r.arrival) * 1000.0)
+        };
+        if let Some(ms) = latency_ms {
+            self.monitors[i].observe(ms);
         }
-        self.computing = None;
-        if let Some(r) = self.reqs.remove(&id) {
-            let latency_ms = (now - r.arrival) * 1000.0;
-            self.monitors[0].observe(latency_ms);
-        }
-        self.maybe_start_compute(now);
+        self.maybe_start_compute(now, i);
     }
 
-    // --- T2 ETL cycle -------------------------------------------------------
+    // --- bandwidth-heavy ETL cycle ------------------------------------------
 
-    fn t2_links(&self) -> (crate::topo::LinkId, crate::topo::LinkId) {
-        let p = &self.placements[1];
-        let pcie = self.scenario.topo.link_of_gpu(p.gpu);
-        let nvme = self.scenario.topo.numa_nodes[p.numa].nvme_link;
-        (nvme, pcie)
-    }
-
-    fn t2_begin_cycle(&mut self, now: f64) {
-        if !self.t2_active || self.t2_phase != T2Phase::Idle {
+    fn begin_cycle(&mut self, now: f64, i: usize) {
+        if !self.active[i] {
             return;
         }
-        self.t2_cycle = self.scenario.t2.sample_cycle(&mut self.t2_rng);
-        self.t2_phase = T2Phase::Read;
-        let (nvme, _) = self.t2_links();
-        let gb = self.t2_cycle.0;
-        self.start_flow(now, nvme, gb, 1, Purpose::T2Read);
+        let gb = {
+            let (spec, bw) = self.bw_parts(i);
+            if bw.phase != CyclePhase::Idle {
+                return;
+            }
+            bw.cycle = spec.sample_cycle(&mut bw.rng);
+            bw.phase = CyclePhase::Read;
+            bw.cycle_started = now;
+            bw.cycle.0
+        };
+        let (nvme, _) = self.tenant_links(i);
+        self.start_flow(now, nvme, gb, i, Purpose::CycleRead { tenant: i });
     }
 
-    fn on_t2_flow_done(&mut self, now: f64, which: Purpose) {
+    fn on_cycle_flow_done(&mut self, now: f64, which: Purpose) {
         match which {
-            Purpose::T2Read => {
-                self.t2_phase = T2Phase::H2d;
-                let (_, pcie) = self.t2_links();
-                let gb = self.t2_cycle.1;
-                self.start_flow(now, pcie, gb, 1, Purpose::T2H2d);
+            Purpose::CycleRead { tenant: i } => {
+                let gb = {
+                    let (_, bw) = self.bw_parts(i);
+                    bw.phase = CyclePhase::H2d;
+                    bw.cycle.1
+                };
+                let (_, pcie) = self.tenant_links(i);
+                self.start_flow(now, pcie, gb, i, Purpose::CycleH2d { tenant: i });
             }
-            Purpose::T2H2d => {
-                self.t2_phase = T2Phase::Transform;
-                self.q.push_at(now + self.t2_cycle.3, Event::T2TransformDone);
+            Purpose::CycleH2d { tenant: i } => {
+                let transform_s = {
+                    let (_, bw) = self.bw_parts(i);
+                    bw.phase = CyclePhase::Transform;
+                    bw.cycle.3
+                };
+                self.q
+                    .push_at(now + transform_s, Event::CycleDone { tenant: i });
             }
-            Purpose::T2D2h => {
-                self.t2_phase = T2Phase::Idle;
-                self.t2_begin_cycle(now); // next cycle if still active
+            Purpose::CycleD2h { tenant: i } => {
+                let started = {
+                    let (_, bw) = self.bw_parts(i);
+                    bw.phase = CyclePhase::Idle;
+                    bw.cycle_started
+                };
+                self.monitors[i].observe((now - started) * 1000.0);
+                self.begin_cycle(now, i); // next cycle if still active
             }
             _ => unreachable!(),
         }
     }
 
-    fn on_t2_transform_done(&mut self, now: f64) {
-        if self.t2_phase != T2Phase::Transform {
-            return;
-        }
-        self.t2_phase = T2Phase::D2h;
-        let (_, pcie) = self.t2_links();
-        let gb = self.t2_cycle.2;
-        self.start_flow(now, pcie, gb, 1, Purpose::T2D2h);
+    fn on_transform_done(&mut self, now: f64, i: usize) {
+        let gb = {
+            let (_, bw) = self.bw_parts(i);
+            if bw.phase != CyclePhase::Transform {
+                return;
+            }
+            bw.phase = CyclePhase::D2h;
+            bw.cycle.2
+        };
+        let (_, pcie) = self.tenant_links(i);
+        self.start_flow(now, pcie, gb, i, Purpose::CycleD2h { tenant: i });
     }
 
-    // --- T3 training loop ---------------------------------------------------
+    // --- compute-heavy training loop ----------------------------------------
 
-    fn t3_begin_step(&mut self, now: f64) {
-        if !self.t3_active || self.t3_stepping {
+    fn begin_step(&mut self, now: f64, i: usize) {
+        if !self.active[i] {
             return;
         }
-        self.t3_stepping = true;
-        let (step_s, _sync) = self.scenario.t3.sample_step(&mut self.t3_rng);
-        self.q.push_at(now + step_s, Event::T3StepDone);
+        let step_s = {
+            let (spec, comp) = self.comp_parts(i);
+            if comp.stepping {
+                return;
+            }
+            comp.stepping = true;
+            comp.step_started = now;
+            let (step_s, _sync) = spec.sample_step(&mut comp.rng);
+            step_s
+        };
+        self.q.push_at(now + step_s, Event::StepDone { tenant: i });
     }
 
-    fn on_t3_step_done(&mut self, now: f64) {
-        self.t3_stepping = false;
-        if self.t3_active {
-            // Gradient sync over the PCIe uplink of T3's GPU.
-            let p = &self.placements[2];
-            let link = self.scenario.topo.link_of_gpu(p.gpu);
-            let (_s, sync_gb) = self.scenario.t3.sample_step(&mut self.t3_rng);
-            self.start_flow(now, link, sync_gb, 2, Purpose::T3Sync);
-            self.t3_begin_step(now);
+    fn on_step_done(&mut self, now: f64, i: usize) {
+        let started = {
+            let (_, comp) = self.comp_parts(i);
+            comp.stepping = false;
+            comp.step_started
+        };
+        self.monitors[i].observe((now - started) * 1000.0);
+        if self.active[i] {
+            // Gradient sync over the PCIe uplink of the tenant's GPU.
+            let sync_gb = {
+                let (spec, comp) = self.comp_parts(i);
+                let (_s, sync_gb) = spec.sample_step(&mut comp.rng);
+                sync_gb
+            };
+            let (_, pcie) = self.tenant_links(i);
+            self.start_flow(now, pcie, sync_gb, i, Purpose::StepSync { tenant: i });
+            self.begin_step(now, i);
         }
     }
 
@@ -512,11 +718,12 @@ impl SimWorld {
         });
     }
 
-    fn pause_t1(&mut self, now: f64, duration: f64) {
-        self.paused = true;
-        // In-flight compute finishes (we let the scheduled event stand);
+    fn pause_tenant(&mut self, now: f64, i: usize, duration: f64) {
+        let (_, ls) = self.ls_parts(i);
+        ls.paused = true;
+        // In-flight compute finishes (the scheduled event stands);
         // queued/incoming requests wait for PauseDone.
-        self.q.push_at(now + duration, Event::PauseDone);
+        self.q.push_at(now + duration, Event::PauseDone { tenant: i });
     }
 
     /// Tenant-visible pause for a MIG reconfiguration. The full
@@ -529,45 +736,67 @@ impl SimWorld {
         (0.12 * reconfig_wall_s).clamp(0.5, 2.5)
     }
 
-    fn on_pause_done(&mut self, now: f64) {
-        self.paused = false;
-        // Pending transfers (pre-pause) keep FIFO priority over the
-        // requests that arrived during the pause.
-        let mut work: Vec<u64> = self.stage_pending.drain(..).collect();
-        work.extend(self.pause_backlog.drain(..));
+    fn on_pause_done(&mut self, now: f64, i: usize) {
+        let work = {
+            let (_, ls) = self.ls_parts(i);
+            ls.paused = false;
+            // Pending transfers (pre-pause) keep FIFO priority over the
+            // requests that arrived during the pause.
+            let mut work: Vec<u64> = ls.stage_pending.drain(..).collect();
+            work.extend(ls.pause_backlog.drain(..));
+            work
+        };
         for id in work {
-            self.begin_staging(now, id); // cap re-queues the excess
+            self.begin_staging(now, i, id); // cap re-queues the excess
         }
-        self.maybe_start_compute(now);
+        self.maybe_start_compute(now, i);
     }
 
     /// Apply one controller action to the world.
     fn apply_action(&mut self, now: f64, action: Action) {
+        let primary = self.scenario.primary;
         match action {
             Action::SetIoThrottle { tenant, cap_gbps } => {
-                if tenant == T2 {
-                    self.t2_throttle = cap_gbps;
-                    self.sync_fabric(now);
-                    self.fabric.set_owner_cap(1, cap_gbps);
-                    self.reschedule_fabric(now);
-                    if cap_gbps.is_some() {
-                        // Bounded window Z (§2.4): auto-expire.
-                        let deadline = now + self.scenario.controller.throttle_window_s;
-                        self.t2_throttle_deadline = Some(deadline);
-                        self.q.push_at(
-                            deadline,
-                            Event::ThrottleExpire {
-                                deadline_bits: deadline.to_bits(),
-                            },
-                        );
-                    } else {
-                        self.t2_throttle_deadline = None;
-                    }
+                let t = tenant.0;
+                if t >= self.scenario.n_tenants() {
+                    return;
+                }
+                // cgroup io.max guardrails only bite on NVMe-gated
+                // (bandwidth-heavy) pipelines. Throttling a
+                // latency-sensitive neighbor would trade one tenant's SLO
+                // for another's, and a block-I/O cap cannot touch a
+                // trainer's pure-PCIe sync traffic on real hardware — the
+                // seed world enforced both by restricting throttles to
+                // the T2 slot; other kinds stay world no-ops.
+                if self.scenario.tenants[t].kind() != TenantKind::BandwidthHeavy {
+                    return;
+                }
+                self.throttles[t] = cap_gbps;
+                self.sync_fabric(now);
+                self.fabric.set_owner_cap(t, cap_gbps);
+                self.reschedule_fabric(now);
+                if cap_gbps.is_some() {
+                    // Bounded window Z (§2.4): auto-expire.
+                    let deadline = now + self.scenario.controller.throttle_window_s;
+                    self.throttle_deadlines[t] = Some(deadline);
+                    self.q.push_at(
+                        deadline,
+                        Event::ThrottleExpire {
+                            tenant: t,
+                            deadline_bits: deadline.to_bits(),
+                        },
+                    );
+                } else {
+                    self.throttle_deadlines[t] = None;
                 }
             }
             Action::SetMpsQuota { tenant, quota } => {
-                if tenant == T3 {
-                    self.t3_quota = quota.clamp(0.0, 100.0);
+                let t = tenant.0;
+                if t >= self.scenario.n_tenants() {
+                    return;
+                }
+                if let TenantRt::Comp(c) = &mut self.rt[t] {
+                    c.quota = quota.clamp(0.0, 100.0);
                 }
             }
             Action::PinCpu { tenant, numa } => {
@@ -575,78 +804,87 @@ impl SimWorld {
                     p.numa = numa.min(self.scenario.topo.numa_nodes.len() - 1);
                 }
             }
-            Action::ChangeIsolation { tenant, change, relax: _ } => {
-                if tenant != T1 {
+            Action::ChangeIsolation {
+                tenant,
+                change,
+                relax: _,
+            } => {
+                if tenant.0 != primary {
                     return;
                 }
                 self.save_last_good();
                 match change {
-                    IsolationChange::Resize { to } => self.resize_t1(now, to),
-                    IsolationChange::MoveExisting { gpu, to } => self.move_t1(now, gpu, to, false),
-                    IsolationChange::CreateAndMove { gpu, to } => self.move_t1(now, gpu, to, true),
+                    IsolationChange::Resize { to } => self.resize_primary(now, to),
+                    IsolationChange::MoveExisting { gpu, to } => {
+                        self.move_primary(now, gpu, to, false)
+                    }
+                    IsolationChange::CreateAndMove { gpu, to } => {
+                        self.move_primary(now, gpu, to, true)
+                    }
                 }
             }
             Action::Rollback { tenant } => {
-                if tenant != T1 {
+                if tenant.0 != primary {
                     return;
                 }
                 if let Some(saved) = self.last_good.take() {
                     // Blue/green back to the last-known-good placement.
                     self.gpus = saved.gpus;
                     self.placements = saved.placements;
-                    self.pause_t1(now, self.scenario.move_pause_s);
+                    self.pause_tenant(now, primary, self.scenario.move_pause_s);
                 }
             }
         }
     }
 
-    /// Resize = give T1 a dedicated `to` instance on its current GPU,
-    /// repartitioning as needed. If T1 was MPS-shared, the peer (T3) gets
+    /// Resize = give the primary a dedicated `to` instance on its current
+    /// GPU, repartitioning as needed. If it was MPS-shared, each peer gets
     /// the biggest leftover slice.
-    fn resize_t1(&mut self, now: f64, to: MigProfile) {
-        let gpu_idx = self.placements[0].gpu;
-        let was_shared = !self.placements[0].peers.is_empty();
-        let old_instance = self.placements[0].instance;
+    fn resize_primary(&mut self, now: f64, to: MigProfile) {
+        let primary = self.scenario.primary;
+        let gpu_idx = self.placements[primary].gpu;
+        let old_peers = self.placements[primary].peers.clone();
+        let old_instance = self.placements[primary].instance;
 
         let gpu = &mut self.gpus[gpu_idx];
         if gpu.destroy(old_instance).is_err() {
             return;
         }
-        let new_t1 = match gpu.create(to) {
+        let new_primary = match gpu.create(to) {
             Ok(id) => id,
             Err(_) => {
                 // Cannot place: restore by recreating the old instance.
-                let old_profile = self.placements[0].profile;
+                let old_profile = self.placements[primary].profile;
                 if let Ok(id) = gpu.create(old_profile) {
-                    self.placements[0].instance = id;
-                    if was_shared {
-                        self.placements[2].instance = id;
+                    self.placements[primary].instance = id;
+                    for &peer in &old_peers {
+                        self.placements[peer].instance = id;
                     }
                 }
                 return;
             }
         };
-        self.placements[0].instance = new_t1;
-        self.placements[0].profile = to;
-        self.placements[0].peers.clear();
+        self.placements[primary].instance = new_primary;
+        self.placements[primary].profile = to;
+        self.placements[primary].peers.clear();
 
-        if was_shared {
-            // Re-home T3 on the biggest profile that still fits.
-            let t3_profile = [
+        // Re-home each displaced peer on the biggest profile that fits.
+        for peer in old_peers {
+            let profile = [
                 MigProfile::P3g40gb,
                 MigProfile::P2g20gb,
                 MigProfile::P1g10gb,
             ]
             .into_iter()
             .find(|p| !self.gpus[gpu_idx].placements(*p).is_empty());
-            if let Some(p) = t3_profile {
+            if let Some(p) = profile {
                 if let Ok(id) = self.gpus[gpu_idx].create(p) {
-                    self.placements[2] = Placement {
+                    self.placements[peer] = Placement {
                         gpu: gpu_idx,
                         instance: id,
                         profile: p,
                         peers: vec![],
-                        numa: self.placements[2].numa,
+                        numa: self.placements[peer].numa,
                     };
                 }
             }
@@ -655,13 +893,15 @@ impl SimWorld {
         let d = A100Gpu::reconfig_duration(&mut self.reconfig_rng);
         self.reconfig_durations.push(d);
         let pause = self.bounded_pause(d);
-        self.pause_t1(now, pause);
+        self.pause_tenant(now, primary, pause);
     }
 
-    /// Move T1 to `gpu` — onto an existing free instance (cheap) or a
-    /// freshly created one (MIG call on the target GPU, but T1's pause is
-    /// still only the process move: creation happens on idle slices).
-    fn move_t1(&mut self, now: f64, gpu: usize, to: MigProfile, create: bool) {
+    /// Move the primary to `gpu` — onto an existing free instance (cheap)
+    /// or a freshly created one (MIG call on the target GPU, but the
+    /// pause is still only the process move: creation happens on idle
+    /// slices).
+    fn move_primary(&mut self, now: f64, gpu: usize, to: MigProfile, create: bool) {
+        let primary = self.scenario.primary;
         let target = if create {
             match self.gpus[gpu].create(to) {
                 Ok(id) => {
@@ -690,70 +930,97 @@ impl SimWorld {
         };
 
         // Leaving a shared instance: unlink peers.
-        let old_peers = std::mem::take(&mut self.placements[0].peers);
+        let old_peers = std::mem::take(&mut self.placements[primary].peers);
         for peer in old_peers {
-            self.placements[peer].peers.retain(|&x| x != 0);
+            self.placements[peer].peers.retain(|&x| x != primary);
         }
 
-        self.placements[0].gpu = gpu;
-        self.placements[0].instance = target;
-        self.placements[0].profile = to;
+        self.placements[primary].gpu = gpu;
+        self.placements[primary].instance = target;
+        self.placements[primary].profile = to;
         // CPU affinity follows the GPU's NUMA domain (§2.3 pinning).
-        self.placements[0].numa = self.scenario.topo.numa_of_gpu(gpu);
+        self.placements[primary].numa = self.scenario.topo.numa_of_gpu(gpu);
 
         // Make-before-break: instance creation runs on idle slices while
         // the tenant keeps serving; the only tenant-visible cost is the
         // blue/green traffic switchover.
-        self.pause_t1(now, self.scenario.move_pause_s);
+        self.pause_tenant(now, primary, self.scenario.move_pause_s);
     }
 
     // --- telemetry -----------------------------------------------------------
 
     /// Allocated-slice efficiency: busy compute slices / allocated compute
-    /// slices across all tenant instances (the Figure 3b "resource
-    /// efficiency" axis — static over-provisioned partitions idle their
-    /// slices; the adaptive system sizes slices to demand).
-    fn instantaneous_sm_util(&self) -> f64 {
-        let mut allocated = 0.0f64;
-        let mut busy = 0.0f64;
+    /// slices over tenant instances (the Figure 3b "resource efficiency"
+    /// axis — static over-provisioned partitions idle their slices; the
+    /// adaptive system sizes slices to demand). Returns the per-GPU
+    /// ratios plus the host-wide aggregate.
+    fn sm_util_by_gpu(&self) -> (Vec<f64>, f64) {
+        let n_gpus = self.scenario.topo.num_gpus;
+        let mut allocated = vec![0.0f64; n_gpus];
+        let mut busy = vec![0.0f64; n_gpus];
         let mut seen = Vec::new();
-        for (idx, p) in self.placements.iter().enumerate() {
+        // Occupancy per (gpu, instance): sharers of one instance split its
+        // slices evenly (a sharer's `peers` lists only its share target,
+        // not its co-sharers, so count occupants directly).
+        let occupancy = |gpu: usize, inst: InstanceId| -> f64 {
+            self.placements
+                .iter()
+                .filter(|q| q.gpu == gpu && q.instance == inst)
+                .count()
+                .max(1) as f64
+        };
+        for (i, p) in self.placements.iter().enumerate() {
             if !seen.contains(&(p.gpu, p.instance)) {
                 seen.push((p.gpu, p.instance));
-                allocated += p.profile.compute_slices() as f64;
+                allocated[p.gpu] += p.profile.compute_slices() as f64;
             }
             let slices = p.profile.compute_slices() as f64;
-            match idx {
-                0 => {
-                    if self.computing.is_some() {
-                        // Shared instances split between peers.
-                        busy += if p.peers.is_empty() { slices } else { slices / 2.0 };
+            let share = 1.0 / occupancy(p.gpu, p.instance);
+            let b = match &self.rt[i] {
+                TenantRt::Ls(ls) => {
+                    if ls.computing.is_some() {
+                        slices * share
+                    } else {
+                        0.0
                     }
                 }
-                1 => {
-                    if self.t2_active && self.t2_phase == T2Phase::Transform {
-                        busy += slices;
+                TenantRt::Bw(bw) => {
+                    if self.active[i] && bw.phase == CyclePhase::Transform {
+                        slices * share
+                    } else {
+                        0.0
                     }
                 }
-                _ => {
-                    if self.t3_active {
-                        let share = if p.peers.is_empty() { 1.0 } else { 0.5 };
-                        busy += slices * share * (self.t3_quota / 100.0);
+                TenantRt::Comp(c) => {
+                    if self.active[i] {
+                        slices * share * (c.quota / 100.0)
+                    } else {
+                        0.0
                     }
                 }
-            }
+            };
+            busy[p.gpu] += b;
         }
-        if allocated <= 0.0 {
+        let per_gpu: Vec<f64> = allocated
+            .iter()
+            .zip(&busy)
+            .map(|(&a, &b)| if a <= 0.0 { 0.0 } else { (b / a).min(1.0) })
+            .collect();
+        let total_alloc: f64 = allocated.iter().sum();
+        let total_busy: f64 = busy.iter().sum();
+        let host = if total_alloc <= 0.0 {
             0.0
         } else {
-            (busy / allocated).min(1.0)
-        }
+            (total_busy / total_alloc).min(1.0)
+        };
+        (per_gpu, host)
     }
 
     fn build_snapshot(&mut self, now: f64) -> SignalSnapshot {
         self.sync_fabric(now);
         let dt = (now - self.last_sample_t).max(1e-9);
         let topo = &self.scenario.topo;
+        let n = self.scenario.n_tenants();
 
         let mut links = Vec::new();
         for l in 0..topo.num_links {
@@ -770,18 +1037,22 @@ impl SimWorld {
         }
 
         let mut tenants = Vec::new();
-        for t in 0..N_TENANTS {
+        for t in 0..n {
             let gb = self.fabric.owner_gb(t);
             let gbps = (gb - self.last_owner_gb[t]) / dt;
             self.last_owner_gb[t] = gb;
             let tails = self.monitors[t].sample(now);
-            let active = match t {
-                0 => true,
-                1 => self.t2_active,
-                _ => self.t3_active,
+            let kind = self.scenario.tenants[t].kind();
+            let active = match kind {
+                TenantKind::LatencySensitive => true,
+                _ => self.active[t],
             };
-            // T2's block I/O is its NVMe-side traffic.
-            let nvme_share = if t == 1 { gbps * 0.5 } else { 0.0 };
+            // Bandwidth-heavy block I/O is its NVMe-side traffic.
+            let nvme_share = if kind == TenantKind::BandwidthHeavy {
+                gbps * 0.5
+            } else {
+                0.0
+            };
             tenants.push(TenantSignal {
                 tenant: TenantId(t),
                 tails,
@@ -792,11 +1063,11 @@ impl SimWorld {
         }
 
         // SM utilization: time-weighted approximation via current state.
-        let sm_now = self.instantaneous_sm_util();
+        // Each GPU reports its own busy/allocated ratio; the host-wide
+        // aggregate feeds the Figure 3b efficiency metric.
+        let (gpu_sm_util, sm_now) = self.sm_util_by_gpu();
         self.sm_util_integral += sm_now;
         self.sm_util_samples += 1;
-        let mut gpu_sm_util = vec![0.0; topo.num_gpus];
-        gpu_sm_util[self.placements[0].gpu] = sm_now;
 
         let numa_io_gbps: Vec<f64> = topo
             .numa_nodes
@@ -840,8 +1111,8 @@ impl SimWorld {
                 profile: p.profile,
                 mps_peers: p.peers.iter().map(|&x| TenantId(x)).collect(),
                 numa: p.numa,
-                mps_quota: if i == 2 { self.t3_quota } else { 100.0 },
-                io_throttle_gbps: if i == 1 { self.t2_throttle } else { None },
+                mps_quota: self.comp_quota(i),
+                io_throttle_gbps: self.throttles[i],
             });
         }
         // Free existing instances anywhere on the host.
@@ -867,14 +1138,15 @@ impl SimWorld {
             gpus: self.gpus.clone(),
             tenants,
             free_instances,
-            t1_base_rps: self.scenario.t1.arrival_rps,
+            primary_base_rps: self.scenario.primary_spec().arrival_rps,
         }
     }
 
     fn on_sample(&mut self, now: f64) {
+        let primary = self.scenario.primary;
         let snap = self.build_snapshot(now);
-        if let Some(t1) = snap.tenant(T1) {
-            self.p99_series.push((now, t1.tails.p99_ms));
+        if let Some(p) = snap.tenant(TenantId(primary)) {
+            self.p99_series.push((now, p.tails.p99_ms));
         }
         if self.controller.is_some() {
             let view = self.build_view();
@@ -904,7 +1176,7 @@ impl SimWorld {
 
     fn handle(&mut self, now: f64, ev: Event) {
         match ev {
-            Event::T1Arrival => self.on_t1_arrival(now),
+            Event::Arrival { tenant } => self.on_arrival(now, tenant),
             Event::FlowsDone { version } => {
                 if version != self.fabric_version {
                     return;
@@ -921,41 +1193,42 @@ impl SimWorld {
                     self.fabric.remove(id);
                     let purpose = self.flow_purpose.remove(&id).unwrap();
                     match purpose {
-                        Purpose::T1Stage(r) => self.on_t1_stage_done(now, r),
-                        Purpose::T1H2d(r) => self.on_t1_h2d_done(now, r),
-                        Purpose::T2Read | Purpose::T2H2d | Purpose::T2D2h => {
-                            self.on_t2_flow_done(now, purpose)
-                        }
-                        Purpose::T3Sync => {}
+                        Purpose::Stage { tenant, req } => self.on_stage_done(now, tenant, req),
+                        Purpose::H2d { tenant, req } => self.on_h2d_done(now, tenant, req),
+                        Purpose::CycleRead { .. }
+                        | Purpose::CycleH2d { .. }
+                        | Purpose::CycleD2h { .. } => self.on_cycle_flow_done(now, purpose),
+                        Purpose::StepSync { .. } => {}
                     }
                 }
                 self.reschedule_fabric(now);
             }
-            Event::T1ComputeDone { req } => self.on_t1_compute_done(now, req),
-            Event::T2TransformDone => self.on_t2_transform_done(now),
-            Event::T3StepDone => self.on_t3_step_done(now),
-            Event::ToggleT2 => {
-                self.t2_active = self.scenario.t2_schedule.active_at(now);
-                if self.t2_active {
-                    self.t2_begin_cycle(now);
+            Event::ComputeDone { tenant, req } => self.on_compute_done(now, tenant, req),
+            Event::CycleDone { tenant } => self.on_transform_done(now, tenant),
+            Event::StepDone { tenant } => self.on_step_done(now, tenant),
+            Event::Toggle { tenant } => {
+                self.active[tenant] = self.scenario.tenants[tenant].schedule.active_at(now);
+                if self.active[tenant] {
+                    match self.scenario.tenants[tenant].kind() {
+                        TenantKind::BandwidthHeavy => self.begin_cycle(now, tenant),
+                        TenantKind::ComputeHeavy => self.begin_step(now, tenant),
+                        TenantKind::LatencySensitive => {}
+                    }
                 }
                 // When toggled off mid-cycle the current flows drain and
                 // the cycle stops at the next Idle check.
             }
-            Event::ToggleT3 => {
-                self.t3_active = self.scenario.t3_schedule.active_at(now);
-                if self.t3_active {
-                    self.t3_begin_step(now);
-                }
-            }
             Event::Sample => self.on_sample(now),
-            Event::PauseDone => self.on_pause_done(now),
-            Event::ThrottleExpire { deadline_bits } => {
-                if self.t2_throttle_deadline.map(f64::to_bits) == Some(deadline_bits) {
-                    self.t2_throttle = None;
-                    self.t2_throttle_deadline = None;
+            Event::PauseDone { tenant } => self.on_pause_done(now, tenant),
+            Event::ThrottleExpire {
+                tenant,
+                deadline_bits,
+            } => {
+                if self.throttle_deadlines[tenant].map(f64::to_bits) == Some(deadline_bits) {
+                    self.throttles[tenant] = None;
+                    self.throttle_deadlines[tenant] = None;
                     self.sync_fabric(now);
-                    self.fabric.set_owner_cap(1, None);
+                    self.fabric.set_owner_cap(tenant, None);
                     self.reschedule_fabric(now);
                 }
             }
@@ -976,7 +1249,8 @@ impl SimWorld {
     }
 
     fn finish(self, horizon: f64) -> RunResult {
-        let m = &self.monitors[0];
+        let primary = self.scenario.primary;
+        let m = &self.monitors[primary];
         let label = self.scenario.controller.levers.name().to_string();
         let (actions, timeline, moves_per_hour) = match &self.controller {
             Some(c) => {
@@ -997,8 +1271,35 @@ impl SimWorld {
             }
             None => (Vec::new(), Vec::new(), 0.0),
         };
+        let per_tenant: Vec<TenantRunStats> = self
+            .scenario
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let mon = &self.monitors[i];
+                TenantRunStats {
+                    tenant: TenantId(i),
+                    name: t.name.clone(),
+                    kind: t.kind(),
+                    slo_ms: t.spec.slo_ms(),
+                    completed: mon.total_completed(),
+                    miss_rate: mon.lifetime_miss_rate(),
+                    p50_ms: mon.lifetime_quantile_ms(0.50),
+                    p95_ms: mon.lifetime_quantile_ms(0.95),
+                    p99_ms: mon.lifetime_quantile_ms(0.99),
+                    p999_ms: mon.lifetime_quantile_ms(0.999),
+                    rps: mon.total_completed() as f64 / horizon,
+                    gb_moved: self.fabric.owner_gb(i),
+                }
+            })
+            .collect();
+        let link_gb: Vec<f64> = (0..self.scenario.topo.num_links)
+            .map(|l| self.fabric.counters(crate::topo::LinkId(l)).gb_total)
+            .collect();
         RunResult {
             label,
+            scenario: self.scenario.name.clone(),
             seed: self.scenario.seed,
             horizon_s: horizon,
             miss_rate: m.lifetime_miss_rate(),
@@ -1010,6 +1311,8 @@ impl SimWorld {
             completed: m.total_completed(),
             rps: m.total_completed() as f64 / horizon,
             histogram: m.histogram().clone(),
+            per_tenant,
+            link_gb,
             actions,
             moves_per_hour,
             reconfig_durations_s: self.reconfig_durations.clone(),
@@ -1029,6 +1332,7 @@ impl SimWorld {
 mod tests {
     use super::*;
     use crate::controller::Levers;
+    use crate::tenants::InterferenceSchedule;
 
     fn short_scenario(seed: u64, levers: Levers) -> Scenario {
         let mut s = Scenario::paper_single_host(seed, levers);
@@ -1052,6 +1356,7 @@ mod tests {
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.p99_ms, b.p99_ms);
         assert_eq!(a.miss_rate, b.miss_rate);
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]
@@ -1064,11 +1369,9 @@ mod tests {
     #[test]
     fn contention_inflates_tail() {
         let mut quiet = short_scenario(2, Levers::none());
-        quiet.t2_schedule = crate::tenants::InterferenceSchedule::always_off(120.0);
-        quiet.t3_schedule = crate::tenants::InterferenceSchedule::always_off(120.0);
+        quiet.set_background_schedules(InterferenceSchedule::always_off(120.0));
         let mut noisy = short_scenario(2, Levers::none());
-        noisy.t2_schedule = crate::tenants::InterferenceSchedule::always_on(120.0);
-        noisy.t3_schedule = crate::tenants::InterferenceSchedule::always_on(120.0);
+        noisy.set_background_schedules(InterferenceSchedule::always_on(120.0));
         let rq = SimWorld::new(quiet).run();
         let rn = SimWorld::new(noisy).run();
         assert!(
@@ -1083,8 +1386,7 @@ mod tests {
     fn controller_acts_under_contention() {
         let mut s = short_scenario(3, Levers::full());
         s.horizon = 600.0;
-        s.t2_schedule = crate::tenants::InterferenceSchedule::always_on(600.0);
-        s.t3_schedule = crate::tenants::InterferenceSchedule::always_on(600.0);
+        s.set_background_schedules(InterferenceSchedule::always_on(600.0));
         let r = SimWorld::new(s).run();
         let total_actions: usize = r.actions.iter().map(|(_, c)| c).sum();
         assert!(total_actions > 0, "controller never acted: {:?}", r.actions);
@@ -1112,5 +1414,55 @@ mod tests {
             full.miss_rate,
             base.miss_rate
         );
+    }
+
+    #[test]
+    fn every_tenant_reports_stats() {
+        // Steady contention: backgrounds are active from t=0, so every
+        // tenant must produce work within the short horizon.
+        let mut s = Scenario::steady_contention(4, Levers::none(), true);
+        s.horizon = 120.0;
+        let r = SimWorld::new(s).run();
+        assert_eq!(r.per_tenant.len(), 3);
+        // Primary is latency-sensitive with a real SLO and completions.
+        let p = &r.per_tenant[0];
+        assert_eq!(p.kind, TenantKind::LatencySensitive);
+        assert!(p.slo_ms < f64::MAX);
+        assert!(p.completed > 0 && p.p99_ms > 0.0);
+        // Background tenants complete cycles/steps and move bytes.
+        for t in &r.per_tenant[1..] {
+            assert!(t.completed > 0, "{} never completed a unit", t.name);
+            assert!(t.gb_moved > 0.0, "{} moved no bytes", t.name);
+        }
+    }
+
+    #[test]
+    fn four_tenant_scenario_runs_and_reports_all() {
+        let mut s = Scenario::multi_ls_slo_mix(7, Levers::none());
+        s.horizon = 120.0;
+        let r = SimWorld::new(s).run();
+        assert_eq!(r.per_tenant.len(), 4);
+        // Both latency-sensitive services completed requests with their
+        // own SLOs.
+        let chat = &r.per_tenant[0];
+        let batch = &r.per_tenant[1];
+        assert!(chat.completed > 5_000, "chat completed {}", chat.completed);
+        assert!(batch.completed > 2_000, "batch completed {}", batch.completed);
+        assert_eq!(chat.slo_ms, 15.0);
+        assert_eq!(batch.slo_ms, 60.0);
+        assert!(chat.p99_ms > 0.0 && batch.p99_ms > 0.0);
+    }
+
+    #[test]
+    fn six_tenant_hotspot_runs_deterministically() {
+        let mk = || {
+            let mut s = Scenario::pcie_hotspot(9, Levers::none());
+            s.horizon = 90.0;
+            SimWorld::new(s).run()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.per_tenant.len(), 6);
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 }

@@ -80,8 +80,11 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `event` at absolute time `at` (>= now; clamped if earlier
-    /// by a numerical hair).
+    /// by a numerical hair). Rejects non-finite times in release builds
+    /// too: `f64::max(NaN, now)` silently collapses to `now`, which would
+    /// hide the corruption instead of surfacing it.
     pub fn push_at(&mut self, at: f64, event: E) {
+        assert!(at.is_finite(), "non-finite event time {at}");
         let t = at.max(self.now);
         self.heap.push(Entry {
             time: t,
@@ -91,10 +94,16 @@ impl<E> EventQueue<E> {
         self.seq += 1;
     }
 
-    /// Schedule `event` after `dt` seconds.
+    /// Schedule `event` after `dt` seconds. A NaN or negative delay is a
+    /// logic bug in the caller (a NaN would poison the heap order via
+    /// `total_cmp`, sorting above every real time), so it is rejected in
+    /// release builds as well — not just under `debug_assert!`.
     pub fn push_after(&mut self, dt: f64, event: E) {
-        debug_assert!(dt >= 0.0, "negative delay {dt}");
-        self.push_at(self.now + dt.max(0.0), event);
+        assert!(
+            dt.is_finite() && dt >= 0.0,
+            "invalid event delay {dt} (must be finite and >= 0)"
+        );
+        self.push_at(self.now + dt, event);
     }
 
     /// Pop the next event, advancing the clock. Returns `None` when empty.
@@ -172,6 +181,27 @@ mod tests {
         q.push_at(3.0, 2u32); // in the past: clamped
         let (t, _) = q.pop().unwrap();
         assert_eq!(t.secs(), 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid event delay")]
+    fn push_after_rejects_nan_delay() {
+        let mut q = EventQueue::new();
+        q.push_after(f64::NAN, 1u32);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid event delay")]
+    fn push_after_rejects_negative_delay() {
+        let mut q = EventQueue::new();
+        q.push_after(-0.5, 1u32);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn push_at_rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push_at(f64::NAN, 1u32);
     }
 
     #[test]

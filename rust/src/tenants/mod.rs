@@ -1,16 +1,25 @@
-//! Tenant workload generators — the paper's three co-located tenants
-//! (§3.1 Workloads) plus the interference schedule that toggles the noisy
-//! neighbors on and off.
+//! Tenant workload generators.
 //!
-//! * **T1** — latency-sensitive inference (15 ms p99 SLO, batch 1, input
-//!   sizes from a realistic mixture inducing time-varying PCIe pressure).
-//! * **T2** — bandwidth-heavy ETL: NVMe → host → GPU → back, sustained
-//!   PCIe + block-I/O pressure.
-//! * **T3** — compute-heavy synthetic training: maximizes SM occupancy on
-//!   its (possibly MPS-shared) instance.
+//! Three workload *kinds* (the paper's §3.1 archetypes), composable in
+//! any count and mix through [`TenantWorkload`]:
+//!
+//! * **latency-sensitive** — open-loop inference with a p99 SLO, input
+//!   sizes from a realistic mixture inducing time-varying PCIe pressure.
+//! * **bandwidth-heavy** — ETL cycles: NVMe → host → GPU → back,
+//!   sustained PCIe + block-I/O pressure.
+//! * **compute-heavy** — synthetic training steps maximizing SM occupancy
+//!   on a (possibly MPS-shared) instance, plus gradient-sync transfers.
+//!
+//! [`InterferenceSchedule`] toggles background tenants on and off (the
+//! paper's interference script); every configuration in a comparison
+//! replays the identical schedule (§3.2).
 
-pub mod spec;
 pub mod schedule;
+pub mod spec;
+pub mod workload;
 
 pub use schedule::{InterferenceSchedule, Phase};
-pub use spec::{T1Request, T1Spec, T2Spec, T3Spec, TenantId, TenantKind};
+pub use spec::{
+    BwSpec, CompSpec, LsRequest, LsSpec, T1Request, T1Spec, T2Spec, T3Spec, TenantId, TenantKind,
+};
+pub use workload::{PlacementSpec, TenantWorkload, WorkloadSpec};

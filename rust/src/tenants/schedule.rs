@@ -66,6 +66,31 @@ impl InterferenceSchedule {
         }
     }
 
+    /// Deterministic periodic (diurnal-style) schedule: active for
+    /// `duty · period` seconds out of every `period`, starting at
+    /// `offset` into the cycle. `duty` is clamped to `[0, 1]`. The wave
+    /// is a pure phase shift: when `offset > (1 - duty)·period`, the
+    /// active window wrapping across t = 0 is kept (clipped to the
+    /// horizon), so the realized duty cycle matches `duty`.
+    pub fn periodic(horizon: f64, period: f64, duty: f64, offset: f64) -> InterferenceSchedule {
+        let duty = duty.clamp(0.0, 1.0);
+        let mut phases = Vec::new();
+        if period > 0.0 && duty > 0.0 {
+            // Start one cycle before the first in-horizon offset so a
+            // window straddling t = 0 contributes its clipped tail.
+            let mut t = offset.rem_euclid(period) - period;
+            while t < horizon {
+                let on = t.max(0.0);
+                let off = (t + duty * period).min(horizon);
+                if off > on {
+                    phases.push(Phase { on, off });
+                }
+                t += period;
+            }
+        }
+        InterferenceSchedule { phases, horizon }
+    }
+
     /// Is the tenant active at time `t`?
     pub fn active_at(&self, t: f64) -> bool {
         self.phases.iter().any(|p| t >= p.on && t < p.off)
@@ -145,6 +170,43 @@ mod tests {
         assert!(InterferenceSchedule::always_on(10.0).active_at(5.0));
         assert!(!InterferenceSchedule::always_off(10.0).active_at(5.0));
         assert_eq!(InterferenceSchedule::always_on(10.0).duty_cycle(), 1.0);
+    }
+
+    #[test]
+    fn periodic_schedule_duty_and_offset() {
+        let s = InterferenceSchedule::periodic(1000.0, 100.0, 0.4, 10.0);
+        assert!((s.duty_cycle() - 0.4).abs() < 0.02, "duty {}", s.duty_cycle());
+        assert!(!s.active_at(5.0));
+        assert!(s.active_at(15.0));
+        assert!(!s.active_at(60.0));
+        assert!(s.active_at(115.0));
+        // Degenerate inputs produce an empty (always-off) schedule.
+        assert!(InterferenceSchedule::periodic(100.0, 0.0, 0.5, 0.0)
+            .phases
+            .is_empty());
+        assert!(InterferenceSchedule::periodic(100.0, 50.0, 0.0, 0.0)
+            .phases
+            .is_empty());
+    }
+
+    #[test]
+    fn periodic_schedule_keeps_wraparound_window() {
+        // offset 450 with duty 0.6 of a 600 s period: the window from the
+        // previous cycle is active on [0, 210) — a pure phase shift, so
+        // the realized duty stays ~0.6 over the horizon.
+        let s = InterferenceSchedule::periodic(1800.0, 600.0, 0.6, 450.0);
+        assert!(s.active_at(100.0), "wrap-around window missing");
+        assert!(!s.active_at(300.0));
+        assert!(s.active_at(500.0));
+        assert!(
+            (s.duty_cycle() - 0.6).abs() < 0.02,
+            "duty {}",
+            s.duty_cycle()
+        );
+        // Offsets beyond one period are equivalent modulo the period.
+        let a = InterferenceSchedule::periodic(1000.0, 100.0, 0.5, 30.0);
+        let b = InterferenceSchedule::periodic(1000.0, 100.0, 0.5, 130.0);
+        assert_eq!(a.phases, b.phases);
     }
 
     #[test]

@@ -1,28 +1,46 @@
 //! Tenant specifications and per-request sampling.
+//!
+//! Specs are *kind-based* (latency-sensitive / bandwidth-heavy /
+//! compute-heavy), not slot-based: a scenario composes any number of each
+//! through [`crate::tenants::TenantWorkload`]. The paper's fixed T1/T2/T3
+//! world (§3.1) is just the catalog entry that instantiates one of each.
 
 use crate::util::rng::Pcg64;
 
-/// Dense tenant index (T1 = 0, T2 = 1, T3 = 2 in the standard scenario).
+/// Dense tenant index within a scenario (`T1 = 0`, `T2 = 1`, `T3 = 2` in
+/// the paper's standard scenario).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct TenantId(pub usize);
 
+/// The paper's canonical tenant slots, kept as named ids for the
+/// three-tenant catalog scenarios and the controller unit tests.
 pub const T1: TenantId = TenantId(0);
 pub const T2: TenantId = TenantId(1);
 pub const T3: TenantId = TenantId(2);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TenantKind {
-    /// T1: latency-sensitive inference.
+    /// Latency-sensitive inference (the paper's T1 archetype).
     LatencySensitive,
-    /// T2: bandwidth-heavy ETL.
+    /// Bandwidth-heavy ETL (the paper's T2 archetype).
     BandwidthHeavy,
-    /// T3: compute-heavy training.
+    /// Compute-heavy training (the paper's T3 archetype).
     ComputeHeavy,
 }
 
-/// One T1 inference request, sampled at arrival.
+impl TenantKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            TenantKind::LatencySensitive => "latency-sensitive",
+            TenantKind::BandwidthHeavy => "bandwidth-heavy",
+            TenantKind::ComputeHeavy => "compute-heavy",
+        }
+    }
+}
+
+/// One latency-sensitive inference request, sampled at arrival.
 #[derive(Clone, Copy, Debug)]
-pub struct T1Request {
+pub struct LsRequest {
     /// Unique id.
     pub id: u64,
     /// Arrival time (sim seconds).
@@ -35,9 +53,9 @@ pub struct T1Request {
     pub compute_ref_ms: f64,
 }
 
-/// T1 — latency-sensitive inference tenant.
+/// Latency-sensitive inference tenant spec (T1 archetype).
 #[derive(Clone, Debug)]
-pub struct T1Spec {
+pub struct LsSpec {
     /// Poisson arrival rate (requests/s).
     pub arrival_rps: f64,
     /// p99 latency SLO in ms (paper: 15 ms non-LLM, 200 ms TTFT for LLM).
@@ -52,9 +70,14 @@ pub struct T1Spec {
     pub compute_sigma: f64,
 }
 
-impl Default for T1Spec {
+/// Back-compat alias: the paper's T1 slot.
+pub type T1Spec = LsSpec;
+/// Back-compat alias for [`LsRequest`].
+pub type T1Request = LsRequest;
+
+impl Default for LsSpec {
     fn default() -> Self {
-        T1Spec {
+        LsSpec {
             arrival_rps: 80.0,
             slo_ms: 15.0,
             // 70% small (20 MB), 25% medium (45 MB), 5% large (90 MB):
@@ -67,14 +90,31 @@ impl Default for T1Spec {
     }
 }
 
-impl T1Spec {
+impl LsSpec {
+    /// The Table 2 LLM/TTFT workload: vLLM-style prefill with a 200 ms
+    /// p99 TTFT SLO, larger staged inputs, heavier reference compute.
+    pub fn llm_ttft() -> LsSpec {
+        LsSpec {
+            arrival_rps: 4.0,
+            slo_ms: 200.0,
+            // Prompt+activation staging: bigger payloads than the non-LLM
+            // case — vLLM prefill pulls prompt tensors across PCIe.
+            // Utilization stays moderate (rho ~ 0.4 on the shared slice
+            // under contention) so TTFT tails are contention-driven, not
+            // saturation-driven.
+            size_mix: vec![(0.60, 0.12), (0.30, 0.28), (0.10, 0.55)],
+            compute_ref_ms: 55.0, // prefill on the reference slice
+            compute_sigma: 0.22,
+        }
+    }
+
     /// Sample the next inter-arrival gap (s).
     pub fn next_gap(&self, rng: &mut Pcg64) -> f64 {
         rng.exp(self.arrival_rps)
     }
 
     /// Sample one request's demands.
-    pub fn sample(&self, rng: &mut Pcg64, id: u64, arrival: f64) -> T1Request {
+    pub fn sample(&self, rng: &mut Pcg64, id: u64, arrival: f64) -> LsRequest {
         let mut u = rng.f64();
         let mut gb = self.size_mix.last().map(|&(_, m)| m).unwrap_or(0.05);
         for &(p, mean) in &self.size_mix {
@@ -86,9 +126,8 @@ impl T1Spec {
         }
         // Small lognormal spread around the component mean.
         let gb = gb * rng.lognormal(0.0, 0.15);
-        let compute =
-            self.compute_ref_ms * rng.lognormal(0.0, self.compute_sigma);
-        T1Request {
+        let compute = self.compute_ref_ms * rng.lognormal(0.0, self.compute_sigma);
+        LsRequest {
             id,
             arrival,
             host_stage_gb: gb * 0.3, // staging reads a compressed shard
@@ -98,10 +137,10 @@ impl T1Spec {
     }
 }
 
-/// T2 — bandwidth-heavy ETL tenant. Runs an endless cycle of
-/// read(NVMe) → H2D → GPU transform → D2H while toggled active.
+/// Bandwidth-heavy ETL tenant spec (T2 archetype). Runs an endless cycle
+/// of read(NVMe) → H2D → GPU transform → D2H while toggled active.
 #[derive(Clone, Debug)]
-pub struct T2Spec {
+pub struct BwSpec {
     /// NVMe shard read per cycle (GB).
     pub read_gb: f64,
     /// H2D payload per cycle (GB).
@@ -114,9 +153,12 @@ pub struct T2Spec {
     pub burst_alpha: f64,
 }
 
-impl Default for T2Spec {
+/// Back-compat alias: the paper's T2 slot.
+pub type T2Spec = BwSpec;
+
+impl Default for BwSpec {
     fn default() -> Self {
-        T2Spec {
+        BwSpec {
             read_gb: 1.5,
             h2d_gb: 1.0,
             d2h_gb: 0.5,
@@ -126,7 +168,7 @@ impl Default for T2Spec {
     }
 }
 
-impl T2Spec {
+impl BwSpec {
     /// Sample one ETL cycle: (read_gb, h2d_gb, d2h_gb, transform_s).
     pub fn sample_cycle(&self, rng: &mut Pcg64) -> (f64, f64, f64, f64) {
         // Pareto burstiness with mean 1: alpha/(alpha-1) normalizer.
@@ -141,10 +183,10 @@ impl T2Spec {
     }
 }
 
-/// T3 — compute-heavy training tenant. Endless steps of SM-saturating
-/// kernels plus a small gradient sync transfer.
+/// Compute-heavy training tenant spec (T3 archetype). Endless steps of
+/// SM-saturating kernels plus a small gradient sync transfer.
 #[derive(Clone, Debug)]
-pub struct T3Spec {
+pub struct CompSpec {
     /// Step duration (ms) on its slice.
     pub step_ms: f64,
     /// Gradient sync payload per step (GB) over PCIe.
@@ -152,14 +194,18 @@ pub struct T3Spec {
     /// MPS active-thread percentage currently granted (the guardrail
     /// tightens this; 100 = unconstrained).
     pub mps_quota: f64,
-    /// SM-contention coefficient β: a co-scheduled (MPS-shared) T1 sees
-    /// compute inflated by `1 + β·(quota/100)` while T3 is active.
+    /// SM-contention coefficient β: a co-scheduled (MPS-shared) peer sees
+    /// compute inflated by `1 + β·(quota/100)` while this tenant is
+    /// active.
     pub contention_beta: f64,
 }
 
-impl Default for T3Spec {
+/// Back-compat alias: the paper's T3 slot.
+pub type T3Spec = CompSpec;
+
+impl Default for CompSpec {
     fn default() -> Self {
-        T3Spec {
+        CompSpec {
             step_ms: 120.0,
             sync_gb: 0.10,
             mps_quota: 100.0,
@@ -168,11 +214,17 @@ impl Default for T3Spec {
     }
 }
 
-impl T3Spec {
-    /// Compute-time inflation factor T1 suffers when sharing an instance
-    /// with an active T3 under MPS.
+impl CompSpec {
+    /// Compute-time inflation factor a peer suffers when sharing an
+    /// instance with this tenant under MPS while it is active.
     pub fn contention_factor(&self) -> f64 {
         1.0 + self.contention_beta * (self.mps_quota / 100.0)
+    }
+
+    /// Same factor at an explicit quota (the live world tracks the
+    /// controller-set quota outside the spec).
+    pub fn contention_factor_at(&self, quota: f64) -> f64 {
+        1.0 + self.contention_beta * (quota / 100.0)
     }
 
     /// Sample one training step: (step_s, sync_gb).
@@ -187,8 +239,8 @@ mod tests {
     use super::*;
 
     #[test]
-    fn t1_size_mixture_probabilities() {
-        let spec = T1Spec::default();
+    fn ls_size_mixture_probabilities() {
+        let spec = LsSpec::default();
         let mut rng = Pcg64::seeded(41);
         let mut small = 0;
         let n = 50_000;
@@ -204,8 +256,8 @@ mod tests {
     }
 
     #[test]
-    fn t1_arrival_rate_mean() {
-        let spec = T1Spec::default();
+    fn ls_arrival_rate_mean() {
+        let spec = LsSpec::default();
         let mut rng = Pcg64::seeded(42);
         let n = 100_000;
         let total: f64 = (0..n).map(|_| spec.next_gap(&mut rng)).sum();
@@ -214,8 +266,8 @@ mod tests {
     }
 
     #[test]
-    fn t2_cycle_means_close_to_spec() {
-        let spec = T2Spec::default();
+    fn bw_cycle_means_close_to_spec() {
+        let spec = BwSpec::default();
         let mut rng = Pcg64::seeded(43);
         let n = 200_000;
         let mut sum_read = 0.0;
@@ -230,12 +282,35 @@ mod tests {
     }
 
     #[test]
-    fn t3_contention_scales_with_quota() {
-        let mut spec = T3Spec::default();
+    fn comp_contention_scales_with_quota() {
+        let mut spec = CompSpec::default();
         let full = spec.contention_factor();
         spec.mps_quota = 50.0;
         let capped = spec.contention_factor();
         assert!(capped < full);
         assert!((capped - (1.0 + 1.6 * 0.5)).abs() < 1e-12);
+        assert!((spec.contention_factor_at(50.0) - capped).abs() < 1e-12);
+    }
+
+    #[test]
+    fn legacy_aliases_still_name_the_paper_slots() {
+        // The T1/T2/T3 names remain usable for the three-tenant world.
+        let t1: T1Spec = LsSpec::default();
+        let t2: T2Spec = BwSpec::default();
+        let t3: T3Spec = CompSpec::default();
+        assert_eq!(t1.slo_ms, 15.0);
+        assert!(t2.read_gb > 0.0);
+        assert!(t3.step_ms > 0.0);
+        assert_eq!(T1, TenantId(0));
+        assert_eq!(T2, TenantId(1));
+        assert_eq!(T3, TenantId(2));
+    }
+
+    #[test]
+    fn llm_ttft_spec_matches_table2_setup() {
+        let s = LsSpec::llm_ttft();
+        assert_eq!(s.slo_ms, 200.0);
+        assert!(s.compute_ref_ms > 50.0);
+        assert!(s.arrival_rps < 10.0);
     }
 }

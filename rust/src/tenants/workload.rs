@@ -1,0 +1,214 @@
+//! Unified N-tenant workload abstraction.
+//!
+//! A [`TenantWorkload`] bundles everything the platform needs to drive
+//! one tenant: a kind-specific spec ([`WorkloadSpec`]), an activity
+//! schedule, and a placement request. Scenarios hold a
+//! `Vec<TenantWorkload>` — any count of each kind — instead of the fixed
+//! T1/T2/T3 slots of the paper's §3.1 testbed.
+
+use crate::gpu::MigProfile;
+use crate::tenants::schedule::InterferenceSchedule;
+use crate::tenants::spec::{BwSpec, CompSpec, LsSpec, TenantKind};
+
+/// Kind-tagged tenant spec.
+#[derive(Clone, Debug)]
+pub enum WorkloadSpec {
+    LatencySensitive(LsSpec),
+    BandwidthHeavy(BwSpec),
+    ComputeHeavy(CompSpec),
+}
+
+impl WorkloadSpec {
+    pub fn kind(&self) -> TenantKind {
+        match self {
+            WorkloadSpec::LatencySensitive(_) => TenantKind::LatencySensitive,
+            WorkloadSpec::BandwidthHeavy(_) => TenantKind::BandwidthHeavy,
+            WorkloadSpec::ComputeHeavy(_) => TenantKind::ComputeHeavy,
+        }
+    }
+
+    pub fn as_ls(&self) -> Option<&LsSpec> {
+        match self {
+            WorkloadSpec::LatencySensitive(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_ls_mut(&mut self) -> Option<&mut LsSpec> {
+        match self {
+            WorkloadSpec::LatencySensitive(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bw(&self) -> Option<&BwSpec> {
+        match self {
+            WorkloadSpec::BandwidthHeavy(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_comp(&self) -> Option<&CompSpec> {
+        match self {
+            WorkloadSpec::ComputeHeavy(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// SLO threshold for monitoring: latency-sensitive tenants use their
+    /// spec SLO, background tenants are effectively unbounded.
+    pub fn slo_ms(&self) -> f64 {
+        match self {
+            WorkloadSpec::LatencySensitive(s) => s.slo_ms,
+            _ => f64::MAX,
+        }
+    }
+}
+
+/// Where a tenant wants to run.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementSpec {
+    /// GPU index on the host.
+    pub gpu: usize,
+    /// MIG profile of the tenant's instance.
+    pub profile: MigProfile,
+    /// Preferred start slice (`None` = first legal fit).
+    pub start: Option<usize>,
+    /// Share the instance of an *earlier* tenant (MPS co-scheduling —
+    /// the naive-placement baseline the controller escapes from). The
+    /// peer must be on the same GPU with the same profile/start.
+    pub share_with: Option<usize>,
+}
+
+impl PlacementSpec {
+    pub fn dedicated(gpu: usize, profile: MigProfile) -> PlacementSpec {
+        PlacementSpec {
+            gpu,
+            profile,
+            start: None,
+            share_with: None,
+        }
+    }
+
+    pub fn dedicated_at(gpu: usize, profile: MigProfile, start: usize) -> PlacementSpec {
+        PlacementSpec {
+            gpu,
+            profile,
+            start: Some(start),
+            share_with: None,
+        }
+    }
+
+    /// MPS co-schedule onto tenant `peer`'s instance. The gpu/profile
+    /// here are placeholders — a sharer's real placement is taken from
+    /// its peer when the simulated world is built.
+    pub fn shared_with(peer: usize) -> PlacementSpec {
+        PlacementSpec {
+            gpu: 0,
+            profile: MigProfile::P4g40gb,
+            start: None,
+            share_with: Some(peer),
+        }
+    }
+}
+
+/// One tenant in a scenario: spec + schedule + placement.
+#[derive(Clone, Debug)]
+pub struct TenantWorkload {
+    /// Human-readable name ("t1-inference", "etl-west", ...).
+    pub name: String,
+    pub spec: WorkloadSpec,
+    /// Activity schedule. Latency-sensitive tenants are always active
+    /// (open-loop arrivals); for background tenants this toggles the
+    /// cycle/step loop on and off (the paper's interference script).
+    pub schedule: InterferenceSchedule,
+    pub placement: PlacementSpec,
+}
+
+impl TenantWorkload {
+    pub fn latency_sensitive(
+        name: impl Into<String>,
+        spec: LsSpec,
+        placement: PlacementSpec,
+    ) -> TenantWorkload {
+        TenantWorkload {
+            name: name.into(),
+            spec: WorkloadSpec::LatencySensitive(spec),
+            schedule: InterferenceSchedule::always_on(f64::MAX),
+            placement,
+        }
+    }
+
+    pub fn bandwidth_heavy(
+        name: impl Into<String>,
+        spec: BwSpec,
+        schedule: InterferenceSchedule,
+        placement: PlacementSpec,
+    ) -> TenantWorkload {
+        TenantWorkload {
+            name: name.into(),
+            spec: WorkloadSpec::BandwidthHeavy(spec),
+            schedule,
+            placement,
+        }
+    }
+
+    pub fn compute_heavy(
+        name: impl Into<String>,
+        spec: CompSpec,
+        schedule: InterferenceSchedule,
+        placement: PlacementSpec,
+    ) -> TenantWorkload {
+        TenantWorkload {
+            name: name.into(),
+            spec: WorkloadSpec::ComputeHeavy(spec),
+            schedule,
+            placement,
+        }
+    }
+
+    pub fn kind(&self) -> TenantKind {
+        self.spec.kind()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_tag_kinds() {
+        let ls = TenantWorkload::latency_sensitive(
+            "svc",
+            LsSpec::default(),
+            PlacementSpec::dedicated(0, MigProfile::P3g40gb),
+        );
+        assert_eq!(ls.kind(), TenantKind::LatencySensitive);
+        assert_eq!(ls.spec.slo_ms(), 15.0);
+        let bw = TenantWorkload::bandwidth_heavy(
+            "etl",
+            BwSpec::default(),
+            InterferenceSchedule::always_on(100.0),
+            PlacementSpec::dedicated(1, MigProfile::P3g40gb),
+        );
+        assert_eq!(bw.kind(), TenantKind::BandwidthHeavy);
+        assert_eq!(bw.spec.slo_ms(), f64::MAX);
+        let tr = TenantWorkload::compute_heavy(
+            "train",
+            CompSpec::default(),
+            InterferenceSchedule::always_off(100.0),
+            PlacementSpec::shared_with(0),
+        );
+        assert_eq!(tr.kind(), TenantKind::ComputeHeavy);
+        assert_eq!(tr.placement.share_with, Some(0));
+    }
+
+    #[test]
+    fn spec_accessors() {
+        let mut s = WorkloadSpec::LatencySensitive(LsSpec::default());
+        assert!(s.as_ls().is_some());
+        assert!(s.as_bw().is_none());
+        s.as_ls_mut().unwrap().arrival_rps = 10.0;
+        assert_eq!(s.as_ls().unwrap().arrival_rps, 10.0);
+    }
+}

@@ -1,11 +1,18 @@
 //! Property-based tests (util::proptest_lite) on the coordinator
 //! invariants: PS conservation, KV-cache state, batcher bookkeeping,
-//! MIG legality, upgrade-chain termination, event ordering.
+//! MIG legality, upgrade-chain termination, event ordering, and the
+//! N-tenant scenario engine (same seed ⇒ identical `RunResult`;
+//! identical interference schedules across lever settings).
 
+use predserve::controller::Levers;
 use predserve::fabric::ps::{ps_rates, FlowDemand};
 use predserve::gpu::{A100Gpu, MigProfile};
+use predserve::platform::{Scenario, ScenarioBuilder, SimWorld};
 use predserve::serving::kvcache::{KvError, PagedKvCache};
 use predserve::sim::EventQueue;
+use predserve::tenants::{
+    BwSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantWorkload,
+};
 use predserve::util::proptest_lite::{check, Config};
 use predserve::util::rng::Pcg64;
 
@@ -277,5 +284,221 @@ fn prop_kv_out_of_pages_is_clean_failure() {
         cache.release(live.pop().unwrap()).unwrap();
         assert!(cache.allocate(8).is_ok());
         cache.check_invariants().unwrap();
+    }
+}
+
+// --- N-tenant scenario engine properties ------------------------------------
+
+/// Generated description of one extra tenant (the primary is implicit).
+#[derive(Clone, Debug)]
+struct GenTenant {
+    kind: u8,           // % 3: 0 = latency-sensitive, 1 = bw-heavy, 2 = compute-heavy
+    share_primary: bool, // compute-heavy only: MPS onto the primary's instance
+    sched_kind: u8,     // % 3: always-on / generated / periodic
+    a: f64,
+    b: f64,
+}
+
+/// Generated N-tenant scenario spec (data only; `build_gen` turns it into
+/// a `Scenario` deterministically).
+#[derive(Clone, Debug)]
+struct GenScenario {
+    seed: u64,
+    levers: u8,
+    horizon: f64,
+    tenants: Vec<GenTenant>,
+}
+
+fn levers_of(i: u8) -> Levers {
+    match i % 5 {
+        0 => Levers::none(),
+        1 => Levers::guards_only(),
+        2 => Levers::placement_only(),
+        3 => Levers::mig_only(),
+        _ => Levers::full(),
+    }
+}
+
+fn build_gen(spec: &GenScenario, levers: Levers) -> Scenario {
+    let mut b = ScenarioBuilder::new("prop-scenario", spec.seed)
+        .levers(levers)
+        .horizon(spec.horizon)
+        .tenant(TenantWorkload::latency_sensitive(
+            "primary",
+            LsSpec {
+                arrival_rps: 60.0,
+                ..LsSpec::default()
+            },
+            PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+        ));
+    // Legal 3g.40gb slots left after the primary's 4g.40gb on GPU 0.
+    let mut slots = [
+        (0usize, 4usize),
+        (1, 0),
+        (1, 4),
+        (2, 0),
+        (2, 4),
+        (3, 0),
+        (3, 4),
+        (4, 0),
+        (4, 4),
+        (5, 0),
+    ]
+    .into_iter();
+    let mut sched_rng = Pcg64::new(spec.seed, 777);
+    for (i, t) in spec.tenants.iter().enumerate() {
+        let sched = match t.sched_kind % 3 {
+            0 => InterferenceSchedule::always_on(spec.horizon),
+            1 => InterferenceSchedule::generate(
+                &mut sched_rng,
+                spec.horizon,
+                5.0 + t.a,
+                10.0 + t.b,
+                5.0,
+            ),
+            _ => InterferenceSchedule::periodic(spec.horizon, 20.0 + t.a, 0.5, t.b % 15.0),
+        };
+        match t.kind % 3 {
+            0 => {
+                let Some((gpu, start)) = slots.next() else { break };
+                b = b.tenant(TenantWorkload::latency_sensitive(
+                    format!("ls-{i}"),
+                    LsSpec {
+                        arrival_rps: 20.0,
+                        slo_ms: 30.0,
+                        ..LsSpec::default()
+                    },
+                    PlacementSpec::dedicated_at(gpu, MigProfile::P3g40gb, start),
+                ));
+            }
+            1 => {
+                let Some((gpu, start)) = slots.next() else { break };
+                b = b.tenant(TenantWorkload::bandwidth_heavy(
+                    format!("bw-{i}"),
+                    BwSpec::default(),
+                    sched,
+                    PlacementSpec::dedicated_at(gpu, MigProfile::P3g40gb, start),
+                ));
+            }
+            _ => {
+                let placement = if t.share_primary {
+                    PlacementSpec::shared_with(0)
+                } else {
+                    let Some((gpu, start)) = slots.next() else { break };
+                    PlacementSpec::dedicated_at(gpu, MigProfile::P3g40gb, start)
+                };
+                b = b.tenant(TenantWorkload::compute_heavy(
+                    format!("comp-{i}"),
+                    CompSpec::default(),
+                    sched,
+                    placement,
+                ));
+            }
+        }
+    }
+    b.spare(6, MigProfile::P3g40gb, 0).build()
+}
+
+fn gen_scenario(rng: &mut Pcg64) -> GenScenario {
+    let n_extra = 1 + rng.below(4) as usize;
+    let tenants = (0..n_extra)
+        .map(|_| GenTenant {
+            kind: rng.below(3) as u8,
+            share_primary: rng.chance(0.3),
+            sched_kind: rng.below(3) as u8,
+            a: rng.range_f64(0.0, 30.0),
+            b: rng.range_f64(0.0, 30.0),
+        })
+        .collect();
+    GenScenario {
+        seed: rng.below(10_000),
+        levers: rng.below(5) as u8,
+        horizon: 40.0,
+        tenants,
+    }
+}
+
+#[test]
+fn prop_n_tenant_same_seed_identical_run_result() {
+    check(
+        Config { cases: 10, seed: 0x11 },
+        "n-tenant determinism",
+        gen_scenario,
+        |spec| {
+            let lv = levers_of(spec.levers);
+            let a = SimWorld::new(build_gen(spec, lv)).run();
+            let b = SimWorld::new(build_gen(spec, lv)).run();
+            if a.fingerprint() != b.fingerprint() {
+                return Err(format!(
+                    "same seed, different runs:\n  {}\n  {}",
+                    a.fingerprint(),
+                    b.fingerprint()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedules_identical_across_lever_settings() {
+    // §3.2 for arbitrary generated scenarios: the lever setting must not
+    // perturb the interference schedules (workload RNG streams are
+    // independent of controller configuration).
+    check(
+        Config { cases: 12, seed: 0x12 },
+        "lever-independent schedules",
+        gen_scenario,
+        |spec| {
+            let a = build_gen(spec, Levers::none());
+            let b = build_gen(spec, Levers::full());
+            if a.n_tenants() != b.n_tenants() {
+                return Err("tenant count changed with levers".into());
+            }
+            for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+                if ta.schedule.phases != tb.schedule.phases {
+                    return Err(format!("schedule of {} differs across levers", ta.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn catalog_same_seed_identical_run_result() {
+    // Determinism for every scenario in the named catalog, under an
+    // acting controller (full levers).
+    for name in Scenario::CATALOG {
+        let mk = || {
+            let mut s = Scenario::by_name(name, 23, Levers::full()).unwrap();
+            s.horizon = 60.0;
+            SimWorld::new(s).run()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "{name}: same seed produced different runs"
+        );
+    }
+}
+
+#[test]
+fn catalog_schedules_identical_across_lever_settings() {
+    for name in Scenario::CATALOG {
+        for seed in [1u64, 7, 23] {
+            let a = Scenario::by_name(name, seed, Levers::none()).unwrap();
+            let b = Scenario::by_name(name, seed, Levers::full()).unwrap();
+            assert_eq!(a.n_tenants(), b.n_tenants(), "{name}");
+            for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+                assert_eq!(
+                    ta.schedule.phases, tb.schedule.phases,
+                    "{name}/{}: schedule depends on levers",
+                    ta.name
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,186 @@
+//! Offline vendored shim for the `anyhow` crate.
+//!
+//! The container builds with no network access, so instead of the real
+//! crate this workspace vendors the small subset it actually uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros, and the [`Context`] extension trait. Semantics match real
+//! `anyhow` closely enough for error *reporting*; downcasting and
+//! backtraces are intentionally out of scope.
+
+use std::fmt;
+
+/// A string-backed error with a context chain (outermost first).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            msg: m.to_string(),
+            context: Vec::new(),
+        }
+    }
+
+    /// Wrap with an outer context layer (what `.context(...)` does).
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.context.insert(0, c.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+
+    /// Context layers, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.context
+            .iter()
+            .map(String::as_str)
+            .chain(std::iter::once(self.msg.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for layer in self.chain() {
+            if !first {
+                write!(f, ": ")?;
+            }
+            write!(f, "{layer}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut layers = self.chain();
+        if let Some(top) = layers.next() {
+            write!(f, "{top}")?;
+        }
+        let rest: Vec<&str> = layers.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, layer) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {layer}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion cannot collide with `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_layers_render_outermost_first() {
+        let err: Error = anyhow!("root");
+        let err = err.context("middle").context("outer");
+        assert_eq!(err.to_string(), "outer: middle: root");
+        assert_eq!(err.root_cause(), "root");
+    }
+
+    #[test]
+    fn with_context_on_result_and_option() {
+        let r: Result<()> = io_fail().with_context(|| "reading file");
+        assert!(r.unwrap_err().to_string().starts_with("reading file: "));
+        let o: Result<u32> = None.context("missing value");
+        assert_eq!(o.unwrap_err().to_string(), "missing value");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(7).unwrap_err().to_string().contains("unlucky"));
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+    }
+}

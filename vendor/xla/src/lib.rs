@@ -1,0 +1,154 @@
+//! Offline vendored **stub** of the `xla` PJRT bindings.
+//!
+//! The real `xla` crate links libxla/PJRT, which the offline build
+//! container does not ship. This stub mirrors the exact API surface
+//! `predserve::runtime::pjrt` compiles against, and every runtime entry
+//! point returns [`Error::Unavailable`]. The serving-engine code paths
+//! that need a live PJRT client (`Engine::load_default`, the smoke
+//! tests) already treat load errors as "skip gracefully", so the crate
+//! builds and the full simulator test tier runs without XLA present.
+//! Swap this path dependency for the real crate to serve real models.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: the backend is not linked into this build.
+#[derive(Clone, Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real PJRT backend (offline build ships a stub; \
+                 see vendor/xla)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side tensor literal (stub: shape-only bookkeeping).
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let old: i64 = self.dims.iter().product();
+        let new: i64 = dims.iter().product();
+        if old != new {
+            return Err(Error::Unavailable("reshape with mismatched element count"));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        Err(Error::Unavailable("Literal::to_tuple3"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation (stub).
+#[derive(Clone, Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle (stub).
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// PJRT client handle (stub).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        let lit = Literal::vec1(&[1f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert!(r.to_vec::<f32>().is_err());
+        assert!(lit.reshape(&[3, 2]).is_err());
+        let err = HloModuleProto::from_text_file("missing.hlo").unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+}
