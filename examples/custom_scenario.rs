@@ -83,8 +83,30 @@ fn main() {
     assert_eq!(r.per_tenant.len(), 5);
     assert!(r.per_tenant.iter().all(|t| t.completed > 0));
 
-    // --- 2. the named catalog ----------------------------------------------
-    println!("\ncatalog smoke (90 s each):");
+    // --- 2. auto-placement --------------------------------------------------
+    // No hand-written placements: declare the ask (min profile +
+    // expected PCIe demand) and let the topology-aware allocator pick
+    // slots at build time. `layout` records what it chose.
+    let auto = ScenarioBuilder::new("auto_demo", 7)
+        .levers(Levers::full())
+        .horizon(120.0)
+        .add_auto(TenantWorkload::latency_sensitive(
+            "svc",
+            LsSpec::default(),
+            PlacementSpec::auto(MigProfile::P3g40gb, 3.0),
+        ))
+        .add_auto(TenantWorkload::bandwidth_heavy(
+            "etl",
+            BwSpec::default(),
+            InterferenceSchedule::always_on(120.0),
+            PlacementSpec::auto(MigProfile::P2g20gb, 4.0),
+        ))
+        .build();
+    println!("\nauto-placed layout:\n{}", auto.layout.render());
+    assert!(auto.tenants.iter().all(|t| !t.placement.is_auto()));
+
+    // --- 3. the named catalog ----------------------------------------------
+    println!("catalog smoke (90 s each):");
     for name in Scenario::CATALOG {
         let mut s = Scenario::by_name(name, 11, Levers::full()).unwrap();
         s.horizon = 90.0;

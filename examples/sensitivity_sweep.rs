@@ -5,7 +5,7 @@
 
 use predserve::cli::Args;
 use predserve::controller::admission::{admit, AdmissionRequest, Verdict};
-use predserve::controller::Levers;
+use predserve::controller::{ControllerConfig, Levers};
 use predserve::experiments::harness::Repeats;
 use predserve::experiments::runs;
 use predserve::gpu::MigProfile;
@@ -37,6 +37,7 @@ fn main() {
             },
             &snap,
             &view,
+            &ControllerConfig::default(),
         );
         println!("admission ask {:8} @ {gbps:4.1} GB/s -> {verdict:?}", profile.name());
     }
@@ -49,6 +50,7 @@ fn main() {
         },
         &snap,
         &view,
+        &ControllerConfig::default(),
     );
     assert!(matches!(v, Verdict::Admit { .. }));
 }

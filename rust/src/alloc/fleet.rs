@@ -1,0 +1,242 @@
+//! Fleet-level dispatch: split one tenant list across multiple hosts
+//! with the same topology-aware allocator the single host uses.
+//!
+//! The cluster leader (MIG-Serving-style reconfigurable-machine
+//! scheduling, arXiv 2109.11067) packs in first-fit-decreasing order and
+//! offers each tenant to hosts in least-loaded-first order (committed
+//! compute slices, host index as tie-break), so the layout is
+//! deterministic and latency-sensitive tenants spread across nodes. A
+//! tenant every host queues is reported `Queued`; one every host rejects
+//! is `Rejected` — never silently dropped or double-booked.
+
+use crate::controller::ControllerConfig;
+use crate::gpu::MigProfile;
+use crate::topo::HostTopology;
+
+use super::host::{ffd_key, AutoRequest, HostAllocator};
+use super::plan::SlotOutcome;
+
+/// One tenant's slot in the fleet: which host, which MIG slot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Assignment {
+    /// Tenant index in the fleet list.
+    pub tenant: usize,
+    pub gpu: usize,
+    pub profile: MigProfile,
+    pub start: usize,
+}
+
+/// Assignments for one host, in fleet-list order.
+#[derive(Clone, Debug, Default)]
+pub struct HostAssignments {
+    pub node: usize,
+    pub assigned: Vec<Assignment>,
+}
+
+/// The fleet-wide plan.
+#[derive(Clone, Debug)]
+pub struct FleetPlan {
+    pub hosts: Vec<HostAssignments>,
+    /// Fleet tenant indices no host could safely place right now.
+    pub queued: Vec<usize>,
+    /// Fleet tenant indices structurally impossible on any host.
+    pub rejected: Vec<usize>,
+}
+
+impl FleetPlan {
+    pub fn placed(&self) -> usize {
+        self.hosts.iter().map(|h| h.assigned.len()).sum()
+    }
+
+    /// Deterministic digest (cluster determinism tests).
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for h in &self.hosts {
+            let _ = write!(s, "n{}[", h.node);
+            for a in &h.assigned {
+                let _ = write!(s, "{}:g{}.{}@{};", a.tenant, a.gpu, a.profile, a.start);
+            }
+            let _ = write!(s, "]");
+        }
+        let _ = write!(s, "q{:?}r{:?}", self.queued, self.rejected);
+        s
+    }
+}
+
+/// Packs one tenant list across `nodes` identical hosts.
+pub struct FleetAllocator {
+    hosts: Vec<HostAllocator>,
+}
+
+impl FleetAllocator {
+    pub fn new(nodes: usize, topo: HostTopology, cfg: ControllerConfig) -> FleetAllocator {
+        assert!(nodes > 0, "fleet needs at least one host");
+        FleetAllocator {
+            hosts: (0..nodes)
+                .map(|_| HostAllocator::new(topo.clone(), cfg.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// Pack the whole fleet list. `reqs[i].index` must be the tenant's
+    /// position in the fleet list (workers re-derive the list from the
+    /// fleet name + seed and look tenants up by this index).
+    pub fn pack(&mut self, reqs: &[AutoRequest]) -> FleetPlan {
+        let mut order: Vec<usize> = (0..reqs.len()).collect();
+        order.sort_by_key(|&i| ffd_key(&reqs[i]));
+
+        let mut per_host: Vec<Vec<Assignment>> = vec![Vec::new(); self.hosts.len()];
+        let mut queued = Vec::new();
+        let mut rejected = Vec::new();
+        for i in order {
+            let req = &reqs[i];
+            // Least-loaded host first (committed slices, then node index).
+            let mut host_order: Vec<usize> = (0..self.hosts.len()).collect();
+            host_order.sort_by_key(|&h| (self.hosts[h].used_slices(), h));
+            let mut verdict = SlotOutcome::Rejected;
+            for h in host_order {
+                match self.hosts[h].place(req).0 {
+                    SlotOutcome::Placed {
+                        gpu,
+                        profile,
+                        start,
+                    } => {
+                        per_host[h].push(Assignment {
+                            tenant: req.index,
+                            gpu,
+                            profile,
+                            start,
+                        });
+                        verdict = SlotOutcome::Placed {
+                            gpu,
+                            profile,
+                            start,
+                        };
+                        break;
+                    }
+                    SlotOutcome::Queued => verdict = SlotOutcome::Queued,
+                    SlotOutcome::Rejected | SlotOutcome::Shared { .. } => {}
+                }
+            }
+            match verdict {
+                SlotOutcome::Placed { .. } => {}
+                SlotOutcome::Queued => queued.push(req.index),
+                _ => rejected.push(req.index),
+            }
+        }
+        queued.sort_unstable();
+        rejected.sort_unstable();
+        for assigned in per_host.iter_mut() {
+            assigned.sort_by_key(|a| a.tenant);
+        }
+        FleetPlan {
+            hosts: per_host
+                .into_iter()
+                .enumerate()
+                .map(|(node, assigned)| HostAssignments { node, assigned })
+                .collect(),
+            queued,
+            rejected,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tenants::TenantKind;
+
+    fn reqs(n: usize) -> Vec<AutoRequest> {
+        (0..n)
+            .map(|i| {
+                let (kind, min) = match i % 4 {
+                    0 => (TenantKind::LatencySensitive, MigProfile::P2g20gb),
+                    1 | 2 => (TenantKind::BandwidthHeavy, MigProfile::P2g20gb),
+                    _ => (TenantKind::ComputeHeavy, MigProfile::P1g10gb),
+                };
+                AutoRequest {
+                    index: i,
+                    name: format!("t{i}"),
+                    kind,
+                    min_profile: min,
+                    expected_pcie_gbps: 0.5,
+                }
+            })
+            .collect()
+    }
+
+    fn fleet(nodes: usize) -> FleetAllocator {
+        FleetAllocator::new(nodes, HostTopology::p4d(), ControllerConfig::default())
+    }
+
+    #[test]
+    fn splits_across_hosts_without_overlap_or_loss() {
+        use crate::controller::Levers;
+        let rs = reqs(24);
+        let mut f = FleetAllocator::new(
+            2,
+            HostTopology::p4d(),
+            ControllerConfig::dense_pack(Levers::full()),
+        );
+        let plan = f.pack(&rs);
+        assert_eq!(plan.placed(), 24, "dense pack fits the whole list");
+        assert_eq!(plan.placed() + plan.queued.len() + plan.rejected.len(), 24);
+        // Every host got a share of the fleet, including LS tenants.
+        for h in &plan.hosts {
+            assert!(!h.assigned.is_empty(), "node{} got nothing", h.node);
+            assert!(
+                h.assigned
+                    .iter()
+                    .any(|a| rs[a.tenant].kind == TenantKind::LatencySensitive),
+                "node{} got no latency-sensitive tenant",
+                h.node
+            );
+        }
+        // No tenant assigned twice; no slice double-booked per host.
+        let mut seen = std::collections::BTreeSet::new();
+        for h in &plan.hosts {
+            let mut occ = vec![[0u8; 7]; 8];
+            for a in &h.assigned {
+                assert!(seen.insert(a.tenant), "tenant {} assigned twice", a.tenant);
+                for s in a.start..a.start + a.profile.compute_slices() {
+                    occ[a.gpu][s] += 1;
+                    assert!(occ[a.gpu][s] <= 1, "double-booked slice");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_plan_is_deterministic() {
+        let rs = reqs(30);
+        let a = fleet(3).pack(&rs);
+        let b = fleet(3).pack(&rs);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn overflow_spills_to_queue_not_overlap() {
+        // 2 hosts x 56 slices = 112; 70 x 2g = 140 slices cannot all fit.
+        let rs: Vec<AutoRequest> = (0..70)
+            .map(|i| AutoRequest {
+                index: i,
+                name: format!("t{i}"),
+                kind: TenantKind::ComputeHeavy,
+                min_profile: MigProfile::P2g20gb,
+                expected_pcie_gbps: 0.05,
+            })
+            .collect();
+        let plan = fleet(2).pack(&rs);
+        assert!(plan.placed() < 70);
+        assert_eq!(plan.placed() + plan.queued.len() + plan.rejected.len(), 70);
+        assert!(
+            !plan.queued.is_empty() || !plan.rejected.is_empty(),
+            "overflow vanished"
+        );
+    }
+}

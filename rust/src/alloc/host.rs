@@ -1,0 +1,518 @@
+//! Host-level auto-placement: deterministic, topology-aware packing of
+//! MIG slices across one node's GPUs.
+//!
+//! The allocator is a planning-time twin of the controller's admission
+//! path (§2.2.1 + §2.3): it keeps a working copy of the host's MIG state
+//! plus the *expected* sustained load each committed tenant puts on the
+//! shared-bandwidth domains, and asks `controller::admission::admit` for
+//! every auto tenant. Packing order is first-fit-decreasing by profile
+//! size (latency-sensitive tenants first within a size class, then
+//! original index), so layouts are deterministic for a given tenant mix
+//! and topology — no RNG is involved.
+
+use crate::controller::admission::{self, AdmissionRequest, Verdict};
+use crate::controller::placement::{placement_score, ScoreWeights};
+use crate::controller::view::TenantView;
+use crate::controller::{ControllerConfig, PlannerView};
+use crate::gpu::{A100Gpu, InstanceId, MigError, MigProfile};
+use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TailStats, TenantSignal};
+use crate::tenants::{TenantId, TenantKind, TenantWorkload};
+use crate::topo::{HostTopology, LinkId};
+
+use super::plan::SlotOutcome;
+
+/// One tenant's ask, as the allocator sees it.
+#[derive(Clone, Debug)]
+pub struct AutoRequest {
+    /// Tenant index in the scenario / fleet list (becomes `TenantId`).
+    pub index: usize,
+    pub name: String,
+    pub kind: TenantKind,
+    /// Smallest profile the workload can run on (admission may only ever
+    /// place it on this or a larger profile).
+    pub min_profile: MigProfile,
+    /// Expected sustained PCIe demand (GB/s).
+    pub expected_pcie_gbps: f64,
+}
+
+impl AutoRequest {
+    /// Requests for a fully auto-placed tenant list (the fleet leader's
+    /// input). Panics if any tenant carries a pinned placement — fleet
+    /// lists never hand-place.
+    pub fn from_workloads(tenants: &[TenantWorkload]) -> Vec<AutoRequest> {
+        tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let a = t.placement.auto.unwrap_or_else(|| {
+                    panic!("tenant {i} ({}) is not auto-placed", t.name)
+                });
+                AutoRequest {
+                    index: i,
+                    name: t.name.clone(),
+                    kind: t.kind(),
+                    min_profile: a.min_profile,
+                    expected_pcie_gbps: a.expected_pcie_gbps,
+                }
+            })
+            .collect()
+    }
+}
+
+/// A committed tenant: what the synthetic snapshot/view report.
+#[derive(Clone, Debug)]
+struct Committed {
+    index: usize,
+    gpu: usize,
+    instance: InstanceId,
+    profile: MigProfile,
+    kind: TenantKind,
+    pcie_gbps: f64,
+}
+
+/// Working host state for one packing run.
+#[derive(Clone, Debug)]
+pub struct HostAllocator {
+    topo: HostTopology,
+    cfg: ControllerConfig,
+    gpus: Vec<A100Gpu>,
+    committed: Vec<Committed>,
+    /// Expected sustained GB/s per shared-bandwidth domain.
+    link_gbps: Vec<f64>,
+}
+
+/// FFD ordering key: bigger profiles first; latency-sensitive before
+/// background within a size class (they are the tenants admission
+/// protects); original index as the final deterministic tie-break.
+pub fn ffd_key(req: &AutoRequest) -> (usize, u8, usize) {
+    let kind_rank = match req.kind {
+        TenantKind::LatencySensitive => 0,
+        TenantKind::BandwidthHeavy => 1,
+        TenantKind::ComputeHeavy => 2,
+    };
+    (
+        7 - req.min_profile.compute_slices(), // descending size
+        kind_rank,
+        req.index,
+    )
+}
+
+impl HostAllocator {
+    pub fn new(topo: HostTopology, cfg: ControllerConfig) -> HostAllocator {
+        let gpus = (0..topo.num_gpus).map(A100Gpu::new).collect();
+        let link_gbps = vec![0.0; topo.num_links];
+        HostAllocator {
+            topo,
+            cfg,
+            gpus,
+            committed: Vec::new(),
+            link_gbps,
+        }
+    }
+
+    /// Compute slices already committed on this host (fleet balancing).
+    pub fn used_slices(&self) -> usize {
+        self.gpus.iter().map(|g| 7 - g.free_slices()).sum()
+    }
+
+    /// Expected per-link load accounted so far (GB/s, by `LinkId`).
+    pub fn link_gbps(&self) -> &[f64] {
+        &self.link_gbps
+    }
+
+    pub fn link_capacities(&self) -> Vec<f64> {
+        (0..self.topo.num_links)
+            .map(|l| self.topo.link_capacity(LinkId(l)))
+            .collect()
+    }
+
+    /// Charge a tenant's expected demand against the shared links: the
+    /// GPU's PCIe uplink always; the NUMA NVMe path for workloads that
+    /// stage from storage (ETL reads ≈ their PCIe volume, inference
+    /// staging ≈ 0.3× of it — mirroring the specs' pipelines). NVMe
+    /// charges feed the *score* (NUMA-I/O spreading) and the plan's
+    /// link-load report; admission's hard headroom gate applies to the
+    /// PCIe uplink only — storage oversubscription stretches cycles
+    /// under PS sharing rather than refusing tenants.
+    fn charge_links(&mut self, gpu: usize, kind: TenantKind, gbps: f64) {
+        let pcie = self.topo.link_of_gpu(gpu);
+        self.link_gbps[pcie.0] += gbps;
+        let numa = self.topo.numa_of_gpu(gpu);
+        let nvme = self.topo.numa_nodes[numa].nvme_link;
+        match kind {
+            TenantKind::BandwidthHeavy => self.link_gbps[nvme.0] += gbps,
+            TenantKind::LatencySensitive => self.link_gbps[nvme.0] += 0.3 * gbps,
+            TenantKind::ComputeHeavy => {}
+        }
+    }
+
+    /// Commit a pinned (hand-placed) tenant. Returns the start slice the
+    /// instance landed on (useful when the caller passed `start: None`).
+    pub fn commit_pinned(
+        &mut self,
+        index: usize,
+        kind: TenantKind,
+        gpu: usize,
+        profile: MigProfile,
+        start: Option<usize>,
+        pcie_gbps: f64,
+    ) -> Result<usize, MigError> {
+        let instance = match start {
+            Some(s) => self.gpus[gpu].create_at(profile, s)?,
+            None => self.gpus[gpu].create(profile)?,
+        };
+        let landed = self.gpus[gpu]
+            .instance(instance)
+            .expect("just-created instance must exist")
+            .start;
+        self.committed.push(Committed {
+            index,
+            gpu,
+            instance,
+            profile,
+            kind,
+            pcie_gbps,
+        });
+        self.charge_links(gpu, kind, pcie_gbps);
+        Ok(landed)
+    }
+
+    /// Commit an MPS sharer: no instance of its own, but its traffic
+    /// still loads the peer GPU's links.
+    pub fn commit_shared(&mut self, index: usize, kind: TenantKind, peer: usize, pcie_gbps: f64) {
+        let p = self
+            .committed
+            .iter()
+            .find(|c| c.index == peer)
+            .expect("MPS peer must be committed before its sharer")
+            .clone();
+        self.committed.push(Committed {
+            index,
+            gpu: p.gpu,
+            instance: p.instance,
+            profile: p.profile,
+            kind,
+            pcie_gbps,
+        });
+        self.charge_links(p.gpu, kind, pcie_gbps);
+    }
+
+    /// Occupy slices for a pre-provisioned idle spare. Spares are the
+    /// controller's runtime headroom: the allocator must neither place
+    /// tenants on top of them nor hand their slices out.
+    pub fn commit_spare(
+        &mut self,
+        gpu: usize,
+        profile: MigProfile,
+        start: usize,
+    ) -> Result<(), MigError> {
+        self.gpus[gpu].create_at(profile, start)?;
+        Ok(())
+    }
+
+    /// Synthetic planning snapshot: expected demand in place of measured
+    /// telemetry (same schema the live controller consumes).
+    fn snapshot(&self) -> SignalSnapshot {
+        let links: Vec<LinkSignal> = (0..self.topo.num_links)
+            .map(|l| {
+                let gbps = self.link_gbps[l];
+                let cap = self.topo.link_capacity(LinkId(l));
+                LinkSignal {
+                    link: LinkId(l),
+                    utilization: (gbps / cap).min(1.0),
+                    gbps,
+                }
+            })
+            .collect();
+        let tenants: Vec<TenantSignal> = self
+            .committed
+            .iter()
+            .map(|c| TenantSignal {
+                tenant: TenantId(c.index),
+                tails: TailStats::default(),
+                pcie_gbps: c.pcie_gbps,
+                block_io_gbps: if c.kind == TenantKind::BandwidthHeavy {
+                    c.pcie_gbps * 0.5
+                } else {
+                    0.0
+                },
+                active: true,
+            })
+            .collect();
+        let numa_io_gbps: Vec<f64> = self
+            .topo
+            .numa_nodes
+            .iter()
+            .map(|n| self.link_gbps[n.nvme_link.0])
+            .collect();
+        // Same synthetic IRQ model the simulated host reports (shared
+        // helper, so plan-time scores track the live controller's).
+        let numa_irq_rate: Vec<f64> = numa_io_gbps
+            .iter()
+            .zip(self.topo.numa_nodes.iter())
+            .map(|(io, n)| {
+                let pcie: f64 = self
+                    .topo
+                    .switches
+                    .iter()
+                    .filter(|s| s.numa == n.id)
+                    .map(|s| self.link_gbps[s.link.0])
+                    .sum();
+                crate::telemetry::signals::synthetic_irq_rate(*io, pcie)
+            })
+            .collect();
+        SignalSnapshot {
+            t: 0.0,
+            dt: 1.0,
+            tenants,
+            links,
+            gpu_sm_util: vec![0.0; self.topo.num_gpus],
+            numa_io_gbps,
+            numa_irq_rate,
+        }
+    }
+
+    fn view(&self) -> PlannerView {
+        PlannerView {
+            topo: self.topo.clone(),
+            gpus: self.gpus.clone(),
+            tenants: self
+                .committed
+                .iter()
+                .map(|c| TenantView {
+                    tenant: TenantId(c.index),
+                    gpu: c.gpu,
+                    instance: c.instance,
+                    profile: c.profile,
+                    mps_peers: Vec::new(),
+                    numa: self.topo.numa_of_gpu(c.gpu),
+                    mps_quota: 100.0,
+                    io_throttle_gbps: None,
+                })
+                .collect(),
+            // Spares stay the controller's runtime headroom: only fresh
+            // instances on free slices are allocation targets.
+            free_instances: Vec::new(),
+            primary_base_rps: 0.0,
+        }
+    }
+
+    /// Place one auto tenant through the admission path. On `Admit` the
+    /// slot is committed to the working state; the returned outcome also
+    /// carries the placement score of the chosen slot.
+    pub fn place(&mut self, req: &AutoRequest) -> (SlotOutcome, f64) {
+        let snap = self.snapshot();
+        let view = self.view();
+        let verdict = admission::admit(
+            &AdmissionRequest {
+                tenant: TenantId(req.index),
+                min_profile: req.min_profile,
+                expected_pcie_gbps: req.expected_pcie_gbps,
+            },
+            &snap,
+            &view,
+            &self.cfg,
+        );
+        match verdict {
+            Verdict::Admit { gpu, profile } => {
+                let w = ScoreWeights::default();
+                let score = placement_score(TenantId(req.index), gpu, profile, &snap, &view, &w);
+                let start = self
+                    .commit_pinned(req.index, req.kind, gpu, profile, None, req.expected_pcie_gbps)
+                    .expect("admitted slot must be creatable");
+                (
+                    SlotOutcome::Placed {
+                        gpu,
+                        profile,
+                        start,
+                    },
+                    score,
+                )
+            }
+            Verdict::Queue => (SlotOutcome::Queued, 0.0),
+            Verdict::Reject => (SlotOutcome::Rejected, 0.0),
+        }
+    }
+
+    /// Pack a batch of auto tenants in first-fit-decreasing order.
+    /// Returns `(outcome, score)` aligned with the *input* order.
+    pub fn pack(&mut self, reqs: &[AutoRequest]) -> Vec<(SlotOutcome, f64)> {
+        let mut order: Vec<usize> = (0..reqs.len()).collect();
+        order.sort_by_key(|&i| ffd_key(&reqs[i]));
+        let mut out: Vec<Option<(SlotOutcome, f64)>> = vec![None; reqs.len()];
+        for i in order {
+            out[i] = Some(self.place(&reqs[i]));
+        }
+        out.into_iter()
+            .map(|o| o.expect("every request packed"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(index: usize, kind: TenantKind, min: MigProfile, gbps: f64) -> AutoRequest {
+        AutoRequest {
+            index,
+            name: format!("t{index}"),
+            kind,
+            min_profile: min,
+            expected_pcie_gbps: gbps,
+        }
+    }
+
+    fn alloc() -> HostAllocator {
+        HostAllocator::new(HostTopology::p4d(), ControllerConfig::default())
+    }
+
+    #[test]
+    fn places_on_idle_host_at_min_profile() {
+        let mut a = alloc();
+        let (o, score) = a.place(&req(0, TenantKind::LatencySensitive, MigProfile::P3g40gb, 2.0));
+        match o {
+            SlotOutcome::Placed { profile, .. } => assert_eq!(profile, MigProfile::P3g40gb),
+            other => panic!("expected Placed, got {other:?}"),
+        }
+        assert!(score.is_finite());
+        assert_eq!(a.used_slices(), 3);
+    }
+
+    #[test]
+    fn never_double_books_and_respects_legal_starts() {
+        use crate::controller::Levers;
+        // Dense-pack config: occupancy/legality is what this test pins
+        // down, so the score ceiling must not queue anyone first.
+        let mut a = HostAllocator::new(
+            HostTopology::p4d(),
+            ControllerConfig::dense_pack(Levers::full()),
+        );
+        // 8 GPUs x 7 slices; 20 x 2g asks = 40 slices, all placeable
+        // (each GPU holds three 2g instances at starts 0/2/4).
+        let reqs: Vec<AutoRequest> = (0..20)
+            .map(|i| req(i, TenantKind::BandwidthHeavy, MigProfile::P2g20gb, 0.1))
+            .collect();
+        let out = a.pack(&reqs);
+        let mut occ = vec![[0u8; 7]; 8];
+        for (o, _) in &out {
+            match *o {
+                SlotOutcome::Placed { gpu, profile, start } => {
+                    assert!(profile.legal_starts().contains(&start));
+                    for s in start..start + profile.compute_slices() {
+                        occ[gpu][s] += 1;
+                        assert!(occ[gpu][s] <= 1, "gpu{gpu} slice {s} double-booked");
+                    }
+                }
+                ref other => panic!("expected Placed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn pack_is_deterministic() {
+        let reqs: Vec<AutoRequest> = (0..12)
+            .map(|i| {
+                let kind = match i % 3 {
+                    0 => TenantKind::LatencySensitive,
+                    1 => TenantKind::BandwidthHeavy,
+                    _ => TenantKind::ComputeHeavy,
+                };
+                req(i, kind, MigProfile::ALL[i % 4], 0.5 + i as f64 * 0.3)
+            })
+            .collect();
+        let a = alloc().pack(&reqs);
+        let b = alloc().pack(&reqs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.0, y.0);
+        }
+    }
+
+    #[test]
+    fn exhausted_host_rejects() {
+        let mut a = alloc();
+        // Fill every GPU completely with 7g tenants.
+        for i in 0..8 {
+            match a.place(&req(i, TenantKind::ComputeHeavy, MigProfile::P7g80gb, 0.1)).0 {
+                SlotOutcome::Placed { .. } => {}
+                other => panic!("fill {i}: {other:?}"),
+            }
+        }
+        // No slice left anywhere: structurally impossible => Reject.
+        let (o, _) = a.place(&req(9, TenantKind::ComputeHeavy, MigProfile::P1g10gb, 0.1));
+        assert_eq!(o, SlotOutcome::Rejected);
+    }
+
+    #[test]
+    fn link_headroom_gates_placement() {
+        // Isolate the bandwidth gate: a relaxed score ceiling (the
+        // dense-packing configuration) leaves link headroom as the only
+        // admission filter. Each 25 GB/s uplink tolerates 21.25 GB/s of
+        // expected load, so of eight 12 GB/s asks exactly one fits per
+        // switch; the other four must queue rather than overload a link.
+        let cfg = ControllerConfig {
+            safe_score: 1e9,
+            ..Default::default()
+        };
+        let mut a = HostAllocator::new(HostTopology::p4d(), cfg.clone());
+        let reqs: Vec<AutoRequest> = (0..8)
+            .map(|i| req(i, TenantKind::ComputeHeavy, MigProfile::P2g20gb, 12.0))
+            .collect();
+        let out = a.pack(&reqs);
+        let placed = out.iter().filter(|(o, _)| o.is_placed()).count();
+        let queued = out
+            .iter()
+            .filter(|(o, _)| matches!(o, SlotOutcome::Queued))
+            .count();
+        assert_eq!(placed, 4, "one per switch");
+        assert_eq!(queued, 4);
+        // The accounted expected load never exceeds the headroom ceiling.
+        let caps = a.link_capacities();
+        for (l, &gbps) in a.link_gbps().iter().enumerate() {
+            assert!(
+                gbps <= caps[l] * cfg.link_headroom + 1e-9,
+                "link{l}: {gbps} over headroom"
+            );
+        }
+    }
+
+    #[test]
+    fn spreads_before_stacking_a_hot_switch() {
+        let mut a = alloc();
+        // Two heavy ETL tenants: the second must not land on the first's
+        // PCIe switch while three other switches are idle.
+        let (o1, _) = a.place(&req(0, TenantKind::BandwidthHeavy, MigProfile::P3g40gb, 8.0));
+        let (o2, _) = a.place(&req(1, TenantKind::BandwidthHeavy, MigProfile::P3g40gb, 8.0));
+        let (g1, g2) = match (o1, o2) {
+            (
+                SlotOutcome::Placed { gpu: g1, .. },
+                SlotOutcome::Placed { gpu: g2, .. },
+            ) => (g1, g2),
+            other => panic!("{other:?}"),
+        };
+        let topo = HostTopology::p4d();
+        assert!(
+            !topo.share_switch(g1, g2),
+            "both heavy tenants on gpus {g1}/{g2} (same switch)"
+        );
+    }
+
+    #[test]
+    fn pinned_and_spares_block_auto_slots() {
+        let mut a = alloc();
+        // Pin a 4g on gpu0 and a spare 3g at gpu0 slice 4: gpu0 is full.
+        a.commit_pinned(0, TenantKind::LatencySensitive, 0, MigProfile::P4g40gb, Some(0), 2.0)
+            .unwrap();
+        a.commit_spare(0, MigProfile::P3g40gb, 4).unwrap();
+        let reqs: Vec<AutoRequest> = (1..8)
+            .map(|i| req(i, TenantKind::ComputeHeavy, MigProfile::P7g80gb, 0.1))
+            .collect();
+        for (o, _) in a.pack(&reqs) {
+            match o {
+                SlotOutcome::Placed { gpu, .. } => assert_ne!(gpu, 0, "placed onto full gpu0"),
+                SlotOutcome::Queued | SlotOutcome::Rejected => {}
+                SlotOutcome::Shared { .. } => unreachable!(),
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Topology-aware auto-placement (the "alloc" subsystem).
+//!
+//! Scenarios declare *what* a tenant needs (`PlacementSpec::auto`: a
+//! minimum MIG profile plus expected PCIe demand) and this module decides
+//! *where* it runs:
+//!
+//! * [`HostAllocator`] packs one host — first-fit-decreasing by profile
+//!   size, candidates ordered by the §2.2.1 `placement_score` (PCIe
+//!   root-complex sharing, NUMA I/O, IRQ pressure) and gated by the §2.3
+//!   admission verdicts, so unplaceable tenants surface as
+//!   `Queued`/`Rejected` instead of silently overlapping.
+//! * [`FleetAllocator`] splits a fleet-level tenant list across hosts
+//!   (least-loaded first) — what the cluster leader dispatches.
+//! * [`AllocPlan`] / [`FleetPlan`] are the resulting layouts as data:
+//!   deterministic (fingerprintable) and renderable (`predserve plan`).
+//!
+//! The allocator is deliberately RNG-free: the same tenant mix, topology
+//! and `ControllerConfig` thresholds always produce the same layout.
+
+pub mod fleet;
+pub mod host;
+pub mod plan;
+
+pub use fleet::{Assignment, FleetAllocator, FleetPlan, HostAssignments};
+pub use host::{AutoRequest, HostAllocator};
+pub use plan::{AllocPlan, PlanEntry, SlotOutcome};

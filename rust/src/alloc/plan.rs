@@ -1,0 +1,211 @@
+//! Allocation plans: the layout an allocator chose, as data.
+//!
+//! A plan records one entry per tenant (pinned, shared, auto-placed,
+//! queued, or rejected) plus the expected per-link load the packing
+//! accounted. Plans are deterministic for a given tenant mix, so
+//! `fingerprint()` is the determinism witness the property tests check,
+//! and `render()` is what the `predserve plan` subcommand prints.
+
+use crate::gpu::MigProfile;
+use crate::tenants::TenantKind;
+
+/// Where one tenant ended up.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SlotOutcome {
+    /// Concrete MIG slot on this host.
+    Placed {
+        gpu: usize,
+        profile: MigProfile,
+        start: usize,
+    },
+    /// MPS co-scheduled on tenant `peer`'s instance (pinned scenarios).
+    Shared { peer: usize },
+    /// Admission found capacity but no *safe* slot right now (§2.3).
+    Queued,
+    /// Structurally impossible without violating existing tenants' SLOs.
+    Rejected,
+}
+
+impl SlotOutcome {
+    pub fn is_placed(&self) -> bool {
+        matches!(self, SlotOutcome::Placed { .. } | SlotOutcome::Shared { .. })
+    }
+}
+
+/// One tenant's line in the plan.
+#[derive(Clone, Debug)]
+pub struct PlanEntry {
+    /// Tenant index in the scenario / fleet list.
+    pub index: usize,
+    pub name: String,
+    pub kind: TenantKind,
+    /// Chosen by the allocator (vs pinned by the scenario author).
+    pub auto: bool,
+    pub outcome: SlotOutcome,
+    /// §2.2.1 placement score of the chosen slot at decision time
+    /// (0.0 for pinned/shared/unplaced entries).
+    pub score: f64,
+    /// Expected sustained PCIe demand charged against the links (GB/s).
+    pub expected_pcie_gbps: f64,
+}
+
+/// A host-level layout: entries in tenant order + expected link load.
+#[derive(Clone, Debug, Default)]
+pub struct AllocPlan {
+    pub entries: Vec<PlanEntry>,
+    /// Expected sustained load per shared-bandwidth domain (GB/s),
+    /// indexed by `LinkId`.
+    pub link_gbps: Vec<f64>,
+    /// Capacity of each link (GB/s), same indexing.
+    pub link_capacity: Vec<f64>,
+}
+
+impl AllocPlan {
+    /// Tenants with a concrete slot (placed or MPS-shared).
+    pub fn placed(&self) -> usize {
+        self.entries.iter().filter(|e| e.outcome.is_placed()).count()
+    }
+
+    /// Entries admission could not place (queued or rejected).
+    pub fn unplaced(&self) -> Vec<&PlanEntry> {
+        self.entries
+            .iter()
+            .filter(|e| !e.outcome.is_placed())
+            .collect()
+    }
+
+    pub fn all_placed(&self) -> bool {
+        self.unplaced().is_empty()
+    }
+
+    /// Deterministic digest of the layout (same tenant mix + topology ⇒
+    /// identical fingerprint; the property tests rely on it).
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for e in &self.entries {
+            match e.outcome {
+                SlotOutcome::Placed { gpu, profile, start } => {
+                    let _ = write!(s, "{}:{}=g{gpu}.{profile}@{start};", e.index, e.name);
+                }
+                SlotOutcome::Shared { peer } => {
+                    let _ = write!(s, "{}:{}=mps({peer});", e.index, e.name);
+                }
+                SlotOutcome::Queued => {
+                    let _ = write!(s, "{}:{}=queued;", e.index, e.name);
+                }
+                SlotOutcome::Rejected => {
+                    let _ = write!(s, "{}:{}=rejected;", e.index, e.name);
+                }
+            }
+        }
+        s
+    }
+
+    /// Human-readable layout table for the `plan` CLI.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{:>3} {:16} {:18} {:5} {:20} {:>7} {:>9}",
+            "#", "tenant", "kind", "mode", "placement", "score", "exp GB/s"
+        );
+        for e in &self.entries {
+            let mode = if e.auto { "auto" } else { "pin" };
+            let slot = match e.outcome {
+                SlotOutcome::Placed { gpu, profile, start } => {
+                    format!("gpu{gpu} {profile} @{start}")
+                }
+                SlotOutcome::Shared { peer } => format!("MPS on tenant {peer}"),
+                SlotOutcome::Queued => "QUEUED".to_string(),
+                SlotOutcome::Rejected => "REJECTED".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "{:>3} {:16} {:18} {:5} {:20} {:>7.3} {:>9.2}",
+                e.index,
+                e.name,
+                e.kind.label(),
+                mode,
+                slot,
+                e.score,
+                e.expected_pcie_gbps
+            );
+        }
+        let _ = writeln!(s, "expected link load:");
+        for (l, (&gbps, &cap)) in self.link_gbps.iter().zip(&self.link_capacity).enumerate() {
+            let _ = writeln!(
+                s,
+                "  link{l:<2} {gbps:6.2} / {cap:5.1} GB/s ({:3.0}%)",
+                100.0 * gbps / cap.max(1e-9)
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(index: usize, outcome: SlotOutcome) -> PlanEntry {
+        PlanEntry {
+            index,
+            name: format!("t{index}"),
+            kind: TenantKind::LatencySensitive,
+            auto: true,
+            outcome,
+            score: 0.1,
+            expected_pcie_gbps: 1.0,
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_layouts() {
+        let mk = |gpu| AllocPlan {
+            entries: vec![entry(
+                0,
+                SlotOutcome::Placed {
+                    gpu,
+                    profile: MigProfile::P2g20gb,
+                    start: 0,
+                },
+            )],
+            link_gbps: vec![0.0],
+            link_capacity: vec![25.0],
+        };
+        assert_eq!(mk(0).fingerprint(), mk(0).fingerprint());
+        assert_ne!(mk(0).fingerprint(), mk(1).fingerprint());
+    }
+
+    #[test]
+    fn unplaced_and_render_report_queue_reject() {
+        let plan = AllocPlan {
+            entries: vec![
+                entry(
+                    0,
+                    SlotOutcome::Placed {
+                        gpu: 1,
+                        profile: MigProfile::P3g40gb,
+                        start: 4,
+                    },
+                ),
+                entry(1, SlotOutcome::Queued),
+                entry(2, SlotOutcome::Rejected),
+                entry(3, SlotOutcome::Shared { peer: 0 }),
+            ],
+            link_gbps: vec![2.0, 0.5],
+            link_capacity: vec![25.0, 8.0],
+        };
+        assert_eq!(plan.placed(), 2);
+        assert_eq!(plan.unplaced().len(), 2);
+        assert!(!plan.all_placed());
+        let r = plan.render();
+        assert!(r.contains("QUEUED"));
+        assert!(r.contains("REJECTED"));
+        assert!(r.contains("gpu1 3g.40gb @4"));
+        assert!(r.contains("MPS on tenant 0"));
+        assert!(r.contains("link0"));
+    }
+}

@@ -1,46 +1,93 @@
-//! Leader: Slurm-like launcher + aggregator for the 2-node experiment
-//! (the paper's contribution (2): "First SLO-safe, multi-tenant control
-//! demo on a multi-node (16-GPU) cloud cluster without fabric
-//! privileges"). Control stays per-host; the leader only dispatches
-//! work and aggregates results.
+//! Leader: Slurm-like launcher + aggregator for the multi-node
+//! experiment (the paper's contribution (2): "First SLO-safe,
+//! multi-tenant control demo on a multi-node (16-GPU) cloud cluster
+//! without fabric privileges"). Control stays per-host; the leader only
+//! dispatches work and aggregates results.
+//!
+//! Two dispatch modes:
+//! * [`Leader::run_cluster`] — the classic E9 experiment: the same
+//!   whole-host catalog scenario on every node, distinct seeds.
+//! * [`Leader::run_fleet`] — fleet-level dispatch: one tenant list split
+//!   across the nodes by the topology-aware [`crate::alloc`] allocator;
+//!   each worker receives only its assigned tenants + slots, and tenants
+//!   no node could take are reported queued/rejected, never dropped.
 
 use std::net::TcpListener;
 use std::thread;
 
 use anyhow::{anyhow, Result};
 
+use crate::alloc::{AutoRequest, FleetAllocator, FleetPlan};
+use crate::controller::{ControllerConfig, Levers};
+use crate::platform::Scenario;
+use crate::tenants::{TenantKind, TenantWorkload};
+use crate::topo::HostTopology;
+
 use super::proto::{read_msg, write_msg, Msg};
 use super::worker::Worker;
+
+/// One node's aggregated run result.
+#[derive(Clone, Debug)]
+pub struct NodeReport {
+    pub node: String,
+    pub miss_rate: f64,
+    pub p99_ms: f64,
+    pub rps: f64,
+}
 
 /// Aggregated cluster results.
 #[derive(Clone, Debug)]
 pub struct ClusterReport {
-    pub per_node: Vec<(String, f64, f64, f64)>, // (node, miss, p99, rps)
+    pub per_node: Vec<NodeReport>,
     pub mean_miss_rate: f64,
     pub mean_p99_ms: f64,
     pub total_completed: u64,
     pub total_rps: f64,
+    /// Fleet dispatch only: tenant names no node could safely place now.
+    pub queued: Vec<String>,
+    /// Fleet dispatch only: tenant names structurally impossible anywhere.
+    pub rejected: Vec<String>,
+}
+
+impl ClusterReport {
+    fn aggregate(results: Vec<(String, f64, f64, f64, u64)>) -> ClusterReport {
+        let n = results.len() as f64;
+        ClusterReport {
+            mean_miss_rate: results.iter().map(|r| r.1).sum::<f64>() / n,
+            mean_p99_ms: results.iter().map(|r| r.2).sum::<f64>() / n,
+            total_rps: results.iter().map(|r| r.3).sum::<f64>(),
+            total_completed: results.iter().map(|r| r.4).sum::<u64>(),
+            per_node: results
+                .into_iter()
+                .map(|(node, miss_rate, p99_ms, rps, _)| NodeReport {
+                    node,
+                    miss_rate,
+                    p99_ms,
+                    rps,
+                })
+                .collect(),
+            queued: Vec::new(),
+            rejected: Vec::new(),
+        }
+    }
 }
 
 /// The cluster leader.
 pub struct Leader;
 
 impl Leader {
-    /// Launch `nodes` in-process workers connected over real TCP
-    /// (localhost), dispatch the same scenario to every node, and
-    /// aggregate. This is the Slurm-like `srun` of the repro: every node
-    /// runs its own controller over its own 8 GPUs.
-    pub fn run_cluster(
+    /// Launch workers over real TCP (localhost) and collect their
+    /// registrations. Returns the accepted `(node, stream)` pairs plus
+    /// the worker join handles.
+    #[allow(clippy::type_complexity)]
+    fn launch(
         nodes: usize,
-        seed: u64,
-        levers: &str,
-        horizon_s: f64,
-        workload: &str,
-    ) -> Result<ClusterReport> {
+    ) -> Result<(
+        Vec<(String, std::net::TcpStream)>,
+        Vec<thread::JoinHandle<Result<()>>>,
+    )> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
-
-        // Launch workers.
         let mut joins = Vec::new();
         for n in 0..nodes {
             let node = format!("node{n}");
@@ -50,32 +97,26 @@ impl Leader {
                 w.serve(&addr_s)
             }));
         }
-
-        // Accept connections, dispatch, gather.
-        let mut results = Vec::new();
         let mut streams = Vec::new();
-        for n in 0..nodes {
+        for _ in 0..nodes {
             let (mut stream, _) = listener.accept()?;
-            let hello = read_msg(&mut stream)?;
-            let node = match hello {
+            match read_msg(&mut stream)? {
                 Msg::Hello { node, gpus } => {
                     assert_eq!(gpus, 8, "p4d node must expose 8 GPUs");
-                    node
+                    streams.push((node, stream));
                 }
                 other => return Err(anyhow!("expected Hello, got {other:?}")),
-            };
-            // Distinct seed per node: independent hosts, same config.
-            write_msg(
-                &mut stream,
-                &Msg::RunScenario {
-                    seed: seed + n as u64,
-                    levers: levers.to_string(),
-                    horizon_s,
-                    workload: workload.to_string(),
-                },
-            )?;
-            streams.push((node, stream));
+            }
         }
+        Ok((streams, joins))
+    }
+
+    /// Gather one `RunDone` per node, send `Shutdown`, join the workers.
+    fn gather(
+        mut streams: Vec<(String, std::net::TcpStream)>,
+        joins: Vec<thread::JoinHandle<Result<()>>>,
+    ) -> Result<Vec<(String, f64, f64, f64, u64)>> {
+        let mut results = Vec::new();
         for (node, stream) in streams.iter_mut() {
             match read_msg(stream)? {
                 Msg::RunDone {
@@ -92,18 +133,114 @@ impl Leader {
         for j in joins {
             j.join().map_err(|_| anyhow!("worker panicked"))??;
         }
+        Ok(results)
+    }
 
-        let n = results.len() as f64;
-        Ok(ClusterReport {
-            mean_miss_rate: results.iter().map(|r| r.1).sum::<f64>() / n,
-            mean_p99_ms: results.iter().map(|r| r.2).sum::<f64>() / n,
-            total_rps: results.iter().map(|r| r.3).sum::<f64>(),
-            total_completed: results.iter().map(|r| r.4).sum::<u64>(),
-            per_node: results
-                .into_iter()
-                .map(|(node, m, p, r, _)| (node, m, p, r))
-                .collect(),
-        })
+    /// Launch `nodes` in-process workers, dispatch the same scenario to
+    /// every node, and aggregate. This is the Slurm-like `srun` of the
+    /// repro: every node runs its own controller over its own 8 GPUs.
+    pub fn run_cluster(
+        nodes: usize,
+        seed: u64,
+        levers: &str,
+        horizon_s: f64,
+        workload: &str,
+    ) -> Result<ClusterReport> {
+        let (mut streams, joins) = Leader::launch(nodes)?;
+        for (n, (_, stream)) in streams.iter_mut().enumerate() {
+            // Distinct seed per node: independent hosts, same config.
+            write_msg(
+                stream,
+                &Msg::RunScenario {
+                    seed: seed + n as u64,
+                    levers: levers.to_string(),
+                    horizon_s,
+                    workload: workload.to_string(),
+                },
+            )?;
+        }
+        Ok(ClusterReport::aggregate(Leader::gather(streams, joins)?))
+    }
+
+    /// Compute the fleet plan for `n_tenants` auto-placed tenants over
+    /// `nodes` p4d hosts — the same allocator the workers' scenario
+    /// builder uses, so leader and worker never disagree on a slot.
+    /// Returns the fleet tenant list alongside the plan (plan entries
+    /// reference tenants by index into it).
+    pub fn plan_fleet(
+        nodes: usize,
+        seed: u64,
+        n_tenants: usize,
+    ) -> (Vec<TenantWorkload>, FleetPlan) {
+        let tenants = Scenario::auto_pack_tenants(seed, n_tenants);
+        let reqs = AutoRequest::from_workloads(&tenants);
+        let plan = FleetAllocator::new(
+            nodes,
+            HostTopology::p4d(),
+            ControllerConfig::dense_pack(Levers::full()),
+        )
+        .pack(&reqs);
+        (tenants, plan)
+    }
+
+    /// Fleet-level dispatch: place one `n_tenants`-tenant list across
+    /// the nodes with the topology-aware allocator, send every worker
+    /// only its share, and aggregate. Tenants admission queued/rejected
+    /// fleet-wide are reported on the `ClusterReport`.
+    pub fn run_fleet(
+        nodes: usize,
+        seed: u64,
+        levers: &str,
+        horizon_s: f64,
+        n_tenants: usize,
+    ) -> Result<ClusterReport> {
+        let (tenants, plan) = Leader::plan_fleet(nodes, seed, n_tenants);
+        for h in &plan.hosts {
+            let has_ls = h
+                .assigned
+                .iter()
+                .any(|a| tenants[a.tenant].kind() == TenantKind::LatencySensitive);
+            if !has_ls {
+                return Err(anyhow!(
+                    "fleet plan gave node{} no latency-sensitive tenant; \
+                     grow the tenant list or shrink the fleet",
+                    h.node
+                ));
+            }
+        }
+
+        let (mut streams, joins) = Leader::launch(nodes)?;
+        // Workers connect concurrently, so accept order is a thread race:
+        // match each worker to its planned host by the self-reported
+        // name ("node{n}"), never by arrival order. The per-node world
+        // seed keeps tenant RNG streams independent across hosts.
+        for (node, stream) in streams.iter_mut() {
+            let host = plan
+                .hosts
+                .iter()
+                .find(|h| format!("node{}", h.node) == *node)
+                .ok_or_else(|| anyhow!("no planned host for worker '{node}'"))?;
+            write_msg(
+                stream,
+                &Msg::RunTenantSet {
+                    seed,
+                    world_seed: seed + host.node as u64,
+                    levers: levers.to_string(),
+                    horizon_s,
+                    fleet: "auto_pack".to_string(),
+                    count: n_tenants,
+                    assigned: host.assigned.clone(),
+                },
+            )?;
+        }
+        let mut report = ClusterReport::aggregate(Leader::gather(streams, joins)?);
+        report.queued = plan.queued.iter().map(|&i| tenants[i].name.clone()).collect();
+        report.rejected = plan
+            .rejected
+            .iter()
+            .map(|&i| tenants[i].name.clone())
+            .collect();
+        Ok(report)
     }
 }
 
@@ -118,6 +255,32 @@ mod tests {
         assert!(report.total_completed > 4_000);
         assert!(report.mean_p99_ms > 0.0);
         // Distinct nodes reported.
-        assert_ne!(report.per_node[0].0, report.per_node[1].0);
+        assert_ne!(report.per_node[0].node, report.per_node[1].node);
+    }
+
+    #[test]
+    fn fleet_plan_covers_every_tenant_once() {
+        let (tenants, plan) = Leader::plan_fleet(2, 11, 24);
+        assert_eq!(tenants.len(), 24);
+        let assigned: usize = plan.hosts.iter().map(|h| h.assigned.len()).sum();
+        assert_eq!(assigned + plan.queued.len() + plan.rejected.len(), 24);
+        let mut seen = std::collections::BTreeSet::new();
+        for h in &plan.hosts {
+            for a in &h.assigned {
+                assert!(seen.insert(a.tenant));
+            }
+        }
+        // The 24-tenant list fits comfortably on 16 GPUs.
+        assert_eq!(assigned, 24, "queued={:?}", plan.queued);
+    }
+
+    #[test]
+    fn two_node_fleet_dispatch_roundtrip() {
+        let report = Leader::run_fleet(2, 33, "static", 45.0, 24).unwrap();
+        assert_eq!(report.per_node.len(), 2);
+        assert!(report.queued.is_empty(), "queued {:?}", report.queued);
+        assert!(report.rejected.is_empty());
+        assert!(report.total_completed > 1_000);
+        assert!(report.mean_p99_ms > 0.0);
     }
 }

@@ -15,6 +15,6 @@ pub mod proto;
 pub mod worker;
 pub mod leader;
 
-pub use leader::{ClusterReport, Leader};
+pub use leader::{ClusterReport, Leader, NodeReport};
 pub use proto::{read_msg, write_msg, Msg};
 pub use worker::Worker;

@@ -1,5 +1,7 @@
 //! Wire protocol: length-prefixed JSON messages over TCP.
 
+use crate::alloc::Assignment;
+use crate::gpu::MigProfile;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
@@ -14,6 +16,26 @@ pub enum Msg {
         horizon_s: f64,
         /// "single" (E1 world) or "llm" (Table 2 world).
         workload: String,
+    },
+    /// Leader → worker: run this node's share of a fleet-level tenant
+    /// list. The worker re-derives the full list deterministically from
+    /// `(fleet, seed, count)` and instantiates only the `assigned`
+    /// tenants at the leader-allocated slots (fleet dispatch never ships
+    /// whole-host scenarios).
+    RunTenantSet {
+        /// Fleet-list seed: every node derives the identical list from it.
+        seed: u64,
+        /// Per-node world seed (leader sends `seed + node`), so tenant
+        /// RNG streams stay independent across hosts.
+        world_seed: u64,
+        levers: String,
+        horizon_s: f64,
+        /// Fleet tenant-list name (e.g. "auto_pack").
+        fleet: String,
+        /// Total tenants in the fleet list.
+        count: usize,
+        /// This node's tenants: fleet index + allocated MIG slot.
+        assigned: Vec<Assignment>,
     },
     /// Worker → leader: run finished.
     RunDone {
@@ -49,6 +71,43 @@ impl Msg {
                 ("levers", Json::Str(levers.clone())),
                 ("horizon_s", Json::Num(*horizon_s)),
                 ("workload", Json::Str(workload.clone())),
+            ]),
+            Msg::RunTenantSet {
+                seed,
+                world_seed,
+                levers,
+                horizon_s,
+                fleet,
+                count,
+                assigned,
+            } => Json::obj(vec![
+                ("type", Json::Str("run_tenants".into())),
+                // Seeds travel as strings: a u64 through f64 JSON loses
+                // precision above 2^53, and a rounded fleet seed would
+                // make the worker derive a *different* tenant list than
+                // the leader planned (silent slot mismatch).
+                ("seed", Json::Str(seed.to_string())),
+                ("world_seed", Json::Str(world_seed.to_string())),
+                ("levers", Json::Str(levers.clone())),
+                ("horizon_s", Json::Num(*horizon_s)),
+                ("fleet", Json::Str(fleet.clone())),
+                ("count", Json::Num(*count as f64)),
+                (
+                    "assigned",
+                    Json::Arr(
+                        assigned
+                            .iter()
+                            .map(|a| {
+                                Json::obj(vec![
+                                    ("tenant", Json::Num(a.tenant as f64)),
+                                    ("gpu", Json::Num(a.gpu as f64)),
+                                    ("profile", Json::Str(a.profile.name().into())),
+                                    ("start", Json::Num(a.start as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
             Msg::RunDone {
                 node,
@@ -91,6 +150,57 @@ impl Msg {
                 horizon_s: j.get("horizon_s").as_f64().unwrap_or(600.0),
                 workload: j.get("workload").as_str().unwrap_or("single").to_string(),
             },
+            "run_tenants" => {
+                let mut assigned = Vec::new();
+                for a in j.get("assigned").as_arr().unwrap_or(&[]) {
+                    let profile = a
+                        .get("profile")
+                        .as_str()
+                        .and_then(MigProfile::from_name)
+                        .ok_or_else(|| anyhow!("run_tenants: bad profile"))?;
+                    assigned.push(Assignment {
+                        tenant: a
+                            .get("tenant")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("run_tenants: missing tenant index"))?,
+                        gpu: a
+                            .get("gpu")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("run_tenants: missing gpu"))?,
+                        profile,
+                        start: a
+                            .get("start")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("run_tenants: missing start"))?,
+                    });
+                }
+                // Seeds arrive as exact strings (see to_json); accept a
+                // numeric fallback for hand-written messages.
+                let seed_of = |key: &str| -> Option<u64> {
+                    j.get(key)
+                        .as_str()
+                        .and_then(|s| s.parse().ok())
+                        .or_else(|| j.get(key).as_f64().map(|v| v as u64))
+                };
+                let seed = seed_of("seed")
+                    .ok_or_else(|| anyhow!("run_tenants: missing seed"))?;
+                Msg::RunTenantSet {
+                    seed,
+                    // Older leaders omit it: fall back to the list seed.
+                    world_seed: seed_of("world_seed").unwrap_or(seed),
+                    levers: j.get("levers").as_str().unwrap_or("full").to_string(),
+                    horizon_s: j.get("horizon_s").as_f64().unwrap_or(600.0),
+                    fleet: j.get("fleet").as_str().unwrap_or("auto_pack").to_string(),
+                    // Required: a defaulted count would make the worker
+                    // derive an empty fleet list and panic on the first
+                    // assignment lookup.
+                    count: j
+                        .get("count")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("run_tenants: missing count"))?,
+                    assigned,
+                }
+            }
             "done" => Msg::RunDone {
                 node: j.get("node").as_str().unwrap_or("?").to_string(),
                 scenario: j.get("scenario").as_str().unwrap_or("?").to_string(),
@@ -151,6 +261,38 @@ mod tests {
                 levers: "full".into(),
                 horizon_s: 600.0,
                 workload: "llm".into(),
+            },
+            Msg::RunTenantSet {
+                // Above 2^53: pins the exact-u64 (string) seed transport.
+                seed: (1u64 << 53) + 1,
+                world_seed: (1u64 << 53) + 2,
+                levers: "full".into(),
+                horizon_s: 300.0,
+                fleet: "auto_pack".into(),
+                count: 24,
+                assigned: vec![
+                    Assignment {
+                        tenant: 0,
+                        gpu: 0,
+                        profile: MigProfile::P3g40gb,
+                        start: 0,
+                    },
+                    Assignment {
+                        tenant: 5,
+                        gpu: 3,
+                        profile: MigProfile::P1g10gb,
+                        start: 6,
+                    },
+                ],
+            },
+            Msg::RunTenantSet {
+                seed: 1,
+                world_seed: 1,
+                levers: "static".into(),
+                horizon_s: 60.0,
+                fleet: "auto_pack".into(),
+                count: 0,
+                assigned: vec![],
             },
             Msg::RunDone {
                 node: "node1".into(),

@@ -5,8 +5,10 @@ use std::net::TcpStream;
 
 use anyhow::Result;
 
-use crate::controller::Levers;
-use crate::platform::{Scenario, SimWorld};
+use crate::alloc::Assignment;
+use crate::controller::{ControllerConfig, Levers};
+use crate::platform::{Scenario, ScenarioBuilder, SimWorld};
+use crate::tenants::PlacementSpec;
 
 use super::proto::{read_msg, write_msg, Msg};
 
@@ -67,6 +69,70 @@ impl Worker {
         }
     }
 
+    /// Execute this node's share of a fleet-level tenant list. The full
+    /// list is re-derived deterministically from `(fleet, seed, count)` —
+    /// the wire carries only indices + allocated slots — then the
+    /// assigned tenants are instantiated at exactly the leader-chosen
+    /// placements (the leader's allocator already packed them, so the
+    /// builder has nothing left to auto-place). `world_seed` drives this
+    /// node's tenant RNG streams and differs per node; `seed` only names
+    /// the shared fleet list.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_tenant_set(
+        &self,
+        seed: u64,
+        world_seed: u64,
+        levers: &str,
+        horizon_s: f64,
+        fleet: &str,
+        count: usize,
+        assigned: &[Assignment],
+    ) -> Msg {
+        let lv = levers_from_str(levers);
+        // Unlike the whole-host path (where a fallback scenario is still
+        // a coherent experiment), substituting a different fleet list
+        // would run the wrong tenants at slots planned for others —
+        // refuse the dispatch with an unmistakable error report instead.
+        if fleet != "auto_pack" {
+            crate::log_warn!(
+                "cluster.worker",
+                "unknown fleet list '{fleet}'; refusing dispatch"
+            );
+            return Msg::RunDone {
+                node: self.node.clone(),
+                scenario: format!("error:unknown_fleet:{fleet}"),
+                miss_rate: 1.0,
+                p99_ms: 0.0,
+                p95_ms: 0.0,
+                rps: 0.0,
+                completed: 0,
+                moves_per_hour: 0.0,
+            };
+        }
+        let all = Scenario::auto_pack_tenants(seed, count);
+        let mut b = ScenarioBuilder::new(format!("fleet_{fleet}"), world_seed)
+            .controller(ControllerConfig::dense_pack(lv))
+            .horizon(horizon_s);
+        for a in assigned {
+            assert!(a.tenant < all.len(), "assignment beyond fleet list");
+            let mut t = all[a.tenant].clone();
+            t.placement = PlacementSpec::dedicated_at(a.gpu, a.profile, a.start);
+            b = b.tenant(t);
+        }
+        let scenario = b.build();
+        let r = SimWorld::new(scenario).run();
+        Msg::RunDone {
+            node: self.node.clone(),
+            scenario: format!("fleet_{fleet}[{}]", assigned.len()),
+            miss_rate: r.miss_rate,
+            p99_ms: r.p99_ms,
+            p95_ms: r.p95_ms,
+            rps: r.rps,
+            completed: r.completed,
+            moves_per_hour: r.moves_per_hour,
+        }
+    }
+
     /// Connect to the leader and serve until `Shutdown`.
     pub fn serve(&self, leader_addr: &str) -> Result<()> {
         let mut stream = TcpStream::connect(leader_addr)?;
@@ -86,6 +152,20 @@ impl Worker {
                     workload,
                 } => {
                     let done = self.run_scenario(seed, &levers, horizon_s, &workload);
+                    write_msg(&mut stream, &done)?;
+                }
+                Msg::RunTenantSet {
+                    seed,
+                    world_seed,
+                    levers,
+                    horizon_s,
+                    fleet,
+                    count,
+                    assigned,
+                } => {
+                    let done = self.run_tenant_set(
+                        seed, world_seed, &levers, horizon_s, &fleet, count, &assigned,
+                    );
                     write_msg(&mut stream, &done)?;
                 }
                 Msg::Shutdown => return Ok(()),
@@ -147,6 +227,57 @@ mod tests {
                 // Falls back for wire compatibility, but the echoed name
                 // exposes the mismatch to the caller.
                 assert_eq!(scenario, "paper_single_host");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worker_runs_a_fleet_tenant_subset() {
+        use crate::alloc::{AutoRequest, FleetAllocator};
+        use crate::topo::HostTopology;
+        let count = 8;
+        let tenants = Scenario::auto_pack_tenants(5, count);
+        let reqs = AutoRequest::from_workloads(&tenants);
+        let plan = FleetAllocator::new(
+            1,
+            HostTopology::p4d(),
+            ControllerConfig::dense_pack(Levers::none()),
+        )
+        .pack(&reqs);
+        let assigned = &plan.hosts[0].assigned;
+        assert_eq!(assigned.len(), count, "8 small tenants fit one host");
+        let w = Worker::new("fleet-node");
+        match w.run_tenant_set(5, 6, "static", 60.0, "auto_pack", count, assigned) {
+            Msg::RunDone {
+                node,
+                completed,
+                scenario,
+                ..
+            } => {
+                assert_eq!(node, "fleet-node");
+                assert!(completed > 500, "completed {completed}");
+                assert!(scenario.starts_with("fleet_auto_pack"), "{scenario}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_fleet_list_is_refused_not_substituted() {
+        // Running a different tenant list at slots planned for another
+        // would be silently wrong; the worker must refuse.
+        let w = Worker::new("strict-node");
+        match w.run_tenant_set(5, 5, "static", 30.0, "trace_pack", 8, &[]) {
+            Msg::RunDone {
+                scenario,
+                completed,
+                miss_rate,
+                ..
+            } => {
+                assert_eq!(scenario, "error:unknown_fleet:trace_pack");
+                assert_eq!(completed, 0);
+                assert_eq!(miss_rate, 1.0);
             }
             other => panic!("unexpected {other:?}"),
         }

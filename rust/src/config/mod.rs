@@ -42,6 +42,11 @@ pub fn apply(scenario: &mut Scenario, j: &Json) -> Result<()> {
     if let Some(v) = ctl.get("cooldown_obs").as_f64() {
         scenario.controller.cooldown_obs = v as u64;
     }
+    // Note: the admission thresholds (`safe_score`, `link_headroom`) are
+    // deliberately NOT config-file keys — placements resolve at
+    // `ScenarioBuilder::build` time, before a config file is applied, so
+    // a post-build override would be silently inert. Scenarios tune them
+    // through `ControllerConfig` (e.g. `ControllerConfig::dense_pack`).
     if let Some(s) = ctl.get("levers").as_str() {
         scenario.controller.levers = parse_levers(s)?;
     }

@@ -7,6 +7,7 @@ use crate::gpu::MigProfile;
 use crate::telemetry::SignalSnapshot;
 use crate::tenants::TenantId;
 
+use super::config::ControllerConfig;
 use super::placement::{self, ScoreWeights};
 use super::view::PlannerView;
 
@@ -32,14 +33,15 @@ pub enum Verdict {
     Reject,
 }
 
-/// Placement-score ceiling above which a slot would endanger the primary
-/// tenant's SLO.
-pub const SAFE_SCORE: f64 = 1.5;
-/// Link headroom required after adding the newcomer's expected traffic.
-pub const LINK_HEADROOM: f64 = 0.85;
-
-/// Decide admission for `req` given the current host state.
-pub fn admit(req: &AdmissionRequest, snap: &SignalSnapshot, view: &PlannerView) -> Verdict {
+/// Decide admission for `req` given the current host state. The safety
+/// thresholds (`safe_score`, `link_headroom`) come from `cfg` so
+/// scenarios and the auto-placement allocator can tune them per run.
+pub fn admit(
+    req: &AdmissionRequest,
+    snap: &SignalSnapshot,
+    view: &PlannerView,
+    cfg: &ControllerConfig,
+) -> Verdict {
     let w = ScoreWeights::default();
     let cands = placement::candidates(
         req.tenant,
@@ -56,13 +58,13 @@ pub fn admit(req: &AdmissionRequest, snap: &SignalSnapshot, view: &PlannerView) 
     let mut safe: Vec<&super::placement::Candidate> = cands
         .iter()
         .filter(|c| {
-            if c.score > SAFE_SCORE {
+            if c.score > cfg.safe_score {
                 return false;
             }
             let link = view.topo.link_of_gpu(c.gpu);
             let cap = view.topo.link_capacity(link);
             let used = snap.link(link).map(|l| l.gbps).unwrap_or(0.0);
-            (used + req.expected_pcie_gbps) / cap <= LINK_HEADROOM
+            (used + req.expected_pcie_gbps) / cap <= cfg.link_headroom
         })
         .collect();
     safe.sort_by(|a, b| {
@@ -128,7 +130,7 @@ mod tests {
             expected_pcie_gbps: 2.0,
         };
         assert!(matches!(
-            admit(&req, &empty_snap(), &v),
+            admit(&req, &empty_snap(), &v, &ControllerConfig::default()),
             Verdict::Admit { .. }
         ));
     }
@@ -144,7 +146,10 @@ mod tests {
             min_profile: MigProfile::P1g10gb,
             expected_pcie_gbps: 0.5,
         };
-        assert_eq!(admit(&req, &empty_snap(), &v), Verdict::Reject);
+        assert_eq!(
+            admit(&req, &empty_snap(), &v, &ControllerConfig::default()),
+            Verdict::Reject
+        );
     }
 
     #[test]
@@ -160,6 +165,30 @@ mod tests {
             min_profile: MigProfile::P1g10gb,
             expected_pcie_gbps: 5.0,
         };
-        assert_eq!(admit(&req, &snap, &v), Verdict::Queue);
+        assert_eq!(
+            admit(&req, &snap, &v, &ControllerConfig::default()),
+            Verdict::Queue
+        );
+    }
+
+    #[test]
+    fn thresholds_are_tunable_per_config() {
+        // A link_headroom of zero makes every candidate unsafe: the same
+        // request that admits under defaults must now queue.
+        let v = view_with_free_gpus();
+        let req = AdmissionRequest {
+            tenant: TenantId(9),
+            min_profile: MigProfile::P1g10gb,
+            expected_pcie_gbps: 1.0,
+        };
+        let strict = ControllerConfig {
+            link_headroom: 0.0,
+            ..Default::default()
+        };
+        assert_eq!(admit(&req, &empty_snap(), &v, &strict), Verdict::Queue);
+        assert!(matches!(
+            admit(&req, &empty_snap(), &v, &ControllerConfig::default()),
+            Verdict::Admit { .. }
+        ));
     }
 }

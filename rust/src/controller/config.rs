@@ -106,6 +106,13 @@ pub struct ControllerConfig {
     /// Placement-score margin: a move must beat the current placement by
     /// this factor to be worth a pause.
     pub placement_margin: f64,
+    /// Admission (§2.3): placement-score ceiling above which a slot would
+    /// endanger existing tenants' SLOs. Shared by `controller::admission`
+    /// and the auto-placement allocator (`crate::alloc`).
+    pub safe_score: f64,
+    /// Admission (§2.3): link utilization ceiling after adding a
+    /// newcomer's expected traffic (fraction of link capacity).
+    pub link_headroom: f64,
 }
 
 impl Default for ControllerConfig {
@@ -128,6 +135,8 @@ impl Default for ControllerConfig {
             material_miss: 0.02,
             levers: Levers::full(),
             placement_margin: 0.25,
+            safe_score: 1.5,
+            link_headroom: 0.85,
         }
     }
 }
@@ -136,6 +145,25 @@ impl ControllerConfig {
     pub fn with_levers(levers: Levers) -> ControllerConfig {
         ControllerConfig {
             levers,
+            ..Default::default()
+        }
+    }
+
+    /// Admission tuned for dense auto-packing scenarios (`crate::alloc`):
+    /// the placement-score ceiling is effectively disabled — candidate
+    /// *ordering* stays topology-aware, so tenants still spread away from
+    /// hot switches/NUMA domains — while **PCIe uplink** headroom remains
+    /// the hard gate. NVMe paths are deliberately not gated: storage
+    /// oversubscription stretches ETL cycles under PS sharing instead of
+    /// refusing tenants (the runtime io.max guardrail protects the
+    /// primary), while the score's NUMA-I/O term still spreads
+    /// storage-heavy tenants across domains. The default `safe_score` is
+    /// calibrated for admitting one newcomer next to a protected primary
+    /// and would cap a host at a handful of background tenants.
+    pub fn dense_pack(levers: Levers) -> ControllerConfig {
+        ControllerConfig {
+            levers,
+            safe_score: f64::MAX,
             ..Default::default()
         }
     }
@@ -157,6 +185,9 @@ mod tests {
         // 100-500 MB/s.
         assert!((c.io_throttle_min_gbps - 0.1).abs() < 1e-12);
         assert!((c.io_throttle_max_gbps - 0.5).abs() < 1e-12);
+        // Admission thresholds keep their historical values as defaults.
+        assert_eq!(c.safe_score, 1.5);
+        assert_eq!(c.link_headroom, 0.85);
     }
 
     #[test]

@@ -105,6 +105,11 @@ impl MigProfile {
             MigProfile::P7g80gb => "7g.80gb",
         }
     }
+
+    /// Inverse of [`MigProfile::name`] (cluster wire protocol).
+    pub fn from_name(name: &str) -> Option<MigProfile> {
+        MigProfile::ALL.into_iter().find(|p| p.name() == name)
+    }
 }
 
 impl std::fmt::Display for MigProfile {
@@ -151,6 +156,14 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn from_name_roundtrips_every_profile() {
+        for p in MigProfile::ALL {
+            assert_eq!(MigProfile::from_name(p.name()), Some(p));
+        }
+        assert_eq!(MigProfile::from_name("8g.96gb"), None);
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod fabric;
 pub mod tenants;
 pub mod telemetry;
 pub mod controller;
+pub mod alloc;
 pub mod platform;
 pub mod serving;
 pub mod runtime;

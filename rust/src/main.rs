@@ -3,12 +3,16 @@
 //! Subcommands:
 //!   serve        run the LLM serving engine on the AOT artifacts
 //!   sim          run one simulated single-host scenario
+//!   plan         print the auto-placement layout for a scenario (or a
+//!                fleet split with --nodes N) without running it
 //!   ablation     regenerate Table 3 (E2)
 //!   llm          regenerate Table 2 (LLM TTFT case study)
 //!   overheads    regenerate Table 4
 //!   sensitivity  regenerate E3
 //!   figures      regenerate Figure 2/3/4 series (CSV under target/paper/)
-//!   cluster      run the 2-node (16-GPU) cluster experiment (E9)
+//!   cluster      run the 2-node (16-GPU) cluster experiment (E9); with
+//!                --fleet, the leader splits one auto-placed tenant list
+//!                across the workers instead
 
 use anyhow::Result;
 use predserve::cli::Args;
@@ -20,7 +24,7 @@ use predserve::platform::{Scenario, SimWorld};
 use predserve::serving::request::SamplingParams;
 use predserve::serving::Engine;
 
-const USAGE: &str = "usage: predserve <serve|sim|scenarios|ablation|llm|overheads|sensitivity|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--fast] [--prompt TEXT] [--nodes N]";
+const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
 
 fn repeats(args: &Args) -> Repeats {
     let mut r = if args.flag("fast") {
@@ -121,6 +125,47 @@ fn main() -> Result<()> {
                 println!("  t={t:7.1}s {kind:12} p99={p99:.1}ms");
             }
         }
+        "plan" => {
+            let nodes = args.get_usize("nodes", 1);
+            let seed = args.get_u64("seed", 11);
+            if args.flag("fleet") || nodes > 1 {
+                let n_tenants = args.get_usize("tenants", nodes * 12);
+                let (tenants, plan) = Leader::plan_fleet(nodes, seed, n_tenants);
+                println!(
+                    "fleet plan: {} tenants over {nodes} node(s) — {} placed, {} queued, {} rejected",
+                    n_tenants,
+                    plan.placed(),
+                    plan.queued.len(),
+                    plan.rejected.len()
+                );
+                for h in &plan.hosts {
+                    println!("node{}:", h.node);
+                    for a in &h.assigned {
+                        println!(
+                            "  {:16} gpu{} {} @{}",
+                            tenants[a.tenant].name, a.gpu, a.profile, a.start
+                        );
+                    }
+                }
+                for &i in &plan.queued {
+                    println!("queued:   {}", tenants[i].name);
+                }
+                for &i in &plan.rejected {
+                    println!("rejected: {}", tenants[i].name);
+                }
+            } else {
+                let levers = config::parse_levers(args.get_str("levers", "full"))?;
+                let name = args.get_str("scenario", "auto_pack_24");
+                let scenario = Scenario::by_name(name, seed, levers).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scenario '{name}' (catalog: {})",
+                        Scenario::CATALOG.join(", ")
+                    )
+                })?;
+                println!("{name} (seed {seed}) placement layout:");
+                print!("{}", scenario.layout.render());
+            }
+        }
         "scenarios" => {
             println!("scenario catalog:");
             for name in Scenario::CATALOG {
@@ -158,13 +203,24 @@ fn main() -> Result<()> {
         }
         "cluster" => {
             let nodes = args.get_usize("nodes", 2);
-            let report = Leader::run_cluster(
-                nodes,
-                args.get_u64("seed", 11),
-                args.get_str("levers", "full"),
-                args.get_f64("horizon", 600.0),
-                args.get_str("workload", "single"),
-            )?;
+            let report = if args.flag("fleet") {
+                let n_tenants = args.get_usize("tenants", nodes * 12);
+                Leader::run_fleet(
+                    nodes,
+                    args.get_u64("seed", 11),
+                    args.get_str("levers", "full"),
+                    args.get_f64("horizon", 600.0),
+                    n_tenants,
+                )?
+            } else {
+                Leader::run_cluster(
+                    nodes,
+                    args.get_u64("seed", 11),
+                    args.get_str("levers", "full"),
+                    args.get_f64("horizon", 600.0),
+                    args.get_str("workload", "single"),
+                )?
+            };
             println!(
                 "cluster({} nodes, {} GPUs): mean miss={:.1}% mean p99={:.2} ms total rps={:.1}",
                 nodes,
@@ -173,8 +229,20 @@ fn main() -> Result<()> {
                 report.mean_p99_ms,
                 report.total_rps
             );
-            for (node, miss, p99, rps) in &report.per_node {
-                println!("  {node}: miss={:.1}% p99={p99:.2} ms rps={rps:.1}", miss * 100.0);
+            for n in &report.per_node {
+                println!(
+                    "  {}: miss={:.1}% p99={:.2} ms rps={:.1}",
+                    n.node,
+                    n.miss_rate * 100.0,
+                    n.p99_ms,
+                    n.rps
+                );
+            }
+            for t in &report.queued {
+                println!("  queued (no safe slot fleet-wide): {t}");
+            }
+            for t in &report.rejected {
+                println!("  rejected (no capacity fleet-wide): {t}");
             }
         }
         _ => {

@@ -13,10 +13,12 @@
 //! them off `seed` only — the controller/lever settings never perturb
 //! workload RNG streams.
 
+use crate::alloc::{AllocPlan, AutoRequest, HostAllocator, PlanEntry, SlotOutcome};
 use crate::controller::{ControllerConfig, Levers};
 use crate::gpu::MigProfile;
 use crate::tenants::{
     BwSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantKind, TenantWorkload,
+    WorkloadSpec,
 };
 use crate::topo::HostTopology;
 use crate::util::rng::Pcg64;
@@ -48,6 +50,10 @@ pub struct Scenario {
     pub move_pause_s: f64,
     /// Latency noise ε: lognormal sigma added multiplicatively to compute.
     pub epsilon_sigma: f64,
+    /// The resolved placement layout (`ScenarioBuilder::build` records
+    /// one for every scenario: pinned entries verbatim, auto entries as
+    /// the allocator chose them). `predserve plan` prints it.
+    pub layout: AllocPlan,
 }
 
 impl Scenario {
@@ -93,13 +99,14 @@ impl Scenario {
     // --- named catalog ----------------------------------------------------
 
     /// Catalog names accepted by [`Scenario::by_name`].
-    pub const CATALOG: [&'static str; 6] = [
+    pub const CATALOG: [&'static str; 7] = [
         "paper_single_host",
         "paper_llm_case",
         "steady_contention",
         "multi_ls_slo_mix",
         "pcie_hotspot",
         "diurnal_burst",
+        "auto_pack_24",
     ];
 
     /// Look a scenario up by catalog name ("single" and "llm" are accepted
@@ -117,6 +124,7 @@ impl Scenario {
             "multi_ls_slo_mix" => Scenario::multi_ls_slo_mix(seed, levers),
             "pcie_hotspot" => Scenario::pcie_hotspot(seed, levers),
             "diurnal_burst" => Scenario::diurnal_burst(seed, levers),
+            "auto_pack_24" => Scenario::auto_pack_24(seed, levers),
             _ => return None,
         })
     }
@@ -321,12 +329,121 @@ impl Scenario {
             .spare(1, MigProfile::P3g40gb, 0)
             .build()
     }
+
+    /// The fleet-level tenant list behind `auto_pack_24` and the cluster
+    /// leader's fleet dispatch: `n` mixed tenants with **no hand-written
+    /// placements** — every `PlacementSpec` is an auto request the
+    /// allocator resolves. Deterministic in `(seed, n)`, so the leader
+    /// and every worker derive the identical list.
+    ///
+    /// Mix by index: `i % 4 == 0` → latency-sensitive service (the first
+    /// is the heavier frontend), `i % 4 ∈ {1, 2}` → ETL pipeline,
+    /// `i % 4 == 3` → trainer.
+    pub fn auto_pack_tenants(seed: u64, n: usize) -> Vec<TenantWorkload> {
+        // Schedule coverage matches the catalog's 1800 s maximum (the
+        // scenario's default run horizon is shorter); running past the
+        // covered window idles the background tenants, same as every
+        // other catalog entry.
+        let horizon = 1800.0;
+        let mut sched_rng = Pcg64::new(seed, 1000);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            match i % 4 {
+                0 => {
+                    let (spec, min_profile) = if i == 0 {
+                        (
+                            LsSpec {
+                                arrival_rps: 60.0,
+                                ..LsSpec::default()
+                            },
+                            MigProfile::P3g40gb,
+                        )
+                    } else {
+                        (
+                            LsSpec {
+                                arrival_rps: 25.0,
+                                slo_ms: [15.0, 30.0, 60.0][(i / 4) % 3],
+                                compute_ref_ms: 5.0,
+                                ..LsSpec::default()
+                            },
+                            MigProfile::P2g20gb,
+                        )
+                    };
+                    let est = WorkloadSpec::LatencySensitive(spec.clone()).expected_pcie_gbps();
+                    out.push(TenantWorkload::latency_sensitive(
+                        format!("svc-{i}"),
+                        spec,
+                        PlacementSpec::auto(min_profile, est),
+                    ));
+                }
+                1 | 2 => {
+                    // Lighter cycles than the paper's T2 so two dozen of
+                    // them share the fabric without starving each other.
+                    let spec = BwSpec {
+                        read_gb: 1.0,
+                        h2d_gb: 0.6,
+                        d2h_gb: 0.3,
+                        ..BwSpec::default()
+                    };
+                    let schedule = InterferenceSchedule::generate(
+                        &mut sched_rng,
+                        horizon,
+                        40.0 + 5.0 * (i % 5) as f64,
+                        90.0,
+                        20.0,
+                    );
+                    let est = WorkloadSpec::BandwidthHeavy(spec.clone()).expected_pcie_gbps();
+                    out.push(TenantWorkload::bandwidth_heavy(
+                        format!("etl-{i}"),
+                        spec,
+                        schedule,
+                        PlacementSpec::auto(MigProfile::P2g20gb, est),
+                    ));
+                }
+                _ => {
+                    let spec = CompSpec::default();
+                    let schedule = InterferenceSchedule::generate(
+                        &mut sched_rng,
+                        horizon,
+                        60.0,
+                        120.0,
+                        30.0,
+                    );
+                    let est = WorkloadSpec::ComputeHeavy(spec.clone()).expected_pcie_gbps();
+                    out.push(TenantWorkload::compute_heavy(
+                        format!("train-{i}"),
+                        spec,
+                        schedule,
+                        PlacementSpec::auto(MigProfile::P1g10gb, est),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// ParvaGPU-scale dense co-location: 24 mixed tenants on the 8-GPU
+    /// p4d host, **every placement chosen by the allocator** (zero
+    /// hand-written `PlacementSpec`s). Uses the dense-pack admission
+    /// configuration: link headroom stays the hard gate while the score
+    /// ceiling (calibrated for one newcomer) is relaxed — candidate
+    /// ordering keeps the layout topology-aware.
+    pub fn auto_pack_24(seed: u64, levers: Levers) -> Scenario {
+        let mut b = ScenarioBuilder::new("auto_pack_24", seed)
+            .controller(ControllerConfig::dense_pack(levers))
+            .horizon(900.0);
+        for t in Scenario::auto_pack_tenants(seed, 24) {
+            b = b.add_auto(t);
+        }
+        b.build()
+    }
 }
 
 /// Composable scenario construction; see the README's "Defining a
 /// scenario" section. `build()` validates the tenant mix (at least one
 /// latency-sensitive tenant; MPS sharing must reference an earlier
-/// tenant) and resolves shared placements.
+/// tenant), resolves shared placements, and runs the topology-aware
+/// allocator (`crate::alloc`) over every `PlacementSpec::auto` tenant.
 #[derive(Clone, Debug)]
 pub struct ScenarioBuilder {
     name: String,
@@ -408,6 +525,19 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Append an auto-placed tenant: its `PlacementSpec` must be an
+    /// `auto` request, which `build()` resolves through the
+    /// topology-aware allocator.
+    pub fn add_auto(mut self, t: TenantWorkload) -> Self {
+        assert!(
+            t.placement.is_auto(),
+            "add_auto requires a PlacementSpec::auto placement (tenant '{}')",
+            t.name
+        );
+        self.tenants.push(t);
+        self
+    }
+
     /// Pre-provision an idle spare instance.
     pub fn spare(mut self, gpu: usize, profile: MigProfile, start: usize) -> Self {
         self.spares.push((gpu, profile, start));
@@ -469,9 +599,10 @@ impl ScenarioBuilder {
             assert!(*gpu < self.topo.num_gpus, "spare on unknown gpu {gpu}");
         }
         for (i, t) in self.tenants.iter().enumerate() {
-            // Sharers carry placeholder placement fields; their real
-            // placement is the peer's.
-            if t.placement.share_with.is_some() {
+            // Sharers carry placeholder placement fields (their real
+            // placement is the peer's); auto placements are resolved
+            // below.
+            if t.placement.share_with.is_some() || t.placement.is_auto() {
                 continue;
             }
             assert!(
@@ -480,10 +611,25 @@ impl ScenarioBuilder {
                 t.placement.gpu
             );
         }
+
+        let (tenants, layout) = self.resolve_placements();
+        assert!(
+            layout.all_placed(),
+            "scenario '{}': admission could not place tenant(s) {:?} — \
+             shrink the asks, relax the admission thresholds, or split the \
+             list across hosts with the fleet allocator",
+            self.name,
+            layout
+                .unplaced()
+                .iter()
+                .map(|e| format!("{} ({:?})", e.name, e.outcome))
+                .collect::<Vec<_>>()
+        );
+
         Scenario {
             name: self.name,
             topo: self.topo,
-            tenants: self.tenants,
+            tenants,
             spares: self.spares,
             primary,
             horizon: self.horizon,
@@ -493,7 +639,120 @@ impl ScenarioBuilder {
             mu_ref_profile: self.mu_ref_profile,
             move_pause_s: self.move_pause_s,
             epsilon_sigma: self.epsilon_sigma,
+            layout,
         }
+    }
+
+    /// Resolve every placement through one [`HostAllocator`] pass:
+    /// pinned tenants commit verbatim (first-fit when `start` is `None`,
+    /// so the plan records the slot the world will use), spares occupy
+    /// their slices, and auto tenants are packed first-fit-decreasing
+    /// through admission. Returns the (possibly rewritten) tenant list
+    /// plus the layout plan.
+    fn resolve_placements(&self) -> (Vec<TenantWorkload>, AllocPlan) {
+        let n = self.tenants.len();
+        let mut tenants = self.tenants.clone();
+        let mut allocator = HostAllocator::new(self.topo.clone(), self.controller.clone());
+        let mut entries: Vec<Option<PlanEntry>> = vec![None; n];
+
+        // Pass 1: pinned and MPS-shared tenants, in tenant order (the
+        // same order the world creates instances, so `start: None`
+        // first-fits identically).
+        for i in 0..n {
+            let t = &tenants[i];
+            if t.placement.is_auto() {
+                continue;
+            }
+            let est = t.spec.expected_pcie_gbps();
+            if let Some(peer) = t.placement.share_with {
+                assert!(
+                    !tenants[peer].placement.is_auto(),
+                    "tenant {i} MPS-shares with auto-placed tenant {peer}; \
+                     sharing onto an auto placement is not supported"
+                );
+                allocator.commit_shared(i, t.kind(), peer, est);
+                entries[i] = Some(PlanEntry {
+                    index: i,
+                    name: t.name.clone(),
+                    kind: t.kind(),
+                    auto: false,
+                    outcome: SlotOutcome::Shared { peer },
+                    score: 0.0,
+                    expected_pcie_gbps: est,
+                });
+                continue;
+            }
+            let p = t.placement;
+            let start = allocator
+                .commit_pinned(i, t.kind(), p.gpu, p.profile, p.start, est)
+                .unwrap_or_else(|e| {
+                    panic!("tenant {i} ({}) placement failed: {e}", t.name)
+                });
+            entries[i] = Some(PlanEntry {
+                index: i,
+                name: t.name.clone(),
+                kind: t.kind(),
+                auto: false,
+                outcome: SlotOutcome::Placed {
+                    gpu: p.gpu,
+                    profile: p.profile,
+                    start,
+                },
+                score: 0.0,
+                expected_pcie_gbps: est,
+            });
+            tenants[i].placement.start = Some(start);
+        }
+        for &(gpu, profile, start) in &self.spares {
+            allocator
+                .commit_spare(gpu, profile, start)
+                .unwrap_or_else(|e| panic!("spare on gpu{gpu} failed: {e}"));
+        }
+
+        // Pass 2: auto tenants, first-fit-decreasing through admission.
+        let reqs: Vec<AutoRequest> = tenants
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| {
+                t.placement.auto.map(|a| AutoRequest {
+                    index: i,
+                    name: t.name.clone(),
+                    kind: t.kind(),
+                    min_profile: a.min_profile,
+                    expected_pcie_gbps: a.expected_pcie_gbps,
+                })
+            })
+            .collect();
+        let outcomes = allocator.pack(&reqs);
+        for (req, (outcome, score)) in reqs.iter().zip(outcomes) {
+            if let SlotOutcome::Placed {
+                gpu,
+                profile,
+                start,
+            } = outcome
+            {
+                tenants[req.index].placement = PlacementSpec::dedicated_at(gpu, profile, start);
+            }
+            entries[req.index] = Some(PlanEntry {
+                index: req.index,
+                name: req.name.clone(),
+                kind: req.kind,
+                auto: true,
+                outcome,
+                score,
+                expected_pcie_gbps: req.expected_pcie_gbps,
+            });
+        }
+
+        let layout = AllocPlan {
+            entries: entries
+                .into_iter()
+                .map(|e| e.expect("every tenant planned"))
+                .collect(),
+            link_gbps: allocator.link_gbps().to_vec(),
+            link_capacity: allocator.link_capacities(),
+        };
+        (tenants, layout)
     }
 }
 
@@ -608,6 +867,107 @@ mod tests {
                 PlacementSpec::dedicated(0, MigProfile::P3g40gb),
             ))
             .build();
+    }
+
+    #[test]
+    fn auto_pack_24_fully_resolved_by_the_allocator() {
+        let s = Scenario::auto_pack_24(11, Levers::full());
+        assert_eq!(s.n_tenants(), 24);
+        assert_eq!(s.tenants[s.primary].kind(), TenantKind::LatencySensitive);
+        // Zero hand-written placements survive: every tenant has a
+        // concrete allocator-chosen slot and no pending auto request.
+        for (i, t) in s.tenants.iter().enumerate() {
+            assert!(!t.placement.is_auto(), "tenant {i} unresolved");
+            assert!(t.placement.start.is_some(), "tenant {i} has no slot");
+            assert!(t.placement.gpu < s.topo.num_gpus);
+        }
+        assert_eq!(s.layout.entries.len(), 24);
+        assert!(s.layout.all_placed());
+        assert!(s.layout.entries.iter().all(|e| e.auto));
+    }
+
+    #[test]
+    fn auto_pack_layout_deterministic_by_seed() {
+        let a = Scenario::auto_pack_24(7, Levers::full());
+        let b = Scenario::auto_pack_24(7, Levers::none());
+        // Same seed ⇒ identical layout (levers don't perturb placement),
+        // and identical schedules (§3.2).
+        assert_eq!(a.layout.fingerprint(), b.layout.fingerprint());
+        for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(ta.schedule.phases, tb.schedule.phases);
+        }
+        let c = Scenario::auto_pack_24(7, Levers::full());
+        assert_eq!(a.layout.fingerprint(), c.layout.fingerprint());
+    }
+
+    #[test]
+    fn mixed_pinned_and_auto_build_resolves_autos_around_pins() {
+        let s = ScenarioBuilder::new("mixed", 3)
+            .tenant(TenantWorkload::latency_sensitive(
+                "pinned-svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .add_auto(TenantWorkload::bandwidth_heavy(
+                "auto-etl",
+                BwSpec::default(),
+                InterferenceSchedule::always_on(300.0),
+                PlacementSpec::auto(MigProfile::P2g20gb, 2.0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build();
+        assert!(!s.tenants[1].placement.is_auto());
+        // The pinned tenant's slot is untouched.
+        assert_eq!(s.tenants[0].placement.gpu, 0);
+        assert_eq!(s.tenants[0].placement.start, Some(0));
+        // The auto tenant landed on free slices (not the pin, not the
+        // spare's slices on gpu1 start 0..3).
+        let p = s.tenants[1].placement;
+        let start = p.start.unwrap();
+        if p.gpu == 0 {
+            assert!(start >= 4, "overlaps the pinned 4g instance");
+        }
+        assert_eq!(s.layout.entries.len(), 2);
+        assert!(!s.layout.entries[0].auto);
+        assert!(s.layout.entries[1].auto);
+    }
+
+    #[test]
+    #[should_panic(expected = "add_auto requires")]
+    fn add_auto_rejects_pinned_placements() {
+        let _ = ScenarioBuilder::new("bad", 1).add_auto(TenantWorkload::latency_sensitive(
+            "svc",
+            LsSpec::default(),
+            PlacementSpec::dedicated(0, MigProfile::P3g40gb),
+        ));
+    }
+
+    #[test]
+    #[should_panic(expected = "could not place")]
+    fn build_surfaces_unplaceable_tenants() {
+        // 29 x 2g = 58 slices on a 56-slice host: admission must refuse
+        // some, and build() reports them instead of overlapping slices.
+        let mut b = ScenarioBuilder::new("overflow", 1)
+            .controller(ControllerConfig::dense_pack(Levers::none()));
+        for i in 0..29 {
+            b = b.add_auto(TenantWorkload::latency_sensitive(
+                format!("svc-{i}"),
+                LsSpec::default(),
+                PlacementSpec::auto(MigProfile::P2g20gb, 0.1),
+            ));
+        }
+        b.build();
+    }
+
+    #[test]
+    fn every_built_scenario_carries_a_layout() {
+        for name in Scenario::CATALOG {
+            let s = Scenario::by_name(name, 5, Levers::full()).unwrap();
+            assert_eq!(s.layout.entries.len(), s.n_tenants(), "{name}");
+            assert!(s.layout.all_placed(), "{name}");
+            let rendered = s.layout.render();
+            assert!(rendered.contains("link0"), "{name}: {rendered}");
+        }
     }
 
     #[test]

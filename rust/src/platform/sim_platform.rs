@@ -1085,7 +1085,7 @@ impl SimWorld {
                     .filter(|s| s.numa == n.id)
                     .map(|s| links[s.link.0].gbps)
                     .sum();
-                200.0 + 800.0 * io + 120.0 * pcie
+                crate::telemetry::signals::synthetic_irq_rate(*io, pcie)
             })
             .collect();
 

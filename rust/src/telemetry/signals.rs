@@ -68,3 +68,12 @@ impl SignalSnapshot {
         self.links.iter().find(|l| l.link == id)
     }
 }
+
+/// Synthetic per-NUMA IRQ-rate model (interrupts/s): a floor plus terms
+/// scaling with the domain's storage and PCIe traffic. Single source of
+/// truth shared by the simulated host's telemetry and the allocator's
+/// planning snapshot — plan-time placement scores must not drift from
+/// the scores the live controller computes.
+pub fn synthetic_irq_rate(io_gbps: f64, pcie_gbps: f64) -> f64 {
+    200.0 + 800.0 * io_gbps + 120.0 * pcie_gbps
+}

@@ -22,4 +22,4 @@ pub use schedule::{InterferenceSchedule, Phase};
 pub use spec::{
     BwSpec, CompSpec, LsRequest, LsSpec, T1Request, T1Spec, T2Spec, T3Spec, TenantId, TenantKind,
 };
-pub use workload::{PlacementSpec, TenantWorkload, WorkloadSpec};
+pub use workload::{AutoPlacement, PlacementSpec, TenantWorkload, WorkloadSpec};

@@ -63,9 +63,57 @@ impl WorkloadSpec {
             _ => f64::MAX,
         }
     }
+
+    /// Planning estimate of the tenant's sustained PCIe demand (GB/s) —
+    /// what the workload pushes over its GPU uplink while active. Used by
+    /// the auto-placement allocator (`crate::alloc`) to charge expected
+    /// load against links before any telemetry exists; it is a coarse
+    /// admission-time estimate, not a measurement.
+    pub fn expected_pcie_gbps(&self) -> f64 {
+        match self {
+            WorkloadSpec::LatencySensitive(s) => {
+                // Mean request H2D size (the size mixture is ~normalized;
+                // guard against authored mixes whose weights do not sum
+                // to 1) times the arrival rate.
+                let wsum: f64 = s.size_mix.iter().map(|&(p, _)| p).sum();
+                let mean_gb: f64 = s.size_mix.iter().map(|&(p, m)| p * m).sum::<f64>()
+                    / wsum.max(1e-9);
+                s.arrival_rps * mean_gb
+            }
+            WorkloadSpec::BandwidthHeavy(s) => {
+                // PCIe bytes per cycle over an estimated cycle duration
+                // (transfers at ~10 GB/s effective fair share + transform).
+                let cycle_s =
+                    (s.read_gb + s.h2d_gb + s.d2h_gb) / 10.0 + s.transform_ms / 1000.0;
+                (s.h2d_gb + s.d2h_gb) / cycle_s.max(1e-9)
+            }
+            WorkloadSpec::ComputeHeavy(s) => {
+                // Gradient sync once per step.
+                s.sync_gb / (s.step_ms / 1000.0).max(1e-9)
+            }
+        }
+    }
+}
+
+/// Auto-placement request: the tenant declares its resource ask and the
+/// allocator (`crate::alloc`) chooses the concrete GPU/profile/slice.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoPlacement {
+    /// Smallest MIG profile the workload can run on.
+    pub min_profile: MigProfile,
+    /// Expected sustained PCIe demand (GB/s) for link-headroom admission.
+    pub expected_pcie_gbps: f64,
 }
 
 /// Where a tenant wants to run.
+///
+/// Three modes, mirroring how the world resolves them:
+/// * **pinned** — explicit `gpu`/`profile`(/`start`), used verbatim;
+/// * **shared** — `share_with: Some(peer)`: MPS co-scheduling on an
+///   earlier tenant's instance (gpu/profile here are placeholders);
+/// * **auto** — `auto: Some(..)`: the topology-aware allocator picks the
+///   placement at `ScenarioBuilder::build` time (gpu/profile/start here
+///   are placeholders until resolution).
 #[derive(Clone, Copy, Debug)]
 pub struct PlacementSpec {
     /// GPU index on the host.
@@ -78,6 +126,9 @@ pub struct PlacementSpec {
     /// the naive-placement baseline the controller escapes from). The
     /// peer must be on the same GPU with the same profile/start.
     pub share_with: Option<usize>,
+    /// Auto-placement request; resolved (and cleared) by the scenario
+    /// builder through `crate::alloc`.
+    pub auto: Option<AutoPlacement>,
 }
 
 impl PlacementSpec {
@@ -87,6 +138,7 @@ impl PlacementSpec {
             profile,
             start: None,
             share_with: None,
+            auto: None,
         }
     }
 
@@ -96,6 +148,7 @@ impl PlacementSpec {
             profile,
             start: Some(start),
             share_with: None,
+            auto: None,
         }
     }
 
@@ -108,7 +161,30 @@ impl PlacementSpec {
             profile: MigProfile::P4g40gb,
             start: None,
             share_with: Some(peer),
+            auto: None,
         }
+    }
+
+    /// Ask the topology-aware allocator for a placement: the smallest
+    /// acceptable profile plus the expected sustained PCIe demand. The
+    /// gpu/profile/start fields are placeholders until
+    /// `ScenarioBuilder::build` resolves them.
+    pub fn auto(min_profile: MigProfile, expected_pcie_gbps: f64) -> PlacementSpec {
+        PlacementSpec {
+            gpu: 0,
+            profile: min_profile,
+            start: None,
+            share_with: None,
+            auto: Some(AutoPlacement {
+                min_profile,
+                expected_pcie_gbps,
+            }),
+        }
+    }
+
+    /// Is this placement still an unresolved auto request?
+    pub fn is_auto(&self) -> bool {
+        self.auto.is_some()
     }
 }
 
@@ -201,6 +277,34 @@ mod tests {
         );
         assert_eq!(tr.kind(), TenantKind::ComputeHeavy);
         assert_eq!(tr.placement.share_with, Some(0));
+    }
+
+    #[test]
+    fn auto_placement_carries_the_ask() {
+        let p = PlacementSpec::auto(MigProfile::P2g20gb, 3.5);
+        assert!(p.is_auto());
+        assert!(p.share_with.is_none());
+        let a = p.auto.unwrap();
+        assert_eq!(a.min_profile, MigProfile::P2g20gb);
+        assert_eq!(a.expected_pcie_gbps, 3.5);
+        assert!(!PlacementSpec::dedicated(0, MigProfile::P3g40gb).is_auto());
+        assert!(!PlacementSpec::shared_with(0).is_auto());
+    }
+
+    #[test]
+    fn expected_pcie_estimates_are_positive_and_ordered() {
+        let ls = WorkloadSpec::LatencySensitive(LsSpec::default());
+        let bw = WorkloadSpec::BandwidthHeavy(BwSpec::default());
+        let comp = WorkloadSpec::ComputeHeavy(CompSpec::default());
+        // Default T1: 80 rps x ~0.037 GB mean => ~3 GB/s.
+        let e_ls = ls.expected_pcie_gbps();
+        assert!(e_ls > 1.0 && e_ls < 10.0, "ls estimate {e_ls}");
+        // The ETL pipeline is the heaviest PCIe user; the trainer's
+        // gradient sync is the lightest.
+        let e_bw = bw.expected_pcie_gbps();
+        let e_comp = comp.expected_pcie_gbps();
+        assert!(e_bw > e_comp, "bw {e_bw} !> comp {e_comp}");
+        assert!(e_comp > 0.0);
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! Property-based tests (util::proptest_lite) on the coordinator
 //! invariants: PS conservation, KV-cache state, batcher bookkeeping,
-//! MIG legality, upgrade-chain termination, event ordering, and the
+//! MIG legality, upgrade-chain termination, event ordering, the
 //! N-tenant scenario engine (same seed ⇒ identical `RunResult`;
-//! identical interference schedules across lever settings).
+//! identical interference schedules across lever settings), and the
+//! auto-placement allocator (deterministic layouts, no double-booked
+//! slices, link-headroom admission respected).
 
-use predserve::controller::Levers;
+use predserve::alloc::{AutoRequest, FleetAllocator, HostAllocator, SlotOutcome};
+use predserve::controller::{ControllerConfig, Levers};
 use predserve::fabric::ps::{ps_rates, FlowDemand};
 use predserve::gpu::{A100Gpu, MigProfile};
 use predserve::platform::{Scenario, ScenarioBuilder, SimWorld};
 use predserve::serving::kvcache::{KvError, PagedKvCache};
 use predserve::sim::EventQueue;
 use predserve::tenants::{
-    BwSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantWorkload,
+    BwSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantKind, TenantWorkload,
 };
+use predserve::topo::HostTopology;
 use predserve::util::proptest_lite::{check, Config};
 use predserve::util::rng::Pcg64;
 
@@ -459,6 +463,199 @@ fn prop_schedules_identical_across_lever_settings() {
                 if ta.schedule.phases != tb.schedule.phases {
                     return Err(format!("schedule of {} differs across levers", ta.name));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+// --- auto-placement allocator properties ------------------------------------
+
+/// Generated allocator workload: a tenant mix plus the admission config
+/// flavor (strict defaults vs dense-pack).
+#[derive(Clone, Debug)]
+struct GenAllocCase {
+    dense: bool,
+    reqs: Vec<(u8, u8, f64)>, // (kind, min-profile, expected GB/s)
+}
+
+fn gen_alloc_case(rng: &mut Pcg64) -> GenAllocCase {
+    let n = 1 + rng.below(28) as usize;
+    GenAllocCase {
+        dense: rng.chance(0.5),
+        reqs: (0..n)
+            .map(|_| {
+                (
+                    rng.below(3) as u8,
+                    rng.below(4) as u8, // 1g..4g
+                    rng.range_f64(0.05, 15.0),
+                )
+            })
+            .collect(),
+    }
+}
+
+fn alloc_requests(case: &GenAllocCase) -> Vec<AutoRequest> {
+    case.reqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(kind, prof, gbps))| AutoRequest {
+            index: i,
+            name: format!("t{i}"),
+            kind: match kind % 3 {
+                0 => TenantKind::LatencySensitive,
+                1 => TenantKind::BandwidthHeavy,
+                _ => TenantKind::ComputeHeavy,
+            },
+            min_profile: MigProfile::ALL[(prof % 4) as usize],
+            expected_pcie_gbps: gbps,
+        })
+        .collect()
+}
+
+fn alloc_config(case: &GenAllocCase) -> ControllerConfig {
+    if case.dense {
+        ControllerConfig::dense_pack(Levers::full())
+    } else {
+        ControllerConfig::default()
+    }
+}
+
+fn outcome_fingerprint(out: &[(SlotOutcome, f64)]) -> String {
+    out.iter()
+        .map(|(o, _)| format!("{o:?};"))
+        .collect::<String>()
+}
+
+#[test]
+fn prop_allocator_deterministic() {
+    // Same tenant mix + thresholds ⇒ bit-identical layout (the allocator
+    // is RNG-free by construction; this guards against map-iteration or
+    // float-ordering nondeterminism creeping in).
+    check(
+        Config { cases: 40, seed: 0x20 },
+        "allocator determinism",
+        gen_alloc_case,
+        |case| {
+            let reqs = alloc_requests(case);
+            let a = HostAllocator::new(HostTopology::p4d(), alloc_config(case)).pack(&reqs);
+            let b = HostAllocator::new(HostTopology::p4d(), alloc_config(case)).pack(&reqs);
+            if outcome_fingerprint(&a) != outcome_fingerprint(&b) {
+                return Err(format!(
+                    "same mix, different layouts:\n  {}\n  {}",
+                    outcome_fingerprint(&a),
+                    outcome_fingerprint(&b)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allocator_never_double_books() {
+    check(
+        Config { cases: 60, seed: 0x21 },
+        "allocator occupancy",
+        gen_alloc_case,
+        |case| {
+            let reqs = alloc_requests(case);
+            let out = HostAllocator::new(HostTopology::p4d(), alloc_config(case)).pack(&reqs);
+            let mut occ = vec![[0u8; 7]; 8];
+            for (o, _) in &out {
+                if let SlotOutcome::Placed { gpu, profile, start } = *o {
+                    if !profile.legal_starts().contains(&start) {
+                        return Err(format!("illegal start {start} for {profile}"));
+                    }
+                    for s in start..start + profile.compute_slices() {
+                        occ[gpu][s] += 1;
+                        if occ[gpu][s] > 1 {
+                            return Err(format!("gpu{gpu} slice {s} double-booked"));
+                        }
+                    }
+                }
+            }
+            // Nothing vanishes: every request has exactly one outcome.
+            if out.len() != reqs.len() {
+                return Err("lost a request".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allocator_respects_link_headroom() {
+    // pcie_hotspot-style mixes: many bandwidth-heavy tenants with large
+    // expected PCIe demand. However the mix is drawn, the sum of placed
+    // tenants' expected demand on any PCIe uplink must stay within the
+    // admission headroom; the overflow queues instead.
+    check(
+        Config { cases: 60, seed: 0x22 },
+        "link headroom admission",
+        gen_alloc_case,
+        |case| {
+            let reqs = alloc_requests(case);
+            let cfg = alloc_config(case);
+            let headroom = cfg.link_headroom;
+            let topo = HostTopology::p4d();
+            let out = HostAllocator::new(topo.clone(), cfg).pack(&reqs);
+            let mut per_link = vec![0.0f64; topo.num_links];
+            for (req, (o, _)) in reqs.iter().zip(&out) {
+                if let SlotOutcome::Placed { gpu, .. } = *o {
+                    per_link[topo.link_of_gpu(gpu).0] += req.expected_pcie_gbps;
+                }
+            }
+            for s in &topo.switches {
+                let used = per_link[s.link.0];
+                let budget = s.bandwidth_gbps * headroom;
+                if used > budget + 1e-9 {
+                    return Err(format!(
+                        "uplink {:?} loaded to {used} GB/s (> {budget})",
+                        s.link
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fleet_split_is_exhaustive_and_disjoint() {
+    // Fleet packing: every tenant lands on exactly one host or is
+    // reported queued/rejected — never dropped, never duplicated.
+    check(
+        Config { cases: 30, seed: 0x23 },
+        "fleet split",
+        |rng| {
+            let mut case = gen_alloc_case(rng);
+            case.dense = true; // fleet dispatch uses the dense config
+            (1 + rng.below(3) as usize, case)
+        },
+        |(nodes, case)| {
+            let reqs = alloc_requests(case);
+            let plan = FleetAllocator::new(
+                *nodes,
+                HostTopology::p4d(),
+                ControllerConfig::dense_pack(Levers::full()),
+            )
+            .pack(&reqs);
+            let mut seen = std::collections::BTreeSet::new();
+            for h in &plan.hosts {
+                for a in &h.assigned {
+                    if !seen.insert(a.tenant) {
+                        return Err(format!("tenant {} on two hosts", a.tenant));
+                    }
+                }
+            }
+            for &q in plan.queued.iter().chain(&plan.rejected) {
+                if !seen.insert(q) {
+                    return Err(format!("tenant {q} both placed and unplaced"));
+                }
+            }
+            if seen.len() != reqs.len() {
+                return Err(format!("{} of {} tenants accounted", seen.len(), reqs.len()));
             }
             Ok(())
         },
