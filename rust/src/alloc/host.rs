@@ -19,7 +19,7 @@ use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TailStats, TenantSig
 use crate::tenants::{TenantId, TenantKind, TenantWorkload};
 use crate::topo::{HostTopology, LinkId};
 
-use super::plan::SlotOutcome;
+use super::plan::{AllocPlan, PlanEntry, SlotOutcome};
 
 /// One tenant's ask, as the allocator sees it.
 #[derive(Clone, Debug)]
@@ -346,6 +346,67 @@ impl HostAllocator {
         out.into_iter()
             .map(|o| o.expect("every request packed"))
             .collect()
+    }
+
+    /// Pack a batch of auto tenants ([`HostAllocator::pack`]) and return
+    /// the full [`AllocPlan`] — one entry per request plus the expected
+    /// per-link load — ready to fingerprint or render. This is the
+    /// standalone planning entry point (`predserve plan` goes through the
+    /// scenario builder, which interleaves pinned tenants and spares).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use predserve::alloc::{AutoRequest, HostAllocator};
+    /// use predserve::controller::ControllerConfig;
+    /// use predserve::gpu::MigProfile;
+    /// use predserve::tenants::TenantKind;
+    /// use predserve::topo::HostTopology;
+    ///
+    /// let mut alloc = HostAllocator::new(HostTopology::p4d(), ControllerConfig::default());
+    /// let reqs = vec![
+    ///     AutoRequest {
+    ///         index: 0,
+    ///         name: "svc".to_string(),
+    ///         kind: TenantKind::LatencySensitive,
+    ///         min_profile: MigProfile::P3g40gb,
+    ///         expected_pcie_gbps: 3.0,
+    ///     },
+    ///     AutoRequest {
+    ///         index: 1,
+    ///         name: "etl".to_string(),
+    ///         kind: TenantKind::BandwidthHeavy,
+    ///         min_profile: MigProfile::P2g20gb,
+    ///         expected_pcie_gbps: 6.0,
+    ///     },
+    /// ];
+    /// let plan = alloc.plan(&reqs);
+    /// assert_eq!(plan.entries.len(), 2);
+    /// assert!(plan.all_placed());
+    /// // Deterministic: the same mix always yields the same layout.
+    /// let again = HostAllocator::new(HostTopology::p4d(), ControllerConfig::default())
+    ///     .plan(&reqs);
+    /// assert_eq!(plan.fingerprint(), again.fingerprint());
+    /// ```
+    pub fn plan(&mut self, reqs: &[AutoRequest]) -> AllocPlan {
+        let outcomes = self.pack(reqs);
+        AllocPlan {
+            entries: reqs
+                .iter()
+                .zip(outcomes)
+                .map(|(r, (outcome, score))| PlanEntry {
+                    index: r.index,
+                    name: r.name.clone(),
+                    kind: r.kind,
+                    auto: true,
+                    outcome,
+                    score,
+                    expected_pcie_gbps: r.expected_pcie_gbps,
+                })
+                .collect(),
+            link_gbps: self.link_gbps().to_vec(),
+            link_capacity: self.link_capacities(),
+        }
     }
 }
 

@@ -9,6 +9,8 @@
 //!   root-complex sharing, NUMA I/O, IRQ pressure) and gated by the §2.3
 //!   admission verdicts, so unplaceable tenants surface as
 //!   `Queued`/`Rejected` instead of silently overlapping.
+//!   `HostAllocator::plan` is the one-shot entry point that returns a
+//!   finished [`AllocPlan`].
 //! * [`FleetAllocator`] splits a fleet-level tenant list across hosts
 //!   (least-loaded first) — what the cluster leader dispatches.
 //! * [`AllocPlan`] / [`FleetPlan`] are the resulting layouts as data:

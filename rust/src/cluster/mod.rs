@@ -8,8 +8,8 @@
 //!   [`crate::serving::Router`] semantics, and aggregates per-host
 //!   results into cluster-level tables.
 //!
-//! Transport is length-prefixed JSON over TCP (`std::net`, no tokio in
-//! the offline vendor set — see DESIGN.md).
+//! Transport is length-prefixed JSON over TCP (`std::net`; the vendor
+//! set is offline-first, so no tokio — see `docs/ARCHITECTURE.md`).
 
 pub mod proto;
 pub mod worker;

@@ -1,0 +1,675 @@
+//! Multi-primary control plane: one [`Controller`] per protected
+//! latency-sensitive tenant, coordinated by a deterministic arbiter.
+//!
+//! The paper's controller protects a single designated tenant. Real hosts
+//! run several latency-sensitive services at once (the `multi_ls_slo_mix`
+//! / `dueling_primaries` scenarios), and their controllers can want
+//! *conflicting* isolation upgrades on the shared GPUs — both chasing the
+//! same spare instance, or two MIG reconfigurations whose pauses and
+//! post-change validation windows would confound each other's p99
+//! attribution (MIG-Serving and ParvaGPU both hit this per-tenant
+//! conflict-resolution problem on reconfigurable GPUs).
+//!
+//! Arbitration policy (all deterministic):
+//!
+//! 1. **Mandatory rollbacks** (validation failures) always commit — a
+//!    controller may always restore its own last-known-good config.
+//! 2. **Guardrails** are non-disruptive and commit immediately;
+//!    same-tick duplicates targeting one tenant are reconciled to the
+//!    most *protective* value (tightest IO cap / lowest MPS quota). The
+//!    arbiter also tracks which controller owns each active guardrail:
+//!    a relaxation may only lift guards its own controller applied, so
+//!    a stable tenant's relax path can never undo the protection a
+//!    still-violating tenant's controller put in place.
+//! 3. **Disruptive isolation changes** (upgrades and relaxation
+//!    shrinks) are serialized host-wide: at most one commits per tick,
+//!    and none while any controller's change is under validation
+//!    (post-change p99 shifts stay attributable, and the platform's
+//!    last-known-good snapshot always belongs to exactly one in-flight
+//!    change). Upgrades outrank relaxes; among upgrades the worst
+//!    tail-to-SLO ratio (`p99 / τ`) wins, ties broken by tenant index.
+//!    Every loser is deferred with its dwell/cool-down state intact —
+//!    never silently dropped. Deferrals land in the loser's audit log
+//!    (edge `"defer"`) and in the run's arbitration counters.
+//!
+//! A deferred controller re-enters `evaluate` next tick and re-plans
+//! against the *post-winner* host state, so a deferred upgrade is
+//! eventually applied (or superseded by a better plan) once the winner's
+//! validation window closes.
+//!
+//! With exactly one controller the arbiter is a transparent pass-through:
+//! single-primary scenarios keep their seed-identical action sequence.
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::SignalSnapshot;
+use crate::tenants::TenantId;
+
+use super::actions::Action;
+use super::config::ControllerConfig;
+use super::fsm::{Controller, CtlState, Proposal, ProposalClass};
+use super::view::PlannerView;
+
+/// One tenant the control plane protects.
+#[derive(Clone, Copy, Debug)]
+pub struct Protected {
+    pub tenant: TenantId,
+    /// Tail threshold τ for this tenant's controller. `None` keeps the
+    /// shared `ControllerConfig::tau_ms` (the designated primary keeps
+    /// any author-tuned τ; secondary tenants use their own SLO).
+    pub tau_ms: Option<f64>,
+    /// Baseline throughput for the ≥95% budget check.
+    pub base_rps: f64,
+}
+
+/// Aggregate arbitration counters for a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArbStats {
+    /// Ticks where two or more disruptive isolation changes competed.
+    pub conflicts: u64,
+    /// Total deferred proposals (arbitration losses + validation holds).
+    pub deferrals: u64,
+}
+
+/// Guardrail flavor, for ownership tracking.
+const GUARD_IO: u8 = 0;
+const GUARD_MPS: u8 = 1;
+
+/// The multi-primary control plane.
+pub struct Arbiter {
+    controllers: Vec<Controller>,
+    stats: ArbStats,
+    /// Which controller (index) owns the active guardrail on a target
+    /// tenant: `(target tenant, GUARD_IO | GUARD_MPS) → controller`.
+    /// Only the owner's relaxation path may lift or loosen it.
+    guard_owner: BTreeMap<(usize, u8), usize>,
+}
+
+impl Arbiter {
+    /// Legacy single-primary plane: one controller, `cfg` used verbatim.
+    /// Behaviorally identical to driving that controller directly.
+    pub fn single(cfg: ControllerConfig, primary: TenantId) -> Arbiter {
+        Arbiter {
+            controllers: vec![Controller::for_primary(cfg, primary)],
+            stats: ArbStats::default(),
+            guard_owner: BTreeMap::new(),
+        }
+    }
+
+    /// One controller per protected tenant. Each gets a clone of `cfg`
+    /// with its own τ and throughput baseline.
+    pub fn multi(cfg: &ControllerConfig, protected: &[Protected]) -> Arbiter {
+        let controllers = protected
+            .iter()
+            .map(|p| {
+                let mut c = cfg.clone();
+                if let Some(tau) = p.tau_ms {
+                    c.tau_ms = tau;
+                }
+                Controller::for_primary(c, p.tenant).with_base_rps(p.base_rps)
+            })
+            .collect();
+        Arbiter {
+            controllers,
+            stats: ArbStats::default(),
+            guard_owner: BTreeMap::new(),
+        }
+    }
+
+    pub fn controllers(&self) -> &[Controller] {
+        &self.controllers
+    }
+
+    pub fn stats(&self) -> ArbStats {
+        self.stats
+    }
+
+    /// Is more than one tenant under active control?
+    pub fn is_multi(&self) -> bool {
+        self.controllers.len() > 1
+    }
+
+    /// One control-plane tick: every controller evaluates against the
+    /// same snapshot/view, then the arbiter decides what commits. Returns
+    /// the actions the platform must apply, in order.
+    pub fn on_observation(&mut self, snap: &SignalSnapshot, view: &PlannerView) -> Vec<Action> {
+        let mut proposals: Vec<(usize, Proposal)> = Vec::new();
+        for (k, c) in self.controllers.iter_mut().enumerate() {
+            if let Some(p) = c.evaluate(snap, view) {
+                proposals.push((k, p));
+            }
+        }
+        let mut out: Vec<Action> = Vec::new();
+
+        // 1. Mandatory rollbacks, in tenant order.
+        let mut rolled_back: Option<TenantId> = None;
+        for (k, p) in &proposals {
+            if p.class == ProposalClass::Mandatory {
+                out.extend(self.controllers[*k].commit(snap.t, p));
+                rolled_back.get_or_insert(self.controllers[*k].primary());
+            }
+        }
+
+        // Host-wide serialization: is any change still under validation
+        // after this tick's bookkeeping? (A controller that just finished
+        // validating moved to Cooldown in `evaluate`, freeing the slot.)
+        // A rollback that committed *this tick* also blocks the slot:
+        // everyone else planned against the pre-rollback view, and a
+        // simultaneous reconfig would confound the restored tenant's p99.
+        let validating_tenant = self
+            .controllers
+            .iter()
+            .find(|c| matches!(c.state(), CtlState::Validating { .. }))
+            .map(|c| c.primary())
+            .or(rolled_back);
+
+        // 2. Guardrails commit immediately; guardrail *relaxations* are
+        // filtered by ownership (a controller may only loosen guards it
+        // applied itself). Disruptive proposals — upgrades AND
+        // relaxation shrinks — go into one pool for step 3. A Relax
+        // proposal is by construction either all guard actions or a
+        // single disruptive shrink (`evaluate` only plans the shrink
+        // when no guard has anything to give back).
+        let mut guard_actions: Vec<Action> = Vec::new();
+        let mut disruptive: Vec<usize> = Vec::new();
+        for (i, (k, p)) in proposals.iter().enumerate() {
+            match p.class {
+                ProposalClass::Guardrail => {
+                    self.note_guard_owner(*k, &p.actions);
+                    guard_actions.extend(self.controllers[*k].commit(snap.t, p));
+                }
+                ProposalClass::Relax if p.is_disruptive() => disruptive.push(i),
+                ProposalClass::Relax => {
+                    let kept = self.own_guard_relaxes(*k, &p.actions);
+                    if kept.is_empty() {
+                        // Every action would loosen another controller's
+                        // protection: drop the bundle without consuming
+                        // the relax bookkeeping — the owners relax their
+                        // own guards once *their* tenants are stable.
+                        continue;
+                    }
+                    self.clear_lifted_owners(&kept);
+                    // Re-derive the audit kind from what actually
+                    // survived the ownership filter.
+                    let kind = kept[0].kind();
+                    let filtered = Proposal {
+                        actions: kept,
+                        kind,
+                        ..p.clone()
+                    };
+                    guard_actions.extend(self.controllers[*k].commit(snap.t, &filtered));
+                }
+                ProposalClass::Upgrade => disruptive.push(i),
+                ProposalClass::Mandatory => {}
+            }
+        }
+        out.extend(reconcile_guards(guard_actions));
+
+        // 3. Disruptive pool: at most one isolation change commits per
+        // tick. Upgrades outrank relaxes; among upgrades the worst
+        // tail-to-SLO ratio wins, ties broken by tenant index.
+        if !disruptive.is_empty() {
+            if disruptive.len() > 1 {
+                self.stats.conflicts += 1;
+            }
+            if let Some(w) = validating_tenant {
+                for &i in &disruptive {
+                    let (k, p) = &proposals[i];
+                    self.stats.deferrals += 1;
+                    self.controllers[*k].defer(snap.t, p, w);
+                }
+            } else {
+                let winner = disruptive
+                    .iter()
+                    .copied()
+                    .max_by(|&a, &b| {
+                        let (ka, pa) = &proposals[a];
+                        let (kb, pb) = &proposals[b];
+                        let rank = |p: &Proposal| u8::from(p.class == ProposalClass::Upgrade);
+                        // Upgrades beat relaxes; higher ratio wins; on
+                        // ties the lower tenant index wins (max_by keeps
+                        // the later element on Equal, so compare indices
+                        // in reverse).
+                        rank(pa)
+                            .cmp(&rank(pb))
+                            .then(pa.ratio.total_cmp(&pb.ratio))
+                            .then(kb.cmp(ka))
+                    })
+                    .expect("non-empty disruptive set");
+                let winner_tenant = {
+                    let (k, p) = &proposals[winner];
+                    let acts = self.controllers[*k].commit(snap.t, p);
+                    out.extend(acts);
+                    self.controllers[*k].primary()
+                };
+                for &i in &disruptive {
+                    if i == winner {
+                        continue;
+                    }
+                    let (k, p) = &proposals[i];
+                    self.stats.deferrals += 1;
+                    self.controllers[*k].defer(snap.t, p, winner_tenant);
+                }
+            }
+        }
+
+        out
+    }
+
+    /// Record guardrail ownership: the controller whose trigger applied
+    /// a throttle/quota is the only one allowed to loosen it later.
+    /// Same-tick duplicates overwrite in controller order (reconciled to
+    /// the most protective value anyway).
+    fn note_guard_owner(&mut self, k: usize, actions: &[Action]) {
+        for a in actions {
+            match a {
+                Action::SetIoThrottle {
+                    tenant,
+                    cap_gbps: Some(_),
+                } => {
+                    self.guard_owner.insert((tenant.0, GUARD_IO), k);
+                }
+                Action::SetMpsQuota { tenant, .. } => {
+                    self.guard_owner.insert((tenant.0, GUARD_MPS), k);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Keep only the relax actions controller `k` is allowed to take:
+    /// guards it owns, or guards nobody claimed (e.g. expired throttles
+    /// a new tick re-observes).
+    fn own_guard_relaxes(&self, k: usize, actions: &[Action]) -> Vec<Action> {
+        actions
+            .iter()
+            .filter(|a| {
+                let key = match a {
+                    Action::SetIoThrottle {
+                        tenant,
+                        cap_gbps: None,
+                    } => (tenant.0, GUARD_IO),
+                    Action::SetMpsQuota { tenant, .. } => (tenant.0, GUARD_MPS),
+                    _ => return true,
+                };
+                match self.guard_owner.get(&key) {
+                    Some(&owner) => owner == k,
+                    None => true,
+                }
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// A lifted IO throttle releases its ownership (the next tightener,
+    /// whoever it is, becomes the new owner). MPS ownership stays with
+    /// the tightener until someone re-tightens — relaxing is stepwise.
+    fn clear_lifted_owners(&mut self, actions: &[Action]) {
+        for a in actions {
+            if let Action::SetIoThrottle {
+                tenant,
+                cap_gbps: None,
+            } = a
+            {
+                self.guard_owner.remove(&(tenant.0, GUARD_IO));
+            }
+        }
+    }
+}
+
+/// Collapse same-tick guardrail duplicates onto one tenant to the most
+/// protective value: the tightest IO cap (`Some` beats `None`) and the
+/// lowest MPS quota. Order of first occurrence is preserved, so a single
+/// controller's action list passes through untouched.
+fn reconcile_guards(actions: Vec<Action>) -> Vec<Action> {
+    let mut out: Vec<Action> = Vec::new();
+    for a in actions {
+        match a {
+            Action::SetIoThrottle { tenant, cap_gbps } => {
+                if let Some(Action::SetIoThrottle { cap_gbps: prev, .. }) =
+                    out.iter_mut().find(
+                        |x| matches!(x, Action::SetIoThrottle { tenant: t, .. } if *t == tenant),
+                    )
+                {
+                    *prev = match (*prev, cap_gbps) {
+                        (Some(a), Some(b)) => Some(a.min(b)),
+                        (Some(a), None) | (None, Some(a)) => Some(a),
+                        (None, None) => None,
+                    };
+                } else {
+                    out.push(Action::SetIoThrottle { tenant, cap_gbps });
+                }
+            }
+            Action::SetMpsQuota { tenant, quota } => {
+                if let Some(Action::SetMpsQuota { quota: prev, .. }) = out.iter_mut().find(
+                    |x| matches!(x, Action::SetMpsQuota { tenant: t, .. } if *t == tenant),
+                ) {
+                    *prev = prev.min(quota);
+                } else {
+                    out.push(Action::SetMpsQuota { tenant, quota });
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::config::Levers;
+    use crate::gpu::{A100Gpu, InstanceId, MigProfile};
+    use crate::telemetry::signals::{LinkSignal, TailStats, TenantSignal};
+    use crate::topo::{HostTopology, LinkId};
+
+    use super::super::view::{InstanceView, TenantView};
+
+    /// Two latency-sensitive tenants (0 and 1) on different GPUs of the
+    /// same switch, one free spare instance on gpu2 both would like.
+    fn duel_view() -> PlannerView {
+        let topo = HostTopology::p4d();
+        let mut gpus: Vec<A100Gpu> = (0..8).map(A100Gpu::new).collect();
+        gpus[0].create_at(MigProfile::P4g40gb, 0).unwrap();
+        gpus[1].create_at(MigProfile::P3g40gb, 0).unwrap();
+        let spare = gpus[2].create_at(MigProfile::P3g40gb, 0).unwrap();
+        let tenant = |id: usize, gpu: usize, profile| TenantView {
+            tenant: TenantId(id),
+            gpu,
+            instance: InstanceId(1),
+            profile,
+            mps_peers: vec![],
+            numa: 0,
+            mps_quota: 100.0,
+            io_throttle_gbps: None,
+        };
+        PlannerView {
+            topo,
+            gpus,
+            tenants: vec![
+                tenant(0, 0, MigProfile::P4g40gb),
+                tenant(1, 1, MigProfile::P3g40gb),
+            ],
+            free_instances: vec![InstanceView {
+                gpu: 2,
+                existing: Some(spare),
+                profile: MigProfile::P3g40gb,
+            }],
+            primary_base_rps: 120.0,
+        }
+    }
+
+    /// Both tenants violating with heavy PCIe pressure on their shared
+    /// uplink from a third (bandwidth-heavy) tenant — both controllers
+    /// diagnose PciePressure but have no guardrail lever, so both
+    /// escalate straight to a placement move toward the gpu2 spare.
+    fn duel_snap(p99_a: f64, p99_b: f64) -> SignalSnapshot {
+        let ls = |id: usize, p99: f64| TenantSignal {
+            tenant: TenantId(id),
+            tails: TailStats {
+                p50_ms: p99 * 0.5,
+                p95_ms: p99 * 0.9,
+                p99_ms: p99,
+                p999_ms: p99 * 1.2,
+                miss_rate: if p99 > 15.0 { 0.2 } else { 0.0 },
+                completed: 240,
+                rps: 120.0,
+            },
+            pcie_gbps: 0.5,
+            block_io_gbps: 0.0,
+            active: true,
+        };
+        SignalSnapshot {
+            t: 0.0,
+            dt: 2.0,
+            tenants: vec![ls(0, p99_a), ls(1, p99_b)],
+            links: (0..6)
+                .map(|i| LinkSignal {
+                    link: LinkId(i),
+                    utilization: if i == 0 { 0.9 } else { 0.05 },
+                    gbps: 0.0,
+                })
+                .collect(),
+            gpu_sm_util: vec![0.9; 8],
+            numa_io_gbps: vec![0.0, 0.0],
+            numa_irq_rate: vec![100.0, 50.0],
+        }
+    }
+
+    fn duel_arbiter() -> Arbiter {
+        let mut cfg = ControllerConfig::with_levers(Levers::placement_only());
+        cfg.warmup_obs = 0;
+        cfg.dwell_obs = 4;
+        cfg.validation_obs = 8;
+        Arbiter::multi(
+            &cfg,
+            &[
+                Protected {
+                    tenant: TenantId(0),
+                    tau_ms: None,
+                    base_rps: 120.0,
+                },
+                Protected {
+                    tenant: TenantId(1),
+                    tau_ms: Some(15.0),
+                    base_rps: 120.0,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn worst_ratio_wins_and_loser_is_deferred() {
+        let mut arb = duel_arbiter();
+        let view = duel_view();
+        // Tenant 1 hurts worse relative to τ: it must win the spare.
+        let snap = duel_snap(20.0, 30.0);
+        let mut first = Vec::new();
+        for _ in 0..10 {
+            first = arb.on_observation(&snap, &view);
+            if !first.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(first.len(), 1, "exactly one upgrade commits: {first:?}");
+        assert!(
+            matches!(first[0], Action::ChangeIsolation { tenant, .. } if tenant == TenantId(1)),
+            "worst-ratio tenant wins, got {first:?}"
+        );
+        let stats = arb.stats();
+        assert_eq!(stats.conflicts, 1, "one contested tick");
+        assert!(stats.deferrals >= 1, "loser recorded as deferred");
+        // The loser's audit log carries the deferral; the winner's the
+        // trigger.
+        assert!(arb.controllers()[0].audit().count_edge("defer") >= 1);
+        assert_eq!(arb.controllers()[1].audit().count_edge("trigger"), 1);
+    }
+
+    #[test]
+    fn tie_breaks_by_tenant_index() {
+        let mut arb = duel_arbiter();
+        let view = duel_view();
+        let snap = duel_snap(30.0, 30.0); // identical ratios
+        let mut acts = Vec::new();
+        for _ in 0..10 {
+            acts = arb.on_observation(&snap, &view);
+            if !acts.is_empty() {
+                break;
+            }
+        }
+        assert!(
+            matches!(acts[0], Action::ChangeIsolation { tenant, .. } if tenant == TenantId(0)),
+            "tie must go to the lower tenant index, got {acts:?}"
+        );
+    }
+
+    #[test]
+    fn deferred_upgrade_applies_after_winner_validation_expires() {
+        let mut arb = duel_arbiter();
+        let view = duel_view();
+        let snap = duel_snap(20.0, 30.0);
+        let mut committed: Vec<(usize, Vec<Action>)> = Vec::new();
+        for tick in 0..40 {
+            let acts = arb.on_observation(&snap, &view);
+            if !acts.is_empty() {
+                committed.push((tick, acts));
+            }
+        }
+        // The winner's upgrade lands first; while it validates, the
+        // loser is deferred every tick; once the winner's window closes
+        // (validation_obs = 8) the loser's upgrade commits.
+        let upgrade_tenants: Vec<TenantId> = committed
+            .iter()
+            .flat_map(|(_, acts)| acts.iter())
+            .filter_map(|a| match a {
+                Action::ChangeIsolation { tenant, .. } => Some(*tenant),
+                _ => None,
+            })
+            .collect();
+        assert!(
+            upgrade_tenants.contains(&TenantId(1)),
+            "winner committed: {committed:?}"
+        );
+        assert!(
+            upgrade_tenants.contains(&TenantId(0)),
+            "deferred upgrade never applied: {committed:?}"
+        );
+        let w = upgrade_tenants.iter().position(|t| *t == TenantId(1));
+        let l = upgrade_tenants.iter().position(|t| *t == TenantId(0));
+        assert!(w < l, "winner must commit before the deferred loser");
+        assert!(arb.stats().deferrals >= 1);
+        assert!(arb.controllers()[0].audit().count_edge("defer") >= 1);
+    }
+
+    #[test]
+    fn arbitration_is_deterministic() {
+        let run = || {
+            let mut arb = duel_arbiter();
+            let view = duel_view();
+            let snap = duel_snap(22.0, 28.0);
+            let mut log = Vec::new();
+            for _ in 0..60 {
+                log.push(format!("{:?}", arb.on_observation(&snap, &view)));
+            }
+            (log, arb.stats())
+        };
+        let (la, sa) = run();
+        let (lb, sb) = run();
+        assert_eq!(la, lb);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn reconcile_keeps_most_protective_guard() {
+        let t = TenantId(2);
+        let out = reconcile_guards(vec![
+            Action::SetIoThrottle {
+                tenant: t,
+                cap_gbps: Some(0.4),
+            },
+            // Another controller relaxing the same tenant in the same
+            // tick must not undo the protection...
+            Action::SetIoThrottle {
+                tenant: t,
+                cap_gbps: None,
+            },
+            // ...and tighter caps win.
+            Action::SetIoThrottle {
+                tenant: t,
+                cap_gbps: Some(0.2),
+            },
+            Action::SetMpsQuota {
+                tenant: t,
+                quota: 70.0,
+            },
+            Action::SetMpsQuota {
+                tenant: t,
+                quota: 85.0,
+            },
+        ]);
+        assert_eq!(out.len(), 2);
+        let io_ok = matches!(
+            out[0],
+            Action::SetIoThrottle { cap_gbps: Some(c), .. } if (c - 0.2).abs() < 1e-12
+        );
+        assert!(io_ok, "{:?}", out[0]);
+        let mps_ok = matches!(
+            out[1],
+            Action::SetMpsQuota { quota, .. } if (quota - 70.0).abs() < 1e-12
+        );
+        assert!(mps_ok, "{:?}", out[1]);
+    }
+
+    #[test]
+    fn relaxation_cannot_lift_foreign_guards() {
+        let mut arb = duel_arbiter();
+        let etl = TenantId(2);
+        // Controller 0's trigger throttled the ETL tenant; controller 1
+        // tightened a quota on tenant 3.
+        arb.note_guard_owner(
+            0,
+            &[Action::SetIoThrottle {
+                tenant: etl,
+                cap_gbps: Some(0.3),
+            }],
+        );
+        arb.note_guard_owner(
+            1,
+            &[Action::SetMpsQuota {
+                tenant: TenantId(3),
+                quota: 70.0,
+            }],
+        );
+        // Controller 1's relax bundle: lifting 0's throttle is filtered
+        // out; loosening its own quota passes.
+        let kept = arb.own_guard_relaxes(
+            1,
+            &[
+                Action::SetIoThrottle {
+                    tenant: etl,
+                    cap_gbps: None,
+                },
+                Action::SetMpsQuota {
+                    tenant: TenantId(3),
+                    quota: 85.0,
+                },
+            ],
+        );
+        assert_eq!(kept.len(), 1);
+        assert!(matches!(kept[0], Action::SetMpsQuota { .. }));
+        // The owner itself may lift its throttle, which releases the
+        // ownership for whoever tightens next.
+        let lift = [Action::SetIoThrottle {
+            tenant: etl,
+            cap_gbps: None,
+        }];
+        assert_eq!(arb.own_guard_relaxes(0, &lift).len(), 1);
+        arb.clear_lifted_owners(&lift);
+        assert_eq!(
+            arb.own_guard_relaxes(1, &lift).len(),
+            1,
+            "unowned guards are anyone's to lift"
+        );
+    }
+
+    #[test]
+    fn single_controller_plane_is_pass_through() {
+        // One controller: the arbiter must emit exactly what the bare
+        // controller would.
+        let mut cfg = ControllerConfig::with_levers(Levers::placement_only());
+        cfg.warmup_obs = 0;
+        cfg.dwell_obs = 4;
+        let mut arb = Arbiter::single(cfg.clone(), TenantId(0));
+        let mut bare = Controller::for_primary(cfg, TenantId(0));
+        let view = duel_view();
+        let snap = duel_snap(25.0, 5.0);
+        for _ in 0..50 {
+            assert_eq!(
+                arb.on_observation(&snap, &view),
+                bare.on_observation(&snap, &view)
+            );
+        }
+        assert_eq!(arb.stats(), ArbStats::default());
+        assert!(!arb.is_multi());
+    }
+}

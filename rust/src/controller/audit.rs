@@ -62,8 +62,15 @@ impl AuditLog {
         self.entries.iter().filter(|e| e.action == kind).count()
     }
 
+    /// Entries on one FSM edge ("trigger", "defer", "validate-fail", …) —
+    /// the arbitration counters sum `count_edge("defer")` per controller.
+    pub fn count_edge(&self, edge: &str) -> usize {
+        self.entries.iter().filter(|e| e.edge == edge).count()
+    }
+
     /// Disruptive moves (placement + mig + rollback) per hour over a run of
-    /// `duration_s` — Table 4 reports "< 5 /hr".
+    /// `duration_s` — Table 4 reports "< 5 /hr". Deferred proposals carry
+    /// a disruptive action kind but never executed, so they don't count.
     pub fn moves_per_hour(&self, duration_s: f64) -> f64 {
         if duration_s <= 0.0 {
             return 0.0;
@@ -71,7 +78,10 @@ impl AuditLog {
         let moves = self
             .entries
             .iter()
-            .filter(|e| matches!(e.action.as_str(), "mig" | "placement" | "rollback" | "relax"))
+            .filter(|e| {
+                e.edge != "defer"
+                    && matches!(e.action.as_str(), "mig" | "placement" | "rollback" | "relax")
+            })
             .count();
         moves as f64 / (duration_s / 3600.0)
     }
@@ -96,8 +106,11 @@ mod tests {
         log.record(Decision::new(10.0, 5, "trigger", "io_throttle", 20.0, String::new()));
         log.record(Decision::new(60.0, 30, "trigger", "mig", 21.0, String::new()));
         log.record(Decision::new(90.0, 45, "validate-ok", "persist", 14.0, String::new()));
+        // A deferred move never executed: must not count toward the rate.
+        log.record(Decision::new(95.0, 48, "defer", "placement", 21.0, String::new()));
         assert_eq!(log.count_kind("mig"), 1);
         assert_eq!(log.count_kind("io_throttle"), 1);
+        assert_eq!(log.count_edge("defer"), 1);
         // 1 disruptive move in 1800 s = 2/hr.
         assert!((log.moves_per_hour(1800.0) - 2.0).abs() < 1e-12);
         assert_eq!(log.timeline().len(), 2);

@@ -5,6 +5,24 @@
 //! a validation window with rollback, then a cool-down. A relaxation path
 //! shrinks isolation again after sustained stability (and returns
 //! guardrails to their defaults).
+//!
+//! The tick is split into two halves so the multi-primary control plane
+//! ([`super::arbiter::Arbiter`]) can interpose between *wanting* and
+//! *doing*:
+//!
+//! * [`Controller::evaluate`] advances per-tick bookkeeping (observation
+//!   counter, persistence, validation/cool-down edges) and returns a
+//!   [`Proposal`] describing what the controller wants to do — without
+//!   committing any action-linked state.
+//! * [`Controller::commit`] applies the state transition tied to actually
+//!   emitting the proposal (dwell clocks, persistence reset, the
+//!   `Validating` window, audit record) and returns the actions.
+//! * [`Controller::defer`] records an arbitration loss in the audit log
+//!   and leaves all decision state untouched, so a deferred upgrade is
+//!   re-planned — against the *current* host state — on the next tick.
+//!
+//! [`Controller::on_observation`] is `evaluate` + `commit` fused, which
+//! is exactly the pre-arbiter single-primary behavior.
 
 use crate::gpu::MigProfile;
 use crate::telemetry::SignalSnapshot;
@@ -31,6 +49,49 @@ pub enum CtlState {
     Cooldown { until_obs: u64 },
 }
 
+/// How a [`Proposal`] interacts with arbitration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProposalClass {
+    /// Validation-mandated rollback: the FSM edge already happened, the
+    /// action must reach the platform. Never arbitrated.
+    Mandatory,
+    /// Lightweight guardrail (MPS quota / IO throttle): non-disruptive,
+    /// commits immediately (the arbiter only reconciles duplicates).
+    Guardrail,
+    /// Disruptive isolation upgrade (move / resize): subject to
+    /// arbitration when several controllers compete.
+    Upgrade,
+    /// Relaxation bundle after sustained stability. May contain a
+    /// disruptive shrink, which is held while another tenant's change is
+    /// still under validation.
+    Relax,
+}
+
+/// What one controller wants to do this tick, before arbitration.
+#[derive(Clone, Debug)]
+pub struct Proposal {
+    /// Actions to apply if the proposal wins, in order.
+    pub actions: Vec<Action>,
+    pub class: ProposalClass,
+    /// Audit fields recorded on commit.
+    pub edge: &'static str,
+    pub kind: &'static str,
+    pub detail: String,
+    /// p99 at decision time (also the `prev_p99` a validation window
+    /// compares against for upgrades).
+    pub p99_ms: f64,
+    /// Arbitration priority: tail-to-SLO ratio `p99 / τ` — the tenant
+    /// hurting worst relative to its own SLO wins (ties: tenant index).
+    pub ratio: f64,
+}
+
+impl Proposal {
+    /// Does committing this proposal pause a tenant somewhere?
+    pub fn is_disruptive(&self) -> bool {
+        self.actions.iter().any(Action::is_disruptive)
+    }
+}
+
 /// The multi-tenancy controller.
 pub struct Controller {
     pub cfg: ControllerConfig,
@@ -46,6 +107,10 @@ pub struct Controller {
     weights: ScoreWeights,
     audit: AuditLog,
     primary: TenantId,
+    /// Baseline throughput for the ≥95% budget check. `None` falls back
+    /// to `PlannerView::primary_base_rps` (the single-primary path);
+    /// secondary controllers in a multi-primary plane carry their own.
+    base_rps: Option<f64>,
 }
 
 impl Controller {
@@ -69,7 +134,16 @@ impl Controller {
             weights: ScoreWeights::default(),
             audit: AuditLog::new(),
             primary,
+            base_rps: None,
         }
+    }
+
+    /// Set this controller's own baseline throughput (req/s) for the
+    /// throughput-budget check — used by the multi-primary control plane,
+    /// where `PlannerView::primary_base_rps` describes a different tenant.
+    pub fn with_base_rps(mut self, rps: f64) -> Controller {
+        self.base_rps = Some(rps);
+        self
     }
 
     /// Which tenant this controller protects.
@@ -103,17 +177,34 @@ impl Controller {
         let Some(t1) = snap.tenant(self.primary) else {
             return false;
         };
-        t1.tails.rps >= (1.0 - self.cfg.throughput_budget) * view.primary_base_rps
+        let base = self.base_rps.unwrap_or(view.primary_base_rps);
+        t1.tails.rps >= (1.0 - self.cfg.throughput_budget) * base
     }
 
     /// One observation tick (Algorithm 1 `OnObservation`). Returns the
-    /// actions the platform must apply, in order.
+    /// actions the platform must apply, in order. Equivalent to
+    /// [`Controller::evaluate`] immediately followed by
+    /// [`Controller::commit`] — the single-primary path.
     pub fn on_observation(&mut self, snap: &SignalSnapshot, view: &PlannerView) -> Vec<Action> {
+        match self.evaluate(snap, view) {
+            Some(p) => self.commit(snap.t, &p),
+            None => Vec::new(),
+        }
+    }
+
+    /// First half of a tick: advance per-observation bookkeeping
+    /// (observation counter, persistence streak, validation/cool-down
+    /// edges — including their audit entries, since those transitions
+    /// are mandatory) and decide what this controller *wants* to do.
+    /// Proposal-linked state (dwell clocks, persistence reset, the
+    /// `Validating` window, the trigger/stable audit record) is NOT
+    /// touched — that happens in [`Controller::commit`], or not at all
+    /// if the arbiter defers.
+    pub fn evaluate(&mut self, snap: &SignalSnapshot, view: &PlannerView) -> Option<Proposal> {
         self.obs += 1;
-        let Some(t1sig) = snap.tenant(self.primary) else {
-            return Vec::new();
-        };
+        let t1sig = snap.tenant(self.primary)?;
         let p99 = t1sig.tails.p99_ms;
+        let ratio = p99 / self.cfg.tau_ms;
         let triggered = self.persistence.observe(p99) && t1sig.tails.completed > 0;
         if p99 <= self.cfg.tau_ms * self.cfg.relax_frac && t1sig.tails.completed > 0 {
             self.stable_streak += 1;
@@ -126,22 +217,33 @@ impl Controller {
             CtlState::Validating { started_obs, prev_p99 } => {
                 if self.obs - started_obs >= self.cfg.validation_obs {
                     if p99 > prev_p99 * 1.02 && t1sig.tails.completed > 0 {
-                        // Post-change p99 worsened: roll back (§2.4).
+                        // Post-change p99 worsened: roll back (§2.4). The
+                        // FSM edge is taken here — a rollback is mandatory
+                        // and never arbitrated away.
                         self.state = CtlState::Cooldown {
                             until_obs: self.obs + self.cfg.cooldown_obs,
                         };
                         let act = Action::Rollback {
                             tenant: self.primary,
                         };
+                        let kind = act.kind();
                         self.audit.record(Decision::new(
                             snap.t,
                             self.obs,
                             "validate-fail",
-                            act.kind(),
+                            kind,
                             p99,
                             format!("p99 {p99:.2} > pre-change {prev_p99:.2}"),
                         ));
-                        return vec![act];
+                        return Some(Proposal {
+                            actions: vec![act],
+                            class: ProposalClass::Mandatory,
+                            edge: "validate-fail",
+                            kind,
+                            detail: String::new(),
+                            p99_ms: p99,
+                            ratio,
+                        });
                     }
                     self.audit.record(Decision::new(
                         snap.t,
@@ -155,25 +257,25 @@ impl Controller {
                         until_obs: self.obs + self.cfg.cooldown_obs,
                     };
                 }
-                return Vec::new();
+                return None;
             }
             CtlState::Cooldown { until_obs } => {
                 if self.obs >= until_obs {
                     self.state = CtlState::Stable;
                 } else {
-                    return Vec::new(); // is_cooling_down(): no actions.
+                    return None; // is_cooling_down(): no actions.
                 }
             }
             CtlState::Stable => {}
         }
 
         if !self.cfg.levers.any() {
-            return Vec::new(); // static baseline: observe only.
+            return None; // static baseline: observe only.
         }
         // Warmup: tiny cold-start windows produce noisy quantiles; never
         // act on them (a real deployment samples for a minute first).
         if self.obs < self.cfg.warmup_obs {
-            return Vec::new();
+            return None;
         }
 
         // --- escalation on persistent violation ----------------------------
@@ -182,18 +284,15 @@ impl Controller {
             // Rung 1: guardrails (lightweight, non-disruptive).
             if self.cfg.levers.guardrails && self.guard_dwell_ok() {
                 if let Some(act) = self.try_guardrail(cause, snap, view) {
-                    self.last_guard_obs = self.obs as i64;
-                    self.guard_attempts += 1;
-                    self.persistence.reset(); // give the guard Y windows to work
-                    self.audit.record(Decision::new(
-                        snap.t,
-                        self.obs,
-                        "trigger",
-                        act.kind(),
-                        p99,
-                        format!("{cause:?}"),
-                    ));
-                    return vec![act];
+                    return Some(Proposal {
+                        edge: "trigger",
+                        kind: act.kind(),
+                        detail: format!("{cause:?}"),
+                        actions: vec![act],
+                        class: ProposalClass::Guardrail,
+                        p99_ms: p99,
+                        ratio,
+                    });
                 }
             }
             // Rungs 2-3: isolation upgrade (move first, then resize —
@@ -205,25 +304,18 @@ impl Controller {
             let material = t1sig.tails.miss_rate > self.cfg.material_miss;
             if self.dwell_ok() && material {
                 if let Some(act) = self.plan_isolation_upgrade(cause, snap, view) {
-                    self.last_disruptive_obs = self.obs as i64;
-                    self.guard_attempts = 0;
-                    self.persistence.reset();
-                    self.state = CtlState::Validating {
-                        started_obs: self.obs,
-                        prev_p99: p99,
-                    };
-                    self.audit.record(Decision::new(
-                        snap.t,
-                        self.obs,
-                        "trigger",
-                        act.kind(),
-                        p99,
-                        format!("{cause:?}"),
-                    ));
-                    return vec![act];
+                    return Some(Proposal {
+                        edge: "trigger",
+                        kind: act.kind(),
+                        detail: format!("{cause:?}"),
+                        actions: vec![act],
+                        class: ProposalClass::Upgrade,
+                        p99_ms: p99,
+                        ratio,
+                    });
                 }
             }
-            return Vec::new();
+            return None;
         }
 
         // --- relaxation path -----------------------------------------------
@@ -232,11 +324,17 @@ impl Controller {
             && self.throughput_ok(snap, view)
         {
             let mut acts = Vec::new();
-            // Return guardrails toward defaults first (cheap).
+            // Return guardrails toward defaults first (cheap). Propose a
+            // lift for *every* active throttle: under multi-primary
+            // arbitration, ownership filtering keeps only the ones this
+            // controller applied — a first-match scan could wedge on a
+            // foreign guard forever. (Single-primary runs never hold more
+            // than one throttle at once: the guard dwell outlasts the
+            // bounded throttle window.)
             if self.cfg.levers.guardrails {
-                if let Some(t2v) = view.tenants.iter().find(|t| t.io_throttle_gbps.is_some()) {
+                for tv in view.tenants.iter().filter(|t| t.io_throttle_gbps.is_some()) {
                     acts.push(Action::SetIoThrottle {
-                        tenant: t2v.tenant,
+                        tenant: tv.tenant,
                         cap_gbps: None,
                     });
                 }
@@ -257,24 +355,75 @@ impl Controller {
                 }
             }
             if !acts.is_empty() {
+                return Some(Proposal {
+                    edge: "stable",
+                    kind: acts[0].kind(),
+                    detail: "relaxation".to_string(),
+                    actions: acts,
+                    class: ProposalClass::Relax,
+                    p99_ms: p99,
+                    ratio,
+                });
+            }
+        }
+
+        None
+    }
+
+    /// Second half of a tick: take the state transition tied to actually
+    /// emitting `p` (dwell clocks, persistence reset, validation window,
+    /// audit record) and return its actions for the platform.
+    pub fn commit(&mut self, t: f64, p: &Proposal) -> Vec<Action> {
+        match p.class {
+            // Rollbacks took their FSM edge (and audit entry) in
+            // `evaluate`; nothing further to record.
+            ProposalClass::Mandatory => return p.actions.clone(),
+            ProposalClass::Guardrail => {
+                self.last_guard_obs = self.obs as i64;
+                self.guard_attempts += 1;
+                self.persistence.reset(); // give the guard Y windows to work
+            }
+            ProposalClass::Upgrade => {
+                self.last_disruptive_obs = self.obs as i64;
+                self.guard_attempts = 0;
+                self.persistence.reset();
+                self.state = CtlState::Validating {
+                    started_obs: self.obs,
+                    prev_p99: p.p99_ms,
+                };
+            }
+            ProposalClass::Relax => {
                 self.stable_streak = 0;
                 self.last_disruptive_obs = self.obs as i64;
                 self.state = CtlState::Cooldown {
                     until_obs: self.obs + self.cfg.cooldown_obs,
                 };
-                self.audit.record(Decision::new(
-                    snap.t,
-                    self.obs,
-                    "stable",
-                    acts[0].kind(),
-                    p99,
-                    "relaxation".to_string(),
-                ));
-                return acts;
             }
         }
+        self.audit.record(Decision::new(
+            t,
+            self.obs,
+            p.edge,
+            p.kind,
+            p.p99_ms,
+            p.detail.clone(),
+        ));
+        p.actions.clone()
+    }
 
-        Vec::new()
+    /// Record an arbitration loss: the proposal is *deferred*, not
+    /// dropped. Decision state stays untouched (persistence keeps firing,
+    /// the dwell clock is not consumed), so the controller re-plans
+    /// against the post-winner host state on a later tick.
+    pub fn defer(&mut self, t: f64, p: &Proposal, winner: TenantId) {
+        self.audit.record(Decision::new(
+            t,
+            self.obs,
+            "defer",
+            p.kind,
+            p.p99_ms,
+            format!("lost arbitration to tenant {}", winner.0),
+        ));
     }
 
     /// Rung 1: choose a guardrail for the diagnosed cause.

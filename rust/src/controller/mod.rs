@@ -14,11 +14,17 @@
 //! cool-down, and a post-change validation window with rollback to the
 //! last-known-good configuration (§2.4).
 //!
+//! Hosts with several latency-sensitive tenants run one controller per
+//! protected tenant under the [`arbiter`] — the multi-primary control
+//! plane that resolves conflicting isolation upgrades deterministically
+//! (worst tail-to-SLO ratio wins; losers are deferred, never dropped).
+//!
 //! The controller is *pure* with respect to the platform: it consumes a
 //! [`crate::telemetry::SignalSnapshot`] plus a [`view::PlannerView`] and
 //! emits [`actions::Action`]s. That separation is the "fabric-agnostic,
 //! VM-deployable" property — the same decision logic drives the simulated
-//! host and the local serving engine.
+//! host and the local serving engine. See `docs/ARCHITECTURE.md` for the
+//! full control-loop data flow.
 
 pub mod config;
 pub mod actions;
@@ -27,11 +33,13 @@ pub mod diagnose;
 pub mod placement;
 pub mod guardrails;
 pub mod fsm;
+pub mod arbiter;
 pub mod audit;
 pub mod admission;
 
 pub use actions::{Action, IsolationChange};
+pub use arbiter::{ArbStats, Arbiter, Protected};
 pub use audit::{AuditLog, Decision};
 pub use config::{ControllerConfig, Levers};
-pub use fsm::{Controller, CtlState};
+pub use fsm::{Controller, CtlState, Proposal, ProposalClass};
 pub use view::{InstanceView, PlannerView, TenantView};

@@ -1,4 +1,6 @@
-//! Experiment runners — one per paper table/figure (see DESIGN.md index).
+//! Experiment runners — one per paper table/figure (the module map and
+//! paper-section index live in `docs/ARCHITECTURE.md`), plus the
+//! arbitration ablation for the multi-primary control plane.
 
 use crate::controller::Levers;
 use crate::fabric::ps::{ps_rates, FlowDemand};
@@ -253,6 +255,82 @@ pub fn run_fig4(repeats: &Repeats) -> String {
     out
 }
 
+/// Arbitration ablation: single-primary (only the designated primary is
+/// actively protected; other latency-sensitive tenants are monitored
+/// only) vs the multi-primary control plane (`protect_all_ls`: one
+/// controller per LS tenant + arbiter) on the multi-LS catalog
+/// scenarios. Reports per-LS-tenant SLO miss rates plus the committed
+/// action and arbitration-deferral counts, averaged over the repeat set.
+pub fn run_arbitration(repeats: &Repeats) -> String {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for name in ["multi_ls_slo_mix", "dueling_primaries"] {
+        for protect in [false, true] {
+            let mode = if protect { "multi-primary" } else { "single-primary" };
+            // (miss%, actions, deferrals) per LS tenant, summed over seeds.
+            let mut per_ls: Vec<(String, f64, usize, usize)> = Vec::new();
+            let mut conflicts = 0u64;
+            let mut deferrals = 0u64;
+            let mut runs = 0usize;
+            for &seed in repeats.active_seeds() {
+                let mut s = Scenario::by_name(name, seed, Levers::full())
+                    .expect("catalog name must resolve");
+                s.protect_all_ls = protect;
+                s.horizon = repeats.horizon_s;
+                let r = crate::platform::SimWorld::new(s).run();
+                conflicts += r.arb_conflicts;
+                deferrals += r.arb_deferrals;
+                runs += 1;
+                let mut k = 0;
+                for t in &r.per_tenant {
+                    if t.slo_ms >= f64::MAX {
+                        continue; // background tenant
+                    }
+                    let ctl = r.controller_stats.iter().find(|c| c.tenant == t.tenant);
+                    let acts = ctl.map(|c| c.total_actions()).unwrap_or(0);
+                    let defs = ctl.map(|c| c.deferrals).unwrap_or(0);
+                    if k == per_ls.len() {
+                        per_ls.push((t.name.clone(), 0.0, 0, 0));
+                    }
+                    per_ls[k].1 += t.miss_rate * 100.0;
+                    per_ls[k].2 += acts;
+                    per_ls[k].3 += defs;
+                    k += 1;
+                }
+            }
+            let n = runs.max(1) as f64;
+            for (tenant, miss_sum, acts, defs) in &per_ls {
+                rows.push(vec![
+                    name.to_string(),
+                    mode.to_string(),
+                    tenant.clone(),
+                    format!("{:.1}%", miss_sum / n),
+                    format!("{:.1}", *acts as f64 / n),
+                    format!("{:.1}", *defs as f64 / n),
+                ]);
+            }
+            rows.push(vec![
+                name.to_string(),
+                mode.to_string(),
+                "(host total)".to_string(),
+                "-".to_string(),
+                format!("conflicts {:.1}", conflicts as f64 / n),
+                format!("deferrals {:.1}", deferrals as f64 / n),
+            ]);
+        }
+    }
+    markdown_table(
+        &[
+            "Scenario",
+            "Control plane",
+            "LS tenant",
+            "SLO miss",
+            "actions/run",
+            "deferrals/run",
+        ],
+        &rows,
+    )
+}
+
 /// E3: sensitivity sweep over τ and Y (+ guardrail bounds).
 pub fn run_sensitivity(repeats: &Repeats) -> String {
     let mut rows = Vec::new();
@@ -345,6 +423,15 @@ mod tests {
         let n4 = &rows[3];
         assert!(n4[3] > n4[1], "victim {} !> fair {}", n4[3], n4[1]);
         assert!((n4[2] - 2.0).abs() < 1e-9, "offender capped at 2");
+    }
+
+    #[test]
+    fn arbitration_ablation_renders_both_modes() {
+        let t = run_arbitration(&tiny());
+        assert!(t.contains("single-primary") && t.contains("multi-primary"));
+        assert!(t.contains("multi_ls_slo_mix") && t.contains("dueling_primaries"));
+        assert!(t.contains("chat-api") && t.contains("svc-gold"));
+        assert!(t.contains("(host total)"));
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! a latency-sensitive tenant inside its SLO on shared A100 hosts, plus a
 //! vLLM-like serving engine for the paper's LLM/TTFT case study.
 //!
-//! The crate is the L3 of a three-layer stack (see DESIGN.md):
+//! The crate is the L3 of a three-layer stack (architecture notes and
+//! the module map live in `docs/ARCHITECTURE.md`):
 //!
 //! * **L3 (this crate)** — the controller, the simulated testbed (A100/MIG
 //!   geometry, PCIe processor-sharing fabric, NUMA topology, tenants,

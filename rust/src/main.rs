@@ -9,6 +9,7 @@
 //!   llm          regenerate Table 2 (LLM TTFT case study)
 //!   overheads    regenerate Table 4
 //!   sensitivity  regenerate E3
+//!   arbitration  single-primary vs multi-primary control plane ablation
 //!   figures      regenerate Figure 2/3/4 series (CSV under target/paper/)
 //!   cluster      run the 2-node (16-GPU) cluster experiment (E9); with
 //!                --fleet, the leader splits one auto-placed tenant list
@@ -24,7 +25,7 @@ use predserve::platform::{Scenario, SimWorld};
 use predserve::serving::request::SamplingParams;
 use predserve::serving::Engine;
 
-const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
+const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
 
 fn repeats(args: &Args) -> Repeats {
     let mut r = if args.flag("fast") {
@@ -121,6 +122,29 @@ fn main() -> Result<()> {
                     t.gb_moved
                 );
             }
+            if !r.controller_stats.is_empty() {
+                println!(
+                    "control plane: {} controller(s), arbitration conflicts={} deferrals={}",
+                    r.controller_stats.len(),
+                    r.arb_conflicts,
+                    r.arb_deferrals
+                );
+                for c in &r.controller_stats {
+                    let kinds: Vec<String> = c
+                        .actions
+                        .iter()
+                        .map(|(k, n)| format!("{k}={n}"))
+                        .collect();
+                    println!(
+                        "  {:16} tau={:6.1} ms actions={:3} deferred={:3}  [{}]",
+                        c.name,
+                        c.tau_ms,
+                        c.total_actions(),
+                        c.deferrals,
+                        kinds.join(", ")
+                    );
+                }
+            }
             for (t, kind, p99) in &r.timeline {
                 println!("  t={t:7.1}s {kind:12} p99={p99:.1}ms");
             }
@@ -193,6 +217,9 @@ fn main() -> Result<()> {
         }
         "sensitivity" => {
             println!("{}", runs::run_sensitivity(&repeats(&args)));
+        }
+        "arbitration" => {
+            println!("{}", runs::run_arbitration(&repeats(&args)));
         }
         "figures" => {
             let r = repeats(&args);

@@ -17,6 +17,6 @@ pub mod result;
 pub mod scenario;
 pub mod sim_platform;
 
-pub use result::{RunResult, TenantRunStats};
+pub use result::{RunResult, TenantControllerStats, TenantRunStats};
 pub use scenario::{Scenario, ScenarioBuilder};
 pub use sim_platform::SimWorld;

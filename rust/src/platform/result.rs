@@ -24,6 +24,29 @@ pub struct TenantRunStats {
     pub gb_moved: f64,
 }
 
+/// Per-controller statistics for one protected latency-sensitive tenant
+/// (one entry per controller in the run's control plane — exactly one on
+/// the legacy single-primary path, one per LS tenant with
+/// `protect_all_ls`).
+#[derive(Clone, Debug)]
+pub struct TenantControllerStats {
+    pub tenant: TenantId,
+    pub name: String,
+    /// Tail threshold τ this controller enforced (ms).
+    pub tau_ms: f64,
+    /// Action counts by kind, from this controller's audit log.
+    pub actions: Vec<(String, usize)>,
+    /// Times this controller's proposal lost arbitration (edge "defer").
+    pub deferrals: usize,
+}
+
+impl TenantControllerStats {
+    /// Total committed actions across kinds.
+    pub fn total_actions(&self) -> usize {
+        self.actions.iter().map(|(_, c)| c).sum()
+    }
+}
+
 /// Aggregated result of one simulated run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -65,6 +88,13 @@ pub struct RunResult {
     pub mean_sm_util: f64,
     /// Primary p99 timeseries sampled at Δ (Figure 3a upper panel).
     pub p99_series: Vec<(f64, f64)>,
+    /// Per-controller stats: one entry per protected LS tenant (a single
+    /// entry on the legacy single-primary path; empty without levers).
+    pub controller_stats: Vec<TenantControllerStats>,
+    /// Arbitration: ticks where two or more isolation upgrades competed.
+    pub arb_conflicts: u64,
+    /// Arbitration: total deferred proposals (losses + validation holds).
+    pub arb_deferrals: u64,
 }
 
 impl RunResult {
@@ -117,6 +147,19 @@ impl RunResult {
         }
         for (t, kind, p99) in &self.timeline {
             let _ = write!(s, ";@{:x}:{kind}:{:x}", t.to_bits(), p99.to_bits());
+        }
+        // Multi-primary runs also pin the control plane's determinism
+        // surface. Guarded so single-primary fingerprints stay
+        // byte-identical to the pre-arbiter format (the regression tests
+        // rely on that).
+        if self.controller_stats.len() > 1 || self.arb_deferrals > 0 {
+            let _ = write!(s, ";arb:{}:{}", self.arb_conflicts, self.arb_deferrals);
+            for cs in &self.controller_stats {
+                let _ = write!(s, ";ctl{}:{}:{}", cs.tenant.0, cs.total_actions(), cs.deferrals);
+                for (kind, count) in &cs.actions {
+                    let _ = write!(s, ",{kind}={count}");
+                }
+            }
         }
         s
     }

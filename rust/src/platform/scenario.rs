@@ -36,6 +36,13 @@ pub struct Scenario {
     pub spares: Vec<(usize, MigProfile, usize)>,
     /// Index of the controller's primary latency-sensitive tenant.
     pub primary: usize,
+    /// Multi-primary control plane: run one controller per
+    /// latency-sensitive tenant, coordinated by the arbiter
+    /// (`controller::arbiter`). `false` (the default, and the setting for
+    /// the paper's catalog entries) keeps the legacy single-primary path:
+    /// only `primary` is actively protected, other LS tenants are
+    /// monitored and reported.
+    pub protect_all_ls: bool,
     /// Run horizon (sim seconds).
     pub horizon: f64,
     /// Controller sampling interval Δ (§2.1: 1-5 s).
@@ -99,7 +106,7 @@ impl Scenario {
     // --- named catalog ----------------------------------------------------
 
     /// Catalog names accepted by [`Scenario::by_name`].
-    pub const CATALOG: [&'static str; 7] = [
+    pub const CATALOG: [&'static str; 8] = [
         "paper_single_host",
         "paper_llm_case",
         "steady_contention",
@@ -107,6 +114,7 @@ impl Scenario {
         "pcie_hotspot",
         "diurnal_burst",
         "auto_pack_24",
+        "dueling_primaries",
     ];
 
     /// Look a scenario up by catalog name ("single" and "llm" are accepted
@@ -125,6 +133,7 @@ impl Scenario {
             "pcie_hotspot" => Scenario::pcie_hotspot(seed, levers),
             "diurnal_burst" => Scenario::diurnal_burst(seed, levers),
             "auto_pack_24" => Scenario::auto_pack_24(seed, levers),
+            "dueling_primaries" => Scenario::dueling_primaries(seed, levers),
             _ => return None,
         })
     }
@@ -201,9 +210,11 @@ impl Scenario {
 
     /// Two latency-sensitive tenants with distinct SLOs (interactive chat
     /// vs relaxed batch API) sharing the host with the paper's two
-    /// interferers. Exercises per-tenant SLO accounting: the controller
-    /// protects the primary while the second service's tails are reported
-    /// independently.
+    /// interferers. A real multi-controller scenario since the
+    /// multi-primary control plane landed: `protect_all_ls` gives *every*
+    /// latency-sensitive tenant its own controller (τ = its SLO),
+    /// coordinated by the arbiter; the batch service's tails are actively
+    /// protected, not just reported.
     pub fn multi_ls_slo_mix(seed: u64, levers: Levers) -> Scenario {
         let horizon = 1800.0;
         let (etl_schedule, train_schedule) = Scenario::paper_interference_schedules(seed, horizon);
@@ -220,6 +231,7 @@ impl Scenario {
         };
         ScenarioBuilder::new("multi_ls_slo_mix", seed)
             .levers(levers)
+            .protect_all_ls()
             .horizon(horizon)
             .tenant(TenantWorkload::latency_sensitive(
                 "chat-api",
@@ -437,6 +449,59 @@ impl Scenario {
         }
         b.build()
     }
+
+    /// Arbitration stress case: two equally-entitled latency-sensitive
+    /// services ("gold" and "silver"), each MPS-co-scheduled with its own
+    /// trainer on the same PCIe switch, plus an ETL tenant hammering the
+    /// NUMA-0 NVMe path — and exactly **one** spare instance on the cool
+    /// switch. Under `protect_all_ls` both controllers escalate toward
+    /// the same escape slot; the arbiter decides who goes first (worst
+    /// tail-to-SLO ratio) and the loser's upgrade is deferred, not
+    /// dropped. The periodic trainer schedules overlap most of the time
+    /// so both tenants hurt simultaneously.
+    pub fn dueling_primaries(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        let gold = LsSpec::default(); // 80 rps, 15 ms SLO
+        let silver = LsSpec {
+            arrival_rps: 70.0,
+            slo_ms: 15.0,
+            ..LsSpec::default()
+        };
+        ScenarioBuilder::new("dueling_primaries", seed)
+            .levers(levers)
+            .protect_all_ls()
+            .horizon(horizon)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc-gold",
+                gold,
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc-silver",
+                silver,
+                PlacementSpec::dedicated_at(1, MigProfile::P3g40gb, 0),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl-storm",
+                BwSpec::default(),
+                InterferenceSchedule::periodic(horizon, 240.0, 0.7, 120.0),
+                PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train-gold",
+                CompSpec::default(),
+                InterferenceSchedule::periodic(horizon, 300.0, 0.75, 0.0),
+                PlacementSpec::shared_with(0),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train-silver",
+                CompSpec::default(),
+                InterferenceSchedule::periodic(horizon, 300.0, 0.75, 60.0),
+                PlacementSpec::shared_with(1),
+            ))
+            .spare(4, MigProfile::P3g40gb, 0)
+            .build()
+    }
 }
 
 /// Composable scenario construction; see the README's "Defining a
@@ -444,6 +509,39 @@ impl Scenario {
 /// latency-sensitive tenant; MPS sharing must reference an earlier
 /// tenant), resolves shared placements, and runs the topology-aware
 /// allocator (`crate::alloc`) over every `PlacementSpec::auto` tenant.
+///
+/// # Example
+///
+/// ```
+/// use predserve::controller::Levers;
+/// use predserve::gpu::MigProfile;
+/// use predserve::platform::ScenarioBuilder;
+/// use predserve::tenants::{
+///     CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantWorkload,
+/// };
+///
+/// let scenario = ScenarioBuilder::new("example", 42)
+///     .levers(Levers::full())
+///     .protect_all_ls() // one controller per latency-sensitive tenant
+///     .horizon(600.0)
+///     .tenant(TenantWorkload::latency_sensitive(
+///         "api",
+///         LsSpec { arrival_rps: 70.0, slo_ms: 15.0, ..LsSpec::default() },
+///         PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+///     ))
+///     .tenant(TenantWorkload::compute_heavy(
+///         "trainer",
+///         CompSpec::default(),
+///         InterferenceSchedule::periodic(600.0, 120.0, 0.5, 30.0),
+///         PlacementSpec::shared_with(0), // MPS on the api's instance
+///     ))
+///     .spare(4, MigProfile::P3g40gb, 0) // headroom for the placement lever
+///     .build();
+///
+/// assert_eq!(scenario.n_tenants(), 2);
+/// assert!(scenario.protect_all_ls);
+/// assert!(scenario.layout.all_placed());
+/// ```
 #[derive(Clone, Debug)]
 pub struct ScenarioBuilder {
     name: String,
@@ -452,6 +550,7 @@ pub struct ScenarioBuilder {
     tenants: Vec<TenantWorkload>,
     spares: Vec<(usize, MigProfile, usize)>,
     primary: Option<usize>,
+    protect_all_ls: bool,
     horizon: f64,
     sample_dt: f64,
     controller: ControllerConfig,
@@ -469,6 +568,7 @@ impl ScenarioBuilder {
             tenants: Vec::new(),
             spares: Vec::new(),
             primary: None,
+            protect_all_ls: false,
             horizon: 1800.0,
             sample_dt: 2.0,
             controller: ControllerConfig::with_levers(Levers::full()),
@@ -548,6 +648,16 @@ impl ScenarioBuilder {
     /// latency-sensitive tenant).
     pub fn primary(mut self, idx: usize) -> Self {
         self.primary = Some(idx);
+        self
+    }
+
+    /// Protect *every* latency-sensitive tenant with its own controller
+    /// (τ = the tenant's SLO; the designated primary keeps the scenario's
+    /// τ), coordinated by the arbitration control plane. Without this,
+    /// only the primary is actively controlled — the paper's
+    /// single-primary setup.
+    pub fn protect_all_ls(mut self) -> Self {
+        self.protect_all_ls = true;
         self
     }
 
@@ -632,6 +742,7 @@ impl ScenarioBuilder {
             tenants,
             spares: self.spares,
             primary,
+            protect_all_ls: self.protect_all_ls,
             horizon: self.horizon,
             sample_dt: self.sample_dt,
             controller: self.controller,
@@ -968,6 +1079,38 @@ mod tests {
             let rendered = s.layout.render();
             assert!(rendered.contains("link0"), "{name}: {rendered}");
         }
+    }
+
+    #[test]
+    fn multi_controller_catalog_entries_protect_all_ls() {
+        assert!(Scenario::multi_ls_slo_mix(3, Levers::full()).protect_all_ls);
+        assert!(Scenario::dueling_primaries(3, Levers::full()).protect_all_ls);
+        // The paper's scenarios keep the legacy single-primary default
+        // (seed-identical RNG streams and event order).
+        assert!(!Scenario::paper_single_host(3, Levers::full()).protect_all_ls);
+        assert!(!Scenario::paper_llm_case(3, Levers::full()).protect_all_ls);
+        assert!(!Scenario::pcie_hotspot(3, Levers::full()).protect_all_ls);
+        assert!(!Scenario::auto_pack_24(3, Levers::full()).protect_all_ls);
+    }
+
+    #[test]
+    fn dueling_primaries_shape() {
+        let s = Scenario::dueling_primaries(7, Levers::full());
+        assert_eq!(s.n_tenants(), 5);
+        assert_eq!(s.primary, 0);
+        // Two LS services, each MPS-sharing with its own trainer.
+        assert_eq!(s.tenants[0].kind(), TenantKind::LatencySensitive);
+        assert_eq!(s.tenants[1].kind(), TenantKind::LatencySensitive);
+        assert_eq!(s.tenants[3].placement.share_with, Some(0));
+        assert_eq!(s.tenants[4].placement.share_with, Some(1));
+        // Both LS tenants sit on the same PCIe switch; the spare is on
+        // the other NUMA domain (the single contested escape slot).
+        assert!(s.topo.share_switch(
+            s.tenants[0].placement.gpu,
+            s.tenants[1].placement.gpu
+        ));
+        assert_eq!(s.spares.len(), 1);
+        assert_eq!(s.topo.numa_of_gpu(s.spares[0].0), 1);
     }
 
     #[test]

@@ -2,11 +2,15 @@
 //!
 //! Generalizes the paper's §3.1 setup to N tenants: one p4d-style host
 //! running any mix of latency-sensitive, bandwidth-heavy and
-//! compute-heavy [`crate::tenants::TenantWorkload`]s, with the
-//! controller sampling
-//! signals every Δ and acting through the §2.2 decision space. The
-//! paper's fixed T1/T2/T3 world is just the `paper_single_host` catalog
-//! scenario.
+//! compute-heavy [`crate::tenants::TenantWorkload`]s, with the control
+//! plane sampling signals every Δ and acting through the §2.2 decision
+//! space. The paper's fixed T1/T2/T3 world is just the
+//! `paper_single_host` catalog scenario. With
+//! `Scenario::protect_all_ls`, every latency-sensitive tenant gets its
+//! own controller behind the arbiter
+//! ([`crate::controller::arbiter::Arbiter`]); otherwise only
+//! `scenario.primary` is actively protected (the legacy single-primary
+//! path, byte-identical to the pre-arbiter behavior).
 //!
 //! Interference channels (all emergent, none scripted):
 //! * Bandwidth-heavy NVMe reads + H2D/D2H bursts share the PS fabric
@@ -28,7 +32,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::controller::view::{InstanceView, TenantView};
-use crate::controller::{Action, Controller, IsolationChange, PlannerView};
+use crate::controller::{Action, Arbiter, IsolationChange, PlannerView, Protected};
 use crate::fabric::{Fabric, FlowId};
 use crate::gpu::{A100Gpu, InstanceId, MigProfile};
 use crate::sim::EventQueue;
@@ -37,7 +41,7 @@ use crate::telemetry::TenantMonitor;
 use crate::tenants::{TenantId, TenantKind, WorkloadSpec};
 use crate::util::rng::Pcg64;
 
-use super::result::{RunResult, TenantRunStats};
+use super::result::{RunResult, TenantControllerStats, TenantRunStats};
 use super::scenario::Scenario;
 
 /// What a completing fabric flow was doing, tagged by tenant index.
@@ -84,9 +88,13 @@ struct Placement {
     numa: usize,
 }
 
-/// Saved last-known-good config for rollback.
+/// Saved last-known-good config for rollback, tagged with the tenant
+/// whose isolation change created it: only that tenant's controller may
+/// restore it (the arbiter serializes in-flight changes, so ownership is
+/// unique while a validation window is open).
 #[derive(Clone, Debug)]
 struct SavedConfig {
+    owner: usize,
     gpus: Vec<A100Gpu>,
     placements: Vec<Placement>,
 }
@@ -208,8 +216,10 @@ pub struct SimWorld {
     sm_util_samples: u64,
     p99_series: Vec<(f64, f64)>,
 
-    // Controller + bookkeeping.
-    controller: Option<Controller>,
+    // Control plane + bookkeeping. Legacy scenarios run a single-entry
+    // arbiter (a transparent pass-through); `protect_all_ls` scenarios
+    // run one controller per latency-sensitive tenant.
+    control: Option<Arbiter>,
     controller_wall_s: f64,
     last_good: Option<SavedConfig>,
     reconfig_durations: Vec<f64>,
@@ -310,8 +320,29 @@ impl SimWorld {
 
         let fabric = Fabric::new(&scenario.topo);
         let n_links = scenario.topo.num_links;
-        let controller = scenario.controller.levers.any().then(|| {
-            Controller::for_primary(scenario.controller.clone(), TenantId(scenario.primary))
+        let control = scenario.controller.levers.any().then(|| {
+            if scenario.protect_all_ls {
+                // One controller per latency-sensitive tenant. The
+                // designated primary keeps the scenario's τ (authors may
+                // have tuned it, e.g. the LLM/TTFT case); secondaries run
+                // against their own SLO.
+                let protected: Vec<Protected> = scenario
+                    .tenants
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, t)| {
+                        let spec = t.spec.as_ls()?;
+                        Some(Protected {
+                            tenant: TenantId(i),
+                            tau_ms: (i != scenario.primary).then_some(spec.slo_ms),
+                            base_rps: spec.arrival_rps,
+                        })
+                    })
+                    .collect();
+                Arbiter::multi(&scenario.controller, &protected)
+            } else {
+                Arbiter::single(scenario.controller.clone(), TenantId(scenario.primary))
+            }
         });
 
         let mut w = SimWorld {
@@ -335,7 +366,7 @@ impl SimWorld {
             sm_util_integral: 0.0,
             sm_util_samples: 0,
             p99_series: Vec::new(),
-            controller,
+            control,
             controller_wall_s: 0.0,
             last_good: None,
             reconfig_durations: Vec::new(),
@@ -711,8 +742,23 @@ impl SimWorld {
 
     // --- controller actuation ------------------------------------------------
 
-    fn save_last_good(&mut self) {
+    /// Is tenant `i` under active isolation control? Every latency-
+    /// sensitive tenant with `protect_all_ls`; only `scenario.primary`
+    /// on the legacy single-primary path.
+    fn protected(&self, i: usize) -> bool {
+        if i >= self.scenario.n_tenants() {
+            return false;
+        }
+        if self.scenario.protect_all_ls {
+            self.scenario.tenants[i].kind() == TenantKind::LatencySensitive
+        } else {
+            i == self.scenario.primary
+        }
+    }
+
+    fn save_last_good(&mut self, owner: usize) {
         self.last_good = Some(SavedConfig {
+            owner,
             gpus: self.gpus.clone(),
             placements: self.placements.clone(),
         });
@@ -754,7 +800,6 @@ impl SimWorld {
 
     /// Apply one controller action to the world.
     fn apply_action(&mut self, now: f64, action: Action) {
-        let primary = self.scenario.primary;
         match action {
             Action::SetIoThrottle { tenant, cap_gbps } => {
                 let t = tenant.0;
@@ -809,54 +854,62 @@ impl SimWorld {
                 change,
                 relax: _,
             } => {
-                if tenant.0 != primary {
+                if !self.protected(tenant.0) {
                     return;
                 }
-                self.save_last_good();
+                self.save_last_good(tenant.0);
                 match change {
-                    IsolationChange::Resize { to } => self.resize_primary(now, to),
+                    IsolationChange::Resize { to } => self.resize_tenant(now, tenant.0, to),
                     IsolationChange::MoveExisting { gpu, to } => {
-                        self.move_primary(now, gpu, to, false)
+                        self.move_tenant(now, tenant.0, gpu, to, false)
                     }
                     IsolationChange::CreateAndMove { gpu, to } => {
-                        self.move_primary(now, gpu, to, true)
+                        self.move_tenant(now, tenant.0, gpu, to, true)
                     }
                 }
             }
             Action::Rollback { tenant } => {
-                if tenant.0 != primary {
+                if !self.protected(tenant.0) {
                     return;
                 }
                 if let Some(saved) = self.last_good.take() {
+                    if saved.owner != tenant.0 {
+                        // Another tenant's change superseded this
+                        // snapshot (cannot happen while the arbiter
+                        // serializes validation windows; kept as a
+                        // defensive invariant). Restoring it would stomp
+                        // the newer change, so keep it for its owner.
+                        self.last_good = Some(saved);
+                        return;
+                    }
                     // Blue/green back to the last-known-good placement.
                     self.gpus = saved.gpus;
                     self.placements = saved.placements;
-                    self.pause_tenant(now, primary, self.scenario.move_pause_s);
+                    self.pause_tenant(now, tenant.0, self.scenario.move_pause_s);
                 }
             }
         }
     }
 
-    /// Resize = give the primary a dedicated `to` instance on its current
-    /// GPU, repartitioning as needed. If it was MPS-shared, each peer gets
-    /// the biggest leftover slice.
-    fn resize_primary(&mut self, now: f64, to: MigProfile) {
-        let primary = self.scenario.primary;
-        let gpu_idx = self.placements[primary].gpu;
-        let old_peers = self.placements[primary].peers.clone();
-        let old_instance = self.placements[primary].instance;
+    /// Resize = give the protected tenant a dedicated `to` instance on
+    /// its current GPU, repartitioning as needed. If it was MPS-shared,
+    /// each peer gets the biggest leftover slice.
+    fn resize_tenant(&mut self, now: f64, tenant: usize, to: MigProfile) {
+        let gpu_idx = self.placements[tenant].gpu;
+        let old_peers = self.placements[tenant].peers.clone();
+        let old_instance = self.placements[tenant].instance;
 
         let gpu = &mut self.gpus[gpu_idx];
         if gpu.destroy(old_instance).is_err() {
             return;
         }
-        let new_primary = match gpu.create(to) {
+        let new_instance = match gpu.create(to) {
             Ok(id) => id,
             Err(_) => {
                 // Cannot place: restore by recreating the old instance.
-                let old_profile = self.placements[primary].profile;
+                let old_profile = self.placements[tenant].profile;
                 if let Ok(id) = gpu.create(old_profile) {
-                    self.placements[primary].instance = id;
+                    self.placements[tenant].instance = id;
                     for &peer in &old_peers {
                         self.placements[peer].instance = id;
                     }
@@ -864,9 +917,9 @@ impl SimWorld {
                 return;
             }
         };
-        self.placements[primary].instance = new_primary;
-        self.placements[primary].profile = to;
-        self.placements[primary].peers.clear();
+        self.placements[tenant].instance = new_instance;
+        self.placements[tenant].profile = to;
+        self.placements[tenant].peers.clear();
 
         // Re-home each displaced peer on the biggest profile that fits.
         for peer in old_peers {
@@ -893,15 +946,14 @@ impl SimWorld {
         let d = A100Gpu::reconfig_duration(&mut self.reconfig_rng);
         self.reconfig_durations.push(d);
         let pause = self.bounded_pause(d);
-        self.pause_tenant(now, primary, pause);
+        self.pause_tenant(now, tenant, pause);
     }
 
-    /// Move the primary to `gpu` — onto an existing free instance (cheap)
-    /// or a freshly created one (MIG call on the target GPU, but the
-    /// pause is still only the process move: creation happens on idle
+    /// Move a protected tenant to `gpu` — onto an existing free instance
+    /// (cheap) or a freshly created one (MIG call on the target GPU, but
+    /// the pause is still only the process move: creation happens on idle
     /// slices).
-    fn move_primary(&mut self, now: f64, gpu: usize, to: MigProfile, create: bool) {
-        let primary = self.scenario.primary;
+    fn move_tenant(&mut self, now: f64, tenant: usize, gpu: usize, to: MigProfile, create: bool) {
         let target = if create {
             match self.gpus[gpu].create(to) {
                 Ok(id) => {
@@ -930,21 +982,21 @@ impl SimWorld {
         };
 
         // Leaving a shared instance: unlink peers.
-        let old_peers = std::mem::take(&mut self.placements[primary].peers);
+        let old_peers = std::mem::take(&mut self.placements[tenant].peers);
         for peer in old_peers {
-            self.placements[peer].peers.retain(|&x| x != primary);
+            self.placements[peer].peers.retain(|&x| x != tenant);
         }
 
-        self.placements[primary].gpu = gpu;
-        self.placements[primary].instance = target;
-        self.placements[primary].profile = to;
+        self.placements[tenant].gpu = gpu;
+        self.placements[tenant].instance = target;
+        self.placements[tenant].profile = to;
         // CPU affinity follows the GPU's NUMA domain (§2.3 pinning).
-        self.placements[primary].numa = self.scenario.topo.numa_of_gpu(gpu);
+        self.placements[tenant].numa = self.scenario.topo.numa_of_gpu(gpu);
 
         // Make-before-break: instance creation runs on idle slices while
         // the tenant keeps serving; the only tenant-visible cost is the
         // blue/green traffic switchover.
-        self.pause_tenant(now, primary, self.scenario.move_pause_s);
+        self.pause_tenant(now, tenant, self.scenario.move_pause_s);
     }
 
     // --- telemetry -----------------------------------------------------------
@@ -1148,11 +1200,11 @@ impl SimWorld {
         if let Some(p) = snap.tenant(TenantId(primary)) {
             self.p99_series.push((now, p.tails.p99_ms));
         }
-        if self.controller.is_some() {
+        if self.control.is_some() {
             let view = self.build_view();
             let wall = std::time::Instant::now();
             let actions = self
-                .controller
+                .control
                 .as_mut()
                 .unwrap()
                 .on_observation(&snap, &view);
@@ -1252,24 +1304,57 @@ impl SimWorld {
         let primary = self.scenario.primary;
         let m = &self.monitors[primary];
         let label = self.scenario.controller.levers.name().to_string();
-        let (actions, timeline, moves_per_hour) = match &self.controller {
-            Some(c) => {
-                let audit = c.audit();
+        let (actions, timeline, moves_per_hour, controller_stats, arb) = match &self.control {
+            Some(plane) => {
+                // Merge every controller's audit: host-wide action counts
+                // and one timeline ordered by decision time (stable, so a
+                // single controller's timeline is exactly the pre-arbiter
+                // one; same-t entries keep controller order).
                 let mut counts: BTreeMap<String, usize> = BTreeMap::new();
-                for e in audit.entries() {
-                    *counts.entry(e.action.clone()).or_insert(0) += 1;
+                let mut timeline: Vec<(f64, String, f64)> = Vec::new();
+                let mut moves = 0.0;
+                let mut stats = Vec::new();
+                for c in plane.controllers() {
+                    let audit = c.audit();
+                    let mut my_counts: BTreeMap<String, usize> = BTreeMap::new();
+                    for e in audit.entries() {
+                        if e.edge != "defer" {
+                            *counts.entry(e.action.clone()).or_insert(0) += 1;
+                            *my_counts.entry(e.action.clone()).or_insert(0) += 1;
+                        }
+                    }
+                    timeline.extend(
+                        audit
+                            .timeline()
+                            .into_iter()
+                            .map(|(t, k, p)| (t, k.to_string(), p)),
+                    );
+                    moves += audit.moves_per_hour(horizon);
+                    let id = c.primary();
+                    stats.push(TenantControllerStats {
+                        tenant: id,
+                        name: self.scenario.tenants[id.0].name.clone(),
+                        tau_ms: c.cfg.tau_ms,
+                        actions: my_counts.into_iter().collect(),
+                        deferrals: audit.count_edge("defer"),
+                    });
                 }
+                timeline.sort_by(|a, b| a.0.total_cmp(&b.0));
                 (
                     counts.into_iter().collect::<Vec<_>>(),
-                    audit
-                        .timeline()
-                        .into_iter()
-                        .map(|(t, k, p)| (t, k.to_string(), p))
-                        .collect(),
-                    audit.moves_per_hour(horizon),
+                    timeline,
+                    moves,
+                    stats,
+                    plane.stats(),
                 )
             }
-            None => (Vec::new(), Vec::new(), 0.0),
+            None => (
+                Vec::new(),
+                Vec::new(),
+                0.0,
+                Vec::new(),
+                crate::controller::ArbStats::default(),
+            ),
         };
         let per_tenant: Vec<TenantRunStats> = self
             .scenario
@@ -1324,6 +1409,9 @@ impl SimWorld {
                 0.0
             },
             p99_series: self.p99_series,
+            controller_stats,
+            arb_conflicts: arb.conflicts,
+            arb_deferrals: arb.deferrals,
         }
     }
 }
@@ -1451,6 +1539,50 @@ mod tests {
         assert_eq!(chat.slo_ms, 15.0);
         assert_eq!(batch.slo_ms, 60.0);
         assert!(chat.p99_ms > 0.0 && batch.p99_ms > 0.0);
+    }
+
+    #[test]
+    fn legacy_single_primary_reports_one_controller() {
+        let mut s = short_scenario(3, Levers::full());
+        s.horizon = 240.0;
+        let r = SimWorld::new(s).run();
+        assert_eq!(r.controller_stats.len(), 1);
+        assert_eq!(r.controller_stats[0].name, "t1-inference");
+        assert_eq!(r.arb_conflicts, 0);
+        assert_eq!(r.arb_deferrals, 0);
+        // Single-primary fingerprints keep the pre-arbiter format.
+        assert!(!r.fingerprint().contains(";arb"));
+    }
+
+    #[test]
+    fn protect_all_ls_is_noop_for_single_ls_scenarios() {
+        // paper_single_host has exactly one latency-sensitive tenant:
+        // the multi-primary plane builds the same single controller, so
+        // enabling it must not perturb the run at all.
+        let mut a = short_scenario(9, Levers::full());
+        a.horizon = 600.0;
+        let mut b = a.clone();
+        b.protect_all_ls = true;
+        let ra = SimWorld::new(a).run();
+        let rb = SimWorld::new(b).run();
+        assert_eq!(ra.fingerprint(), rb.fingerprint());
+    }
+
+    #[test]
+    fn multi_primary_reports_controller_stats_per_ls_tenant() {
+        let mut s = Scenario::multi_ls_slo_mix(7, Levers::full());
+        s.horizon = 120.0;
+        let r = SimWorld::new(s).run();
+        // One controller per latency-sensitive tenant, each against its
+        // own τ (the primary keeps the scenario's τ).
+        assert_eq!(r.controller_stats.len(), 2);
+        assert_eq!(r.controller_stats[0].name, "chat-api");
+        assert_eq!(r.controller_stats[0].tau_ms, 15.0);
+        assert_eq!(r.controller_stats[1].name, "batch-api");
+        assert_eq!(r.controller_stats[1].tau_ms, 60.0);
+        // Arbitration counters reconcile with the per-controller audits.
+        let deferred: usize = r.controller_stats.iter().map(|c| c.deferrals).sum();
+        assert_eq!(deferred as u64, r.arb_deferrals);
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //!
 //! * Deterministic: ties in time break by insertion sequence, so two runs
 //!   with the same seed replay identically (the paper's "identical
-//!   interference schedules across configurations", §3.2).
+//!   interference schedules across configurations", §3.2). This is also
+//!   what makes the control plane's ticks reproducible: the world's
+//!   `Sample` events fire in a stable order, so every controller —
+//!   including the multi-primary arbiter's whole plane — sees the same
+//!   snapshots in the same sequence for a fixed seed.
 //! * Monotone: popping never returns a time earlier than the clock.
 
 use std::cmp::Ordering;

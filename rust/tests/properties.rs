@@ -663,6 +663,73 @@ fn prop_fleet_split_is_exhaustive_and_disjoint() {
 }
 
 #[test]
+fn prop_multi_primary_same_seed_identical_run_result() {
+    // Arbitration is deterministic for a fixed seed: generated scenarios
+    // run under the multi-primary control plane (every LS tenant gets a
+    // controller) must replay bit-identically, including the arbitration
+    // counters folded into the fingerprint.
+    check(
+        Config { cases: 8, seed: 0x24 },
+        "multi-primary determinism",
+        gen_scenario,
+        |spec| {
+            let mk = || {
+                let mut s = build_gen(spec, Levers::full());
+                s.protect_all_ls = true;
+                SimWorld::new(s).run()
+            };
+            let a = mk();
+            let b = mk();
+            if a.fingerprint() != b.fingerprint() {
+                return Err(format!(
+                    "same seed, different multi-primary runs:\n  {}\n  {}",
+                    a.fingerprint(),
+                    b.fingerprint()
+                ));
+            }
+            if a.arb_deferrals != b.arb_deferrals || a.arb_conflicts != b.arb_conflicts {
+                return Err("arbitration counters nondeterministic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn single_primary_catalog_fingerprints_unchanged_by_control_plane() {
+    // Regression for the multi-primary refactor: every single-LS catalog
+    // scenario must produce the identical RunResult whether it runs on
+    // the legacy single-controller path or through the arbiter (which
+    // wraps the same lone controller), and its fingerprint must keep the
+    // pre-arbiter format (no ";arb" section) byte for byte.
+    for name in [
+        "paper_single_host",
+        "paper_llm_case",
+        "steady_contention",
+        "pcie_hotspot",
+        "diurnal_burst",
+    ] {
+        let mk = |protect: bool| {
+            let mut s = Scenario::by_name(name, 31, Levers::full()).unwrap();
+            s.horizon = 90.0;
+            s.protect_all_ls = protect;
+            SimWorld::new(s).run()
+        };
+        let legacy = mk(false);
+        let multi = mk(true);
+        assert_eq!(
+            legacy.fingerprint(),
+            multi.fingerprint(),
+            "{name}: control plane perturbed a single-LS run"
+        );
+        assert!(
+            !legacy.fingerprint().contains(";arb"),
+            "{name}: single-primary fingerprint format changed"
+        );
+    }
+}
+
+#[test]
 fn catalog_same_seed_identical_run_result() {
     // Determinism for every scenario in the named catalog, under an
     // acting controller (full levers).
