@@ -1,8 +1,10 @@
 //! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md): the L3 components
 //! that sit on the request/decision path, plus the end-to-end decode step
-//! through PJRT.
+//! through PJRT. Emits `BENCH_hotpath.json` (machine-readable timings for
+//! every microbench) — the repo's perf trajectory; CI uploads it as an
+//! artifact.
 
-use predserve::bench::{banner, bench_fn, bench_throughput};
+use predserve::bench::{banner, BenchReport};
 use predserve::controller::{Controller, ControllerConfig, Levers};
 use predserve::fabric::ps::{ps_rates, FlowDemand};
 use predserve::fabric::Fabric;
@@ -16,60 +18,79 @@ use predserve::util::rng::Pcg64;
 
 fn main() {
     banner("hot-path microbenchmarks");
+    let mut report = BenchReport::new("hotpath");
 
-    // PS solver: 8 flows with mixed caps (the per-mutation fabric cost).
+    // PS solver: 8 flows with mixed caps (the per-link solve cost).
     let flows: Vec<FlowDemand> = (0..8)
         .map(|i| FlowDemand {
             weight: 1.0 + i as f64 * 0.2,
             cap: if i % 2 == 0 { Some(2.0 + i as f64) } else { None },
         })
         .collect();
-    bench_fn("fabric: ps_rates (8 flows, caps)", 300, || {
+    report.bench_fn("fabric: ps_rates (8 flows, caps)", 300, || {
         std::hint::black_box(ps_rates(25.0, &flows));
     });
 
-    // Fabric mutation + completion query.
+    // Fabric mutation + completion query on the incremental engine: the
+    // per-event cost the dirty-link cache and completion calendar bound.
     let topo = HostTopology::p4d();
     let mut fabric = Fabric::new(&topo);
     let mut i = 0u64;
-    bench_fn("fabric: start+next_completion+remove", 300, || {
+    report.bench_fn("fabric: start+next_completion+remove", 300, || {
         let id = fabric.start(LinkId((i % 4) as usize), 1.0, 1.0, None, 0);
         std::hint::black_box(fabric.next_completion());
         fabric.remove(id);
         i += 1;
     });
 
+    // Steady-state advance over a populated fabric: cached rates, no
+    // solver invocations, no allocations.
+    let mut fabric2 = Fabric::new(&topo);
+    for j in 0..48u64 {
+        fabric2.start(
+            LinkId((j % 6) as usize),
+            1e12, // effectively never completes within the bench
+            1.0 + (j % 3) as f64,
+            (j % 4 == 0).then_some(2.0),
+            (j % 8) as usize,
+        );
+    }
+    fabric2.next_completion(); // prime the caches
+    report.bench_fn("fabric: advance (48 flows, clean links)", 300, || {
+        fabric2.advance(1e-6);
+    });
+
     // Streaming quantiles.
     let mut p2 = P2Quantile::new(0.99);
     let mut rng = Pcg64::seeded(1);
-    bench_fn("telemetry: P2 quantile observe", 200, || {
+    report.bench_fn("telemetry: P2 quantile observe", 200, || {
         p2.observe(rng.f64() * 20.0);
     });
     let mut win = WindowQuantiles::new(4096);
     for _ in 0..4096 {
         win.observe(rng.f64());
     }
-    bench_fn("telemetry: window observe", 200, || {
+    report.bench_fn("telemetry: window observe", 200, || {
         win.observe(rng.f64() * 20.0);
     });
-    bench_fn("telemetry: window p99 query (4096)", 300, || {
+    report.bench_fn("telemetry: window p99 query (4096)", 300, || {
         std::hint::black_box(win.quantile(0.99));
     });
     let mut h = Histogram::new();
-    bench_fn("telemetry: histogram record", 200, || {
+    report.bench_fn("telemetry: histogram record", 200, || {
         h.record(rng.below(100_000));
     });
 
     // Event queue.
     let mut q: EventQueue<u32> = EventQueue::new();
-    bench_fn("sim: event queue push+pop", 200, || {
+    report.bench_fn("sim: event queue push+pop", 200, || {
         q.push_after(rng.f64(), 1);
         std::hint::black_box(q.pop());
     });
 
     // KV cache alloc/append/release cycle.
     let mut cache = PagedKvCache::new(64, 16, 4);
-    bench_fn("serving: kv alloc+append+release", 200, || {
+    report.bench_fn("serving: kv alloc+append+release", 200, || {
         let id = cache.allocate(20).unwrap();
         cache.append_token(id).unwrap();
         cache.release(id).unwrap();
@@ -79,21 +100,31 @@ fn main() {
     let scenario = Scenario::paper_single_host(11, Levers::full());
     let mut world = SimWorld::new(scenario);
     let (snap, view) = world.sample_for_bench();
-    let mut cfg = ControllerConfig::default();
-    cfg.warmup_obs = 0; // measure the live decision path, not the warmup gate
+    let cfg = ControllerConfig {
+        warmup_obs: 0, // measure the live decision path, not the warmup gate
+        ..ControllerConfig::default()
+    };
     let mut ctl = Controller::new(cfg);
-    bench_fn("controller: on_observation tick", 300, || {
+    report.bench_fn("controller: on_observation tick", 300, || {
         std::hint::black_box(ctl.on_observation(&snap, &view));
     });
 
     // Whole-run simulation throughput.
-    let r = bench_throughput("sim: full-system 1800s run", 1, "runs", || {
+    let r = report.bench_throughput("sim: full-system 1800s run", 1, "runs", || {
         SimWorld::new(Scenario::paper_single_host(11, Levers::full())).run()
     });
     println!(
-        "  (run completed {} requests; ~{:.0} sim-events/wall-second implied)",
-        r.completed,
-        r.completed as f64 * 5.0
+        "  (run completed {} requests over {} events; {} fabric rate solves)",
+        r.completed, r.sim_events, r.fabric_rate_recomputes
+    );
+    report.metric("sim: full-system run events", r.sim_events as f64);
+    report.metric(
+        "sim: full-system fabric rate recomputes",
+        r.fabric_rate_recomputes as f64,
+    );
+    report.metric(
+        "sim: fabric recomputes per event",
+        r.fabric_rate_recomputes as f64 / r.sim_events.max(1) as f64,
     );
 
     // End-to-end decode step through PJRT (needs artifacts).
@@ -123,7 +154,10 @@ fn main() {
                 dt / steps as f64 * 1e3,
                 4.0 * steps as f64 / dt
             );
+            report.metric("serving: decode ms/step (batch=4)", dt / steps as f64 * 1e3);
         }
         Err(e) => println!("serving decode bench skipped (run `make artifacts`): {e}"),
     }
+
+    report.write_json("BENCH_hotpath.json");
 }

@@ -1,0 +1,103 @@
+//! Fabric-engine scaling sweep: whole-run wall time and PS-solver
+//! invocation counts for the incremental engine vs the from-scratch
+//! reference oracle, on generated dense scenarios from 24 to 256 tenants.
+//!
+//! Every case runs the *same scenario* on both engines and panics if the
+//! run fingerprints diverge — so the CI perf-smoke step doubles as a
+//! release-mode differential check. Timings are reported, never gated.
+//! Emits `BENCH_scale_sweep.json` alongside the human-readable table.
+
+use predserve::bench::{banner, BenchReport};
+use predserve::controller::Levers;
+use predserve::fabric::FabricKind;
+use predserve::platform::{RunResult, Scenario, SimWorld};
+use std::time::Instant;
+
+fn timed_run(scenario: Scenario, kind: FabricKind) -> (RunResult, f64) {
+    let t0 = Instant::now();
+    let r = SimWorld::new_with_fabric(scenario, kind).run();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    banner("fabric scale sweep (incremental vs reference oracle)");
+    let mut report = BenchReport::new("scale_sweep");
+
+    // (label, scenario builder): auto_pack_24 is the p4d-scale catalog
+    // case; the larger Ns are generated dense-host hotspots. Horizons
+    // shrink as N grows to keep the sweep's wall time bounded.
+    type Mk = Box<dyn Fn() -> Scenario>;
+    let cases: Vec<(&str, Mk)> = vec![
+        (
+            "N=24 (auto_pack_24, p4d)",
+            Box::new(|| {
+                let mut s = Scenario::auto_pack_24(11, Levers::full());
+                s.horizon = 300.0;
+                s
+            }),
+        ),
+        (
+            "N=64 (hotspot_64, 2 switches)",
+            Box::new(|| {
+                let mut s = Scenario::dense_hotspot(11, 64, Levers::full());
+                s.horizon = 180.0;
+                s
+            }),
+        ),
+        (
+            "N=128 (dense hotspot)",
+            Box::new(|| {
+                let mut s = Scenario::dense_hotspot(11, 128, Levers::full());
+                s.horizon = 120.0;
+                s
+            }),
+        ),
+        (
+            "N=256 (dense hotspot)",
+            Box::new(|| {
+                let mut s = Scenario::dense_hotspot(11, 256, Levers::full());
+                s.horizon = 90.0;
+                s
+            }),
+        ),
+    ];
+
+    println!(
+        "{:32} {:>10} {:>12} {:>12} {:>8} {:>9} {:>9}",
+        "case", "events", "solves/ev", "solves/ev", "solve", "wall s", "wall s"
+    );
+    println!(
+        "{:32} {:>10} {:>12} {:>12} {:>8} {:>9} {:>9}",
+        "", "", "(incr)", "(ref)", "ratio", "(incr)", "(ref)"
+    );
+    for (label, mk) in cases {
+        let (inc, inc_s) = timed_run(mk(), FabricKind::Incremental);
+        let (refr, ref_s) = timed_run(mk(), FabricKind::Reference);
+        // The oracle contract, enforced in release mode on every sweep:
+        // identical event streams, identical results, bit for bit.
+        assert_eq!(
+            inc.fingerprint(),
+            refr.fingerprint(),
+            "{label}: incremental and reference engines diverged"
+        );
+        assert_eq!(inc.sim_events, refr.sim_events, "{label}: event counts diverged");
+        let ev = inc.sim_events.max(1) as f64;
+        let inc_pe = inc.fabric_rate_recomputes as f64 / ev;
+        let ref_pe = refr.fabric_rate_recomputes as f64 / ev;
+        let ratio = refr.fabric_rate_recomputes as f64
+            / (inc.fabric_rate_recomputes as f64).max(1.0);
+        println!(
+            "{label:32} {:>10} {inc_pe:>12.3} {ref_pe:>12.3} {ratio:>7.1}x {inc_s:>9.3} {ref_s:>9.3}",
+            inc.sim_events
+        );
+        report.metric(&format!("{label}: events"), ev);
+        report.metric(&format!("{label}: recomputes/event incremental"), inc_pe);
+        report.metric(&format!("{label}: recomputes/event reference"), ref_pe);
+        report.metric(&format!("{label}: recompute reduction"), ratio);
+        report.metric(&format!("{label}: wall_s incremental"), inc_s);
+        report.metric(&format!("{label}: wall_s reference"), ref_s);
+        report.metric(&format!("{label}: wall speedup"), ref_s / inc_s.max(1e-9));
+    }
+
+    report.write_json("BENCH_scale_sweep.json");
+}

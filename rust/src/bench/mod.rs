@@ -1,12 +1,15 @@
 //! Minimal benchmark harness (criterion substitute for the offline
 //! build). Benches are built with `harness = false` and call
-//! [`bench_fn`] / [`bench_throughput`] directly.
+//! [`bench_fn`] / [`bench_throughput`] directly, or go through a
+//! [`BenchReport`] which records every measurement and can emit a
+//! machine-readable JSON file (`BENCH_hotpath.json`,
+//! `BENCH_scale_sweep.json`) for the repo's perf trajectory — CI uploads
+//! those as artifacts on every run.
 
 use std::time::Instant;
 
-/// Run `f` repeatedly for ~`target_ms` of wall time after a warmup and
-/// report ns/iter statistics.
-pub fn bench_fn<F: FnMut()>(name: &str, target_ms: u64, mut f: F) {
+/// One ns/iter measurement: (median, p5, p95).
+fn measure<F: FnMut()>(target_ms: u64, mut f: F) -> (f64, f64, f64) {
     // Warmup.
     let warm_until = Instant::now() + std::time::Duration::from_millis(target_ms / 5 + 1);
     let mut iters_hint = 0u64;
@@ -29,25 +32,176 @@ pub fn bench_fn<F: FnMut()>(name: &str, target_ms: u64, mut f: F) {
     let median = samples[samples.len() / 2];
     let p5 = samples[samples.len() / 20];
     let p95 = samples[samples.len() * 19 / 20];
+    (median, p5, p95)
+}
+
+/// Run `f` repeatedly for ~`target_ms` of wall time after a warmup and
+/// report ns/iter statistics.
+pub fn bench_fn<F: FnMut()>(name: &str, target_ms: u64, f: F) {
+    let (median, p5, p95) = measure(target_ms, f);
     println!("{name:48} {median:12.1} ns/iter  [{p5:.1} .. {p95:.1}]");
+}
+
+/// One timed invocation of `f`: (result, wall seconds, units/s), with
+/// the standard throughput row printed.
+fn throughput_once<T>(
+    name: &str,
+    units: u64,
+    unit_name: &str,
+    f: impl FnOnce() -> T,
+) -> (T, f64, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    let per_s = units as f64 / dt;
+    println!("{name:48} {dt:8.3} s   {per_s:12.0} {unit_name}/s");
+    (out, dt, per_s)
 }
 
 /// Time one invocation of `f`, printing seconds and a caller-supplied
 /// unit count per second.
 pub fn bench_throughput<T>(name: &str, units: u64, unit_name: &str, f: impl FnOnce() -> T) -> T {
-    let t0 = Instant::now();
-    let out = f();
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "{name:48} {dt:8.3} s   {:12.0} {unit_name}/s",
-        units as f64 / dt
-    );
-    out
+    throughput_once(name, units, unit_name, f).0
 }
 
 /// Banner printed by every paper-table bench.
 pub fn banner(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// One recorded measurement in a [`BenchReport`].
+#[derive(Clone, Debug)]
+pub enum BenchEntry {
+    /// ns/iter microbench: median with p5/p95 spread.
+    NsPerIter {
+        name: String,
+        median: f64,
+        p5: f64,
+        p95: f64,
+    },
+    /// One-shot throughput run: wall seconds + units/s.
+    Throughput {
+        name: String,
+        seconds: f64,
+        units_per_s: f64,
+    },
+    /// Free-form numeric metric (counters, ratios).
+    Metric { name: String, value: f64 },
+}
+
+/// Collects bench measurements and writes them as JSON — the
+/// machine-readable side of the perf trajectory. Each entry carries a
+/// `kind` discriminator so downstream tooling can diff runs without
+/// parsing the human-readable stdout.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    bench: String,
+    entries: Vec<BenchEntry>,
+}
+
+impl BenchReport {
+    pub fn new(bench: impl Into<String>) -> BenchReport {
+        BenchReport {
+            bench: bench.into(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// [`bench_fn`], recorded.
+    pub fn bench_fn<F: FnMut()>(&mut self, name: &str, target_ms: u64, f: F) {
+        let (median, p5, p95) = measure(target_ms, f);
+        println!("{name:48} {median:12.1} ns/iter  [{p5:.1} .. {p95:.1}]");
+        self.entries.push(BenchEntry::NsPerIter {
+            name: name.to_string(),
+            median,
+            p5,
+            p95,
+        });
+    }
+
+    /// [`bench_throughput`], recorded.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        units: u64,
+        unit_name: &str,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let (out, dt, per_s) = throughput_once(name, units, unit_name, f);
+        self.entries.push(BenchEntry::Throughput {
+            name: name.to_string(),
+            seconds: dt,
+            units_per_s: per_s,
+        });
+        out
+    }
+
+    /// Record a free-form numeric metric (and echo it).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("{name:48} {value:12.3}");
+        self.entries.push(BenchEntry::Metric {
+            name: name.to_string(),
+            value,
+        });
+    }
+
+    pub fn entries(&self) -> &[BenchEntry] {
+        &self.entries
+    }
+
+    /// Serialize to the stable JSON schema (`schema: 1`) via the in-repo
+    /// [`crate::util::json::Json`] writer — one escaping/serialization
+    /// implementation for the whole crate. Object keys render in sorted
+    /// order (deterministic output).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        // JSON has no NaN/Inf; clamp degenerate timings to null.
+        fn num(x: f64) -> Json {
+            if x.is_finite() {
+                Json::Num(x)
+            } else {
+                Json::Null
+            }
+        }
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| match e {
+                BenchEntry::NsPerIter { name, median, p5, p95 } => Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("kind", Json::Str("ns_per_iter".to_string())),
+                    ("median", num(*median)),
+                    ("p5", num(*p5)),
+                    ("p95", num(*p95)),
+                ]),
+                BenchEntry::Throughput { name, seconds, units_per_s } => Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("kind", Json::Str("throughput".to_string())),
+                    ("seconds", num(*seconds)),
+                    ("units_per_s", num(*units_per_s)),
+                ]),
+                BenchEntry::Metric { name, value } => Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("kind", Json::Str("metric".to_string())),
+                    ("value", num(*value)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::Str(self.bench.clone())),
+            ("schema", Json::Num(1.0)),
+            ("entries", Json::Arr(entries)),
+        ])
+        .to_string()
+    }
+
+    /// Write the JSON report to `path` and announce it on stdout.
+    pub fn write_json(&self, path: &str) {
+        match std::fs::write(path, self.to_json()) {
+            Ok(()) => println!("\nwrote {path} ({} entries)", self.entries.len()),
+            Err(e) => println!("\ncould not write {path}: {e}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -67,5 +221,54 @@ mod tests {
     fn bench_throughput_returns_value() {
         let v = bench_throughput("compute", 100, "items", || 42);
         assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn report_records_and_serializes() {
+        let mut r = BenchReport::new("unit");
+        let mut x = 0u64;
+        r.bench_fn("micro", 5, || {
+            x = x.wrapping_add(1);
+        });
+        let v = r.bench_throughput("thru", 10, "units", || 7);
+        assert_eq!(v, 7);
+        r.metric("ratio", 5.5);
+        assert_eq!(r.entries().len(), 3);
+        // Round-trips through the in-repo JSON parser.
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j).expect("valid JSON");
+        assert_eq!(parsed.get("schema").as_f64(), Some(1.0));
+        assert_eq!(parsed.get("bench").as_str(), Some("unit"));
+        let entries = parsed.get("entries").as_arr().expect("entries array");
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].get("kind").as_str(), Some("ns_per_iter"));
+        assert!(entries[0].get("median").as_f64().unwrap() > 0.0);
+        assert_eq!(entries[1].get("kind").as_str(), Some("throughput"));
+        assert!(entries[1].get("units_per_s").as_f64().unwrap() > 0.0);
+        assert_eq!(entries[2].get("kind").as_str(), Some("metric"));
+        assert_eq!(entries[2].get("name").as_str(), Some("ratio"));
+        assert_eq!(entries[2].get("value").as_f64(), Some(5.5));
+    }
+
+    #[test]
+    fn report_clamps_non_finite_metrics_to_null() {
+        let mut r = BenchReport::new("unit");
+        r.metric("bad", f64::NAN);
+        let parsed = crate::util::json::Json::parse(&r.to_json()).expect("valid JSON");
+        let entries = parsed.get("entries").as_arr().unwrap();
+        assert_eq!(entries[0].get("value"), &crate::util::json::Json::Null);
+    }
+
+    #[test]
+    fn report_escapes_names() {
+        let mut r = BenchReport::new("q\"uote");
+        r.metric("back\\slash", 1.0);
+        r.metric("new\nline\tand tab", 2.0);
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j).expect("escaped JSON must parse");
+        // Round-trip: the parsed entry names match the originals.
+        let entries = parsed.get("entries").as_arr().expect("entries array");
+        assert_eq!(entries[0].get("name").as_str(), Some("back\\slash"));
+        assert_eq!(entries[1].get("name").as_str(), Some("new\nline\tand tab"));
     }
 }

@@ -1,0 +1,212 @@
+//! Completion calendar: a versioned min-heap over per-link earliest
+//! completions.
+//!
+//! Each link owns at most one *slot* — its earliest `(dt, flow)`
+//! completion candidate under current rates, or `None` when nothing on
+//! the link is draining. The calendar answers "which flow on the whole
+//! host completes first?" in O(log links) without rescanning every flow,
+//! the same way the sim world versions its pending `FlowsDone` events:
+//! every slot update bumps the link's version and pushes a stamped heap
+//! entry; stale entries (version mismatch) are discarded lazily at query
+//! time.
+//!
+//! Ordering matches the original global scan exactly: candidates compare
+//! by `dt` (`total_cmp`) and ties break toward the lowest [`FlowId`] —
+//! the first-minimum-wins behavior of the reference engine's linear pass.
+//!
+//! Because `dt` values shrink as simulated time advances, fresh entries
+//! sink *below* nothing — they surface at the top while stale ones get
+//! buried. A compaction pass rebuilds the heap from the live slots
+//! whenever the stale backlog outgrows a small multiple of the link
+//! count, keeping memory O(links) over arbitrarily long runs.
+
+use super::transfer::FlowId;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One heap entry: a link's candidate at the version it was computed.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    dt: f64,
+    flow: FlowId,
+    link: usize,
+    version: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for a min-heap on (dt, flow id): BinaryHeap is a
+        // max-heap, so compare other-to-self.
+        other
+            .dt
+            .total_cmp(&self.dt)
+            .then_with(|| other.flow.cmp(&self.flow))
+            .then_with(|| other.link.cmp(&self.link))
+            .then_with(|| other.version.cmp(&self.version))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-link earliest-completion tracker with O(log links) global minimum.
+#[derive(Clone, Debug)]
+pub struct CompletionCalendar {
+    /// Current candidate per link (`None` = nothing draining).
+    slots: Vec<Option<(f64, FlowId)>>,
+    /// Version stamp per link; heap entries from older versions are stale.
+    versions: Vec<u64>,
+    heap: BinaryHeap<Entry>,
+}
+
+impl CompletionCalendar {
+    pub fn new(num_links: usize) -> CompletionCalendar {
+        CompletionCalendar {
+            slots: vec![None; num_links],
+            versions: vec![0; num_links],
+            heap: BinaryHeap::with_capacity(num_links * 2 + 8),
+        }
+    }
+
+    /// Replace `link`'s candidate. No-ops (no version bump, no heap push)
+    /// when the candidate is bit-identical to the current slot.
+    pub fn set(&mut self, link: usize, candidate: Option<(f64, FlowId)>) {
+        let same = match (self.slots[link], candidate) {
+            (None, None) => true,
+            (Some((a, fa)), Some((b, fb))) => a.to_bits() == b.to_bits() && fa == fb,
+            _ => false,
+        };
+        if same {
+            return;
+        }
+        self.slots[link] = candidate;
+        self.versions[link] += 1;
+        if let Some((dt, flow)) = candidate {
+            if self.heap.len() >= self.compact_threshold() {
+                // Rebuilding from the slots already re-inserts this
+                // link's just-written candidate — no separate push.
+                self.compact();
+            } else {
+                self.heap.push(Entry {
+                    dt,
+                    flow,
+                    link,
+                    version: self.versions[link],
+                });
+            }
+        }
+    }
+
+    /// Current candidate of one link (tests / introspection).
+    pub fn slot(&self, link: usize) -> Option<(f64, FlowId)> {
+        self.slots[link]
+    }
+
+    /// Host-wide earliest completion: minimum over all link slots by
+    /// `(dt, flow id)`. Pops stale heap entries lazily; the returned
+    /// entry stays in the heap (peek semantics).
+    pub fn earliest(&mut self) -> Option<(f64, FlowId)> {
+        while let Some(top) = self.heap.peek() {
+            if self.versions[top.link] == top.version {
+                return Some((top.dt, top.flow));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    fn compact_threshold(&self) -> usize {
+        self.slots.len() * 4 + 16
+    }
+
+    /// Rebuild the heap from the live slots (drops every stale entry).
+    fn compact(&mut self) {
+        self.heap.clear();
+        for (link, slot) in self.slots.iter().enumerate() {
+            if let Some((dt, flow)) = *slot {
+                self.heap.push(Entry {
+                    dt,
+                    flow,
+                    link,
+                    version: self.versions[link],
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_is_min_over_slots() {
+        let mut c = CompletionCalendar::new(3);
+        assert_eq!(c.earliest(), None);
+        c.set(0, Some((2.0, FlowId(7))));
+        c.set(1, Some((1.0, FlowId(9))));
+        c.set(2, Some((3.0, FlowId(2))));
+        assert_eq!(c.earliest(), Some((1.0, FlowId(9))));
+    }
+
+    #[test]
+    fn ties_break_to_lowest_flow_id() {
+        let mut c = CompletionCalendar::new(2);
+        c.set(0, Some((1.5, FlowId(12))));
+        c.set(1, Some((1.5, FlowId(4))));
+        assert_eq!(c.earliest(), Some((1.5, FlowId(4))));
+    }
+
+    #[test]
+    fn updates_supersede_stale_entries() {
+        let mut c = CompletionCalendar::new(2);
+        c.set(0, Some((1.0, FlowId(1))));
+        c.set(1, Some((5.0, FlowId(2))));
+        assert_eq!(c.earliest(), Some((1.0, FlowId(1))));
+        // Link 0's flow completes; its new candidate is later than link 1.
+        c.set(0, Some((9.0, FlowId(3))));
+        assert_eq!(c.earliest(), Some((5.0, FlowId(2))));
+        // Link 1 empties entirely.
+        c.set(1, None);
+        assert_eq!(c.earliest(), Some((9.0, FlowId(3))));
+        c.set(0, None);
+        assert_eq!(c.earliest(), None);
+    }
+
+    #[test]
+    fn heap_stays_bounded_under_churn() {
+        let mut c = CompletionCalendar::new(4);
+        for i in 0..10_000u64 {
+            let link = (i % 4) as usize;
+            // Shrinking dts emulate time advancing: new entries surface on
+            // top, stale ones get buried until compaction reclaims them.
+            let dt = 10_000.0 - i as f64;
+            c.set(link, Some((dt, FlowId(i + 1))));
+            let (got_dt, _) = c.earliest().unwrap();
+            assert_eq!(got_dt, dt);
+        }
+        assert!(
+            c.heap.len() <= c.compact_threshold(),
+            "heap grew unboundedly: {}",
+            c.heap.len()
+        );
+    }
+
+    #[test]
+    fn bitwise_identical_reset_is_a_noop() {
+        let mut c = CompletionCalendar::new(1);
+        c.set(0, Some((1.0, FlowId(1))));
+        let v = c.versions[0];
+        c.set(0, Some((1.0, FlowId(1))));
+        assert_eq!(c.versions[0], v, "identical candidate must not churn");
+    }
+}

@@ -6,11 +6,162 @@
 //!
 //! [`ps`] implements that allocation exactly (weighted PS with optional
 //! per-flow caps, via water-filling) for every shared-bandwidth domain on
-//! the host (PCIe upstream links, NUMA-local NVMe paths). [`transfer`]
-//! runs fluid-flow transfers over it for the discrete-event simulator.
+//! the host (PCIe upstream links, NUMA-local NVMe paths).
+//!
+//! Two engines run fluid-flow transfers over it:
+//!
+//! * [`transfer::Fabric`] — the **incremental per-link engine** on the
+//!   simulator's hot path: dirty-link invalidation with cached PS rate
+//!   vectors, allocation-free steady state, and a versioned completion
+//!   [`calendar`] for O(log links) `next_completion`.
+//! * [`reference::ReferenceFabric`] — the original recompute-everything
+//!   implementation, kept verbatim as the differential-test oracle and
+//!   the `scale_sweep` baseline. The incremental engine must match it
+//!   bit for bit.
+//!
+//! [`FabricBackend`] lets the simulated world run on either engine
+//! (`SimWorld::new_with_fabric`); production paths always use the
+//! incremental one.
 
+pub mod calendar;
 pub mod ps;
+pub mod reference;
 pub mod transfer;
 
-pub use ps::{ps_rates, FlowDemand};
+pub use ps::{ps_rates, ps_rates_into, FlowDemand};
+pub use reference::ReferenceFabric;
 pub use transfer::{Fabric, FlowId, LinkCounters};
+
+use crate::topo::{HostTopology, LinkId};
+
+/// Which fluid-flow engine a world should run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricKind {
+    /// The incremental per-link engine (the default everywhere).
+    Incremental,
+    /// The from-scratch oracle — differential tests and baselines only.
+    Reference,
+}
+
+/// A fluid-flow engine behind a single dispatch point, so the simulated
+/// world can be driven bit-identically by either implementation. The
+/// method set is exactly what the sim platform touches on its hot path.
+#[derive(Clone, Debug)]
+pub enum FabricBackend {
+    Incremental(Fabric),
+    Reference(ReferenceFabric),
+}
+
+impl FabricBackend {
+    pub fn new(topo: &HostTopology, kind: FabricKind) -> FabricBackend {
+        match kind {
+            FabricKind::Incremental => FabricBackend::Incremental(Fabric::new(topo)),
+            FabricKind::Reference => FabricBackend::Reference(ReferenceFabric::new(topo)),
+        }
+    }
+
+    #[inline]
+    pub fn start(
+        &mut self,
+        link: LinkId,
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+        owner: usize,
+    ) -> FlowId {
+        match self {
+            FabricBackend::Incremental(f) => f.start(link, gb, weight, cap, owner),
+            FabricBackend::Reference(f) => f.start(link, gb, weight, cap, owner),
+        }
+    }
+
+    #[inline]
+    pub fn remove(&mut self, id: FlowId) -> Option<usize> {
+        match self {
+            FabricBackend::Incremental(f) => f.remove(id),
+            FabricBackend::Reference(f) => f.remove(id),
+        }
+    }
+
+    #[inline]
+    pub fn set_owner_cap(&mut self, owner: usize, cap: Option<f64>) {
+        match self {
+            FabricBackend::Incremental(f) => f.set_owner_cap(owner, cap),
+            FabricBackend::Reference(f) => f.set_owner_cap(owner, cap),
+        }
+    }
+
+    #[inline]
+    pub fn advance(&mut self, dt: f64) {
+        match self {
+            FabricBackend::Incremental(f) => f.advance(dt),
+            FabricBackend::Reference(f) => f.advance(dt),
+        }
+    }
+
+    #[inline]
+    pub fn next_completion(&mut self) -> Option<(f64, FlowId)> {
+        match self {
+            FabricBackend::Incremental(f) => f.next_completion(),
+            FabricBackend::Reference(f) => f.next_completion(),
+        }
+    }
+
+    #[inline]
+    pub fn remaining(&self, id: FlowId) -> Option<f64> {
+        match self {
+            FabricBackend::Incremental(f) => f.remaining(id),
+            FabricBackend::Reference(f) => f.remaining(id),
+        }
+    }
+
+    #[inline]
+    pub fn counters(&self, link: LinkId) -> LinkCounters {
+        match self {
+            FabricBackend::Incremental(f) => f.counters(link),
+            FabricBackend::Reference(f) => f.counters(link),
+        }
+    }
+
+    #[inline]
+    pub fn owner_gb(&self, owner: usize) -> f64 {
+        match self {
+            FabricBackend::Incremental(f) => f.owner_gb(owner),
+            FabricBackend::Reference(f) => f.owner_gb(owner),
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self, link: LinkId) -> f64 {
+        match self {
+            FabricBackend::Incremental(f) => f.capacity(link),
+            FabricBackend::Reference(f) => f.capacity(link),
+        }
+    }
+
+    #[inline]
+    pub fn flow_exists(&self, id: FlowId) -> bool {
+        match self {
+            FabricBackend::Incremental(f) => f.flow_exists(id),
+            FabricBackend::Reference(f) => f.flow_exists(id),
+        }
+    }
+
+    #[inline]
+    pub fn active_flows(&self) -> usize {
+        match self {
+            FabricBackend::Incremental(f) => f.active_flows(),
+            FabricBackend::Reference(f) => f.active_flows(),
+        }
+    }
+
+    /// Per-link PS solver invocations — the perf-trajectory counter
+    /// surfaced in `RunResult::fabric_rate_recomputes`.
+    #[inline]
+    pub fn rate_recomputes(&self) -> u64 {
+        match self {
+            FabricBackend::Incremental(f) => f.rate_recomputes(),
+            FabricBackend::Reference(f) => f.rate_recomputes(),
+        }
+    }
+}

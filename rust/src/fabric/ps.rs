@@ -19,18 +19,41 @@ pub struct FlowDemand {
 /// Water-filling: repeatedly give every unfixed flow its weighted share of
 /// the remaining capacity; any flow whose share exceeds its cap is fixed
 /// at the cap and removed from the pool. Terminates in ≤ n rounds.
+///
+/// Allocates its working buffers; the incremental fabric engine calls
+/// [`ps_rates_into`] with reusable scratch instead (identical arithmetic,
+/// zero allocations in steady state).
 pub fn ps_rates(capacity: f64, flows: &[FlowDemand]) -> Vec<f64> {
+    let mut rates = Vec::new();
+    let mut fixed = Vec::new();
+    ps_rates_into(capacity, flows, &mut fixed, &mut rates);
+    rates
+}
+
+/// [`ps_rates`] into caller-provided buffers: `rates` receives the rate
+/// vector (cleared and resized), `fixed` is solver scratch. The sequence
+/// of floating-point operations is exactly `ps_rates`'s, so the results
+/// are bit-identical — the reference-oracle differential tests rely on
+/// that.
+pub fn ps_rates_into(
+    capacity: f64,
+    flows: &[FlowDemand],
+    fixed: &mut Vec<bool>,
+    rates: &mut Vec<f64>,
+) {
     let n = flows.len();
-    let mut rates = vec![0.0; n];
+    rates.clear();
+    rates.resize(n, 0.0);
     if n == 0 || capacity <= 0.0 {
-        return rates;
+        return;
     }
-    let mut fixed = vec![false; n];
+    fixed.clear();
+    fixed.resize(n, false);
     let mut cap_left = capacity;
     loop {
         let w_total: f64 = flows
             .iter()
-            .zip(&fixed)
+            .zip(fixed.iter())
             .filter(|(_, &f)| !f)
             .map(|(d, _)| d.weight)
             .sum();
@@ -62,7 +85,6 @@ pub fn ps_rates(capacity: f64, flows: &[FlowDemand]) -> Vec<f64> {
             break;
         }
     }
-    rates
 }
 
 /// Utilization ρ = Σ min(g_j, fair share) / B under the current flow set —
@@ -182,5 +204,31 @@ mod tests {
     fn empty_and_degenerate() {
         assert!(ps_rates(10.0, &[]).is_empty());
         assert_eq!(ps_rates(0.0, &[d(1.0, None)]), vec![0.0]);
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_variant_bitwise() {
+        // The scratch-buffer path must be arithmetically indistinguishable
+        // from the allocating one, including across buffer reuse.
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(33);
+        let mut fixed = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..300 {
+            let n = rng.below(9) as usize;
+            let flows: Vec<FlowDemand> = (0..n)
+                .map(|_| FlowDemand {
+                    weight: rng.range_f64(0.05, 4.0),
+                    cap: rng.chance(0.5).then(|| rng.range_f64(0.2, 12.0)),
+                })
+                .collect();
+            let cap = rng.range_f64(0.0, 40.0);
+            ps_rates_into(cap, &flows, &mut fixed, &mut out);
+            let alloc = ps_rates(cap, &flows);
+            assert_eq!(out.len(), alloc.len());
+            for (a, b) in out.iter().zip(&alloc) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 }

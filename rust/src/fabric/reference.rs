@@ -1,0 +1,267 @@
+//! The pre-incremental fluid-flow fabric, kept verbatim as a test oracle.
+//!
+//! [`ReferenceFabric`] is the original `Fabric` implementation: every
+//! query (`rates`, `next_completion`, `advance`, `utilization`) recomputes
+//! the full per-link PS allocation from scratch, with per-call `Vec` /
+//! `BTreeMap` allocations. It is deliberately **not** optimized — its job
+//! is to define the semantics the incremental engine
+//! ([`super::transfer::Fabric`]) must reproduce *bit-for-bit*:
+//!
+//! * the differential property tests drive both engines through random
+//!   start/remove/cap/advance schedules and require identical rates,
+//!   completions, counters, and remaining bytes (`to_bits` equality);
+//! * the catalog fingerprint regression runs whole scenarios on each
+//!   backend (`SimWorld::new_with_fabric`) and requires identical
+//!   `RunResult::fingerprint()`s — which pins the incremental engine to
+//!   the pre-refactor fingerprints byte for byte;
+//! * the `scale_sweep` bench runs it side by side with the incremental
+//!   engine to report the recompute and wall-time reduction.
+//!
+//! Do not "fix" or speed this module up: any observable change here
+//! changes what the oracle certifies.
+
+use super::ps::{ps_rates, FlowDemand};
+use super::transfer::{FlowId, LinkCounters};
+use crate::topo::{HostTopology, LinkId};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Flow {
+    link: LinkId,
+    weight: f64,
+    cap: Option<f64>,
+    /// Remaining payload in GB.
+    remaining: f64,
+    /// Opaque owner tag (tenant index) for telemetry attribution.
+    owner: usize,
+}
+
+/// All shared links on a host plus the active flows crossing them —
+/// recompute-from-scratch semantics (the original engine).
+#[derive(Clone, Debug)]
+pub struct ReferenceFabric {
+    capacities: Vec<f64>,
+    flows: BTreeMap<FlowId, Flow>,
+    next_id: u64,
+    counters: Vec<LinkCounters>,
+    /// Per-owner cumulative GB (tenant attribution).
+    owner_gb: BTreeMap<usize, f64>,
+    /// Per-link PS solver invocations (`Cell` so the original `&self`
+    /// query signatures stay untouched). One increment per non-empty
+    /// link per `rates()` call — the quantity the incremental engine's
+    /// `rate_recomputes()` counts too, so the two are comparable.
+    solver_calls: Cell<u64>,
+}
+
+impl ReferenceFabric {
+    pub fn new(topo: &HostTopology) -> ReferenceFabric {
+        let mut capacities = vec![0.0; topo.num_links];
+        for s in &topo.switches {
+            capacities[s.link.0] = s.bandwidth_gbps;
+        }
+        for n in &topo.numa_nodes {
+            capacities[n.nvme_link.0] = n.nvme_gbps;
+        }
+        ReferenceFabric {
+            counters: vec![LinkCounters::default(); capacities.len()],
+            capacities,
+            flows: BTreeMap::new(),
+            next_id: 1,
+            owner_gb: BTreeMap::new(),
+            solver_calls: Cell::new(0),
+        }
+    }
+
+    /// Start a transfer of `gb` on `link`. Returns its id.
+    pub fn start(
+        &mut self,
+        link: LinkId,
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+        owner: usize,
+    ) -> FlowId {
+        debug_assert!(gb > 0.0 && weight > 0.0);
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.insert(
+            id,
+            Flow {
+                link,
+                weight,
+                cap,
+                remaining: gb,
+                owner,
+            },
+        );
+        id
+    }
+
+    /// Remove a flow (normally after it completes). Returns the owner.
+    pub fn remove(&mut self, id: FlowId) -> Option<usize> {
+        self.flows.remove(&id).map(|f| f.owner)
+    }
+
+    /// Apply/remove a throttle g_i on every flow owned by `owner`.
+    pub fn set_owner_cap(&mut self, owner: usize, cap: Option<f64>) {
+        for f in self.flows.values_mut() {
+            if f.owner == owner {
+                f.cap = cap;
+            }
+        }
+    }
+
+    pub fn flow_exists(&self, id: FlowId) -> bool {
+        self.flows.contains_key(&id)
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Current rate of each flow (GB/s), keyed by flow id — full
+    /// from-scratch recompute with per-link allocations.
+    pub fn rates(&self) -> BTreeMap<FlowId, f64> {
+        let mut out = BTreeMap::new();
+        for link in 0..self.capacities.len() {
+            let ids: Vec<FlowId> = self
+                .flows
+                .iter()
+                .filter(|(_, f)| f.link.0 == link)
+                .map(|(&id, _)| id)
+                .collect();
+            if ids.is_empty() {
+                continue;
+            }
+            self.solver_calls.set(self.solver_calls.get() + 1);
+            let demands: Vec<FlowDemand> = ids
+                .iter()
+                .map(|id| {
+                    let f = &self.flows[id];
+                    FlowDemand {
+                        weight: f.weight,
+                        cap: f.cap,
+                    }
+                })
+                .collect();
+            let rates = ps_rates(self.capacities[link], &demands);
+            for (id, r) in ids.into_iter().zip(rates) {
+                out.insert(id, r);
+            }
+        }
+        out
+    }
+
+    /// Instantaneous rate of one flow.
+    pub fn rate_of(&self, id: FlowId) -> f64 {
+        *self.rates().get(&id).unwrap_or(&0.0)
+    }
+
+    /// Earliest (dt, flow) completion under current rates, if any flow is
+    /// active and draining.
+    pub fn next_completion(&self) -> Option<(f64, FlowId)> {
+        let rates = self.rates();
+        let mut best: Option<(f64, FlowId)> = None;
+        for (&id, f) in &self.flows {
+            let r = rates[&id];
+            if r <= 0.0 {
+                continue;
+            }
+            let dt = f.remaining / r;
+            if best.map(|(bt, _)| dt < bt).unwrap_or(true) {
+                best = Some((dt, id));
+            }
+        }
+        best
+    }
+
+    /// Advance all flows by `dt` seconds at current rates, accumulating
+    /// telemetry counters.
+    pub fn advance(&mut self, dt: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        let rates = self.rates();
+        for (&id, f) in self.flows.iter_mut() {
+            let r = rates[&id];
+            let moved = (r * dt).min(f.remaining);
+            f.remaining -= moved;
+            self.counters[f.link.0].gb_total += moved;
+            *self.owner_gb.entry(f.owner).or_insert(0.0) += moved;
+        }
+        for link in 0..self.capacities.len() {
+            let cap = self.capacities[link];
+            if cap <= 0.0 {
+                continue;
+            }
+            let link_rate: f64 = self
+                .flows
+                .iter()
+                .filter(|(_, f)| f.link.0 == link)
+                .map(|(id, _)| rates[id])
+                .sum();
+            self.counters[link].util_integral += (link_rate / cap) * dt;
+        }
+    }
+
+    /// Link utilization right now (0..1).
+    pub fn utilization(&self, link: LinkId) -> f64 {
+        let cap = self.capacities[link.0];
+        if cap <= 0.0 {
+            return 0.0;
+        }
+        let rates = self.rates();
+        let total: f64 = self
+            .flows
+            .iter()
+            .filter(|(_, f)| f.link == link)
+            .map(|(id, _)| rates[id])
+            .sum();
+        total / cap
+    }
+
+    pub fn counters(&self, link: LinkId) -> LinkCounters {
+        self.counters[link.0]
+    }
+
+    pub fn owner_gb(&self, owner: usize) -> f64 {
+        *self.owner_gb.get(&owner).unwrap_or(&0.0)
+    }
+
+    pub fn capacity(&self, link: LinkId) -> f64 {
+        self.capacities[link.0]
+    }
+
+    /// Remaining GB of a flow (tests / introspection).
+    pub fn remaining(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.remaining)
+    }
+
+    /// Total per-link PS solves so far (comparable with
+    /// [`super::transfer::Fabric::rate_recomputes`]).
+    pub fn rate_recomputes(&self) -> u64 {
+        self.solver_calls.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_counts_solver_calls() {
+        let topo = HostTopology::p4d();
+        let mut f = ReferenceFabric::new(&topo);
+        f.start(LinkId(0), 10.0, 1.0, None, 0);
+        f.start(LinkId(1), 10.0, 1.0, None, 1);
+        assert_eq!(f.rate_recomputes(), 0);
+        let _ = f.rates();
+        // One solve per non-empty link.
+        assert_eq!(f.rate_recomputes(), 2);
+        let _ = f.next_completion();
+        assert_eq!(f.rate_recomputes(), 4);
+        f.advance(0.1);
+        assert_eq!(f.rate_recomputes(), 6);
+    }
+}

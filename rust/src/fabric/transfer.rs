@@ -1,12 +1,44 @@
-//! Fluid-flow transfer engine over the PS links.
+//! Incremental fluid-flow transfer engine over the PS links.
 //!
 //! The simulator advances in events; between events every active flow
-//! progresses at its current PS rate. Whenever the flow set (or a throttle)
-//! changes, rates are recomputed and the earliest completion time shifts —
-//! the sim world re-queries [`Fabric::next_completion`] after every
+//! progresses at its current PS rate. Whenever the flow set (or a
+//! throttle) changes, rates shift and the earliest completion time moves
+//! — the sim world re-queries [`Fabric::next_completion`] after every
 //! mutation and versions its pending completion events.
+//!
+//! Unlike the from-scratch reference engine
+//! ([`super::reference::ReferenceFabric`]), this implementation keeps
+//! **per-link state** so a mutation touches only the link it lands on:
+//!
+//! * each link owns its flow-id set plus a cached PS rate vector and a
+//!   dirty flag — `start`/`remove`/`set_owner_cap` just mark the affected
+//!   link(s) dirty, and the water-filling solver
+//!   ([`super::ps::ps_rates_into`], into reusable scratch buffers — no
+//!   allocations in steady state) re-runs only for dirty links at the
+//!   next query;
+//! * [`Fabric::advance`] applies the cached rates — it never re-solves a
+//!   clean link — and accumulates the per-link/per-owner service
+//!   integrals (counters, `owner_gb`) in the same pass;
+//! * a [`super::calendar::CompletionCalendar`] (versioned min-heap over
+//!   per-link earliest completions) answers
+//!   [`Fabric::next_completion`] in O(log links): `advance` refreshes
+//!   every link's candidate while it is already touching the flows, and
+//!   solving a dirty link refreshes just that link's slot.
+//!
+//! **Bit-compatibility contract.** All observable outputs — rates,
+//! completion picks (including the lowest-`FlowId` tie-break), counters,
+//! `owner_gb`, remaining bytes — are bit-identical to the reference
+//! engine's. That requires preserving the reference's floating-point
+//! operation *order*: per-link demand vectors iterate flows in ascending
+//! `FlowId` order, service accounting applies at the same `advance`
+//! segment boundaries (cached rates are constant between solves, so each
+//! segment multiplies the same rate bits), and `owner_gb` accumulates in
+//! global `FlowId` order across links. The differential property tests
+//! and the catalog fingerprint regression enforce the contract against
+//! the oracle; do not reorder these loops without re-running them.
 
-use super::ps::{ps_rates, FlowDemand};
+use super::calendar::CompletionCalendar;
+use super::ps::{ps_rates_into, FlowDemand};
 use crate::topo::{HostTopology, LinkId};
 use std::collections::BTreeMap;
 
@@ -23,6 +55,8 @@ struct Flow {
     remaining: f64,
     /// Opaque owner tag (tenant index) for telemetry attribution.
     owner: usize,
+    /// Cached PS rate (GB/s); valid while the flow's link is clean.
+    rate: f64,
 }
 
 /// Cumulative per-link counters (the "PCIe counters (bytes/s)" the
@@ -35,15 +69,43 @@ pub struct LinkCounters {
     pub util_integral: f64,
 }
 
+/// One shared-bandwidth domain's incremental state.
+#[derive(Clone, Debug)]
+struct LinkState {
+    capacity: f64,
+    /// Flows on this link, ascending by id (ids are handed out
+    /// monotonically, so `start` appends and order is maintained for
+    /// free — the solver must see demands in id order for bit-identical
+    /// water-filling).
+    flow_ids: Vec<FlowId>,
+    /// Set by mutations; cleared by the next solve.
+    dirty: bool,
+    /// Cached Σ rates over `flow_ids` (in id order), for utilization and
+    /// the util-integral accumulation.
+    link_rate: f64,
+    counters: LinkCounters,
+    /// Solver scratch, reused across solves (allocation-free steady
+    /// state).
+    demands: Vec<FlowDemand>,
+    rates: Vec<f64>,
+}
+
 /// All shared links on a host plus the active flows crossing them.
 #[derive(Clone, Debug)]
 pub struct Fabric {
-    capacities: Vec<f64>,
+    links: Vec<LinkState>,
+    /// Global flow table in id order — the iteration order service
+    /// accounting and the rate map preserve.
     flows: BTreeMap<FlowId, Flow>,
     next_id: u64,
-    counters: Vec<LinkCounters>,
-    /// Per-owner cumulative GB (tenant attribution).
-    owner_gb: BTreeMap<usize, f64>,
+    /// Per-owner cumulative GB, indexed by owner tag (grown on demand).
+    owner_gb: Vec<f64>,
+    calendar: CompletionCalendar,
+    /// Water-filling scratch shared across links.
+    fixed_scratch: Vec<bool>,
+    /// Per-link earliest-completion candidates gathered during `advance`.
+    adv_best: Vec<Option<(f64, FlowId)>>,
+    rate_recomputes: u64,
 }
 
 impl Fabric {
@@ -55,16 +117,32 @@ impl Fabric {
         for n in &topo.numa_nodes {
             capacities[n.nvme_link.0] = n.nvme_gbps;
         }
+        let links = capacities
+            .iter()
+            .map(|&capacity| LinkState {
+                capacity,
+                flow_ids: Vec::new(),
+                dirty: false,
+                link_rate: 0.0,
+                counters: LinkCounters::default(),
+                demands: Vec::new(),
+                rates: Vec::new(),
+            })
+            .collect();
         Fabric {
-            counters: vec![LinkCounters::default(); capacities.len()],
-            capacities,
+            links,
             flows: BTreeMap::new(),
             next_id: 1,
-            owner_gb: BTreeMap::new(),
+            owner_gb: Vec::new(),
+            calendar: CompletionCalendar::new(capacities.len()),
+            fixed_scratch: Vec::new(),
+            adv_best: vec![None; capacities.len()],
+            rate_recomputes: 0,
         }
     }
 
-    /// Start a transfer of `gb` on `link`. Returns its id.
+    /// Start a transfer of `gb` on `link`. Returns its id. O(1): only
+    /// the target link is invalidated.
     pub fn start(
         &mut self,
         link: LinkId,
@@ -76,6 +154,9 @@ impl Fabric {
         debug_assert!(gb > 0.0 && weight > 0.0);
         let id = FlowId(self.next_id);
         self.next_id += 1;
+        if owner >= self.owner_gb.len() {
+            self.owner_gb.resize(owner + 1, 0.0);
+        }
         self.flows.insert(
             id,
             Flow {
@@ -84,22 +165,36 @@ impl Fabric {
                 cap,
                 remaining: gb,
                 owner,
+                rate: 0.0,
             },
         );
+        let l = &mut self.links[link.0];
+        l.flow_ids.push(id); // ids are monotone: stays sorted
+        l.dirty = true;
         id
     }
 
     /// Remove a flow (normally after it completes). Returns the owner.
+    /// O(flows on its link): only that link is invalidated.
     pub fn remove(&mut self, id: FlowId) -> Option<usize> {
-        self.flows.remove(&id).map(|f| f.owner)
+        let f = self.flows.remove(&id)?;
+        let l = &mut self.links[f.link.0];
+        if let Ok(pos) = l.flow_ids.binary_search(&id) {
+            l.flow_ids.remove(pos);
+        }
+        l.dirty = true;
+        Some(f.owner)
     }
 
     /// Apply/remove a throttle g_i on every flow owned by `owner`
     /// (the cgroup `io.max` guardrail acts per-tenant, not per-flow).
+    /// Invalidates only the links carrying that owner's flows.
     pub fn set_owner_cap(&mut self, owner: usize, cap: Option<f64>) {
-        for f in self.flows.values_mut() {
+        let Fabric { links, flows, .. } = self;
+        for f in flows.values_mut() {
             if f.owner == owner {
                 f.cap = cap;
+                links[f.link.0].dirty = true;
             }
         }
     }
@@ -112,121 +207,187 @@ impl Fabric {
         self.flows.len()
     }
 
-    /// Current rate of each flow (GB/s), keyed by flow id.
-    pub fn rates(&self) -> BTreeMap<FlowId, f64> {
-        let mut out = BTreeMap::new();
-        for link in 0..self.capacities.len() {
-            let ids: Vec<FlowId> = self
-                .flows
-                .iter()
-                .filter(|(_, f)| f.link.0 == link)
-                .map(|(&id, _)| id)
-                .collect();
-            if ids.is_empty() {
+    /// Re-run the water-filling solver for one link's flow set, caching
+    /// the per-flow rates and the link-rate sum. The demand vector is
+    /// built in ascending id order — the same order the reference engine
+    /// feeds the solver — into reusable scratch.
+    fn solve(link: &mut LinkState, flows: &mut BTreeMap<FlowId, Flow>, fixed: &mut Vec<bool>) {
+        link.demands.clear();
+        for id in &link.flow_ids {
+            let f = &flows[id];
+            link.demands.push(FlowDemand {
+                weight: f.weight,
+                cap: f.cap,
+            });
+        }
+        ps_rates_into(link.capacity, &link.demands, fixed, &mut link.rates);
+        let mut sum = 0.0;
+        for (id, &r) in link.flow_ids.iter().zip(link.rates.iter()) {
+            flows.get_mut(id).expect("link flow in table").rate = r;
+            sum += r;
+        }
+        link.link_rate = sum;
+        link.dirty = false;
+    }
+
+    /// Solve `l` if dirty and refresh its calendar slot. Empty-link
+    /// solves (clearing state after the last flow left) are not counted:
+    /// the reference oracle's counter only ticks for non-empty links, and
+    /// the two must stay comparable.
+    fn ensure_link(&mut self, l: usize) {
+        if !self.links[l].dirty {
+            return;
+        }
+        Self::solve(&mut self.links[l], &mut self.flows, &mut self.fixed_scratch);
+        if !self.links[l].flow_ids.is_empty() {
+            self.rate_recomputes += 1;
+        }
+        self.refresh_calendar(l);
+    }
+
+    /// Recompute link `l`'s earliest-completion candidate from current
+    /// remainings/rates: first minimum in ascending id order (strict `<`),
+    /// matching the reference engine's global-scan tie-break.
+    fn refresh_calendar(&mut self, l: usize) {
+        let link = &self.links[l];
+        let mut best: Option<(f64, FlowId)> = None;
+        for id in &link.flow_ids {
+            let f = &self.flows[id];
+            if f.rate <= 0.0 {
                 continue;
             }
-            let demands: Vec<FlowDemand> = ids
-                .iter()
-                .map(|id| {
-                    let f = &self.flows[id];
-                    FlowDemand {
-                        weight: f.weight,
-                        cap: f.cap,
-                    }
-                })
-                .collect();
-            let rates = ps_rates(self.capacities[link], &demands);
-            for (id, r) in ids.into_iter().zip(rates) {
-                out.insert(id, r);
+            let dt = f.remaining / f.rate;
+            if best.map(|(bt, _)| dt < bt).unwrap_or(true) {
+                best = Some((dt, *id));
             }
         }
-        out
+        self.calendar.set(l, best);
+    }
+
+    /// Current rate of each flow (GB/s), keyed by flow id.
+    pub fn rates(&mut self) -> BTreeMap<FlowId, f64> {
+        for l in 0..self.links.len() {
+            self.ensure_link(l);
+        }
+        self.flows.iter().map(|(&id, f)| (id, f.rate)).collect()
     }
 
     /// Instantaneous rate of one flow.
-    pub fn rate_of(&self, id: FlowId) -> f64 {
-        *self.rates().get(&id).unwrap_or(&0.0)
+    pub fn rate_of(&mut self, id: FlowId) -> f64 {
+        let Some(f) = self.flows.get(&id) else {
+            return 0.0;
+        };
+        let l = f.link.0;
+        self.ensure_link(l);
+        self.flows[&id].rate
     }
 
     /// Earliest (dt, flow) completion under current rates, if any flow is
-    /// active and draining.
-    pub fn next_completion(&self) -> Option<(f64, FlowId)> {
-        let rates = self.rates();
-        let mut best: Option<(f64, FlowId)> = None;
-        for (&id, f) in &self.flows {
-            let r = rates[&id];
-            if r <= 0.0 {
-                continue;
-            }
-            let dt = f.remaining / r;
-            if best.map(|(bt, _)| dt < bt).unwrap_or(true) {
-                best = Some((dt, id));
-            }
+    /// active and draining. O(log links) via the calendar: only links
+    /// dirtied since the last query are re-solved/rescanned.
+    pub fn next_completion(&mut self) -> Option<(f64, FlowId)> {
+        for l in 0..self.links.len() {
+            self.ensure_link(l);
         }
-        best
+        self.calendar.earliest()
     }
 
     /// Advance all flows by `dt` seconds at current rates, accumulating
-    /// telemetry counters. Flows that hit zero are left at zero remaining
-    /// (the caller removes them when their completion event fires).
+    /// the per-link/per-owner service integrals. Flows that hit zero are
+    /// left at zero remaining (the caller removes them when their
+    /// completion event fires). Allocation-free; clean links keep their
+    /// cached rate vectors, and every link's completion candidate is
+    /// refreshed in the same pass.
     pub fn advance(&mut self, dt: f64) {
         if dt <= 0.0 {
             return;
         }
-        let rates = self.rates();
-        for (&id, f) in self.flows.iter_mut() {
-            let r = rates[&id];
-            let moved = (r * dt).min(f.remaining);
-            f.remaining -= moved;
-            self.counters[f.link.0].gb_total += moved;
-            *self.owner_gb.entry(f.owner).or_insert(0.0) += moved;
-        }
-        for link in 0..self.capacities.len() {
-            let cap = self.capacities[link];
-            if cap <= 0.0 {
-                continue;
+        let Fabric {
+            links,
+            flows,
+            owner_gb,
+            calendar,
+            adv_best,
+            fixed_scratch,
+            rate_recomputes,
+            ..
+        } = self;
+        // Rates must reflect every mutation since the last solve — the
+        // reference engine recomputes from scratch at this point. As in
+        // `ensure_link`, empty-link solves are free of charge: the
+        // reference counter never ticks for links without flows.
+        for link in links.iter_mut() {
+            if link.dirty {
+                Self::solve(link, flows, fixed_scratch);
+                if !link.flow_ids.is_empty() {
+                    *rate_recomputes += 1;
+                }
             }
-            let link_rate: f64 = self
-                .flows
-                .iter()
-                .filter(|(_, f)| f.link.0 == link)
-                .map(|(id, _)| rates[id])
-                .sum();
-            self.counters[link].util_integral += (link_rate / cap) * dt;
+        }
+        for b in adv_best.iter_mut() {
+            *b = None;
+        }
+        // Global id order: the reference engine interleaves links the
+        // same way, which fixes the `owner_gb` accumulation order for
+        // owners with flows on several links.
+        for (&id, f) in flows.iter_mut() {
+            let moved = (f.rate * dt).min(f.remaining);
+            f.remaining -= moved;
+            links[f.link.0].counters.gb_total += moved;
+            owner_gb[f.owner] += moved;
+            if f.rate > 0.0 {
+                let cdt = f.remaining / f.rate;
+                let b = &mut adv_best[f.link.0];
+                if b.map(|(bt, _)| cdt < bt).unwrap_or(true) {
+                    *b = Some((cdt, id));
+                }
+            }
+        }
+        for link in links.iter_mut() {
+            // Empty links would add an exact 0.0 — skipping them is a
+            // bitwise no-op (the reference adds the zero).
+            if link.capacity > 0.0 && !link.flow_ids.is_empty() {
+                link.counters.util_integral += (link.link_rate / link.capacity) * dt;
+            }
+        }
+        for (l, best) in adv_best.iter().enumerate() {
+            calendar.set(l, *best);
         }
     }
 
     /// Link utilization right now (0..1).
-    pub fn utilization(&self, link: LinkId) -> f64 {
-        let cap = self.capacities[link.0];
-        if cap <= 0.0 {
+    pub fn utilization(&mut self, link: LinkId) -> f64 {
+        let l = link.0;
+        if self.links[l].capacity <= 0.0 {
             return 0.0;
         }
-        let rates = self.rates();
-        let total: f64 = self
-            .flows
-            .iter()
-            .filter(|(_, f)| f.link == link)
-            .map(|(id, _)| rates[id])
-            .sum();
-        total / cap
+        self.ensure_link(l);
+        self.links[l].link_rate / self.links[l].capacity
     }
 
     pub fn counters(&self, link: LinkId) -> LinkCounters {
-        self.counters[link.0]
+        self.links[link.0].counters
     }
 
     pub fn owner_gb(&self, owner: usize) -> f64 {
-        *self.owner_gb.get(&owner).unwrap_or(&0.0)
+        self.owner_gb.get(owner).copied().unwrap_or(0.0)
     }
 
     pub fn capacity(&self, link: LinkId) -> f64 {
-        self.capacities[link.0]
+        self.links[link.0].capacity
     }
 
     /// Remaining GB of a flow (tests / introspection).
     pub fn remaining(&self, id: FlowId) -> Option<f64> {
         self.flows.get(&id).map(|f| f.remaining)
+    }
+
+    /// Per-link PS solver invocations so far — the perf-trajectory
+    /// counter the `scale_sweep` bench and the tier-1 recompute-ratio
+    /// test compare against
+    /// [`super::reference::ReferenceFabric::rate_recomputes`].
+    pub fn rate_recomputes(&self) -> u64 {
+        self.rate_recomputes
     }
 }
 
@@ -311,5 +472,59 @@ mod tests {
         assert!((f.remaining(a).unwrap() - 0.0).abs() < 1e-12);
         let c = f.counters(LinkId(0));
         assert!((c.gb_total - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mutations_only_resolve_the_affected_link() {
+        let mut f = fabric();
+        let a = f.start(LinkId(0), 10.0, 1.0, None, 0);
+        let a2 = f.start(LinkId(0), 10.0, 1.0, None, 0);
+        f.start(LinkId(1), 10.0, 1.0, None, 1);
+        // First query pays one solve per dirty (mutated) link.
+        f.next_completion();
+        assert_eq!(f.rate_recomputes(), 2);
+        // Steady state: clean links cost nothing.
+        f.next_completion();
+        f.advance(0.01);
+        f.next_completion();
+        assert_eq!(f.rate_recomputes(), 2);
+        // A mutation on link 0 re-solves only link 0.
+        f.remove(a);
+        f.next_completion();
+        assert_eq!(f.rate_recomputes(), 3);
+        // Removing a link's *last* flow clears state without a counted
+        // solve — the reference counter never ticks for empty links, and
+        // the two counters must stay comparable.
+        f.remove(a2);
+        f.next_completion();
+        assert_eq!(f.rate_recomputes(), 3);
+        // An owner cap on link 1's tenant re-solves only link 1.
+        f.set_owner_cap(1, Some(2.0));
+        f.next_completion();
+        assert_eq!(f.rate_recomputes(), 4);
+    }
+
+    #[test]
+    fn completion_ties_break_to_lowest_flow_id_across_links() {
+        let mut f = fabric();
+        // Same dt on two different links: 25 GB at 25 GB/s vs 8 GB at
+        // 8 GB/s — both complete in exactly 1 s.
+        let a = f.start(LinkId(0), 25.0, 1.0, None, 0);
+        let _b = f.start(LinkId(4), 8.0, 1.0, None, 1);
+        let (dt, first) = f.next_completion().unwrap();
+        assert_eq!(dt, 1.0);
+        assert_eq!(first, a, "lowest id must win exact ties");
+    }
+
+    #[test]
+    fn drained_flow_reports_zero_dt_until_removed() {
+        let mut f = fabric();
+        let a = f.start(LinkId(0), 5.0, 1.0, None, 0);
+        f.advance(10.0); // long past completion
+        let (dt, id) = f.next_completion().unwrap();
+        assert_eq!(id, a);
+        assert_eq!(dt, 0.0);
+        f.remove(a);
+        assert!(f.next_completion().is_none());
     }
 }

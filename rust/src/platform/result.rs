@@ -95,6 +95,14 @@ pub struct RunResult {
     pub arb_conflicts: u64,
     /// Arbitration: total deferred proposals (losses + validation holds).
     pub arb_deferrals: u64,
+    /// Total discrete events the run dispatched (perf trajectory).
+    pub sim_events: u64,
+    /// Per-link PS rate-vector recomputations the fabric performed — the
+    /// incremental engine's headline counter (the reference oracle counts
+    /// the same quantity, so `scale_sweep` can report the reduction).
+    /// Deterministic, but deliberately excluded from `fingerprint()` so
+    /// pre-refactor fingerprints stay byte-identical.
+    pub fabric_rate_recomputes: u64,
 }
 
 impl RunResult {

@@ -106,7 +106,7 @@ impl Scenario {
     // --- named catalog ----------------------------------------------------
 
     /// Catalog names accepted by [`Scenario::by_name`].
-    pub const CATALOG: [&'static str; 8] = [
+    pub const CATALOG: [&'static str; 9] = [
         "paper_single_host",
         "paper_llm_case",
         "steady_contention",
@@ -115,6 +115,7 @@ impl Scenario {
         "diurnal_burst",
         "auto_pack_24",
         "dueling_primaries",
+        "hotspot_64",
     ];
 
     /// Look a scenario up by catalog name ("single" and "llm" are accepted
@@ -134,6 +135,7 @@ impl Scenario {
             "diurnal_burst" => Scenario::diurnal_burst(seed, levers),
             "auto_pack_24" => Scenario::auto_pack_24(seed, levers),
             "dueling_primaries" => Scenario::dueling_primaries(seed, levers),
+            "hotspot_64" => Scenario::hotspot_64(seed, levers),
             _ => return None,
         })
     }
@@ -448,6 +450,130 @@ impl Scenario {
             b = b.add_auto(t);
         }
         b.build()
+    }
+
+    /// The tenant list behind [`Scenario::dense_hotspot`]: `n` mixed
+    /// tenants sized for dense Gen5 hosts — **every** placement an auto
+    /// request. Lighter asks than [`Scenario::auto_pack_tenants`] so
+    /// dozens of them can share two fat uplinks without the allocator
+    /// refusing admission. Deterministic in `(seed, n)`.
+    ///
+    /// Mix by index: `i % 4 == 0` → latency-sensitive service (the first
+    /// is the heavier frontend/primary), `i % 4 ∈ {1, 2}` → ETL pipeline,
+    /// `i % 4 == 3` → trainer.
+    pub fn hotspot_tenants(seed: u64, n: usize) -> Vec<TenantWorkload> {
+        let horizon = 1800.0;
+        let mut sched_rng = Pcg64::new(seed, 1000);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            match i % 4 {
+                0 => {
+                    let spec = if i == 0 {
+                        LsSpec {
+                            arrival_rps: 30.0,
+                            ..LsSpec::default()
+                        }
+                    } else {
+                        LsSpec {
+                            arrival_rps: 10.0,
+                            slo_ms: [20.0, 40.0, 60.0][(i / 4) % 3],
+                            compute_ref_ms: 5.0,
+                            ..LsSpec::default()
+                        }
+                    };
+                    let est = WorkloadSpec::LatencySensitive(spec.clone()).expected_pcie_gbps();
+                    out.push(TenantWorkload::latency_sensitive(
+                        format!("svc-{i}"),
+                        spec,
+                        PlacementSpec::auto(MigProfile::P2g20gb, est),
+                    ));
+                }
+                1 | 2 => {
+                    // Long transform phases keep each pipeline's sustained
+                    // PCIe demand moderate — the hot spot comes from how
+                    // many of them crowd one uplink, not from any single
+                    // heavy tenant.
+                    let spec = BwSpec {
+                        read_gb: 0.8,
+                        h2d_gb: 0.5,
+                        d2h_gb: 0.25,
+                        transform_ms: 200.0,
+                        ..BwSpec::default()
+                    };
+                    let schedule = InterferenceSchedule::generate(
+                        &mut sched_rng,
+                        horizon,
+                        40.0 + 5.0 * (i % 5) as f64,
+                        90.0,
+                        20.0,
+                    );
+                    let est = WorkloadSpec::BandwidthHeavy(spec.clone()).expected_pcie_gbps();
+                    out.push(TenantWorkload::bandwidth_heavy(
+                        format!("etl-{i}"),
+                        spec,
+                        schedule,
+                        PlacementSpec::auto(MigProfile::P1g10gb, est),
+                    ));
+                }
+                _ => {
+                    let spec = CompSpec::default();
+                    let schedule = InterferenceSchedule::generate(
+                        &mut sched_rng,
+                        horizon,
+                        60.0,
+                        120.0,
+                        30.0,
+                    );
+                    let est = WorkloadSpec::ComputeHeavy(spec.clone()).expected_pcie_gbps();
+                    out.push(TenantWorkload::compute_heavy(
+                        format!("train-{i}"),
+                        spec,
+                        schedule,
+                        PlacementSpec::auto(MigProfile::P1g10gb, est),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Generated dense co-location scenario on a Gen5 host: `n` mixed
+    /// auto-placed tenants ([`Scenario::hotspot_tenants`]) packed onto a
+    /// [`HostTopology::dense`] host whose switch count is sized from the
+    /// mix's slice demand (minimum two switches, so the contention story
+    /// is always "many tenants, few uplinks"). The `scale_sweep` bench
+    /// drives this from 24 to 256 tenants; the catalog pins `n = 64` as
+    /// [`Scenario::hotspot_64`].
+    pub fn dense_hotspot(seed: u64, n: usize, levers: Levers) -> Scenario {
+        assert!(n >= 4, "dense_hotspot needs at least one tenant of each kind");
+        const GPUS_PER_SWITCH: usize = 8;
+        const SLICES_PER_GPU: usize = 7; // A100 MIG compute slices
+        // Slice demand: 2 per latency-sensitive tenant (every 4th), 1
+        // otherwise; keep ≥25% slice slack so admission always places.
+        let slices = n + n.div_ceil(4);
+        let switches = (slices * 5)
+            .div_ceil(4 * GPUS_PER_SWITCH * SLICES_PER_GPU)
+            .max(2);
+        let topo = HostTopology::dense(switches, GPUS_PER_SWITCH, 64.0, 16.0);
+        let mut b = ScenarioBuilder::new(format!("hotspot_{n}"), seed)
+            .topo(topo)
+            .controller(ControllerConfig::dense_pack(levers))
+            .horizon(900.0);
+        for t in Scenario::hotspot_tenants(seed, n) {
+            b = b.add_auto(t);
+        }
+        b.build()
+    }
+
+    /// Catalog entry for the fabric-engine scale path: 64 auto-placed
+    /// tenants (16 services, 32 ETL pipelines, 16 trainers) contending on
+    /// **two** Gen5 PCIe switches (8 GPUs each) and their two NUMA NVMe
+    /// paths. This is the shape the incremental fabric engine exists for
+    /// — dozens of concurrent flows per link with continuous churn — and
+    /// having it in the catalog keeps the scale path covered by the tier-1
+    /// integration smoke, not just by benches.
+    pub fn hotspot_64(seed: u64, levers: Levers) -> Scenario {
+        Scenario::dense_hotspot(seed, 64, levers)
     }
 
     /// Arbitration stress case: two equally-entitled latency-sensitive
@@ -1091,6 +1217,50 @@ mod tests {
         assert!(!Scenario::paper_llm_case(3, Levers::full()).protect_all_ls);
         assert!(!Scenario::pcie_hotspot(3, Levers::full()).protect_all_ls);
         assert!(!Scenario::auto_pack_24(3, Levers::full()).protect_all_ls);
+        assert!(!Scenario::hotspot_64(3, Levers::full()).protect_all_ls);
+    }
+
+    #[test]
+    fn hotspot_64_shape_two_switches_fully_auto_placed() {
+        let s = Scenario::hotspot_64(11, Levers::full());
+        assert_eq!(s.n_tenants(), 64);
+        assert_eq!(s.topo.switches.len(), 2, "the contention story is two uplinks");
+        assert_eq!(s.topo.num_gpus, 16);
+        assert_eq!(s.tenants[s.primary].kind(), TenantKind::LatencySensitive);
+        let mut kinds = (0usize, 0usize, 0usize);
+        for (i, t) in s.tenants.iter().enumerate() {
+            assert!(!t.placement.is_auto(), "tenant {i} unresolved");
+            assert!(t.placement.start.is_some(), "tenant {i} has no slot");
+            assert!(t.placement.gpu < s.topo.num_gpus);
+            match t.kind() {
+                TenantKind::LatencySensitive => kinds.0 += 1,
+                TenantKind::BandwidthHeavy => kinds.1 += 1,
+                TenantKind::ComputeHeavy => kinds.2 += 1,
+            }
+        }
+        assert_eq!(kinds, (16, 32, 16));
+        assert!(s.layout.all_placed());
+        // Both uplinks carry real expected load — a hot spot on each.
+        for sw in &s.topo.switches {
+            let gbps = s.layout.link_gbps[sw.link.0];
+            assert!(
+                gbps > 0.4 * sw.bandwidth_gbps,
+                "uplink {:?} barely loaded: {gbps} GB/s",
+                sw.link
+            );
+        }
+    }
+
+    #[test]
+    fn dense_hotspot_scales_topology_with_tenant_count() {
+        // Covers every N the scale_sweep bench runs, so an admission
+        // regression surfaces here instead of as a CI bench panic.
+        for n in [24usize, 64, 128, 256] {
+            let s = Scenario::dense_hotspot(5, n, Levers::none());
+            assert_eq!(s.n_tenants(), n, "n={n}");
+            assert!(s.layout.all_placed(), "n={n}: admission refused someone");
+            assert!(s.topo.switches.len() >= 2);
+        }
     }
 
     #[test]

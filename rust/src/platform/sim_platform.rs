@@ -33,7 +33,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use crate::controller::view::{InstanceView, TenantView};
 use crate::controller::{Action, Arbiter, IsolationChange, PlannerView, Protected};
-use crate::fabric::{Fabric, FlowId};
+use crate::fabric::{FabricBackend, FabricKind, FlowId};
 use crate::gpu::{A100Gpu, InstanceId, MigProfile};
 use crate::sim::EventQueue;
 use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TenantSignal};
@@ -189,7 +189,7 @@ const RECONFIG_STREAM: u64 = 6;
 pub struct SimWorld {
     pub scenario: Scenario,
     q: EventQueue<Event>,
-    fabric: Fabric,
+    fabric: FabricBackend,
     fabric_synced_at: f64,
     fabric_version: u64,
     flow_purpose: BTreeMap<FlowId, Purpose>,
@@ -231,6 +231,15 @@ impl SimWorld {
     /// The paper baseline: GPU0 = [4g.40gb: primary + trainer via MPS,
     /// 3g.40gb: ETL], spare 3g.40gb on GPU1.
     pub fn new(scenario: Scenario) -> SimWorld {
+        Self::new_with_fabric(scenario, FabricKind::Incremental)
+    }
+
+    /// Build the world on an explicit fabric engine. Production paths use
+    /// [`SimWorld::new`] (the incremental engine); the `Reference` kind
+    /// exists for the differential oracle — fingerprint-regression tests
+    /// and the `scale_sweep` bench run the same scenario on both engines
+    /// and require bit-identical results.
+    pub fn new_with_fabric(scenario: Scenario, fabric_kind: FabricKind) -> SimWorld {
         let seed = scenario.seed;
         let n = scenario.n_tenants();
         let mut gpus: Vec<A100Gpu> = (0..scenario.topo.num_gpus).map(A100Gpu::new).collect();
@@ -318,7 +327,7 @@ impl SimWorld {
             }
         }
 
-        let fabric = Fabric::new(&scenario.topo);
+        let fabric = FabricBackend::new(&scenario.topo, fabric_kind);
         let n_links = scenario.topo.num_links;
         let control = scenario.controller.levers.any().then(|| {
             if scenario.protect_all_ls {
@@ -346,7 +355,11 @@ impl SimWorld {
         });
 
         let mut w = SimWorld {
-            q: EventQueue::new(),
+            // Each tenant keeps a bounded handful of outstanding events
+            // (arrival + in-flight transfers + compute/cycle timers), so
+            // pre-sizing by tenant count avoids early regrow churn in
+            // fleet-scale worlds.
+            q: EventQueue::with_capacity(16 * n + 64),
             fabric,
             fabric_synced_at: 0.0,
             fabric_version: 0,
@@ -1412,6 +1425,8 @@ impl SimWorld {
             controller_stats,
             arb_conflicts: arb.conflicts,
             arb_deferrals: arb.deferrals,
+            sim_events: self.q.events_processed(),
+            fabric_rate_recomputes: self.fabric.rate_recomputes(),
         }
     }
 }

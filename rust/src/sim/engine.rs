@@ -70,8 +70,15 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    /// Pre-size the heap (e.g. from a scenario's tenant count) so large
+    /// worlds don't pay repeated regrow/copy churn while the event
+    /// population ramps up early in a run.
+    pub fn with_capacity(capacity: usize) -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            heap: BinaryHeap::with_capacity(capacity),
             seq: 0,
             now: 0.0,
             popped: 0,
@@ -206,6 +213,17 @@ mod tests {
     fn push_at_rejects_nan_time() {
         let mut q = EventQueue::new();
         q.push_at(f64::NAN, 1u32);
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut q = EventQueue::with_capacity(128);
+        assert!(q.is_empty());
+        q.push_at(2.0, "b");
+        q.push_at(1.0, "a");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().1, "a");
+        assert_eq!(q.pop().unwrap().1, "b");
     }
 
     #[test]

@@ -62,6 +62,45 @@ impl HostTopology {
         }
     }
 
+    /// A dense many-GPU host for fleet-scale scenarios: `switches` PCIe
+    /// switches with `gpus_per_switch` GPUs each (Gen5-class fat uplinks),
+    /// one NUMA domain per switch with a local NVMe path. This is the
+    /// topology behind the `hotspot_64` catalog entry (2 switches × 8
+    /// GPUs) and the `scale_sweep` bench's generated 64–256-tenant
+    /// scenarios.
+    pub fn dense(
+        switches: usize,
+        gpus_per_switch: usize,
+        link_gbps: f64,
+        nvme_gbps: f64,
+    ) -> HostTopology {
+        assert!(switches > 0 && gpus_per_switch > 0);
+        let mut sw = Vec::with_capacity(switches);
+        for s in 0..switches {
+            sw.push(PcieSwitch {
+                id: SwitchId(s),
+                numa: s,
+                link: LinkId(s),
+                gpus: (s * gpus_per_switch..(s + 1) * gpus_per_switch).collect(),
+                bandwidth_gbps: link_gbps,
+            });
+        }
+        let numa_nodes = (0..switches)
+            .map(|n| NumaNode {
+                id: n,
+                cores: n * 24..(n + 1) * 24,
+                nvme_link: LinkId(switches + n),
+                nvme_gbps,
+            })
+            .collect();
+        HostTopology {
+            numa_nodes,
+            switches: sw,
+            num_gpus: switches * gpus_per_switch,
+            num_links: switches * 2,
+        }
+    }
+
     /// A single-GPU development host (unit tests / quickstart).
     pub fn single_gpu() -> HostTopology {
         HostTopology {
@@ -176,5 +215,24 @@ mod tests {
     #[should_panic]
     fn unknown_link_panics() {
         HostTopology::p4d().link_capacity(LinkId(99));
+    }
+
+    #[test]
+    fn dense_shape() {
+        let t = HostTopology::dense(2, 8, 64.0, 16.0);
+        assert_eq!(t.num_gpus, 16);
+        assert_eq!(t.switches.len(), 2);
+        assert_eq!(t.numa_nodes.len(), 2);
+        assert_eq!(t.num_links, 4);
+        for g in 0..16 {
+            assert_eq!(t.switches.iter().filter(|s| s.hosts_gpu(g)).count(), 1);
+        }
+        assert!(t.share_switch(0, 7));
+        assert!(!t.share_switch(7, 8));
+        assert_eq!(t.numa_of_gpu(0), 0);
+        assert_eq!(t.numa_of_gpu(15), 1);
+        assert_eq!(t.link_capacity(LinkId(0)), 64.0);
+        assert_eq!(t.link_capacity(LinkId(2)), 16.0);
+        assert_eq!(t.gpus_in_numa(1), (8..16).collect::<Vec<_>>());
     }
 }

@@ -134,6 +134,12 @@ pub struct WindowQuantiles {
     buf: Vec<f64>,
     head: usize,
     full: bool,
+    /// Requested window size. Deliberately stored instead of using
+    /// `buf.capacity()`: `Vec::with_capacity` only guarantees *at least*
+    /// the requested capacity, so keying the ring wrap-around off the
+    /// Vec's actual capacity would silently grow the window beyond the
+    /// requested size — and make its length allocator-dependent.
+    cap: usize,
     scratch: Vec<f64>,
 }
 
@@ -144,6 +150,7 @@ impl WindowQuantiles {
             buf: Vec::with_capacity(capacity),
             head: 0,
             full: false,
+            cap: capacity,
             scratch: Vec::with_capacity(capacity),
         }
     }
@@ -151,13 +158,18 @@ impl WindowQuantiles {
     pub fn observe(&mut self, x: f64) {
         if self.full {
             self.buf[self.head] = x;
-            self.head = (self.head + 1) % self.buf.capacity();
+            self.head = (self.head + 1) % self.cap;
         } else {
             self.buf.push(x);
-            if self.buf.len() == self.buf.capacity() {
+            if self.buf.len() == self.cap {
                 self.full = true;
             }
         }
+    }
+
+    /// The requested window size (not the backing Vec's capacity).
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 
     pub fn len(&self) -> usize {
@@ -298,5 +310,38 @@ mod tests {
     fn window_empty_returns_none() {
         let mut w = WindowQuantiles::new(4);
         assert_eq!(w.quantile(0.99), None);
+    }
+
+    #[test]
+    fn window_never_exceeds_requested_capacity() {
+        // Regression: the ring wrap-around must key off the *requested*
+        // capacity, not `Vec::capacity()` (which is only a lower bound and
+        // may over-allocate) — otherwise the window silently grows and its
+        // contents become allocator-dependent.
+        for cap in [1usize, 3, 5, 7, 100] {
+            let mut w = WindowQuantiles::new(cap);
+            assert_eq!(w.capacity(), cap);
+            for i in 0..(cap * 4 + 3) {
+                w.observe(i as f64);
+                assert!(w.len() <= cap, "cap {cap}: window grew to {}", w.len());
+            }
+            assert_eq!(w.len(), cap);
+            assert_eq!(w.capacity(), cap);
+        }
+    }
+
+    #[test]
+    fn window_eviction_is_exact_fifo_after_many_wraps() {
+        let cap = 5;
+        let mut w = WindowQuantiles::new(cap);
+        for i in 1..=23 {
+            w.observe(i as f64);
+        }
+        // Window must hold exactly the last 5 observations: 19..=23.
+        assert_eq!(w.len(), cap);
+        assert_eq!(w.quantile(0.2), Some(19.0));
+        assert_eq!(w.quantile(0.5), Some(21.0));
+        assert_eq!(w.quantile(1.0), Some(23.0));
+        assert_eq!(w.frac_above(21.5), 2.0 / 5.0);
     }
 }

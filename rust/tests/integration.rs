@@ -107,7 +107,11 @@ fn catalog_smoke_matrix() {
     for name in Scenario::CATALOG {
         let mut s = Scenario::by_name(name, 19, Levers::full())
             .unwrap_or_else(|| panic!("catalog name {name} did not resolve"));
-        let horizon = 700.0;
+        // The 64-tenant dense world is an order of magnitude more events
+        // per simulated second than the rest of the catalog; a shorter
+        // horizon keeps the debug-mode smoke affordable while still
+        // exercising hundreds of thousands of fabric events.
+        let horizon = if name == "hotspot_64" { 180.0 } else { 700.0 };
         s.horizon = horizon;
         let n = s.n_tenants();
         let primary = s.primary;
@@ -298,6 +302,70 @@ fn dueling_primaries_both_tenants_act_deterministically() {
     assert_eq!(r.fingerprint(), r2.fingerprint());
     assert_eq!(r.arb_conflicts, r2.arb_conflicts);
     assert_eq!(r.arb_deferrals, r2.arb_deferrals);
+}
+
+/// Acceptance smoke for the incremental-fabric tentpole's scale path:
+/// the 64-tenant two-switch catalog scenario completes end to end with
+/// stats for all 64 tenants, replays deterministically, and genuinely
+/// loads both uplinks (the hot spot the engine exists for).
+#[test]
+fn hotspot_64_runs_end_to_end_with_stats_for_all_tenants() {
+    use predserve::tenants::TenantKind;
+    let mk = || {
+        let mut s = Scenario::by_name("hotspot_64", 29, Levers::full()).unwrap();
+        s.horizon = 240.0;
+        SimWorld::new(s).run()
+    };
+    let r = mk();
+    assert_eq!(r.per_tenant.len(), 64);
+    assert!(r.completed > 3_000, "primary completed {}", r.completed);
+    let ls = r
+        .per_tenant
+        .iter()
+        .filter(|t| t.kind == TenantKind::LatencySensitive)
+        .count();
+    assert_eq!(ls, 16, "the 64-tenant mix carries 16 latency-sensitive services");
+    for t in &r.per_tenant {
+        if t.kind == TenantKind::LatencySensitive {
+            assert!(t.completed > 0, "{}: no requests", t.name);
+            assert!(t.slo_ms < f64::MAX);
+        }
+    }
+    // Both PCIe uplinks moved a real share of the traffic.
+    assert!(r.link_gb[0] > 0.0 && r.link_gb[1] > 0.0);
+    let r2 = mk();
+    assert_eq!(r.fingerprint(), r2.fingerprint());
+}
+
+/// Tentpole acceptance: at fleet scale (N=24) the incremental engine
+/// performs at least 5× fewer per-link PS rate recomputations per run
+/// than the from-scratch reference — while producing the byte-identical
+/// result.
+#[test]
+fn incremental_fabric_cuts_rate_recomputes_5x_at_n24() {
+    use predserve::fabric::FabricKind;
+    let mk = |kind| {
+        let mut s = Scenario::by_name("auto_pack_24", 29, Levers::full()).unwrap();
+        s.horizon = 120.0;
+        SimWorld::new_with_fabric(s, kind).run()
+    };
+    let inc = mk(FabricKind::Incremental);
+    let refr = mk(FabricKind::Reference);
+    assert_eq!(
+        inc.fingerprint(),
+        refr.fingerprint(),
+        "engines must agree before their counters are comparable"
+    );
+    assert_eq!(inc.sim_events, refr.sim_events);
+    assert!(inc.sim_events > 0 && inc.fabric_rate_recomputes > 0);
+    let ratio = refr.fabric_rate_recomputes as f64 / inc.fabric_rate_recomputes as f64;
+    assert!(
+        ratio >= 5.0,
+        "recompute reduction only {ratio:.2}x ({} vs {} over {} events)",
+        refr.fabric_rate_recomputes,
+        inc.fabric_rate_recomputes,
+        inc.sim_events
+    );
 }
 
 #[test]

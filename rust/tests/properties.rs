@@ -9,6 +9,7 @@
 use predserve::alloc::{AutoRequest, FleetAllocator, HostAllocator, SlotOutcome};
 use predserve::controller::{ControllerConfig, Levers};
 use predserve::fabric::ps::{ps_rates, FlowDemand};
+use predserve::fabric::{Fabric, FabricKind, FlowId, ReferenceFabric};
 use predserve::gpu::{A100Gpu, MigProfile};
 use predserve::platform::{Scenario, ScenarioBuilder, SimWorld};
 use predserve::serving::kvcache::{KvError, PagedKvCache};
@@ -726,6 +727,227 @@ fn single_primary_catalog_fingerprints_unchanged_by_control_plane() {
             !legacy.fingerprint().contains(";arb"),
             "{name}: single-primary fingerprint format changed"
         );
+    }
+}
+
+// --- incremental fabric vs reference oracle ---------------------------------
+
+/// One mutation/query step of a generated fabric schedule.
+#[derive(Clone, Copy, Debug)]
+enum FabOp {
+    Start {
+        link: usize,
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+        owner: usize,
+    },
+    /// Remove a live flow (index modulo the live count).
+    Remove { pick: usize },
+    SetOwnerCap { owner: usize, cap: Option<f64> },
+    Advance { dt: f64 },
+    /// The sim world's actual pattern: advance to the earliest completion
+    /// and retire the finished flow.
+    CompleteEarliest,
+}
+
+fn gen_fabric_schedule(rng: &mut Pcg64) -> Vec<FabOp> {
+    let n = 20 + rng.below(100) as usize;
+    (0..n)
+        .map(|_| match rng.below(10) {
+            0..=3 => FabOp::Start {
+                link: rng.below(6) as usize,
+                gb: rng.range_f64(0.01, 20.0),
+                weight: rng.range_f64(0.1, 4.0),
+                cap: rng.chance(0.4).then(|| rng.range_f64(0.2, 12.0)),
+                owner: rng.below(6) as usize,
+            },
+            4 | 5 => FabOp::Remove {
+                pick: rng.below(1 << 16) as usize,
+            },
+            6 => FabOp::SetOwnerCap {
+                owner: rng.below(6) as usize,
+                cap: rng.chance(0.6).then(|| rng.range_f64(0.2, 10.0)),
+            },
+            7 | 8 => FabOp::Advance {
+                dt: rng.range_f64(1e-4, 2.0),
+            },
+            _ => FabOp::CompleteEarliest,
+        })
+        .collect()
+}
+
+/// Bit-exact comparison of every observable the two engines expose.
+fn assert_fabrics_identical(
+    inc: &mut Fabric,
+    refr: &ReferenceFabric,
+    live: &[FlowId],
+    step: usize,
+) -> Result<(), String> {
+    let topo_links = 6; // p4d
+    if inc.active_flows() != refr.active_flows() {
+        return Err(format!(
+            "step {step}: flow counts {} vs {}",
+            inc.active_flows(),
+            refr.active_flows()
+        ));
+    }
+    let ri = inc.rates();
+    let rr = refr.rates();
+    if ri.len() != rr.len() {
+        return Err(format!("step {step}: rate map sizes differ"));
+    }
+    for (id, a) in &ri {
+        let b = rr.get(id).ok_or_else(|| format!("step {step}: {id:?} missing"))?;
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("step {step}: rate of {id:?}: {a} vs {b}"));
+        }
+    }
+    match (inc.next_completion(), refr.next_completion()) {
+        (None, None) => {}
+        (Some((da, ia)), Some((db, ib))) => {
+            if da.to_bits() != db.to_bits() || ia != ib {
+                return Err(format!(
+                    "step {step}: completion ({da}, {ia:?}) vs ({db}, {ib:?})"
+                ));
+            }
+        }
+        (a, b) => return Err(format!("step {step}: completion {a:?} vs {b:?}")),
+    }
+    for l in 0..topo_links {
+        let link = predserve::topo::LinkId(l);
+        let (ca, cb) = (inc.counters(link), refr.counters(link));
+        if ca.gb_total.to_bits() != cb.gb_total.to_bits()
+            || ca.util_integral.to_bits() != cb.util_integral.to_bits()
+        {
+            return Err(format!("step {step}: counters on link {l} diverged"));
+        }
+        if inc.utilization(link).to_bits() != refr.utilization(link).to_bits() {
+            return Err(format!("step {step}: utilization on link {l} diverged"));
+        }
+    }
+    for owner in 0..8 {
+        if inc.owner_gb(owner).to_bits() != refr.owner_gb(owner).to_bits() {
+            return Err(format!("step {step}: owner_gb({owner}) diverged"));
+        }
+    }
+    for id in live {
+        if inc.remaining(*id).map(f64::to_bits) != refr.remaining(*id).map(f64::to_bits) {
+            return Err(format!("step {step}: remaining({id:?}) diverged"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_incremental_fabric_matches_reference_oracle_bitwise() {
+    // The tentpole's core contract: over random start/remove/cap/advance
+    // schedules, the incremental per-link engine and the from-scratch
+    // reference oracle expose identical rates, completion picks,
+    // counters, owner attribution, and remaining bytes — to the bit.
+    check(
+        Config { cases: 128, seed: 0x30 },
+        "fabric differential",
+        gen_fabric_schedule,
+        |schedule| {
+            let topo = HostTopology::p4d();
+            let mut inc = Fabric::new(&topo);
+            let mut refr = ReferenceFabric::new(&topo);
+            let mut live: Vec<FlowId> = Vec::new();
+            for (step, op) in schedule.iter().enumerate() {
+                match *op {
+                    FabOp::Start {
+                        link,
+                        gb,
+                        weight,
+                        cap,
+                        owner,
+                    } => {
+                        let l = predserve::topo::LinkId(link);
+                        let a = inc.start(l, gb, weight, cap, owner);
+                        let b = refr.start(l, gb, weight, cap, owner);
+                        if a != b {
+                            return Err(format!("step {step}: ids diverged {a:?} vs {b:?}"));
+                        }
+                        live.push(a);
+                    }
+                    FabOp::Remove { pick } => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let id = live.swap_remove(pick % live.len());
+                        let a = inc.remove(id);
+                        let b = refr.remove(id);
+                        if a != b {
+                            return Err(format!("step {step}: remove owners {a:?} vs {b:?}"));
+                        }
+                    }
+                    FabOp::SetOwnerCap { owner, cap } => {
+                        inc.set_owner_cap(owner, cap);
+                        refr.set_owner_cap(owner, cap);
+                    }
+                    FabOp::Advance { dt } => {
+                        inc.advance(dt);
+                        refr.advance(dt);
+                    }
+                    FabOp::CompleteEarliest => {
+                        let a = inc.next_completion();
+                        let b = refr.next_completion();
+                        let same = match (a, b) {
+                            (None, None) => true,
+                            (Some((da, ia)), Some((db, ib))) => {
+                                da.to_bits() == db.to_bits() && ia == ib
+                            }
+                            _ => false,
+                        };
+                        if !same {
+                            return Err(format!("step {step}: completion {a:?} vs {b:?}"));
+                        }
+                        let Some((dt, id)) = a else { continue };
+                        inc.advance(dt);
+                        refr.advance(dt);
+                        inc.remove(id);
+                        refr.remove(id);
+                        live.retain(|&x| x != id);
+                    }
+                }
+                // Assert only every third step (plus the last): the
+                // comparison helper's queries solve every dirty link, so
+                // per-step asserts would never leave a mutate→advance
+                // sequence for `Fabric::advance`'s internal dirty-link
+                // solve path — the pattern production actually runs.
+                // Divergence inside an unchecked window still surfaces at
+                // the next checkpoint through counters/remaining bits.
+                if step % 3 == 2 || step + 1 == schedule.len() {
+                    assert_fabrics_identical(&mut inc, &refr, &live, step)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn catalog_fingerprints_pinned_to_reference_fabric() {
+    // Regression for the incremental-fabric rewrite: every catalog
+    // scenario must produce a byte-identical RunResult fingerprint
+    // whether the world runs on the incremental engine or on the
+    // verbatim pre-refactor implementation (`fabric::reference`) — which
+    // pins all pre-rewrite fingerprints exactly.
+    for name in Scenario::CATALOG {
+        let mk = |kind| {
+            let mut s = Scenario::by_name(name, 31, Levers::full()).unwrap();
+            s.horizon = 60.0;
+            SimWorld::new_with_fabric(s, kind).run()
+        };
+        let inc = mk(FabricKind::Incremental);
+        let refr = mk(FabricKind::Reference);
+        assert_eq!(
+            inc.fingerprint(),
+            refr.fingerprint(),
+            "{name}: incremental fabric changed observable behavior"
+        );
+        assert_eq!(inc.sim_events, refr.sim_events, "{name}: event stream changed");
     }
 }
 
