@@ -11,6 +11,7 @@ use predserve::fabric::Fabric;
 use predserve::platform::{Scenario, SimWorld};
 use predserve::serving::PagedKvCache;
 use predserve::sim::EventQueue;
+use predserve::tenants::{ArrivalProcess, ArrivalState, TraceSpec};
 use predserve::topo::{HostTopology, LinkId};
 use predserve::util::histogram::Histogram;
 use predserve::util::quantile::{P2Quantile, WindowQuantiles};
@@ -88,6 +89,34 @@ fn main() {
         std::hint::black_box(q.pop());
     });
 
+    // Trace replay: drain a 100k-event trace through the ArrivalState
+    // cursor — the per-arrival cost of the trace-driven arrival path.
+    let trace = {
+        let mut trng = Pcg64::seeded(17);
+        let mut gaps = Vec::with_capacity(100_000);
+        for _ in 0..100_000 {
+            gaps.push(trng.exp(50.0));
+        }
+        TraceSpec::from_gaps(gaps).unwrap()
+    };
+    let drained = trace.len() as u64;
+    let mut replay = ArrivalState::new(ArrivalProcess::Trace(trace));
+    let mut replay_rng = Pcg64::seeded(1);
+    report.bench_throughput(
+        "tenants: trace_replay drain (100k-event trace)",
+        drained,
+        "arrivals",
+        || {
+            let mut t = 0.0f64;
+            while let Some(g) = replay.next_gap(t, &mut replay_rng) {
+                t += g;
+                replay.note_emitted();
+            }
+            std::hint::black_box(t)
+        },
+    );
+    assert_eq!(replay.emitted(), drained, "trace replay lost arrivals");
+
     // KV cache alloc/append/release cycle.
     let mut cache = PagedKvCache::new(64, 16, 4);
     report.bench_fn("serving: kv alloc+append+release", 200, || {
@@ -126,6 +155,23 @@ fn main() {
         "sim: fabric recomputes per event",
         r.fabric_rate_recomputes as f64 / r.sim_events.max(1) as f64,
     );
+
+    // Release-mode differential oracle: the trace-replay path must
+    // reproduce the closed-form Poisson path bit for bit here too (the
+    // CI perf-smoke step doubles as the release-build check, exactly as
+    // scale_sweep does for the fabric engines).
+    let mut oracle = Scenario::paper_single_host(11, Levers::full());
+    oracle.horizon = 120.0;
+    let traced = oracle.with_presampled_traces();
+    let a = SimWorld::new(oracle).run();
+    let b = SimWorld::new(traced).run();
+    assert_eq!(
+        a.fingerprint(),
+        b.fingerprint(),
+        "trace-mode fingerprint diverged from the Poisson-presample oracle"
+    );
+    assert_eq!(a.sim_events, b.sim_events, "trace-mode event stream diverged");
+    report.metric("sim: trace oracle fingerprint match", 1.0);
 
     // End-to-end decode step through PJRT (needs artifacts).
     match predserve::serving::Engine::load_default() {

@@ -331,6 +331,75 @@ pub fn run_arbitration(repeats: &Repeats) -> String {
     )
 }
 
+/// Trace-replay ablation (`predserve trace`): each trace-driven catalog
+/// scenario vs its **rate-matched Poisson twin**
+/// ([`Scenario::rate_matched_poisson`] — identical mean load, open-loop
+/// Poisson pattern). Per LS tenant: SLO-miss and p99 under both arrival
+/// patterns plus the deltas (trace − poisson), averaged over the repeat
+/// set. Isolates what the arrival *pattern* — bursts, diurnal envelopes
+/// — does to tails at equal offered load.
+pub fn run_trace(repeats: &Repeats) -> String {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for name in ["trace_burst_32", "diurnal_trace_mix"] {
+        // Per-LS-tenant sums over seeds:
+        // (name, trace miss%, poisson miss%, trace p99, poisson p99, arrivals).
+        let mut per_ls: Vec<(String, f64, f64, f64, f64, u64)> = Vec::new();
+        let mut runs = 0usize;
+        for &seed in repeats.active_seeds() {
+            let mut s = Scenario::by_name(name, seed, Levers::full())
+                .expect("catalog name must resolve");
+            s.horizon = repeats.horizon_s;
+            let matched = s.rate_matched_poisson();
+            let rt = crate::platform::SimWorld::new(s).run();
+            let rp = crate::platform::SimWorld::new(matched).run();
+            runs += 1;
+            let mut k = 0;
+            for (tt, tp) in rt.per_tenant.iter().zip(&rp.per_tenant) {
+                if tt.slo_ms >= f64::MAX {
+                    continue; // background tenant
+                }
+                if k == per_ls.len() {
+                    per_ls.push((tt.name.clone(), 0.0, 0.0, 0.0, 0.0, 0));
+                }
+                per_ls[k].1 += tt.miss_rate * 100.0;
+                per_ls[k].2 += tp.miss_rate * 100.0;
+                per_ls[k].3 += tt.p99_ms;
+                per_ls[k].4 += tp.p99_ms;
+                per_ls[k].5 += tt.arrivals_emitted;
+                k += 1;
+            }
+        }
+        let n = runs.max(1) as f64;
+        for (tenant, miss_t, miss_p, p99_t, p99_p, emitted) in &per_ls {
+            rows.push(vec![
+                name.to_string(),
+                tenant.clone(),
+                format!("{:.0}", *emitted as f64 / n),
+                format!("{:.2}%", miss_t / n),
+                format!("{:.2}%", miss_p / n),
+                format!("{:+.2}pp", (miss_t - miss_p) / n),
+                format!("{:.2}", p99_t / n),
+                format!("{:.2}", p99_p / n),
+                format!("{:+.2}", (p99_t - p99_p) / n),
+            ]);
+        }
+    }
+    markdown_table(
+        &[
+            "Scenario",
+            "LS tenant",
+            "arrivals/run",
+            "miss (trace)",
+            "miss (poisson)",
+            "Δmiss",
+            "p99 ms (trace)",
+            "p99 ms (poisson)",
+            "Δp99 ms",
+        ],
+        &rows,
+    )
+}
+
 /// E3: sensitivity sweep over τ and Y (+ guardrail bounds).
 pub fn run_sensitivity(repeats: &Repeats) -> String {
     let mut rows = Vec::new();
@@ -432,6 +501,17 @@ mod tests {
         assert!(t.contains("multi_ls_slo_mix") && t.contains("dueling_primaries"));
         assert!(t.contains("chat-api") && t.contains("svc-gold"));
         assert!(t.contains("(host total)"));
+    }
+
+    #[test]
+    fn trace_ablation_renders_both_scenarios_and_deltas() {
+        let t = run_trace(&tiny());
+        assert!(t.contains("trace_burst_32") && t.contains("diurnal_trace_mix"));
+        // Every LS tenant of both scenarios shows up.
+        assert!(t.contains("svc-0") && t.contains("serving"));
+        assert!(t.contains("Δmiss") && t.contains("Δp99"));
+        // Rate-matched comparisons are deterministic end to end.
+        assert_eq!(t, run_trace(&tiny()));
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //!   overheads    regenerate Table 4
 //!   sensitivity  regenerate E3
 //!   arbitration  single-primary vs multi-primary control plane ablation
+//!   trace        trace-replay vs rate-matched Poisson ablation on the
+//!                trace-driven catalog scenarios (per-tenant ΔSLO-miss,
+//!                Δp99)
 //!   figures      regenerate Figure 2/3/4 series (CSV under target/paper/)
 //!   cluster      run the 2-node (16-GPU) cluster experiment (E9); with
 //!                --fleet, the leader splits one auto-placed tenant list
@@ -25,7 +28,7 @@ use predserve::platform::{Scenario, SimWorld};
 use predserve::serving::request::SamplingParams;
 use predserve::serving::Engine;
 
-const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
+const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--arrivals-trace FILE] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
 
 fn repeats(args: &Args) -> Repeats {
     let mut r = if args.flag("fast") {
@@ -92,6 +95,31 @@ fn main() -> Result<()> {
             if let Some(path) = args.get("config") {
                 config::load_into(&mut scenario, path)?;
             }
+            if let Some(path) = args.get("arrivals-trace") {
+                // Replay an external trace (JSON or CSV line format) as
+                // the primary tenant's arrival schedule.
+                use predserve::tenants::{ArrivalProcess, TraceSpec};
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let trace = if text.trim_start().starts_with('{') {
+                    TraceSpec::parse_json(&text)
+                } else {
+                    TraceSpec::parse_csv(&text)
+                }
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                println!(
+                    "replaying {path}: {} arrivals over {:.1}s (mean {:.2} rps)",
+                    trace.len(),
+                    trace.span(),
+                    trace.mean_rps()
+                );
+                let primary = scenario.primary;
+                scenario.tenants[primary]
+                    .spec
+                    .as_ls_mut()
+                    .expect("primary tenant must be latency-sensitive")
+                    .arrivals = Some(ArrivalProcess::Trace(trace));
+            }
             scenario.horizon = args.get_f64("horizon", scenario.horizon);
             let r = SimWorld::new(scenario).run();
             println!(
@@ -121,6 +149,14 @@ fn main() -> Result<()> {
                     t.rps,
                     t.gb_moved
                 );
+            }
+            for t in &r.per_tenant {
+                if let Some(ts) = t.trace_exhausted_at {
+                    println!(
+                        "  note: {} replayed its whole trace ({} arrivals, exhausted at t={ts:.1}s)",
+                        t.name, t.arrivals_emitted
+                    );
+                }
             }
             if !r.controller_stats.is_empty() {
                 println!(
@@ -220,6 +256,9 @@ fn main() -> Result<()> {
         }
         "arbitration" => {
             println!("{}", runs::run_arbitration(&repeats(&args)));
+        }
+        "trace" => {
+            println!("{}", runs::run_trace(&repeats(&args)));
         }
         "figures" => {
             let r = repeats(&args);

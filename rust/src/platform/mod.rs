@@ -19,4 +19,4 @@ pub mod sim_platform;
 
 pub use result::{RunResult, TenantControllerStats, TenantRunStats};
 pub use scenario::{Scenario, ScenarioBuilder};
-pub use sim_platform::SimWorld;
+pub use sim_platform::{arrival_stream, SimWorld};

@@ -22,6 +22,17 @@ pub struct TenantRunStats {
     pub rps: f64,
     /// Total GB this tenant moved across all shared links.
     pub gb_moved: f64,
+    /// Arrivals the tenant's arrival process emitted: requests for a
+    /// latency-sensitive tenant, cycle triggers for a trigger-driven
+    /// bandwidth-heavy tenant; 0 for tenants without an arrival side.
+    /// Deterministic, but excluded from `RunResult::fingerprint` so
+    /// pre-trace fingerprints stay byte-identical.
+    pub arrivals_emitted: u64,
+    /// Sim time at which a closed `ArrivalProcess::Trace` ran out of
+    /// gaps (`None` for open-ended processes, or when the run's horizon
+    /// ended first). Excluded from the fingerprint like
+    /// `arrivals_emitted`.
+    pub trace_exhausted_at: Option<f64>,
 }
 
 /// Per-controller statistics for one protected latency-sensitive tenant

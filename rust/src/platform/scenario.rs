@@ -17,8 +17,8 @@ use crate::alloc::{AllocPlan, AutoRequest, HostAllocator, PlanEntry, SlotOutcome
 use crate::controller::{ControllerConfig, Levers};
 use crate::gpu::MigProfile;
 use crate::tenants::{
-    BwSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantKind, TenantWorkload,
-    WorkloadSpec,
+    ArrivalProcess, BwSpec, CompSpec, Envelope, InterferenceSchedule, LsSpec, PlacementSpec,
+    TenantKind, TenantWorkload, TraceSpec, WorkloadSpec,
 };
 use crate::topo::HostTopology;
 use crate::util::rng::Pcg64;
@@ -103,10 +103,77 @@ impl Scenario {
         }
     }
 
+    /// Differential-oracle construction: a clone of this scenario where
+    /// every Poisson-driven tenant (latency-sensitive arrivals, and
+    /// bandwidth-heavy cycle triggers that opted into a Poisson process)
+    /// has its process replaced by the **explicit trace presampled from
+    /// the exact seeded RNG stream the live world would consume** over
+    /// `self.horizon`. Running both scenarios must produce byte-equal
+    /// `RunResult::fingerprint`s — the proof that the trace replay path
+    /// reproduces the closed-form Poisson path bit for bit.
+    ///
+    /// Call this *after* any horizon override: the presample must cover
+    /// the horizon the run will actually use.
+    pub fn with_presampled_traces(&self) -> Scenario {
+        use crate::platform::sim_platform::arrival_stream;
+        let (seed, horizon) = (self.seed, self.horizon);
+        let mut s = self.clone();
+        for (i, t) in s.tenants.iter_mut().enumerate() {
+            let stream = arrival_stream(i, t.kind());
+            match &mut t.spec {
+                WorkloadSpec::LatencySensitive(spec) => {
+                    if let ArrivalProcess::Poisson { rps } = spec.arrival_process() {
+                        let mut rng = Pcg64::new(seed, stream);
+                        spec.arrivals = Some(ArrivalProcess::Trace(
+                            TraceSpec::presample_poisson(rps, horizon, &mut rng),
+                        ));
+                    }
+                }
+                WorkloadSpec::BandwidthHeavy(spec) => {
+                    if let Some(ArrivalProcess::Poisson { rps }) = spec.arrivals {
+                        let mut rng = Pcg64::new(seed, stream);
+                        spec.arrivals = Some(ArrivalProcess::Trace(
+                            TraceSpec::presample_poisson(rps, horizon, &mut rng),
+                        ));
+                    }
+                }
+                WorkloadSpec::ComputeHeavy(_) => {}
+            }
+        }
+        s
+    }
+
+    /// Ablation counterpart: a clone where every *explicit* arrival
+    /// process (trace or modulated) is replaced by a plain open-loop
+    /// Poisson at its mean realized rate. `predserve trace` compares a
+    /// trace scenario against this rate-matched baseline (ΔSLO-miss,
+    /// Δp99 isolate the effect of the arrival *pattern* at equal load).
+    pub fn rate_matched_poisson(&self) -> Scenario {
+        let mut s = self.clone();
+        for t in s.tenants.iter_mut() {
+            match &mut t.spec {
+                WorkloadSpec::LatencySensitive(spec) => {
+                    if let Some(p) = &spec.arrivals {
+                        let rps = p.mean_rps();
+                        spec.arrivals = Some(ArrivalProcess::Poisson { rps });
+                    }
+                }
+                WorkloadSpec::BandwidthHeavy(spec) => {
+                    if let Some(p) = &spec.arrivals {
+                        let rps = p.mean_rps();
+                        spec.arrivals = Some(ArrivalProcess::Poisson { rps });
+                    }
+                }
+                WorkloadSpec::ComputeHeavy(_) => {}
+            }
+        }
+        s
+    }
+
     // --- named catalog ----------------------------------------------------
 
     /// Catalog names accepted by [`Scenario::by_name`].
-    pub const CATALOG: [&'static str; 9] = [
+    pub const CATALOG: [&'static str; 11] = [
         "paper_single_host",
         "paper_llm_case",
         "steady_contention",
@@ -116,6 +183,8 @@ impl Scenario {
         "auto_pack_24",
         "dueling_primaries",
         "hotspot_64",
+        "trace_burst_32",
+        "diurnal_trace_mix",
     ];
 
     /// Look a scenario up by catalog name ("single" and "llm" are accepted
@@ -136,6 +205,8 @@ impl Scenario {
             "auto_pack_24" => Scenario::auto_pack_24(seed, levers),
             "dueling_primaries" => Scenario::dueling_primaries(seed, levers),
             "hotspot_64" => Scenario::hotspot_64(seed, levers),
+            "trace_burst_32" => Scenario::trace_burst_32(seed, levers),
+            "diurnal_trace_mix" => Scenario::diurnal_trace_mix(seed, levers),
             _ => return None,
         })
     }
@@ -628,6 +699,136 @@ impl Scenario {
             .spare(4, MigProfile::P3g40gb, 0)
             .build()
     }
+
+    /// Trace-replay stress case: 32 auto-placed tenants on a dense
+    /// two-switch Gen5 host (the [`Scenario::hotspot_tenants`] mix) where
+    /// every latency-sensitive service **replays a generated bursty
+    /// trace** (two-state calm/burst process, mean rate matched to its
+    /// nominal `arrival_rps`) while the ETL pipelines cycle on open-loop
+    /// **Poisson triggers** instead of the closed loop. Bursts across
+    /// many services align only by chance — exactly the heavy-tail
+    /// arrival pressure the open-loop Poisson model cannot express.
+    /// `predserve trace` runs this against its rate-matched Poisson twin.
+    pub fn trace_burst_32(seed: u64, levers: Levers) -> Scenario {
+        const N: usize = 32;
+        let mut tenants = Scenario::hotspot_tenants(seed, N);
+        // Traces come from their own stream (2000-block): workload RNG
+        // streams stay untouched, and the schedule stream (1000) keeps
+        // producing the exact hotspot_tenants schedules.
+        let mut trace_rng = Pcg64::new(seed, 2000);
+        for t in tenants.iter_mut() {
+            match &mut t.spec {
+                WorkloadSpec::LatencySensitive(spec) => {
+                    // Calm at 0.5x / burst at 2.5x of the nominal rate,
+                    // ~25% burst duty => mean ≈ 1.0x arrival_rps. Traces
+                    // cover the catalog's 1800 s schedule window, so any
+                    // shorter run horizon never exhausts them.
+                    let trace = TraceSpec::bursty(
+                        &mut trace_rng,
+                        1800.0,
+                        spec.arrival_rps * 0.5,
+                        spec.arrival_rps * 2.5,
+                        60.0,
+                        20.0,
+                    )
+                    .expect("bursty trace generation");
+                    spec.arrivals = Some(ArrivalProcess::Trace(trace));
+                }
+                WorkloadSpec::BandwidthHeavy(spec) => {
+                    // Poisson ETL neighbors: cycle starts arrive at 1.5/s
+                    // instead of back-to-back while the schedule is on.
+                    spec.arrivals = Some(ArrivalProcess::Poisson { rps: 1.5 });
+                }
+                WorkloadSpec::ComputeHeavy(_) => {}
+            }
+        }
+        let mut b = ScenarioBuilder::new("trace_burst_32", seed)
+            .topo(HostTopology::dense(2, 8, 64.0, 16.0))
+            .controller(ControllerConfig::dense_pack(levers))
+            .horizon(900.0);
+        for t in tenants {
+            b = b.add_auto(t);
+        }
+        b.build()
+    }
+
+    /// The diurnal_burst case re-expressed through **arrival envelopes**:
+    /// the serving tenant's request rate follows a deterministic diurnal
+    /// sine ([`Envelope::Diurnal`], same 600 s period as the background
+    /// waves) and the two ETL pipelines run always-on schedules whose
+    /// cycle *triggers* are gated by phase-shifted square
+    /// [`Envelope::Bursts`] — the day/night waves live in the arrival
+    /// processes rather than in on/off toggles. The two trainers keep
+    /// their periodic schedules (compute tenants have no arrival side).
+    pub fn diurnal_trace_mix(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        let period = 600.0;
+        let serving = LsSpec {
+            arrivals: Some(ArrivalProcess::Modulated {
+                base_rps: 80.0,
+                envelope: Envelope::Diurnal {
+                    period_s: period,
+                    amplitude: 0.5,
+                    phase_s: 0.0,
+                },
+            }),
+            ..LsSpec::default()
+        };
+        let etl_wave = |phase_s: f64| ArrivalProcess::Modulated {
+            base_rps: 2.0,
+            envelope: Envelope::Bursts {
+                period_s: period,
+                duty: 0.45,
+                high: 1.0,
+                low: 0.0,
+                phase_s,
+            },
+        };
+        ScenarioBuilder::new("diurnal_trace_mix", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .tenant(TenantWorkload::latency_sensitive(
+                "serving",
+                serving,
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train-shared",
+                CompSpec::default(),
+                InterferenceSchedule::periodic(horizon, period, 0.5, 120.0),
+                PlacementSpec::shared_with(0),
+            ))
+            .tenant(
+                TenantWorkload::bandwidth_heavy(
+                    "etl-day",
+                    BwSpec::default(),
+                    InterferenceSchedule::always_on(horizon),
+                    PlacementSpec::dedicated_at(0, MigProfile::P3g40gb, 4),
+                )
+                .arrivals(etl_wave(0.0)),
+            )
+            .tenant(
+                TenantWorkload::bandwidth_heavy(
+                    "etl-night",
+                    BwSpec::default(),
+                    InterferenceSchedule::always_on(horizon),
+                    PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+                )
+                .arrivals(etl_wave(300.0)),
+            )
+            .tenant(TenantWorkload::compute_heavy(
+                "train-batch",
+                CompSpec {
+                    step_ms: 200.0,
+                    sync_gb: 0.25,
+                    ..CompSpec::default()
+                },
+                InterferenceSchedule::periodic(horizon, period, 0.6, 450.0),
+                PlacementSpec::dedicated_at(3, MigProfile::P3g40gb, 0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build()
+    }
 }
 
 /// Composable scenario construction; see the README's "Defining a
@@ -764,6 +965,26 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Override tenant `tenant`'s arrival process — requests for a
+    /// latency-sensitive tenant, cycle triggers for a bandwidth-heavy
+    /// one (the chainable [`TenantWorkload::arrivals`] does the same at
+    /// construction time). The process is validated in `build()`.
+    pub fn arrivals(mut self, tenant: usize, process: ArrivalProcess) -> Self {
+        assert!(
+            tenant < self.tenants.len(),
+            "arrivals({tenant}) out of range ({} tenants added so far)",
+            self.tenants.len()
+        );
+        if self.tenants[tenant].spec.set_arrivals(process).is_err() {
+            panic!(
+                "tenant {tenant} ('{}') is compute-heavy; arrival processes only \
+                 drive latency-sensitive requests or bandwidth-heavy cycle triggers",
+                self.tenants[tenant].name
+            );
+        }
+        self
+    }
+
     /// Pre-provision an idle spare instance.
     pub fn spare(mut self, gpu: usize, profile: MigProfile, start: usize) -> Self {
         self.spares.push((gpu, profile, start));
@@ -811,6 +1032,17 @@ impl ScenarioBuilder {
                     TenantKind::ComputeHeavy,
                     "tenant {i} is an MPS sharer but not compute-heavy"
                 );
+            }
+        }
+        // Arrival processes fail here — at scenario build time, with the
+        // typed `ArrivalError` in the message — never as a mid-sim panic.
+        // (`TraceSpec` is valid by construction; this catches bad
+        // Poisson rates and envelope parameters.)
+        for (i, t) in self.tenants.iter().enumerate() {
+            if let Some(p) = t.arrival_process() {
+                p.validate().unwrap_or_else(|e| {
+                    panic!("tenant {i} ({}): invalid arrival process: {e}", t.name)
+                });
             }
         }
         if let Some(p) = self.primary {
@@ -1281,6 +1513,187 @@ mod tests {
         ));
         assert_eq!(s.spares.len(), 1);
         assert_eq!(s.topo.numa_of_gpu(s.spares[0].0), 1);
+    }
+
+    #[test]
+    fn trace_burst_32_shape_traces_on_ls_triggers_on_etl() {
+        let s = Scenario::trace_burst_32(11, Levers::full());
+        assert_eq!(s.n_tenants(), 32);
+        assert_eq!(s.topo.switches.len(), 2);
+        assert!(s.layout.all_placed());
+        assert_eq!(s.tenants[s.primary].kind(), TenantKind::LatencySensitive);
+        for (i, t) in s.tenants.iter().enumerate() {
+            assert!(!t.placement.is_auto(), "tenant {i} unresolved");
+            match t.kind() {
+                TenantKind::LatencySensitive => {
+                    let spec = t.spec.as_ls().unwrap();
+                    let Some(ArrivalProcess::Trace(trace)) = &spec.arrivals else {
+                        panic!("{}: LS tenant without a trace", t.name);
+                    };
+                    // Covers the schedule window, mean ≈ the nominal rate.
+                    assert!(trace.span() > 1700.0, "{}: span {}", t.name, trace.span());
+                    let ratio = trace.mean_rps() / spec.arrival_rps;
+                    assert!(
+                        (0.5..=2.0).contains(&ratio),
+                        "{}: mean {} vs nominal {}",
+                        t.name,
+                        trace.mean_rps(),
+                        spec.arrival_rps
+                    );
+                }
+                TenantKind::BandwidthHeavy => match &t.spec.as_bw().unwrap().arrivals {
+                    Some(ArrivalProcess::Poisson { rps }) => {
+                        assert_eq!(*rps, 1.5, "{}", t.name)
+                    }
+                    other => panic!("{}: ETL without Poisson triggers ({other:?})", t.name),
+                },
+                TenantKind::ComputeHeavy => assert!(t.arrival_process().is_none()),
+            }
+        }
+        // Deterministic: same seed, identical traces.
+        let b = Scenario::trace_burst_32(11, Levers::none());
+        for (ta, tb) in s.tenants.iter().zip(&b.tenants) {
+            match (ta.arrival_process(), tb.arrival_process()) {
+                (Some(pa), Some(pb)) => assert_eq!(pa, pb, "{}", ta.name),
+                (None, None) => {}
+                _ => panic!("{}: arrival process depends on levers", ta.name),
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_trace_mix_reexpresses_waves_as_envelopes() {
+        let s = Scenario::diurnal_trace_mix(7, Levers::full());
+        assert_eq!(s.n_tenants(), 5);
+        assert_eq!(s.primary, 0);
+        // Serving rides a diurnal envelope at the background wave period.
+        match s.tenants[0].arrival_process() {
+            Some(ArrivalProcess::Modulated { base_rps, envelope }) => {
+                assert_eq!(*base_rps, 80.0);
+                assert!(matches!(
+                    envelope,
+                    Envelope::Diurnal { period_s, .. } if *period_s == 600.0
+                ));
+            }
+            other => panic!("serving: wrong process {other:?}"),
+        }
+        // ETL waves live in burst envelopes, phase-shifted half a period,
+        // over always-on schedules.
+        for (idx, phase) in [(2usize, 0.0), (3, 300.0)] {
+            assert_eq!(s.tenants[idx].kind(), TenantKind::BandwidthHeavy);
+            assert!(s.tenants[idx].schedule.active_at(s.horizon / 2.0));
+            match s.tenants[idx].arrival_process() {
+                Some(ArrivalProcess::Modulated { envelope, .. }) => match envelope {
+                    Envelope::Bursts { phase_s, low, .. } => {
+                        assert_eq!(*phase_s, phase);
+                        assert_eq!(*low, 0.0);
+                    }
+                    other => panic!("etl {idx}: wrong envelope {other:?}"),
+                },
+                other => panic!("etl {idx}: wrong process {other:?}"),
+            }
+        }
+        // Trainers keep plain periodic schedules and no arrival side.
+        assert!(s.tenants[1].arrival_process().is_none());
+        assert!(s.tenants[4].arrival_process().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid arrival process")]
+    fn build_rejects_bad_poisson_rate_at_build_time() {
+        ScenarioBuilder::new("bad-rate", 1)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .arrivals(0, ArrivalProcess::Poisson { rps: -3.0 })
+            .build();
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid arrival process")]
+    fn build_rejects_bad_envelope_at_build_time() {
+        ScenarioBuilder::new("bad-envelope", 1)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .arrivals(
+                0,
+                ArrivalProcess::Modulated {
+                    base_rps: 10.0,
+                    envelope: Envelope::Diurnal {
+                        period_s: -600.0,
+                        amplitude: 0.5,
+                        phase_s: 0.0,
+                    },
+                },
+            )
+            .build();
+    }
+
+    #[test]
+    #[should_panic(expected = "compute-heavy")]
+    fn builder_arrivals_rejects_compute_tenants() {
+        let _ = ScenarioBuilder::new("bad-kind", 1)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train",
+                CompSpec::default(),
+                InterferenceSchedule::always_on(100.0),
+                PlacementSpec::shared_with(0),
+            ))
+            .arrivals(1, ArrivalProcess::Poisson { rps: 1.0 });
+    }
+
+    #[test]
+    fn rate_matched_poisson_flattens_explicit_processes_only() {
+        let s = Scenario::trace_burst_32(11, Levers::none());
+        let flat = s.rate_matched_poisson();
+        for (orig, t) in s.tenants.iter().zip(&flat.tenants) {
+            match (orig.arrival_process(), t.arrival_process()) {
+                (Some(p), Some(ArrivalProcess::Poisson { rps })) => {
+                    assert_eq!(*rps, p.mean_rps(), "{}", t.name);
+                }
+                (None, None) => {}
+                other => panic!("{}: unexpected process pair {other:?}", t.name),
+            }
+        }
+        // Pre-trace scenarios are untouched (no explicit processes).
+        let plain = Scenario::paper_single_host(3, Levers::none());
+        let matched = plain.rate_matched_poisson();
+        for t in &matched.tenants {
+            assert!(t.arrival_process().is_none(), "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn presampled_traces_cover_the_horizon_and_pin_the_stream() {
+        let mut s = Scenario::paper_single_host(9, Levers::none());
+        s.horizon = 45.0;
+        let traced = s.with_presampled_traces();
+        let spec = traced.tenants[0].spec.as_ls().unwrap();
+        let Some(ArrivalProcess::Trace(trace)) = &spec.arrivals else {
+            panic!("primary not presampled");
+        };
+        // The presample passes the horizon by exactly one arrival.
+        assert!(trace.span() > 45.0);
+        assert!(trace.span() - trace.gaps().last().unwrap() <= 45.0);
+        // Closed-loop background tenants stay untouched.
+        assert!(traced.tenants[1].arrival_process().is_none());
+        assert!(traced.tenants[2].arrival_process().is_none());
+        // Deterministic: presampling twice yields identical traces.
+        let again = s.with_presampled_traces();
+        assert_eq!(
+            traced.tenants[0].arrival_process(),
+            again.tenants[0].arrival_process()
+        );
     }
 
     #[test]

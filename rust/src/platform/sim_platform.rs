@@ -38,7 +38,7 @@ use crate::gpu::{A100Gpu, InstanceId, MigProfile};
 use crate::sim::EventQueue;
 use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TenantSignal};
 use crate::telemetry::TenantMonitor;
-use crate::tenants::{TenantId, TenantKind, WorkloadSpec};
+use crate::tenants::{ArrivalState, TenantId, TenantKind, WorkloadSpec};
 use crate::util::rng::Pcg64;
 
 use super::result::{RunResult, TenantControllerStats, TenantRunStats};
@@ -111,7 +111,10 @@ enum CyclePhase {
 /// Discrete events, generic over the tenant index.
 #[derive(Clone, Copy, Debug)]
 enum Event {
-    /// Next open-loop arrival for a latency-sensitive tenant.
+    /// Next open-loop arrival: a request for a latency-sensitive tenant,
+    /// or a cycle trigger for a trigger-driven bandwidth-heavy tenant
+    /// (`BwSpec::arrivals`). Driven by the tenant's `ArrivalState`;
+    /// closed traces stop scheduling these when they run out.
     Arrival { tenant: usize },
     FlowsDone { version: u64 },
     /// Latency-sensitive compute finished.
@@ -130,6 +133,12 @@ enum Event {
 /// Per-tenant runtime state for a latency-sensitive tenant.
 #[derive(Clone, Debug)]
 struct LsRt {
+    /// Arrival cursor over the tenant's effective process. Poisson
+    /// tenants draw one `exp` from `arrival_rng` per arrival — the exact
+    /// draw (and draw order) of the pre-trace inline code, so legacy
+    /// scenarios replay bit-identically. Trace tenants never touch the
+    /// RNG; closed traces end cleanly by scheduling nothing.
+    arrival: ArrivalState,
     arrival_rng: Pcg64,
     size_rng: Pcg64,
     service_rng: Pcg64,
@@ -149,6 +158,13 @@ struct LsRt {
 #[derive(Clone, Debug)]
 struct BwRt {
     rng: Pcg64,
+    /// Cycle-trigger cursor (`BwSpec::arrivals`): `None` keeps the
+    /// closed loop — back-to-back cycles while the schedule is on, no
+    /// extra events, bit-identical to the pre-trace engine. Triggers
+    /// draw from `arrival_rng` (its own stream, `base + 3`) so the cycle
+    /// sampling stream stays untouched either way.
+    arrival: Option<ArrivalState>,
+    arrival_rng: Pcg64,
     phase: CyclePhase,
     cycle: (f64, f64, f64, f64),
     cycle_started: f64,
@@ -177,9 +193,24 @@ enum TenantRt {
 fn stream_base(index: usize, kind: TenantKind) -> u64 {
     match (index, kind) {
         (0, TenantKind::LatencySensitive) => 1, // +0 arrival, +1 size, +2 service
-        (1, TenantKind::BandwidthHeavy) => 4,
+        (1, TenantKind::BandwidthHeavy) => 4,   // +0 cycle, +3 cycle triggers
         (2, TenantKind::ComputeHeavy) => 5,
         _ => 100 + 8 * index as u64,
+    }
+}
+
+/// RNG stream id feeding tenant `index`'s arrival/trigger draws —
+/// exposed so the differential oracle (tests, benches,
+/// `Scenario::with_presampled_traces`) can presample the exact Poisson
+/// stream the live world would consume. Latency-sensitive tenants draw
+/// arrivals on their block's first stream; bandwidth-heavy cycle
+/// triggers use a dedicated `base + 3` stream so the cycle-sampling
+/// stream is identical with and without triggers.
+pub fn arrival_stream(index: usize, kind: TenantKind) -> u64 {
+    let base = stream_base(index, kind);
+    match kind {
+        TenantKind::BandwidthHeavy => base + 3,
+        _ => base,
     }
 }
 
@@ -292,6 +323,7 @@ impl SimWorld {
             match &t.spec {
                 WorkloadSpec::LatencySensitive(spec) => {
                     rt.push(TenantRt::Ls(LsRt {
+                        arrival: ArrivalState::new(spec.arrival_process()),
                         arrival_rng: Pcg64::new(seed, base),
                         size_rng: Pcg64::new(seed, base + 1),
                         service_rng: Pcg64::new(seed, base + 2),
@@ -306,9 +338,11 @@ impl SimWorld {
                     }));
                     monitors.push(TenantMonitor::new(spec.slo_ms, 4096));
                 }
-                WorkloadSpec::BandwidthHeavy(_) => {
+                WorkloadSpec::BandwidthHeavy(spec) => {
                     rt.push(TenantRt::Bw(BwRt {
                         rng: Pcg64::new(seed, base),
+                        arrival: spec.arrivals.clone().map(ArrivalState::new),
+                        arrival_rng: Pcg64::new(seed, base + 3),
                         phase: CyclePhase::Idle,
                         cycle: (0.0, 0.0, 0.0, 0.0),
                         cycle_started: 0.0,
@@ -395,15 +429,30 @@ impl SimWorld {
                 TenantKind::LatencySensitive => {
                     self.active[i] = true;
                     let gap = {
-                        let (spec, ls) = self.ls_parts(i);
-                        spec.next_gap(&mut ls.arrival_rng)
+                        let (_, ls) = self.ls_parts(i);
+                        ls.arrival.next_gap(0.0, &mut ls.arrival_rng)
                     };
-                    self.q.push_at(gap, Event::Arrival { tenant: i });
+                    // A trace can in principle be drained before the run
+                    // starts only if it is empty — which the builders
+                    // reject — so this schedules for every real tenant.
+                    if let Some(gap) = gap {
+                        self.q.push_at(gap, Event::Arrival { tenant: i });
+                    }
                 }
                 TenantKind::BandwidthHeavy | TenantKind::ComputeHeavy => {
                     for p in self.scenario.tenants[i].schedule.phases.clone() {
                         self.q.push_at(p.on, Event::Toggle { tenant: i });
                         self.q.push_at(p.off, Event::Toggle { tenant: i });
+                    }
+                    // Trigger-driven ETL pipelines additionally seed
+                    // their first cycle trigger (legacy closed-loop
+                    // tenants schedule nothing extra — bit-compat).
+                    if let TenantRt::Bw(bw) = &mut self.rt[i] {
+                        if let Some(state) = bw.arrival.as_mut() {
+                            if let Some(gap) = state.next_gap(0.0, &mut bw.arrival_rng) {
+                                self.q.push_at(gap, Event::Arrival { tenant: i });
+                            }
+                        }
                     }
                 }
             }
@@ -504,16 +553,34 @@ impl SimWorld {
 
     // --- latency-sensitive pipeline ----------------------------------------
 
+    /// One `Event::Arrival` fired: a request arrival for a
+    /// latency-sensitive tenant, a cycle trigger for a trigger-driven
+    /// bandwidth-heavy tenant.
     fn on_arrival(&mut self, now: f64, i: usize) {
-        // Schedule the next arrival first (open-loop Poisson).
+        match self.scenario.tenants[i].kind() {
+            TenantKind::LatencySensitive => self.on_ls_arrival(now, i),
+            TenantKind::BandwidthHeavy => self.on_bw_trigger(now, i),
+            // Compute-heavy tenants have no arrival side; nothing ever
+            // schedules one.
+            TenantKind::ComputeHeavy => {}
+        }
+    }
+
+    fn on_ls_arrival(&mut self, now: f64, i: usize) {
+        // Schedule the next arrival first (open-loop; identical draw
+        // order to the pre-trace inline Poisson code). A closed trace
+        // that has run out schedules nothing — the tenant ends cleanly.
         let gap = {
-            let (spec, ls) = self.ls_parts(i);
-            spec.next_gap(&mut ls.arrival_rng)
+            let (_, ls) = self.ls_parts(i);
+            ls.arrival.next_gap(now, &mut ls.arrival_rng)
         };
-        self.q.push_at(now + gap, Event::Arrival { tenant: i });
+        if let Some(gap) = gap {
+            self.q.push_at(now + gap, Event::Arrival { tenant: i });
+        }
 
         let (id, paused) = {
             let (spec, ls) = self.ls_parts(i);
+            ls.arrival.note_emitted();
             let id = ls.next_req;
             ls.next_req += 1;
             let r = spec.sample(&mut ls.size_rng, id, now);
@@ -535,6 +602,30 @@ impl SimWorld {
         if !paused {
             self.begin_staging(now, i, id);
         }
+    }
+
+    /// Trigger-driven bandwidth-heavy tenants: each trigger starts a
+    /// cycle if the schedule is on and the pipeline is idle; otherwise
+    /// it is dropped (open-loop semantics — triggers are not queued).
+    fn on_bw_trigger(&mut self, now: f64, i: usize) {
+        let gap = {
+            let (_, bw) = self.bw_parts(i);
+            let Some(state) = bw.arrival.as_mut() else {
+                return; // closed-loop tenant: no triggers are scheduled
+            };
+            state.note_emitted();
+            state.next_gap(now, &mut bw.arrival_rng)
+        };
+        if let Some(gap) = gap {
+            self.q.push_at(now + gap, Event::Arrival { tenant: i });
+        }
+        self.begin_cycle(now, i);
+    }
+
+    /// Does tenant `i` gate its ETL cycles on an arrival process (vs the
+    /// legacy closed loop)?
+    fn bw_trigger_driven(&self, i: usize) -> bool {
+        matches!(&self.rt[i], TenantRt::Bw(b) if b.arrival.is_some())
     }
 
     /// Bounded transfer concurrency (DMA engines / io_uring depth): also
@@ -695,7 +786,12 @@ impl SimWorld {
                     bw.cycle_started
                 };
                 self.monitors[i].observe((now - started) * 1000.0);
-                self.begin_cycle(now, i); // next cycle if still active
+                // Closed loop: next cycle immediately if still active.
+                // Trigger-driven pipelines instead wait for the next
+                // arrival-process trigger.
+                if !self.bw_trigger_driven(i) {
+                    self.begin_cycle(now, i);
+                }
             }
             _ => unreachable!(),
         }
@@ -1275,7 +1371,14 @@ impl SimWorld {
                 self.active[tenant] = self.scenario.tenants[tenant].schedule.active_at(now);
                 if self.active[tenant] {
                     match self.scenario.tenants[tenant].kind() {
-                        TenantKind::BandwidthHeavy => self.begin_cycle(now, tenant),
+                        TenantKind::BandwidthHeavy => {
+                            // Trigger-driven pipelines wait for the next
+                            // trigger instead of starting on the toggle
+                            // edge itself.
+                            if !self.bw_trigger_driven(tenant) {
+                                self.begin_cycle(now, tenant);
+                            }
+                        }
                         TenantKind::ComputeHeavy => self.begin_step(now, tenant),
                         TenantKind::LatencySensitive => {}
                     }
@@ -1376,6 +1479,15 @@ impl SimWorld {
             .enumerate()
             .map(|(i, t)| {
                 let mon = &self.monitors[i];
+                let (arrivals_emitted, trace_exhausted_at) = match &self.rt[i] {
+                    TenantRt::Ls(l) => (l.arrival.emitted(), l.arrival.exhausted_at()),
+                    TenantRt::Bw(b) => b
+                        .arrival
+                        .as_ref()
+                        .map(|a| (a.emitted(), a.exhausted_at()))
+                        .unwrap_or((0, None)),
+                    TenantRt::Comp(_) => (0, None),
+                };
                 TenantRunStats {
                     tenant: TenantId(i),
                     name: t.name.clone(),
@@ -1389,6 +1501,8 @@ impl SimWorld {
                     p999_ms: mon.lifetime_quantile_ms(0.999),
                     rps: mon.total_completed() as f64 / horizon,
                     gb_moved: self.fabric.owner_gb(i),
+                    arrivals_emitted,
+                    trace_exhausted_at,
                 }
             })
             .collect();
@@ -1598,6 +1712,66 @@ mod tests {
         // Arbitration counters reconcile with the per-controller audits.
         let deferred: usize = r.controller_stats.iter().map(|c| c.deferrals).sum();
         assert_eq!(deferred as u64, r.arb_deferrals);
+    }
+
+    #[test]
+    fn trace_run_emits_exactly_trace_len_and_ends_cleanly() {
+        use crate::tenants::{ArrivalProcess, TraceSpec};
+        let mut s = short_scenario(5, Levers::none());
+        // 200 arrivals, one every 250 ms: the trace spans 50 s of the
+        // 120 s horizon, so it must exhaust cleanly mid-run.
+        let trace = TraceSpec::from_gaps(vec![0.25; 200]).unwrap();
+        s.tenants[0].spec.as_ls_mut().unwrap().arrivals =
+            Some(ArrivalProcess::Trace(trace));
+        let r = SimWorld::new(s).run();
+        let t = &r.per_tenant[0];
+        assert_eq!(t.arrivals_emitted, 200);
+        let end = t.trace_exhausted_at.expect("closed trace must exhaust");
+        assert!((end - 50.0).abs() < 1e-9, "exhausted at {end}");
+        // Every request drains long before the horizon; nothing wraps.
+        assert_eq!(t.completed, 200);
+    }
+
+    #[test]
+    fn poisson_runs_report_arrival_counters_without_exhaustion() {
+        let r = SimWorld::new(short_scenario(1, Levers::none())).run();
+        let t = &r.per_tenant[0];
+        // Open-loop Poisson: emitted >= completed (tail in flight), and
+        // an open-ended process never exhausts.
+        assert!(
+            t.arrivals_emitted >= t.completed,
+            "{} < {}",
+            t.arrivals_emitted,
+            t.completed
+        );
+        assert!(t.trace_exhausted_at.is_none());
+        // Closed-loop ETL/trainer have no arrival side.
+        assert_eq!(r.per_tenant[1].arrivals_emitted, 0);
+        assert_eq!(r.per_tenant[2].arrivals_emitted, 0);
+    }
+
+    #[test]
+    fn trigger_driven_etl_gates_cycles_on_the_trigger_process() {
+        use crate::tenants::ArrivalProcess;
+        let mut closed = short_scenario(2, Levers::none());
+        closed.set_background_schedules(InterferenceSchedule::always_on(120.0));
+        let mut gated = closed.clone();
+        // Sparse Poisson triggers: ~1 cycle every 5 s, far slower than
+        // the closed loop's back-to-back cycling.
+        gated.tenants[1].spec.as_bw_mut().unwrap().arrivals =
+            Some(ArrivalProcess::Poisson { rps: 0.2 });
+        let rc = SimWorld::new(closed).run();
+        let rg = SimWorld::new(gated).run();
+        let (c, g) = (rc.per_tenant[1].completed, rg.per_tenant[1].completed);
+        assert!(c > 0 && g > 0, "closed {c}, gated {g}");
+        assert!(g * 2 < c, "gating did not slow the cycle loop: {g} vs {c}");
+        let emitted = rg.per_tenant[1].arrivals_emitted;
+        assert!(emitted > 0, "no triggers emitted");
+        assert!(g <= emitted, "more cycles ({g}) than triggers ({emitted})");
+        // The closed-loop run's cycle stream is untouched by the new
+        // trigger plumbing (its own fingerprint is pinned elsewhere; the
+        // counter here just confirms the legacy path reports zero).
+        assert_eq!(rc.per_tenant[1].arrivals_emitted, 0);
     }
 
     #[test]

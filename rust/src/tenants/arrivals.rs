@@ -1,0 +1,905 @@
+//! Arrival processes: how request/cycle *triggers* reach a tenant.
+//!
+//! The engine historically hard-coded one arrival model — open-loop
+//! Poisson at `LsSpec::arrival_rps`. This module makes the arrival
+//! process a first-class, swappable piece of a tenant spec:
+//!
+//! * [`ArrivalProcess::Poisson`] — the pre-trace behavior. When a
+//!   latency-sensitive spec carries no explicit process, the world runs
+//!   Poisson at `arrival_rps` with a **bit-identical RNG stream** to the
+//!   pre-arrival-rewrite engine (same `Pcg64::exp` draw per arrival, same
+//!   draw order), so every pre-existing scenario keeps a byte-identical
+//!   run fingerprint.
+//! * [`ArrivalProcess::Trace`] — an explicit inter-arrival schedule
+//!   ([`TraceSpec`]): replayed production logs, presampled processes (the
+//!   differential oracle in `properties.rs`), or generated bursty
+//!   schedules. Closed traces **end cleanly** — after the last gap is
+//!   consumed the tenant simply stops arriving; nothing wraps around.
+//! * [`ArrivalProcess::Modulated`] — a deterministic rate [`Envelope`]
+//!   (diurnal sine wave or square burst train) over a Poisson base,
+//!   realized by Lewis–Shedler thinning. Heavy-tail/diurnal synthetic
+//!   scenarios without shipping a trace file.
+//!
+//! Validation is front-loaded: [`TraceSpec`] constructors and parsers
+//! reject empty traces, NaN/negative inter-arrivals and non-monotonic
+//! timestamps with typed [`ArrivalError`]s, and
+//! `ScenarioBuilder::build` calls [`ArrivalProcess::validate`] so a bad
+//! process fails at scenario *build* time, never as a mid-sim panic.
+//!
+//! The simulator holds one [`ArrivalState`] cursor per driven tenant;
+//! `RunResult::per_tenant` reports `arrivals_emitted` and
+//! `trace_exhausted_at` from it.
+
+use std::fmt;
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Typed arrival-process/trace errors, surfaced at scenario build (or
+/// parse) time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalError {
+    /// A trace must contain at least one arrival.
+    EmptyTrace,
+    /// A gap/timestamp is NaN or infinite.
+    NonFinite { index: usize, value: f64 },
+    /// An inter-arrival gap is negative.
+    NegativeGap { index: usize, value: f64 },
+    /// Timestamps must be non-decreasing (and the first non-negative).
+    NonMonotonic { index: usize, prev: f64, value: f64 },
+    /// Poisson/Modulated base rate must be finite and > 0.
+    BadRate { rps: f64 },
+    /// Envelope parameters out of range.
+    BadEnvelope { reason: String },
+    /// Trace file/line could not be parsed.
+    Parse { line: usize, reason: String },
+}
+
+impl fmt::Display for ArrivalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArrivalError::EmptyTrace => write!(f, "trace is empty"),
+            ArrivalError::NonFinite { index, value } => {
+                write!(f, "trace entry {index} is not finite ({value})")
+            }
+            ArrivalError::NegativeGap { index, value } => {
+                write!(f, "trace gap {index} is negative ({value})")
+            }
+            ArrivalError::NonMonotonic { index, prev, value } => write!(
+                f,
+                "trace timestamp {index} goes backwards ({value} after {prev})"
+            ),
+            ArrivalError::BadRate { rps } => {
+                write!(f, "arrival rate must be finite and > 0 (got {rps})")
+            }
+            ArrivalError::BadEnvelope { reason } => write!(f, "bad envelope: {reason}"),
+            ArrivalError::Parse { line, reason } => {
+                write!(f, "trace parse error at line {line}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArrivalError {}
+
+/// An explicit inter-arrival schedule. Internally stored as gaps
+/// (seconds between consecutive arrivals, the first measured from t = 0)
+/// because that is exactly what the simulator consumes — replaying a
+/// presampled Poisson trace then reproduces the closed-form path's event
+/// times *bit for bit* (same `now + gap` additions in the same order).
+///
+/// Invariant (enforced by every constructor): non-empty, every gap
+/// finite and >= 0.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpec {
+    gaps: Vec<f64>,
+}
+
+impl TraceSpec {
+    /// Build from inter-arrival gaps. Rejects empty/NaN/negative input.
+    pub fn from_gaps(gaps: Vec<f64>) -> Result<TraceSpec, ArrivalError> {
+        if gaps.is_empty() {
+            return Err(ArrivalError::EmptyTrace);
+        }
+        for (i, &g) in gaps.iter().enumerate() {
+            if !g.is_finite() {
+                return Err(ArrivalError::NonFinite { index: i, value: g });
+            }
+            if g < 0.0 {
+                return Err(ArrivalError::NegativeGap { index: i, value: g });
+            }
+        }
+        Ok(TraceSpec { gaps })
+    }
+
+    /// Build from absolute arrival timestamps (seconds from run start).
+    /// Rejects empty/NaN input and any timestamp earlier than its
+    /// predecessor (the first must be >= 0).
+    pub fn from_timestamps(ts: &[f64]) -> Result<TraceSpec, ArrivalError> {
+        if ts.is_empty() {
+            return Err(ArrivalError::EmptyTrace);
+        }
+        let mut gaps = Vec::with_capacity(ts.len());
+        let mut prev = 0.0f64;
+        for (i, &t) in ts.iter().enumerate() {
+            if !t.is_finite() {
+                return Err(ArrivalError::NonFinite { index: i, value: t });
+            }
+            if t < prev {
+                return Err(ArrivalError::NonMonotonic {
+                    index: i,
+                    prev,
+                    value: t,
+                });
+            }
+            gaps.push(t - prev);
+            prev = t;
+        }
+        Ok(TraceSpec { gaps })
+    }
+
+    /// Presample an open-loop Poisson process at `rps` over `[0, horizon]`
+    /// into an explicit trace — the differential-oracle construction.
+    ///
+    /// Draws exactly the gaps the live Poisson path would draw for a run
+    /// of that horizon: one `exp(rps)` per processed arrival, stopping
+    /// after the first arrival strictly past the horizon (which the run
+    /// schedules but never pops). Feeding the result back through
+    /// [`ArrivalProcess::Trace`] with the *same seeded generator left
+    /// untouched* therefore reproduces the closed-form run bit for bit.
+    pub fn presample_poisson(rps: f64, horizon: f64, rng: &mut Pcg64) -> TraceSpec {
+        let mut gaps = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            let g = rng.exp(rps);
+            // Same accumulation the event loop performs (`now + gap`).
+            t += g;
+            gaps.push(g);
+            if t > horizon {
+                break;
+            }
+        }
+        TraceSpec { gaps }
+    }
+
+    /// Generate a deterministic bursty trace: a two-state process that
+    /// alternates calm (`calm_rps`) and burst (`burst_rps`) phases with
+    /// exponential phase durations (`mean_calm_s` / `mean_burst_s`),
+    /// Poisson arrivals within each phase. Piecewise-constant rates are
+    /// memoryless, so redrawing at each phase boundary is exact.
+    pub fn bursty(
+        rng: &mut Pcg64,
+        duration: f64,
+        calm_rps: f64,
+        burst_rps: f64,
+        mean_calm_s: f64,
+        mean_burst_s: f64,
+    ) -> Result<TraceSpec, ArrivalError> {
+        for rps in [calm_rps, burst_rps] {
+            if !rps.is_finite() || rps <= 0.0 {
+                return Err(ArrivalError::BadRate { rps });
+            }
+        }
+        if !(duration.is_finite() && duration > 0.0)
+            || !(mean_calm_s.is_finite() && mean_calm_s > 0.0)
+            || !(mean_burst_s.is_finite() && mean_burst_s > 0.0)
+        {
+            return Err(ArrivalError::BadEnvelope {
+                reason: format!(
+                    "bursty trace needs positive duration/phase means \
+                     (duration {duration}, calm {mean_calm_s}, burst {mean_burst_s})"
+                ),
+            });
+        }
+        let mut arrivals = Vec::new();
+        let mut t = 0.0f64;
+        let mut bursting = false;
+        let mut phase_end = rng.exp(1.0 / mean_calm_s);
+        while t < duration {
+            let rate = if bursting { burst_rps } else { calm_rps };
+            let next = t + rng.exp(rate);
+            if next >= phase_end {
+                // Phase flips before the candidate arrival lands; jump to
+                // the boundary and redraw at the new rate.
+                t = phase_end;
+                bursting = !bursting;
+                let mean = if bursting { mean_burst_s } else { mean_calm_s };
+                phase_end = t + rng.exp(1.0 / mean);
+                continue;
+            }
+            if next >= duration {
+                break;
+            }
+            arrivals.push(next);
+            t = next;
+        }
+        if arrivals.is_empty() {
+            return Err(ArrivalError::EmptyTrace);
+        }
+        TraceSpec::from_timestamps(&arrivals)
+    }
+
+    /// Parse the JSON line format: `{"gaps": [..]}` or
+    /// `{"timestamps": [..]}` (exactly one of the two).
+    pub fn parse_json(src: &str) -> Result<TraceSpec, ArrivalError> {
+        let parse_err = |reason: String| ArrivalError::Parse { line: 1, reason };
+        let j = Json::parse(src).map_err(|e| parse_err(e.to_string()))?;
+        let numbers = |key: &str| -> Result<Option<Vec<f64>>, ArrivalError> {
+            match j.get(key) {
+                Json::Null => Ok(None),
+                Json::Arr(items) => {
+                    let mut out = Vec::with_capacity(items.len());
+                    for (i, v) in items.iter().enumerate() {
+                        match v.as_f64() {
+                            Some(x) => out.push(x),
+                            None => {
+                                return Err(parse_err(format!(
+                                    "'{key}' entry {i} is not a number"
+                                )))
+                            }
+                        }
+                    }
+                    Ok(Some(out))
+                }
+                _ => Err(parse_err(format!("'{key}' must be an array"))),
+            }
+        };
+        match (numbers("gaps")?, numbers("timestamps")?) {
+            (Some(_), Some(_)) => Err(parse_err(
+                "trace carries both 'gaps' and 'timestamps'; pick one".into(),
+            )),
+            (Some(gaps), None) => TraceSpec::from_gaps(gaps),
+            (None, Some(ts)) => TraceSpec::from_timestamps(&ts),
+            (None, None) => Err(parse_err(
+                "trace needs a 'gaps' or 'timestamps' array".into(),
+            )),
+        }
+    }
+
+    /// Serialize as the JSON line format (gap form). Round-trips exactly:
+    /// the writer emits shortest-round-trip decimals and
+    /// [`TraceSpec::parse_json`] reads them back bit-identically.
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![("gaps", Json::arr_f64(&self.gaps))]).to_string()
+    }
+
+    /// Parse the CSV line format: one value per line. An optional header
+    /// line selects the interpretation — `gap`/`gaps` (default) or
+    /// `timestamp`/`timestamps`. Blank lines and `#` comments skipped.
+    pub fn parse_csv(src: &str) -> Result<TraceSpec, ArrivalError> {
+        let mut values = Vec::new();
+        let mut timestamps = false;
+        let mut saw_data = false;
+        for (n, raw) in src.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if !saw_data {
+                match line {
+                    "gap" | "gaps" => continue,
+                    "timestamp" | "timestamps" => {
+                        timestamps = true;
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            let v: f64 = line.parse().map_err(|_| ArrivalError::Parse {
+                line: n + 1,
+                reason: format!("'{line}' is not a number"),
+            })?;
+            values.push(v);
+            saw_data = true;
+        }
+        if timestamps {
+            TraceSpec::from_timestamps(&values)
+        } else {
+            TraceSpec::from_gaps(values)
+        }
+    }
+
+    /// Serialize as the CSV line format (gap form, with header).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("gap\n");
+        for g in &self.gaps {
+            out.push_str(&format!("{g}\n"));
+        }
+        out
+    }
+
+    /// Number of arrivals the trace encodes.
+    pub fn len(&self) -> usize {
+        self.gaps.len()
+    }
+
+    /// Always false — constructors reject empty traces — but kept so the
+    /// type obeys the usual `len`/`is_empty` pairing.
+    pub fn is_empty(&self) -> bool {
+        self.gaps.is_empty()
+    }
+
+    /// Inter-arrival gaps (seconds).
+    pub fn gaps(&self) -> &[f64] {
+        &self.gaps
+    }
+
+    /// Time of the last arrival (sum of gaps, seconds).
+    pub fn span(&self) -> f64 {
+        self.gaps.iter().sum()
+    }
+
+    /// Mean realized arrival rate over the trace's span.
+    pub fn mean_rps(&self) -> f64 {
+        self.len() as f64 / self.span().max(1e-9)
+    }
+}
+
+/// Deterministic rate envelope for [`ArrivalProcess::Modulated`]: a
+/// multiplier on the base rate as a function of sim time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Envelope {
+    /// Diurnal sine wave: `1 + amplitude · sin(2π (t + phase_s) / period_s)`.
+    /// `amplitude` must be in `[0, 1]` so the rate never goes negative.
+    Diurnal {
+        period_s: f64,
+        amplitude: f64,
+        phase_s: f64,
+    },
+    /// Square burst train: `high` for the first `duty · period_s` of each
+    /// period (shifted by `phase_s`), `low` for the rest. `low = 0` turns
+    /// arrivals off entirely outside the burst window.
+    Bursts {
+        period_s: f64,
+        duty: f64,
+        high: f64,
+        low: f64,
+        phase_s: f64,
+    },
+}
+
+impl Envelope {
+    /// Rate multiplier at sim time `t`.
+    pub fn multiplier_at(&self, t: f64) -> f64 {
+        match *self {
+            Envelope::Diurnal {
+                period_s,
+                amplitude,
+                phase_s,
+            } => 1.0 + amplitude * (std::f64::consts::TAU * (t + phase_s) / period_s).sin(),
+            Envelope::Bursts {
+                period_s,
+                duty,
+                high,
+                low,
+                phase_s,
+            } => {
+                if (t - phase_s).rem_euclid(period_s) < duty * period_s {
+                    high
+                } else {
+                    low
+                }
+            }
+        }
+    }
+
+    /// Maximum multiplier the envelope ever produces (the thinning bound).
+    pub fn peak_multiplier(&self) -> f64 {
+        match *self {
+            Envelope::Diurnal { amplitude, .. } => 1.0 + amplitude,
+            Envelope::Bursts { high, low, .. } => high.max(low),
+        }
+    }
+
+    /// Time-averaged multiplier over one period (rate-matched ablations).
+    pub fn mean_multiplier(&self) -> f64 {
+        match *self {
+            Envelope::Diurnal { .. } => 1.0,
+            Envelope::Bursts {
+                duty, high, low, ..
+            } => duty * high + (1.0 - duty) * low,
+        }
+    }
+
+    /// Parameter validation (called from `ArrivalProcess::validate`).
+    pub fn validate(&self) -> Result<(), ArrivalError> {
+        let bad = |reason: String| Err(ArrivalError::BadEnvelope { reason });
+        match *self {
+            Envelope::Diurnal {
+                period_s,
+                amplitude,
+                phase_s,
+            } => {
+                if !(period_s.is_finite() && period_s > 0.0) {
+                    return bad(format!("diurnal period must be > 0 (got {period_s})"));
+                }
+                if !(0.0..=1.0).contains(&amplitude) {
+                    return bad(format!("diurnal amplitude must be in [0, 1] (got {amplitude})"));
+                }
+                if !phase_s.is_finite() {
+                    return bad(format!("diurnal phase must be finite (got {phase_s})"));
+                }
+            }
+            Envelope::Bursts {
+                period_s,
+                duty,
+                high,
+                low,
+                phase_s,
+            } => {
+                if !(period_s.is_finite() && period_s > 0.0) {
+                    return bad(format!("burst period must be > 0 (got {period_s})"));
+                }
+                if !(0.0..=1.0).contains(&duty) {
+                    return bad(format!("burst duty must be in [0, 1] (got {duty})"));
+                }
+                if !(high.is_finite() && high >= 0.0) || !(low.is_finite() && low >= 0.0) {
+                    return bad(format!("burst multipliers must be >= 0 (got {high}/{low})"));
+                }
+                // The envelope must be strictly positive over a window
+                // of positive measure, or thinning would spin forever on
+                // the first draw: the high window fires iff
+                // `duty > 0 && high > 0`, the low window iff
+                // `duty < 1 && low > 0`.
+                if !((duty > 0.0 && high > 0.0) || (duty < 1.0 && low > 0.0)) {
+                    return bad("burst envelope never produces arrivals".into());
+                }
+                if !phase_s.is_finite() {
+                    return bad(format!("burst phase must be finite (got {phase_s})"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The arrival process driving a tenant's open-loop triggers: requests
+/// for latency-sensitive tenants, cycle starts for bandwidth-heavy
+/// tenants that opt in.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Open-loop Poisson at `rps` requests/s — the engine's historical
+    /// behavior. One `Pcg64::exp(rps)` draw per arrival on the tenant's
+    /// seeded arrival stream.
+    Poisson { rps: f64 },
+    /// Replay an explicit inter-arrival schedule; ends cleanly after the
+    /// last gap (no wrap-around).
+    Trace(TraceSpec),
+    /// Non-homogeneous Poisson: `base_rps` scaled by a deterministic
+    /// [`Envelope`], realized by Lewis–Shedler thinning.
+    Modulated { base_rps: f64, envelope: Envelope },
+}
+
+impl ArrivalProcess {
+    /// Build-time validation. [`TraceSpec`] is valid by construction;
+    /// rate/envelope parameters are checked here so `ScenarioBuilder`
+    /// rejects bad processes before any event is scheduled.
+    pub fn validate(&self) -> Result<(), ArrivalError> {
+        match self {
+            ArrivalProcess::Poisson { rps } => {
+                if !(rps.is_finite() && *rps > 0.0) {
+                    return Err(ArrivalError::BadRate { rps: *rps });
+                }
+            }
+            ArrivalProcess::Trace(_) => {}
+            ArrivalProcess::Modulated { base_rps, envelope } => {
+                if !(base_rps.is_finite() && *base_rps > 0.0) {
+                    return Err(ArrivalError::BadRate { rps: *base_rps });
+                }
+                envelope.validate()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean arrival rate: the planning estimate (auto-placement demand,
+    /// rate-matched Poisson ablations).
+    pub fn mean_rps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rps } => *rps,
+            ArrivalProcess::Trace(t) => t.mean_rps(),
+            ArrivalProcess::Modulated { base_rps, envelope } => {
+                base_rps * envelope.mean_multiplier()
+            }
+        }
+    }
+
+    /// Short human label (reports, CLI).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Trace(_) => "trace",
+            ArrivalProcess::Modulated { .. } => "modulated",
+        }
+    }
+}
+
+/// Live per-tenant arrival cursor: the simulator asks it for the next
+/// inter-arrival gap and it tracks how many arrivals were emitted and
+/// when (if ever) a closed trace ran out.
+#[derive(Clone, Debug)]
+pub struct ArrivalState {
+    process: ArrivalProcess,
+    cursor: usize,
+    emitted: u64,
+    exhausted_at: Option<f64>,
+}
+
+impl ArrivalState {
+    pub fn new(process: ArrivalProcess) -> ArrivalState {
+        ArrivalState {
+            process,
+            cursor: 0,
+            emitted: 0,
+            exhausted_at: None,
+        }
+    }
+
+    /// Next inter-arrival gap measured from `now`, or `None` when a
+    /// closed trace has ended (recorded in [`ArrivalState::exhausted_at`]).
+    /// Poisson draws exactly one `exp` from `rng` per call — the
+    /// bit-compat contract with the pre-rewrite inline code.
+    pub fn next_gap(&mut self, now: f64, rng: &mut Pcg64) -> Option<f64> {
+        match &self.process {
+            ArrivalProcess::Poisson { rps } => Some(rng.exp(*rps)),
+            ArrivalProcess::Trace(t) => {
+                if self.cursor < t.gaps.len() {
+                    let g = t.gaps[self.cursor];
+                    self.cursor += 1;
+                    Some(g)
+                } else {
+                    if self.exhausted_at.is_none() {
+                        self.exhausted_at = Some(now);
+                    }
+                    None
+                }
+            }
+            ArrivalProcess::Modulated { base_rps, envelope } => {
+                // Lewis–Shedler thinning against the peak rate. Terminates
+                // with probability 1 because the envelope is periodic with
+                // a strictly positive window (validated at build).
+                let peak = base_rps * envelope.peak_multiplier();
+                let mut t = now;
+                loop {
+                    t += rng.exp(peak);
+                    if rng.f64() * peak < base_rps * envelope.multiplier_at(t) {
+                        return Some(t - now);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Count one emitted arrival (the simulator calls this when the
+    /// arrival event actually fires).
+    pub fn note_emitted(&mut self) {
+        self.emitted += 1;
+    }
+
+    /// Arrivals emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Sim time at which a closed trace ran out of gaps, if it did.
+    pub fn exhausted_at(&self) -> Option<f64> {
+        self.exhausted_at
+    }
+
+    pub fn process(&self) -> &ArrivalProcess {
+        &self.process
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_gaps_validates() {
+        assert_eq!(TraceSpec::from_gaps(vec![]), Err(ArrivalError::EmptyTrace));
+        match TraceSpec::from_gaps(vec![0.1, f64::NAN]) {
+            Err(ArrivalError::NonFinite { index: 1, value }) => assert!(value.is_nan()),
+            other => panic!("want NonFinite, got {other:?}"),
+        }
+        match TraceSpec::from_gaps(vec![0.1, f64::INFINITY]) {
+            Err(ArrivalError::NonFinite { index: 1, .. }) => {}
+            other => panic!("want NonFinite, got {other:?}"),
+        }
+        match TraceSpec::from_gaps(vec![0.1, -0.5]) {
+            Err(ArrivalError::NegativeGap { index: 1, value }) => assert_eq!(value, -0.5),
+            other => panic!("want NegativeGap, got {other:?}"),
+        }
+        let t = TraceSpec::from_gaps(vec![0.5, 0.0, 1.5]).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.span(), 2.0);
+        assert!((t.mean_rps() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_timestamps_validates_monotonicity() {
+        assert_eq!(TraceSpec::from_timestamps(&[]), Err(ArrivalError::EmptyTrace));
+        match TraceSpec::from_timestamps(&[1.0, 0.5]) {
+            Err(ArrivalError::NonMonotonic {
+                index: 1,
+                prev,
+                value,
+            }) => {
+                assert_eq!(prev, 1.0);
+                assert_eq!(value, 0.5);
+            }
+            other => panic!("want NonMonotonic, got {other:?}"),
+        }
+        // First timestamp must be >= 0 (it is measured from run start).
+        match TraceSpec::from_timestamps(&[-1.0, 2.0]) {
+            Err(ArrivalError::NonMonotonic { index: 0, .. }) => {}
+            other => panic!("want NonMonotonic at 0, got {other:?}"),
+        }
+        match TraceSpec::from_timestamps(&[0.5, f64::NAN]) {
+            Err(ArrivalError::NonFinite { index: 1, .. }) => {}
+            other => panic!("want NonFinite, got {other:?}"),
+        }
+        let t = TraceSpec::from_timestamps(&[0.5, 0.5, 2.0]).unwrap();
+        assert_eq!(t.gaps(), &[0.5, 0.0, 1.5]);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let t = TraceSpec::from_gaps(vec![0.125, 1.0 / 3.0, 2.5e-3, 17.0]).unwrap();
+        let j = t.to_json();
+        let back = TraceSpec::parse_json(&j).unwrap();
+        assert_eq!(t, back);
+        for (a, b) in t.gaps().iter().zip(back.gaps()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Timestamp form parses too.
+        let ts = TraceSpec::parse_json(r#"{"timestamps":[0.5,1.0,3.0]}"#).unwrap();
+        assert_eq!(ts.gaps(), &[0.5, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        assert!(TraceSpec::parse_json("not json").is_err());
+        assert!(TraceSpec::parse_json(r#"{"gaps":[]}"#).is_err());
+        assert!(TraceSpec::parse_json(r#"{"gaps":[1.0,"x"]}"#).is_err());
+        assert!(TraceSpec::parse_json(r#"{"gaps":[1.0],"timestamps":[1.0]}"#).is_err());
+        assert!(TraceSpec::parse_json(r#"{"neither":[1.0]}"#).is_err());
+        assert!(TraceSpec::parse_json(r#"{"timestamps":[2.0,1.0]}"#).is_err());
+    }
+
+    #[test]
+    fn csv_roundtrip_and_headers() {
+        let t = TraceSpec::from_gaps(vec![0.25, 0.75, 1.0 / 7.0]).unwrap();
+        let back = TraceSpec::parse_csv(&t.to_csv()).unwrap();
+        assert_eq!(t, back);
+        for (a, b) in t.gaps().iter().zip(back.gaps()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Headerless input defaults to gaps; comments/blanks skipped.
+        let bare = TraceSpec::parse_csv("0.5\n\n# comment\n1.5\n").unwrap();
+        assert_eq!(bare.gaps(), &[0.5, 1.5]);
+        // Timestamp header switches interpretation.
+        let ts = TraceSpec::parse_csv("timestamps\n1.0\n2.5\n").unwrap();
+        assert_eq!(ts.gaps(), &[1.0, 1.5]);
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        match TraceSpec::parse_csv("gap\n0.5\nbogus\n") {
+            Err(ArrivalError::Parse { line: 3, .. }) => {}
+            other => panic!("want Parse at line 3, got {other:?}"),
+        }
+        assert_eq!(TraceSpec::parse_csv("gap\n"), Err(ArrivalError::EmptyTrace));
+        assert!(TraceSpec::parse_csv("timestamps\n2.0\n1.0\n").is_err());
+        assert!(TraceSpec::parse_csv("-1.0\n").is_err());
+    }
+
+    #[test]
+    fn presample_matches_live_poisson_draws() {
+        // The presample loop must consume the stream exactly like the
+        // live path: one exp per arrival, stopping past the horizon.
+        let rps = 12.0;
+        let horizon = 50.0;
+        let trace = TraceSpec::presample_poisson(rps, horizon, &mut Pcg64::new(7, 1));
+        let mut live = Pcg64::new(7, 1);
+        let mut t = 0.0f64;
+        for (i, &g) in trace.gaps().iter().enumerate() {
+            let expect = live.exp(rps);
+            assert_eq!(g.to_bits(), expect.to_bits(), "gap {i}");
+            t += g;
+        }
+        assert!(t > horizon, "last presampled arrival must pass the horizon");
+        assert!(t - trace.gaps().last().unwrap() <= horizon);
+        // Roughly rps * horizon arrivals.
+        let n = trace.len() as f64;
+        assert!((n - rps * horizon).abs() < 6.0 * (rps * horizon).sqrt());
+    }
+
+    #[test]
+    fn bursty_trace_is_bursty_and_deterministic() {
+        let mk = || {
+            TraceSpec::bursty(&mut Pcg64::new(5, 9), 600.0, 5.0, 50.0, 60.0, 20.0).unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "bursty generation must be deterministic");
+        // Mean rate sits between calm and burst.
+        let rps = a.mean_rps();
+        assert!(rps > 5.0 && rps < 50.0, "mean {rps}");
+        // Squared-CV of gaps well above 1 (a Poisson process would be ~1).
+        let gaps = a.gaps();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv2 = var / (mean * mean);
+        assert!(cv2 > 1.5, "cv^2 {cv2} not bursty");
+    }
+
+    #[test]
+    fn envelope_multipliers_and_validation() {
+        let d = Envelope::Diurnal {
+            period_s: 600.0,
+            amplitude: 0.5,
+            phase_s: 0.0,
+        };
+        assert!(d.validate().is_ok());
+        assert_eq!(d.peak_multiplier(), 1.5);
+        assert_eq!(d.mean_multiplier(), 1.0);
+        assert!((d.multiplier_at(150.0) - 1.5).abs() < 1e-9); // sin peak
+        assert!((d.multiplier_at(450.0) - 0.5).abs() < 1e-9); // trough
+
+        let b = Envelope::Bursts {
+            period_s: 100.0,
+            duty: 0.25,
+            high: 4.0,
+            low: 0.0,
+            phase_s: 10.0,
+        };
+        assert!(b.validate().is_ok());
+        assert_eq!(b.peak_multiplier(), 4.0);
+        assert_eq!(b.mean_multiplier(), 1.0);
+        assert_eq!(b.multiplier_at(10.0), 4.0);
+        assert_eq!(b.multiplier_at(34.9), 4.0);
+        assert_eq!(b.multiplier_at(35.0), 0.0);
+        assert_eq!(b.multiplier_at(110.0), 4.0);
+
+        assert!(Envelope::Diurnal {
+            period_s: 0.0,
+            amplitude: 0.5,
+            phase_s: 0.0
+        }
+        .validate()
+        .is_err());
+        assert!(Envelope::Diurnal {
+            period_s: 100.0,
+            amplitude: 1.5,
+            phase_s: 0.0
+        }
+        .validate()
+        .is_err());
+        assert!(Envelope::Bursts {
+            period_s: 100.0,
+            duty: 0.0,
+            high: 2.0,
+            low: 0.0,
+            phase_s: 0.0
+        }
+        .validate()
+        .is_err());
+        // duty == 1 makes the low window zero-measure: with high == 0
+        // the envelope can never fire, even though low > 0.
+        assert!(Envelope::Bursts {
+            period_s: 100.0,
+            duty: 1.0,
+            high: 0.0,
+            low: 1.0,
+            phase_s: 0.0
+        }
+        .validate()
+        .is_err());
+        // ...but duty == 1 with a positive high is a plain always-on
+        // multiplier and stays valid.
+        assert!(Envelope::Bursts {
+            period_s: 100.0,
+            duty: 1.0,
+            high: 2.0,
+            low: 0.0,
+            phase_s: 0.0
+        }
+        .validate()
+        .is_ok());
+    }
+
+    #[test]
+    fn process_validation_and_mean() {
+        assert!(ArrivalProcess::Poisson { rps: 10.0 }.validate().is_ok());
+        assert!(ArrivalProcess::Poisson { rps: 0.0 }.validate().is_err());
+        assert!(ArrivalProcess::Poisson { rps: f64::NAN }.validate().is_err());
+        assert_eq!(ArrivalProcess::Poisson { rps: 10.0 }.mean_rps(), 10.0);
+        let t = ArrivalProcess::Trace(TraceSpec::from_gaps(vec![1.0, 1.0]).unwrap());
+        assert!(t.validate().is_ok());
+        assert!((t.mean_rps() - 1.0).abs() < 1e-9);
+        let m = ArrivalProcess::Modulated {
+            base_rps: 20.0,
+            envelope: Envelope::Bursts {
+                period_s: 100.0,
+                duty: 0.5,
+                high: 1.5,
+                low: 0.5,
+                phase_s: 0.0,
+            },
+        };
+        assert!(m.validate().is_ok());
+        assert_eq!(m.mean_rps(), 20.0);
+        assert_eq!(m.label(), "modulated");
+    }
+
+    #[test]
+    fn state_poisson_draws_match_inline_exp() {
+        // Bit-compat contract: ArrivalState's Poisson gap is exactly one
+        // rng.exp(rps), same as the pre-rewrite inline code.
+        let mut st = ArrivalState::new(ArrivalProcess::Poisson { rps: 80.0 });
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        for _ in 0..1000 {
+            let g = st.next_gap(0.0, &mut a).unwrap();
+            assert_eq!(g.to_bits(), b.exp(80.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn state_trace_replays_in_order_and_ends_cleanly() {
+        let trace = TraceSpec::from_gaps(vec![0.5, 0.25, 1.0]).unwrap();
+        let mut st = ArrivalState::new(ArrivalProcess::Trace(trace.clone()));
+        let mut rng = Pcg64::seeded(1);
+        let before = rng.clone().next_u64();
+        let mut t = 0.0;
+        for &g in trace.gaps() {
+            let got = st.next_gap(t, &mut rng).unwrap();
+            assert_eq!(got.to_bits(), g.to_bits());
+            t += got;
+            st.note_emitted();
+        }
+        assert_eq!(st.next_gap(t, &mut rng), None);
+        assert_eq!(st.next_gap(t + 5.0, &mut rng), None);
+        assert_eq!(st.emitted(), 3);
+        // Exhaustion is recorded once, at the first None.
+        assert_eq!(st.exhausted_at(), Some(t));
+        // Trace replay never touches the RNG.
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn state_modulated_matches_envelope_rate() {
+        let env = Envelope::Bursts {
+            period_s: 100.0,
+            duty: 0.3,
+            high: 3.0,
+            low: 0.2,
+            phase_s: 0.0,
+        };
+        let mut st = ArrivalState::new(ArrivalProcess::Modulated {
+            base_rps: 10.0,
+            envelope: env.clone(),
+        });
+        let mut rng = Pcg64::seeded(3);
+        let horizon = 20_000.0;
+        let mut t = 0.0;
+        let mut n_high = 0u64;
+        let mut n_low = 0u64;
+        while t < horizon {
+            let g = st.next_gap(t, &mut rng).unwrap();
+            t += g;
+            if t.rem_euclid(100.0) < 30.0 {
+                n_high += 1;
+            } else {
+                n_low += 1;
+            }
+        }
+        // Expected: high windows at 30 rps over 30% of time, low at 2 rps
+        // over 70% — realized rates within a few percent.
+        let high_rate = n_high as f64 / (0.3 * horizon);
+        let low_rate = n_low as f64 / (0.7 * horizon);
+        assert!((high_rate - 30.0).abs() < 1.5, "high {high_rate}");
+        assert!((low_rate - 2.0).abs() < 0.4, "low {low_rate}");
+    }
+}

@@ -13,11 +13,18 @@
 //! [`InterferenceSchedule`] toggles background tenants on and off (the
 //! paper's interference script); every configuration in a comparison
 //! replays the identical schedule (§3.2).
+//!
+//! [`ArrivalProcess`] makes the *arrival side* swappable too: open-loop
+//! Poisson (the default, bit-identical to the pre-trace engine), an
+//! explicit replayed [`TraceSpec`], or a deterministically
+//! [`Envelope`]-modulated Poisson for diurnal/burst synthetic traffic.
 
+pub mod arrivals;
 pub mod schedule;
 pub mod spec;
 pub mod workload;
 
+pub use arrivals::{ArrivalError, ArrivalProcess, ArrivalState, Envelope, TraceSpec};
 pub use schedule::{InterferenceSchedule, Phase};
 pub use spec::{
     BwSpec, CompSpec, LsRequest, LsSpec, T1Request, T1Spec, T2Spec, T3Spec, TenantId, TenantKind,

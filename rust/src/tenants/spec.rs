@@ -5,6 +5,7 @@
 //! through [`crate::tenants::TenantWorkload`]. The paper's fixed T1/T2/T3
 //! world (§3.1) is just the catalog entry that instantiates one of each.
 
+use crate::tenants::arrivals::ArrivalProcess;
 use crate::util::rng::Pcg64;
 
 /// Dense tenant index within a scenario (`T1 = 0`, `T2 = 1`, `T3 = 2` in
@@ -56,8 +57,17 @@ pub struct LsRequest {
 /// Latency-sensitive inference tenant spec (T1 archetype).
 #[derive(Clone, Debug)]
 pub struct LsSpec {
-    /// Poisson arrival rate (requests/s).
+    /// Nominal arrival rate (requests/s). With `arrivals: None` this is
+    /// the open-loop Poisson rate (the engine's historical behavior);
+    /// with an explicit process it remains the declared rate the control
+    /// plane sizes admission against.
     pub arrival_rps: f64,
+    /// Optional explicit arrival process overriding the default
+    /// open-loop Poisson at `arrival_rps` — a replayed trace or a
+    /// deterministically modulated envelope
+    /// (`crate::tenants::arrivals`). `None` keeps the pre-trace engine's
+    /// RNG stream bit-identical.
+    pub arrivals: Option<ArrivalProcess>,
     /// p99 latency SLO in ms (paper: 15 ms non-LLM, 200 ms TTFT for LLM).
     pub slo_ms: f64,
     /// Input-size mixture: (probability, mean GB) pairs — "input sizes are
@@ -79,6 +89,7 @@ impl Default for LsSpec {
     fn default() -> Self {
         LsSpec {
             arrival_rps: 80.0,
+            arrivals: None,
             slo_ms: 15.0,
             // 70% small (20 MB), 25% medium (45 MB), 5% large (90 MB):
             // ~0.8/1.8/3.6 ms over an idle 25 GB/s uplink, 2-3× that under
@@ -96,6 +107,7 @@ impl LsSpec {
     pub fn llm_ttft() -> LsSpec {
         LsSpec {
             arrival_rps: 4.0,
+            arrivals: None,
             slo_ms: 200.0,
             // Prompt+activation staging: bigger payloads than the non-LLM
             // case — vLLM prefill pulls prompt tensors across PCIe.
@@ -108,9 +120,34 @@ impl LsSpec {
         }
     }
 
-    /// Sample the next inter-arrival gap (s).
+    /// Sample the next inter-arrival gap (s) of the *default* open-loop
+    /// Poisson at `arrival_rps`. The simulator goes through
+    /// [`crate::tenants::ArrivalState`] instead (which makes exactly this
+    /// draw for Poisson tenants — the bit-compat contract); this stays
+    /// for spec-level tests and rate calibration.
     pub fn next_gap(&self, rng: &mut Pcg64) -> f64 {
         rng.exp(self.arrival_rps)
+    }
+
+    /// The effective arrival process: the explicit one if set, else
+    /// open-loop Poisson at `arrival_rps`.
+    pub fn arrival_process(&self) -> ArrivalProcess {
+        self.arrivals
+            .clone()
+            .unwrap_or(ArrivalProcess::Poisson {
+                rps: self.arrival_rps,
+            })
+    }
+
+    /// Mean realized arrival rate of the effective process — the
+    /// planning estimate. Exactly `arrival_rps` when no explicit process
+    /// is set (auto-placement demand estimates stay byte-identical for
+    /// pre-trace scenarios).
+    pub fn mean_arrival_rps(&self) -> f64 {
+        match &self.arrivals {
+            None => self.arrival_rps,
+            Some(p) => p.mean_rps(),
+        }
     }
 
     /// Sample one request's demands.
@@ -151,6 +188,13 @@ pub struct BwSpec {
     pub transform_ms: f64,
     /// Pareto shape for cycle-size burstiness.
     pub burst_alpha: f64,
+    /// Optional cycle-*trigger* process. `None` (the default, and every
+    /// pre-trace scenario) keeps the closed loop: a new cycle starts the
+    /// moment the previous one drains while the schedule is on. With a
+    /// process, cycle starts are open-loop triggers drawn from it; a
+    /// trigger landing while a cycle is in flight (or the schedule is
+    /// off) is dropped, not queued.
+    pub arrivals: Option<ArrivalProcess>,
 }
 
 /// Back-compat alias: the paper's T2 slot.
@@ -164,6 +208,7 @@ impl Default for BwSpec {
             d2h_gb: 0.5,
             transform_ms: 30.0,
             burst_alpha: 2.2,
+            arrivals: None,
         }
     }
 }
@@ -304,6 +349,32 @@ mod tests {
         assert_eq!(T1, TenantId(0));
         assert_eq!(T2, TenantId(1));
         assert_eq!(T3, TenantId(2));
+    }
+
+    #[test]
+    fn arrival_process_defaults_to_poisson_at_nominal_rate() {
+        use crate::tenants::arrivals::{ArrivalProcess, TraceSpec};
+        let spec = LsSpec::default();
+        assert!(spec.arrivals.is_none());
+        assert_eq!(
+            spec.arrival_process(),
+            ArrivalProcess::Poisson { rps: 80.0 }
+        );
+        assert_eq!(spec.mean_arrival_rps(), 80.0);
+        // An explicit trace overrides both the process and the mean.
+        let traced = LsSpec {
+            arrivals: Some(ArrivalProcess::Trace(
+                TraceSpec::from_gaps(vec![0.5; 10]).unwrap(),
+            )),
+            ..LsSpec::default()
+        };
+        assert_eq!(traced.arrival_process().label(), "trace");
+        assert!((traced.mean_arrival_rps() - 2.0).abs() < 1e-9);
+        // The nominal rate is untouched — the control plane still sizes
+        // against it.
+        assert_eq!(traced.arrival_rps, 80.0);
+        // BwSpec carries the optional trigger process too.
+        assert!(BwSpec::default().arrivals.is_none());
     }
 
     #[test]

@@ -48,10 +48,40 @@ impl WorkloadSpec {
         }
     }
 
+    pub fn as_bw_mut(&mut self) -> Option<&mut BwSpec> {
+        match self {
+            WorkloadSpec::BandwidthHeavy(s) => Some(s),
+            _ => None,
+        }
+    }
+
     pub fn as_comp(&self) -> Option<&CompSpec> {
         match self {
             WorkloadSpec::ComputeHeavy(s) => Some(s),
             _ => None,
+        }
+    }
+
+    /// Set the arrival process on an arrival-capable spec: requests for
+    /// latency-sensitive tenants, cycle triggers for bandwidth-heavy
+    /// ones. `Err` for compute-heavy specs, which have no arrival side
+    /// (their step loop is closed by construction) — the single dispatch
+    /// point behind [`TenantWorkload::arrivals`] and
+    /// `ScenarioBuilder::arrivals`.
+    pub fn set_arrivals(
+        &mut self,
+        process: crate::tenants::arrivals::ArrivalProcess,
+    ) -> Result<(), TenantKind> {
+        match self {
+            WorkloadSpec::LatencySensitive(s) => {
+                s.arrivals = Some(process);
+                Ok(())
+            }
+            WorkloadSpec::BandwidthHeavy(s) => {
+                s.arrivals = Some(process);
+                Ok(())
+            }
+            WorkloadSpec::ComputeHeavy(_) => Err(TenantKind::ComputeHeavy),
         }
     }
 
@@ -74,18 +104,28 @@ impl WorkloadSpec {
             WorkloadSpec::LatencySensitive(s) => {
                 // Mean request H2D size (the size mixture is ~normalized;
                 // guard against authored mixes whose weights do not sum
-                // to 1) times the arrival rate.
+                // to 1) times the arrival rate. `mean_arrival_rps` is
+                // exactly `arrival_rps` without an explicit process, so
+                // pre-trace layouts are untouched; trace/modulated
+                // tenants charge their realized mean rate instead.
                 let wsum: f64 = s.size_mix.iter().map(|&(p, _)| p).sum();
                 let mean_gb: f64 = s.size_mix.iter().map(|&(p, m)| p * m).sum::<f64>()
                     / wsum.max(1e-9);
-                s.arrival_rps * mean_gb
+                s.mean_arrival_rps() * mean_gb
             }
             WorkloadSpec::BandwidthHeavy(s) => {
                 // PCIe bytes per cycle over an estimated cycle duration
                 // (transfers at ~10 GB/s effective fair share + transform).
                 let cycle_s =
                     (s.read_gb + s.h2d_gb + s.d2h_gb) / 10.0 + s.transform_ms / 1000.0;
-                (s.h2d_gb + s.d2h_gb) / cycle_s.max(1e-9)
+                let closed_loop = 1.0 / cycle_s.max(1e-9);
+                // Trigger-driven pipelines cycle at most as fast as the
+                // trigger process delivers starts.
+                let cycles_per_s = match &s.arrivals {
+                    None => closed_loop,
+                    Some(p) => p.mean_rps().min(closed_loop),
+                };
+                (s.h2d_gb + s.d2h_gb) * cycles_per_s
             }
             WorkloadSpec::ComputeHeavy(s) => {
                 // Gradient sync once per step.
@@ -246,6 +286,31 @@ impl TenantWorkload {
     pub fn kind(&self) -> TenantKind {
         self.spec.kind()
     }
+
+    /// Chainable arrival-process override: requests for a
+    /// latency-sensitive tenant, cycle triggers for a bandwidth-heavy
+    /// one. Compute-heavy tenants have no arrival side (their step loop
+    /// is closed by construction) — asking for one is a spec bug, caught
+    /// here rather than silently ignored.
+    pub fn arrivals(mut self, process: crate::tenants::arrivals::ArrivalProcess) -> Self {
+        if self.spec.set_arrivals(process).is_err() {
+            panic!(
+                "tenant '{}' is compute-heavy; arrival processes only drive \
+                 latency-sensitive requests or bandwidth-heavy cycle triggers",
+                self.name
+            );
+        }
+        self
+    }
+
+    /// The tenant's explicit arrival process, if any.
+    pub fn arrival_process(&self) -> Option<&crate::tenants::arrivals::ArrivalProcess> {
+        match &self.spec {
+            WorkloadSpec::LatencySensitive(s) => s.arrivals.as_ref(),
+            WorkloadSpec::BandwidthHeavy(s) => s.arrivals.as_ref(),
+            WorkloadSpec::ComputeHeavy(_) => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -305,6 +370,46 @@ mod tests {
         let e_comp = comp.expected_pcie_gbps();
         assert!(e_bw > e_comp, "bw {e_bw} !> comp {e_comp}");
         assert!(e_comp > 0.0);
+    }
+
+    #[test]
+    fn arrivals_chainer_sets_the_process_per_kind() {
+        use crate::tenants::arrivals::{ArrivalProcess, TraceSpec};
+        let ls = TenantWorkload::latency_sensitive(
+            "svc",
+            LsSpec::default(),
+            PlacementSpec::dedicated(0, MigProfile::P3g40gb),
+        )
+        .arrivals(ArrivalProcess::Trace(
+            TraceSpec::from_gaps(vec![1.0, 2.0]).unwrap(),
+        ));
+        assert_eq!(ls.arrival_process().unwrap().label(), "trace");
+        let bw = TenantWorkload::bandwidth_heavy(
+            "etl",
+            BwSpec::default(),
+            InterferenceSchedule::always_on(100.0),
+            PlacementSpec::dedicated(1, MigProfile::P3g40gb),
+        )
+        .arrivals(ArrivalProcess::Poisson { rps: 1.5 });
+        assert_eq!(bw.arrival_process().unwrap().label(), "poisson");
+        // Trigger-gated ETL charges the lower of trigger and closed-loop
+        // cycle rate.
+        let open = WorkloadSpec::BandwidthHeavy(BwSpec::default()).expected_pcie_gbps();
+        let gated = bw.spec.expected_pcie_gbps();
+        assert!(gated <= open + 1e-12, "gated {gated} !<= open {open}");
+    }
+
+    #[test]
+    #[should_panic(expected = "compute-heavy")]
+    fn arrivals_chainer_rejects_compute_tenants() {
+        use crate::tenants::arrivals::ArrivalProcess;
+        let _ = TenantWorkload::compute_heavy(
+            "train",
+            CompSpec::default(),
+            InterferenceSchedule::always_on(100.0),
+            PlacementSpec::dedicated(0, MigProfile::P3g40gb),
+        )
+        .arrivals(ArrivalProcess::Poisson { rps: 1.0 });
     }
 
     #[test]

@@ -107,11 +107,15 @@ fn catalog_smoke_matrix() {
     for name in Scenario::CATALOG {
         let mut s = Scenario::by_name(name, 19, Levers::full())
             .unwrap_or_else(|| panic!("catalog name {name} did not resolve"));
-        // The 64-tenant dense world is an order of magnitude more events
-        // per simulated second than the rest of the catalog; a shorter
-        // horizon keeps the debug-mode smoke affordable while still
-        // exercising hundreds of thousands of fabric events.
-        let horizon = if name == "hotspot_64" { 180.0 } else { 700.0 };
+        // The dense many-tenant worlds are an order of magnitude more
+        // events per simulated second than the rest of the catalog;
+        // shorter horizons keep the debug-mode smoke affordable while
+        // still exercising hundreds of thousands of fabric events.
+        let horizon = match name {
+            "hotspot_64" => 180.0,
+            "trace_burst_32" => 240.0,
+            _ => 700.0,
+        };
         s.horizon = horizon;
         let n = s.n_tenants();
         let primary = s.primary;
@@ -333,6 +337,55 @@ fn hotspot_64_runs_end_to_end_with_stats_for_all_tenants() {
     }
     // Both PCIe uplinks moved a real share of the traffic.
     assert!(r.link_gb[0] > 0.0 && r.link_gb[1] > 0.0);
+    let r2 = mk();
+    assert_eq!(r.fingerprint(), r2.fingerprint());
+}
+
+/// Acceptance for the trace-driven arrival engine: the 32-tenant
+/// trace-replay catalog entry runs end to end with per-tenant arrival
+/// accounting — every LS tenant replays its bursty trace (no early
+/// exhaustion within the 1800 s trace window), every ETL pipeline cycles
+/// on Poisson triggers, and the whole run replays bit-identically.
+#[test]
+fn trace_burst_32_runs_end_to_end_with_arrival_accounting() {
+    use predserve::tenants::TenantKind;
+    let mk = || {
+        let mut s = Scenario::by_name("trace_burst_32", 29, Levers::full()).unwrap();
+        s.horizon = 180.0;
+        SimWorld::new(s).run()
+    };
+    let r = mk();
+    assert_eq!(r.per_tenant.len(), 32);
+    assert!(r.completed > 1_000, "primary completed {}", r.completed);
+    for t in &r.per_tenant {
+        match t.kind {
+            TenantKind::LatencySensitive => {
+                assert!(t.arrivals_emitted > 0, "{}: no trace arrivals", t.name);
+                assert!(t.completed > 0, "{}: no completed requests", t.name);
+                // Traces cover 1800 s; a 180 s run must not drain them.
+                assert!(
+                    t.trace_exhausted_at.is_none(),
+                    "{}: trace exhausted at {:?}",
+                    t.name,
+                    t.trace_exhausted_at
+                );
+            }
+            TenantKind::BandwidthHeavy => {
+                assert!(t.arrivals_emitted > 0, "{}: no cycle triggers", t.name);
+                // Open-loop triggers: cycles never outnumber them.
+                assert!(
+                    t.completed <= t.arrivals_emitted,
+                    "{}: {} cycles > {} triggers",
+                    t.name,
+                    t.completed,
+                    t.arrivals_emitted
+                );
+            }
+            TenantKind::ComputeHeavy => {
+                assert_eq!(t.arrivals_emitted, 0, "{}: trainer emitted arrivals", t.name)
+            }
+        }
+    }
     let r2 = mk();
     assert_eq!(r.fingerprint(), r2.fingerprint());
 }

@@ -15,7 +15,8 @@ use predserve::platform::{Scenario, ScenarioBuilder, SimWorld};
 use predserve::serving::kvcache::{KvError, PagedKvCache};
 use predserve::sim::EventQueue;
 use predserve::tenants::{
-    BwSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantKind, TenantWorkload,
+    ArrivalProcess, BwSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantKind,
+    TenantWorkload, TraceSpec,
 };
 use predserve::topo::HostTopology;
 use predserve::util::proptest_lite::{check, Config};
@@ -727,6 +728,150 @@ fn single_primary_catalog_fingerprints_unchanged_by_control_plane() {
             !legacy.fingerprint().contains(";arb"),
             "{name}: single-primary fingerprint format changed"
         );
+    }
+}
+
+// --- arrival-process / trace-replay properties -------------------------------
+
+#[test]
+fn prop_poisson_presample_trace_oracle_bitwise() {
+    // The headline differential oracle for the arrival rewrite: presample
+    // each Poisson-driven tenant's seeded arrival stream into an explicit
+    // `Trace`, run the same scenario once through the closed-form Poisson
+    // path and once through the trace-replay path, and require **byte-
+    // equal run fingerprints** — the trace machinery reproduces the
+    // pre-trace engine exactly, across random scenarios, seeds, tenant
+    // counts and lever settings (>= 8 distinct seeds by construction).
+    check(
+        Config { cases: 12, seed: 0x40 },
+        "poisson-presample oracle",
+        gen_scenario,
+        |spec| {
+            let lv = levers_of(spec.levers);
+            let poisson = build_gen(spec, lv);
+            let traced = poisson.with_presampled_traces();
+            let a = SimWorld::new(poisson).run();
+            let b = SimWorld::new(traced).run();
+            if a.fingerprint() != b.fingerprint() {
+                return Err(format!(
+                    "trace replay diverged from the closed-form path:\n  {}\n  {}",
+                    a.fingerprint(),
+                    b.fingerprint()
+                ));
+            }
+            if a.sim_events != b.sim_events {
+                return Err(format!(
+                    "event streams diverged: {} vs {}",
+                    a.sim_events, b.sim_events
+                ));
+            }
+            for (ta, tb) in a.per_tenant.iter().zip(&b.per_tenant) {
+                if ta.arrivals_emitted != tb.arrivals_emitted {
+                    return Err(format!(
+                        "{}: emitted {} vs {}",
+                        ta.name, ta.arrivals_emitted, tb.arrivals_emitted
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trace_replay_emits_exactly_len_in_order() {
+    // Replay determinism + exactness: an explicit trace whose span fits
+    // inside the horizon emits exactly `len(trace)` arrivals, in order —
+    // pinned by requiring the recorded exhaustion time to equal the
+    // bit-exact cumulative sum of the gaps (any reordering, loss or
+    // duplication would break the float fold).
+    check(
+        Config { cases: 64, seed: 0x41 },
+        "trace replay exactness",
+        |rng| {
+            let spec = gen_scenario(rng);
+            let traces: Vec<(u64, usize)> = (0..8)
+                .map(|_| (rng.next_u64(), 20 + rng.below(180) as usize))
+                .collect();
+            (spec, traces)
+        },
+        |(spec, traces)| {
+            let mut s = build_gen(spec, levers_of(spec.levers));
+            let horizon = s.horizon;
+            let n_tenants = s.n_tenants();
+            let mut expected: Vec<Option<(usize, f64)>> = vec![None; n_tenants];
+            let mut k = 0;
+            for (i, t) in s.tenants.iter_mut().enumerate() {
+                let Some(ls) = t.spec.as_ls_mut() else { continue };
+                let (tseed, n) = traces[k % traces.len()];
+                k += 1;
+                // Gaps whose sum stays comfortably inside the horizon, so
+                // every arrival is processed before the run ends.
+                let mut trng = Pcg64::new(tseed, 9);
+                let max_gap = (horizon - 5.0) / n as f64;
+                let gaps: Vec<f64> = (0..n).map(|_| trng.range_f64(0.0, max_gap)).collect();
+                // The same left-to-right fold the event loop performs.
+                let mut t_end = 0.0f64;
+                for &g in &gaps {
+                    t_end += g;
+                }
+                expected[i] = Some((n, t_end));
+                ls.arrivals = Some(ArrivalProcess::Trace(TraceSpec::from_gaps(gaps).unwrap()));
+            }
+            let r = SimWorld::new(s).run();
+            for (i, exp) in expected.iter().enumerate() {
+                let Some((n, t_end)) = exp else { continue };
+                let t = &r.per_tenant[i];
+                if t.arrivals_emitted != *n as u64 {
+                    return Err(format!(
+                        "{}: emitted {} != trace len {n}",
+                        t.name, t.arrivals_emitted
+                    ));
+                }
+                match t.trace_exhausted_at {
+                    Some(ts) if ts.to_bits() == t_end.to_bits() => {}
+                    other => {
+                        return Err(format!(
+                            "{}: exhausted_at {other:?} != cumulative gap sum {t_end}",
+                            t.name
+                        ))
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn catalog_fingerprints_pinned_across_arrival_rewrite() {
+    // Regression for the arrival rewrite: all 10 pre-existing catalog
+    // scenarios (the 9 named entries plus the steady_contention_off
+    // variant) keep byte-identical fingerprints between the closed-form
+    // Poisson path and the presampled-trace replay path.
+    for name in [
+        "paper_single_host",
+        "paper_llm_case",
+        "steady_contention",
+        "steady_contention_off",
+        "multi_ls_slo_mix",
+        "pcie_hotspot",
+        "diurnal_burst",
+        "auto_pack_24",
+        "dueling_primaries",
+        "hotspot_64",
+    ] {
+        let mut s = Scenario::by_name(name, 31, Levers::full()).unwrap();
+        s.horizon = 60.0;
+        let traced = s.with_presampled_traces();
+        let a = SimWorld::new(s).run();
+        let b = SimWorld::new(traced).run();
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "{name}: the arrival rewrite changed observable behavior"
+        );
+        assert_eq!(a.sim_events, b.sim_events, "{name}: event stream changed");
     }
 }
 
