@@ -1,6 +1,10 @@
 //! Fabric-engine scaling sweep: whole-run wall time and PS-solver
 //! invocation counts for the incremental engine vs the from-scratch
-//! reference oracle, on generated dense scenarios from 24 to 256 tenants.
+//! reference oracle, on generated dense scenarios from 24 to 256 tenants
+//! — plus a sharded-engine sweep at 1024/4096 tenants comparing the
+//! sharded conservative-PDES core against the single-queue reference
+//! engine (both on the incremental fabric; the reference *fabric* is
+//! O(links x flows) per recompute and would dominate at that scale).
 //!
 //! Every case runs the *same scenario* on both engines and panics if the
 //! run fingerprints diverge — so the CI perf-smoke step doubles as a
@@ -97,6 +101,55 @@ fn main() {
         report.metric(&format!("{label}: wall_s incremental"), inc_s);
         report.metric(&format!("{label}: wall_s reference"), ref_s);
         report.metric(&format!("{label}: wall speedup"), ref_s / inc_s.max(1e-9));
+    }
+
+    banner("sharded engine sweep (sharded PDES core vs single-queue reference)");
+    println!(
+        "{:32} {:>10} {:>7} {:>9} {:>9} {:>8} {:>10} {:>8}",
+        "case", "events", "shards", "wall s", "wall s", "speedup", "cross", "windows"
+    );
+    println!(
+        "{:32} {:>10} {:>7} {:>9} {:>9} {:>8} {:>10} {:>8}",
+        "", "", "", "(single)", "(shard)", "", "shard %", ""
+    );
+    // Horizons shrink as N grows to keep the sweep's wall time bounded;
+    // fingerprint equality is still asserted on every case, so this
+    // section is also the release-mode engine-equivalence check at a
+    // scale the unit tests never reach.
+    for (n, horizon, shards) in [(1024usize, 30.0f64, 8usize), (4096, 20.0, 8)] {
+        let mk = |shard_count: usize| {
+            let mut s = Scenario::dense_hotspot(11, n, Levers::full());
+            s.horizon = horizon;
+            s.shards = shard_count;
+            s
+        };
+        let (single, single_s) = timed_run(mk(1), FabricKind::Incremental);
+        let (sharded, sharded_s) = timed_run(mk(shards), FabricKind::Incremental);
+        let label = format!("N={n} (dense hotspot, sharded)");
+        // The sharded core's contract: byte-identical to the reference
+        // engine, bit for bit, or the run is wrong.
+        assert_eq!(
+            single.fingerprint(),
+            sharded.fingerprint(),
+            "{label}: sharded and single-queue engines diverged"
+        );
+        assert_eq!(
+            single.sim_events, sharded.sim_events,
+            "{label}: event counts diverged"
+        );
+        let speedup = single_s / sharded_s.max(1e-9);
+        let cross_pct =
+            100.0 * sharded.cross_shard_events as f64 / sharded.sim_events.max(1) as f64;
+        println!(
+            "{label:32} {:>10} {:>7} {single_s:>9.3} {sharded_s:>9.3} {speedup:>7.2}x {cross_pct:>9.1}% {:>8}",
+            sharded.sim_events, sharded.shards, sharded.sync_windows
+        );
+        report.metric(&format!("{label}: events"), sharded.sim_events as f64);
+        report.metric(&format!("{label}: wall_s single-queue"), single_s);
+        report.metric(&format!("{label}: wall_s sharded"), sharded_s);
+        report.metric(&format!("{label}: sharded speedup"), speedup);
+        report.metric(&format!("{label}: cross-shard %"), cross_pct);
+        report.metric(&format!("{label}: sync windows"), sharded.sync_windows as f64);
     }
 
     report.write_json("BENCH_scale_sweep.json");

@@ -139,12 +139,16 @@ impl Leader {
     /// Launch `nodes` in-process workers, dispatch the same scenario to
     /// every node, and aggregate. This is the Slurm-like `srun` of the
     /// repro: every node runs its own controller over its own 8 GPUs.
+    /// `shards` selects each worker's simulation engine (1 = single-queue
+    /// reference; sharded runs are bit-identical, so the report does not
+    /// depend on it).
     pub fn run_cluster(
         nodes: usize,
         seed: u64,
         levers: &str,
         horizon_s: f64,
         workload: &str,
+        shards: usize,
     ) -> Result<ClusterReport> {
         let (mut streams, joins) = Leader::launch(nodes)?;
         for (n, (_, stream)) in streams.iter_mut().enumerate() {
@@ -156,6 +160,7 @@ impl Leader {
                     levers: levers.to_string(),
                     horizon_s,
                     workload: workload.to_string(),
+                    shards,
                 },
             )?;
         }
@@ -250,7 +255,7 @@ mod tests {
 
     #[test]
     fn two_node_cluster_roundtrip() {
-        let report = Leader::run_cluster(2, 21, "static", 45.0, "single").unwrap();
+        let report = Leader::run_cluster(2, 21, "static", 45.0, "single", 2).unwrap();
         assert_eq!(report.per_node.len(), 2);
         assert!(report.total_completed > 4_000);
         assert!(report.mean_p99_ms > 0.0);

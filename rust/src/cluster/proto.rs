@@ -16,6 +16,10 @@ pub enum Msg {
         horizon_s: f64,
         /// "single" (E1 world) or "llm" (Table 2 world).
         workload: String,
+        /// Simulation-engine shard count (1 = single-queue reference).
+        /// Sharded runs are bit-identical to the reference, so this is a
+        /// pure performance lever; older leaders that omit it get 1.
+        shards: usize,
     },
     /// Leader → worker: run this node's share of a fleet-level tenant
     /// list. The worker re-derives the full list deterministically from
@@ -65,12 +69,14 @@ impl Msg {
                 levers,
                 horizon_s,
                 workload,
+                shards,
             } => Json::obj(vec![
                 ("type", Json::Str("run".into())),
                 ("seed", Json::Num(*seed as f64)),
                 ("levers", Json::Str(levers.clone())),
                 ("horizon_s", Json::Num(*horizon_s)),
                 ("workload", Json::Str(workload.clone())),
+                ("shards", Json::Num(*shards as f64)),
             ]),
             Msg::RunTenantSet {
                 seed,
@@ -149,6 +155,8 @@ impl Msg {
                 levers: j.get("levers").as_str().unwrap_or("full").to_string(),
                 horizon_s: j.get("horizon_s").as_f64().unwrap_or(600.0),
                 workload: j.get("workload").as_str().unwrap_or("single").to_string(),
+                // Pre-sharding leaders omit the field: reference engine.
+                shards: j.get("shards").as_usize().unwrap_or(1).max(1),
             },
             "run_tenants" => {
                 let mut assigned = Vec::new();
@@ -261,6 +269,7 @@ mod tests {
                 levers: "full".into(),
                 horizon_s: 600.0,
                 workload: "llm".into(),
+                shards: 4,
             },
             Msg::RunTenantSet {
                 // Above 2^53: pins the exact-u64 (string) seed transport.
@@ -311,6 +320,19 @@ mod tests {
             write_msg(&mut buf, &m).unwrap();
             let got = read_msg(&mut &buf[..]).unwrap();
             assert_eq!(got, m);
+        }
+    }
+
+    #[test]
+    fn run_without_shards_field_defaults_to_reference_engine() {
+        // Wire compatibility: a pre-sharding leader never sends "shards".
+        let j = Json::parse(
+            r#"{"type":"run","seed":3,"levers":"full","horizon_s":60,"workload":"single"}"#,
+        )
+        .unwrap();
+        match Msg::from_json(&j).unwrap() {
+            Msg::RunScenario { shards, .. } => assert_eq!(shards, 1),
+            other => panic!("unexpected {other:?}"),
         }
     }
 

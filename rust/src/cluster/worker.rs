@@ -36,7 +36,17 @@ impl Worker {
     /// name (see [`Scenario::CATALOG`]); unknown names fall back to the
     /// paper's single-host world (wire-protocol compatibility), with a
     /// warning so a typo'd experiment name cannot pass silently.
-    pub fn run_scenario(&self, seed: u64, levers: &str, horizon_s: f64, workload: &str) -> Msg {
+    /// `shards` selects the simulation engine (1 = single-queue
+    /// reference); sharded runs are bit-identical, so the reply is the
+    /// same either way — only wall-clock changes.
+    pub fn run_scenario(
+        &self,
+        seed: u64,
+        levers: &str,
+        horizon_s: f64,
+        workload: &str,
+        shards: usize,
+    ) -> Msg {
         let lv = levers_from_str(levers);
         // Echo contract: a recognized request echoes the REQUESTED name
         // verbatim (aliases included), so leaders can detect fallback
@@ -56,6 +66,7 @@ impl Worker {
             }
         };
         scenario.horizon = horizon_s;
+        scenario.shards = shards.max(1);
         let r = SimWorld::new(scenario).run();
         Msg::RunDone {
             node: self.node.clone(),
@@ -150,8 +161,9 @@ impl Worker {
                     levers,
                     horizon_s,
                     workload,
+                    shards,
                 } => {
-                    let done = self.run_scenario(seed, &levers, horizon_s, &workload);
+                    let done = self.run_scenario(seed, &levers, horizon_s, &workload, shards);
                     write_msg(&mut stream, &done)?;
                 }
                 Msg::RunTenantSet {
@@ -184,7 +196,7 @@ mod tests {
     #[test]
     fn local_run_produces_stats() {
         let w = Worker::new("test-node");
-        let msg = w.run_scenario(3, "static", 60.0, "single");
+        let msg = w.run_scenario(3, "static", 60.0, "single", 1);
         match msg {
             Msg::RunDone {
                 node,
@@ -204,7 +216,7 @@ mod tests {
     fn catalog_workloads_run_on_workers() {
         let w = Worker::new("cat-node");
         for name in ["multi_ls_slo_mix", "pcie_hotspot", "diurnal_burst"] {
-            match w.run_scenario(3, "static", 45.0, name) {
+            match w.run_scenario(3, "static", 45.0, name, 1) {
                 Msg::RunDone {
                     completed,
                     scenario,
@@ -222,7 +234,7 @@ mod tests {
     #[test]
     fn typoed_workload_is_detectable_from_the_echo() {
         let w = Worker::new("typo-node");
-        match w.run_scenario(3, "static", 45.0, "pcie_hotpsot") {
+        match w.run_scenario(3, "static", 45.0, "pcie_hotpsot", 1) {
             Msg::RunDone { scenario, .. } => {
                 // Falls back for wire compatibility, but the echoed name
                 // exposes the mismatch to the caller.
@@ -230,6 +242,16 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn sharded_worker_run_is_bit_identical_to_reference() {
+        // The shard count is a pure performance lever: every metric in
+        // the RunDone reply must match the reference engine exactly.
+        let w = Worker::new("shard-node");
+        let reference = w.run_scenario(3, "static", 45.0, "pcie_hotspot", 1);
+        let sharded = w.run_scenario(3, "static", 45.0, "pcie_hotspot", 4);
+        assert_eq!(reference, sharded);
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub fn apply(scenario: &mut Scenario, j: &Json) -> Result<()> {
     if let Some(v) = run.get("seed").as_f64() {
         scenario.seed = v as u64;
     }
+    if let Some(v) = run.get("shards").as_f64() {
+        let n = v as usize;
+        if n < 1 {
+            return Err(anyhow!("run.shards must be >= 1, got {v}"));
+        }
+        scenario.shards = n;
+    }
     Ok(())
 }
 

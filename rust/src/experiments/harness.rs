@@ -2,6 +2,7 @@
 
 use crate::controller::Levers;
 use crate::platform::{RunResult, Scenario, SimWorld};
+use crate::sim::parallel::scoped_parallel_map;
 use crate::util::stats::Summary;
 
 /// Repeat policy. The paper uses 7 fixed seeds; `fast()` trims for CI
@@ -86,18 +87,27 @@ impl ConfigSummary {
 }
 
 /// Run `levers` over the repeat set on the scenario produced by `mk`.
+///
+/// Repeat seeds are RNG-independent worlds, so the runs execute on
+/// scoped worker threads ([`scoped_parallel_map`]); the map preserves
+/// seed order, so the resulting `ConfigSummary` is byte-identical to
+/// the old sequential loop.
 pub fn repeat_runs(
     label: &str,
     levers: Levers,
     repeats: &Repeats,
     mk: impl Fn(u64, Levers) -> Scenario,
 ) -> ConfigSummary {
-    let mut runs = Vec::new();
-    for &seed in repeats.active_seeds() {
-        let mut scenario = mk(seed, levers);
-        scenario.horizon = repeats.horizon_s;
-        runs.push(SimWorld::new(scenario).run());
-    }
+    let scenarios: Vec<Scenario> = repeats
+        .active_seeds()
+        .iter()
+        .map(|&seed| {
+            let mut scenario = mk(seed, levers);
+            scenario.horizon = repeats.horizon_s;
+            scenario
+        })
+        .collect();
+    let runs = scoped_parallel_map(scenarios, |s| SimWorld::new(s).run());
     ConfigSummary::of(label, runs)
 }
 

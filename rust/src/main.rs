@@ -28,7 +28,7 @@ use predserve::platform::{Scenario, SimWorld};
 use predserve::serving::request::SamplingParams;
 use predserve::serving::Engine;
 
-const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--config FILE] [--arrivals-trace FILE] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
+const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--shards N] [--config FILE] [--arrivals-trace FILE] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
 
 fn repeats(args: &Args) -> Repeats {
     let mut r = if args.flag("fast") {
@@ -121,7 +121,18 @@ fn main() -> Result<()> {
                     .arrivals = Some(ArrivalProcess::Trace(trace));
             }
             scenario.horizon = args.get_f64("horizon", scenario.horizon);
+            scenario.shards = args.get_usize("shards", scenario.shards).max(1);
             let r = SimWorld::new(scenario).run();
+            if r.shards > 1 {
+                let per: Vec<String> = r.per_shard_events.iter().map(u64::to_string).collect();
+                println!(
+                    "engine: {} shards, events/shard=[{}], cross-shard={}, sync windows={}",
+                    r.shards,
+                    per.join(", "),
+                    r.cross_shard_events,
+                    r.sync_windows
+                );
+            }
             println!(
                 "{} [{}]: miss={:.1}% p95={:.2} p99={:.2} p999={:.2} ms rps={:.1} moves/hr={:.1}",
                 r.label,
@@ -285,6 +296,7 @@ fn main() -> Result<()> {
                     args.get_str("levers", "full"),
                     args.get_f64("horizon", 600.0),
                     args.get_str("workload", "single"),
+                    args.get_usize("shards", 1).max(1),
                 )?
             };
             println!(

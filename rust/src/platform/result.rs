@@ -114,6 +114,25 @@ pub struct RunResult {
     /// Deterministic, but deliberately excluded from `fingerprint()` so
     /// pre-refactor fingerprints stay byte-identical.
     pub fabric_rate_recomputes: u64,
+    /// Simulation-engine shard count (1 = the single-queue reference).
+    /// Like every field below, deterministic but excluded from
+    /// `fingerprint()` — the whole point of the sharded core is that it
+    /// changes *none* of the fingerprinted metrics.
+    pub shards: usize,
+    /// Events dispatched per shard (empty on the single-queue engine).
+    /// Imbalance here means the switch-subtree partition is skewed.
+    pub per_shard_events: Vec<u64>,
+    /// Events whose requested time fell a numerical hair (≤
+    /// `sim::PAST_EVENT_EPS_S`) in the past and were clamped to the
+    /// clock. Expected 0; a nonzero value is an early-warning signal of
+    /// causality drift (beyond the epsilon the engine panics instead).
+    pub clamped_events: u64,
+    /// Pushes that crossed a shard boundary (uplink rate changes,
+    /// arbiter commits, fleet-level admission). 0 on the single queue.
+    pub cross_shard_events: u64,
+    /// Conservative lookahead windows the sharded run partitioned into
+    /// (window width = the scenario's sampling interval Δ).
+    pub sync_windows: u64,
 }
 
 impl RunResult {

@@ -57,6 +57,13 @@ pub struct Scenario {
     pub move_pause_s: f64,
     /// Latency noise ε: lognormal sigma added multiplicatively to compute.
     pub epsilon_sigma: f64,
+    /// Simulation-engine shard count: 1 (the default) runs the
+    /// single-queue reference engine; N > 1 runs the sharded
+    /// conservative-PDES core (`sim::parallel`), which is byte-identical
+    /// to the reference — this knob only affects wall-clock, never
+    /// results. Settable via `--shards` on the CLI and
+    /// `run.shards` in config files.
+    pub shards: usize,
     /// The resolved placement layout (`ScenarioBuilder::build` records
     /// one for every scenario: pinned entries verbatim, auto entries as
     /// the allocator chose them). `predserve plan` prints it.
@@ -884,6 +891,7 @@ pub struct ScenarioBuilder {
     mu_ref_profile: MigProfile,
     move_pause_s: f64,
     epsilon_sigma: f64,
+    shards: usize,
 }
 
 impl ScenarioBuilder {
@@ -902,7 +910,17 @@ impl ScenarioBuilder {
             mu_ref_profile: MigProfile::P2g20gb,
             move_pause_s: 0.05,
             epsilon_sigma: 0.32,
+            shards: 1,
         }
+    }
+
+    /// Run on the sharded simulation engine with `n` shards (1 = the
+    /// single-queue reference). Results are byte-identical either way;
+    /// this only trades event-queue depth for merge overhead.
+    pub fn shards(mut self, n: usize) -> Self {
+        assert!(n >= 1, "shard count must be >= 1");
+        self.shards = n;
+        self
     }
 
     pub fn topo(mut self, topo: HostTopology) -> Self {
@@ -1108,6 +1126,7 @@ impl ScenarioBuilder {
             mu_ref_profile: self.mu_ref_profile,
             move_pause_s: self.move_pause_s,
             epsilon_sigma: self.epsilon_sigma,
+            shards: self.shards,
             layout,
         }
     }

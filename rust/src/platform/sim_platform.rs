@@ -35,7 +35,7 @@ use crate::controller::view::{InstanceView, TenantView};
 use crate::controller::{Action, Arbiter, IsolationChange, PlannerView, Protected};
 use crate::fabric::{FabricBackend, FabricKind, FlowId};
 use crate::gpu::{A100Gpu, InstanceId, MigProfile};
-use crate::sim::EventQueue;
+use crate::sim::{EngineKind, EventQueue, ShardMap, ShardedQueue, SimClock, COORD_SHARD};
 use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TenantSignal};
 use crate::telemetry::TenantMonitor;
 use crate::tenants::{ArrivalState, TenantId, TenantKind, WorkloadSpec};
@@ -216,10 +216,89 @@ pub fn arrival_stream(index: usize, kind: TenantKind) -> u64 {
 
 const RECONFIG_STREAM: u64 = 6;
 
+/// The world's clockwork: the single-queue reference engine, or the
+/// sharded conservative-PDES engine plus the tenant→shard routing map.
+/// Routing lives *here* — every `push_at` call site in the world stays
+/// engine-agnostic, which is what keeps the two engines' push order
+/// (and therefore their `(time, seq)` assignment) identical.
+enum WorldQueue {
+    Single(EventQueue<Event>),
+    Sharded {
+        q: ShardedQueue<Event>,
+        map: ShardMap,
+    },
+}
+
+impl WorldQueue {
+    fn push_at(&mut self, at: f64, ev: Event) {
+        match self {
+            WorldQueue::Single(q) => q.push_at(at, ev),
+            WorldQueue::Sharded { q, map } => {
+                let shard = match ev {
+                    Event::Arrival { tenant }
+                    | Event::ComputeDone { tenant, .. }
+                    | Event::CycleDone { tenant }
+                    | Event::StepDone { tenant }
+                    | Event::Toggle { tenant }
+                    | Event::PauseDone { tenant }
+                    | Event::ThrottleExpire { tenant, .. } => map.shard_of(tenant),
+                    // Host-global events — the arbiter's sampling tick
+                    // and fabric completions (the PS uplink solve spans
+                    // switch subtrees) — live on the coordinator shard.
+                    Event::FlowsDone { .. } | Event::Sample => COORD_SHARD,
+                };
+                q.push_to(shard, at, ev);
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<(SimClock, Event)> {
+        match self {
+            WorldQueue::Single(q) => q.pop(),
+            WorldQueue::Sharded { q, .. } => q.pop(),
+        }
+    }
+
+    fn peek_time(&self) -> Option<f64> {
+        match self {
+            WorldQueue::Single(q) => q.peek_time(),
+            WorldQueue::Sharded { q, .. } => q.peek_time(),
+        }
+    }
+
+    fn events_processed(&self) -> u64 {
+        match self {
+            WorldQueue::Single(q) => q.events_processed(),
+            WorldQueue::Sharded { q, .. } => q.events_processed(),
+        }
+    }
+
+    fn clamped_events(&self) -> u64 {
+        match self {
+            WorldQueue::Single(q) => q.clamped_events(),
+            WorldQueue::Sharded { q, .. } => q.clamped_events(),
+        }
+    }
+
+    /// (shards, per-shard dispatch counts, cross-shard pushes, windows)
+    /// — all deterministic, all excluded from fingerprints.
+    fn shard_stats(&self) -> (usize, Vec<u64>, u64, u64) {
+        match self {
+            WorldQueue::Single(_) => (1, Vec::new(), 0, 0),
+            WorldQueue::Sharded { q, .. } => (
+                q.shards(),
+                q.per_shard_popped().to_vec(),
+                q.cross_shard_events(),
+                q.sync_windows(),
+            ),
+        }
+    }
+}
+
 /// The world.
 pub struct SimWorld {
     pub scenario: Scenario,
-    q: EventQueue<Event>,
+    q: WorldQueue,
     fabric: FabricBackend,
     fabric_synced_at: f64,
     fabric_version: u64,
@@ -269,8 +348,27 @@ impl SimWorld {
     /// [`SimWorld::new`] (the incremental engine); the `Reference` kind
     /// exists for the differential oracle — fingerprint-regression tests
     /// and the `scale_sweep` bench run the same scenario on both engines
-    /// and require bit-identical results.
+    /// and require bit-identical results. The simulation engine comes
+    /// from `scenario.shards` (1 → the single-queue reference).
     pub fn new_with_fabric(scenario: Scenario, fabric_kind: FabricKind) -> SimWorld {
+        let engine = match scenario.shards {
+            0 | 1 => EngineKind::SingleQueue,
+            n => EngineKind::Sharded { shards: n },
+        };
+        Self::new_with_engine(scenario, fabric_kind, engine)
+    }
+
+    /// Build the world on an explicit (fabric, simulation-engine) pair.
+    /// `EngineKind::Sharded` runs the conservative-PDES core of
+    /// [`crate::sim::parallel`]: per-shard queues partitioned along PCIe
+    /// switch subtrees with a deterministic `(time, seq)` merge, so the
+    /// result is byte-identical to `EngineKind::SingleQueue` (the
+    /// shard-determinism property tests pin this).
+    pub fn new_with_engine(
+        scenario: Scenario,
+        fabric_kind: FabricKind,
+        engine: EngineKind,
+    ) -> SimWorld {
         let seed = scenario.seed;
         let n = scenario.n_tenants();
         let mut gpus: Vec<A100Gpu> = (0..scenario.topo.num_gpus).map(A100Gpu::new).collect();
@@ -388,12 +486,36 @@ impl SimWorld {
             }
         });
 
+        // Each tenant keeps a bounded handful of outstanding events
+        // (arrival + in-flight transfers + compute/cycle timers), so
+        // pre-sizing by tenant count avoids early regrow churn in
+        // fleet-scale worlds.
+        let capacity = 16 * n + 64;
+        let q = match engine {
+            EngineKind::SingleQueue => WorldQueue::Single(EventQueue::with_capacity(capacity)),
+            EngineKind::Sharded { shards } => {
+                // Locality key: the PCIe switch subtree hosting the
+                // tenant's GPU — tenants sharing a switch (and hence an
+                // uplink) stay shard-local. MPS sharers inherit their
+                // peer's GPU, so they land on the peer's shard.
+                let locality: Vec<usize> = placements
+                    .iter()
+                    .map(|p| scenario.topo.switch_of_gpu(p.gpu).id.0)
+                    .collect();
+                let map = ShardMap::new(&locality, shards);
+                // Lookahead = the sampling interval Δ: the shortest
+                // causal path between switch subtrees outside the fabric
+                // is the host-wide arbiter tick (fabric completions are
+                // coordinator events and bound themselves).
+                WorldQueue::Sharded {
+                    q: ShardedQueue::new(shards, scenario.sample_dt, capacity),
+                    map,
+                }
+            }
+        };
+
         let mut w = SimWorld {
-            // Each tenant keeps a bounded handful of outstanding events
-            // (arrival + in-flight transfers + compute/cycle timers), so
-            // pre-sizing by tenant count avoids early regrow churn in
-            // fleet-scale worlds.
-            q: EventQueue::with_capacity(16 * n + 64),
+            q,
             fabric,
             fabric_synced_at: 0.0,
             fabric_version: 0,
@@ -1352,7 +1474,17 @@ impl SimWorld {
                     .collect();
                 for id in done {
                     self.fabric.remove(id);
-                    let purpose = self.flow_purpose.remove(&id).unwrap();
+                    let purpose = self.flow_purpose.remove(&id).unwrap_or_else(|| {
+                        crate::util::invariant::InvariantError::new(
+                            "every fabric flow has a recorded purpose",
+                            format!(
+                                "flow={} t={now:.6}s version={version} tracked_flows={}",
+                                id.0,
+                                self.flow_purpose.len()
+                            ),
+                        )
+                        .panic()
+                    });
                     match purpose {
                         Purpose::Stage { tenant, req } => self.on_stage_done(now, tenant, req),
                         Purpose::H2d { tenant, req } => self.on_h2d_done(now, tenant, req),
@@ -1509,6 +1641,8 @@ impl SimWorld {
         let link_gb: Vec<f64> = (0..self.scenario.topo.num_links)
             .map(|l| self.fabric.counters(crate::topo::LinkId(l)).gb_total)
             .collect();
+        let (shards, per_shard_events, cross_shard_events, sync_windows) = self.q.shard_stats();
+        let clamped_events = self.q.clamped_events();
         RunResult {
             label,
             scenario: self.scenario.name.clone(),
@@ -1541,6 +1675,11 @@ impl SimWorld {
             arb_deferrals: arb.deferrals,
             sim_events: self.q.events_processed(),
             fabric_rate_recomputes: self.fabric.rate_recomputes(),
+            shards,
+            per_shard_events,
+            clamped_events,
+            cross_shard_events,
+            sync_windows,
         }
     }
 }

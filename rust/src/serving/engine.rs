@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::runtime::ModelRuntime;
 use crate::util::histogram::Histogram;
+use crate::util::invariant::InvariantError;
 use crate::util::rng::Pcg64;
 
 use super::batcher::{Batcher, Work};
@@ -162,7 +163,12 @@ impl Engine {
             tokens[row * spec.prompt_len..row * spec.prompt_len + plen]
                 .copy_from_slice(&slot.req.prompt_tokens[..plen]);
             seq_lens[row] = plen as i32;
-            let trow = self.cache.table_row(slot.seq).unwrap();
+            let trow = self.cache.table_row(slot.seq).map_err(|e| {
+                InvariantError::new(
+                    "admitted sequence has a kv page-table row",
+                    format!("row={row} seq={:?} req={:?}: {e:?}", slot.seq, slot.req.id),
+                )
+            })?;
             table[row * spec.max_pages_per_seq..(row + 1) * spec.max_pages_per_seq]
                 .copy_from_slice(&trow);
         }
@@ -180,7 +186,12 @@ impl Engine {
         let now = Instant::now();
         for &row in &rows {
             let logits = &out.logits[row * vocab..(row + 1) * vocab];
-            let slot = self.batcher.row_mut(row).as_mut().unwrap();
+            let slot = self.batcher.row_mut(row).as_mut().ok_or_else(|| {
+                InvariantError::new(
+                    "prefill-admitted batch row is occupied at sampling",
+                    format!("row={row}"),
+                )
+            })?;
             let tok = match slot.req.params.top_k {
                 0 => sampler::greedy(logits),
                 k => {
@@ -227,7 +238,12 @@ impl Engine {
             }
             tokens[row] = last_token;
             positions[row] = position as i32;
-            let trow = self.cache.table_row(seq).unwrap();
+            let trow = self.cache.table_row(seq).map_err(|e| {
+                InvariantError::new(
+                    "decoding sequence has a kv page-table row",
+                    format!("row={row} seq={seq:?} position={position}: {e:?}"),
+                )
+            })?;
             table[row * spec.max_pages_per_seq..(row + 1) * spec.max_pages_per_seq]
                 .copy_from_slice(&trow);
             active_rows.push(row);
@@ -252,7 +268,12 @@ impl Engine {
         let vocab = spec.vocab_size;
         for &row in &active_rows {
             let logits = &out.logits[row * vocab..(row + 1) * vocab];
-            let slot = self.batcher.row_mut(row).as_mut().unwrap();
+            let slot = self.batcher.row_mut(row).as_mut().ok_or_else(|| {
+                InvariantError::new(
+                    "decode-active batch row is occupied at sampling",
+                    format!("row={row}"),
+                )
+            })?;
             let tok = match slot.req.params.top_k {
                 0 => sampler::greedy(logits),
                 k => {

@@ -12,6 +12,36 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+/// Tolerance for events scheduled in the (numerical) past. An event can
+/// legitimately land a few ulps before the clock when its time is
+/// re-derived through a different float expression (e.g. a fabric
+/// completion recomputed after a rate change); anything further back is
+/// a causality bug — under sharding, a cross-shard event landing before
+/// the local clock means the lookahead window was violated — so
+/// `push_at` clamps only within this epsilon and panics beyond it.
+/// Clamps are counted (`clamped_events`) and surfaced on `RunResult`.
+pub const PAST_EVENT_EPS_S: f64 = 1e-6;
+
+/// Resolve a requested event time against the current clock under the
+/// epsilon-clamp policy above. Shared by [`EventQueue`] and the sharded
+/// queue in [`crate::sim::parallel`] so the two engines cannot drift.
+#[inline]
+pub(crate) fn resolve_event_time(at: f64, now: f64, clamped: &mut u64) -> f64 {
+    assert!(at.is_finite(), "non-finite event time {at}");
+    if at >= now {
+        return at;
+    }
+    let lag = now - at;
+    assert!(
+        lag <= PAST_EVENT_EPS_S,
+        "event scheduled {lag:.3e}s in the past (at={at}, now={now}): beyond \
+         the {PAST_EVENT_EPS_S:.0e}s epsilon this is a causality/synchronization \
+         bug, not a numerical hair"
+    );
+    *clamped += 1;
+    now
+}
+
 /// Simulated time in seconds.
 #[derive(Clone, Copy, Debug, Default, PartialEq, PartialOrd)]
 pub struct SimClock(pub f64);
@@ -26,10 +56,10 @@ impl SimClock {
     }
 }
 
-struct Entry<E> {
-    time: f64,
-    seq: u64,
-    event: E,
+pub(crate) struct Entry<E> {
+    pub(crate) time: f64,
+    pub(crate) seq: u64,
+    pub(crate) event: E,
 }
 
 impl<E> PartialEq for Entry<E> {
@@ -60,6 +90,7 @@ pub struct EventQueue<E> {
     seq: u64,
     now: f64,
     popped: u64,
+    clamped: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -82,6 +113,7 @@ impl<E> EventQueue<E> {
             seq: 0,
             now: 0.0,
             popped: 0,
+            clamped: 0,
         }
     }
 
@@ -90,13 +122,14 @@ impl<E> EventQueue<E> {
         SimClock(self.now)
     }
 
-    /// Schedule `event` at absolute time `at` (>= now; clamped if earlier
-    /// by a numerical hair). Rejects non-finite times in release builds
-    /// too: `f64::max(NaN, now)` silently collapses to `now`, which would
-    /// hide the corruption instead of surfacing it.
+    /// Schedule `event` at absolute time `at` (>= now). Times up to
+    /// [`PAST_EVENT_EPS_S`] in the past are clamped to `now` and counted
+    /// (`clamped_events`); anything older panics — a silently-clamped
+    /// past event hides the causality bug that produced it. Non-finite
+    /// times are rejected in release builds too: `f64::max(NaN, now)`
+    /// would silently collapse to `now`, hiding the corruption.
     pub fn push_at(&mut self, at: f64, event: E) {
-        assert!(at.is_finite(), "non-finite event time {at}");
-        let t = at.max(self.now);
+        let t = resolve_event_time(at, self.now, &mut self.clamped);
         self.heap.push(Entry {
             time: t,
             seq: self.seq,
@@ -143,6 +176,14 @@ impl<E> EventQueue<E> {
     pub fn events_processed(&self) -> u64 {
         self.popped
     }
+
+    /// Events whose requested time fell within [`PAST_EVENT_EPS_S`] of
+    /// the past and were clamped to `now`. Expected to be 0 in healthy
+    /// runs; surfaced on `RunResult` so a drift shows up in telemetry
+    /// before it becomes a panic.
+    pub fn clamped_events(&self) -> u64 {
+        self.clamped
+    }
 }
 
 #[cfg(test)]
@@ -185,13 +226,37 @@ mod tests {
     }
 
     #[test]
-    fn push_in_past_clamps_to_now() {
+    fn push_within_epsilon_of_past_clamps_and_counts() {
         let mut q = EventQueue::new();
         q.push_at(10.0, 1u32);
         q.pop();
-        q.push_at(3.0, 2u32); // in the past: clamped
+        assert_eq!(q.clamped_events(), 0);
+        // A numerical hair in the past: clamped to now, counted.
+        q.push_at(10.0 - 1e-9, 2u32);
         let (t, _) = q.pop().unwrap();
         assert_eq!(t.secs(), 10.0);
+        assert_eq!(q.clamped_events(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "in the past")]
+    fn push_far_in_past_panics() {
+        let mut q = EventQueue::new();
+        q.push_at(10.0, 1u32);
+        q.pop();
+        // 7 seconds in the past is a causality bug, not float noise.
+        q.push_at(3.0, 2u32);
+    }
+
+    #[test]
+    fn push_exactly_at_now_is_not_a_clamp() {
+        let mut q = EventQueue::new();
+        q.push_at(5.0, 1u32);
+        q.pop();
+        q.push_at(5.0, 2u32);
+        assert_eq!(q.clamped_events(), 0);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t.secs(), 5.0);
     }
 
     #[test]

@@ -7,5 +7,9 @@
 //! [`crate::platform::sim_platform`]; this module is only the clockwork.
 
 pub mod engine;
+pub mod parallel;
+pub mod shard;
 
-pub use engine::{EventQueue, SimClock};
+pub use engine::{EventQueue, SimClock, PAST_EVENT_EPS_S};
+pub use parallel::{EngineKind, ShardedQueue};
+pub use shard::{ShardMap, COORD_SHARD};

@@ -1,0 +1,139 @@
+//! Tenant → shard partitioning for the sharded simulation core.
+//!
+//! Shard boundaries follow structure the world already guarantees:
+//! within a host, PCIe switch subtrees couple only through the uplink PS
+//! solve and the host-wide arbiter tick (see ARCHITECTURE.md "Parallel
+//! core"), so the natural unit of locality is the switch hosting a
+//! tenant's GPU. [`ShardMap::new`] takes one *locality key* per tenant
+//! (the switch index) and assigns whole keys to shards — tenants that
+//! share a switch always land on the same shard, keeping every
+//! intra-subtree interaction shard-local.
+//!
+//! The assignment is a pure function of `(keys, shards)`: keys are
+//! visited in ascending order and each goes to the currently
+//! least-loaded shard (ties to the lowest shard index). Determinism
+//! here is load-bearing — the map decides which per-shard queue each
+//! event lives in, and the merge layer's bit-identity argument assumes
+//! the same scenario always yields the same routing.
+
+/// Shard that hosts world-global events (the arbiter's `Sample` tick and
+/// fabric `FlowsDone` completions): these are causally host-wide, so
+/// they live on one designated coordinator shard.
+pub const COORD_SHARD: usize = 0;
+
+/// Deterministic tenant → shard assignment.
+#[derive(Clone, Debug)]
+pub struct ShardMap {
+    shards: usize,
+    of_tenant: Vec<usize>,
+    tenants_per_shard: Vec<usize>,
+}
+
+impl ShardMap {
+    /// Build a map over `locality[i]` = the locality key (PCIe switch
+    /// index) of tenant `i`. Whole keys are packed onto the
+    /// least-loaded shard in ascending key order.
+    pub fn new(locality: &[usize], shards: usize) -> ShardMap {
+        assert!(shards >= 1, "shard count must be >= 1");
+        let mut keys: Vec<usize> = locality.to_vec();
+        keys.sort_unstable();
+        keys.dedup();
+
+        // key -> shard, greedily balancing by tenant count.
+        let mut load = vec![0usize; shards];
+        let mut key_shard = Vec::with_capacity(keys.len());
+        for &k in &keys {
+            let members = locality.iter().filter(|&&l| l == k).count();
+            let target = (0..shards).min_by_key(|&s| (load[s], s)).unwrap();
+            load[target] += members;
+            key_shard.push((k, target));
+        }
+        let of_tenant = locality
+            .iter()
+            .map(|l| {
+                key_shard
+                    .iter()
+                    .find(|(k, _)| k == l)
+                    .map(|&(_, s)| s)
+                    .unwrap()
+            })
+            .collect();
+        ShardMap {
+            shards,
+            of_tenant,
+            tenants_per_shard: load,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn shard_of(&self, tenant: usize) -> usize {
+        self.of_tenant[tenant]
+    }
+
+    pub fn tenants_on(&self, shard: usize) -> usize {
+        self.tenants_per_shard[shard]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_maps_everyone_to_zero() {
+        let m = ShardMap::new(&[0, 1, 2, 1, 0], 1);
+        for t in 0..5 {
+            assert_eq!(m.shard_of(t), 0);
+        }
+        assert_eq!(m.tenants_on(0), 5);
+    }
+
+    #[test]
+    fn same_switch_same_shard() {
+        let locality = [0, 0, 1, 1, 2, 2, 3, 3];
+        let m = ShardMap::new(&locality, 4);
+        for (a, &ka) in locality.iter().enumerate() {
+            for (b, &kb) in locality.iter().enumerate() {
+                if ka == kb {
+                    assert_eq!(m.shard_of(a), m.shard_of(b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_when_keys_divide_evenly() {
+        let locality: Vec<usize> = (0..16).map(|t| t / 2).collect(); // 8 keys x 2
+        let m = ShardMap::new(&locality, 4);
+        for s in 0..4 {
+            assert_eq!(m.tenants_on(s), 4);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_inputs() {
+        let locality = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+        let a = ShardMap::new(&locality, 3);
+        let b = ShardMap::new(&locality, 3);
+        for t in 0..locality.len() {
+            assert_eq!(a.shard_of(t), b.shard_of(t));
+        }
+    }
+
+    #[test]
+    fn more_shards_than_keys_leaves_spares_empty() {
+        let m = ShardMap::new(&[0, 0, 0], 4);
+        assert_eq!(m.tenants_on(m.shard_of(0)), 3);
+        let used: usize = (0..4).map(|s| m.tenants_on(s)).sum();
+        assert_eq!(used, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard count")]
+    fn zero_shards_rejected() {
+        ShardMap::new(&[0], 0);
+    }
+}

@@ -48,8 +48,20 @@ impl Histogram {
         ((shift + 1) as usize) * SUB + sub
     }
 
-    /// Lower edge of bucket `i` (representative value reported for
-    /// quantiles: midpoint of the bucket).
+    /// Lower edge and width of bucket `i` (the bucket covers the
+    /// integer values `[lo, lo + width)`).
+    fn bucket_range(i: usize) -> (u64, u64) {
+        let octave = i / SUB;
+        let sub = (i % SUB) as u64;
+        if octave == 0 {
+            return (sub, 1);
+        }
+        let shift = (octave - 1) as u32;
+        (((SUB as u64) + sub) << shift, 1u64 << shift)
+    }
+
+    /// Representative value reported for quantiles: midpoint of the
+    /// bucket.
     fn bucket_mid(i: usize) -> u64 {
         let octave = i / SUB;
         let sub = (i % SUB) as u64;
@@ -95,12 +107,15 @@ impl Histogram {
         }
     }
 
-    /// Nearest-rank quantile, `q` in [0, 1].
+    /// Nearest-rank quantile, `q` in [0, 1] — the same rank convention
+    /// as `WindowQuantiles::quantile` and `P2Quantile::value`
+    /// ([`crate::util::quantile::nearest_rank_index`]), resolved at
+    /// bucket granularity.
     pub fn quantile(&self, q: f64) -> u64 {
         if self.total == 0 {
             return 0;
         }
-        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let rank = crate::util::quantile::nearest_rank_index(q, self.total as usize) as u64 + 1;
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
@@ -112,22 +127,36 @@ impl Histogram {
     }
 
     /// Fraction of recorded values strictly greater than `threshold` —
-    /// computed from bucket edges (values inside the threshold's bucket
-    /// are resolved conservatively by midpoint).
+    /// the same "strictly above" convention as
+    /// `WindowQuantiles::frac_above` (which is exact). Buckets entirely
+    /// above the threshold count in full; the threshold's own bucket
+    /// contributes the fraction of its integer values in
+    /// `(threshold, bucket_end)` (uniform-within-bucket assumption)
+    /// instead of the old all-or-nothing midpoint attribution, bounding
+    /// the divergence from the exact estimator by the sub-bucket
+    /// resolution rather than a whole bucket's mass. Exact for
+    /// thresholds in the unit-width first octave.
     pub fn frac_above(&self, threshold: u64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
         let t_idx = Self::index(threshold);
-        let mut above = 0u64;
+        let mut above = 0.0f64;
         for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
             if i > t_idx {
-                above += c;
-            } else if i == t_idx && Self::bucket_mid(i) > threshold {
-                above += c;
+                above += c as f64;
+            } else if i == t_idx {
+                let (lo, width) = Self::bucket_range(i);
+                // Integer values strictly above `threshold` within
+                // [lo, lo + width): those in [threshold + 1, lo + width).
+                let above_in_bucket = (lo + width - 1).saturating_sub(threshold);
+                above += c as f64 * above_in_bucket as f64 / width as f64;
             }
         }
-        above as f64 / self.total as f64
+        above / self.total as f64
     }
 
     /// Merge another histogram into this one (per-repeat aggregation).

@@ -1,0 +1,81 @@
+//! Typed internal-invariant violations.
+//!
+//! A desync between two pieces of engine state (a fabric flow without a
+//! recorded purpose, a batcher row that vanished mid-step) is a bug in
+//! *this* codebase, not a user error — but a bare `unwrap()` reports it
+//! as `called Option::unwrap() on a None value`, throwing away exactly
+//! the context (which tenant? which flow? at what sim time?) needed to
+//! diagnose it. [`InvariantError`] carries that context; paths that
+//! already return `anyhow::Result` propagate it as an error, and
+//! hot-path code that cannot (the sim event loop) fails through
+//! [`InvariantError::panic`] so the message still names the broken
+//! invariant.
+
+use std::fmt;
+
+/// A violated internal invariant, with enough context to diagnose the
+/// desync that produced it.
+#[derive(Debug, Clone)]
+pub struct InvariantError {
+    /// The invariant that failed, e.g. `"fabric flow has a recorded purpose"`.
+    pub invariant: String,
+    /// Where/when it failed: tenant, flow, row, sim time, ...
+    pub context: String,
+}
+
+impl InvariantError {
+    pub fn new(invariant: impl Into<String>, context: impl Into<String>) -> InvariantError {
+        InvariantError {
+            invariant: invariant.into(),
+            context: context.into(),
+        }
+    }
+
+    /// Fail a non-`Result` path (the sim event loop) with the full
+    /// diagnostic instead of a bare unwrap panic.
+    pub fn panic(self) -> ! {
+        panic!("{self}")
+    }
+}
+
+impl fmt::Display for InvariantError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "internal invariant violated: {} [{}]",
+            self.invariant, self.context
+        )
+    }
+}
+
+impl std::error::Error for InvariantError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_invariant_and_context() {
+        let e = InvariantError::new(
+            "fabric flow has a recorded purpose",
+            "flow=7 tenant=2 t=12.5s",
+        );
+        let s = e.to_string();
+        assert!(s.contains("internal invariant violated"));
+        assert!(s.contains("recorded purpose"));
+        assert!(s.contains("flow=7"));
+    }
+
+    #[test]
+    #[should_panic(expected = "internal invariant violated: row occupied [row=3]")]
+    fn panic_carries_message() {
+        InvariantError::new("row occupied", "row=3").panic();
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        let e = InvariantError::new("kv table row exists", "seq=9");
+        let a: anyhow::Error = e.into();
+        assert!(a.to_string().contains("kv table row exists"));
+    }
+}

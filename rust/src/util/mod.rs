@@ -8,11 +8,12 @@
 //! property-testing framework ([`proptest_lite`]) standing in for
 //! `proptest` on the coordinator invariants.
 
-pub mod rng;
 pub mod ewma;
-pub mod quantile;
 pub mod histogram;
-pub mod stats;
+pub mod invariant;
 pub mod json;
 pub mod log;
 pub mod proptest_lite;
+pub mod quantile;
+pub mod rng;
+pub mod stats;

@@ -10,6 +10,21 @@
 //!   ("quantile(W, 0.99)") must be exact, and as the oracle the P² tests
 //!   compare against.
 
+/// 0-based index of the nearest-rank q-quantile over `n` sorted
+/// observations: `ceil(q·n)` clamped to `[1, n]`, minus one.
+///
+/// This is THE quantile convention of the codebase — shared by
+/// [`WindowQuantiles::quantile`], [`P2Quantile::value`]'s small-sample
+/// fallback, and `Histogram::quantile`'s rank computation, so the three
+/// estimators cannot drift apart near bucket/rank boundaries (the SLO
+/// miss-rate the controller acts on and the one the report prints must
+/// agree).
+#[inline]
+pub fn nearest_rank_index(q: f64, n: usize) -> usize {
+    debug_assert!(n > 0, "nearest_rank_index needs at least one observation");
+    ((q * n as f64).ceil() as usize).clamp(1, n) - 1
+}
+
 /// P² single-quantile estimator with five markers.
 #[derive(Clone, Debug)]
 pub struct P2Quantile {
@@ -114,8 +129,7 @@ impl P2Quantile {
         if self.count < 5 {
             let mut v = self.init[..self.count].to_vec();
             v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let idx = ((self.p * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
-            return v[idx];
+            return v[nearest_rank_index(self.p, v.len())];
         }
         self.q[2]
     }
@@ -199,8 +213,7 @@ impl WindowQuantiles {
         }
         self.scratch.clear();
         self.scratch.extend_from_slice(&self.buf);
-        let n = self.scratch.len();
-        let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+        let idx = nearest_rank_index(q, self.scratch.len());
         let (_, v, _) = self
             .scratch
             .select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());

@@ -341,6 +341,41 @@ fn hotspot_64_runs_end_to_end_with_stats_for_all_tenants() {
     assert_eq!(r.fingerprint(), r2.fingerprint());
 }
 
+/// Acceptance smoke for the sharded-PDES tentpole: the same `--shards`
+/// knob the CLI exposes, on the engine's flagship dense scenario — a
+/// 4-shard run of hotspot_64 is byte-identical to the single-queue
+/// reference, and the shard accounting shows the work genuinely spread
+/// across shards.
+#[test]
+fn hotspot_64_sharded_run_is_bit_identical_to_reference() {
+    let mk = |shards: usize| {
+        let mut s = Scenario::by_name("hotspot_64", 29, Levers::full()).unwrap();
+        s.horizon = 240.0;
+        s.shards = shards;
+        SimWorld::new(s).run()
+    };
+    let reference = mk(1);
+    let sharded = mk(4);
+    assert_eq!(
+        reference.fingerprint(),
+        sharded.fingerprint(),
+        "4-shard hotspot_64 diverged from the reference engine"
+    );
+    assert_eq!(reference.sim_events, sharded.sim_events);
+    assert_eq!(sharded.shards, 4);
+    assert_eq!(sharded.per_shard_events.len(), 4);
+    assert_eq!(
+        sharded.per_shard_events.iter().sum::<u64>(),
+        sharded.sim_events
+    );
+    // The two-switch hotspot splits across tenant shards, and the
+    // coordinator shard carries the arbiter ticks + fabric completions.
+    let active = sharded.per_shard_events.iter().filter(|&&c| c > 0).count();
+    assert!(active >= 2, "events all landed on one shard: {:?}", sharded.per_shard_events);
+    assert!(sharded.sync_windows > 0, "no synchronization windows recorded");
+    assert_eq!(reference.clamped_events, sharded.clamped_events);
+}
+
 /// Acceptance for the trace-driven arrival engine: the 32-tenant
 /// trace-replay catalog entry runs end to end with per-tenant arrival
 /// accounting — every LS tenant replays its bursty trace (no early

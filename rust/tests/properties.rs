@@ -1096,6 +1096,192 @@ fn catalog_fingerprints_pinned_to_reference_fabric() {
     }
 }
 
+// --- sharded engine vs single-queue reference --------------------------------
+
+#[test]
+fn prop_sharded_engine_bit_identical_to_reference() {
+    // The sharded conservative-PDES core's contract: for arbitrary
+    // generated scenarios and shard counts — including the degenerate
+    // Sharded{1} (one shard plus the merge layer) and a seed-hashed
+    // count — the run is byte-identical to the single-queue reference
+    // engine, and the per-shard event counters account for every event.
+    use predserve::sim::EngineKind;
+    check(
+        Config { cases: 8, seed: 0x50 },
+        "sharded engine oracle",
+        gen_scenario,
+        |spec| {
+            let lv = levers_of(spec.levers);
+            let reference = SimWorld::new(build_gen(spec, lv)).run();
+            let hashed = 1 + (spec.seed % 7) as usize;
+            for shards in [1usize, 2, 4, hashed] {
+                let r = SimWorld::new_with_engine(
+                    build_gen(spec, lv),
+                    FabricKind::Incremental,
+                    EngineKind::Sharded { shards },
+                )
+                .run();
+                if r.fingerprint() != reference.fingerprint() {
+                    return Err(format!(
+                        "{shards} shards diverged from the reference engine:\n  {}\n  {}",
+                        r.fingerprint(),
+                        reference.fingerprint()
+                    ));
+                }
+                if r.sim_events != reference.sim_events {
+                    return Err(format!(
+                        "{shards} shards: event counts {} vs {}",
+                        r.sim_events, reference.sim_events
+                    ));
+                }
+                if r.shards != shards || r.per_shard_events.len() != shards {
+                    return Err(format!(
+                        "{shards} shards: counter shape shards={} len={}",
+                        r.shards,
+                        r.per_shard_events.len()
+                    ));
+                }
+                if r.per_shard_events.iter().sum::<u64>() != r.sim_events {
+                    return Err(format!(
+                        "{shards} shards: per-shard counters {:?} do not sum to {}",
+                        r.per_shard_events, r.sim_events
+                    ));
+                }
+                if r.clamped_events != reference.clamped_events {
+                    return Err("clamp counters diverged across engines".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn catalog_fingerprints_pinned_across_engine_sharding() {
+    // Regression for the sharded-core rewrite: every catalog scenario
+    // (plus the steady_contention_off variant) keeps a byte-identical
+    // fingerprint on the sharded engine at 2 and 4 shards.
+    let mut names: Vec<&str> = Scenario::CATALOG.to_vec();
+    names.push("steady_contention_off");
+    for name in names {
+        let mk = |shards: usize| {
+            let mut s = Scenario::by_name(name, 31, Levers::full()).unwrap();
+            s.horizon = 60.0;
+            s.shards = shards;
+            SimWorld::new(s).run()
+        };
+        let reference = mk(1);
+        assert_eq!(reference.shards, 1, "{name}: shards=1 must run the reference");
+        for shards in [2usize, 4] {
+            let sharded = mk(shards);
+            assert_eq!(
+                reference.fingerprint(),
+                sharded.fingerprint(),
+                "{name}: {shards} shards changed observable behavior"
+            );
+            assert_eq!(
+                reference.sim_events, sharded.sim_events,
+                "{name}: {shards} shards changed the event stream"
+            );
+            assert_eq!(sharded.shards, shards, "{name}");
+            assert_eq!(
+                sharded.per_shard_events.iter().sum::<u64>(),
+                sharded.sim_events,
+                "{name}: {shards} shards lost events in the per-shard counters"
+            );
+        }
+    }
+}
+
+// --- cross-estimator quantile convention -------------------------------------
+
+#[test]
+fn prop_quantile_estimators_share_the_nearest_rank_convention() {
+    // The three estimators (exact window, P² small-sample fallback,
+    // log-bucketed histogram) must agree on the nearest-rank convention:
+    // the window is bit-exact against the sorted oracle, the P² fallback
+    // is bit-exact for < 5 observations, and the histogram matches to
+    // its bucket resolution. `frac_above` agreement near the threshold
+    // is bounded by the threshold bucket's mass.
+    use predserve::util::histogram::Histogram;
+    use predserve::util::quantile::{nearest_rank_index, P2Quantile, WindowQuantiles};
+    check(
+        Config { cases: 60, seed: 0x51 },
+        "quantile convention",
+        |rng| {
+            let n = 1 + rng.below(2000) as usize;
+            (0..n)
+                .map(|_| rng.range_f64(1.0, 50_000.0))
+                .collect::<Vec<f64>>()
+        },
+        |xs| {
+            let n = xs.len();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut w = WindowQuantiles::new(n);
+            let mut h = Histogram::new();
+            for &x in xs {
+                w.observe(x);
+                h.record(x as u64);
+            }
+            // Histogram sees truncated values: its oracle is the sorted
+            // truncation, not the f64 order statistic.
+            let mut sorted_trunc: Vec<u64> = xs.iter().map(|&x| x as u64).collect();
+            sorted_trunc.sort_unstable();
+            for q in [0.5, 0.95, 0.99] {
+                let exact = sorted[nearest_rank_index(q, n)];
+                let win = w.quantile(q).ok_or("empty window")?;
+                if win.to_bits() != exact.to_bits() {
+                    return Err(format!("q={q}: window {win} != exact {exact}"));
+                }
+                let exact_t = sorted_trunc[nearest_rank_index(q, n)] as f64;
+                let est = h.quantile(q) as f64;
+                let tol = 1.0 + exact_t / 16.0; // 2x the 1/32 bucket resolution
+                if (est - exact_t).abs() > tol {
+                    return Err(format!(
+                        "q={q}: histogram {est} vs exact {exact_t} (tol {tol})"
+                    ));
+                }
+            }
+            // P² fallback: bit-exact nearest-rank for < 5 observations.
+            let k = n.min(4);
+            let mut p2 = P2Quantile::new(0.95);
+            let mut wp = WindowQuantiles::new(k);
+            for &x in &xs[..k] {
+                p2.observe(x);
+                wp.observe(x);
+            }
+            let (a, b) = (p2.value(), wp.quantile(0.95).ok_or("empty p2 window")?);
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("p2 fallback {a} != window {b} over {k} obs"));
+            }
+            // Miss-rate agreement: exact on the window; the histogram may
+            // only diverge by the mass of the threshold's own bucket.
+            let thr = sorted_trunc[n / 2];
+            let exact_frac = sorted_trunc.iter().filter(|&&v| v > thr).count() as f64 / n as f64;
+            let wf = w.frac_above(thr as f64);
+            let exact_f64_frac = xs.iter().filter(|&&x| x > thr as f64).count() as f64 / n as f64;
+            if (wf - exact_f64_frac).abs() > 1e-12 {
+                return Err(format!("window frac_above {wf} != {exact_f64_frac}"));
+            }
+            let hf = h.frac_above(thr);
+            // Sound over-estimate of the threshold bucket's mass: bucket
+            // width is <= value/32, so members lie within thr/16.
+            let near = sorted_trunc
+                .iter()
+                .filter(|&&v| (v as f64 - thr as f64).abs() <= thr as f64 / 16.0 + 1.0)
+                .count() as f64
+                / n as f64;
+            if (hf - exact_frac).abs() > near + 1e-9 {
+                return Err(format!(
+                    "histogram frac_above {hf} vs exact {exact_frac} (bucket mass {near})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn catalog_same_seed_identical_run_result() {
     // Determinism for every scenario in the named catalog, under an

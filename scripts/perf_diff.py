@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Diff a bench JSON report against its checked-in baseline.
+
+Usage:
+    perf_diff.py BASELINE CURRENT [--warn 0.10] [--fail 0.25]
+
+Both files use the BenchReport schema (schema: 1): a flat list of
+entries, each `ns_per_iter` (median/p5/p95), `throughput`
+(seconds/units_per_s), or `metric` (value).
+
+Gating policy:
+  * Timing-like entries (ns_per_iter medians, throughput seconds, and
+    metrics whose name mentions "wall" or "speedup") are compared with
+    relative thresholds: WARN above --warn, FAIL above --fail. Only
+    regressions gate; improvements are reported but never fail.
+  * Every other metric is a deterministic counter or ratio derived from
+    the simulation's event stream (event counts, solver invocations,
+    recompute reductions). Those must match the baseline bit-for-bit —
+    any drift means behavior changed, which is a fingerprint-level bug,
+    not noise — and FAIL at any difference.
+  * Entries present on one side only are reported as INFO (benches grow
+    metrics over time; a baseline refresh picks them up).
+
+A baseline marked `"provisional": true` (no trusted timings recorded
+yet, e.g. freshly bootstrapped) downgrades every verdict to report-only:
+the table is printed, the exit code is always 0. Refresh the baseline by
+copying a BENCH_*.json produced on a trusted runner over the baseline
+file and dropping the provisional flag.
+"""
+
+import argparse
+import json
+import sys
+
+TIMING_KINDS = {"ns_per_iter", "throughput"}
+TIMING_NAME_HINTS = ("wall", "speedup", "seconds")
+
+
+def load_entries(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != 1:
+        sys.exit(f"{path}: unsupported schema {doc.get('schema')!r}")
+    out = {}
+    for e in doc.get("entries", []):
+        kind = e.get("kind")
+        if kind == "ns_per_iter":
+            value = e.get("median")
+        elif kind == "throughput":
+            value = e.get("seconds")
+        else:
+            value = e.get("value")
+        if value is not None:
+            out[e["name"]] = (kind, float(value))
+    return doc, out
+
+
+def is_timing(name, kind):
+    if kind in TIMING_KINDS:
+        return True
+    lowered = name.lower()
+    return any(h in lowered for h in TIMING_NAME_HINTS)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--warn", type=float, default=0.10,
+                    help="relative timing regression that warns (default 0.10)")
+    ap.add_argument("--fail", type=float, default=0.25,
+                    help="relative timing regression that fails (default 0.25)")
+    args = ap.parse_args()
+
+    base_doc, base = load_entries(args.baseline)
+    _, cur = load_entries(args.current)
+    provisional = bool(base_doc.get("provisional"))
+
+    failures = 0
+    warnings = 0
+    rows = []
+    for name in sorted(set(base) | set(cur)):
+        if name not in base:
+            rows.append(("INFO", name, None, cur[name][1], "new metric (not in baseline)"))
+            continue
+        if name not in cur:
+            rows.append(("INFO", name, base[name][1], None, "missing from current run"))
+            continue
+        kind, b = base[name]
+        _, c = cur[name]
+        if is_timing(name, kind):
+            rel = (c - b) / b if b else 0.0
+            if rel > args.fail:
+                failures += 1
+                rows.append(("FAIL", name, b, c, f"+{rel:.1%} (> {args.fail:.0%})"))
+            elif rel > args.warn:
+                warnings += 1
+                rows.append(("WARN", name, b, c, f"+{rel:.1%} (> {args.warn:.0%})"))
+            else:
+                rows.append(("ok", name, b, c, f"{rel:+.1%}"))
+        else:
+            if b != c:
+                failures += 1
+                rows.append(("FAIL", name, b, c,
+                             "deterministic counter drifted (behavior change)"))
+            else:
+                rows.append(("ok", name, b, c, "exact"))
+
+    width = max((len(r[1]) for r in rows), default=4)
+    for verdict, name, b, c, note in rows:
+        bs = f"{b:.6g}" if b is not None else "-"
+        cs = f"{c:.6g}" if c is not None else "-"
+        print(f"{verdict:4} {name:{width}}  base={bs:>12}  cur={cs:>12}  {note}")
+
+    print(f"\n{failures} failure(s), {warnings} warning(s)"
+          + (" [baseline provisional: report-only]" if provisional else ""))
+    if provisional:
+        return 0
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
