@@ -23,6 +23,18 @@ fn timed_run(scenario: Scenario, kind: FabricKind) -> (RunResult, f64) {
     (r, t0.elapsed().as_secs_f64())
 }
 
+/// Same, with the flight recorder attached: `r.metrics` then carries the
+/// per-shard stall/occupancy counters. The fingerprint asserts below
+/// still compare against unrecorded runs, so the sweep doubles as a
+/// release-mode check of the recorder's non-perturbation invariant.
+fn timed_run_recorded(scenario: Scenario, kind: FabricKind) -> (RunResult, f64) {
+    let t0 = Instant::now();
+    let mut w = SimWorld::new_with_fabric(scenario, kind);
+    w.enable_recording(predserve::trace::recorder::DEFAULT_CAPACITY);
+    let (r, _) = w.run_recorded();
+    (r, t0.elapsed().as_secs_f64())
+}
+
 fn main() {
     banner("fabric scale sweep (incremental vs reference oracle)");
     let mut report = BenchReport::new("scale_sweep");
@@ -124,7 +136,7 @@ fn main() {
             s
         };
         let (single, single_s) = timed_run(mk(1), FabricKind::Incremental);
-        let (sharded, sharded_s) = timed_run(mk(shards), FabricKind::Incremental);
+        let (sharded, sharded_s) = timed_run_recorded(mk(shards), FabricKind::Incremental);
         let label = format!("N={n} (dense hotspot, sharded)");
         // The sharded core's contract: byte-identical to the reference
         // engine, bit for bit, or the run is wrong.
@@ -150,6 +162,14 @@ fn main() {
         report.metric(&format!("{label}: sharded speedup"), speedup);
         report.metric(&format!("{label}: cross-shard %"), cross_pct);
         report.metric(&format!("{label}: sync windows"), sharded.sync_windows as f64);
+        // Flight-recorder registry: per-shard occupancy/stall and
+        // engine-level counters — the parallelism-headroom numbers the
+        // speculative-execution work item starts from.
+        for (k, v) in &sharded.metrics {
+            if k.starts_with("shard") || k.starts_with("engine.") {
+                report.metric(&format!("{label}: {k}"), *v);
+            }
+        }
     }
 
     report.write_json("BENCH_scale_sweep.json");

@@ -2,6 +2,7 @@
 
 use crate::gpu::MigProfile;
 use crate::tenants::TenantId;
+use crate::trace::DecisionKind;
 
 /// Isolation changes bundle the MIG/placement levers (§2.3 "upgrade the
 /// tenant's isolation" = increase MIG share *or* migrate).
@@ -53,19 +54,25 @@ impl Action {
         )
     }
 
-    /// Short tag for audit logs / Figure 3a lanes.
+    /// Short tag for audit logs / Figure 3a lanes (the rendered form of
+    /// [`Action::decision_kind`]).
     pub fn kind(&self) -> &'static str {
+        self.decision_kind().as_str()
+    }
+
+    /// Typed action-kind tag shared with the audit log and trace events.
+    pub fn decision_kind(&self) -> DecisionKind {
         match self {
-            Action::ChangeIsolation { relax: true, .. } => "relax",
+            Action::ChangeIsolation { relax: true, .. } => DecisionKind::Relax,
             Action::ChangeIsolation {
                 change: IsolationChange::Resize { .. },
                 ..
-            } => "mig",
-            Action::ChangeIsolation { .. } => "placement",
-            Action::SetMpsQuota { .. } => "mps_quota",
-            Action::SetIoThrottle { .. } => "io_throttle",
-            Action::PinCpu { .. } => "pin_cpu",
-            Action::Rollback { .. } => "rollback",
+            } => DecisionKind::Mig,
+            Action::ChangeIsolation { .. } => DecisionKind::Placement,
+            Action::SetMpsQuota { .. } => DecisionKind::MpsQuota,
+            Action::SetIoThrottle { .. } => DecisionKind::IoThrottle,
+            Action::PinCpu { .. } => DecisionKind::PinCpu,
+            Action::Rollback { .. } => DecisionKind::Rollback,
         }
     }
 }

@@ -191,7 +191,7 @@ impl Arbiter {
                     self.clear_lifted_owners(&kept);
                     // Re-derive the audit kind from what actually
                     // survived the ownership filter.
-                    let kind = kept[0].kind();
+                    let kind = kept[0].decision_kind();
                     let filtered = Proposal {
                         actions: kept,
                         kind,

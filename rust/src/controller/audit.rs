@@ -1,6 +1,14 @@
 //! Decision audit log (§2.4: "log all decisions with signal snapshots for
 //! audit") — also the data source for Table 4 (move frequency, reconfig
 //! durations) and the Figure 3a action timeline.
+//!
+//! Entries are typed: [`DecisionKind`] / [`DecisionEdge`] are shared with
+//! the flight-recorder trace events, so an audit entry and its
+//! `TraceEvent::Decision` twin can never disagree on tags. The legacy
+//! stringly lookups (`count_kind("mig")`, `count_edge("defer")`) remain
+//! as thin shims over `as_str()`.
+
+use crate::trace::{DecisionEdge, DecisionKind};
 
 /// One logged controller decision.
 #[derive(Clone, Debug)]
@@ -9,10 +17,10 @@ pub struct Decision {
     pub t: f64,
     /// Observation counter at decision time.
     pub obs: u64,
-    /// FSM edge ("trigger", "validate-ok", "validate-fail", "stable").
-    pub edge: String,
-    /// Action kind tag ("mig", "placement", "io_throttle", ...).
-    pub action: String,
+    /// FSM edge the decision was recorded on.
+    pub edge: DecisionEdge,
+    /// Typed action kind.
+    pub action: DecisionKind,
     /// p99 at decision time (the primary signal snapshot).
     pub p99_ms: f64,
     /// Free-form context (diagnosed cause, comparison values).
@@ -23,16 +31,16 @@ impl Decision {
     pub fn new(
         t: f64,
         obs: u64,
-        edge: &str,
-        action: &str,
+        edge: DecisionEdge,
+        action: DecisionKind,
         p99_ms: f64,
         detail: String,
     ) -> Decision {
         Decision {
             t,
             obs,
-            edge: edge.to_string(),
-            action: action.to_string(),
+            edge,
+            action,
             p99_ms,
             detail,
         }
@@ -58,14 +66,22 @@ impl AuditLog {
         &self.entries
     }
 
+    /// Stringly shim over the typed kinds ("mig", "placement", ...) —
+    /// kept for callers that count by legacy tag.
     pub fn count_kind(&self, kind: &str) -> usize {
-        self.entries.iter().filter(|e| e.action == kind).count()
+        self.entries
+            .iter()
+            .filter(|e| e.action.as_str() == kind)
+            .count()
     }
 
     /// Entries on one FSM edge ("trigger", "defer", "validate-fail", …) —
     /// the arbitration counters sum `count_edge("defer")` per controller.
     pub fn count_edge(&self, edge: &str) -> usize {
-        self.entries.iter().filter(|e| e.edge == edge).count()
+        self.entries
+            .iter()
+            .filter(|e| e.edge.as_str() == edge)
+            .count()
     }
 
     /// Disruptive moves (placement + mig + rollback) per hour over a run of
@@ -79,19 +95,25 @@ impl AuditLog {
             .entries
             .iter()
             .filter(|e| {
-                e.edge != "defer"
-                    && matches!(e.action.as_str(), "mig" | "placement" | "rollback" | "relax")
+                e.edge != DecisionEdge::Defer
+                    && matches!(
+                        e.action,
+                        DecisionKind::Mig
+                            | DecisionKind::Placement
+                            | DecisionKind::Rollback
+                            | DecisionKind::Relax
+                    )
             })
             .count();
         moves as f64 / (duration_s / 3600.0)
     }
 
     /// Timeline rows for Figure 3a: (t, action kind, p99 at decision).
-    pub fn timeline(&self) -> Vec<(f64, &str, f64)> {
+    pub fn timeline(&self) -> Vec<(f64, DecisionKind, f64)> {
         self.entries
             .iter()
-            .filter(|e| e.edge == "trigger" || e.edge == "stable")
-            .map(|e| (e.t, e.action.as_str(), e.p99_ms))
+            .filter(|e| e.edge == DecisionEdge::Trigger || e.edge == DecisionEdge::Stable)
+            .map(|e| (e.t, e.action, e.p99_ms))
             .collect()
     }
 }
@@ -103,16 +125,47 @@ mod tests {
     #[test]
     fn counts_and_rates() {
         let mut log = AuditLog::new();
-        log.record(Decision::new(10.0, 5, "trigger", "io_throttle", 20.0, String::new()));
-        log.record(Decision::new(60.0, 30, "trigger", "mig", 21.0, String::new()));
-        log.record(Decision::new(90.0, 45, "validate-ok", "persist", 14.0, String::new()));
+        log.record(Decision::new(
+            10.0,
+            5,
+            DecisionEdge::Trigger,
+            DecisionKind::IoThrottle,
+            20.0,
+            String::new(),
+        ));
+        log.record(Decision::new(
+            60.0,
+            30,
+            DecisionEdge::Trigger,
+            DecisionKind::Mig,
+            21.0,
+            String::new(),
+        ));
+        log.record(Decision::new(
+            90.0,
+            45,
+            DecisionEdge::ValidateOk,
+            DecisionKind::Persist,
+            14.0,
+            String::new(),
+        ));
         // A deferred move never executed: must not count toward the rate.
-        log.record(Decision::new(95.0, 48, "defer", "placement", 21.0, String::new()));
+        log.record(Decision::new(
+            95.0,
+            48,
+            DecisionEdge::Defer,
+            DecisionKind::Placement,
+            21.0,
+            String::new(),
+        ));
+        // The stringly shims still answer by legacy tag.
         assert_eq!(log.count_kind("mig"), 1);
         assert_eq!(log.count_kind("io_throttle"), 1);
         assert_eq!(log.count_edge("defer"), 1);
         // 1 disruptive move in 1800 s = 2/hr.
         assert!((log.moves_per_hour(1800.0) - 2.0).abs() < 1e-12);
-        assert_eq!(log.timeline().len(), 2);
+        let tl = log.timeline();
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[1].1, DecisionKind::Mig);
     }
 }

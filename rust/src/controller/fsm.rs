@@ -28,6 +28,7 @@ use crate::gpu::MigProfile;
 use crate::telemetry::SignalSnapshot;
 use crate::tenants::spec::T1;
 use crate::tenants::TenantId;
+use crate::trace::{DecisionEdge, DecisionKind};
 use crate::util::ewma::Persistence;
 
 use super::actions::{Action, IsolationChange};
@@ -74,8 +75,8 @@ pub struct Proposal {
     pub actions: Vec<Action>,
     pub class: ProposalClass,
     /// Audit fields recorded on commit.
-    pub edge: &'static str,
-    pub kind: &'static str,
+    pub edge: DecisionEdge,
+    pub kind: DecisionKind,
     pub detail: String,
     /// p99 at decision time (also the `prev_p99` a validation window
     /// compares against for upgrades).
@@ -226,11 +227,11 @@ impl Controller {
                         let act = Action::Rollback {
                             tenant: self.primary,
                         };
-                        let kind = act.kind();
+                        let kind = act.decision_kind();
                         self.audit.record(Decision::new(
                             snap.t,
                             self.obs,
-                            "validate-fail",
+                            DecisionEdge::ValidateFail,
                             kind,
                             p99,
                             format!("p99 {p99:.2} > pre-change {prev_p99:.2}"),
@@ -238,7 +239,7 @@ impl Controller {
                         return Some(Proposal {
                             actions: vec![act],
                             class: ProposalClass::Mandatory,
-                            edge: "validate-fail",
+                            edge: DecisionEdge::ValidateFail,
                             kind,
                             detail: String::new(),
                             p99_ms: p99,
@@ -248,8 +249,8 @@ impl Controller {
                     self.audit.record(Decision::new(
                         snap.t,
                         self.obs,
-                        "validate-ok",
-                        "persist",
+                        DecisionEdge::ValidateOk,
+                        DecisionKind::Persist,
                         p99,
                         format!("p99 {p99:.2} vs pre-change {prev_p99:.2}"),
                     ));
@@ -285,8 +286,8 @@ impl Controller {
             if self.cfg.levers.guardrails && self.guard_dwell_ok() {
                 if let Some(act) = self.try_guardrail(cause, snap, view) {
                     return Some(Proposal {
-                        edge: "trigger",
-                        kind: act.kind(),
+                        edge: DecisionEdge::Trigger,
+                        kind: act.decision_kind(),
                         detail: format!("{cause:?}"),
                         actions: vec![act],
                         class: ProposalClass::Guardrail,
@@ -305,8 +306,8 @@ impl Controller {
             if self.dwell_ok() && material {
                 if let Some(act) = self.plan_isolation_upgrade(cause, snap, view) {
                     return Some(Proposal {
-                        edge: "trigger",
-                        kind: act.kind(),
+                        edge: DecisionEdge::Trigger,
+                        kind: act.decision_kind(),
                         detail: format!("{cause:?}"),
                         actions: vec![act],
                         class: ProposalClass::Upgrade,
@@ -356,8 +357,8 @@ impl Controller {
             }
             if !acts.is_empty() {
                 return Some(Proposal {
-                    edge: "stable",
-                    kind: acts[0].kind(),
+                    edge: DecisionEdge::Stable,
+                    kind: acts[0].decision_kind(),
                     detail: "relaxation".to_string(),
                     actions: acts,
                     class: ProposalClass::Relax,
@@ -419,7 +420,7 @@ impl Controller {
         self.audit.record(Decision::new(
             t,
             self.obs,
-            "defer",
+            DecisionEdge::Defer,
             p.kind,
             p.p99_ms,
             format!("lost arbitration to tenant {}", winner.0),

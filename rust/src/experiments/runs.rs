@@ -4,11 +4,43 @@
 
 use crate::controller::Levers;
 use crate::fabric::ps::{ps_rates, FlowDemand};
-use crate::platform::Scenario;
+use crate::platform::{Scenario, SimWorld};
 use crate::tenants::InterferenceSchedule;
+use crate::trace::{recorder::DEFAULT_CAPACITY, render_timeline, TimelineRow};
 
 use super::harness::{repeat_runs, ConfigSummary, Repeats};
 use super::report::{fmt_row, markdown_table, write_series};
+
+/// `predserve report --timeline`: run `scenario` with the flight
+/// recorder attached and render the per-tenant p99-vs-SLO timeline with
+/// committed controller decisions overlaid, plus a one-line registry
+/// summary.
+pub fn run_timeline_report(scenario: Scenario, width: usize) -> String {
+    let mut world = SimWorld::new(scenario);
+    world.enable_recording(DEFAULT_CAPACITY);
+    let (r, rec) = world.run_recorded();
+    let rec = rec.expect("recording was enabled");
+    let rows: Vec<TimelineRow> = r
+        .per_tenant
+        .iter()
+        .filter(|t| t.slo_ms < f64::MAX)
+        .map(|t| TimelineRow {
+            name: t.name.clone(),
+            slo_ms: t.slo_ms,
+            tenant: t.tenant.0 as u32,
+        })
+        .collect();
+    let mut out = format!("{} [{}] seed {}\n", r.label, r.scenario, r.seed);
+    out.push_str(&render_timeline(&rec.events(), &rows, r.horizon_s, width));
+    out.push_str(&format!(
+        "decisions={} guardrail-edges={} trace-events={} dropped={}\n",
+        rec.metrics.counter("ctl.decisions"),
+        rec.metrics.counter("ctl.guardrail_edges"),
+        rec.len(),
+        rec.metrics.dropped_events(),
+    ));
+    out
+}
 
 /// The five E2 configurations in paper order (Table 3).
 pub fn ablation_levers() -> [(&'static str, Levers); 5] {

@@ -31,6 +31,7 @@ pub mod sim;
 pub mod fabric;
 pub mod tenants;
 pub mod telemetry;
+pub mod trace;
 pub mod controller;
 pub mod alloc;
 pub mod platform;

@@ -13,6 +13,11 @@
 //!   trace        trace-replay vs rate-matched Poisson ablation on the
 //!                trace-driven catalog scenarios (per-tenant ΔSLO-miss,
 //!                Δp99)
+//!   trace-export run a scenario with the flight recorder attached and
+//!                write the Chrome trace-event JSON (`chrome://tracing`/
+//!                Perfetto-loadable; `.jsonl` out paths stream JSONL)
+//!   report       `--timeline`: per-tenant p99-vs-SLO ASCII timeline
+//!                with controller decisions overlaid
 //!   figures      regenerate Figure 2/3/4 series (CSV under target/paper/)
 //!   cluster      run the 2-node (16-GPU) cluster experiment (E9); with
 //!                --fleet, the leader splits one auto-placed tenant list
@@ -24,11 +29,49 @@ use predserve::cluster::Leader;
 use predserve::config;
 use predserve::experiments::harness::Repeats;
 use predserve::experiments::runs;
-use predserve::platform::{Scenario, SimWorld};
+use predserve::platform::{RunResult, Scenario, SimWorld};
 use predserve::serving::request::SamplingParams;
 use predserve::serving::Engine;
 
-const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--shards N] [--config FILE] [--arrivals-trace FILE] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
+const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|trace-export|report|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--shards N] [--config FILE] [--arrivals-trace FILE] [--record-trace FILE] [--out FILE] [--timeline] [--width N] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
+
+/// Resolve a catalog scenario from the shared CLI knobs (--scenario,
+/// --seed, --levers, --config, --horizon, --shards).
+fn scenario_from_args(args: &Args, default_name: &str) -> Result<Scenario> {
+    let levers = config::parse_levers(args.get_str("levers", "full"))?;
+    let name = args.get_str("scenario", default_name);
+    let mut scenario = Scenario::by_name(name, args.get_u64("seed", 11), levers).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scenario '{name}' (catalog: {})",
+            Scenario::CATALOG.join(", ")
+        )
+    })?;
+    if let Some(path) = args.get("config") {
+        config::load_into(&mut scenario, path)?;
+    }
+    scenario.horizon = args.get_f64("horizon", scenario.horizon);
+    scenario.shards = args.get_usize("shards", scenario.shards).max(1);
+    Ok(scenario)
+}
+
+/// Write recorded flight-recorder events to `path`: JSONL when the path
+/// ends in `.jsonl`, Chrome trace-event JSON otherwise.
+fn write_trace(path: &str, rec: &predserve::trace::Recorder, r: &RunResult) -> Result<()> {
+    let events = rec.events();
+    let text = if path.ends_with(".jsonl") {
+        predserve::trace::jsonl(&events)
+    } else {
+        let names: Vec<String> = r.per_tenant.iter().map(|t| t.name.clone()).collect();
+        predserve::trace::chrome_trace(&events, &names, r.horizon_s).to_string()
+    };
+    std::fs::write(path, text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!(
+        "wrote {} trace events to {path} (ring dropped {})",
+        events.len(),
+        rec.metrics.dropped_events()
+    );
+    Ok(())
+}
 
 fn repeats(args: &Args) -> Repeats {
     let mut r = if args.flag("fast") {
@@ -122,7 +165,15 @@ fn main() -> Result<()> {
             }
             scenario.horizon = args.get_f64("horizon", scenario.horizon);
             scenario.shards = args.get_usize("shards", scenario.shards).max(1);
-            let r = SimWorld::new(scenario).run();
+            let record_path = args.get("record-trace").map(str::to_string);
+            let mut world = SimWorld::new(scenario);
+            if record_path.is_some() {
+                world.enable_recording(predserve::trace::recorder::DEFAULT_CAPACITY);
+            }
+            let (r, rec) = world.run_recorded();
+            if let (Some(path), Some(rec)) = (record_path.as_deref(), rec.as_ref()) {
+                write_trace(path, rec, &r)?;
+            }
             if r.shards > 1 {
                 let per: Vec<String> = r.per_shard_events.iter().map(u64::to_string).collect();
                 println!(
@@ -270,6 +321,28 @@ fn main() -> Result<()> {
         }
         "trace" => {
             println!("{}", runs::run_trace(&repeats(&args)));
+        }
+        "trace-export" => {
+            let scenario = scenario_from_args(&args, "hotspot_64")?;
+            let out = args.get_str("out", "run.trace.json").to_string();
+            let mut world = SimWorld::new(scenario);
+            world.enable_recording(predserve::trace::recorder::DEFAULT_CAPACITY);
+            let (r, rec) = world.run_recorded();
+            let rec = rec.expect("recording was enabled");
+            write_trace(&out, &rec, &r)?;
+            for (k, v) in &r.metrics {
+                println!("  {k} = {v}");
+            }
+        }
+        "report" => {
+            if !args.flag("timeline") {
+                anyhow::bail!("report: pass --timeline (the only report implemented); {USAGE}");
+            }
+            let scenario = scenario_from_args(&args, "paper_single_host")?;
+            print!(
+                "{}",
+                runs::run_timeline_report(scenario, args.get_usize("width", 100))
+            );
         }
         "figures" => {
             let r = repeats(&args);

@@ -133,6 +133,12 @@ pub struct RunResult {
     /// Conservative lookahead windows the sharded run partitioned into
     /// (window width = the scenario's sampling interval Δ).
     pub sync_windows: u64,
+    /// Flight-recorder metrics snapshot: sorted `(name, value)` pairs
+    /// from the run's `MetricsRegistry` ("ctl.decisions",
+    /// "shard0.occupancy", ...). Empty when recording is disabled.
+    /// Deterministic, but excluded from `fingerprint()` like every other
+    /// observability field — recording must not change what a run *is*.
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl RunResult {

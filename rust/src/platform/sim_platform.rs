@@ -39,6 +39,7 @@ use crate::sim::{EngineKind, EventQueue, ShardMap, ShardedQueue, SimClock, COORD
 use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TenantSignal};
 use crate::telemetry::TenantMonitor;
 use crate::tenants::{ArrivalState, TenantId, TenantKind, WorkloadSpec};
+use crate::trace::{CtlPhase, DecisionEdge, DecisionKind, Recorder, TraceEvent};
 use crate::util::rng::Pcg64;
 
 use super::result::{RunResult, TenantControllerStats, TenantRunStats};
@@ -293,6 +294,15 @@ impl WorldQueue {
             ),
         }
     }
+
+    /// Shard of the event being handled (`None` on the single queue) —
+    /// read by the flight recorder only.
+    fn current_shard(&self) -> Option<usize> {
+        match self {
+            WorldQueue::Single(_) => None,
+            WorldQueue::Sharded { q, .. } => q.current_shard(),
+        }
+    }
 }
 
 /// The world.
@@ -333,6 +343,19 @@ pub struct SimWorld {
     controller_wall_s: f64,
     last_good: Option<SavedConfig>,
     reconfig_durations: Vec<f64>,
+
+    // Flight recorder. `None` = disabled: every emit site is a single
+    // `Option` check and the run is byte-identical either way (the
+    // non-perturbation property test pins this). The `trace_*` fields
+    // mirror control-plane state into events by diffing — controllers
+    // never see the recorder.
+    recorder: Option<Recorder>,
+    /// Audit entries per controller already mirrored into the trace.
+    trace_audit_seen: Vec<usize>,
+    /// Last-seen FSM phase per controller (span open/close detection).
+    trace_ctl_phase: Vec<Option<CtlPhase>>,
+    /// Last-seen (conflicts, deferrals) arbitration counters.
+    trace_arb_last: (u64, u64),
 }
 
 impl SimWorld {
@@ -539,6 +562,10 @@ impl SimWorld {
             controller_wall_s: 0.0,
             last_good: None,
             reconfig_durations: Vec::new(),
+            recorder: None,
+            trace_audit_seen: Vec::new(),
+            trace_ctl_phase: Vec::new(),
+            trace_arb_last: (0, 0),
             scenario,
         };
         w.seed_events();
@@ -1047,6 +1074,17 @@ impl SimWorld {
                 if self.scenario.tenants[t].kind() != TenantKind::BandwidthHeavy {
                     return;
                 }
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.emit(
+                        now,
+                        TraceEvent::Guardrail {
+                            target: t as u32,
+                            kind: DecisionKind::IoThrottle,
+                            engaged: cap_gbps.is_some(),
+                        },
+                    );
+                    rec.metrics.inc("ctl.guardrail_edges", 1);
+                }
                 self.throttles[t] = cap_gbps;
                 self.sync_fabric(now);
                 self.fabric.set_owner_cap(t, cap_gbps);
@@ -1073,6 +1111,17 @@ impl SimWorld {
                 }
                 if let TenantRt::Comp(c) = &mut self.rt[t] {
                     c.quota = quota.clamp(0.0, 100.0);
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.emit(
+                            now,
+                            TraceEvent::Guardrail {
+                                target: t as u32,
+                                kind: DecisionKind::MpsQuota,
+                                engaged: true,
+                            },
+                        );
+                        rec.metrics.inc("ctl.guardrail_edges", 1);
+                    }
                 }
             }
             Action::PinCpu { tenant, numa } => {
@@ -1431,6 +1480,40 @@ impl SimWorld {
         if let Some(p) = snap.tenant(TenantId(primary)) {
             self.p99_series.push((now, p.tails.p99_ms));
         }
+        // Flight recorder: the per-Δ signal series. Observation-only — the
+        // snapshot is already built, so recording cannot perturb the run.
+        if let Some(rec) = self.recorder.as_mut() {
+            for ts in &snap.tenants {
+                rec.emit(
+                    now,
+                    TraceEvent::TenantSignal {
+                        tenant: ts.tenant.0 as u32,
+                        p99_ms: ts.tails.p99_ms,
+                        miss_rate: ts.tails.miss_rate,
+                        gbps: ts.pcie_gbps,
+                        completed: ts.tails.completed,
+                    },
+                );
+            }
+            for ls in &snap.links {
+                rec.emit(
+                    now,
+                    TraceEvent::LinkSignal {
+                        link: ls.link.0 as u32,
+                        gbps: ls.gbps,
+                        utilization: ls.utilization,
+                    },
+                );
+            }
+            let util = if snap.gpu_sm_util.is_empty() {
+                0.0
+            } else {
+                snap.gpu_sm_util.iter().sum::<f64>() / snap.gpu_sm_util.len() as f64
+            };
+            rec.emit(now, TraceEvent::SmUtil { util });
+            rec.emit(now, TraceEvent::FabricSolves { recomputes: self.fabric.rate_recomputes() });
+            rec.metrics.inc("trace.signal_samples", 1);
+        }
         if self.control.is_some() {
             let view = self.build_view();
             let wall = std::time::Instant::now();
@@ -1443,8 +1526,64 @@ impl SimWorld {
             for a in actions {
                 self.apply_action(now, a);
             }
+            self.mirror_control_trace(now);
         }
         self.q.push_at(now + self.scenario.sample_dt, Event::Sample);
+    }
+
+    /// Mirror control-plane progress into the trace by diffing the audit
+    /// logs, FSM phases, and arbitration counters against what was
+    /// already emitted. Controllers never see the recorder — that is
+    /// what makes non-perturbation structural rather than careful.
+    fn mirror_control_trace(&mut self, now: f64) {
+        let Some(rec) = self.recorder.as_mut() else {
+            return;
+        };
+        let Some(plane) = self.control.as_ref() else {
+            return;
+        };
+        let ctls = plane.controllers();
+        if self.trace_audit_seen.len() < ctls.len() {
+            self.trace_audit_seen.resize(ctls.len(), 0);
+            self.trace_ctl_phase.resize(ctls.len(), None);
+        }
+        for (i, c) in ctls.iter().enumerate() {
+            let tenant = c.primary().0 as u32;
+            let entries = c.audit().entries();
+            for e in &entries[self.trace_audit_seen[i]..] {
+                rec.emit(
+                    e.t,
+                    TraceEvent::Decision {
+                        tenant,
+                        kind: e.action,
+                        edge: e.edge,
+                        p99_ms: e.p99_ms,
+                    },
+                );
+                rec.metrics.inc("ctl.decisions", 1);
+            }
+            self.trace_audit_seen[i] = entries.len();
+            let phase = match c.state() {
+                crate::controller::CtlState::Validating { .. } => Some(CtlPhase::Validating),
+                crate::controller::CtlState::Cooldown { .. } => Some(CtlPhase::Cooldown),
+                crate::controller::CtlState::Stable => None,
+            };
+            if self.trace_ctl_phase[i] != phase {
+                if let Some(p) = self.trace_ctl_phase[i] {
+                    rec.emit(now, TraceEvent::CtlSpan { tenant, phase: p, begin: false });
+                }
+                if let Some(p) = phase {
+                    rec.emit(now, TraceEvent::CtlSpan { tenant, phase: p, begin: true });
+                }
+                self.trace_ctl_phase[i] = phase;
+            }
+        }
+        let stats = plane.stats();
+        let (conflicts, deferrals) = (stats.conflicts, stats.deferrals);
+        if (conflicts, deferrals) != self.trace_arb_last {
+            self.trace_arb_last = (conflicts, deferrals);
+            rec.emit(now, TraceEvent::ArbCounters { conflicts, deferrals });
+        }
     }
 
     /// Build a (snapshot, view) pair from the current world state —
@@ -1472,6 +1611,12 @@ impl SimWorld {
                     .copied()
                     .filter(|id| self.fabric.remaining(*id).map(|r| r <= 1e-9).unwrap_or(false))
                     .collect();
+                if !done.is_empty() {
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.emit(now, TraceEvent::FlowsDone { flows: done.len() as u32 });
+                        rec.metrics.inc("fabric.flow_completions", done.len() as u64);
+                    }
+                }
                 for id in done {
                     self.fabric.remove(id);
                     let purpose = self.flow_purpose.remove(&id).unwrap_or_else(|| {
@@ -1535,17 +1680,143 @@ impl SimWorld {
         }
     }
 
+    /// Attach a flight recorder with a preallocated ring of `capacity`
+    /// events. Recording is observation-only: the run's fingerprint is
+    /// byte-identical with and without it (property-tested).
+    pub fn enable_recording(&mut self, capacity: usize) {
+        self.recorder = Some(Recorder::new(capacity));
+    }
+
     /// Run to the scenario horizon and aggregate results.
-    pub fn run(mut self) -> RunResult {
+    pub fn run(self) -> RunResult {
+        self.run_recorded().0
+    }
+
+    /// [`SimWorld::run`], returning the flight recorder (if one was
+    /// attached via [`SimWorld::enable_recording`]) alongside the result.
+    pub fn run_recorded(mut self) -> (RunResult, Option<Recorder>) {
         let horizon = self.scenario.horizon;
+        // Sharded-window accounting (recording only): window edges are
+        // detected from the queue's sync-window counter after each pop,
+        // so the loop below never touches engine state. The event that
+        // opens a window is popped before the edge is visible, so each
+        // closing count includes that first event — deterministic, and
+        // irrelevant at window granularity.
+        let recording = self.recorder.is_some();
+        let sharded = matches!(self.q, WorldQueue::Sharded { .. });
+        let nshards = match &self.q {
+            WorldQueue::Sharded { q, .. } => q.shards(),
+            WorldQueue::Single(_) => 1,
+        };
+        let mut last_windows = 0u64;
+        let mut last_popped = vec![0u64; nshards];
+        let mut stall_windows = vec![0u64; nshards];
+        let mut merge_switches = 0u64;
+        let mut last_shard: Option<usize> = None;
+        if recording && sharded {
+            if let Some(rec) = self.recorder.as_mut() {
+                for s in 0..nshards {
+                    rec.emit(
+                        0.0,
+                        TraceEvent::ShardWindow {
+                            shard: s as u32,
+                            events: 0,
+                            begin: true,
+                        },
+                    );
+                }
+            }
+        }
         while let Some(t) = self.q.peek_time() {
             if t > horizon {
                 break;
             }
             let (clock, ev) = self.q.pop().unwrap();
-            self.handle(clock.secs(), ev);
+            let now = clock.secs();
+            if recording && sharded {
+                if let (Some(rec), WorldQueue::Sharded { q, .. }) =
+                    (self.recorder.as_mut(), &self.q)
+                {
+                    let w = q.sync_windows();
+                    if w != last_windows {
+                        last_windows = w;
+                        let popped = q.per_shard_popped().iter();
+                        for (s, (&tot, last)) in popped.zip(last_popped.iter_mut()).enumerate() {
+                            let delta = tot - *last;
+                            *last = tot;
+                            if delta == 0 {
+                                stall_windows[s] += 1;
+                            }
+                            rec.emit(
+                                now,
+                                TraceEvent::ShardWindow {
+                                    shard: s as u32,
+                                    events: delta,
+                                    begin: false,
+                                },
+                            );
+                        }
+                        rec.emit(now, TraceEvent::CrossShard { total: q.cross_shard_events() });
+                        for s in 0..nshards {
+                            rec.emit(
+                                now,
+                                TraceEvent::ShardWindow {
+                                    shard: s as u32,
+                                    events: 0,
+                                    begin: true,
+                                },
+                            );
+                        }
+                    }
+                    if let Some(s) = q.current_shard() {
+                        if last_shard.is_some() && last_shard != Some(s) {
+                            merge_switches += 1;
+                        }
+                        last_shard = Some(s);
+                    }
+                }
+            }
+            self.handle(now, ev);
         }
-        self.finish(horizon)
+        // Close the trailing windows, fold the engine/world counters into
+        // the registry, and detach the recorder before aggregation.
+        let mut recorder = self.recorder.take();
+        if let Some(rec) = recorder.as_mut() {
+            let (_, per_shard, cross, windows) = self.q.shard_stats();
+            if sharded {
+                let total: u64 = per_shard.iter().sum();
+                for (s, (&tot, &last)) in per_shard.iter().zip(last_popped.iter()).enumerate() {
+                    rec.emit(
+                        horizon,
+                        TraceEvent::ShardWindow {
+                            shard: s as u32,
+                            events: tot - last,
+                            begin: false,
+                        },
+                    );
+                    rec.metrics.inc(&format!("shard{s}.events"), tot);
+                    rec.metrics.inc(&format!("shard{s}.stall_windows"), stall_windows[s]);
+                    rec.metrics.gauge(
+                        &format!("shard{s}.occupancy"),
+                        if total > 0 { tot as f64 / total as f64 } else { 0.0 },
+                    );
+                }
+                rec.emit(horizon, TraceEvent::CrossShard { total: cross });
+                rec.metrics.inc("engine.cross_shard", cross);
+                rec.metrics.inc("engine.sync_windows", windows);
+                rec.metrics.inc("engine.merge_switches", merge_switches);
+            }
+            rec.metrics.inc("sim.events", self.q.events_processed());
+            rec.metrics.inc("fabric.rate_recomputes", self.fabric.rate_recomputes());
+            rec.metrics.gauge("trace.events", rec.len() as f64);
+        }
+        let metrics = recorder
+            .as_ref()
+            .map(|r| r.metrics.snapshot())
+            .unwrap_or_default();
+        let mut result = self.finish(horizon);
+        result.metrics = metrics;
+        (result, recorder)
     }
 
     fn finish(self, horizon: f64) -> RunResult {
@@ -1566,9 +1837,9 @@ impl SimWorld {
                     let audit = c.audit();
                     let mut my_counts: BTreeMap<String, usize> = BTreeMap::new();
                     for e in audit.entries() {
-                        if e.edge != "defer" {
-                            *counts.entry(e.action.clone()).or_insert(0) += 1;
-                            *my_counts.entry(e.action.clone()).or_insert(0) += 1;
+                        if e.edge != DecisionEdge::Defer {
+                            *counts.entry(e.action.as_str().to_string()).or_insert(0) += 1;
+                            *my_counts.entry(e.action.as_str().to_string()).or_insert(0) += 1;
                         }
                     }
                     timeline.extend(
@@ -1680,6 +1951,8 @@ impl SimWorld {
             clamped_events,
             cross_shard_events,
             sync_windows,
+            // Filled in by `run_recorded` from the registry snapshot.
+            metrics: Vec::new(),
         }
     }
 }

@@ -218,6 +218,13 @@ impl<E> ShardedQueue<E> {
     pub fn sync_windows(&self) -> u64 {
         self.windows
     }
+
+    /// Shard whose event is currently being handled (`None` before the
+    /// first pop) — the flight recorder reads this to count merge
+    /// switches between consecutive dispatches.
+    pub fn current_shard(&self) -> Option<usize> {
+        self.current_shard
+    }
 }
 
 /// Order-preserving parallel map over independent work items using

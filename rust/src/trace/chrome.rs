@@ -1,0 +1,614 @@
+//! Trace export: JSONL streaming and the Chrome trace-event format.
+//!
+//! [`chrome_trace`] renders recorded events into the Trace Event Format
+//! that `chrome://tracing` and Perfetto load: one JSON object with a
+//! `traceEvents` array of `ph` B/E (span), `i` (instant), `C` (counter),
+//! and `M` (metadata) records, timestamps in microseconds. Lane layout:
+//! one pid per host, one tid per tenant / controller / shard plus fixed
+//! lanes for the host, arbiter, engine, and fabric. Span integrity is
+//! enforced structurally — orphan end-edges (their begin overwritten by
+//! the ring) are skipped and spans still open at the end of the event
+//! stream are closed at the final timestamp — so `scripts/trace_lint.py`
+//! can require matched B/E pairs and per-tid monotonic timestamps.
+//!
+//! [`jsonl`] is the streaming form: one self-describing JSON object per
+//! line per event, in emit order, for ad-hoc tooling.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{CtlPhase, TraceEvent};
+
+/// The single simulated host.
+const PID: f64 = 1.0;
+
+/// Fixed lanes.
+const TID_HOST: u32 = 1;
+const TID_ARBITER: u32 = 2;
+const TID_ENGINE: u32 = 3;
+const TID_FABRIC: u32 = 4;
+/// Lane bases: tenant signal lanes, controller lanes, shard lanes.
+const TID_TENANT_BASE: u32 = 100;
+const TID_CTL_BASE: u32 = 1100;
+const TID_SHARD_BASE: u32 = 2100;
+
+pub fn tenant_tid(tenant: u32) -> u32 {
+    TID_TENANT_BASE + tenant
+}
+
+pub fn controller_tid(tenant: u32) -> u32 {
+    TID_CTL_BASE + tenant
+}
+
+pub fn shard_tid(shard: u32) -> u32 {
+    TID_SHARD_BASE + shard
+}
+
+fn record(name: Json, ph: &str, ts: f64, tid: u32, cat: &str, args: Json) -> Json {
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("name".to_string(), name);
+    o.insert("ph".to_string(), Json::Str(ph.to_string()));
+    o.insert("ts".to_string(), Json::Num(ts));
+    o.insert("pid".to_string(), Json::Num(PID));
+    o.insert("tid".to_string(), Json::Num(tid as f64));
+    o.insert("cat".to_string(), Json::Str(cat.to_string()));
+    if args != Json::Null {
+        o.insert("args".to_string(), args);
+    }
+    if ph == "i" {
+        // Instant scope: thread.
+        o.insert("s".to_string(), Json::Str("t".to_string()));
+    }
+    Json::Obj(o)
+}
+
+fn counter(name: &str, ts: f64, tid: u32, args: Json) -> Json {
+    record(Json::Str(name.to_string()), "C", ts, tid, "counter", args)
+}
+
+fn micros(t: f64) -> f64 {
+    (t * 1e6).round()
+}
+
+fn thread_meta(tid: u32, label: String) -> Json {
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str("thread_name".to_string()));
+    o.insert("ph".to_string(), Json::Str("M".to_string()));
+    o.insert("pid".to_string(), Json::Num(PID));
+    o.insert("tid".to_string(), Json::Num(tid as f64));
+    o.insert(
+        "args".to_string(),
+        Json::obj(vec![("name", Json::Str(label))]),
+    );
+    Json::Obj(o)
+}
+
+/// Render recorded events as a Chrome trace-event document.
+/// `tenant_names` labels the tenant/controller lanes (index = tenant);
+/// missing names fall back to `tenant{i}`. `horizon_s` closes any span
+/// still open when the recording stopped.
+pub fn chrome_trace(events: &[(f64, TraceEvent)], tenant_names: &[String], horizon_s: f64) -> Json {
+    let mut body: Vec<Json> = Vec::new();
+    // tid → human lane label, for the metadata prelude.
+    let mut lanes: BTreeMap<u32, String> = BTreeMap::new();
+    lanes.insert(TID_HOST, "host".to_string());
+    // tid → stack of open span names (B/E integrity bookkeeping).
+    let mut open: BTreeMap<u32, Vec<&'static str>> = BTreeMap::new();
+    let mut last_ts = 0.0f64;
+
+    let tenant_label = |t: u32| -> String {
+        tenant_names
+            .get(t as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("tenant{t}"))
+    };
+
+    for &(t, ev) in events {
+        let ts = micros(t);
+        last_ts = last_ts.max(ts);
+        match ev {
+            TraceEvent::TenantSignal {
+                tenant,
+                p99_ms,
+                miss_rate,
+                gbps,
+                completed,
+            } => {
+                let tid = tenant_tid(tenant);
+                lanes.entry(tid).or_insert_with(|| tenant_label(tenant));
+                body.push(counter(
+                    "p99_ms",
+                    ts,
+                    tid,
+                    Json::obj(vec![("value", Json::Num(p99_ms))]),
+                ));
+                body.push(counter(
+                    "miss_rate",
+                    ts,
+                    tid,
+                    Json::obj(vec![("value", Json::Num(miss_rate))]),
+                ));
+                body.push(counter(
+                    "io_gbps",
+                    ts,
+                    tid,
+                    Json::obj(vec![
+                        ("value", Json::Num(gbps)),
+                        ("completed", Json::Num(completed as f64)),
+                    ]),
+                ));
+            }
+            TraceEvent::LinkSignal {
+                link,
+                gbps,
+                utilization,
+            } => {
+                lanes.entry(TID_FABRIC).or_insert_with(|| "fabric".to_string());
+                body.push(counter(
+                    &format!("link{link}"),
+                    ts,
+                    TID_FABRIC,
+                    Json::obj(vec![
+                        ("gbps", Json::Num(gbps)),
+                        ("util", Json::Num(utilization)),
+                    ]),
+                ));
+            }
+            TraceEvent::SmUtil { util } => {
+                body.push(counter(
+                    "sm_util",
+                    ts,
+                    TID_HOST,
+                    Json::obj(vec![("value", Json::Num(util))]),
+                ));
+            }
+            TraceEvent::Decision {
+                tenant,
+                kind,
+                edge,
+                p99_ms,
+            } => {
+                let tid = controller_tid(tenant);
+                lanes
+                    .entry(tid)
+                    .or_insert_with(|| format!("ctl:{}", tenant_label(tenant)));
+                body.push(record(
+                    Json::Str(kind.as_str().to_string()),
+                    "i",
+                    ts,
+                    tid,
+                    "decision",
+                    Json::obj(vec![
+                        ("edge", Json::Str(edge.as_str().to_string())),
+                        ("p99_ms", Json::Num(p99_ms)),
+                    ]),
+                ));
+            }
+            TraceEvent::CtlSpan {
+                tenant,
+                phase,
+                begin,
+            } => {
+                let tid = controller_tid(tenant);
+                lanes
+                    .entry(tid)
+                    .or_insert_with(|| format!("ctl:{}", tenant_label(tenant)));
+                push_span_edge(&mut body, &mut open, tid, phase.as_str(), "ctl", ts, begin);
+            }
+            TraceEvent::Guardrail {
+                target,
+                kind,
+                engaged,
+            } => {
+                let tid = controller_tid(target);
+                lanes
+                    .entry(tid)
+                    .or_insert_with(|| format!("ctl:{}", tenant_label(target)));
+                body.push(record(
+                    Json::Str(format!(
+                        "{}:{}",
+                        kind.as_str(),
+                        if engaged { "own" } else { "loosen" }
+                    )),
+                    "i",
+                    ts,
+                    tid,
+                    "guardrail",
+                    Json::obj(vec![("engaged", Json::Bool(engaged))]),
+                ));
+            }
+            TraceEvent::ArbCounters {
+                conflicts,
+                deferrals,
+            } => {
+                lanes
+                    .entry(TID_ARBITER)
+                    .or_insert_with(|| "arbiter".to_string());
+                body.push(counter(
+                    "arbitration",
+                    ts,
+                    TID_ARBITER,
+                    Json::obj(vec![
+                        ("conflicts", Json::Num(conflicts as f64)),
+                        ("deferrals", Json::Num(deferrals as f64)),
+                    ]),
+                ));
+            }
+            TraceEvent::FabricSolves { recomputes } => {
+                lanes.entry(TID_FABRIC).or_insert_with(|| "fabric".to_string());
+                body.push(counter(
+                    "rate_recomputes",
+                    ts,
+                    TID_FABRIC,
+                    Json::obj(vec![("value", Json::Num(recomputes as f64))]),
+                ));
+            }
+            TraceEvent::FlowsDone { flows } => {
+                lanes.entry(TID_FABRIC).or_insert_with(|| "fabric".to_string());
+                body.push(record(
+                    Json::Str("flows_done".to_string()),
+                    "i",
+                    ts,
+                    TID_FABRIC,
+                    "fabric",
+                    Json::obj(vec![("flows", Json::Num(flows as f64))]),
+                ));
+            }
+            TraceEvent::ShardWindow {
+                shard,
+                events: n,
+                begin,
+            } => {
+                let tid = shard_tid(shard);
+                lanes.entry(tid).or_insert_with(|| format!("shard{shard}"));
+                if begin {
+                    push_span_edge(&mut body, &mut open, tid, "window", "engine", ts, true);
+                } else if pop_span(&mut open, tid, "window") {
+                    body.push(record(
+                        Json::Str("window".to_string()),
+                        "E",
+                        ts,
+                        tid,
+                        "engine",
+                        Json::obj(vec![("events", Json::Num(n as f64))]),
+                    ));
+                }
+            }
+            TraceEvent::CrossShard { total } => {
+                lanes.entry(TID_ENGINE).or_insert_with(|| "engine".to_string());
+                body.push(counter(
+                    "cross_shard",
+                    ts,
+                    TID_ENGINE,
+                    Json::obj(vec![("value", Json::Num(total as f64))]),
+                ));
+            }
+        }
+    }
+
+    // Close spans the recording left open (run ended mid-window).
+    let end_ts = last_ts.max(micros(horizon_s));
+    for (tid, stack) in &mut open {
+        while let Some(name) = stack.pop() {
+            let cat = if *tid >= TID_SHARD_BASE { "engine" } else { "ctl" };
+            body.push(record(
+                Json::Str(name.to_string()),
+                "E",
+                end_ts,
+                *tid,
+                cat,
+                Json::Null,
+            ));
+        }
+    }
+
+    let mut all: Vec<Json> = Vec::with_capacity(body.len() + lanes.len());
+    for (tid, label) in lanes {
+        all.push(thread_meta(tid, label));
+    }
+    all.extend(body);
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(all)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+fn push_span_edge(
+    body: &mut Vec<Json>,
+    open: &mut BTreeMap<u32, Vec<&'static str>>,
+    tid: u32,
+    name: &'static str,
+    cat: &str,
+    ts: f64,
+    begin: bool,
+) {
+    if begin {
+        open.entry(tid).or_default().push(name);
+        body.push(record(
+            Json::Str(name.to_string()),
+            "B",
+            ts,
+            tid,
+            cat,
+            Json::Null,
+        ));
+    } else if pop_span(open, tid, name) {
+        body.push(record(
+            Json::Str(name.to_string()),
+            "E",
+            ts,
+            tid,
+            cat,
+            Json::Null,
+        ));
+    }
+}
+
+/// Pop a matching open span; `false` (skip the end edge) when the begin
+/// edge was overwritten by the ring.
+fn pop_span(open: &mut BTreeMap<u32, Vec<&'static str>>, tid: u32, name: &str) -> bool {
+    match open.get_mut(&tid) {
+        Some(stack) if stack.last() == Some(&name) => {
+            stack.pop();
+            true
+        }
+        _ => false,
+    }
+}
+
+/// One self-describing JSON object per event per line, in emit order.
+pub fn jsonl(events: &[(f64, TraceEvent)]) -> String {
+    let mut out = String::new();
+    for &(t, ev) in events {
+        out.push_str(&event_json(t, ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn event_json(t: f64, ev: TraceEvent) -> Json {
+    let base = |kind: &str, mut fields: Vec<(&str, Json)>| -> Json {
+        let mut pairs = vec![
+            ("t", Json::Num(t)),
+            ("event", Json::Str(kind.to_string())),
+        ];
+        pairs.append(&mut fields);
+        Json::obj(pairs)
+    };
+    match ev {
+        TraceEvent::TenantSignal {
+            tenant,
+            p99_ms,
+            miss_rate,
+            gbps,
+            completed,
+        } => base(
+            "tenant_signal",
+            vec![
+                ("tenant", Json::Num(tenant as f64)),
+                ("p99_ms", Json::Num(p99_ms)),
+                ("miss_rate", Json::Num(miss_rate)),
+                ("gbps", Json::Num(gbps)),
+                ("completed", Json::Num(completed as f64)),
+            ],
+        ),
+        TraceEvent::LinkSignal {
+            link,
+            gbps,
+            utilization,
+        } => base(
+            "link_signal",
+            vec![
+                ("link", Json::Num(link as f64)),
+                ("gbps", Json::Num(gbps)),
+                ("util", Json::Num(utilization)),
+            ],
+        ),
+        TraceEvent::SmUtil { util } => base("sm_util", vec![("util", Json::Num(util))]),
+        TraceEvent::Decision {
+            tenant,
+            kind,
+            edge,
+            p99_ms,
+        } => base(
+            "decision",
+            vec![
+                ("tenant", Json::Num(tenant as f64)),
+                ("kind", Json::Str(kind.as_str().to_string())),
+                ("edge", Json::Str(edge.as_str().to_string())),
+                ("p99_ms", Json::Num(p99_ms)),
+            ],
+        ),
+        TraceEvent::CtlSpan {
+            tenant,
+            phase,
+            begin,
+        } => base(
+            "ctl_span",
+            vec![
+                ("tenant", Json::Num(tenant as f64)),
+                ("phase", Json::Str(phase.as_str().to_string())),
+                ("begin", Json::Bool(begin)),
+            ],
+        ),
+        TraceEvent::Guardrail {
+            target,
+            kind,
+            engaged,
+        } => base(
+            "guardrail",
+            vec![
+                ("target", Json::Num(target as f64)),
+                ("kind", Json::Str(kind.as_str().to_string())),
+                ("engaged", Json::Bool(engaged)),
+            ],
+        ),
+        TraceEvent::ArbCounters {
+            conflicts,
+            deferrals,
+        } => base(
+            "arb_counters",
+            vec![
+                ("conflicts", Json::Num(conflicts as f64)),
+                ("deferrals", Json::Num(deferrals as f64)),
+            ],
+        ),
+        TraceEvent::FabricSolves { recomputes } => base(
+            "fabric_solves",
+            vec![("recomputes", Json::Num(recomputes as f64))],
+        ),
+        TraceEvent::FlowsDone { flows } => {
+            base("flows_done", vec![("flows", Json::Num(flows as f64))])
+        }
+        TraceEvent::ShardWindow {
+            shard,
+            events,
+            begin,
+        } => base(
+            "shard_window",
+            vec![
+                ("shard", Json::Num(shard as f64)),
+                ("events", Json::Num(events as f64)),
+                ("begin", Json::Bool(begin)),
+            ],
+        ),
+        TraceEvent::CrossShard { total } => {
+            base("cross_shard", vec![("total", Json::Num(total as f64))])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{DecisionEdge, DecisionKind};
+
+    fn sample_events() -> Vec<(f64, TraceEvent)> {
+        vec![
+            (
+                1.0,
+                TraceEvent::TenantSignal {
+                    tenant: 0,
+                    p99_ms: 12.0,
+                    miss_rate: 0.01,
+                    gbps: 3.0,
+                    completed: 50,
+                },
+            ),
+            (1.0, TraceEvent::ShardWindow { shard: 0, events: 0, begin: true }),
+            (
+                2.0,
+                TraceEvent::Decision {
+                    tenant: 0,
+                    kind: DecisionKind::IoThrottle,
+                    edge: DecisionEdge::Trigger,
+                    p99_ms: 22.0,
+                },
+            ),
+            (
+                3.0,
+                TraceEvent::ShardWindow {
+                    shard: 0,
+                    events: 17,
+                    begin: false,
+                },
+            ),
+            (
+                3.0,
+                TraceEvent::CtlSpan {
+                    tenant: 0,
+                    phase: CtlPhase::Validating,
+                    begin: true,
+                },
+            ),
+        ]
+    }
+
+    /// (ph, tid, ts) triples of the non-metadata records, in order.
+    fn shape(doc: &Json) -> Vec<(String, u32, f64)> {
+        doc.get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() != Some("M"))
+            .map(|e| {
+                (
+                    e.get("ph").as_str().unwrap().to_string(),
+                    e.get("tid").as_usize().unwrap() as u32,
+                    e.get("ts").as_f64().unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spans_are_balanced_and_timestamps_monotonic_per_tid() {
+        let doc = chrome_trace(&sample_events(), &["t1".to_string()], 10.0);
+        // Round-trips through the parser (valid JSON).
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        let mut per_tid: std::collections::BTreeMap<u32, (f64, i64)> = Default::default();
+        for (ph, tid, ts) in shape(&back) {
+            let e = per_tid.entry(tid).or_insert((0.0, 0));
+            assert!(ts >= e.0, "ts regressed on tid {tid}");
+            e.0 = ts;
+            match ph.as_str() {
+                "B" => e.1 += 1,
+                "E" => {
+                    e.1 -= 1;
+                    assert!(e.1 >= 0, "E without B on tid {tid}");
+                }
+                _ => {}
+            }
+        }
+        // The validating span left open at t=3 was closed at the horizon.
+        for (tid, (_, depth)) in per_tid {
+            assert_eq!(depth, 0, "unbalanced spans on tid {tid}");
+        }
+    }
+
+    #[test]
+    fn orphan_end_edges_are_skipped() {
+        // A window end whose begin was overwritten by the ring: no E.
+        let doc = chrome_trace(
+            &[(1.0, TraceEvent::ShardWindow { shard: 2, events: 4, begin: false })],
+            &[],
+            5.0,
+        );
+        assert!(shape(&doc).iter().all(|(ph, _, _)| ph != "E" && ph != "B"));
+    }
+
+    #[test]
+    fn lanes_carry_thread_names_and_counters_carry_values() {
+        let doc = chrome_trace(&sample_events(), &["t1-inference".to_string()], 10.0);
+        let evs = doc.get("traceEvents").as_arr().unwrap();
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .filter_map(|e| e.at(&["args", "name"]).as_str())
+            .collect();
+        assert!(names.contains(&"t1-inference"));
+        assert!(names.contains(&"ctl:t1-inference"));
+        assert!(names.contains(&"shard0"));
+        let p99 = evs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("p99_ms"))
+            .unwrap();
+        assert_eq!(p99.at(&["args", "value"]).as_f64(), Some(12.0));
+        // µs timestamps.
+        assert_eq!(p99.get("ts").as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn jsonl_is_one_valid_object_per_line() {
+        let text = jsonl(&sample_events());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("event").as_str().is_some());
+            assert!(j.get("t").as_f64().is_some());
+        }
+    }
+}

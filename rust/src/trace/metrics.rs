@@ -1,0 +1,114 @@
+//! Named monotonic counters and gauges any module can register into.
+//!
+//! The registry is the flight recorder's whole-run aggregate side:
+//! emit sites bump counters ("ctl.decisions", "fabric.flow_completions"),
+//! the world folds engine counters in at finish, and the sorted snapshot
+//! lands in `RunResult::metrics` — deterministic (BTreeMap order, no
+//! wall-clock inputs) but excluded from `fingerprint()` like the shard
+//! counters, so observability can grow without invalidating pinned
+//! regression fingerprints.
+
+use std::collections::BTreeMap;
+
+/// A registry of named monotonic counters (u64, `inc`) and gauges
+/// (f64, last-write-wins `gauge`). Names are free-form dotted paths;
+/// keys are interned on first use, so steady-state increments never
+/// allocate.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    /// Ring-buffer overwrites: events the recorder dropped (oldest
+    /// first) because the preallocated ring was full.
+    dropped: u64,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Bump a monotonic counter by `by`, creating it at 0 on first use.
+    pub fn inc(&mut self, name: &str, by: u64) {
+        if let Some(c) = self.counters.get_mut(name) {
+            *c += by;
+        } else {
+            self.counters.insert(name.to_string(), by);
+        }
+    }
+
+    /// Set a gauge (last write wins).
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        if let Some(g) = self.gauges.get_mut(name) {
+            *g = value;
+        } else {
+            self.gauges.insert(name.to_string(), value);
+        }
+    }
+
+    /// Current value of a counter (0 if never bumped).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of a gauge, if set.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Events the ring buffer dropped (overwrote) at capacity.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Record `n` ring-buffer drops (called by the recorder only).
+    pub(crate) fn note_dropped(&mut self, n: u64) {
+        self.dropped += n;
+    }
+
+    /// Sorted `(name, value)` snapshot: counters and gauges merged, plus
+    /// `trace.dropped_events`. Counters are widened to f64 (every value
+    /// a run produces is far below 2^53, so the widening is exact).
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        for (k, v) in &self.counters {
+            out.insert(k.clone(), *v as f64);
+        }
+        for (k, v) in &self.gauges {
+            out.insert(k.clone(), *v);
+        }
+        out.insert("trace.dropped_events".to_string(), self.dropped as f64);
+        out.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotonic_and_gauges_overwrite() {
+        let mut m = MetricsRegistry::new();
+        m.inc("a.count", 2);
+        m.inc("a.count", 3);
+        m.gauge("b.level", 1.5);
+        m.gauge("b.level", 0.5);
+        assert_eq!(m.counter("a.count"), 5);
+        assert_eq!(m.gauge_value("b.level"), Some(0.5));
+        assert_eq!(m.counter("never"), 0);
+        assert_eq!(m.gauge_value("never"), None);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_includes_drop_counter() {
+        let mut m = MetricsRegistry::new();
+        m.inc("z.last", 1);
+        m.gauge("a.first", 2.0);
+        m.note_dropped(7);
+        let snap = m.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["a.first", "trace.dropped_events", "z.last"]);
+        assert_eq!(snap[1].1, 7.0);
+        assert_eq!(m.dropped_events(), 7);
+    }
+}

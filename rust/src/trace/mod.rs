@@ -1,0 +1,265 @@
+//! The flight recorder: time-resolved observability for the simulated
+//! testbed (§2.4: "log all decisions with signal snapshots for audit").
+//!
+//! `RunResult` answers *what happened* at end-of-run granularity; this
+//! module answers *when* and *why*. A [`Recorder`] captures typed,
+//! timestamped [`TraceEvent`]s from every layer into a preallocated ring
+//! buffer:
+//!
+//! * per-Δ signal series per tenant (tails, miss-rate, link GB/s, SM
+//!   utilization) — one [`TraceEvent::TenantSignal`] per tenant per
+//!   sampling tick, plus link and host-level counters;
+//! * controller lifecycle — every `AuditLog` decision as a
+//!   [`TraceEvent::Decision`], validation/cool-down windows as
+//!   begin/end spans, guardrail own/loosen edges, arbitration counters;
+//! * fabric events — PS rate-recompute counters and completion-calendar
+//!   pops ([`TraceEvent::FlowsDone`]);
+//! * sharded-engine windows — per-shard conservative-sync window spans
+//!   with per-window event counts, cross-shard delivery counters, and
+//!   merge-stall accounting.
+//!
+//! Alongside the ring, a [`MetricsRegistry`] of named monotonic counters
+//! and gauges collects whole-run aggregates; its sorted snapshot lands in
+//! `RunResult::metrics` (deterministic, excluded from `fingerprint()`
+//! like the shard counters).
+//!
+//! **The load-bearing invariant:** recording must not perturb the
+//! simulation. Every emit site is observation-only — no RNG stream is
+//! consumed, no event is scheduled, no float is computed differently —
+//! so every catalog fingerprint is byte-identical with recording on vs
+//! off. `prop_recording_does_not_perturb_fingerprints` enforces this,
+//! and the recorder is zero-cost when disabled: a single
+//! `Option<Recorder>` check per emit site, no allocation when `None`.
+//!
+//! Export paths: JSONL streaming ([`chrome::jsonl`]), Chrome trace-event
+//! format loadable in `chrome://tracing` / Perfetto
+//! ([`chrome::chrome_trace`]; one pid per host, one tid per
+//! tenant/controller/shard), and the per-tenant p99-vs-SLO ASCII
+//! timeline of `predserve report --timeline`
+//! ([`timeline::render_timeline`]).
+
+pub mod chrome;
+pub mod metrics;
+pub mod recorder;
+pub mod timeline;
+
+pub use chrome::{chrome_trace, jsonl};
+pub use metrics::MetricsRegistry;
+pub use recorder::Recorder;
+pub use timeline::{render_timeline, TimelineRow};
+
+/// Typed action-kind tag shared by the controller audit log and the
+/// trace events — the typed replacement for the audit log's stringly
+/// kinds. [`DecisionKind::as_str`] renders the exact legacy strings
+/// ("mig", "placement", ...), which fingerprinted timelines and the
+/// `count_kind(&str)` shim depend on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DecisionKind {
+    /// Dynamic MIG resize on the tenant's current GPU.
+    Mig,
+    /// Move to an existing/created instance (placement lever).
+    Placement,
+    /// Relaxation shrink after sustained stability.
+    Relax,
+    /// MPS active-thread-percentage cap on a noisy peer.
+    MpsQuota,
+    /// cgroup io.max throttle (apply or lift).
+    IoThrottle,
+    /// NUMA CPU pin away from IRQ-heavy cores.
+    PinCpu,
+    /// Revert to the last-known-good configuration.
+    Rollback,
+    /// Post-validation persist of a committed change.
+    Persist,
+}
+
+impl DecisionKind {
+    /// The legacy audit-log string for this kind — byte-identical to the
+    /// pre-enum tags (they are embedded in `RunResult::fingerprint`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DecisionKind::Mig => "mig",
+            DecisionKind::Placement => "placement",
+            DecisionKind::Relax => "relax",
+            DecisionKind::MpsQuota => "mps_quota",
+            DecisionKind::IoThrottle => "io_throttle",
+            DecisionKind::PinCpu => "pin_cpu",
+            DecisionKind::Rollback => "rollback",
+            DecisionKind::Persist => "persist",
+        }
+    }
+
+    /// One-character overlay marker for the ASCII timeline report.
+    pub fn marker(self) -> char {
+        match self {
+            DecisionKind::Mig => 'M',
+            DecisionKind::Placement => 'P',
+            DecisionKind::Relax => 'x',
+            DecisionKind::MpsQuota => 'Q',
+            DecisionKind::IoThrottle => 'T',
+            DecisionKind::PinCpu => 'C',
+            DecisionKind::Rollback => 'R',
+            DecisionKind::Persist => 'S',
+        }
+    }
+}
+
+impl std::fmt::Display for DecisionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Typed FSM edge an audit decision was recorded on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DecisionEdge {
+    /// Persistent violation fired and an action committed.
+    Trigger,
+    /// Sustained-stability relaxation committed.
+    Stable,
+    /// Proposal lost arbitration (never executed).
+    Defer,
+    /// Post-change validation window passed.
+    ValidateOk,
+    /// Post-change validation window failed (mandatory rollback).
+    ValidateFail,
+}
+
+impl DecisionEdge {
+    /// The legacy audit-log edge string ("trigger", "validate-ok", ...).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DecisionEdge::Trigger => "trigger",
+            DecisionEdge::Stable => "stable",
+            DecisionEdge::Defer => "defer",
+            DecisionEdge::ValidateOk => "validate-ok",
+            DecisionEdge::ValidateFail => "validate-fail",
+        }
+    }
+}
+
+impl std::fmt::Display for DecisionEdge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Controller FSM phase with sim-time extent (rendered as a begin/end
+/// span on the controller's trace lane).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CtlPhase {
+    /// Post-change validation window (§2.4).
+    Validating,
+    /// Grace period after a change persisted or rolled back.
+    Cooldown,
+}
+
+impl CtlPhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CtlPhase::Validating => "validating",
+            CtlPhase::Cooldown => "cooldown",
+        }
+    }
+}
+
+/// One typed, timestamped flight-recorder event. Fixed-size and `Copy`
+/// so the ring buffer never allocates per emit; naming/expansion happens
+/// only at export time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Per-Δ signal sample for one tenant (tails + attributed link GB/s).
+    TenantSignal {
+        tenant: u32,
+        p99_ms: f64,
+        miss_rate: f64,
+        gbps: f64,
+        completed: u64,
+    },
+    /// Per-Δ utilization/throughput sample for one shared link.
+    LinkSignal { link: u32, gbps: f64, utilization: f64 },
+    /// Per-Δ host-wide mean SM utilization across GPUs.
+    SmUtil { util: f64 },
+    /// One audit-log decision (every `AuditLog` entry becomes one of
+    /// these). `tenant` is the deciding controller's protected tenant.
+    Decision {
+        tenant: u32,
+        kind: DecisionKind,
+        edge: DecisionEdge,
+        p99_ms: f64,
+    },
+    /// Controller FSM phase span edge (validating / cooldown windows).
+    CtlSpan {
+        tenant: u32,
+        phase: CtlPhase,
+        begin: bool,
+    },
+    /// Guardrail actuation edge on the platform: `engaged` is the
+    /// own/tighten direction, `!engaged` the loosen/lift direction.
+    Guardrail {
+        target: u32,
+        kind: DecisionKind,
+        engaged: bool,
+    },
+    /// Cumulative arbitration counters at a sampling tick.
+    ArbCounters { conflicts: u64, deferrals: u64 },
+    /// Cumulative per-link PS rate-vector recompute count at a tick.
+    FabricSolves { recomputes: u64 },
+    /// A completion-calendar pop drained `flows` finished fabric flows.
+    FlowsDone { flows: u32 },
+    /// Conservative-sync window span edge for one shard. The `end`
+    /// edge carries the events this shard dispatched inside the window.
+    ShardWindow { shard: u32, events: u64, begin: bool },
+    /// Cumulative cross-shard deliveries at a window edge.
+    CrossShard { total: u64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_kind_strings_match_legacy_audit_tags() {
+        // These strings are embedded in RunResult::fingerprint via the
+        // timeline — they must never drift.
+        let expect = [
+            (DecisionKind::Mig, "mig"),
+            (DecisionKind::Placement, "placement"),
+            (DecisionKind::Relax, "relax"),
+            (DecisionKind::MpsQuota, "mps_quota"),
+            (DecisionKind::IoThrottle, "io_throttle"),
+            (DecisionKind::PinCpu, "pin_cpu"),
+            (DecisionKind::Rollback, "rollback"),
+            (DecisionKind::Persist, "persist"),
+        ];
+        for (kind, s) in expect {
+            assert_eq!(kind.as_str(), s);
+            assert_eq!(kind.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn decision_edge_strings_match_legacy_audit_tags() {
+        let expect = [
+            (DecisionEdge::Trigger, "trigger"),
+            (DecisionEdge::Stable, "stable"),
+            (DecisionEdge::Defer, "defer"),
+            (DecisionEdge::ValidateOk, "validate-ok"),
+            (DecisionEdge::ValidateFail, "validate-fail"),
+        ];
+        for (edge, s) in expect {
+            assert_eq!(edge.as_str(), s);
+        }
+    }
+
+    #[test]
+    fn trace_events_are_fixed_size_and_copy() {
+        // The ring preallocates `capacity * size_of::<(f64, TraceEvent)>`
+        // and never allocates per emit; a variant growing past this
+        // budget deserves a deliberate decision, not an accident.
+        assert!(std::mem::size_of::<(f64, TraceEvent)>() <= 56);
+        let e = TraceEvent::SmUtil { util: 0.5 };
+        let f = e; // Copy
+        assert_eq!(e, f);
+    }
+}

@@ -1,0 +1,125 @@
+//! The preallocated ring buffer behind the flight recorder.
+//!
+//! Capacity is fixed at construction; when the ring is full the oldest
+//! event is overwritten and [`MetricsRegistry::dropped_events`] counts
+//! the loss. `emit` never allocates — the non-perturbation story needs
+//! the recorder to be cheap, and the zero-cost-when-disabled story
+//! (`Option<Recorder>` at each emit site) needs it to be absent.
+
+use super::metrics::MetricsRegistry;
+use super::TraceEvent;
+
+/// Default ring capacity: ~256k events (≲ 14 MB), comfortably above a
+/// catalog run's signal + decision + window volume so CLI exports see
+/// the whole run; sweeps that overflow drop oldest-first and report it.
+pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
+/// Flight recorder: a preallocated `(t, event)` ring plus the run's
+/// [`MetricsRegistry`].
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    buf: Vec<(f64, TraceEvent)>,
+    cap: usize,
+    /// Next write slot once the ring has wrapped.
+    head: usize,
+    pub metrics: MetricsRegistry,
+}
+
+impl Recorder {
+    /// Recorder with a preallocated ring of `capacity` events.
+    pub fn new(capacity: usize) -> Recorder {
+        let cap = capacity.max(1);
+        Recorder {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            metrics: MetricsRegistry::new(),
+        }
+    }
+
+    pub fn with_default_capacity() -> Recorder {
+        Recorder::new(DEFAULT_CAPACITY)
+    }
+
+    /// Append one event at sim-time `t`. O(1), allocation-free: below
+    /// capacity it writes into the preallocated tail, at capacity it
+    /// overwrites the oldest slot and counts the drop.
+    pub fn emit(&mut self, t: f64, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push((t, ev));
+        } else {
+            self.buf[self.head] = (t, ev);
+            self.head = (self.head + 1) % self.cap;
+            self.metrics.note_dropped(1);
+        }
+    }
+
+    /// Events currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Retained events in emit order (oldest surviving event first).
+    pub fn events(&self) -> Vec<(f64, TraceEvent)> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent::FlowsDone { flows: i as u32 }
+    }
+
+    #[test]
+    fn ring_drops_oldest_at_capacity_and_counts_them() {
+        let mut r = Recorder::new(4);
+        for i in 0..10u64 {
+            r.emit(i as f64, ev(i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.capacity(), 4);
+        // The 6 oldest events were overwritten, oldest first…
+        assert_eq!(r.metrics.dropped_events(), 6);
+        // …and the survivors are the newest 4, still in emit order.
+        let kept: Vec<f64> = r.events().iter().map(|(t, _)| *t).collect();
+        assert_eq!(kept, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(r.events()[0].1, ev(6));
+    }
+
+    #[test]
+    fn below_capacity_nothing_drops() {
+        let mut r = Recorder::with_default_capacity();
+        for i in 0..100u64 {
+            r.emit(i as f64, ev(i));
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.metrics.dropped_events(), 0);
+        let evs = r.events();
+        assert_eq!(evs.first().map(|(t, _)| *t), Some(0.0));
+        assert_eq!(evs.last().map(|(t, _)| *t), Some(99.0));
+    }
+
+    #[test]
+    fn emit_does_not_grow_the_preallocated_ring() {
+        let mut r = Recorder::new(8);
+        let cap_before = r.buf.capacity();
+        for i in 0..1000u64 {
+            r.emit(i as f64, ev(i));
+        }
+        assert_eq!(r.buf.capacity(), cap_before, "ring must never reallocate");
+    }
+}

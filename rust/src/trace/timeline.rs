@@ -1,0 +1,146 @@
+//! ASCII timeline for `predserve report --timeline`: per-tenant p99 vs
+//! SLO over sim time, with controller decisions overlaid.
+//!
+//! Each latency-sensitive tenant gets one row of `width` columns across
+//! `[0, horizon)`. A column shows the worst p99 sampled inside its time
+//! bucket, bucketed against the tenant's SLO — blank (no sample), `.`
+//! (≤ 0.75·SLO), `:` (≤ SLO), `#` (over SLO) — and committed controller
+//! decisions overwrite the bucket with their [`DecisionKind::marker`]
+//! character, so a `#…#M:…` run reads as "violated until the MIG resize
+//! landed".
+
+use super::{DecisionEdge, TraceEvent};
+
+/// One rendered row: a tenant's display name, SLO target, and trace id.
+#[derive(Clone, Debug)]
+pub struct TimelineRow {
+    pub name: String,
+    pub slo_ms: f64,
+    pub tenant: u32,
+}
+
+/// Render the timeline. Rows render in the order given; tenants without
+/// a finite SLO should be filtered out by the caller (best-effort rows
+/// would always be blank-vs-∞).
+pub fn render_timeline(
+    events: &[(f64, TraceEvent)],
+    rows: &[TimelineRow],
+    horizon_s: f64,
+    width: usize,
+) -> String {
+    let width = width.max(10);
+    let horizon = if horizon_s > 0.0 { horizon_s } else { 1.0 };
+    let bucket_of = |t: f64| (((t / horizon) * width as f64) as usize).min(width - 1);
+    let name_w = rows.iter().map(|r| r.name.len()).max().unwrap_or(6).max(6);
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "timeline: {width} cols x {horizon:.0}s ({:.2}s/col); '.' <=0.75*SLO  ':' <=SLO  '#' over  letters = decisions (M mig, P placement, x relax, Q mps, T io, C cpu-pin, R rollback, S persist)\n",
+        horizon / width as f64
+    ));
+    for row in rows {
+        // Pass 1: worst p99 per bucket.
+        let mut worst: Vec<Option<f64>> = vec![None; width];
+        for &(t, ev) in events {
+            if let TraceEvent::TenantSignal { tenant, p99_ms, .. } = ev {
+                if tenant == row.tenant {
+                    let b = bucket_of(t);
+                    worst[b] = Some(worst[b].map_or(p99_ms, |w: f64| w.max(p99_ms)));
+                }
+            }
+        }
+        let mut cells: Vec<char> = worst
+            .iter()
+            .map(|w| match w {
+                None => ' ',
+                Some(p) if *p <= 0.75 * row.slo_ms => '.',
+                Some(p) if *p <= row.slo_ms => ':',
+                Some(_) => '#',
+            })
+            .collect();
+        // Pass 2: committed decisions overwrite their bucket.
+        for &(t, ev) in events {
+            if let TraceEvent::Decision {
+                tenant, kind, edge, ..
+            } = ev
+            {
+                if tenant == row.tenant && edge != DecisionEdge::Defer {
+                    cells[bucket_of(t)] = kind.marker();
+                }
+            }
+        }
+        let line: String = cells.into_iter().collect();
+        out.push_str(&format!("{:>name_w$} |{line}| slo {:.1}ms\n", row.name, row.slo_ms));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::DecisionKind;
+
+    fn sig(t: f64, tenant: u32, p99: f64) -> (f64, TraceEvent) {
+        (
+            t,
+            TraceEvent::TenantSignal {
+                tenant,
+                p99_ms: p99,
+                miss_rate: 0.0,
+                gbps: 0.0,
+                completed: 0,
+            },
+        )
+    }
+
+    #[test]
+    fn buckets_severity_and_overlays_decisions() {
+        let events = vec![
+            sig(1.0, 0, 5.0),   // well under the 20ms SLO → '.'
+            sig(31.0, 0, 18.0), // between 0.75*SLO and SLO → ':'
+            sig(61.0, 0, 40.0), // violated → '#'
+            (
+                91.0,
+                TraceEvent::Decision {
+                    tenant: 0,
+                    kind: DecisionKind::Mig,
+                    edge: DecisionEdge::Trigger,
+                    p99_ms: 40.0,
+                },
+            ),
+            (
+                95.0,
+                TraceEvent::Decision {
+                    tenant: 0,
+                    kind: DecisionKind::Placement,
+                    edge: DecisionEdge::Defer, // deferred → not drawn
+                    p99_ms: 40.0,
+                },
+            ),
+        ];
+        let rows = [TimelineRow {
+            name: "llm".to_string(),
+            slo_ms: 20.0,
+            tenant: 0,
+        }];
+        let out = render_timeline(&events, &rows, 100.0, 10);
+        let row_line = out.lines().nth(1).unwrap();
+        let cells: &str = row_line.split('|').nth(1).unwrap();
+        assert_eq!(cells, ".  :  #  M");
+        assert!(row_line.contains("slo 20.0ms"));
+        assert!(!cells.contains('P'), "deferred decisions must not render");
+    }
+
+    #[test]
+    fn events_at_horizon_land_in_last_bucket() {
+        let events = vec![sig(100.0, 0, 100.0)];
+        let rows = [TimelineRow {
+            name: "t".to_string(),
+            slo_ms: 10.0,
+            tenant: 0,
+        }];
+        let out = render_timeline(&events, &rows, 100.0, 10);
+        let cells = out.lines().nth(1).unwrap().split('|').nth(1).unwrap();
+        assert_eq!(cells.chars().last(), Some('#'));
+    }
+}

@@ -513,6 +513,75 @@ fn report_tables_render_with_paper_columns() {
 }
 
 #[test]
+fn flight_recorder_captures_signals_decisions_and_shard_windows() {
+    // The trace-smoke acceptance shape, in-process: a recorded
+    // hotspot_64 run on 4 shards must carry tenant signal series,
+    // controller decision events, and per-shard sync-window spans, and
+    // both exports must be well-formed (Chrome JSON with balanced span
+    // edges; JSONL with one tagged object per line).
+    use predserve::trace::{chrome_trace, jsonl, TraceEvent};
+    let mut s = Scenario::by_name("hotspot_64", 19, Levers::full()).unwrap();
+    s.horizon = 180.0;
+    s.shards = 4;
+    let mut w = SimWorld::new(s);
+    w.enable_recording(predserve::trace::recorder::DEFAULT_CAPACITY);
+    let (r, rec) = w.run_recorded();
+    let rec = rec.expect("recording was enabled");
+    let events = rec.events();
+    let has = |f: &dyn Fn(&TraceEvent) -> bool| events.iter().any(|(_, e)| f(e));
+    assert!(
+        has(&|e| matches!(e, TraceEvent::TenantSignal { .. })),
+        "no tenant signal series"
+    );
+    assert!(
+        has(&|e| matches!(e, TraceEvent::Decision { .. })),
+        "no controller decision events"
+    );
+    assert!(
+        has(&|e| matches!(e, TraceEvent::ShardWindow { .. })),
+        "no per-shard sync-window spans"
+    );
+    assert!(
+        has(&|e| matches!(e, TraceEvent::LinkSignal { .. })),
+        "no link signal series"
+    );
+    // The registry snapshot folded into the result: sorted, and carrying
+    // the sample/event/per-shard counters.
+    assert!(
+        r.metrics.windows(2).all(|w| w[0].0 < w[1].0),
+        "metrics snapshot not sorted by name"
+    );
+    let get = |k: &str| r.metrics.iter().find(|(n, _)| n == k).map(|&(_, v)| v);
+    assert!(get("trace.signal_samples").unwrap_or(0.0) > 0.0);
+    assert!(get("sim.events").unwrap_or(0.0) > 0.0);
+    assert!(get("shard0.events").is_some(), "no per-shard metrics");
+    assert!(get("engine.sync_windows").unwrap_or(0.0) > 0.0);
+    // Chrome export: valid JSON, thread metadata, counters, balanced
+    // B/E span edges (the loader rejects unbalanced stacks).
+    let names: Vec<String> = r.per_tenant.iter().map(|t| t.name.clone()).collect();
+    let chrome = chrome_trace(&events, &names, r.horizon_s).to_string();
+    let doc = Json::parse(&chrome).expect("chrome trace must be valid JSON");
+    let evs = doc.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!evs.is_empty());
+    let ph = |p: &str| {
+        evs.iter()
+            .filter(|e| e.get("ph").as_str() == Some(p))
+            .count()
+    };
+    assert!(ph("C") > 0, "no counter samples");
+    assert!(ph("M") > 0, "no thread-name metadata");
+    assert!(ph("B") > 0, "no span begins");
+    assert_eq!(ph("B"), ph("E"), "unbalanced span edges");
+    // JSONL export: every line is one tagged object.
+    let lines = jsonl(&events);
+    for line in lines.lines().take(50) {
+        let o = Json::parse(line).expect("jsonl line parses");
+        assert!(o.get("t").as_f64().is_some(), "jsonl line missing t");
+        assert!(o.get("event").as_str().is_some(), "jsonl line missing tag");
+    }
+}
+
+#[test]
 fn rollback_restores_on_regression() {
     // Force a pathological placement weight so the first move is bad:
     // with validation enabled the controller must roll back rather than

@@ -1193,6 +1193,98 @@ fn catalog_fingerprints_pinned_across_engine_sharding() {
     }
 }
 
+// --- flight recorder non-perturbation ----------------------------------------
+
+#[test]
+fn prop_recording_does_not_perturb_fingerprints() {
+    // The flight recorder's contract: attaching it is pure observation.
+    // For arbitrary generated scenarios at 1 and 4 shards the run
+    // fingerprint is byte-identical with recording on and off — and the
+    // recorded run actually captured events and folded a metrics
+    // snapshot (an empty trace would make the equality vacuous).
+    use predserve::trace::recorder::DEFAULT_CAPACITY;
+    check(
+        Config { cases: 8, seed: 0x60 },
+        "recording non-perturbation",
+        gen_scenario,
+        |spec| {
+            let lv = levers_of(spec.levers);
+            for shards in [1usize, 4] {
+                let mk = || {
+                    let mut s = build_gen(spec, lv);
+                    s.shards = shards;
+                    s
+                };
+                let plain = SimWorld::new(mk()).run();
+                let mut w = SimWorld::new(mk());
+                w.enable_recording(DEFAULT_CAPACITY);
+                let (recorded, rec) = w.run_recorded();
+                if plain.fingerprint() != recorded.fingerprint() {
+                    return Err(format!(
+                        "{shards} shards: recording perturbed the run:\n  {}\n  {}",
+                        plain.fingerprint(),
+                        recorded.fingerprint()
+                    ));
+                }
+                if plain.sim_events != recorded.sim_events {
+                    return Err(format!(
+                        "{shards} shards: event counts {} vs {} under recording",
+                        plain.sim_events, recorded.sim_events
+                    ));
+                }
+                let rec = rec.ok_or("recorded run returned no recorder")?;
+                if rec.is_empty() {
+                    return Err(format!("{shards} shards: recorder captured nothing"));
+                }
+                if recorded.metrics.is_empty() {
+                    return Err(format!("{shards} shards: no metrics snapshot"));
+                }
+                if !plain.metrics.is_empty() {
+                    return Err("unrecorded run carries metrics".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn catalog_fingerprints_unchanged_by_recording() {
+    // Regression for the flight-recorder integration: every catalog
+    // scenario (plus the steady_contention_off variant) keeps a
+    // byte-identical fingerprint with the recorder attached, on both the
+    // single-queue and the 4-shard engine.
+    let mut names: Vec<&str> = Scenario::CATALOG.to_vec();
+    names.push("steady_contention_off");
+    for name in names {
+        for shards in [1usize, 4] {
+            let mk = || {
+                let mut s = Scenario::by_name(name, 31, Levers::full()).unwrap();
+                s.horizon = 60.0;
+                s.shards = shards;
+                s
+            };
+            let plain = SimWorld::new(mk()).run();
+            let mut w = SimWorld::new(mk());
+            w.enable_recording(predserve::trace::recorder::DEFAULT_CAPACITY);
+            let (recorded, rec) = w.run_recorded();
+            assert_eq!(
+                plain.fingerprint(),
+                recorded.fingerprint(),
+                "{name}/{shards} shards: recording changed observable behavior"
+            );
+            assert_eq!(
+                plain.sim_events, recorded.sim_events,
+                "{name}/{shards} shards: recording changed the event stream"
+            );
+            assert!(
+                !rec.expect("recorder returned").is_empty(),
+                "{name}/{shards} shards: recorder captured nothing"
+            );
+        }
+    }
+}
+
 // --- cross-estimator quantile convention -------------------------------------
 
 #[test]

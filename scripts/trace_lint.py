@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event file produced by `predserve trace-export`.
+
+Usage: trace_lint.py run.trace.json
+
+Checks (each fatal):
+  * valid JSON with a non-empty `traceEvents` array;
+  * per (pid, tid) lane, timestamps are non-decreasing (metadata "M"
+    records are exempt — they carry no meaningful ts);
+  * "B"/"E" span edges are stack-matched within every lane;
+  * the trace carries at least one tenant counter series (tid >= 100),
+    one controller-lane event (tid >= 1100), and one shard sync-window
+    span (tid >= 2100) — the three layers the flight recorder promises.
+"""
+import json
+import sys
+
+TENANT, CTL, SHARD = 100, 1100, 2100
+
+
+def fail(msg):
+    print(f"trace_lint: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main(path):
+    with open(path) as f:
+        events = json.load(f)["traceEvents"]
+    if not events:
+        fail("traceEvents is empty")
+    last_ts, stacks = {}, {}
+    seen_tenant_counter = seen_ctl = seen_shard_span = False
+    for i, e in enumerate(events):
+        ph, tid = e["ph"], e["tid"]
+        if ph == "M":
+            continue
+        lane = (e["pid"], tid)
+        if e["ts"] < last_ts.get(lane, float("-inf")):
+            fail(f"event {i}: ts {e['ts']} went backwards on lane {lane}")
+        last_ts[lane] = e["ts"]
+        if ph == "B":
+            stacks.setdefault(lane, []).append(e["name"])
+        elif ph == "E":
+            if not stacks.get(lane):
+                fail(f"event {i}: span end with empty stack on lane {lane}")
+            stacks[lane].pop()
+        seen_tenant_counter |= ph == "C" and TENANT <= tid < CTL
+        seen_ctl |= CTL <= tid < SHARD
+        seen_shard_span |= ph == "B" and tid >= SHARD
+    dangling = {lane: s for lane, s in stacks.items() if s}
+    if dangling:
+        fail(f"unclosed spans at end of trace: {dangling}")
+    if not seen_tenant_counter:
+        fail("no tenant signal counter series (tid >= 100)")
+    if not seen_ctl:
+        fail("no controller-lane events (tid >= 1100)")
+    if not seen_shard_span:
+        fail("no shard sync-window spans (tid >= 2100)")
+    print(f"trace_lint: OK: {len(events)} events, {len(last_ts)} lanes")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])
