@@ -230,6 +230,7 @@ impl HostAllocator {
             .map(|c| TenantSignal {
                 tenant: TenantId(c.index),
                 tails: TailStats::default(),
+                ttft: None,
                 pcie_gbps: c.pcie_gbps,
                 block_io_gbps: if c.kind == TenantKind::BandwidthHeavy {
                     c.pcie_gbps * 0.5

@@ -415,6 +415,7 @@ mod tests {
                 completed: 240,
                 rps: 120.0,
             },
+            ttft: None,
             pcie_gbps: 0.5,
             block_io_gbps: 0.0,
             active: true,

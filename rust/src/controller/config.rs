@@ -67,6 +67,20 @@ impl Levers {
     }
 }
 
+/// Which latency signal the FSM compares against τ.
+///
+/// `E2e` is the historical behavior (window p99 of end-to-end request
+/// latency). `Ttft` targets the time-to-first-token tail of a
+/// request-granularity LLM tenant (`TenantSignal::ttft`), falling back
+/// to e2e tails for tenants that don't report TTFT; the throughput
+/// guard always stays on the e2e window.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SloKind {
+    #[default]
+    E2e,
+    Ttft,
+}
+
 /// Table 1: Key Controller Parameters (plus the implementation-note knobs
 /// of §2.4).
 #[derive(Clone, Debug)]
@@ -113,6 +127,9 @@ pub struct ControllerConfig {
     /// Admission (§2.3): link utilization ceiling after adding a
     /// newcomer's expected traffic (fraction of link capacity).
     pub link_headroom: f64,
+    /// Latency signal compared against τ ([`SloKind::E2e`] keeps the
+    /// historical behavior byte-for-byte).
+    pub objective: SloKind,
 }
 
 impl Default for ControllerConfig {
@@ -137,6 +154,7 @@ impl Default for ControllerConfig {
             placement_margin: 0.25,
             safe_score: 1.5,
             link_headroom: 0.85,
+            objective: SloKind::E2e,
         }
     }
 }

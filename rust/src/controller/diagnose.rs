@@ -155,6 +155,7 @@ mod tests {
                 TenantSignal {
                     tenant: T1,
                     tails: TailStats::default(),
+                    ttft: None,
                     pcie_gbps: 0.5,
                     block_io_gbps: 0.1,
                     active: true,
@@ -162,6 +163,7 @@ mod tests {
                 TenantSignal {
                     tenant: T2,
                     tails: TailStats::default(),
+                    ttft: None,
                     pcie_gbps: t2_pcie,
                     block_io_gbps: t2_io,
                     active: t2_pcie > 0.0,
@@ -169,6 +171,7 @@ mod tests {
                 TenantSignal {
                     tenant: T3,
                     tails: TailStats::default(),
+                    ttft: None,
                     pcie_gbps: 0.05,
                     block_io_gbps: 0.0,
                     active: t3_active,

@@ -33,7 +33,7 @@ use crate::util::ewma::Persistence;
 
 use super::actions::{Action, IsolationChange};
 use super::audit::{AuditLog, Decision};
-use super::config::ControllerConfig;
+use super::config::{ControllerConfig, SloKind};
 use super::diagnose::{diagnose, Cause};
 use super::guardrails;
 use super::placement::{self, ScoreWeights};
@@ -204,10 +204,18 @@ impl Controller {
     pub fn evaluate(&mut self, snap: &SignalSnapshot, view: &PlannerView) -> Option<Proposal> {
         self.obs += 1;
         let t1sig = snap.tenant(self.primary)?;
-        let p99 = t1sig.tails.p99_ms;
+        // The objective tail: TTFT for request-granularity LLM tenants
+        // under `SloKind::Ttft` (falling back to e2e tails when the
+        // tenant reports none), e2e otherwise. The throughput-budget
+        // check always stays on the e2e window.
+        let obj = match self.cfg.objective {
+            SloKind::Ttft => t1sig.ttft.as_ref().unwrap_or(&t1sig.tails),
+            SloKind::E2e => &t1sig.tails,
+        };
+        let p99 = obj.p99_ms;
         let ratio = p99 / self.cfg.tau_ms;
-        let triggered = self.persistence.observe(p99) && t1sig.tails.completed > 0;
-        if p99 <= self.cfg.tau_ms * self.cfg.relax_frac && t1sig.tails.completed > 0 {
+        let triggered = self.persistence.observe(p99) && obj.completed > 0;
+        if p99 <= self.cfg.tau_ms * self.cfg.relax_frac && obj.completed > 0 {
             self.stable_streak += 1;
         } else {
             self.stable_streak = 0;
@@ -217,7 +225,7 @@ impl Controller {
         match self.state {
             CtlState::Validating { started_obs, prev_p99 } => {
                 if self.obs - started_obs >= self.cfg.validation_obs {
-                    if p99 > prev_p99 * 1.02 && t1sig.tails.completed > 0 {
+                    if p99 > prev_p99 * 1.02 && obj.completed > 0 {
                         // Post-change p99 worsened: roll back (§2.4). The
                         // FSM edge is taken here — a rollback is mandatory
                         // and never arbitrated away.
@@ -302,7 +310,7 @@ impl Controller {
             // problem (window miss-rate above 2%): a p99 hovering a hair
             // over τ is not worth a pause, and this is what keeps the
             // Table-4 move budget under 5/hour.
-            let material = t1sig.tails.miss_rate > self.cfg.material_miss;
+            let material = obj.miss_rate > self.cfg.material_miss;
             if self.dwell_ok() && material {
                 if let Some(act) = self.plan_isolation_upgrade(cause, snap, view) {
                     return Some(Proposal {
@@ -652,6 +660,7 @@ mod tests {
                         completed: 240,
                         rps: 120.0,
                     },
+                    ttft: None,
                     pcie_gbps: 0.5,
                     block_io_gbps: 0.1,
                     active: true,
@@ -659,6 +668,7 @@ mod tests {
                 TenantSignal {
                     tenant: T2,
                     tails: TailStats::default(),
+                    ttft: None,
                     pcie_gbps: if t2_active { 8.0 } else { 0.0 },
                     block_io_gbps: if t2_active { 2.0 } else { 0.0 },
                     active: t2_active,
@@ -666,6 +676,7 @@ mod tests {
                 TenantSignal {
                     tenant: T3,
                     tails: TailStats::default(),
+                    ttft: None,
                     pcie_gbps: 0.05,
                     block_io_gbps: 0.0,
                     active: t3_active,

@@ -53,6 +53,7 @@ mod tests {
             tenants: vec![TenantSignal {
                 tenant: T2,
                 tails: TailStats::default(),
+                ttft: None,
                 pcie_gbps: t2_gbps,
                 block_io_gbps: 0.0,
                 active: true,

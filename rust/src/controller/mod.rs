@@ -40,6 +40,6 @@ pub mod admission;
 pub use actions::{Action, IsolationChange};
 pub use arbiter::{ArbStats, Arbiter, Protected};
 pub use audit::{AuditLog, Decision};
-pub use config::{ControllerConfig, Levers};
+pub use config::{ControllerConfig, Levers, SloKind};
 pub use fsm::{Controller, CtlState, Proposal, ProposalClass};
 pub use view::{InstanceView, PlannerView, TenantView};

@@ -209,6 +209,7 @@ mod tests {
                 TenantSignal {
                     tenant: T1,
                     tails: TailStats::default(),
+                    ttft: None,
                     pcie_gbps: 0.4,
                     block_io_gbps: 0.0,
                     active: true,
@@ -216,6 +217,7 @@ mod tests {
                 TenantSignal {
                     tenant: T2,
                     tails: TailStats::default(),
+                    ttft: None,
                     pcie_gbps: t2_pcie,
                     block_io_gbps: numa0_io,
                     active: true,

@@ -33,7 +33,7 @@ use predserve::platform::{RunResult, Scenario, SimWorld};
 use predserve::serving::request::SamplingParams;
 use predserve::serving::Engine;
 
-const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|trace-export|report|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--shards N] [--config FILE] [--arrivals-trace FILE] [--record-trace FILE] [--out FILE] [--timeline] [--width N] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
+const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|trace-export|report|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--shards N] [--llm] [--config FILE] [--arrivals-trace FILE] [--record-trace FILE] [--out FILE] [--timeline] [--width N] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
 
 /// Resolve a catalog scenario from the shared CLI knobs (--scenario,
 /// --seed, --levers, --config, --horizon, --shards).
@@ -163,6 +163,20 @@ fn main() -> Result<()> {
                     .expect("primary tenant must be latency-sensitive")
                     .arrivals = Some(ArrivalProcess::Trace(trace));
             }
+            if args.flag("llm") {
+                // Serve the primary at request granularity: attach the
+                // default chat workload unless the scenario already
+                // carries one (llm_serving_mix / llm_burst_ttft do).
+                use predserve::tenants::LlmWorkloadSpec;
+                let primary = scenario.primary;
+                let ls = scenario.tenants[primary]
+                    .spec
+                    .as_ls_mut()
+                    .expect("primary tenant must be latency-sensitive");
+                if ls.llm.is_none() {
+                    ls.llm = Some(LlmWorkloadSpec::chat_7b());
+                }
+            }
             scenario.horizon = args.get_f64("horizon", scenario.horizon);
             scenario.shards = args.get_usize("shards", scenario.shards).max(1);
             let record_path = args.get("record-trace").map(str::to_string);
@@ -211,6 +225,15 @@ fn main() -> Result<()> {
                     t.rps,
                     t.gb_moved
                 );
+                if let (Some(ttft), Some(tpot)) = (t.ttft_p99, t.tpot_p99) {
+                    println!(
+                        "  {:16} llm serving: ttft_p99={:.1} ms tpot_p99={:.2} ms ttft_slo_miss={:.1}%",
+                        "",
+                        ttft,
+                        tpot,
+                        t.ttft_slo_miss_rate.unwrap_or(0.0) * 100.0
+                    );
+                }
             }
             for t in &r.per_tenant {
                 if let Some(ts) = t.trace_exhausted_at {

@@ -33,6 +33,19 @@ pub struct TenantRunStats {
     /// ended first). Excluded from the fingerprint like
     /// `arrivals_emitted`.
     pub trace_exhausted_at: Option<f64>,
+    /// Lifetime p99 time-to-first-token (ms) for tenants serving LLM
+    /// requests through the request-granularity engine (`LsSpec::llm`);
+    /// `None` for every other tenant. Deterministic, but excluded from
+    /// `RunResult::fingerprint` so pre-LLM fingerprints stay
+    /// byte-identical.
+    pub ttft_p99: Option<f64>,
+    /// Lifetime p99 time-per-output-token (ms); `None` unless serving
+    /// LLM requests. Excluded from the fingerprint like `ttft_p99`.
+    pub tpot_p99: Option<f64>,
+    /// Lifetime fraction of requests whose TTFT exceeded the workload's
+    /// `ttft_slo_ms`; `None` unless serving LLM requests. Excluded from
+    /// the fingerprint like `ttft_p99`.
+    pub ttft_slo_miss_rate: Option<f64>,
 }
 
 /// Per-controller statistics for one protected latency-sensitive tenant

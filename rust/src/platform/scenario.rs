@@ -14,11 +14,11 @@
 //! workload RNG streams.
 
 use crate::alloc::{AllocPlan, AutoRequest, HostAllocator, PlanEntry, SlotOutcome};
-use crate::controller::{ControllerConfig, Levers};
+use crate::controller::{ControllerConfig, Levers, SloKind};
 use crate::gpu::MigProfile;
 use crate::tenants::{
-    ArrivalProcess, BwSpec, CompSpec, Envelope, InterferenceSchedule, LsSpec, PlacementSpec,
-    TenantKind, TenantWorkload, TraceSpec, WorkloadSpec,
+    ArrivalProcess, BwSpec, CompSpec, Envelope, InterferenceSchedule, LlmWorkloadSpec, LsSpec,
+    PlacementSpec, TenantKind, TenantWorkload, TraceSpec, WorkloadSpec,
 };
 use crate::topo::HostTopology;
 use crate::util::rng::Pcg64;
@@ -180,7 +180,7 @@ impl Scenario {
     // --- named catalog ----------------------------------------------------
 
     /// Catalog names accepted by [`Scenario::by_name`].
-    pub const CATALOG: [&'static str; 11] = [
+    pub const CATALOG: [&'static str; 13] = [
         "paper_single_host",
         "paper_llm_case",
         "steady_contention",
@@ -192,6 +192,8 @@ impl Scenario {
         "hotspot_64",
         "trace_burst_32",
         "diurnal_trace_mix",
+        "llm_serving_mix",
+        "llm_burst_ttft",
     ];
 
     /// Look a scenario up by catalog name ("single" and "llm" are accepted
@@ -214,6 +216,8 @@ impl Scenario {
             "hotspot_64" => Scenario::hotspot_64(seed, levers),
             "trace_burst_32" => Scenario::trace_burst_32(seed, levers),
             "diurnal_trace_mix" => Scenario::diurnal_trace_mix(seed, levers),
+            "llm_serving_mix" => Scenario::llm_serving_mix(seed, levers),
+            "llm_burst_ttft" => Scenario::llm_burst_ttft(seed, levers),
             _ => return None,
         })
     }
@@ -836,6 +840,109 @@ impl Scenario {
             .spare(1, MigProfile::P3g40gb, 0)
             .build()
     }
+
+    /// Request-granularity LLM serving under the paper's interference
+    /// mix: the primary is a chat service whose arrivals flow through
+    /// the simulated continuous-batching engine
+    /// ([`crate::tenants::LlmWorkloadSpec`], `chat_7b` lengths) instead
+    /// of the flat latency sample, co-located with the §3.1 ETL and
+    /// MPS-shared trainer. Reports per-request TTFT/TPOT tails alongside
+    /// the legacy end-to-end metrics; the controller stays on the
+    /// end-to-end objective (τ = the e2e SLO).
+    pub fn llm_serving_mix(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        let (etl_schedule, train_schedule) = Scenario::paper_interference_schedules(seed, horizon);
+        // ~1.5 req/s against a ~4-6 req/s continuous-batching capacity on
+        // the 4g slice: loaded enough for queueing and KV pressure to
+        // show in TTFT, light enough that bursts drain. The e2e SLO is a
+        // whole-request bound (prefill + ~100 decode steps), not 15 ms.
+        let ls = LsSpec {
+            arrival_rps: 1.5,
+            slo_ms: 5000.0,
+            ..LsSpec::default()
+        };
+        let mut s = ScenarioBuilder::new("llm_serving_mix", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .tenant(TenantWorkload::llm(
+                "chat-llm",
+                ls,
+                LlmWorkloadSpec::chat_7b(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl",
+                BwSpec::default(),
+                etl_schedule,
+                PlacementSpec::dedicated_at(0, MigProfile::P3g40gb, 4),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train",
+                CompSpec::default(),
+                train_schedule,
+                PlacementSpec::shared_with(0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build();
+        s.controller.tau_ms = 5000.0;
+        s
+    }
+
+    /// The TTFT-objective counterpart of [`Scenario::llm_serving_mix`]:
+    /// the chat service's arrivals ride a square burst envelope (mean
+    /// rate = base, bursts at ~2.5x) and the controller targets the
+    /// **TTFT** tail (`SloKind::Ttft`, τ = the workload's `ttft_slo_ms`)
+    /// instead of end-to-end latency — prefill queueing behind decode
+    /// waves and step-time inflation from the MPS trainer both land on
+    /// TTFT first, so this is where the new objective earns its keep.
+    pub fn llm_burst_ttft(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        let (etl_schedule, train_schedule) = Scenario::paper_interference_schedules(seed, horizon);
+        let llm = LlmWorkloadSpec::chat_7b();
+        let ttft_slo_ms = llm.ttft_slo_ms;
+        let ls = LsSpec {
+            arrival_rps: 1.2,
+            // duty 0.25 at 2.5x + 0.75 at 0.5x => mean 1.0x base_rps.
+            arrivals: Some(ArrivalProcess::Modulated {
+                base_rps: 1.2,
+                envelope: Envelope::Bursts {
+                    period_s: 240.0,
+                    duty: 0.25,
+                    high: 2.5,
+                    low: 0.5,
+                    phase_s: 0.0,
+                },
+            }),
+            slo_ms: 5000.0,
+            ..LsSpec::default()
+        };
+        let mut s = ScenarioBuilder::new("llm_burst_ttft", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .tenant(TenantWorkload::llm(
+                "chat-llm",
+                ls,
+                llm,
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl",
+                BwSpec::default(),
+                etl_schedule,
+                PlacementSpec::dedicated_at(0, MigProfile::P3g40gb, 4),
+            ))
+            .tenant(TenantWorkload::compute_heavy(
+                "train",
+                CompSpec::default(),
+                train_schedule,
+                PlacementSpec::shared_with(0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build();
+        s.controller.objective = SloKind::Ttft;
+        s.controller.tau_ms = ttft_slo_ms;
+        s
+    }
 }
 
 /// Composable scenario construction; see the README's "Defining a
@@ -1003,6 +1110,28 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach a request-granularity LLM serving model to latency-sensitive
+    /// tenant `tenant` (the chainable [`TenantWorkload::llm`] constructor
+    /// does the same at construction time): its arrivals route through the
+    /// simulated continuous-batching engine and the run reports TTFT/TPOT
+    /// tails for it. The spec is validated in `build()`.
+    pub fn llm(mut self, tenant: usize, spec: LlmWorkloadSpec) -> Self {
+        assert!(
+            tenant < self.tenants.len(),
+            "llm({tenant}) out of range ({} tenants added so far)",
+            self.tenants.len()
+        );
+        match self.tenants[tenant].spec.as_ls_mut() {
+            Some(ls) => ls.llm = Some(spec),
+            None => panic!(
+                "tenant {tenant} ('{}') is not latency-sensitive; the LLM \
+                 serving engine only drives latency-sensitive requests",
+                self.tenants[tenant].name
+            ),
+        }
+        self
+    }
+
     /// Pre-provision an idle spare instance.
     pub fn spare(mut self, gpu: usize, profile: MigProfile, start: usize) -> Self {
         self.spares.push((gpu, profile, start));
@@ -1060,6 +1189,15 @@ impl ScenarioBuilder {
             if let Some(p) = t.arrival_process() {
                 p.validate().unwrap_or_else(|e| {
                     panic!("tenant {i} ({}): invalid arrival process: {e}", t.name)
+                });
+            }
+        }
+        // Same deal for LLM workload specs: a bad token distribution or
+        // KV-cache geometry fails here, not as a mid-sim panic.
+        for (i, t) in self.tenants.iter().enumerate() {
+            if let Some(llm) = t.spec.as_ls().and_then(|ls| ls.llm.as_ref()) {
+                llm.validate().unwrap_or_else(|e| {
+                    panic!("tenant {i} ({}): invalid llm workload: {e}", t.name)
                 });
             }
         }
@@ -1713,6 +1851,96 @@ mod tests {
             traced.tenants[0].arrival_process(),
             again.tenants[0].arrival_process()
         );
+    }
+
+    #[test]
+    fn llm_serving_mix_shape() {
+        let s = Scenario::llm_serving_mix(7, Levers::full());
+        assert_eq!(s.n_tenants(), 3);
+        assert_eq!(s.primary, 0);
+        let spec = s.primary_spec();
+        let llm = spec.llm.as_ref().expect("primary carries an LLM workload");
+        assert!(llm.validate().is_ok());
+        assert_eq!(s.controller.objective, SloKind::E2e);
+        assert_eq!(s.controller.tau_ms, spec.slo_ms);
+        // Background tenants are the paper's mix, schedules seed-pinned.
+        assert_eq!(s.tenants[1].kind(), TenantKind::BandwidthHeavy);
+        assert_eq!(s.tenants[2].kind(), TenantKind::ComputeHeavy);
+        let b = Scenario::llm_serving_mix(7, Levers::none());
+        for (ta, tb) in s.tenants.iter().zip(&b.tenants) {
+            assert_eq!(ta.schedule.phases, tb.schedule.phases);
+        }
+    }
+
+    #[test]
+    fn llm_burst_ttft_targets_the_ttft_tail() {
+        let s = Scenario::llm_burst_ttft(7, Levers::full());
+        assert_eq!(s.n_tenants(), 3);
+        let spec = s.primary_spec();
+        let llm = spec.llm.as_ref().expect("primary carries an LLM workload");
+        assert_eq!(s.controller.objective, SloKind::Ttft);
+        assert_eq!(s.controller.tau_ms, llm.ttft_slo_ms);
+        // Bursty arrivals with a mean-preserving envelope.
+        match spec.arrival_process() {
+            ArrivalProcess::Modulated { base_rps, envelope } => {
+                assert_eq!(base_rps, 1.2);
+                match envelope {
+                    Envelope::Bursts { duty, high, low, .. } => {
+                        let mean = duty * high + (1.0 - duty) * low;
+                        assert!((mean - 1.0).abs() < 1e-12);
+                    }
+                    other => panic!("wrong envelope {other:?}"),
+                }
+            }
+            other => panic!("wrong process {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_llm_attaches_to_ls_tenants() {
+        let s = ScenarioBuilder::new("attach", 3)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .llm(0, LlmWorkloadSpec::fixed(256, 32))
+            .build();
+        let llm = s.primary_spec().llm.as_ref().unwrap();
+        assert_eq!(llm.prompt, crate::tenants::TokenDist::Fixed(256));
+    }
+
+    #[test]
+    #[should_panic(expected = "not latency-sensitive")]
+    fn builder_llm_rejects_background_tenants() {
+        let _ = ScenarioBuilder::new("bad-llm", 1)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl",
+                BwSpec::default(),
+                InterferenceSchedule::always_on(100.0),
+                PlacementSpec::dedicated_at(0, MigProfile::P3g40gb, 4),
+            ))
+            .llm(1, LlmWorkloadSpec::chat_7b());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid llm workload")]
+    fn build_rejects_bad_llm_spec_at_build_time() {
+        let mut bad = LlmWorkloadSpec::chat_7b();
+        bad.ttft_slo_ms = 0.0;
+        ScenarioBuilder::new("bad-llm-spec", 1)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .llm(0, bad)
+            .build();
     }
 
     #[test]

@@ -58,6 +58,10 @@ enum Purpose {
     CycleD2h { tenant: usize },
     /// Compute-heavy gradient sync.
     StepSync { tenant: usize },
+    /// LLM serving-step I/O (weight read + KV traffic) for a tenant with
+    /// an attached [`crate::tenants::LlmWorkloadSpec`]: the PCIe leg of
+    /// one prefill/decode wave. Compute overlaps after the flow drains.
+    LlmStepIo { tenant: usize },
 }
 
 /// Latency-sensitive request lifecycle state.
@@ -129,6 +133,10 @@ enum Event {
     Sample,
     PauseDone { tenant: usize },
     ThrottleExpire { tenant: usize, deadline_bits: u64 },
+    /// LLM serving-step compute finished (scheduled when the step's PCIe
+    /// I/O drains; only tenants with an attached `LlmWorkloadSpec` ever
+    /// see one).
+    LlmStepDone { tenant: usize },
 }
 
 /// Per-tenant runtime state for a latency-sensitive tenant.
@@ -153,6 +161,31 @@ struct LsRt {
     /// post-pause backlog drains from exploding the PS flow set).
     stage_pending: VecDeque<u64>,
     inflight_transfers: usize,
+    /// Request-granularity serving engine, present iff the tenant's
+    /// `LsSpec` carries an [`crate::tenants::LlmWorkloadSpec`]. `None`
+    /// keeps the flat staging→H2D→compute pipeline byte-identical to
+    /// every pre-LLM scenario (no extra RNG draws, no extra events).
+    llm: Option<Box<LlmRt>>,
+}
+
+/// Runtime state for a latency-sensitive tenant serving LLM requests
+/// through the real continuous-batching stack
+/// ([`crate::serving::SimServing`] = `Batcher` + `PagedKvCache` on
+/// simulated time). One step (prefill or decode wave) is in flight at a
+/// time: PCIe I/O (weights + KV traffic, contended on the fabric) then
+/// MIG-μ-scaled compute.
+#[derive(Clone, Debug)]
+struct LlmRt {
+    serving: crate::serving::SimServing,
+    /// A step's I/O or compute is currently in flight.
+    stepping: bool,
+    /// Compute duration of the in-flight step, drawn at step start so
+    /// the service-noise stream is consumed in step order.
+    step_compute_s: f64,
+    /// Time-to-first-token tail monitor (SLO = `ttft_slo_ms`).
+    ttft_monitor: TenantMonitor,
+    /// Time-per-output-token tail monitor (no SLO of its own).
+    tpot_monitor: TenantMonitor,
 }
 
 /// Per-tenant runtime state for a bandwidth-heavy tenant.
@@ -242,7 +275,8 @@ impl WorldQueue {
                     | Event::StepDone { tenant }
                     | Event::Toggle { tenant }
                     | Event::PauseDone { tenant }
-                    | Event::ThrottleExpire { tenant, .. } => map.shard_of(tenant),
+                    | Event::ThrottleExpire { tenant, .. }
+                    | Event::LlmStepDone { tenant } => map.shard_of(tenant),
                     // Host-global events — the arbiter's sampling tick
                     // and fabric completions (the PS uplink solve spans
                     // switch subtrees) — live on the coordinator shard.
@@ -443,6 +477,15 @@ impl SimWorld {
             let base = stream_base(i, t.kind());
             match &t.spec {
                 WorkloadSpec::LatencySensitive(spec) => {
+                    let llm = spec.llm.as_ref().map(|l| {
+                        Box::new(LlmRt {
+                            serving: crate::serving::SimServing::new(l.clone()),
+                            stepping: false,
+                            step_compute_s: 0.0,
+                            ttft_monitor: TenantMonitor::new(l.ttft_slo_ms, 4096),
+                            tpot_monitor: TenantMonitor::new(f64::MAX, 4096),
+                        })
+                    });
                     rt.push(TenantRt::Ls(LsRt {
                         arrival: ArrivalState::new(spec.arrival_process()),
                         arrival_rng: Pcg64::new(seed, base),
@@ -456,6 +499,7 @@ impl SimWorld {
                         pause_backlog: Vec::new(),
                         stage_pending: VecDeque::new(),
                         inflight_transfers: 0,
+                        llm,
                     }));
                     monitors.push(TenantMonitor::new(spec.slo_ms, 4096));
                 }
@@ -496,9 +540,15 @@ impl SimWorld {
                     .enumerate()
                     .filter_map(|(i, t)| {
                         let spec = t.spec.as_ls()?;
+                        // Under a TTFT objective an LLM secondary is
+                        // judged against its TTFT SLO, not the e2e one.
+                        let tau = match (scenario.controller.objective, &spec.llm) {
+                            (crate::controller::SloKind::Ttft, Some(l)) => l.ttft_slo_ms,
+                            _ => spec.slo_ms,
+                        };
                         Some(Protected {
                             tenant: TenantId(i),
-                            tau_ms: (i != scenario.primary).then_some(spec.slo_ms),
+                            tau_ms: (i != scenario.primary).then_some(tau),
                             base_rps: spec.arrival_rps,
                         })
                     })
@@ -727,29 +777,53 @@ impl SimWorld {
             self.q.push_at(now + gap, Event::Arrival { tenant: i });
         }
 
-        let (id, paused) = {
+        let flat = {
             let (spec, ls) = self.ls_parts(i);
             ls.arrival.note_emitted();
             let id = ls.next_req;
             ls.next_req += 1;
-            let r = spec.sample(&mut ls.size_rng, id, now);
-            ls.reqs.insert(
-                id,
-                ReqState {
-                    arrival: now,
-                    stage_gb: r.host_stage_gb,
-                    h2d_gb: r.h2d_gb,
-                    compute_ref_ms: r.compute_ref_ms,
-                    phase: ReqPhase::Staging,
-                },
-            );
-            if ls.paused {
-                ls.pause_backlog.push(id);
+            if let Some(lspec) = &spec.llm {
+                // LLM tenant: the request enters the serving engine's
+                // waiting queue (KV-page-gated admission) instead of the
+                // flat staging→H2D→compute pipeline. Token dims come off
+                // the same size stream the flat sampler would use.
+                let dims = lspec.sample_dims(&mut ls.size_rng);
+                ls.llm
+                    .as_mut()
+                    .expect("LlmRt exists iff spec.llm is set")
+                    .serving
+                    .submit(id, dims, now);
+                None
+            } else {
+                let r = spec.sample(&mut ls.size_rng, id, now);
+                ls.reqs.insert(
+                    id,
+                    ReqState {
+                        arrival: now,
+                        stage_gb: r.host_stage_gb,
+                        h2d_gb: r.h2d_gb,
+                        compute_ref_ms: r.compute_ref_ms,
+                        phase: ReqPhase::Staging,
+                    },
+                );
+                if ls.paused {
+                    ls.pause_backlog.push(id);
+                }
+                Some((id, ls.paused))
             }
-            (id, ls.paused)
         };
-        if !paused {
-            self.begin_staging(now, i, id);
+        match flat {
+            Some((id, paused)) => {
+                if !paused {
+                    self.begin_staging(now, i, id);
+                }
+            }
+            None => {
+                // Degenerate oversized prompts complete inside `submit`;
+                // fold them in before (maybe) opening a step.
+                self.drain_llm_completions(i);
+                self.maybe_start_llm_step(now, i);
+            }
         }
     }
 
@@ -833,6 +907,15 @@ impl SimWorld {
     /// Service time on the tenant's current instance: μ-scaling ×
     /// MPS-contention from active compute-heavy peers × lognormal ε.
     fn service_s(&mut self, i: usize, work_ref_ms: f64) -> f64 {
+        self.scaled_service_s(i, work_ref_ms / 1000.0)
+    }
+
+    /// [`SimWorld::service_s`] with the reference work already in
+    /// seconds (the LLM serving-step path). One ε draw per call,
+    /// consumed on the tenant's service stream in issue order — the
+    /// flat path's `(ms / 1000.0)` prefix keeps its exact legacy
+    /// arithmetic through the shared tail here.
+    fn scaled_service_s(&mut self, i: usize, work_ref_s: f64) -> f64 {
         let p = &self.placements[i];
         let mu = p.profile.mu() / self.scenario.mu_ref_profile.mu();
         let mut contention = 1.0;
@@ -847,7 +930,7 @@ impl SimWorld {
         let sigma = self.scenario.epsilon_sigma;
         let (_, ls) = self.ls_parts(i);
         let eps = ls.service_rng.lognormal(0.0, sigma);
-        (work_ref_ms / 1000.0) / mu * contention * eps
+        work_ref_s / mu * contention * eps
     }
 
     fn maybe_start_compute(&mut self, now: f64, i: usize) {
@@ -886,6 +969,98 @@ impl SimWorld {
             self.monitors[i].observe(ms);
         }
         self.maybe_start_compute(now, i);
+    }
+
+    // --- LLM request-granularity serving ------------------------------------
+
+    /// Start the next serving step (prefill or decode wave) for an LLM
+    /// tenant if the engine has work and nothing is in flight. The
+    /// step's PCIe leg (weight read + KV traffic) contends on the
+    /// fabric first; μ-scaled compute is scheduled when it drains.
+    fn maybe_start_llm_step(&mut self, now: f64, i: usize) {
+        let start = {
+            let (_, ls) = self.ls_parts(i);
+            if ls.paused {
+                return;
+            }
+            let Some(llm) = ls.llm.as_mut() else {
+                return;
+            };
+            if llm.stepping {
+                return;
+            }
+            let Some(start) = llm.serving.begin_step() else {
+                return;
+            };
+            llm.stepping = true;
+            start
+        };
+        // Step compute mirrors `service_s`: μ-scaling for the tenant's
+        // MIG slice × MPS contention × lognormal ε, drawn at step start
+        // so the service stream is consumed in step order.
+        let compute_s = self.scaled_service_s(i, start.ref_compute_s);
+        {
+            let (_, ls) = self.ls_parts(i);
+            let llm = ls.llm.as_mut().expect("llm rt checked above");
+            llm.step_compute_s = compute_s;
+        }
+        let (_, pcie) = self.tenant_links(i);
+        self.start_flow(now, pcie, start.io_gb, i, Purpose::LlmStepIo { tenant: i });
+    }
+
+    /// The step's PCIe I/O drained: run the compute leg.
+    fn on_llm_step_io_done(&mut self, now: f64, i: usize) {
+        let compute_s = {
+            let (_, ls) = self.ls_parts(i);
+            let Some(llm) = ls.llm.as_mut() else {
+                return;
+            };
+            if !llm.stepping {
+                return;
+            }
+            llm.step_compute_s
+        };
+        self.q.push_at(now + compute_s, Event::LlmStepDone { tenant: i });
+    }
+
+    /// Step compute finished: advance every row one token (or record the
+    /// prefill), fold completions into the monitors, start the next step.
+    fn on_llm_step_done(&mut self, now: f64, i: usize) {
+        {
+            let (_, ls) = self.ls_parts(i);
+            let Some(llm) = ls.llm.as_mut() else {
+                return;
+            };
+            if !llm.stepping {
+                return;
+            }
+            llm.stepping = false;
+            llm.serving.finish_step(now);
+        }
+        self.drain_llm_completions(i);
+        self.maybe_start_llm_step(now, i);
+    }
+
+    /// Fold the serving engine's finished requests into the tenant's
+    /// monitors: e2e latency feeds the legacy monitor (so completed /
+    /// miss / p99 accounting is shared with flat tenants), TTFT and TPOT
+    /// feed the serving-specific tails.
+    fn drain_llm_completions(&mut self, i: usize) {
+        let done = {
+            let (_, ls) = self.ls_parts(i);
+            let Some(llm) = ls.llm.as_mut() else {
+                return;
+            };
+            let done = llm.serving.drain_completions();
+            for c in &done {
+                llm.ttft_monitor.observe(c.ttft_s * 1000.0);
+                llm.tpot_monitor.observe(c.tpot_s * 1000.0);
+            }
+            done
+        };
+        for c in &done {
+            self.monitors[i].observe(c.e2e_s * 1000.0);
+        }
     }
 
     // --- bandwidth-heavy ETL cycle ------------------------------------------
@@ -1054,6 +1229,9 @@ impl SimWorld {
             self.begin_staging(now, i, id); // cap re-queues the excess
         }
         self.maybe_start_compute(now, i);
+        // LLM tenants queue arrivals inside the serving engine during the
+        // pause; resume stepping (no-op for flat tenants).
+        self.maybe_start_llm_step(now, i);
     }
 
     /// Apply one controller action to the world.
@@ -1310,7 +1488,8 @@ impl SimWorld {
             let share = 1.0 / occupancy(p.gpu, p.instance);
             let b = match &self.rt[i] {
                 TenantRt::Ls(ls) => {
-                    if ls.computing.is_some() {
+                    let llm_busy = ls.llm.as_ref().map_or(false, |l| l.stepping);
+                    if ls.computing.is_some() || llm_busy {
                         slices * share
                     } else {
                         0.0
@@ -1374,6 +1553,13 @@ impl SimWorld {
             let gbps = (gb - self.last_owner_gb[t]) / dt;
             self.last_owner_gb[t] = gb;
             let tails = self.monitors[t].sample(now);
+            // TTFT window tails for request-granularity LLM tenants
+            // (None everywhere else — the controller's TTFT objective
+            // falls back to e2e tails when unavailable).
+            let ttft = match &mut self.rt[t] {
+                TenantRt::Ls(ls) => ls.llm.as_mut().map(|l| l.ttft_monitor.sample(now)),
+                _ => None,
+            };
             let kind = self.scenario.tenants[t].kind();
             let active = match kind {
                 TenantKind::LatencySensitive => true,
@@ -1388,6 +1574,7 @@ impl SimWorld {
             tenants.push(TenantSignal {
                 tenant: TenantId(t),
                 tails,
+                ttft,
                 pcie_gbps: gbps,
                 block_io_gbps: nvme_share,
                 active,
@@ -1637,6 +1824,9 @@ impl SimWorld {
                         | Purpose::CycleH2d { .. }
                         | Purpose::CycleD2h { .. } => self.on_cycle_flow_done(now, purpose),
                         Purpose::StepSync { .. } => {}
+                        Purpose::LlmStepIo { tenant } => {
+                            self.on_llm_step_io_done(now, tenant)
+                        }
                     }
                 }
                 self.reschedule_fabric(now);
@@ -1665,6 +1855,7 @@ impl SimWorld {
             }
             Event::Sample => self.on_sample(now),
             Event::PauseDone { tenant } => self.on_pause_done(now, tenant),
+            Event::LlmStepDone { tenant } => self.on_llm_step_done(now, tenant),
             Event::ThrottleExpire {
                 tenant,
                 deadline_bits,
@@ -1891,6 +2082,17 @@ impl SimWorld {
                         .unwrap_or((0, None)),
                     TenantRt::Comp(_) => (0, None),
                 };
+                let (ttft_p99, tpot_p99, ttft_slo_miss_rate) = match &self.rt[i] {
+                    TenantRt::Ls(l) => match &l.llm {
+                        Some(llm) => (
+                            Some(llm.ttft_monitor.lifetime_quantile_ms(0.99)),
+                            Some(llm.tpot_monitor.lifetime_quantile_ms(0.99)),
+                            Some(llm.ttft_monitor.lifetime_miss_rate()),
+                        ),
+                        None => (None, None, None),
+                    },
+                    _ => (None, None, None),
+                };
                 TenantRunStats {
                     tenant: TenantId(i),
                     name: t.name.clone(),
@@ -1906,6 +2108,9 @@ impl SimWorld {
                     gb_moved: self.fabric.owner_gb(i),
                     arrivals_emitted,
                     trace_exhausted_at,
+                    ttft_p99,
+                    tpot_p99,
+                    ttft_slo_miss_rate,
                 }
             })
             .collect();

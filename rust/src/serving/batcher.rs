@@ -38,7 +38,7 @@ pub enum Work {
 }
 
 /// Row-slot manager.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Batcher {
     rows: Vec<Option<RunningSeq>>,
     waiting: VecDeque<ServeRequest>,

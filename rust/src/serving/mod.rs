@@ -14,6 +14,9 @@
 //! * [`router`] — least-outstanding-requests routing across engine
 //!   replicas (used by the 2-node cluster runtime).
 //! * [`tokenizer`] — byte-level tokenizer matching the AOT vocab.
+//! * [`sim_backend`] — the same batcher/kvcache driven on *simulated*
+//!   time by `platform::sim_platform` for request-granularity LLM
+//!   tenants (no AOT artifacts; TTFT/TPOT from the sim clock).
 
 pub mod tokenizer;
 pub mod sampler;
@@ -22,9 +25,11 @@ pub mod request;
 pub mod batcher;
 pub mod engine;
 pub mod router;
+pub mod sim_backend;
 
 pub use engine::{Engine, EngineStats};
 pub use kvcache::PagedKvCache;
 pub use request::{Completion, RequestId, ServeRequest};
 pub use router::Router;
+pub use sim_backend::{SimCompletion, SimServing, StepStart};
 pub use tokenizer::ByteTokenizer;

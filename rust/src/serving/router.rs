@@ -55,10 +55,19 @@ impl Router {
         target
     }
 
-    /// A request completed on `replica`.
+    /// A request completed on `replica`. Completing more requests than
+    /// were routed is an accounting desync in the caller — rejected via
+    /// [`crate::util::invariant::InvariantError`] in every build profile
+    /// (a silent wrap would leak capacity to the broken replica forever).
     pub fn complete(&mut self, replica: usize) {
-        debug_assert!(self.outstanding[replica] > 0, "completion underflow");
-        self.outstanding[replica] = self.outstanding[replica].saturating_sub(1);
+        if self.outstanding[replica] == 0 {
+            crate::util::invariant::InvariantError::new(
+                "router completion matches an outstanding request",
+                format!("replica={replica} outstanding=0"),
+            )
+            .panic();
+        }
+        self.outstanding[replica] -= 1;
     }
 
     pub fn outstanding(&self, replica: usize) -> usize {
@@ -105,6 +114,32 @@ mod tests {
         }
         assert!(r.total_routed(1) > r.total_routed(0));
         assert!(r.outstanding(0) <= 2, "slow replica overloaded");
+    }
+
+    #[test]
+    fn tie_break_is_deterministic_lowest_index() {
+        // All replicas equal at every depth: the scan order must always
+        // resolve ties to the lowest replica index, never a hash order.
+        for _ in 0..3 {
+            let mut r = Router::new(4, Policy::LeastOutstanding);
+            let picks: Vec<usize> = (0..8).map(|_| r.route()).collect();
+            assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        }
+        // After draining replica 2 specifically, it is strictly shortest.
+        let mut r = Router::new(3, Policy::LeastOutstanding);
+        for _ in 0..3 {
+            r.route();
+        }
+        r.complete(2);
+        assert_eq!(r.route(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "internal invariant violated")]
+    fn completion_underflow_is_rejected() {
+        let mut r = Router::new(2, Policy::LeastOutstanding);
+        r.route(); // replica 0
+        r.complete(1); // never routed: accounting desync
     }
 
     #[test]

@@ -1,0 +1,511 @@
+//! Simulation backend for the serving stack: the real [`Batcher`] +
+//! [`PagedKvCache`] driven on *simulated* time, no AOT artifacts needed.
+//!
+//! One [`SimServing`] instance runs per LLM tenant inside
+//! `platform::sim_platform`. The platform owns the clock and the cost
+//! model; this module owns request lifecycle and KV accounting:
+//!
+//! * `submit` queues a request (sim-time arrival tracked here — the
+//!   wall-clock `ServeRequest::submitted` field is a placeholder);
+//! * `begin_step` plans the next continuous-batching wave (prefill-first,
+//!   KV-page-gated, exactly the real scheduler) and reports its token
+//!   count / PCIe traffic / reference-profile compute time;
+//! * `finish_step` applies the wave: TTFT stamps at prefill end, one
+//!   generated token + KV append per decode step, completions with
+//!   TTFT/TPOT/e2e on max-tokens or KV exhaustion.
+//!
+//! Everything is deterministic given the call sequence — no RNG, no wall
+//! clock — so the platform's bit-compat discipline extends through it.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::tenants::llm::{LlmRequestDims, LlmWorkloadSpec};
+
+use super::batcher::{Batcher, Work};
+use super::kvcache::PagedKvCache;
+use super::request::{FinishReason, RequestId, SamplingParams, ServeRequest};
+
+/// One planned engine step, priced for the platform's cost model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepStart {
+    /// Prefill wave (admissions) vs decode wave.
+    pub is_prefill: bool,
+    /// Rows participating in the wave.
+    pub rows: usize,
+    /// Tokens moved through the step (prompt tokens for prefill, one per
+    /// running row for decode).
+    pub tokens: u64,
+    /// PCIe traffic for the step (GB): weight/driver overhead plus
+    /// per-token KV/activation streaming.
+    pub io_gb: f64,
+    /// Compute seconds at the μ-reference profile. The platform scales
+    /// by the tenant's actual μ, MPS contention, and service jitter.
+    pub ref_compute_s: f64,
+}
+
+/// A finished request with sim-time latencies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimCompletion {
+    pub id: u64,
+    /// Sim-time arrival (s).
+    pub arrival: f64,
+    /// Sim-time completion (s).
+    pub finished: f64,
+    /// Time to first token (s) — stamped at prefill-wave end.
+    pub ttft_s: f64,
+    /// End-to-end latency (s).
+    pub e2e_s: f64,
+    /// Decode seconds per generated token after the first; 0 for
+    /// single-token generations.
+    pub tpot_s: f64,
+    pub prompt_tokens: usize,
+    pub generated: usize,
+    pub finish: FinishReason,
+}
+
+/// Per-tenant simulated serving engine.
+#[derive(Clone, Debug)]
+pub struct SimServing {
+    spec: LlmWorkloadSpec,
+    batcher: Batcher,
+    cache: PagedKvCache,
+    /// Sim-time arrival per queued/running request (the `ServeRequest`
+    /// struct only carries a wall-clock `Instant`).
+    arrivals: BTreeMap<u64, f64>,
+    /// The wave `begin_step` opened and `finish_step` will apply.
+    inflight: Option<InflightStep>,
+    completions: Vec<SimCompletion>,
+    submitted_total: u64,
+    completed_total: u64,
+}
+
+#[derive(Clone, Debug)]
+struct InflightStep {
+    is_prefill: bool,
+    rows: Vec<usize>,
+}
+
+impl SimServing {
+    pub fn new(spec: LlmWorkloadSpec) -> SimServing {
+        let batcher = Batcher::new(spec.batch_rows);
+        let cache = PagedKvCache::new(spec.kv_pages, spec.kv_page_size, spec.max_pages_per_seq);
+        SimServing {
+            spec,
+            batcher,
+            cache,
+            arrivals: BTreeMap::new(),
+            inflight: None,
+            completions: Vec::new(),
+            submitted_total: 0,
+            completed_total: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &LlmWorkloadSpec {
+        &self.spec
+    }
+
+    /// Queue a request. Prompts that can never fit the per-sequence page
+    /// table are rejected immediately as `LengthLimit` completions
+    /// (zero-latency) instead of deadlocking the head of the queue.
+    pub fn submit(&mut self, id: u64, dims: LlmRequestDims, now: f64) {
+        self.submitted_total += 1;
+        let prompt = dims.prompt_tokens as usize;
+        if self.cache.pages_for(prompt).max(1) > self.spec.max_pages_per_seq {
+            self.completed_total += 1;
+            self.completions.push(SimCompletion {
+                id,
+                arrival: now,
+                finished: now,
+                ttft_s: 0.0,
+                e2e_s: 0.0,
+                tpot_s: 0.0,
+                prompt_tokens: prompt,
+                generated: 0,
+                finish: FinishReason::LengthLimit,
+            });
+            return;
+        }
+        self.arrivals.insert(id, now);
+        self.batcher.submit(ServeRequest {
+            id: RequestId(id),
+            prompt_tokens: vec![1; prompt],
+            params: SamplingParams {
+                top_k: 0,
+                seed: 0,
+                max_new_tokens: dims.decode_tokens.max(1) as usize,
+            },
+            // Wall-clock placeholder; sim time lives in `arrivals`.
+            submitted: Instant::now(),
+        });
+    }
+
+    /// Plan and open the next wave, or `None` when idle. At most one
+    /// wave may be open — the platform serializes step IO + compute.
+    pub fn begin_step(&mut self) -> Option<StepStart> {
+        if self.inflight.is_some() {
+            crate::util::invariant::InvariantError::new(
+                "at most one serving wave in flight",
+                "SimServing::begin_step",
+            )
+            .panic();
+        }
+        match self.batcher.plan(&self.cache) {
+            Work::Idle => None,
+            Work::Prefill { rows } => {
+                let mut admitted = Vec::with_capacity(rows.len());
+                let mut tokens = 0u64;
+                for row in rows {
+                    let Some(req) = self.batcher.waiting_front() else {
+                        break;
+                    };
+                    let prompt = req.prompt_tokens.len();
+                    let Ok(seq) = self.cache.allocate(prompt) else {
+                        // `plan` budgeted these pages; hitting this means
+                        // the pool drained concurrently — stop admitting,
+                        // the request stays queued.
+                        break;
+                    };
+                    self.batcher.admit(row, seq);
+                    tokens += prompt as u64;
+                    admitted.push(row);
+                }
+                if admitted.is_empty() {
+                    return None;
+                }
+                let start = StepStart {
+                    is_prefill: true,
+                    rows: admitted.len(),
+                    tokens,
+                    io_gb: self.step_io_gb(tokens),
+                    ref_compute_s: tokens as f64 / self.spec.prefill_tok_per_s_ref,
+                };
+                self.inflight = Some(InflightStep {
+                    is_prefill: true,
+                    rows: admitted,
+                });
+                Some(start)
+            }
+            Work::Decode => {
+                let rows: Vec<usize> = (0..self.batcher.rows().len())
+                    .filter(|&i| self.batcher.rows()[i].is_some())
+                    .collect();
+                let n = rows.len();
+                let tokens = n as u64;
+                let step_ms = self.spec.decode_step_ms_ref
+                    + self.spec.decode_step_ms_per_row * (n.saturating_sub(1)) as f64;
+                let start = StepStart {
+                    is_prefill: false,
+                    rows: n,
+                    tokens,
+                    io_gb: self.step_io_gb(tokens),
+                    ref_compute_s: step_ms / 1000.0,
+                };
+                self.inflight = Some(InflightStep {
+                    is_prefill: false,
+                    rows,
+                });
+                Some(start)
+            }
+        }
+    }
+
+    fn step_io_gb(&self, tokens: u64) -> f64 {
+        self.spec.weight_gb_per_step + self.spec.kv_gb_per_token * tokens as f64
+    }
+
+    /// Apply the open wave at sim time `now`: TTFT stamps + first token
+    /// for prefill rows, one generated token (and KV append) per decode
+    /// row, completions on max-tokens or KV exhaustion.
+    pub fn finish_step(&mut self, now: f64) {
+        let Some(step) = self.inflight.take() else {
+            crate::util::invariant::InvariantError::new(
+                "finish_step without an open wave",
+                "SimServing::finish_step",
+            )
+            .panic();
+        };
+        for row in step.rows {
+            let Some(rs) = self.batcher.row_mut(row).as_mut() else {
+                continue;
+            };
+            if step.is_prefill {
+                let arrival = self.arrivals[&rs.req.id.0];
+                rs.ttft_s = Some(now - arrival);
+                rs.generated.push(1);
+                rs.position += 1;
+                if rs.generated.len() >= rs.req.params.max_new_tokens {
+                    self.complete(row, now, FinishReason::MaxTokens);
+                }
+            } else {
+                match self.cache.append_token(rs.seq) {
+                    Ok(_) => {
+                        rs.generated.push(1);
+                        rs.position += 1;
+                        if rs.generated.len() >= rs.req.params.max_new_tokens {
+                            self.complete(row, now, FinishReason::MaxTokens);
+                        }
+                    }
+                    Err(_) => {
+                        // KV pool or page table exhausted: finish early.
+                        self.complete(row, now, FinishReason::LengthLimit);
+                    }
+                }
+            }
+        }
+    }
+
+    fn complete(&mut self, row: usize, now: f64, finish: FinishReason) {
+        let rs = self.batcher.evict(row).expect("completing an empty row");
+        self.cache.release(rs.seq).expect("releasing a live seq");
+        let arrival = self
+            .arrivals
+            .remove(&rs.req.id.0)
+            .expect("completion without arrival record");
+        let e2e = now - arrival;
+        let ttft = rs.ttft_s.unwrap_or(e2e);
+        let generated = rs.generated.len();
+        let tpot = if generated > 1 {
+            (e2e - ttft) / (generated - 1) as f64
+        } else {
+            0.0
+        };
+        self.completed_total += 1;
+        self.completions.push(SimCompletion {
+            id: rs.req.id.0,
+            arrival,
+            finished: now,
+            ttft_s: ttft,
+            e2e_s: e2e,
+            tpot_s: tpot,
+            prompt_tokens: rs.req.prompt_tokens.len(),
+            generated,
+            finish,
+        });
+    }
+
+    /// Take the completions accumulated since the last drain.
+    pub fn drain_completions(&mut self) -> Vec<SimCompletion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Is a wave currently open (between `begin_step` and `finish_step`)?
+    pub fn step_open(&self) -> bool {
+        self.inflight.is_some()
+    }
+
+    /// No queued or running work and no open wave.
+    pub fn is_idle(&self) -> bool {
+        self.inflight.is_none() && self.batcher.is_idle()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.batcher.waiting_len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.batcher.running_len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.cache.free_pages()
+    }
+
+    pub fn submitted_total(&self) -> u64 {
+        self.submitted_total
+    }
+
+    pub fn completed_total(&self) -> u64 {
+        self.completed_total
+    }
+
+    pub fn admitted_total(&self) -> u64 {
+        self.batcher.admitted_total()
+    }
+
+    pub fn cache(&self) -> &PagedKvCache {
+        &self.cache
+    }
+
+    pub fn batcher(&self) -> &Batcher {
+        &self.batcher
+    }
+
+    /// Conservation invariant for property tests: every submitted
+    /// request is either queued, running, already completed, or pending
+    /// in the undrained completion buffer — none dropped or duplicated.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let inflight = self.batcher.inflight_ids().len() as u64;
+        if self.submitted_total != self.completed_total + inflight {
+            return Err(format!(
+                "request leak: submitted {} != completed {} + inflight {}",
+                self.submitted_total, self.completed_total, inflight
+            ));
+        }
+        if self.arrivals.len() as u64 != inflight {
+            return Err(format!(
+                "arrival-record leak: {} records for {} inflight requests",
+                self.arrivals.len(),
+                inflight
+            ));
+        }
+        self.cache.check_invariants()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tenants::llm::LlmWorkloadSpec;
+
+    fn drive_to_idle(s: &mut SimServing, mut now: f64, dt: f64) -> f64 {
+        let mut guard = 0;
+        while let Some(_step) = s.begin_step() {
+            now += dt;
+            s.finish_step(now);
+            guard += 1;
+            assert!(guard < 100_000, "engine did not drain");
+        }
+        now
+    }
+
+    #[test]
+    fn single_request_closed_form_timings() {
+        let mut s = SimServing::new(LlmWorkloadSpec::fixed(32, 4));
+        s.submit(0, LlmRequestDims { prompt_tokens: 32, decode_tokens: 4 }, 1.0);
+        // Prefill wave: 32 tokens.
+        let step = s.begin_step().unwrap();
+        assert!(step.is_prefill);
+        assert_eq!(step.tokens, 32);
+        assert_eq!(step.rows, 1);
+        let spec = s.spec().clone();
+        assert_eq!(step.ref_compute_s, 32.0 / spec.prefill_tok_per_s_ref);
+        assert_eq!(
+            step.io_gb,
+            spec.weight_gb_per_step + spec.kv_gb_per_token * 32.0
+        );
+        s.finish_step(1.05); // TTFT = 0.05
+        // Three decode steps complete the 4-token budget.
+        for k in 0..3 {
+            let step = s.begin_step().unwrap();
+            assert!(!step.is_prefill);
+            assert_eq!(step.tokens, 1);
+            assert_eq!(step.ref_compute_s, spec.decode_step_ms_ref / 1000.0);
+            s.finish_step(1.05 + 0.01 * (k + 1) as f64);
+        }
+        assert!(s.begin_step().is_none());
+        let done = s.drain_completions();
+        assert_eq!(done.len(), 1);
+        let c = &done[0];
+        assert_eq!(c.finish, FinishReason::MaxTokens);
+        assert_eq!(c.generated, 4);
+        assert!((c.ttft_s - 0.05).abs() < 1e-12);
+        assert!((c.e2e_s - 0.08).abs() < 1e-12);
+        assert!((c.tpot_s - 0.01).abs() < 1e-12);
+        assert_eq!(s.free_pages(), s.spec().kv_pages - 1);
+        s.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn continuous_batching_drains_more_requests_than_rows() {
+        let mut s = SimServing::new(LlmWorkloadSpec::fixed(16, 3));
+        let n = 3 * s.spec().batch_rows as u64 + 1;
+        for i in 0..n {
+            s.submit(i, LlmRequestDims { prompt_tokens: 16, decode_tokens: 3 }, 0.0);
+        }
+        drive_to_idle(&mut s, 0.0, 0.004);
+        let done = s.drain_completions();
+        assert_eq!(done.len(), n as usize);
+        let mut ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>());
+        assert!(done.iter().all(|c| c.finish == FinishReason::MaxTokens));
+        assert!(s.is_idle());
+        s.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn admission_is_kv_page_gated() {
+        // 8 rows but only 7 usable pages of 16 tokens: 32-token prompts
+        // need 2 pages each => at most 3 admitted per wave.
+        let spec = LlmWorkloadSpec {
+            kv_pages: 8,
+            max_pages_per_seq: 4,
+            ..LlmWorkloadSpec::fixed(32, 2)
+        };
+        let mut s = SimServing::new(spec);
+        for i in 0..6 {
+            s.submit(i, LlmRequestDims { prompt_tokens: 32, decode_tokens: 2 }, 0.0);
+        }
+        let step = s.begin_step().unwrap();
+        assert!(step.is_prefill);
+        assert_eq!(step.rows, 3);
+        assert!(s.free_pages() >= 1);
+        s.finish_step(0.01);
+        drive_to_idle(&mut s, 0.01, 0.005);
+        assert_eq!(s.drain_completions().len(), 6);
+        s.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn oversized_prompt_rejected_not_deadlocked() {
+        let spec = LlmWorkloadSpec {
+            max_pages_per_seq: 2, // 32-token max context
+            ..LlmWorkloadSpec::fixed(16, 2)
+        };
+        let mut s = SimServing::new(spec);
+        s.submit(0, LlmRequestDims { prompt_tokens: 64, decode_tokens: 2 }, 0.0);
+        s.submit(1, LlmRequestDims { prompt_tokens: 16, decode_tokens: 2 }, 0.0);
+        // The oversized request completed immediately as LengthLimit…
+        let done = s.drain_completions();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::LengthLimit);
+        assert_eq!(done[0].generated, 0);
+        // …and the queue keeps moving.
+        assert!(s.begin_step().is_some());
+        s.finish_step(0.01);
+        drive_to_idle(&mut s, 0.01, 0.005);
+        assert_eq!(s.drain_completions().len(), 1);
+        s.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn kv_exhaustion_mid_decode_finishes_with_length_limit() {
+        // One sequence, page table capped at 1 page (16 tokens): a
+        // 16-token prompt fills it, so the first decode append fails.
+        let spec = LlmWorkloadSpec {
+            kv_pages: 4,
+            max_pages_per_seq: 1,
+            ..LlmWorkloadSpec::fixed(16, 8)
+        };
+        let mut s = SimServing::new(spec);
+        s.submit(0, LlmRequestDims { prompt_tokens: 16, decode_tokens: 8 }, 0.0);
+        s.begin_step().unwrap();
+        s.finish_step(0.01); // prefill: first token out
+        s.begin_step().unwrap();
+        s.finish_step(0.02); // decode append fails: LengthLimit
+        let done = s.drain_completions();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::LengthLimit);
+        assert_eq!(done[0].generated, 1);
+        assert_eq!(s.free_pages(), 3);
+        s.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn prefill_preempts_decode_for_waiting_requests() {
+        let mut s = SimServing::new(LlmWorkloadSpec::fixed(16, 4));
+        s.submit(0, LlmRequestDims { prompt_tokens: 16, decode_tokens: 4 }, 0.0);
+        s.begin_step().unwrap();
+        s.finish_step(0.01);
+        // A new arrival while row 0 decodes: next wave is prefill.
+        s.submit(1, LlmRequestDims { prompt_tokens: 16, decode_tokens: 4 }, 0.01);
+        let step = s.begin_step().unwrap();
+        assert!(step.is_prefill, "prefill-first scheduling");
+        s.finish_step(0.02);
+        drive_to_idle(&mut s, 0.02, 0.005);
+        assert_eq!(s.drain_completions().len(), 2);
+        s.check_conservation().unwrap();
+    }
+}

@@ -23,6 +23,11 @@ pub struct TailStats {
 pub struct TenantSignal {
     pub tenant: TenantId,
     pub tails: TailStats,
+    /// Time-to-first-token tails, present only for tenants serving LLM
+    /// requests through the request-granularity engine
+    /// (`LsSpec::llm`). Controllers with a TTFT objective read these;
+    /// everyone else ignores them.
+    pub ttft: Option<TailStats>,
     /// GB/s this tenant moved over PCIe since the last sample.
     pub pcie_gbps: f64,
     /// GB/s of host block I/O attributable to this tenant.

@@ -1,0 +1,339 @@
+//! Request-granularity LLM workload spec (paper §LLM serving).
+//!
+//! An [`LlmWorkloadSpec`] attached to a latency-sensitive tenant replaces
+//! the flat per-request latency sample with a simulated serving engine
+//! ([`crate::serving::sim_backend::SimServing`]): every arrival carries
+//! prompt/decode token lengths drawn from a [`TokenDist`], flows through
+//! the real continuous batcher + paged KV cache, and reports TTFT/TPOT
+//! instead of a single end-to-end number. The spec bundles both the
+//! workload shape (token-length distributions, in the spirit of htsim-rs
+//! `workload_gen/`) and the engine geometry/cost model (batch rows, KV
+//! pool, reference step times, PCIe traffic per step).
+//!
+//! Token lengths are sampled off the tenant's *existing* size RNG stream
+//! — no new streams, so scenarios without an LLM spec keep every RNG
+//! draw byte-identical to the pre-LLM engine.
+
+use crate::util::rng::Pcg64;
+
+/// Token-length distribution for prompts or decode budgets.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokenDist {
+    /// Every request gets exactly this many tokens. Consumes **no** RNG
+    /// draws — the closed-form differential oracle depends on this.
+    Fixed(u32),
+    /// Lognormal over token counts, parameterized by the underlying
+    /// normal's mu/sigma, rounded and clamped into `[min, max]`.
+    /// Consumes one lognormal draw per sample.
+    LogNormal { mu: f64, sigma: f64, min: u32, max: u32 },
+    /// Empirical histogram: `(tokens, weight)` buckets, e.g. binned from
+    /// a production trace. Weights need not sum to 1 (normalized at
+    /// sample time). Consumes one uniform draw per sample.
+    Histogram(Vec<(u32, f64)>),
+}
+
+impl TokenDist {
+    /// Draw one token count. `Fixed` is draw-free; the other variants
+    /// consume exactly one distribution draw each, so the per-request
+    /// RNG footprint is static per spec — a determinism invariant the
+    /// oracle tests lean on.
+    pub fn sample(&self, rng: &mut Pcg64) -> u32 {
+        match self {
+            TokenDist::Fixed(n) => *n,
+            TokenDist::LogNormal { mu, sigma, min, max } => {
+                let x = rng.lognormal(*mu, *sigma).round();
+                (x as u32).clamp(*min, *max)
+            }
+            TokenDist::Histogram(buckets) => {
+                let total: f64 = buckets.iter().map(|&(_, w)| w).sum();
+                let mut u = rng.f64() * total;
+                for &(tokens, w) in buckets {
+                    if u < w {
+                        return tokens;
+                    }
+                    u -= w;
+                }
+                buckets.last().map(|&(t, _)| t).unwrap_or(1)
+            }
+        }
+    }
+
+    /// Planning-time mean (tokens). Lognormal uses the analytic mean of
+    /// the unclamped distribution, clamped into `[min, max]` — a sizing
+    /// estimate, not a measurement.
+    pub fn mean(&self) -> f64 {
+        match self {
+            TokenDist::Fixed(n) => *n as f64,
+            TokenDist::LogNormal { mu, sigma, min, max } => {
+                (mu + sigma * sigma / 2.0).exp().clamp(*min as f64, *max as f64)
+            }
+            TokenDist::Histogram(buckets) => {
+                let total: f64 = buckets.iter().map(|&(_, w)| w).sum();
+                if total <= 0.0 {
+                    return 1.0;
+                }
+                buckets.iter().map(|&(t, w)| t as f64 * w).sum::<f64>() / total
+            }
+        }
+    }
+
+    /// Does every sample return the same value?
+    pub fn is_deterministic(&self) -> bool {
+        match self {
+            TokenDist::Fixed(_) => true,
+            TokenDist::LogNormal { sigma, .. } => *sigma == 0.0,
+            TokenDist::Histogram(buckets) => buckets.len() <= 1,
+        }
+    }
+
+    /// Build-time validation (mirrors `ArrivalProcess::validate`: bad
+    /// specs fail at `ScenarioBuilder::build`, never mid-sim).
+    pub fn validate(&self, what: &str) -> Result<(), String> {
+        match self {
+            TokenDist::Fixed(n) => {
+                if *n == 0 {
+                    return Err(format!("{what}: Fixed token count must be >= 1"));
+                }
+            }
+            TokenDist::LogNormal { mu, sigma, min, max } => {
+                if !mu.is_finite() || !sigma.is_finite() || *sigma < 0.0 {
+                    return Err(format!("{what}: LogNormal mu/sigma must be finite, sigma >= 0"));
+                }
+                if *min == 0 || max < min {
+                    return Err(format!("{what}: LogNormal needs 1 <= min <= max"));
+                }
+            }
+            TokenDist::Histogram(buckets) => {
+                if buckets.is_empty() {
+                    return Err(format!("{what}: Histogram must have >= 1 bucket"));
+                }
+                for &(t, w) in buckets {
+                    if t == 0 || !w.is_finite() || w <= 0.0 {
+                        return Err(format!(
+                            "{what}: Histogram buckets need tokens >= 1 and finite weight > 0"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-request token dimensions, sampled at arrival.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LlmRequestDims {
+    pub prompt_tokens: u32,
+    pub decode_tokens: u32,
+}
+
+/// The LLM serving workload + engine model for one tenant.
+///
+/// Costs are expressed at the μ-reference profile (like
+/// `LsSpec::compute_ref_ms`): the platform divides by the tenant's
+/// actual μ and applies the same MPS contention and lognormal jitter as
+/// the flat LS path, so the controller's levers act on LLM tenants
+/// through exactly the machinery the paper describes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LlmWorkloadSpec {
+    /// Prompt-length distribution (tokens).
+    pub prompt: TokenDist,
+    /// Decode-budget distribution (tokens to generate; >= 1).
+    pub decode: TokenDist,
+    /// p99 TTFT SLO in ms (paper: 200 ms for the vLLM case study).
+    pub ttft_slo_ms: f64,
+    /// Continuous-batching row count of the simulated engine.
+    pub batch_rows: usize,
+    /// KV pool size in pages (page 0 is the reserved scratch page).
+    pub kv_pages: usize,
+    /// Tokens per KV page.
+    pub kv_page_size: usize,
+    /// Page-table length per sequence (max context in pages).
+    pub max_pages_per_seq: usize,
+    /// Prefill throughput on the reference slice (tokens/s).
+    pub prefill_tok_per_s_ref: f64,
+    /// Decode step latency on the reference slice at batch width 1 (ms).
+    pub decode_step_ms_ref: f64,
+    /// Extra decode step latency per additional running row (ms).
+    pub decode_step_ms_per_row: f64,
+    /// PCIe traffic per token moved through a step (GB) — KV/activation
+    /// spill the step streams over the tenant's uplink.
+    pub kv_gb_per_token: f64,
+    /// Fixed PCIe traffic per step (GB) — weight/driver overhead.
+    pub weight_gb_per_step: f64,
+}
+
+impl LlmWorkloadSpec {
+    /// A chat-style 7B-class workload: ~512-token prompts, ~128-token
+    /// replies, vLLM-like engine geometry. The default for
+    /// `sim --llm` and the `llm_serving_mix` catalog entry.
+    pub fn chat_7b() -> LlmWorkloadSpec {
+        LlmWorkloadSpec {
+            // exp(6.1) ~ 446 tokens median, right-skewed.
+            prompt: TokenDist::LogNormal { mu: 6.1, sigma: 0.6, min: 16, max: 2048 },
+            // exp(4.6) ~ 100 tokens median.
+            decode: TokenDist::LogNormal { mu: 4.6, sigma: 0.7, min: 4, max: 512 },
+            ttft_slo_ms: 200.0,
+            batch_rows: 8,
+            kv_pages: 1024,
+            kv_page_size: 16,
+            max_pages_per_seq: 160, // 2560-token max context
+            prefill_tok_per_s_ref: 9000.0,
+            decode_step_ms_ref: 9.0,
+            decode_step_ms_per_row: 0.5,
+            kv_gb_per_token: 0.0005,
+            weight_gb_per_step: 0.02,
+        }
+    }
+
+    /// Fully deterministic variant for differential oracles: fixed
+    /// token counts, everything else as `chat_7b`.
+    pub fn fixed(prompt_tokens: u32, decode_tokens: u32) -> LlmWorkloadSpec {
+        LlmWorkloadSpec {
+            prompt: TokenDist::Fixed(prompt_tokens),
+            decode: TokenDist::Fixed(decode_tokens),
+            ..LlmWorkloadSpec::chat_7b()
+        }
+    }
+
+    /// Sample one request's token dimensions. Draw order is fixed
+    /// (prompt, then decode) and rides the tenant's existing size RNG
+    /// stream in place of the flat path's `LsSpec::sample` draws.
+    pub fn sample_dims(&self, rng: &mut Pcg64) -> LlmRequestDims {
+        let prompt_tokens = self.prompt.sample(rng).max(1);
+        let decode_tokens = self.decode.sample(rng).max(1);
+        LlmRequestDims {
+            prompt_tokens,
+            decode_tokens,
+        }
+    }
+
+    /// Planning estimate of sustained PCIe demand (GB/s) at `rps`
+    /// arrivals — one prefill step plus `decode_mean` decode steps per
+    /// request. Feeds `WorkloadSpec::expected_pcie_gbps` so the
+    /// auto-placement allocator charges LLM tenants their real traffic.
+    pub fn mean_pcie_gbps(&self, rps: f64) -> f64 {
+        let prompt = self.prompt.mean();
+        let decode = self.decode.mean().max(1.0);
+        let per_req = self.kv_gb_per_token * (prompt + decode)
+            + self.weight_gb_per_step * (1.0 + decode);
+        rps * per_req
+    }
+
+    /// Build-time validation: geometry must be able to host at least one
+    /// max-context sequence and every knob must be positive.
+    pub fn validate(&self) -> Result<(), String> {
+        self.prompt.validate("llm prompt dist")?;
+        self.decode.validate("llm decode dist")?;
+        if !(self.ttft_slo_ms > 0.0) {
+            return Err("llm ttft_slo_ms must be > 0".into());
+        }
+        if self.batch_rows == 0 {
+            return Err("llm batch_rows must be >= 1".into());
+        }
+        if self.kv_pages < 2 || self.kv_page_size == 0 || self.max_pages_per_seq == 0 {
+            return Err("llm kv geometry must be positive (kv_pages >= 2)".into());
+        }
+        if self.max_pages_per_seq > self.kv_pages - 1 {
+            return Err("llm max_pages_per_seq exceeds the usable KV pool".into());
+        }
+        for (what, v) in [
+            ("prefill_tok_per_s_ref", self.prefill_tok_per_s_ref),
+            ("decode_step_ms_ref", self.decode_step_ms_ref),
+        ] {
+            if !(v > 0.0) || !v.is_finite() {
+                return Err(format!("llm {what} must be finite and > 0"));
+            }
+        }
+        for (what, v) in [
+            ("decode_step_ms_per_row", self.decode_step_ms_per_row),
+            ("kv_gb_per_token", self.kv_gb_per_token),
+            ("weight_gb_per_step", self.weight_gb_per_step),
+        ] {
+            if v < 0.0 || !v.is_finite() {
+                return Err(format!("llm {what} must be finite and >= 0"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_dist_is_draw_free_and_deterministic() {
+        let d = TokenDist::Fixed(37);
+        let mut rng = Pcg64::seeded(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(d.sample(&mut rng), 37);
+        // No draw was consumed.
+        assert_eq!(rng.next_u64(), before);
+        assert!(d.is_deterministic());
+        assert_eq!(d.mean(), 37.0);
+    }
+
+    #[test]
+    fn lognormal_respects_clamp_and_draw_count() {
+        let d = TokenDist::LogNormal { mu: 6.0, sigma: 0.8, min: 32, max: 1024 };
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..10_000 {
+            let t = d.sample(&mut rng);
+            assert!((32..=1024).contains(&t));
+        }
+        // sigma = 0 collapses to exp(mu) exactly and is deterministic.
+        let flat = TokenDist::LogNormal { mu: 5.0, sigma: 0.0, min: 1, max: 4096 };
+        assert!(flat.is_deterministic());
+        let v = flat.sample(&mut rng);
+        assert_eq!(v, (5.0f64).exp().round() as u32);
+    }
+
+    #[test]
+    fn histogram_sampling_tracks_weights() {
+        let d = TokenDist::Histogram(vec![(64, 0.7), (512, 0.3)]);
+        let mut rng = Pcg64::seeded(3);
+        let n = 50_000;
+        let small = (0..n).filter(|_| d.sample(&mut rng) == 64).count();
+        let frac = small as f64 / n as f64;
+        assert!((frac - 0.7).abs() < 0.02, "frac={frac}");
+        let mean = d.mean();
+        assert!((mean - (64.0 * 0.7 + 512.0 * 0.3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_dims_orders_prompt_then_decode() {
+        let spec = LlmWorkloadSpec::fixed(256, 32);
+        let mut rng = Pcg64::seeded(4);
+        let dims = spec.sample_dims(&mut rng);
+        assert_eq!(dims, LlmRequestDims { prompt_tokens: 256, decode_tokens: 32 });
+        // Deterministic dists leave the RNG untouched.
+        let mut rng2 = Pcg64::seeded(4);
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn chat_preset_validates_and_plans_positive_traffic() {
+        let spec = LlmWorkloadSpec::chat_7b();
+        spec.validate().unwrap();
+        let gbps = spec.mean_pcie_gbps(4.0);
+        assert!(gbps > 0.0 && gbps < 25.0, "gbps={gbps}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_geometry() {
+        let mut s = LlmWorkloadSpec::chat_7b();
+        s.batch_rows = 0;
+        assert!(s.validate().is_err());
+        let mut s = LlmWorkloadSpec::chat_7b();
+        s.max_pages_per_seq = s.kv_pages; // cannot exceed usable pool
+        assert!(s.validate().is_err());
+        let mut s = LlmWorkloadSpec::chat_7b();
+        s.decode = TokenDist::Fixed(0);
+        assert!(s.validate().is_err());
+        let mut s = LlmWorkloadSpec::chat_7b();
+        s.prompt = TokenDist::Histogram(vec![]);
+        assert!(s.validate().is_err());
+        assert!(LlmWorkloadSpec::chat_7b().validate().is_ok());
+    }
+}

@@ -20,11 +20,13 @@
 //! [`Envelope`]-modulated Poisson for diurnal/burst synthetic traffic.
 
 pub mod arrivals;
+pub mod llm;
 pub mod schedule;
 pub mod spec;
 pub mod workload;
 
 pub use arrivals::{ArrivalError, ArrivalProcess, ArrivalState, Envelope, TraceSpec};
+pub use llm::{LlmRequestDims, LlmWorkloadSpec, TokenDist};
 pub use schedule::{InterferenceSchedule, Phase};
 pub use spec::{
     BwSpec, CompSpec, LsRequest, LsSpec, T1Request, T1Spec, T2Spec, T3Spec, TenantId, TenantKind,

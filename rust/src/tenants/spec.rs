@@ -78,6 +78,12 @@ pub struct LsSpec {
     pub compute_ref_ms: f64,
     /// Lognormal sigma for compute-work jitter.
     pub compute_sigma: f64,
+    /// Optional request-granularity LLM serving model
+    /// ([`crate::tenants::llm::LlmWorkloadSpec`]). `None` (every
+    /// pre-LLM scenario) keeps the flat staging → H2D → compute
+    /// pipeline byte-identical; `Some` routes arrivals through a
+    /// simulated continuous-batching engine reporting TTFT/TPOT.
+    pub llm: Option<crate::tenants::llm::LlmWorkloadSpec>,
 }
 
 /// Back-compat alias: the paper's T1 slot.
@@ -97,6 +103,7 @@ impl Default for LsSpec {
             size_mix: vec![(0.65, 0.025), (0.28, 0.050), (0.07, 0.090)],
             compute_ref_ms: 4.2,
             compute_sigma: 0.18,
+            llm: None,
         }
     }
 }
@@ -117,6 +124,7 @@ impl LsSpec {
             size_mix: vec![(0.60, 0.12), (0.30, 0.28), (0.10, 0.55)],
             compute_ref_ms: 55.0, // prefill on the reference slice
             compute_sigma: 0.22,
+            llm: None,
         }
     }
 

@@ -102,6 +102,12 @@ impl WorkloadSpec {
     pub fn expected_pcie_gbps(&self) -> f64 {
         match self {
             WorkloadSpec::LatencySensitive(s) => {
+                // Request-granularity LLM tenants charge their serving
+                // model's traffic (prefill + decode steps) instead of
+                // the flat H2D mixture.
+                if let Some(llm) = &s.llm {
+                    return llm.mean_pcie_gbps(s.mean_arrival_rps());
+                }
                 // Mean request H2D size (the size mixture is ~normalized;
                 // guard against authored mixes whose weights do not sum
                 // to 1) times the arrival rate. `mean_arrival_rps` is
@@ -255,6 +261,20 @@ impl TenantWorkload {
         }
     }
 
+    /// A latency-sensitive tenant served at request granularity: `llm`
+    /// routes every arrival through the simulated continuous-batching
+    /// engine (TTFT/TPOT SLOs) instead of the flat latency sample.
+    pub fn llm(
+        name: impl Into<String>,
+        spec: LsSpec,
+        llm: crate::tenants::llm::LlmWorkloadSpec,
+        placement: PlacementSpec,
+    ) -> TenantWorkload {
+        let mut spec = spec;
+        spec.llm = Some(llm);
+        TenantWorkload::latency_sensitive(name, spec, placement)
+    }
+
     pub fn bandwidth_heavy(
         name: impl Into<String>,
         spec: BwSpec,
@@ -342,6 +362,24 @@ mod tests {
         );
         assert_eq!(tr.kind(), TenantKind::ComputeHeavy);
         assert_eq!(tr.placement.share_with, Some(0));
+    }
+
+    #[test]
+    fn llm_constructor_attaches_spec_and_charges_serving_traffic() {
+        use crate::tenants::llm::LlmWorkloadSpec;
+        let t = TenantWorkload::llm(
+            "chat",
+            LsSpec::llm_ttft(),
+            LlmWorkloadSpec::chat_7b(),
+            PlacementSpec::dedicated(0, MigProfile::P3g40gb),
+        );
+        assert_eq!(t.kind(), TenantKind::LatencySensitive);
+        let spec = t.spec.as_ls().unwrap();
+        let llm = spec.llm.as_ref().unwrap();
+        let want = llm.mean_pcie_gbps(spec.mean_arrival_rps());
+        assert_eq!(t.spec.expected_pcie_gbps(), want);
+        // Plain LS tenants keep the flat-mixture estimate.
+        assert!(LsSpec::default().llm.is_none());
     }
 
     #[test]

@@ -581,6 +581,157 @@ fn flight_recorder_captures_signals_decisions_and_shard_windows() {
     }
 }
 
+/// The `llm_serving_mix` catalog entry reports request-granularity
+/// serving tails for the LLM tenant — and only for it — and does so
+/// deterministically (acceptance: nonzero `ttft_p99`/`tpot_p99`).
+#[test]
+fn llm_serving_mix_reports_serving_tails() {
+    let run = || {
+        let mut s = Scenario::by_name("llm_serving_mix", 7, Levers::full()).unwrap();
+        s.horizon = 300.0;
+        (s.primary, SimWorld::new(s).run())
+    };
+    let (primary, r) = run();
+    assert!(r.completed > 300, "only {} requests completed", r.completed);
+    let t = &r.per_tenant[primary];
+    let ttft = t.ttft_p99.expect("LLM tenant must report ttft_p99");
+    let tpot = t.tpot_p99.expect("LLM tenant must report tpot_p99");
+    let miss = t.ttft_slo_miss_rate.expect("LLM tenant must report TTFT misses");
+    assert!(ttft > 0.0 && ttft.is_finite(), "ttft_p99={ttft}");
+    assert!(tpot > 0.0 && tpot < ttft, "tpot_p99={tpot} vs ttft_p99={ttft}");
+    assert!((0.0..=1.0).contains(&miss), "ttft_slo_miss_rate={miss}");
+    // The serving fields are per-tenant: non-LLM tenants stay `None`.
+    for (i, t) in r.per_tenant.iter().enumerate() {
+        if i != primary {
+            assert!(
+                t.ttft_p99.is_none() && t.tpot_p99.is_none() && t.ttft_slo_miss_rate.is_none(),
+                "{}: serving tails on a non-LLM tenant",
+                t.name
+            );
+        }
+    }
+    // Same seed ⇒ bit-identical serving tails (they ride the run's
+    // deterministic event order even though they're not fingerprinted).
+    let (_, r2) = run();
+    assert_eq!(r.fingerprint(), r2.fingerprint());
+    assert_eq!(ttft.to_bits(), r2.per_tenant[primary].ttft_p99.unwrap().to_bits());
+    assert_eq!(tpot.to_bits(), r2.per_tenant[primary].tpot_p99.unwrap().to_bits());
+}
+
+/// Closed-form differential oracle for the serving path: one LLM tenant,
+/// fixed token counts, ε = 0, μ = μ_ref, an uncontended 25 GB/s PCIe
+/// link, and arrivals spaced so every request drains alone. TTFT and
+/// TPOT are then computable by hand and must match bitwise through the
+/// full platform (fabric flow + μ-scaled compute + monitor
+/// quantization).
+#[test]
+fn llm_closed_form_ttft_tpot_oracle() {
+    use predserve::gpu::MigProfile;
+    use predserve::platform::ScenarioBuilder;
+    use predserve::tenants::{
+        ArrivalProcess, LlmWorkloadSpec, LsSpec, PlacementSpec, TenantWorkload, TraceSpec,
+    };
+
+    const PROMPT: u32 = 64;
+    const DECODE: u32 = 8;
+    const N_REQS: usize = 12;
+    let mut llm = LlmWorkloadSpec::fixed(PROMPT, DECODE);
+    // Keep every quantized µs value off an integer boundary so the
+    // monitors' `(ms * 1000.0) as u64` truncation is ulp-robust.
+    llm.decode_step_ms_ref = 9.0007;
+
+    let sc = ScenarioBuilder::new("llm_oracle", 5)
+        .levers(Levers::none())
+        .horizon(120.0)
+        .sample_dt(1e9) // no mid-run sampling: the lone flow never re-rates
+        .epsilon_sigma(0.0) // ε = lognormal(0, 0) = 1 exactly
+        .tenant(TenantWorkload::latency_sensitive(
+            "oracle-llm",
+            LsSpec { slo_ms: 5000.0, ..LsSpec::default() },
+            // P2g20gb == the default μ-reference profile ⇒ μ = 1.
+            PlacementSpec::dedicated_at(0, MigProfile::P2g20gb, 0),
+        ))
+        .arrivals(
+            0,
+            ArrivalProcess::Trace(TraceSpec::from_gaps(vec![5.0; N_REQS]).unwrap()),
+        )
+        .llm(0, llm.clone())
+        .build();
+    let r = SimWorld::new(sc).run();
+    assert_eq!(r.completed, N_REQS as u64);
+
+    // TTFT = prefill PCIe leg at full link rate + prefill compute at the
+    // reference rate. Every request sees the identical step sequence, so
+    // the lifetime histogram collapses to a point and p99 is exact.
+    let io_prefill = llm.weight_gb_per_step + llm.kv_gb_per_token * PROMPT as f64;
+    let ttft_s = io_prefill / 25.0 + PROMPT as f64 / llm.prefill_tok_per_s_ref;
+    // Each decode wave runs one row: fixed PCIe overhead + one token of
+    // KV traffic + the reference step time. The first token comes from
+    // prefill, so TPOT is exactly one decode-wave duration.
+    let io_decode = llm.weight_gb_per_step + llm.kv_gb_per_token;
+    let step_s = io_decode / 25.0 + llm.decode_step_ms_ref / 1000.0;
+    let quantize = |s: f64| ((s * 1000.0 * 1000.0) as u64) as f64 / 1000.0;
+
+    let t = &r.per_tenant[0];
+    assert_eq!(
+        t.ttft_p99.map(f64::to_bits),
+        Some(quantize(ttft_s).to_bits()),
+        "ttft_p99 {:?} != closed form {} ms",
+        t.ttft_p99,
+        quantize(ttft_s)
+    );
+    assert_eq!(
+        t.tpot_p99.map(f64::to_bits),
+        Some(quantize(step_s).to_bits()),
+        "tpot_p99 {:?} != closed form {} ms",
+        t.tpot_p99,
+        quantize(step_s)
+    );
+    assert_eq!(t.ttft_slo_miss_rate, Some(0.0));
+    assert_eq!(t.miss_rate, 0.0);
+    // E2E = TTFT + (DECODE - 1) decode waves, at histogram resolution.
+    let e2e_ms = (ttft_s + (DECODE - 1) as f64 * step_s) * 1000.0;
+    assert!(
+        (t.p99_ms - e2e_ms).abs() < 0.05,
+        "e2e p99 {} !~ closed form {e2e_ms}",
+        t.p99_ms
+    );
+}
+
+/// `llm_burst_ttft` wires the controller to the TTFT tail
+/// (`SloKind::Ttft`, τ = the workload's TTFT SLO); with the levers on,
+/// the TTFT SLO miss rate must not regress vs the uncontrolled run.
+#[test]
+fn ttft_objective_controller_holds_the_ttft_tail() {
+    let run = |levers| {
+        let mut s = Scenario::by_name("llm_burst_ttft", 29, levers).unwrap();
+        s.horizon = 600.0;
+        let primary = s.primary;
+        (primary, SimWorld::new(s).run())
+    };
+    let (primary, full) = run(Levers::full());
+    let (_, none) = run(Levers::none());
+    // The controller's τ comes from the LLM workload's TTFT SLO, not the
+    // scenario's e2e threshold.
+    assert_eq!(full.controller_stats.len(), 1);
+    assert_eq!(full.controller_stats[0].tau_ms, 200.0);
+    let fm = full.per_tenant[primary]
+        .ttft_slo_miss_rate
+        .expect("controlled run must report TTFT misses");
+    let nm = none.per_tenant[primary]
+        .ttft_slo_miss_rate
+        .expect("baseline run must report TTFT misses");
+    // Direction: levers reduce (or at worst preserve, modulo a small
+    // tolerance when both tails are already healthy) the miss rate.
+    assert!(
+        fm <= nm.max(0.02),
+        "TTFT miss rate regressed under control: full {fm} vs none {nm}"
+    );
+    let fp = full.per_tenant[primary].ttft_p99.unwrap();
+    let np = none.per_tenant[primary].ttft_p99.unwrap();
+    assert!(fp > 0.0 && np > 0.0);
+}
+
 #[test]
 fn rollback_restores_on_regression() {
     // Force a pathological placement weight so the first move is bad:

@@ -1,0 +1,467 @@
+//! Property tests for the serving stack (paged KV cache, continuous
+//! batcher, simulated engine) via `util::proptest_lite`.
+//!
+//! Three harnesses, each driving a random operation schedule and checking
+//! structural invariants after EVERY operation:
+//!
+//! * [`kvcache`] — allocate/append/fork/ensure_exclusive/release against
+//!   `PagedKvCache`: `check_invariants()` plus exact free-page
+//!   conservation (free + scratch + distinct live pages == pool size).
+//! * [`batcher`] — submit/plan+admit/decode/evict against `Batcher` +
+//!   `PagedKvCache`: no request is ever dropped or duplicated,
+//!   `admitted_total` is monotonic, and `plan` never admits a request
+//!   beyond the free-page budget.
+//! * [`sim_engine`] — random submission bursts through `SimServing`:
+//!   `check_conservation()` after every wave, and every submitted id
+//!   completes exactly once when driven to idle.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use predserve::serving::batcher::{Batcher, Work};
+use predserve::serving::kvcache::{KvError, PagedKvCache, SCRATCH_PAGE, SeqId};
+use predserve::serving::request::{RequestId, SamplingParams, ServeRequest};
+use predserve::serving::SimServing;
+use predserve::tenants::{LlmRequestDims, LlmWorkloadSpec};
+use predserve::util::proptest_lite::{check, Config};
+use predserve::util::rng::Pcg64;
+
+mod kvcache {
+    use super::*;
+
+    const NUM_PAGES: usize = 24;
+    const PAGE_SIZE: usize = 8;
+    const MAX_PAGES_PER_SEQ: usize = 5;
+
+    #[derive(Clone, Debug)]
+    enum Op {
+        /// Allocate a sequence with this many tokens (may legitimately
+        /// fail with `SeqLimit` / `OutOfPages`).
+        Allocate(usize),
+        /// Append one token to the (i mod live)-th live sequence.
+        Append(usize),
+        /// Fork the (i mod live)-th live sequence.
+        Fork(usize),
+        /// Copy-on-write the last page of the (i mod live)-th sequence.
+        EnsureExclusive(usize),
+        /// Release the (i mod live)-th live sequence.
+        Release(usize),
+    }
+
+    fn gen_schedule(rng: &mut Pcg64) -> Vec<Op> {
+        let n = 1 + rng.below(60) as usize;
+        (0..n)
+            .map(|_| match rng.below(10) {
+                // Weighted toward allocate/append so pools actually fill.
+                0..=2 => Op::Allocate(1 + rng.below(48) as usize),
+                3..=5 => Op::Append(rng.below(64) as usize),
+                6 => Op::Fork(rng.below(64) as usize),
+                7 => Op::EnsureExclusive(rng.below(64) as usize),
+                _ => Op::Release(rng.below(64) as usize),
+            })
+            .collect()
+    }
+
+    /// Exact conservation: every page is free, the scratch page, or
+    /// referenced by at least one live sequence — counted once.
+    fn conservation(c: &PagedKvCache, live: &[SeqId]) -> Result<(), String> {
+        let mut pages = BTreeSet::new();
+        for &id in live {
+            for p in c.table_row(id).map_err(|e| format!("{e:?}"))? {
+                if p != SCRATCH_PAGE {
+                    pages.insert(p);
+                }
+            }
+        }
+        let accounted = c.free_pages() + 1 + pages.len();
+        if accounted != NUM_PAGES {
+            return Err(format!(
+                "page conservation violated: {} free + scratch + {} live != {NUM_PAGES}",
+                c.free_pages(),
+                pages.len()
+            ));
+        }
+        Ok(())
+    }
+
+    fn run_schedule(ops: &[Op]) -> Result<(), String> {
+        let mut c = PagedKvCache::new(NUM_PAGES, PAGE_SIZE, MAX_PAGES_PER_SEQ);
+        let mut live: Vec<SeqId> = Vec::new();
+        let mut tokens: BTreeMap<SeqId, usize> = BTreeMap::new();
+        for (step, op) in ops.iter().enumerate() {
+            let free_before = c.free_pages();
+            match *op {
+                Op::Allocate(t) => {
+                    let need = c.pages_for(t).max(1);
+                    match c.allocate(t) {
+                        Ok(id) => {
+                            if c.free_pages() != free_before - need {
+                                return Err(format!("step {step}: allocate({t}) took wrong pages"));
+                            }
+                            live.push(id);
+                            tokens.insert(id, t);
+                        }
+                        Err(KvError::SeqLimit) if need > MAX_PAGES_PER_SEQ => {}
+                        Err(KvError::OutOfPages) if need > free_before => {}
+                        Err(e) => return Err(format!("step {step}: spurious allocate error {e:?}")),
+                    }
+                }
+                Op::Append(i) if !live.is_empty() => {
+                    let id = live[i % live.len()];
+                    let before = c.tokens(id).ok_or("live seq vanished")?;
+                    match c.append_token(id) {
+                        Ok(_) => {
+                            if c.tokens(id) != Some(before + 1) {
+                                return Err(format!("step {step}: append did not add a token"));
+                            }
+                            tokens.insert(id, before + 1);
+                        }
+                        Err(KvError::SeqLimit | KvError::OutOfPages) => {
+                            if c.tokens(id) != Some(before) {
+                                return Err(format!("step {step}: failed append mutated tokens"));
+                            }
+                        }
+                        Err(e) => return Err(format!("step {step}: spurious append error {e:?}")),
+                    }
+                }
+                Op::Fork(i) if !live.is_empty() => {
+                    let id = live[i % live.len()];
+                    let nid = c.fork(id).map_err(|e| format!("step {step}: fork {e:?}"))?;
+                    if c.table_row(nid) != c.table_row(id) {
+                        return Err(format!("step {step}: fork changed the page table"));
+                    }
+                    live.push(nid);
+                    tokens.insert(nid, c.tokens(id).unwrap());
+                }
+                Op::EnsureExclusive(i) if !live.is_empty() => {
+                    let id = live[i % live.len()];
+                    match c.ensure_exclusive(id) {
+                        Ok(None) => {}
+                        Ok(Some((old, fresh))) => {
+                            if old == fresh {
+                                return Err(format!("step {step}: COW copied a page onto itself"));
+                            }
+                        }
+                        Err(KvError::OutOfPages) if free_before == 0 => {}
+                        Err(e) => return Err(format!("step {step}: spurious COW error {e:?}")),
+                    }
+                }
+                Op::Release(i) if !live.is_empty() => {
+                    let id = live.remove(i % live.len());
+                    tokens.remove(&id);
+                    c.release(id).map_err(|e| format!("step {step}: release {e:?}"))?;
+                }
+                // Live-indexed op on an empty cache: no-op.
+                _ => {}
+            }
+            c.check_invariants()
+                .map_err(|e| format!("step {step} ({op:?}): {e}"))?;
+            conservation(&c, &live).map_err(|e| format!("step {step} ({op:?}): {e}"))?;
+            for (&id, &t) in &tokens {
+                if c.tokens(id) != Some(t) {
+                    return Err(format!("step {step}: seq {id:?} tokens drifted from model"));
+                }
+            }
+        }
+        // Drain: releasing every live sequence must restore the full pool.
+        for id in live.drain(..) {
+            c.release(id).map_err(|e| format!("drain: {e:?}"))?;
+        }
+        if c.free_pages() != NUM_PAGES - 1 {
+            return Err(format!(
+                "pool leaked after full release: {} free != {}",
+                c.free_pages(),
+                NUM_PAGES - 1
+            ));
+        }
+        c.check_invariants()
+    }
+
+    #[test]
+    fn random_schedules_preserve_invariants_and_pages() {
+        check(
+            Config::default(),
+            "kvcache invariants + page conservation",
+            gen_schedule,
+            |ops| run_schedule(ops),
+        );
+    }
+}
+
+mod batcher {
+    use super::*;
+
+    const BATCH_ROWS: usize = 3;
+    const NUM_PAGES: usize = 16;
+    const PAGE_SIZE: usize = 4;
+    const MAX_PAGES_PER_SEQ: usize = 4;
+
+    #[derive(Clone, Debug)]
+    enum Op {
+        /// Submit a request with this prompt length.
+        Submit(usize),
+        /// `plan` + apply the wave (admit a prefill batch or decode).
+        Step,
+        /// Evict row (i mod rows) if occupied, releasing its pages.
+        Evict(usize),
+    }
+
+    fn gen_schedule(rng: &mut Pcg64) -> Vec<Op> {
+        let n = 1 + rng.below(80) as usize;
+        (0..n)
+            .map(|_| match rng.below(8) {
+                0..=2 => Op::Submit(1 + rng.below(14) as usize),
+                3..=6 => Op::Step,
+                _ => Op::Evict(rng.below(8) as usize),
+            })
+            .collect()
+    }
+
+    fn run_schedule(ops: &[Op]) -> Result<(), String> {
+        let mut cache = PagedKvCache::new(NUM_PAGES, PAGE_SIZE, MAX_PAGES_PER_SEQ);
+        let mut b = Batcher::new(BATCH_ROWS);
+        let mut next_id = 0u64;
+        let mut submitted: BTreeSet<RequestId> = BTreeSet::new();
+        let mut finished: BTreeSet<RequestId> = BTreeSet::new();
+        let mut last_admitted = b.admitted_total();
+        for (step, op) in ops.iter().enumerate() {
+            match *op {
+                Op::Submit(prompt) => {
+                    let id = RequestId(next_id);
+                    next_id += 1;
+                    submitted.insert(id);
+                    b.submit(ServeRequest {
+                        id,
+                        prompt_tokens: vec![1; prompt],
+                        params: SamplingParams::default(),
+                        submitted: Instant::now(),
+                    });
+                }
+                Op::Step => match b.plan(&cache) {
+                    Work::Prefill { rows } => {
+                        for row in rows {
+                            if b.rows()[row].is_some() {
+                                return Err(format!("step {step}: plan picked occupied row {row}"));
+                            }
+                            let front = b
+                                .waiting_front()
+                                .ok_or_else(|| format!("step {step}: plan over-admitted"))?;
+                            let need = cache.pages_for(front.prompt_tokens.len()).max(1);
+                            if need > cache.free_pages() {
+                                return Err(format!(
+                                    "step {step}: plan admitted {need} pages with only {} free",
+                                    cache.free_pages()
+                                ));
+                            }
+                            let seq = cache
+                                .allocate(front.prompt_tokens.len())
+                                .map_err(|e| format!("step {step}: planned admit failed {e:?}"))?;
+                            b.admit(row, seq);
+                        }
+                    }
+                    Work::Decode => {
+                        let running: Vec<usize> = (0..BATCH_ROWS)
+                            .filter(|&i| b.rows()[i].is_some())
+                            .collect();
+                        if running.is_empty() {
+                            return Err(format!("step {step}: Decode planned with no rows"));
+                        }
+                        for row in running {
+                            let seq = b.rows()[row].as_ref().unwrap().seq;
+                            match cache.append_token(seq) {
+                                Ok(_) => {}
+                                Err(KvError::SeqLimit | KvError::OutOfPages) => {
+                                    // Length-limit finish: evict + free.
+                                    let r = b.evict(row).unwrap();
+                                    cache.release(r.seq).map_err(|e| format!("{e:?}"))?;
+                                    if !finished.insert(r.req.id) {
+                                        return Err(format!("step {step}: {:?} finished twice", r.req.id));
+                                    }
+                                }
+                                Err(e) => return Err(format!("step {step}: decode append {e:?}")),
+                            }
+                        }
+                    }
+                    Work::Idle => {
+                        if b.running_len() > 0 {
+                            return Err(format!("step {step}: Idle planned with running rows"));
+                        }
+                    }
+                },
+                Op::Evict(i) => {
+                    let row = i % BATCH_ROWS;
+                    if let Some(r) = b.evict(row) {
+                        cache.release(r.seq).map_err(|e| format!("{e:?}"))?;
+                        if !finished.insert(r.req.id) {
+                            return Err(format!("step {step}: {:?} finished twice", r.req.id));
+                        }
+                    }
+                }
+            }
+            // admitted_total is monotonic.
+            if b.admitted_total() < last_admitted {
+                return Err(format!("step {step}: admitted_total went backwards"));
+            }
+            last_admitted = b.admitted_total();
+            // No request dropped or duplicated: inflight ∪ finished ==
+            // submitted, disjointly.
+            let inflight = b.inflight_ids();
+            let inflight_set: BTreeSet<RequestId> = inflight.iter().copied().collect();
+            if inflight_set.len() != inflight.len() {
+                return Err(format!("step {step}: duplicate id in flight"));
+            }
+            if let Some(id) = inflight_set.intersection(&finished).next() {
+                return Err(format!("step {step}: {id:?} both in flight and finished"));
+            }
+            let union: BTreeSet<RequestId> = inflight_set.union(&finished).copied().collect();
+            if union != submitted {
+                return Err(format!(
+                    "step {step}: request conservation violated ({} in flight + {} finished != {} submitted)",
+                    inflight_set.len(),
+                    finished.len(),
+                    submitted.len()
+                ));
+            }
+            cache
+                .check_invariants()
+                .map_err(|e| format!("step {step} ({op:?}): {e}"))?;
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn random_schedules_never_drop_or_overadmit() {
+        check(
+            Config::default(),
+            "batcher conservation + page budget",
+            gen_schedule,
+            |ops| run_schedule(ops),
+        );
+    }
+}
+
+mod sim_engine {
+    use super::*;
+
+    #[derive(Clone, Debug)]
+    enum Op {
+        /// Submit a request with these dims.
+        Submit { prompt: u32, decode: u32 },
+        /// Run one full wave (begin_step + finish_step).
+        Wave,
+    }
+
+    fn small_spec() -> LlmWorkloadSpec {
+        LlmWorkloadSpec {
+            batch_rows: 4,
+            kv_pages: 64,
+            kv_page_size: 16,
+            max_pages_per_seq: 8,
+            ..LlmWorkloadSpec::fixed(32, 8)
+        }
+    }
+
+    fn gen_schedule(rng: &mut Pcg64) -> Vec<Op> {
+        let n = 1 + rng.below(40) as usize;
+        (0..n)
+            .map(|_| {
+                if rng.below(2) == 0 {
+                    Op::Submit {
+                        // Occasionally oversized (> 8 pages * 16 tokens):
+                        // must finish immediately as LengthLimit.
+                        prompt: 1 + rng.below(160) as u32,
+                        decode: 1 + rng.below(16) as u32,
+                    }
+                } else {
+                    Op::Wave
+                }
+            })
+            .collect()
+    }
+
+    fn run_wave(s: &mut SimServing, now: &mut f64) -> Result<(), String> {
+        if let Some(step) = s.begin_step() {
+            *now += step.io_gb / 25.0 + step.ref_compute_s;
+            s.finish_step(*now);
+        }
+        s.check_conservation()
+    }
+
+    fn run_schedule(ops: &[Op]) -> Result<(), String> {
+        let mut s = SimServing::new(small_spec());
+        let mut now = 0.0;
+        let mut next_id = 0u64;
+        let mut submitted: BTreeSet<u64> = BTreeSet::new();
+        for (step, op) in ops.iter().enumerate() {
+            match *op {
+                Op::Submit { prompt, decode } => {
+                    submitted.insert(next_id);
+                    s.submit(
+                        next_id,
+                        LlmRequestDims {
+                            prompt_tokens: prompt,
+                            decode_tokens: decode,
+                        },
+                        now,
+                    );
+                    next_id += 1;
+                    now += 0.001;
+                }
+                Op::Wave => {
+                    run_wave(&mut s, &mut now).map_err(|e| format!("step {step}: {e}"))?;
+                }
+            }
+            s.check_conservation()
+                .map_err(|e| format!("step {step} ({op:?}): {e}"))?;
+        }
+        // Drive to idle; every submitted id must complete exactly once.
+        let mut guard = 0;
+        while !s.is_idle() {
+            run_wave(&mut s, &mut now).map_err(|e| format!("drain: {e}"))?;
+            guard += 1;
+            if guard > 100_000 {
+                return Err("engine failed to drain".into());
+            }
+        }
+        let mut completed: BTreeSet<u64> = BTreeSet::new();
+        for c in s.drain_completions() {
+            if !completed.insert(c.id) {
+                return Err(format!("request {} completed twice", c.id));
+            }
+            if !(c.ttft_s >= 0.0 && c.e2e_s >= c.ttft_s) {
+                return Err(format!(
+                    "request {} has inconsistent timings (ttft {} e2e {})",
+                    c.id, c.ttft_s, c.e2e_s
+                ));
+            }
+        }
+        if completed != submitted {
+            return Err(format!(
+                "completion conservation violated: {} completed != {} submitted",
+                completed.len(),
+                submitted.len()
+            ));
+        }
+        if s.completed_total() != s.submitted_total() {
+            return Err("engine counters disagree after drain".into());
+        }
+        if s.free_pages() != s.spec().kv_pages - 1 {
+            return Err(format!(
+                "KV pages leaked after drain: {} free != {}",
+                s.free_pages(),
+                s.spec().kv_pages - 1
+            ));
+        }
+        s.check_conservation()
+    }
+
+    #[test]
+    fn random_bursts_conserve_requests_and_pages() {
+        check(
+            Config { cases: 96, seed: 0x5eed },
+            "sim engine request + page conservation",
+            gen_schedule,
+            |ops| run_schedule(ops),
+        );
+    }
+}
