@@ -238,6 +238,7 @@ impl HostAllocator {
                     0.0
                 },
                 active: true,
+                stale: false,
             })
             .collect();
         let numa_io_gbps: Vec<f64> = self

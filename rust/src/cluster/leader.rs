@@ -14,11 +14,13 @@
 
 use std::net::TcpListener;
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::alloc::{AutoRequest, FleetAllocator, FleetPlan};
 use crate::controller::{ControllerConfig, Levers};
+use crate::faults::FaultPlan;
 use crate::platform::Scenario;
 use crate::tenants::{TenantKind, TenantWorkload};
 use crate::topo::HostTopology;
@@ -26,23 +28,100 @@ use crate::topo::HostTopology;
 use super::proto::{read_msg, write_msg, Msg};
 use super::worker::Worker;
 
-/// One node's aggregated run result.
+/// One node's run result. A fleet run must survive individual node loss
+/// (crash, timeout, malformed reply), so a report row is either stats or
+/// a typed failure — a dead node is *reported*, never silently dropped
+/// from `per_node`.
 #[derive(Clone, Debug)]
-pub struct NodeReport {
-    pub node: String,
-    pub miss_rate: f64,
-    pub p99_ms: f64,
-    pub rps: f64,
+pub enum NodeReport {
+    /// The node completed its run and replied.
+    Ok {
+        node: String,
+        miss_rate: f64,
+        p99_ms: f64,
+        rps: f64,
+        completed: u64,
+    },
+    /// The node crashed, timed out, or replied with garbage; `reason` is
+    /// the transport/protocol diagnosis.
+    Failed { node: String, reason: String },
+}
+
+impl NodeReport {
+    pub fn node(&self) -> &str {
+        match self {
+            NodeReport::Ok { node, .. } | NodeReport::Failed { node, .. } => node,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, NodeReport::Ok { .. })
+    }
+
+    pub fn failure(&self) -> Option<&str> {
+        match self {
+            NodeReport::Failed { reason, .. } => Some(reason.as_str()),
+            NodeReport::Ok { .. } => None,
+        }
+    }
+}
+
+/// Fleet-run robustness knobs.
+#[derive(Clone, Debug)]
+pub struct ClusterOpts {
+    /// Per-node reply deadline (seconds), enforced as a socket read
+    /// timeout on the leader side. A worker that neither replies nor
+    /// drops its connection within this window is declared
+    /// [`NodeReport::Failed`] instead of hanging the whole experiment.
+    /// CLI: `--node-timeout SECS`.
+    pub node_timeout_s: f64,
+    /// Nodes scheduled to crash on dispatch — populated from a scenario's
+    /// `FaultSpec::WorkerCrash` entries via [`ClusterOpts::from_fault_plan`].
+    pub crash_nodes: Vec<String>,
+}
+
+impl Default for ClusterOpts {
+    fn default() -> ClusterOpts {
+        ClusterOpts {
+            node_timeout_s: 300.0,
+            crash_nodes: Vec::new(),
+        }
+    }
+}
+
+impl ClusterOpts {
+    /// Extract the cluster-level faults (worker crashes) from a plan; the
+    /// sim-level specs are ignored here — they ride inside each node's
+    /// scenario, not the dispatch layer.
+    pub fn from_fault_plan(plan: &FaultPlan) -> ClusterOpts {
+        ClusterOpts {
+            crash_nodes: plan.crash_nodes(),
+            ..ClusterOpts::default()
+        }
+    }
+
+    pub fn node_timeout(mut self, secs: f64) -> ClusterOpts {
+        self.node_timeout_s = secs;
+        self
+    }
+
+    fn read_timeout(&self) -> Option<Duration> {
+        (self.node_timeout_s > 0.0 && self.node_timeout_s.is_finite())
+            .then(|| Duration::from_secs_f64(self.node_timeout_s))
+    }
 }
 
 /// Aggregated cluster results.
 #[derive(Clone, Debug)]
 pub struct ClusterReport {
     pub per_node: Vec<NodeReport>,
+    /// Means/totals below aggregate the `Ok` nodes only.
     pub mean_miss_rate: f64,
     pub mean_p99_ms: f64,
     pub total_completed: u64,
     pub total_rps: f64,
+    /// Nodes that crashed/timed out (count of `NodeReport::Failed` rows).
+    pub failed_nodes: usize,
     /// Fleet dispatch only: tenant names no node could safely place now.
     pub queued: Vec<String>,
     /// Fleet dispatch only: tenant names structurally impossible anywhere.
@@ -50,22 +129,34 @@ pub struct ClusterReport {
 }
 
 impl ClusterReport {
-    fn aggregate(results: Vec<(String, f64, f64, f64, u64)>) -> ClusterReport {
-        let n = results.len() as f64;
+    fn aggregate(per_node: Vec<NodeReport>) -> ClusterReport {
+        let mut n = 0u64;
+        let (mut miss, mut p99, mut rps_sum) = (0.0, 0.0, 0.0);
+        let mut completed_sum = 0u64;
+        for r in &per_node {
+            if let NodeReport::Ok {
+                miss_rate,
+                p99_ms,
+                rps,
+                completed,
+                ..
+            } = r
+            {
+                n += 1;
+                miss += miss_rate;
+                p99 += p99_ms;
+                rps_sum += rps;
+                completed_sum += completed;
+            }
+        }
+        let denom = if n > 0 { n as f64 } else { 1.0 };
         ClusterReport {
-            mean_miss_rate: results.iter().map(|r| r.1).sum::<f64>() / n,
-            mean_p99_ms: results.iter().map(|r| r.2).sum::<f64>() / n,
-            total_rps: results.iter().map(|r| r.3).sum::<f64>(),
-            total_completed: results.iter().map(|r| r.4).sum::<u64>(),
-            per_node: results
-                .into_iter()
-                .map(|(node, miss_rate, p99_ms, rps, _)| NodeReport {
-                    node,
-                    miss_rate,
-                    p99_ms,
-                    rps,
-                })
-                .collect(),
+            mean_miss_rate: miss / denom,
+            mean_p99_ms: p99 / denom,
+            total_rps: rps_sum,
+            total_completed: completed_sum,
+            failed_nodes: per_node.iter().filter(|r| !r.is_ok()).count(),
+            per_node,
             queued: Vec::new(),
             rejected: Vec::new(),
         }
@@ -78,10 +169,14 @@ pub struct Leader;
 impl Leader {
     /// Launch workers over real TCP (localhost) and collect their
     /// registrations. Returns the accepted `(node, stream)` pairs plus
-    /// the worker join handles.
+    /// the worker join handles. Nodes named in `opts.crash_nodes` are
+    /// launched as [`Worker::crashing`] — the fault harness for
+    /// `FaultSpec::WorkerCrash`. Accepted streams carry the per-node
+    /// read deadline so a hung worker cannot stall the leader forever.
     #[allow(clippy::type_complexity)]
     fn launch(
         nodes: usize,
+        opts: &ClusterOpts,
     ) -> Result<(
         Vec<(String, std::net::TcpStream)>,
         Vec<thread::JoinHandle<Result<()>>>,
@@ -91,18 +186,26 @@ impl Leader {
         let mut joins = Vec::new();
         for n in 0..nodes {
             let node = format!("node{n}");
+            let crash = opts.crash_nodes.iter().any(|c| *c == node);
             let addr_s = addr.to_string();
             joins.push(thread::spawn(move || {
-                let w = Worker::new(node);
+                let w = if crash {
+                    Worker::crashing(node)
+                } else {
+                    Worker::new(node)
+                };
                 w.serve(&addr_s)
             }));
         }
         let mut streams = Vec::new();
         for _ in 0..nodes {
             let (mut stream, _) = listener.accept()?;
+            stream.set_read_timeout(opts.read_timeout())?;
             match read_msg(&mut stream)? {
                 Msg::Hello { node, gpus } => {
-                    assert_eq!(gpus, 8, "p4d node must expose 8 GPUs");
+                    if gpus != 8 {
+                        return Err(anyhow!("p4d node '{node}' must expose 8 GPUs, got {gpus}"));
+                    }
                     streams.push((node, stream));
                 }
                 other => return Err(anyhow!("expected Hello, got {other:?}")),
@@ -112,28 +215,67 @@ impl Leader {
     }
 
     /// Gather one `RunDone` per node, send `Shutdown`, join the workers.
+    /// Graceful partial-fleet degradation: a node that crashed, timed
+    /// out, or replied with a malformed frame becomes a
+    /// [`NodeReport::Failed`] row — the surviving nodes' results are
+    /// still collected and aggregated.
     fn gather(
         mut streams: Vec<(String, std::net::TcpStream)>,
         joins: Vec<thread::JoinHandle<Result<()>>>,
-    ) -> Result<Vec<(String, f64, f64, f64, u64)>> {
-        let mut results = Vec::new();
+    ) -> Vec<NodeReport> {
+        let mut reports = Vec::new();
         for (node, stream) in streams.iter_mut() {
-            match read_msg(stream)? {
-                Msg::RunDone {
+            let report = match read_msg(stream) {
+                Ok(Msg::RunDone {
+                    scenario,
                     miss_rate,
                     p99_ms,
                     rps,
                     completed,
                     ..
-                } => results.push((node.clone(), miss_rate, p99_ms, rps, completed)),
-                other => return Err(anyhow!("expected RunDone, got {other:?}")),
+                }) => {
+                    // Workers report refusals in-band (see worker.rs):
+                    // surface them as failures, not as zero-rps stats.
+                    if scenario.starts_with("error:") {
+                        NodeReport::Failed {
+                            node: node.clone(),
+                            reason: scenario,
+                        }
+                    } else {
+                        NodeReport::Ok {
+                            node: node.clone(),
+                            miss_rate,
+                            p99_ms,
+                            rps,
+                            completed,
+                        }
+                    }
+                }
+                Ok(other) => NodeReport::Failed {
+                    node: node.clone(),
+                    reason: format!("expected RunDone, got {other:?}"),
+                },
+                Err(e) => NodeReport::Failed {
+                    node: node.clone(),
+                    reason: e.to_string(),
+                },
+            };
+            if let Some(reason) = report.failure() {
+                crate::log_warn!("cluster.leader", "{node}: degraded — {reason}");
             }
-            write_msg(stream, &Msg::Shutdown)?;
+            // Best-effort: a crashed peer already hung up, and that is
+            // exactly the case this path exists for.
+            let _ = write_msg(stream, &Msg::Shutdown);
+            reports.push(report);
         }
         for j in joins {
-            j.join().map_err(|_| anyhow!("worker panicked"))??;
+            match j.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => crate::log_warn!("cluster.leader", "worker exited with error: {e}"),
+                Err(_) => crate::log_warn!("cluster.leader", "worker thread panicked"),
+            }
         }
-        Ok(results)
+        reports
     }
 
     /// Launch `nodes` in-process workers, dispatch the same scenario to
@@ -150,7 +292,29 @@ impl Leader {
         workload: &str,
         shards: usize,
     ) -> Result<ClusterReport> {
-        let (mut streams, joins) = Leader::launch(nodes)?;
+        Leader::run_cluster_opts(
+            nodes,
+            seed,
+            levers,
+            horizon_s,
+            workload,
+            shards,
+            &ClusterOpts::default(),
+        )
+    }
+
+    /// [`Leader::run_cluster`] with explicit robustness knobs (node
+    /// deadline, scheduled worker crashes).
+    pub fn run_cluster_opts(
+        nodes: usize,
+        seed: u64,
+        levers: &str,
+        horizon_s: f64,
+        workload: &str,
+        shards: usize,
+        opts: &ClusterOpts,
+    ) -> Result<ClusterReport> {
+        let (mut streams, joins) = Leader::launch(nodes, opts)?;
         for (n, (_, stream)) in streams.iter_mut().enumerate() {
             // Distinct seed per node: independent hosts, same config.
             write_msg(
@@ -164,7 +328,7 @@ impl Leader {
                 },
             )?;
         }
-        Ok(ClusterReport::aggregate(Leader::gather(streams, joins)?))
+        Ok(ClusterReport::aggregate(Leader::gather(streams, joins)))
     }
 
     /// Compute the fleet plan for `n_tenants` auto-placed tenants over
@@ -199,6 +363,18 @@ impl Leader {
         horizon_s: f64,
         n_tenants: usize,
     ) -> Result<ClusterReport> {
+        Leader::run_fleet_opts(nodes, seed, levers, horizon_s, n_tenants, &ClusterOpts::default())
+    }
+
+    /// [`Leader::run_fleet`] with explicit robustness knobs.
+    pub fn run_fleet_opts(
+        nodes: usize,
+        seed: u64,
+        levers: &str,
+        horizon_s: f64,
+        n_tenants: usize,
+        opts: &ClusterOpts,
+    ) -> Result<ClusterReport> {
         let (tenants, plan) = Leader::plan_fleet(nodes, seed, n_tenants);
         for h in &plan.hosts {
             let has_ls = h
@@ -214,7 +390,7 @@ impl Leader {
             }
         }
 
-        let (mut streams, joins) = Leader::launch(nodes)?;
+        let (mut streams, joins) = Leader::launch(nodes, opts)?;
         // Workers connect concurrently, so accept order is a thread race:
         // match each worker to its planned host by the self-reported
         // name ("node{n}"), never by arrival order. The per-node world
@@ -238,7 +414,7 @@ impl Leader {
                 },
             )?;
         }
-        let mut report = ClusterReport::aggregate(Leader::gather(streams, joins)?);
+        let mut report = ClusterReport::aggregate(Leader::gather(streams, joins));
         report.queued = plan.queued.iter().map(|&i| tenants[i].name.clone()).collect();
         report.rejected = plan
             .rejected
@@ -257,10 +433,39 @@ mod tests {
     fn two_node_cluster_roundtrip() {
         let report = Leader::run_cluster(2, 21, "static", 45.0, "single", 2).unwrap();
         assert_eq!(report.per_node.len(), 2);
+        assert_eq!(report.failed_nodes, 0);
+        assert!(report.per_node.iter().all(|r| r.is_ok()));
         assert!(report.total_completed > 4_000);
         assert!(report.mean_p99_ms > 0.0);
         // Distinct nodes reported.
-        assert_ne!(report.per_node[0].node, report.per_node[1].node);
+        assert_ne!(report.per_node[0].node(), report.per_node[1].node());
+    }
+
+    #[test]
+    fn worker_crash_degrades_to_partial_fleet_report() {
+        use crate::faults::FaultSpec;
+        // One node scheduled to die on dispatch (FaultSpec::WorkerCrash):
+        // the run must complete, reporting Failed for exactly that node
+        // and real stats for the survivor.
+        let plan = FaultPlan::new(vec![FaultSpec::WorkerCrash {
+            node: "node1".into(),
+        }]);
+        let opts = ClusterOpts::from_fault_plan(&plan).node_timeout(60.0);
+        let report =
+            Leader::run_cluster_opts(2, 21, "static", 45.0, "single", 1, &opts).unwrap();
+        assert_eq!(report.per_node.len(), 2);
+        assert_eq!(report.failed_nodes, 1);
+        for r in &report.per_node {
+            if r.node() == "node1" {
+                assert!(!r.is_ok(), "crashed node must be reported Failed");
+                assert!(r.failure().is_some());
+            } else {
+                assert!(r.is_ok(), "surviving node degraded: {:?}", r.failure());
+            }
+        }
+        // Aggregates cover the surviving node only — and it did real work.
+        assert!(report.total_completed > 2_000);
+        assert!(report.mean_p99_ms > 0.0);
     }
 
     #[test]

@@ -15,6 +15,6 @@ pub mod proto;
 pub mod worker;
 pub mod leader;
 
-pub use leader::{ClusterReport, Leader, NodeReport};
-pub use proto::{read_msg, write_msg, Msg};
+pub use leader::{ClusterOpts, ClusterReport, Leader, NodeReport};
+pub use proto::{read_msg, write_msg, Msg, ProtoError};
 pub use worker::Worker;

@@ -3,8 +3,60 @@
 use crate::alloc::Assignment;
 use crate::gpu::MigProfile;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
+
+/// Typed wire-protocol failure. A leader surviving a flaky fleet needs
+/// to tell *transport* loss (`Io` — the peer died mid-frame, retryable
+/// against another node) from *protocol* corruption (`Malformed` /
+/// `UnknownType` — a buggy or hostile peer; never retry, just fail that
+/// node). The old `anyhow!` strings could not be matched on, and the
+/// worker used to `panic!`/`assert!` its way out of malformed frames —
+/// a single bad message would take the whole node down.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// Socket-level failure (EOF, reset, read timeout). The peer is gone
+    /// or unreachable — degrade that node, keep the fleet.
+    Io(std::io::Error),
+    /// Length prefix beyond the 1 MiB frame cap — refuse before
+    /// allocating (a corrupted prefix must not become an OOM).
+    Oversize { len: usize },
+    /// Frame body is not UTF-8.
+    BadUtf8,
+    /// Frame body is not parseable JSON.
+    BadJson(String),
+    /// Structurally valid JSON missing or mistyping a required field.
+    Malformed { field: &'static str },
+    /// A `type` tag this build does not understand.
+    UnknownType(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "wire io error: {e}"),
+            ProtoError::Oversize { len } => write!(f, "oversized message ({len} bytes)"),
+            ProtoError::BadUtf8 => write!(f, "message body is not utf-8"),
+            ProtoError::BadJson(e) => write!(f, "bad message json: {e}"),
+            ProtoError::Malformed { field } => write!(f, "malformed message: bad field '{field}'"),
+            ProtoError::UnknownType(t) => write!(f, "unknown message type '{t}'"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ProtoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> ProtoError {
+        ProtoError::Io(e)
+    }
+}
 
 /// Cluster messages.
 #[derive(Clone, Debug, PartialEq)]
@@ -144,11 +196,11 @@ impl Msg {
         }
     }
 
-    pub fn from_json(j: &Json) -> Result<Msg> {
+    pub fn from_json(j: &Json) -> Result<Msg, ProtoError> {
         let ty = j
             .get("type")
             .as_str()
-            .ok_or_else(|| anyhow!("message missing type"))?;
+            .ok_or(ProtoError::Malformed { field: "type" })?;
         Ok(match ty {
             "run" => Msg::RunScenario {
                 seed: j.get("seed").as_f64().unwrap_or(0.0) as u64,
@@ -165,21 +217,21 @@ impl Msg {
                         .get("profile")
                         .as_str()
                         .and_then(MigProfile::from_name)
-                        .ok_or_else(|| anyhow!("run_tenants: bad profile"))?;
+                        .ok_or(ProtoError::Malformed { field: "profile" })?;
                     assigned.push(Assignment {
                         tenant: a
                             .get("tenant")
                             .as_usize()
-                            .ok_or_else(|| anyhow!("run_tenants: missing tenant index"))?,
+                            .ok_or(ProtoError::Malformed { field: "tenant" })?,
                         gpu: a
                             .get("gpu")
                             .as_usize()
-                            .ok_or_else(|| anyhow!("run_tenants: missing gpu"))?,
+                            .ok_or(ProtoError::Malformed { field: "gpu" })?,
                         profile,
                         start: a
                             .get("start")
                             .as_usize()
-                            .ok_or_else(|| anyhow!("run_tenants: missing start"))?,
+                            .ok_or(ProtoError::Malformed { field: "start" })?,
                     });
                 }
                 // Seeds arrive as exact strings (see to_json); accept a
@@ -190,8 +242,7 @@ impl Msg {
                         .and_then(|s| s.parse().ok())
                         .or_else(|| j.get(key).as_f64().map(|v| v as u64))
                 };
-                let seed = seed_of("seed")
-                    .ok_or_else(|| anyhow!("run_tenants: missing seed"))?;
+                let seed = seed_of("seed").ok_or(ProtoError::Malformed { field: "seed" })?;
                 Msg::RunTenantSet {
                     seed,
                     // Older leaders omit it: fall back to the list seed.
@@ -205,7 +256,7 @@ impl Msg {
                     count: j
                         .get("count")
                         .as_usize()
-                        .ok_or_else(|| anyhow!("run_tenants: missing count"))?,
+                        .ok_or(ProtoError::Malformed { field: "count" })?,
                     assigned,
                 }
             }
@@ -224,13 +275,13 @@ impl Msg {
                 node: j.get("node").as_str().unwrap_or("?").to_string(),
                 gpus: j.get("gpus").as_usize().unwrap_or(0),
             },
-            other => bail!("unknown message type {other}"),
+            other => return Err(ProtoError::UnknownType(other.to_string())),
         })
     }
 }
 
 /// Write a length-prefixed message.
-pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<(), ProtoError> {
     let body = msg.to_json().to_string().into_bytes();
     w.write_all(&(body.len() as u32).to_be_bytes())?;
     w.write_all(&body)?;
@@ -239,17 +290,17 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
 }
 
 /// Read a length-prefixed message.
-pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg, ProtoError> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_be_bytes(len_buf) as usize;
     if len > 1 << 20 {
-        bail!("oversized message ({len} bytes)");
+        return Err(ProtoError::Oversize { len });
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
-    let text = String::from_utf8(body)?;
-    let j = Json::parse(&text).map_err(|e| anyhow!("bad message json: {e}"))?;
+    let text = String::from_utf8(body).map_err(|_| ProtoError::BadUtf8)?;
+    let j = Json::parse(&text).map_err(|e| ProtoError::BadJson(e.to_string()))?;
     Msg::from_json(&j)
 }
 
@@ -340,6 +391,51 @@ mod tests {
     fn rejects_oversized() {
         let mut buf = Vec::new();
         buf.extend_from_slice(&(u32::MAX).to_be_bytes());
-        assert!(read_msg(&mut &buf[..]).is_err());
+        match read_msg(&mut &buf[..]) {
+            Err(ProtoError::Oversize { len }) => assert_eq!(len, u32::MAX as usize),
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+    }
+
+    fn frame(body: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        buf.extend_from_slice(body);
+        buf
+    }
+
+    #[test]
+    fn malformed_frames_yield_typed_errors_not_panics() {
+        // Truncated frame: transport-level.
+        let mut buf = frame(b"{\"type\":\"run\"}");
+        buf.truncate(buf.len() - 3);
+        assert!(matches!(read_msg(&mut &buf[..]), Err(ProtoError::Io(_))));
+        // Invalid UTF-8 body.
+        let buf = frame(&[0xff, 0xfe, 0xfd]);
+        assert!(matches!(read_msg(&mut &buf[..]), Err(ProtoError::BadUtf8)));
+        // Valid UTF-8, broken JSON.
+        let buf = frame(b"{nope");
+        assert!(matches!(read_msg(&mut &buf[..]), Err(ProtoError::BadJson(_))));
+        // Valid JSON missing the type tag.
+        let buf = frame(b"{\"seed\":1}");
+        assert!(matches!(
+            read_msg(&mut &buf[..]),
+            Err(ProtoError::Malformed { field: "type" })
+        ));
+        // Unknown type tag.
+        let buf = frame(b"{\"type\":\"explode\"}");
+        match read_msg(&mut &buf[..]) {
+            Err(ProtoError::UnknownType(t)) => assert_eq!(t, "explode"),
+            other => panic!("expected UnknownType, got {other:?}"),
+        }
+        // run_tenants with a bad assignment: field-level diagnosis.
+        let buf = frame(
+            b"{\"type\":\"run_tenants\",\"seed\":\"1\",\"count\":2,\
+              \"assigned\":[{\"tenant\":0,\"gpu\":0,\"profile\":\"bogus\",\"start\":0}]}",
+        );
+        assert!(matches!(
+            read_msg(&mut &buf[..]),
+            Err(ProtoError::Malformed { field: "profile" })
+        ));
     }
 }

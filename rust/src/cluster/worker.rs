@@ -15,6 +15,11 @@ use super::proto::{read_msg, write_msg, Msg};
 /// A cluster worker process/thread.
 pub struct Worker {
     pub node: String,
+    /// Fault-injection hook (`FaultSpec::WorkerCrash`): accept the first
+    /// dispatched run, then drop the connection without replying —
+    /// modelling a node that dies mid-job. The leader sees EOF where a
+    /// `RunDone` was due and must degrade to a partial-fleet report.
+    crash_on_dispatch: bool,
 }
 
 fn levers_from_str(s: &str) -> Levers {
@@ -29,7 +34,20 @@ fn levers_from_str(s: &str) -> Levers {
 
 impl Worker {
     pub fn new(node: impl Into<String>) -> Worker {
-        Worker { node: node.into() }
+        Worker {
+            node: node.into(),
+            crash_on_dispatch: false,
+        }
+    }
+
+    /// A worker scheduled to crash on its first dispatch (see
+    /// [`Worker::crash_on_dispatch`]). Only the test/fault harness builds
+    /// these; a production worker is always `new`.
+    pub fn crashing(node: impl Into<String>) -> Worker {
+        Worker {
+            node: node.into(),
+            crash_on_dispatch: true,
+        }
     }
 
     /// Execute one scenario request locally. `workload` is any catalog
@@ -125,7 +143,27 @@ impl Worker {
             .controller(ControllerConfig::dense_pack(lv))
             .horizon(horizon_s);
         for a in assigned {
-            assert!(a.tenant < all.len(), "assignment beyond fleet list");
+            // A leader bug (or corrupted frame that slipped past the
+            // parser) must not panic the node: report it as an error run
+            // the leader can see and degrade on.
+            if a.tenant >= all.len() {
+                crate::log_warn!(
+                    "cluster.worker",
+                    "assignment index {} beyond fleet list of {}; refusing dispatch",
+                    a.tenant,
+                    all.len()
+                );
+                return Msg::RunDone {
+                    node: self.node.clone(),
+                    scenario: format!("error:assignment_out_of_range:{}", a.tenant),
+                    miss_rate: 1.0,
+                    p99_ms: 0.0,
+                    p95_ms: 0.0,
+                    rps: 0.0,
+                    completed: 0,
+                    moves_per_hour: 0.0,
+                };
+            }
             let mut t = all[a.tenant].clone();
             t.placement = PlacementSpec::dedicated_at(a.gpu, a.profile, a.start);
             b = b.tenant(t);
@@ -144,9 +182,14 @@ impl Worker {
         }
     }
 
-    /// Connect to the leader and serve until `Shutdown`.
+    /// Connect to the leader and serve until `Shutdown`. A literal
+    /// socket address gets a bounded connect (30 s) so a worker aimed at
+    /// a dead leader fails fast instead of hanging in SYN retries.
     pub fn serve(&self, leader_addr: &str) -> Result<()> {
-        let mut stream = TcpStream::connect(leader_addr)?;
+        let mut stream = match leader_addr.parse::<std::net::SocketAddr>() {
+            Ok(sa) => TcpStream::connect_timeout(&sa, std::time::Duration::from_secs(30))?,
+            Err(_) => TcpStream::connect(leader_addr)?,
+        };
         write_msg(
             &mut stream,
             &Msg::Hello {
@@ -163,6 +206,10 @@ impl Worker {
                     workload,
                     shards,
                 } => {
+                    if self.crash_on_dispatch {
+                        crate::log_warn!("cluster.worker", "{}: injected crash on dispatch", self.node);
+                        return Ok(());
+                    }
                     let done = self.run_scenario(seed, &levers, horizon_s, &workload, shards);
                     write_msg(&mut stream, &done)?;
                 }
@@ -175,6 +222,10 @@ impl Worker {
                     count,
                     assigned,
                 } => {
+                    if self.crash_on_dispatch {
+                        crate::log_warn!("cluster.worker", "{}: injected crash on dispatch", self.node);
+                        return Ok(());
+                    }
                     let done = self.run_tenant_set(
                         seed, world_seed, &levers, horizon_s, &fleet, count, &assigned,
                     );
@@ -300,6 +351,30 @@ mod tests {
                 assert_eq!(scenario, "error:unknown_fleet:trace_pack");
                 assert_eq!(completed, 0);
                 assert_eq!(miss_rate, 1.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_range_assignment_is_refused_not_panicked() {
+        use crate::alloc::Assignment;
+        use crate::gpu::MigProfile;
+        let w = Worker::new("bounds-node");
+        let bad = [Assignment {
+            tenant: 99, // fleet list only has 4
+            gpu: 0,
+            profile: MigProfile::P1g10gb,
+            start: 0,
+        }];
+        match w.run_tenant_set(5, 5, "static", 30.0, "auto_pack", 4, &bad) {
+            Msg::RunDone {
+                scenario,
+                completed,
+                ..
+            } => {
+                assert_eq!(scenario, "error:assignment_out_of_range:99");
+                assert_eq!(completed, 0);
             }
             other => panic!("unexpected {other:?}"),
         }

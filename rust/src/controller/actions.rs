@@ -43,6 +43,32 @@ pub enum Action {
     Rollback { tenant: TenantId },
 }
 
+/// What actually happened when the platform applied an [`Action`].
+///
+/// Pre-fault-injection the platform could not fail, so every call was
+/// an implicit `Applied`. Under a `FaultPlan` with `ReconfigFlaky`
+/// windows, MIG/placement actuations become fallible and slow; the
+/// controller FSM uses these outcomes to retry with bounded
+/// exponential backoff *without* burning its dwell clock, and to fall
+/// back to guardrails-only mode when retries are exhausted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ActionOutcome {
+    /// The actuation took effect (or was a benign no-op).
+    Applied,
+    /// The actuation failed and left the host configuration unchanged.
+    Failed { reason: &'static str },
+    /// The actuation exceeded its deadline; treated like a failure for
+    /// retry purposes but audited distinctly.
+    TimedOut,
+}
+
+impl ActionOutcome {
+    /// Did the host configuration change as requested?
+    pub fn is_applied(&self) -> bool {
+        matches!(self, ActionOutcome::Applied)
+    }
+}
+
 impl Action {
     /// Does this action pause the tenant (and hence count against the
     /// dwell/cool-down budget)? Guardrails are "lightweight" — they do

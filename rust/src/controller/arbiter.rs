@@ -45,9 +45,9 @@ use std::collections::BTreeMap;
 use crate::telemetry::SignalSnapshot;
 use crate::tenants::TenantId;
 
-use super::actions::Action;
+use super::actions::{Action, ActionOutcome};
 use super::config::ControllerConfig;
-use super::fsm::{Controller, CtlState, Proposal, ProposalClass};
+use super::fsm::{Controller, CtlState, OutcomeFeedback, Proposal, ProposalClass};
 use super::view::PlannerView;
 
 /// One tenant the control plane protects.
@@ -256,6 +256,33 @@ impl Arbiter {
         out
     }
 
+    /// Route a platform actuation outcome back to the controller that
+    /// committed the action (disruptive actions carry their protected
+    /// tenant). A failed disruptive change restores that controller's
+    /// pre-commit state — clearing its `Validating` window, which
+    /// releases the host-wide serialization slot on the next tick
+    /// (`validating_tenant` is recomputed from controller states).
+    pub fn on_action_outcome(
+        &mut self,
+        t: f64,
+        action: &Action,
+        outcome: &ActionOutcome,
+    ) -> OutcomeFeedback {
+        let tenant = match action {
+            Action::ChangeIsolation { tenant, .. } | Action::Rollback { tenant } => *tenant,
+            _ => return OutcomeFeedback::None,
+        };
+        match self.controllers.iter_mut().find(|c| c.primary() == tenant) {
+            Some(c) => c.on_action_outcome(t, action, outcome),
+            None => OutcomeFeedback::None,
+        }
+    }
+
+    /// How many controllers have degraded to guardrails-only mode.
+    pub fn degraded_controllers(&self) -> u64 {
+        self.controllers.iter().filter(|c| c.is_degraded()).count() as u64
+    }
+
     /// Record guardrail ownership: the controller whose trigger applied
     /// a throttle/quota is the only one allowed to loosen it later.
     /// Same-tick duplicates overwrite in controller order (reconciled to
@@ -419,6 +446,7 @@ mod tests {
             pcie_gbps: 0.5,
             block_io_gbps: 0.0,
             active: true,
+            stale: false,
         };
         SignalSnapshot {
             t: 0.0,

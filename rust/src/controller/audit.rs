@@ -86,7 +86,9 @@ impl AuditLog {
 
     /// Disruptive moves (placement + mig + rollback) per hour over a run of
     /// `duration_s` — Table 4 reports "< 5 /hr". Deferred proposals carry
-    /// a disruptive action kind but never executed, so they don't count.
+    /// a disruptive action kind but never executed, so they don't count;
+    /// neither do retry/degraded bookkeeping entries (the attempt they
+    /// describe was already counted on its trigger edge).
     pub fn moves_per_hour(&self, duration_s: f64) -> f64 {
         if duration_s <= 0.0 {
             return 0.0;
@@ -95,8 +97,10 @@ impl AuditLog {
             .entries
             .iter()
             .filter(|e| {
-                e.edge != DecisionEdge::Defer
-                    && matches!(
+                !matches!(
+                    e.edge,
+                    DecisionEdge::Defer | DecisionEdge::Retry | DecisionEdge::Degraded
+                ) && matches!(
                         e.action,
                         DecisionKind::Mig
                             | DecisionKind::Placement

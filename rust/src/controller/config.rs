@@ -130,6 +130,17 @@ pub struct ControllerConfig {
     /// Latency signal compared against τ ([`SloKind::E2e`] keeps the
     /// historical behavior byte-for-byte).
     pub objective: SloKind,
+    /// Fault hardening: failed disruptive actuations are retried with
+    /// bounded exponential backoff this many times before the
+    /// controller degrades to guardrails-only mode. The retry path
+    /// never burns the dwell clock (a change that didn't happen isn't
+    /// a change).
+    pub max_action_retries: u32,
+    /// Fault hardening: observations a held-last (stale) signal stays
+    /// trustworthy. Within the TTL the controller behaves normally
+    /// minus relaxation; beyond it, no disruptive proposals until a
+    /// fresh signal arrives (guardrails stay armed).
+    pub stale_ttl_obs: u64,
 }
 
 impl Default for ControllerConfig {
@@ -155,6 +166,8 @@ impl Default for ControllerConfig {
             safe_score: 1.5,
             link_headroom: 0.85,
             objective: SloKind::E2e,
+            max_action_retries: 3,
+            stale_ttl_obs: 5,
         }
     }
 }

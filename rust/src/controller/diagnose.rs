@@ -159,6 +159,7 @@ mod tests {
                     pcie_gbps: 0.5,
                     block_io_gbps: 0.1,
                     active: true,
+                    stale: false,
                 },
                 TenantSignal {
                     tenant: T2,
@@ -167,6 +168,7 @@ mod tests {
                     pcie_gbps: t2_pcie,
                     block_io_gbps: t2_io,
                     active: t2_pcie > 0.0,
+                    stale: false,
                 },
                 TenantSignal {
                     tenant: T3,
@@ -175,6 +177,7 @@ mod tests {
                     pcie_gbps: 0.05,
                     block_io_gbps: 0.0,
                     active: t3_active,
+                    stale: false,
                 },
             ],
             links: vec![LinkSignal {

@@ -31,7 +31,7 @@ use crate::tenants::TenantId;
 use crate::trace::{DecisionEdge, DecisionKind};
 use crate::util::ewma::Persistence;
 
-use super::actions::{Action, IsolationChange};
+use super::actions::{Action, ActionOutcome, IsolationChange};
 use super::audit::{AuditLog, Decision};
 use super::config::{ControllerConfig, SloKind};
 use super::diagnose::{diagnose, Cause};
@@ -93,6 +93,32 @@ impl Proposal {
     }
 }
 
+/// What the control plane did in response to a reported actuation
+/// outcome — the platform uses this to emit `ActionRetry` trace events
+/// and count degraded controllers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutcomeFeedback {
+    /// Nothing to do (success, or a non-disruptive action).
+    None,
+    /// The failure was absorbed: decision state restored, a backed-off
+    /// retry scheduled (`attempt` = consecutive failures so far).
+    Retried { attempt: u32 },
+    /// Retries exhausted: the controller degraded to guardrails-only.
+    Degraded,
+}
+
+/// Decision state snapshotted at commit time so a *failed* disruptive
+/// actuation can be un-committed: the change never happened, so the
+/// dwell clock must not burn and the validation window must not open.
+#[derive(Clone, Copy, Debug)]
+struct PreCommit {
+    last_disruptive_obs: i64,
+    state: CtlState,
+    stable_streak: u64,
+    guard_attempts: u32,
+    p99_ms: f64,
+}
+
 /// The multi-tenancy controller.
 pub struct Controller {
     pub cfg: ControllerConfig,
@@ -112,6 +138,18 @@ pub struct Controller {
     /// to `PlannerView::primary_base_rps` (the single-primary path);
     /// secondary controllers in a multi-primary plane carry their own.
     base_rps: Option<f64>,
+    /// Stash for un-committing a disruptive change the platform failed.
+    pre_commit: Option<PreCommit>,
+    /// Consecutive failed disruptive actuations (reset on success).
+    retry_attempts: u32,
+    /// No disruptive proposal before this observation (exponential
+    /// backoff after a failed actuation).
+    retry_next_obs: u64,
+    /// Retries exhausted: guardrails-only for the rest of the run.
+    degraded: bool,
+    /// Consecutive observations the primary's signal has been a
+    /// held-last (stale) copy — sensor-dropout fault handling.
+    stale_streak: u64,
 }
 
 impl Controller {
@@ -136,6 +174,11 @@ impl Controller {
             audit: AuditLog::new(),
             primary,
             base_rps: None,
+            pre_commit: None,
+            retry_attempts: 0,
+            retry_next_obs: 0,
+            degraded: false,
+            stale_streak: 0,
         }
     }
 
@@ -164,8 +207,29 @@ impl Controller {
         self.obs
     }
 
+    /// Has this controller fallen back to guardrails-only mode after
+    /// exhausting its actuation retries?
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Consecutive failed disruptive actuations (0 after any success).
+    pub fn retry_attempts(&self) -> u32 {
+        self.retry_attempts
+    }
+
     fn dwell_ok(&self) -> bool {
         self.obs as i64 - self.last_disruptive_obs >= self.cfg.dwell_obs as i64
+    }
+
+    /// May this controller plan a *disruptive* change right now? False
+    /// while degraded, inside a retry backoff window, or when the
+    /// primary's signal has been stale past its TTL (guardrails stay
+    /// available on all three paths — protection never disarms).
+    fn may_disrupt(&self) -> bool {
+        !self.degraded
+            && self.obs >= self.retry_next_obs
+            && self.stale_streak <= self.cfg.stale_ttl_obs
     }
 
     fn guard_dwell_ok(&self) -> bool {
@@ -204,6 +268,16 @@ impl Controller {
     pub fn evaluate(&mut self, snap: &SignalSnapshot, view: &PlannerView) -> Option<Proposal> {
         self.obs += 1;
         let t1sig = snap.tenant(self.primary)?;
+        // Sensor-dropout handling: the platform holds the last-known
+        // signal and flags it stale. Within `stale_ttl_obs` the
+        // controller trusts the held values (minus relaxation); past
+        // the TTL, `may_disrupt` blocks isolation changes until a
+        // fresh window arrives.
+        if t1sig.stale {
+            self.stale_streak += 1;
+        } else {
+            self.stale_streak = 0;
+        }
         // The objective tail: TTFT for request-granularity LLM tenants
         // under `SloKind::Ttft` (falling back to e2e tails when the
         // tenant reports none), e2e otherwise. The throughput-budget
@@ -311,7 +385,7 @@ impl Controller {
             // over τ is not worth a pause, and this is what keeps the
             // Table-4 move budget under 5/hour.
             let material = obj.miss_rate > self.cfg.material_miss;
-            if self.dwell_ok() && material {
+            if self.dwell_ok() && material && self.may_disrupt() {
                 if let Some(act) = self.plan_isolation_upgrade(cause, snap, view) {
                     return Some(Proposal {
                         edge: DecisionEdge::Trigger,
@@ -328,8 +402,11 @@ impl Controller {
         }
 
         // --- relaxation path -----------------------------------------------
+        // Never relax on a held-last signal: "stable" numbers from a
+        // dropped-out sensor prove nothing.
         if self.stable_streak >= self.cfg.stable_obs
             && self.dwell_ok()
+            && !t1sig.stale
             && self.throughput_ok(snap, view)
         {
             let mut acts = Vec::new();
@@ -358,7 +435,7 @@ impl Controller {
                     }
                 }
             }
-            if acts.is_empty() && self.cfg.levers.dynamic_mig {
+            if acts.is_empty() && self.cfg.levers.dynamic_mig && self.may_disrupt() {
                 if let Some(act) = self.plan_relax(snap, view) {
                     acts.push(act);
                 }
@@ -383,6 +460,15 @@ impl Controller {
     /// emitting `p` (dwell clocks, persistence reset, validation window,
     /// audit record) and return its actions for the platform.
     pub fn commit(&mut self, t: f64, p: &Proposal) -> Vec<Action> {
+        // Snapshot the decision state a *failed* actuation must restore
+        // (`on_action_outcome`). Only disruptive classes can fail.
+        let saved = PreCommit {
+            last_disruptive_obs: self.last_disruptive_obs,
+            state: self.state,
+            stable_streak: self.stable_streak,
+            guard_attempts: self.guard_attempts,
+            p99_ms: p.p99_ms,
+        };
         match p.class {
             // Rollbacks took their FSM edge (and audit entry) in
             // `evaluate`; nothing further to record.
@@ -393,6 +479,7 @@ impl Controller {
                 self.persistence.reset(); // give the guard Y windows to work
             }
             ProposalClass::Upgrade => {
+                self.pre_commit = Some(saved);
                 self.last_disruptive_obs = self.obs as i64;
                 self.guard_attempts = 0;
                 self.persistence.reset();
@@ -402,6 +489,7 @@ impl Controller {
                 };
             }
             ProposalClass::Relax => {
+                self.pre_commit = Some(saved);
                 self.stable_streak = 0;
                 self.last_disruptive_obs = self.obs as i64;
                 self.state = CtlState::Cooldown {
@@ -433,6 +521,91 @@ impl Controller {
             p.p99_ms,
             format!("lost arbitration to tenant {}", winner.0),
         ));
+    }
+
+    /// Platform feedback for a committed action (fault hardening). On
+    /// success, clears the retry counter. On failure/timeout of a
+    /// disruptive change, restores the pre-commit decision state — the
+    /// change never happened, so the dwell clock is un-burned and the
+    /// `Validating` window closed (which releases the arbiter's
+    /// host-wide serialization slot next tick) — then schedules a
+    /// bounded-exponential-backoff retry, or degrades to
+    /// guardrails-only mode once `cfg.max_action_retries` consecutive
+    /// failures pile up. The persistence streak stays reset either
+    /// way: the violation must re-fire for Y windows before the retry
+    /// lands, which paces retries under sustained pressure.
+    ///
+    /// The audit edge is never silent: every absorbed failure records
+    /// `retry`, exhaustion records `degraded`.
+    pub fn on_action_outcome(
+        &mut self,
+        t: f64,
+        action: &Action,
+        outcome: &ActionOutcome,
+    ) -> OutcomeFeedback {
+        if outcome.is_applied() {
+            if action.is_disruptive() {
+                self.pre_commit = None;
+                self.retry_attempts = 0;
+            }
+            return OutcomeFeedback::None;
+        }
+        if !action.is_disruptive() {
+            return OutcomeFeedback::None; // guardrails cannot fail today
+        }
+        let p99 = match self.pre_commit.take() {
+            Some(saved) => {
+                self.last_disruptive_obs = saved.last_disruptive_obs;
+                self.state = saved.state;
+                self.stable_streak = saved.stable_streak;
+                self.guard_attempts = saved.guard_attempts;
+                saved.p99_ms
+            }
+            // Mandatory rollbacks carry no stash (they are modeled as
+            // reliable); audit the failure without a state restore.
+            None => 0.0,
+        };
+        self.retry_attempts += 1;
+        let reason = match outcome {
+            ActionOutcome::Failed { reason } => *reason,
+            ActionOutcome::TimedOut => "timed out",
+            ActionOutcome::Applied => unreachable!("applied handled above"),
+        };
+        let kind = action.decision_kind();
+        if self.retry_attempts > self.cfg.max_action_retries {
+            self.degraded = true;
+            self.audit.record(Decision::new(
+                t,
+                self.obs,
+                DecisionEdge::Degraded,
+                kind,
+                p99,
+                format!(
+                    "{reason}; {} consecutive failures — guardrails-only",
+                    self.retry_attempts
+                ),
+            ));
+            return OutcomeFeedback::Degraded;
+        }
+        // Bounded exponential backoff: 2, 4, 8, ... observations,
+        // capped at 64 — composes with dwell (which was restored) and
+        // with persistence (which must re-fire).
+        let backoff = 1u64 << self.retry_attempts.min(6);
+        self.retry_next_obs = self.obs + backoff;
+        self.audit.record(Decision::new(
+            t,
+            self.obs,
+            DecisionEdge::Retry,
+            kind,
+            p99,
+            format!(
+                "{reason}; attempt {}; backoff {backoff} obs",
+                self.retry_attempts
+            ),
+        ));
+        OutcomeFeedback::Retried {
+            attempt: self.retry_attempts,
+        }
     }
 
     /// Rung 1: choose a guardrail for the diagnosed cause.
@@ -664,6 +837,7 @@ mod tests {
                     pcie_gbps: 0.5,
                     block_io_gbps: 0.1,
                     active: true,
+                    stale: false,
                 },
                 TenantSignal {
                     tenant: T2,
@@ -672,6 +846,7 @@ mod tests {
                     pcie_gbps: if t2_active { 8.0 } else { 0.0 },
                     block_io_gbps: if t2_active { 2.0 } else { 0.0 },
                     active: t2_active,
+                    stale: false,
                 },
                 TenantSignal {
                     tenant: T3,
@@ -680,6 +855,7 @@ mod tests {
                     pcie_gbps: 0.05,
                     block_io_gbps: 0.0,
                     active: t3_active,
+                    stale: false,
                 },
             ],
             links: (0..6)

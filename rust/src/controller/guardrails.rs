@@ -57,6 +57,7 @@ mod tests {
                 pcie_gbps: t2_gbps,
                 block_io_gbps: 0.0,
                 active: true,
+                stale: false,
             }],
             links: vec![],
             gpu_sm_util: vec![],

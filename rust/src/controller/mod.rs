@@ -37,9 +37,9 @@ pub mod arbiter;
 pub mod audit;
 pub mod admission;
 
-pub use actions::{Action, IsolationChange};
+pub use actions::{Action, ActionOutcome, IsolationChange};
 pub use arbiter::{ArbStats, Arbiter, Protected};
 pub use audit::{AuditLog, Decision};
 pub use config::{ControllerConfig, Levers, SloKind};
-pub use fsm::{Controller, CtlState, Proposal, ProposalClass};
+pub use fsm::{Controller, CtlState, OutcomeFeedback, Proposal, ProposalClass};
 pub use view::{InstanceView, PlannerView, TenantView};

@@ -213,6 +213,7 @@ mod tests {
                     pcie_gbps: 0.4,
                     block_io_gbps: 0.0,
                     active: true,
+                    stale: false,
                 },
                 TenantSignal {
                     tenant: T2,
@@ -221,6 +222,7 @@ mod tests {
                     pcie_gbps: t2_pcie,
                     block_io_gbps: numa0_io,
                     active: true,
+                    stale: false,
                 },
             ],
             links: (0..6)

@@ -139,6 +139,17 @@ impl FabricBackend {
         }
     }
 
+    /// Change a link's capacity in place (fault injection: degradation
+    /// and flap edges). Both engines re-share in-flight flows over the
+    /// new capacity at their next solve.
+    #[inline]
+    pub fn set_link_capacity(&mut self, link: LinkId, gbps: f64) {
+        match self {
+            FabricBackend::Incremental(f) => f.set_link_capacity(link, gbps),
+            FabricBackend::Reference(f) => f.set_link_capacity(link, gbps),
+        }
+    }
+
     #[inline]
     pub fn flow_exists(&self, id: FlowId) -> bool {
         match self {

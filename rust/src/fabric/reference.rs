@@ -112,6 +112,13 @@ impl ReferenceFabric {
         }
     }
 
+    /// Change a link's capacity in place (fault injection). The oracle
+    /// recomputes every rate from scratch, so no invalidation needed.
+    pub fn set_link_capacity(&mut self, link: LinkId, gbps: f64) {
+        debug_assert!(gbps > 0.0);
+        self.capacities[link.0] = gbps;
+    }
+
     pub fn flow_exists(&self, id: FlowId) -> bool {
         self.flows.contains_key(&id)
     }

@@ -199,6 +199,17 @@ impl Fabric {
         }
     }
 
+    /// Change a link's capacity in place (fault injection: link
+    /// degradation / flaps). Invalidates only that link; in-flight
+    /// flows keep their remaining bytes and re-share the new capacity
+    /// at the next solve.
+    pub fn set_link_capacity(&mut self, link: LinkId, gbps: f64) {
+        debug_assert!(gbps > 0.0);
+        let l = &mut self.links[link.0];
+        l.capacity = gbps;
+        l.dirty = true;
+    }
+
     pub fn flow_exists(&self, id: FlowId) -> bool {
         self.flows.contains_key(&id)
     }

@@ -1,0 +1,480 @@
+//! Deterministic fault injection: typed, timed adversities for the
+//! simulated host and the cluster layer.
+//!
+//! Production is hostile — links flap, MIG reconfiguration stalls or
+//! fails mid-flight (reconfigurable-machine scheduling on MIG treats
+//! reconfig cost/failure as a first-class input), telemetry goes stale,
+//! and fleet workers crash. A [`FaultPlan`] is a list of [`FaultSpec`]s
+//! with explicit timestamps, attached to a scenario via
+//! `ScenarioBuilder::faults` or `sim --faults FILE`. The platform
+//! expands the plan into timed fault *edges* (inject / clear) that ride
+//! the ordinary event queue, so fault runs are exactly as deterministic
+//! as fault-free ones: same seed + same plan ⇒ same fingerprint.
+//!
+//! **Bit-compat contract:** an empty plan is invisible. No fault events
+//! are seeded, no RNG stream is touched, and every catalog fingerprint
+//! is byte-identical to a build without this module
+//! (`prop_empty_fault_plan_is_byte_identical`). The only probabilistic
+//! fault — [`FaultSpec::ReconfigFlaky`] — draws from a dedicated RNG
+//! stream ([`FAULT_STREAM`]), and only when a disruptive action is
+//! actually attempted inside a flaky window, so the workload streams
+//! never shift.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Dedicated RNG stream for fault draws (`Pcg64::new(seed, FAULT_STREAM)`).
+/// Streams 0-6 belong to the workload/trigger/reconfig paths; 100+ to
+/// generated N-tenant scenarios; 1000 to schedules.
+pub const FAULT_STREAM: u64 = 7;
+
+/// One typed, timed fault.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// Shared-link capacity drops to `factor ×` nominal at `at`, for
+    /// `duration` seconds (congestion, lane downgrade, cable brownout).
+    LinkDegrade {
+        link: usize,
+        factor: f64,
+        at: f64,
+        duration: f64,
+    },
+    /// Repeated link degradation: from `from` to `until`, every
+    /// `period_s` the link drops to `factor ×` nominal for `down_s`.
+    LinkFlap {
+        link: usize,
+        factor: f64,
+        from: f64,
+        until: f64,
+        period_s: f64,
+        down_s: f64,
+    },
+    /// Xid-style device loss on the tenant's slice at `at`: the
+    /// in-flight request fails and re-queues, and the tenant pauses for
+    /// `recovery_s` (driver reset + instance re-create).
+    SliceFail {
+        tenant: usize,
+        at: f64,
+        recovery_s: f64,
+    },
+    /// MIG/placement actions become fallible and slow inside the
+    /// window: each disruptive actuation fails with `fail_prob`, and
+    /// successful ones take `latency_ms` longer.
+    ReconfigFlaky {
+        fail_prob: f64,
+        latency_ms: f64,
+        at: f64,
+        duration: f64,
+    },
+    /// Telemetry for one tenant goes stale: its monitor reports no fresh
+    /// window from `at` for `duration` seconds (the controller sees the
+    /// last-known signal flagged stale).
+    SensorDropout {
+        tenant: usize,
+        at: f64,
+        duration: f64,
+    },
+    /// Cluster runs only: the named worker node accepts work and then
+    /// drops its connection. No effect on single-host sims.
+    WorkerCrash { node: String },
+}
+
+impl FaultSpec {
+    /// Stable tag used by the JSON plan format and trace exports.
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            FaultSpec::LinkDegrade { .. } => "link_degrade",
+            FaultSpec::LinkFlap { .. } => "link_flap",
+            FaultSpec::SliceFail { .. } => "slice_fail",
+            FaultSpec::ReconfigFlaky { .. } => "reconfig_flaky",
+            FaultSpec::SensorDropout { .. } => "sensor_dropout",
+            FaultSpec::WorkerCrash { .. } => "worker_crash",
+        }
+    }
+
+    /// Compact kind code for fixed-size trace events.
+    pub fn kind_code(&self) -> u8 {
+        match self {
+            FaultSpec::LinkDegrade { .. } => 0,
+            FaultSpec::LinkFlap { .. } => 1,
+            FaultSpec::SliceFail { .. } => 2,
+            FaultSpec::ReconfigFlaky { .. } => 3,
+            FaultSpec::SensorDropout { .. } => 4,
+            FaultSpec::WorkerCrash { .. } => 5,
+        }
+    }
+
+    /// The fault's subject (link index, tenant index, 0 for host-wide
+    /// faults) for fixed-size trace events.
+    pub fn subject(&self) -> u32 {
+        match self {
+            FaultSpec::LinkDegrade { link, .. } | FaultSpec::LinkFlap { link, .. } => *link as u32,
+            FaultSpec::SliceFail { tenant, .. } | FaultSpec::SensorDropout { tenant, .. } => {
+                *tenant as u32
+            }
+            FaultSpec::ReconfigFlaky { .. } | FaultSpec::WorkerCrash { .. } => 0,
+        }
+    }
+}
+
+/// One inject/clear edge a fault contributes to the event timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEdge {
+    /// Sim time of the edge (seconds).
+    pub t: f64,
+    /// Index into the plan's spec list.
+    pub spec: usize,
+    /// `true` = inject (fault begins), `false` = clear (fault ends).
+    pub inject: bool,
+}
+
+/// A deterministic schedule of faults for one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new(specs: Vec<FaultSpec>) -> FaultPlan {
+        FaultPlan { specs }
+    }
+
+    /// An empty plan is the bit-compat identity: no events, no RNG.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Nodes a cluster leader must treat as crash-scheduled. Sim-level
+    /// expansion ignores these (they have no single-host meaning).
+    pub fn crash_nodes(&self) -> Vec<String> {
+        self.specs
+            .iter()
+            .filter_map(|s| match s {
+                FaultSpec::WorkerCrash { node } => Some(node.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Structural validation, called from `ScenarioBuilder::build` and
+    /// the CLI parser.
+    pub fn validate(&self) -> Result<()> {
+        for (i, s) in self.specs.iter().enumerate() {
+            match s {
+                FaultSpec::LinkDegrade {
+                    factor,
+                    at,
+                    duration,
+                    ..
+                } => {
+                    if !(0.0..=1.0).contains(factor) {
+                        bail!("fault {i}: link_degrade factor must be in [0,1], got {factor}");
+                    }
+                    if *at < 0.0 || *duration <= 0.0 {
+                        bail!("fault {i}: link_degrade needs at >= 0 and duration > 0");
+                    }
+                }
+                FaultSpec::LinkFlap {
+                    factor,
+                    from,
+                    until,
+                    period_s,
+                    down_s,
+                    ..
+                } => {
+                    if !(0.0..=1.0).contains(factor) {
+                        bail!("fault {i}: link_flap factor must be in [0,1], got {factor}");
+                    }
+                    if *from < 0.0 || *until <= *from {
+                        bail!("fault {i}: link_flap needs 0 <= from < until");
+                    }
+                    if *period_s <= 0.0 || *down_s <= 0.0 || *down_s >= *period_s {
+                        bail!("fault {i}: link_flap needs 0 < down_s < period_s");
+                    }
+                }
+                FaultSpec::SliceFail { at, recovery_s, .. } => {
+                    if *at < 0.0 || *recovery_s <= 0.0 {
+                        bail!("fault {i}: slice_fail needs at >= 0 and recovery_s > 0");
+                    }
+                }
+                FaultSpec::ReconfigFlaky {
+                    fail_prob,
+                    latency_ms,
+                    at,
+                    duration,
+                } => {
+                    if !(0.0..=1.0).contains(fail_prob) {
+                        bail!("fault {i}: reconfig_flaky fail_prob must be in [0,1]");
+                    }
+                    if *latency_ms < 0.0 || *at < 0.0 || *duration <= 0.0 {
+                        bail!("fault {i}: reconfig_flaky needs latency_ms >= 0, at >= 0, duration > 0");
+                    }
+                }
+                FaultSpec::SensorDropout { at, duration, .. } => {
+                    if *at < 0.0 || *duration <= 0.0 {
+                        bail!("fault {i}: sensor_dropout needs at >= 0 and duration > 0");
+                    }
+                }
+                FaultSpec::WorkerCrash { node } => {
+                    if node.is_empty() {
+                        bail!("fault {i}: worker_crash needs a node name");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the plan into sorted inject/clear edges within `[0,
+    /// horizon)`. Flaps unroll into one down/up pair per period.
+    /// Ordering is fully deterministic: by time, then spec index, with
+    /// clears before injects at exactly equal times (a back-to-back
+    /// flap clears the previous down-window before opening the next).
+    pub fn edges(&self, horizon: f64) -> Vec<FaultEdge> {
+        let mut out: Vec<FaultEdge> = Vec::new();
+        let mut push = |t: f64, spec: usize, inject: bool| {
+            if t >= 0.0 && t < horizon {
+                out.push(FaultEdge { t, spec, inject });
+            }
+        };
+        for (i, s) in self.specs.iter().enumerate() {
+            match s {
+                FaultSpec::LinkDegrade { at, duration, .. }
+                | FaultSpec::ReconfigFlaky { at, duration, .. }
+                | FaultSpec::SensorDropout { at, duration, .. } => {
+                    push(*at, i, true);
+                    push(*at + *duration, i, false);
+                }
+                FaultSpec::LinkFlap {
+                    from,
+                    until,
+                    period_s,
+                    down_s,
+                    ..
+                } => {
+                    let mut k = 0u32;
+                    loop {
+                        let down = *from + f64::from(k) * *period_s;
+                        if down >= *until {
+                            break;
+                        }
+                        push(down, i, true);
+                        push((down + *down_s).min(*until), i, false);
+                        k += 1;
+                    }
+                }
+                FaultSpec::SliceFail { at, .. } => {
+                    // Recovery is modeled as a pause; the clear edge is
+                    // implicit in `PauseDone`, so only the hit is timed.
+                    push(*at, i, true);
+                }
+                FaultSpec::WorkerCrash { .. } => {} // cluster-level only
+            }
+        }
+        out.sort_by(|a, b| {
+            a.t.total_cmp(&b.t)
+                .then(a.inject.cmp(&b.inject)) // clears first on ties
+                .then(a.spec.cmp(&b.spec))
+        });
+        out
+    }
+
+    /// Parse the `--faults FILE` JSON format:
+    ///
+    /// ```json
+    /// {"faults": [
+    ///   {"kind": "link_degrade", "link": 0, "factor": 0.25, "at": 600, "duration": 120},
+    ///   {"kind": "link_flap", "link": 0, "factor": 0.25, "from": 600, "until": 1200,
+    ///    "period_s": 120, "down_s": 20},
+    ///   {"kind": "slice_fail", "tenant": 0, "at": 600, "recovery_s": 30},
+    ///   {"kind": "reconfig_flaky", "fail_prob": 0.5, "latency_ms": 250, "at": 0, "duration": 1800},
+    ///   {"kind": "sensor_dropout", "tenant": 0, "at": 600, "duration": 60},
+    ///   {"kind": "worker_crash", "node": "node1"}
+    /// ]}
+    /// ```
+    pub fn parse_json(src: &str) -> Result<FaultPlan> {
+        let j = Json::parse(src).map_err(|e| anyhow::anyhow!("fault plan: {e}"))?;
+        let Some(arr) = j.get("faults").as_arr() else {
+            bail!("fault plan: top-level object needs a \"faults\" array");
+        };
+        let mut specs = Vec::with_capacity(arr.len());
+        for (i, f) in arr.iter().enumerate() {
+            let num = |key: &str| -> Result<f64> {
+                f.get(key)
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("fault {i}: missing/invalid \"{key}\""))
+            };
+            let idx = |key: &str| -> Result<usize> {
+                f.get(key)
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("fault {i}: missing/invalid \"{key}\""))
+            };
+            let spec = match f.get("kind").as_str() {
+                Some("link_degrade") => FaultSpec::LinkDegrade {
+                    link: idx("link")?,
+                    factor: num("factor")?,
+                    at: num("at")?,
+                    duration: num("duration")?,
+                },
+                Some("link_flap") => FaultSpec::LinkFlap {
+                    link: idx("link")?,
+                    factor: num("factor")?,
+                    from: num("from")?,
+                    until: num("until")?,
+                    period_s: num("period_s")?,
+                    down_s: num("down_s")?,
+                },
+                Some("slice_fail") => FaultSpec::SliceFail {
+                    tenant: idx("tenant")?,
+                    at: num("at")?,
+                    recovery_s: num("recovery_s")?,
+                },
+                Some("reconfig_flaky") => FaultSpec::ReconfigFlaky {
+                    fail_prob: num("fail_prob")?,
+                    latency_ms: num("latency_ms")?,
+                    at: num("at")?,
+                    duration: num("duration")?,
+                },
+                Some("sensor_dropout") => FaultSpec::SensorDropout {
+                    tenant: idx("tenant")?,
+                    at: num("at")?,
+                    duration: num("duration")?,
+                },
+                Some("worker_crash") => FaultSpec::WorkerCrash {
+                    node: f
+                        .get("node")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("fault {i}: missing \"node\""))?
+                        .to_string(),
+                },
+                Some(other) => bail!("fault {i}: unknown kind \"{other}\""),
+                None => bail!("fault {i}: missing \"kind\""),
+            };
+            specs.push(spec);
+        }
+        let plan = FaultPlan { specs };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_has_no_edges() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert!(p.edges(1800.0).is_empty());
+        assert!(p.crash_nodes().is_empty());
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn degrade_expands_to_inject_and_clear() {
+        let p = FaultPlan::new(vec![FaultSpec::LinkDegrade {
+            link: 0,
+            factor: 0.5,
+            at: 100.0,
+            duration: 50.0,
+        }]);
+        let e = p.edges(1800.0);
+        assert_eq!(e.len(), 2);
+        assert!(e[0].inject && e[0].t == 100.0);
+        assert!(!e[1].inject && e[1].t == 150.0);
+    }
+
+    #[test]
+    fn flap_unrolls_periods_and_respects_horizon() {
+        let p = FaultPlan::new(vec![FaultSpec::LinkFlap {
+            link: 1,
+            factor: 0.25,
+            from: 0.0,
+            until: 300.0,
+            period_s: 100.0,
+            down_s: 20.0,
+        }]);
+        let e = p.edges(1800.0);
+        // 3 periods: down at 0/100/200, up at 20/120/220.
+        assert_eq!(e.len(), 6);
+        assert_eq!(
+            e.iter().filter(|x| x.inject).count(),
+            3,
+            "three down edges: {e:?}"
+        );
+        // Sorted by time.
+        for w in e.windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+        // Edges beyond a short horizon are dropped.
+        assert_eq!(p.edges(110.0).len(), 3); // down@0, up@20, down@100
+    }
+
+    #[test]
+    fn worker_crash_is_cluster_only() {
+        let p = FaultPlan::new(vec![FaultSpec::WorkerCrash {
+            node: "node1".to_string(),
+        }]);
+        assert!(p.edges(1800.0).is_empty());
+        assert_eq!(p.crash_nodes(), vec!["node1".to_string()]);
+    }
+
+    #[test]
+    fn json_roundtrip_all_kinds() {
+        let src = r#"{"faults": [
+            {"kind": "link_degrade", "link": 0, "factor": 0.25, "at": 600, "duration": 120},
+            {"kind": "link_flap", "link": 0, "factor": 0.25, "from": 600, "until": 1200,
+             "period_s": 120, "down_s": 20},
+            {"kind": "slice_fail", "tenant": 0, "at": 600, "recovery_s": 30},
+            {"kind": "reconfig_flaky", "fail_prob": 0.5, "latency_ms": 250, "at": 0,
+             "duration": 1800},
+            {"kind": "sensor_dropout", "tenant": 0, "at": 600, "duration": 60},
+            {"kind": "worker_crash", "node": "node1"}
+        ]}"#;
+        let p = FaultPlan::parse_json(src).unwrap();
+        assert_eq!(p.specs.len(), 6);
+        assert_eq!(p.specs[0].kind_str(), "link_degrade");
+        assert_eq!(p.specs[5].kind_str(), "worker_crash");
+        assert_eq!(p.crash_nodes(), vec!["node1".to_string()]);
+    }
+
+    #[test]
+    fn json_rejects_bad_plans() {
+        assert!(FaultPlan::parse_json("{}").is_err());
+        assert!(FaultPlan::parse_json(r#"{"faults": [{"kind": "nope"}]}"#).is_err());
+        // factor out of range
+        assert!(FaultPlan::parse_json(
+            r#"{"faults": [{"kind": "link_degrade", "link": 0, "factor": 2.0,
+                "at": 0, "duration": 10}]}"#
+        )
+        .is_err());
+        // down_s >= period_s
+        assert!(FaultPlan::parse_json(
+            r#"{"faults": [{"kind": "link_flap", "link": 0, "factor": 0.5, "from": 0,
+                "until": 100, "period_s": 10, "down_s": 10}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn edge_expansion_is_deterministic() {
+        let p = FaultPlan::new(vec![
+            FaultSpec::LinkFlap {
+                link: 0,
+                factor: 0.5,
+                from: 10.0,
+                until: 500.0,
+                period_s: 60.0,
+                down_s: 15.0,
+            },
+            FaultSpec::SensorDropout {
+                tenant: 1,
+                at: 30.0,
+                duration: 45.0,
+            },
+        ]);
+        assert_eq!(p.edges(1800.0), p.edges(1800.0));
+    }
+}

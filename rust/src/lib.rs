@@ -29,6 +29,7 @@ pub mod topo;
 pub mod gpu;
 pub mod sim;
 pub mod fabric;
+pub mod faults;
 pub mod tenants;
 pub mod telemetry;
 pub mod trace;

@@ -33,10 +33,28 @@ use predserve::platform::{RunResult, Scenario, SimWorld};
 use predserve::serving::request::SamplingParams;
 use predserve::serving::Engine;
 
-const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|trace-export|report|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--shards N] [--llm] [--config FILE] [--arrivals-trace FILE] [--record-trace FILE] [--out FILE] [--timeline] [--width N] [--fast] [--prompt TEXT] [--nodes N] [--fleet] [--tenants N]";
+const USAGE: &str = "usage: predserve <serve|sim|plan|scenarios|ablation|llm|overheads|sensitivity|arbitration|trace|trace-export|report|figures|cluster> [--scenario NAME] [--seed N] [--levers full|static|mig|placement|guards] [--horizon SECS] [--shards N] [--llm] [--config FILE] [--arrivals-trace FILE] [--faults FILE] [--record-trace FILE] [--out FILE] [--timeline] [--width N] [--fast] [--prompt TEXT] [--nodes N] [--node-timeout SECS] [--fleet] [--tenants N]";
+
+/// Attach a fault plan from `--faults FILE` (JSON, see
+/// `docs/ARCHITECTURE.md` "Fault injection & recovery") to a scenario.
+/// Cluster-level specs (`worker_crash`) are ignored by single-host runs.
+fn apply_faults(args: &Args, scenario: &mut Scenario) -> Result<()> {
+    if let Some(path) = args.get("faults") {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let plan = predserve::faults::FaultPlan::parse_json(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!(
+            "fault plan {path}: {} spec(s), {} timed edge(s) in horizon",
+            plan.specs.len(),
+            plan.edges(scenario.horizon).len()
+        );
+        scenario.faults = plan;
+    }
+    Ok(())
+}
 
 /// Resolve a catalog scenario from the shared CLI knobs (--scenario,
-/// --seed, --levers, --config, --horizon, --shards).
+/// --seed, --levers, --config, --horizon, --shards, --faults).
 fn scenario_from_args(args: &Args, default_name: &str) -> Result<Scenario> {
     let levers = config::parse_levers(args.get_str("levers", "full"))?;
     let name = args.get_str("scenario", default_name);
@@ -51,6 +69,7 @@ fn scenario_from_args(args: &Args, default_name: &str) -> Result<Scenario> {
     }
     scenario.horizon = args.get_f64("horizon", scenario.horizon);
     scenario.shards = args.get_usize("shards", scenario.shards).max(1);
+    apply_faults(args, &mut scenario)?;
     Ok(scenario)
 }
 
@@ -179,6 +198,7 @@ fn main() -> Result<()> {
             }
             scenario.horizon = args.get_f64("horizon", scenario.horizon);
             scenario.shards = args.get_usize("shards", scenario.shards).max(1);
+            apply_faults(&args, &mut scenario)?;
             let record_path = args.get("record-trace").map(str::to_string);
             let mut world = SimWorld::new(scenario);
             if record_path.is_some() {
@@ -265,6 +285,17 @@ fn main() -> Result<()> {
                         kinds.join(", ")
                     );
                 }
+            }
+            if r.faults_injected > 0 || r.action_failures > 0 || r.action_retries > 0 {
+                println!(
+                    "faults: injected={} cleared={} action_failures={} retries={} requeued={} degraded_controllers={}",
+                    r.faults_injected,
+                    r.faults_cleared,
+                    r.action_failures,
+                    r.action_retries,
+                    r.requests_requeued,
+                    r.degraded_controllers
+                );
             }
             for (t, kind, p99) in &r.timeline {
                 println!("  t={t:7.1}s {kind:12} p99={p99:.1}ms");
@@ -375,42 +406,71 @@ fn main() -> Result<()> {
             println!("Figure 4:\n{}", runs::run_fig4(&r));
         }
         "cluster" => {
+            use predserve::cluster::{ClusterOpts, NodeReport};
             let nodes = args.get_usize("nodes", 2);
+            // Cluster-level faults (worker_crash) come off the same
+            // --faults plan the sim uses; the sim-level specs in it are
+            // each node's business, not the dispatch layer's.
+            let mut opts = match args.get("faults") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    let plan = predserve::faults::FaultPlan::parse_json(&text)
+                        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                    ClusterOpts::from_fault_plan(&plan)
+                }
+                None => ClusterOpts::default(),
+            };
+            opts.node_timeout_s = args.get_f64("node-timeout", opts.node_timeout_s);
             let report = if args.flag("fleet") {
                 let n_tenants = args.get_usize("tenants", nodes * 12);
-                Leader::run_fleet(
+                Leader::run_fleet_opts(
                     nodes,
                     args.get_u64("seed", 11),
                     args.get_str("levers", "full"),
                     args.get_f64("horizon", 600.0),
                     n_tenants,
+                    &opts,
                 )?
             } else {
-                Leader::run_cluster(
+                Leader::run_cluster_opts(
                     nodes,
                     args.get_u64("seed", 11),
                     args.get_str("levers", "full"),
                     args.get_f64("horizon", 600.0),
                     args.get_str("workload", "single"),
                     args.get_usize("shards", 1).max(1),
+                    &opts,
                 )?
             };
             println!(
-                "cluster({} nodes, {} GPUs): mean miss={:.1}% mean p99={:.2} ms total rps={:.1}",
+                "cluster({} nodes, {} GPUs): mean miss={:.1}% mean p99={:.2} ms total rps={:.1} failed nodes={}",
                 nodes,
                 nodes * 8,
                 report.mean_miss_rate * 100.0,
                 report.mean_p99_ms,
-                report.total_rps
+                report.total_rps,
+                report.failed_nodes
             );
             for n in &report.per_node {
-                println!(
-                    "  {}: miss={:.1}% p99={:.2} ms rps={:.1}",
-                    n.node,
-                    n.miss_rate * 100.0,
-                    n.p99_ms,
-                    n.rps
-                );
+                match n {
+                    NodeReport::Ok {
+                        node,
+                        miss_rate,
+                        p99_ms,
+                        rps,
+                        ..
+                    } => println!(
+                        "  {}: miss={:.1}% p99={:.2} ms rps={:.1}",
+                        node,
+                        miss_rate * 100.0,
+                        p99_ms,
+                        rps
+                    ),
+                    NodeReport::Failed { node, reason } => {
+                        println!("  {node}: FAILED ({reason})")
+                    }
+                }
             }
             for t in &report.queued {
                 println!("  queued (no safe slot fleet-wide): {t}");

@@ -152,6 +152,26 @@ pub struct RunResult {
     /// Deterministic, but excluded from `fingerprint()` like every other
     /// observability field — recording must not change what a run *is*.
     pub metrics: Vec<(String, f64)>,
+    /// Fault edges injected over the run (0 when the scenario carries an
+    /// empty `FaultPlan`). Like every counter below, deterministic but
+    /// OUTSIDE `fingerprint()` — fault bookkeeping must never change what
+    /// a fault-free run *is*.
+    pub faults_injected: u64,
+    /// Fault edges cleared (transient faults whose window ended in-horizon).
+    pub faults_cleared: u64,
+    /// Controller actions that came back `Failed`/`TimedOut` from the
+    /// platform (injected reconfig failures, timeouts). Outside the
+    /// fingerprint.
+    pub action_failures: u64,
+    /// Failed actions the FSM re-proposed under bounded exponential
+    /// backoff. Outside the fingerprint.
+    pub action_retries: u64,
+    /// In-flight requests re-queued by `SliceFail` device loss. Outside
+    /// the fingerprint.
+    pub requests_requeued: u64,
+    /// Controllers that exhausted their retry budget and degraded to
+    /// guardrails-only mode. Outside the fingerprint.
+    pub degraded_controllers: u64,
 }
 
 impl RunResult {

@@ -15,6 +15,7 @@
 
 use crate::alloc::{AllocPlan, AutoRequest, HostAllocator, PlanEntry, SlotOutcome};
 use crate::controller::{ControllerConfig, Levers, SloKind};
+use crate::faults::{FaultPlan, FaultSpec};
 use crate::gpu::MigProfile;
 use crate::tenants::{
     ArrivalProcess, BwSpec, CompSpec, Envelope, InterferenceSchedule, LlmWorkloadSpec, LsSpec,
@@ -68,6 +69,11 @@ pub struct Scenario {
     /// one for every scenario: pinned entries verbatim, auto entries as
     /// the allocator chose them). `predserve plan` prints it.
     pub layout: AllocPlan,
+    /// Deterministic fault-injection plan (`crate::faults`). An empty
+    /// plan is the default and is **byte-identical** to a world without
+    /// fault support: no extra events, no extra RNG draws, same
+    /// fingerprint.
+    pub faults: FaultPlan,
 }
 
 impl Scenario {
@@ -180,7 +186,7 @@ impl Scenario {
     // --- named catalog ----------------------------------------------------
 
     /// Catalog names accepted by [`Scenario::by_name`].
-    pub const CATALOG: [&'static str; 13] = [
+    pub const CATALOG: [&'static str; 15] = [
         "paper_single_host",
         "paper_llm_case",
         "steady_contention",
@@ -194,6 +200,8 @@ impl Scenario {
         "diurnal_trace_mix",
         "llm_serving_mix",
         "llm_burst_ttft",
+        "link_flap_recovery",
+        "mig_reconfig_flaky",
     ];
 
     /// Look a scenario up by catalog name ("single" and "llm" are accepted
@@ -218,6 +226,8 @@ impl Scenario {
             "diurnal_trace_mix" => Scenario::diurnal_trace_mix(seed, levers),
             "llm_serving_mix" => Scenario::llm_serving_mix(seed, levers),
             "llm_burst_ttft" => Scenario::llm_burst_ttft(seed, levers),
+            "link_flap_recovery" => Scenario::link_flap_recovery(seed, levers),
+            "mig_reconfig_flaky" => Scenario::mig_reconfig_flaky(seed, levers),
             _ => return None,
         })
     }
@@ -276,6 +286,46 @@ impl Scenario {
         s.name = "paper_llm_case".into();
         *s.primary_spec_mut() = LsSpec::llm_ttft();
         s.controller.tau_ms = 200.0;
+        s
+    }
+
+    /// Chaos catalog: the paper's single-host case with the primary's
+    /// PCIe uplink flapping to 25% capacity for 20 s out of every 120 s
+    /// between t=600 and t=1200. Exercises the fault path end-to-end:
+    /// `FaultInjected`/`FaultCleared` edges, fabric re-rating mid-flow,
+    /// and the controller recovering the tail after each flap.
+    pub fn link_flap_recovery(seed: u64, levers: Levers) -> Scenario {
+        let mut s = Scenario::paper_single_host(seed, levers);
+        s.name = "link_flap_recovery".into();
+        let link = s.topo.link_of_gpu(s.tenants[s.primary].placement.gpu).0;
+        s.faults = FaultPlan::new(vec![FaultSpec::LinkFlap {
+            link,
+            factor: 0.25,
+            from: 600.0,
+            until: 1200.0,
+            period_s: 120.0,
+            down_s: 20.0,
+        }]);
+        s
+    }
+
+    /// Chaos catalog: the paper's single-host case with a flaky MIG
+    /// reconfig path — every disruptive isolation change fails with
+    /// probability 0.5 (drawn off the dedicated fault RNG stream) and
+    /// successful ones pay +250 ms of actuation latency, for the whole
+    /// run. Exercises the controller's retry/backoff/degraded-mode
+    /// hardening: a failed upgrade must not burn the dwell clock, and
+    /// the audit must show retry → applied (or degraded) edges.
+    pub fn mig_reconfig_flaky(seed: u64, levers: Levers) -> Scenario {
+        let mut s = Scenario::paper_single_host(seed, levers);
+        s.name = "mig_reconfig_flaky".into();
+        let h = s.horizon;
+        s.faults = FaultPlan::new(vec![FaultSpec::ReconfigFlaky {
+            fail_prob: 0.5,
+            latency_ms: 250.0,
+            at: 0.0,
+            duration: h,
+        }]);
         s
     }
 
@@ -999,6 +1049,7 @@ pub struct ScenarioBuilder {
     move_pause_s: f64,
     epsilon_sigma: f64,
     shards: usize,
+    faults: FaultPlan,
 }
 
 impl ScenarioBuilder {
@@ -1018,6 +1069,7 @@ impl ScenarioBuilder {
             move_pause_s: 0.05,
             epsilon_sigma: 0.32,
             shards: 1,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -1155,6 +1207,14 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach a deterministic fault-injection plan (`crate::faults`).
+    /// The plan is validated in `build()`; an empty plan (the default)
+    /// leaves the run byte-identical to a fault-free world.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
     pub fn build(self) -> Scenario {
         assert!(!self.tenants.is_empty(), "scenario needs at least one tenant");
         // Validate MPS-shared placements; the actual gpu/profile/instance
@@ -1201,6 +1261,11 @@ impl ScenarioBuilder {
                 });
             }
         }
+        // Fault plans fail here too — at build time with the typed
+        // message, never as a mid-sim panic.
+        self.faults
+            .validate()
+            .unwrap_or_else(|e| panic!("scenario '{}': invalid fault plan: {e}", self.name));
         if let Some(p) = self.primary {
             assert!(
                 p < self.tenants.len(),
@@ -1266,6 +1331,7 @@ impl ScenarioBuilder {
             epsilon_sigma: self.epsilon_sigma,
             shards: self.shards,
             layout,
+            faults: self.faults,
         }
     }
 
@@ -1436,6 +1502,19 @@ mod tests {
         assert!(Scenario::by_name("single", 5, Levers::none()).is_some());
         assert!(Scenario::by_name("llm", 5, Levers::none()).is_some());
         assert!(Scenario::by_name("bogus", 5, Levers::none()).is_none());
+    }
+
+    #[test]
+    fn chaos_catalog_entries_carry_fault_plans() {
+        let flap = Scenario::link_flap_recovery(5, Levers::full());
+        assert_eq!(flap.name, "link_flap_recovery");
+        assert!(!flap.faults.is_empty());
+        let flaky = Scenario::mig_reconfig_flaky(5, Levers::full());
+        assert_eq!(flaky.name, "mig_reconfig_flaky");
+        assert!(!flaky.faults.is_empty());
+        // Every pre-existing entry keeps the bit-compat empty plan.
+        assert!(Scenario::paper_single_host(5, Levers::full()).faults.is_empty());
+        assert!(Scenario::llm_serving_mix(5, Levers::full()).faults.is_empty());
     }
 
     #[test]

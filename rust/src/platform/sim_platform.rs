@@ -32,8 +32,11 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::controller::view::{InstanceView, TenantView};
-use crate::controller::{Action, Arbiter, IsolationChange, PlannerView, Protected};
+use crate::controller::{
+    Action, ActionOutcome, Arbiter, IsolationChange, PlannerView, Protected,
+};
 use crate::fabric::{FabricBackend, FabricKind, FlowId};
+use crate::faults::{FaultSpec, FAULT_STREAM};
 use crate::gpu::{A100Gpu, InstanceId, MigProfile};
 use crate::sim::{EngineKind, EventQueue, ShardMap, ShardedQueue, SimClock, COORD_SHARD};
 use crate::telemetry::signals::{LinkSignal, SignalSnapshot, TenantSignal};
@@ -104,6 +107,41 @@ struct SavedConfig {
     placements: Vec<Placement>,
 }
 
+/// Runtime state of the fault-injection layer. Present on the world iff
+/// the scenario's [`crate::faults::FaultPlan`] is non-empty — the
+/// empty-plan bit-compat guarantee is structural, not careful: `None`
+/// means zero fault events, zero extra RNG draws, zero extra branches
+/// that touch workload state.
+#[derive(Clone, Debug)]
+struct FaultRt {
+    /// Precomputed inject/clear edges over the run horizon, in firing
+    /// order; `Event::FaultEdge` carries an index into this list.
+    edges: Vec<crate::faults::FaultEdge>,
+    /// Dedicated fault stream (`FAULT_STREAM`): drawn only when a
+    /// disruptive action is attempted inside a flaky-reconfig window,
+    /// so workload streams never shift.
+    rng: Pcg64,
+    /// Open flaky-reconfig windows `(fail_prob, latency_ms)`; the most
+    /// recently injected window governs (they nest, LIFO).
+    flaky: Vec<(f64, f64)>,
+    /// Per-tenant count of open sensor-dropout windows (counts, not
+    /// bools, so overlapping dropouts clear correctly).
+    dropout: Vec<u32>,
+    /// Held-last tenant signal served (flagged stale) while a dropout
+    /// window is open.
+    last_signals: Vec<Option<TenantSignal>>,
+    /// Injected actuation latency (s) to fold into the *next* tenant
+    /// pause — set by the flaky gate on a successful isolation change,
+    /// consumed by `pause_tenant`.
+    pending_extra_pause_s: f64,
+    injected: u64,
+    cleared: u64,
+    /// Disruptive actuations killed by the flaky gate.
+    action_failures: u64,
+    /// In-flight requests failed and re-queued by `SliceFail` hits.
+    requests_requeued: u64,
+}
+
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum CyclePhase {
     Read,
@@ -137,6 +175,10 @@ enum Event {
     /// I/O drains; only tenants with an attached `LlmWorkloadSpec` ever
     /// see one).
     LlmStepDone { tenant: usize },
+    /// A fault-plan inject/clear edge fired (`idx` into the precomputed
+    /// edge list). Only seeded when the scenario carries a non-empty
+    /// [`crate::faults::FaultPlan`] — the empty-plan world never sees one.
+    FaultEdge { idx: usize },
 }
 
 /// Per-tenant runtime state for a latency-sensitive tenant.
@@ -277,10 +319,14 @@ impl WorldQueue {
                     | Event::PauseDone { tenant }
                     | Event::ThrottleExpire { tenant, .. }
                     | Event::LlmStepDone { tenant } => map.shard_of(tenant),
-                    // Host-global events — the arbiter's sampling tick
-                    // and fabric completions (the PS uplink solve spans
-                    // switch subtrees) — live on the coordinator shard.
-                    Event::FlowsDone { .. } | Event::Sample => COORD_SHARD,
+                    // Host-global events — the arbiter's sampling tick,
+                    // fabric completions (the PS uplink solve spans
+                    // switch subtrees), and fault edges (links and flaky
+                    // windows are host-wide) — live on the coordinator
+                    // shard.
+                    Event::FlowsDone { .. } | Event::Sample | Event::FaultEdge { .. } => {
+                        COORD_SHARD
+                    }
                 };
                 q.push_to(shard, at, ev);
             }
@@ -377,6 +423,13 @@ pub struct SimWorld {
     controller_wall_s: f64,
     last_good: Option<SavedConfig>,
     reconfig_durations: Vec<f64>,
+
+    // Fault injection. `None` = empty plan = byte-identical world.
+    faults: Option<FaultRt>,
+    /// Retries/degradations routed back through the control plane
+    /// (kept outside `FaultRt`: a defensive `Failed` outcome can occur
+    /// without any fault plan).
+    action_retries: u64,
 
     // Flight recorder. `None` = disabled: every emit site is a single
     // `Option` check and the run is byte-identical either way (the
@@ -587,6 +640,21 @@ impl SimWorld {
             }
         };
 
+        // The fault layer only exists for non-empty plans: `None` here
+        // is what makes the empty-plan fingerprint guarantee structural.
+        let faults = (!scenario.faults.is_empty()).then(|| FaultRt {
+            edges: scenario.faults.edges(scenario.horizon),
+            rng: Pcg64::new(seed, FAULT_STREAM),
+            flaky: Vec::new(),
+            dropout: vec![0; n],
+            last_signals: vec![None; n],
+            pending_extra_pause_s: 0.0,
+            injected: 0,
+            cleared: 0,
+            action_failures: 0,
+            requests_requeued: 0,
+        });
+
         let mut w = SimWorld {
             q,
             fabric,
@@ -612,6 +680,8 @@ impl SimWorld {
             controller_wall_s: 0.0,
             last_good: None,
             reconfig_durations: Vec::new(),
+            faults,
+            action_retries: 0,
             recorder: None,
             trace_audit_seen: Vec::new(),
             trace_ctl_phase: Vec::new(),
@@ -658,6 +728,13 @@ impl SimWorld {
         }
         let dt = self.scenario.sample_dt;
         self.q.push_at(dt, Event::Sample);
+        // Fault edges last: an empty plan seeds nothing, so the legacy
+        // push order (and hence `(time, seq)` assignment) is untouched.
+        let n_edges = self.faults.as_ref().map_or(0, |f| f.edges.len());
+        for idx in 0..n_edges {
+            let t = self.faults.as_ref().expect("checked above").edges[idx].t;
+            self.q.push_at(t, Event::FaultEdge { idx });
+        }
     }
 
     // --- per-tenant state accessors ----------------------------------------
@@ -1198,11 +1275,19 @@ impl SimWorld {
     }
 
     fn pause_tenant(&mut self, now: f64, i: usize, duration: f64) {
+        // A flaky-reconfig window's injected actuation latency stretches
+        // the tenant-visible pause of the change that just succeeded
+        // (zero whenever no fault plan is active).
+        let extra = self
+            .faults
+            .as_mut()
+            .map_or(0.0, |f| std::mem::take(&mut f.pending_extra_pause_s));
         let (_, ls) = self.ls_parts(i);
         ls.paused = true;
         // In-flight compute finishes (the scheduled event stands);
         // queued/incoming requests wait for PauseDone.
-        self.q.push_at(now + duration, Event::PauseDone { tenant: i });
+        self.q
+            .push_at(now + duration + extra, Event::PauseDone { tenant: i });
     }
 
     /// Tenant-visible pause for a MIG reconfiguration. The full
@@ -1234,13 +1319,23 @@ impl SimWorld {
         self.maybe_start_llm_step(now, i);
     }
 
-    /// Apply one controller action to the world.
-    fn apply_action(&mut self, now: f64, action: Action) {
+    /// Injected actuation latency at or above this bound is reported as
+    /// [`ActionOutcome::TimedOut`]: the blue/green cutover is abandoned
+    /// (make-before-break, so the world is unchanged) instead of
+    /// stalling the tenant for tens of seconds.
+    const ACTION_TIMEOUT_MS: f64 = 10_000.0;
+
+    /// Apply one controller action to the world, reporting what actually
+    /// happened. Non-disruptive actions always apply; disruptive ones
+    /// pass the flaky-reconfig gate (when a fault plan opened one) and
+    /// report `Failed`/`TimedOut` so the control plane can retry with
+    /// backoff instead of validating a change that never happened.
+    fn apply_action(&mut self, now: f64, action: Action) -> ActionOutcome {
         match action {
             Action::SetIoThrottle { tenant, cap_gbps } => {
                 let t = tenant.0;
                 if t >= self.scenario.n_tenants() {
-                    return;
+                    return ActionOutcome::Applied;
                 }
                 // cgroup io.max guardrails only bite on NVMe-gated
                 // (bandwidth-heavy) pipelines. Throttling a
@@ -1250,7 +1345,7 @@ impl SimWorld {
                 // seed world enforced both by restricting throttles to
                 // the T2 slot; other kinds stay world no-ops.
                 if self.scenario.tenants[t].kind() != TenantKind::BandwidthHeavy {
-                    return;
+                    return ActionOutcome::Applied;
                 }
                 if let Some(rec) = self.recorder.as_mut() {
                     rec.emit(
@@ -1281,11 +1376,12 @@ impl SimWorld {
                 } else {
                     self.throttle_deadlines[t] = None;
                 }
+                ActionOutcome::Applied
             }
             Action::SetMpsQuota { tenant, quota } => {
                 let t = tenant.0;
                 if t >= self.scenario.n_tenants() {
-                    return;
+                    return ActionOutcome::Applied;
                 }
                 if let TenantRt::Comp(c) = &mut self.rt[t] {
                     c.quota = quota.clamp(0.0, 100.0);
@@ -1301,11 +1397,13 @@ impl SimWorld {
                         rec.metrics.inc("ctl.guardrail_edges", 1);
                     }
                 }
+                ActionOutcome::Applied
             }
             Action::PinCpu { tenant, numa } => {
                 if let Some(p) = self.placements.get_mut(tenant.0) {
                     p.numa = numa.min(self.scenario.topo.numa_nodes.len() - 1);
                 }
+                ActionOutcome::Applied
             }
             Action::ChangeIsolation {
                 tenant,
@@ -1313,10 +1411,30 @@ impl SimWorld {
                 relax: _,
             } => {
                 if !self.protected(tenant.0) {
-                    return;
+                    return ActionOutcome::Applied;
+                }
+                // Flaky-reconfig gate: inside an open window, each
+                // disruptive actuation fails with `fail_prob` (drawn off
+                // the dedicated fault stream — workload streams never
+                // shift) and successful ones pay the injected latency.
+                if let Some((fail_prob, latency_ms)) =
+                    self.faults.as_ref().and_then(|f| f.flaky.last().copied())
+                {
+                    let frt = self.faults.as_mut().expect("flaky window implies fault rt");
+                    if frt.rng.chance(fail_prob) {
+                        frt.action_failures += 1;
+                        return ActionOutcome::Failed {
+                            reason: "mig reconfig failed (injected)",
+                        };
+                    }
+                    if latency_ms >= Self::ACTION_TIMEOUT_MS {
+                        frt.action_failures += 1;
+                        return ActionOutcome::TimedOut;
+                    }
+                    frt.pending_extra_pause_s = latency_ms / 1000.0;
                 }
                 self.save_last_good(tenant.0);
-                match change {
+                let applied = match change {
                     IsolationChange::Resize { to } => self.resize_tenant(now, tenant.0, to),
                     IsolationChange::MoveExisting { gpu, to } => {
                         self.move_tenant(now, tenant.0, gpu, to, false)
@@ -1324,11 +1442,26 @@ impl SimWorld {
                     IsolationChange::CreateAndMove { gpu, to } => {
                         self.move_tenant(now, tenant.0, gpu, to, true)
                     }
+                };
+                if applied || self.faults.is_none() {
+                    // Fault-free runs keep the legacy semantics for the
+                    // (planner-unreachable) infeasible paths bit-for-bit:
+                    // the controller validates and recovers via rollback.
+                    ActionOutcome::Applied
+                } else {
+                    // The change never happened; drop any injected
+                    // latency that was staged for its pause.
+                    if let Some(f) = self.faults.as_mut() {
+                        f.pending_extra_pause_s = 0.0;
+                    }
+                    ActionOutcome::Failed {
+                        reason: "isolation change infeasible",
+                    }
                 }
             }
             Action::Rollback { tenant } => {
                 if !self.protected(tenant.0) {
-                    return;
+                    return ActionOutcome::Applied;
                 }
                 if let Some(saved) = self.last_good.take() {
                     if saved.owner != tenant.0 {
@@ -1338,28 +1471,33 @@ impl SimWorld {
                         // defensive invariant). Restoring it would stomp
                         // the newer change, so keep it for its owner.
                         self.last_good = Some(saved);
-                        return;
+                        return ActionOutcome::Applied;
                     }
                     // Blue/green back to the last-known-good placement.
+                    // Rollback is modeled reliable — the flaky gate only
+                    // covers forward changes; a revert to a known-good
+                    // partition layout is the recovery primitive itself.
                     self.gpus = saved.gpus;
                     self.placements = saved.placements;
                     self.pause_tenant(now, tenant.0, self.scenario.move_pause_s);
                 }
+                ActionOutcome::Applied
             }
         }
     }
 
     /// Resize = give the protected tenant a dedicated `to` instance on
     /// its current GPU, repartitioning as needed. If it was MPS-shared,
-    /// each peer gets the biggest leftover slice.
-    fn resize_tenant(&mut self, now: f64, tenant: usize, to: MigProfile) {
+    /// each peer gets the biggest leftover slice. Returns whether the
+    /// change actually happened (`false` = the world is unchanged).
+    fn resize_tenant(&mut self, now: f64, tenant: usize, to: MigProfile) -> bool {
         let gpu_idx = self.placements[tenant].gpu;
         let old_peers = self.placements[tenant].peers.clone();
         let old_instance = self.placements[tenant].instance;
 
         let gpu = &mut self.gpus[gpu_idx];
         if gpu.destroy(old_instance).is_err() {
-            return;
+            return false;
         }
         let new_instance = match gpu.create(to) {
             Ok(id) => id,
@@ -1372,7 +1510,7 @@ impl SimWorld {
                         self.placements[peer].instance = id;
                     }
                 }
-                return;
+                return false;
             }
         };
         self.placements[tenant].instance = new_instance;
@@ -1405,13 +1543,21 @@ impl SimWorld {
         self.reconfig_durations.push(d);
         let pause = self.bounded_pause(d);
         self.pause_tenant(now, tenant, pause);
+        true
     }
 
     /// Move a protected tenant to `gpu` — onto an existing free instance
     /// (cheap) or a freshly created one (MIG call on the target GPU, but
     /// the pause is still only the process move: creation happens on idle
-    /// slices).
-    fn move_tenant(&mut self, now: f64, tenant: usize, gpu: usize, to: MigProfile, create: bool) {
+    /// slices). Returns whether the move actually happened.
+    fn move_tenant(
+        &mut self,
+        now: f64,
+        tenant: usize,
+        gpu: usize,
+        to: MigProfile,
+        create: bool,
+    ) -> bool {
         let target = if create {
             match self.gpus[gpu].create(to) {
                 Ok(id) => {
@@ -1419,7 +1565,7 @@ impl SimWorld {
                     self.reconfig_durations.push(d);
                     id
                 }
-                Err(_) => return,
+                Err(_) => return false,
             }
         } else {
             // Find the free instance with that profile.
@@ -1434,7 +1580,7 @@ impl SimWorld {
                 .iter()
                 .find(|i| i.profile == to && !occupied.contains(&i.id))
             else {
-                return;
+                return false;
             };
             inst.id
         };
@@ -1455,6 +1601,127 @@ impl SimWorld {
         // the tenant keeps serving; the only tenant-visible cost is the
         // blue/green traffic switchover.
         self.pause_tenant(now, tenant, self.scenario.move_pause_s);
+        true
+    }
+
+    // --- fault injection -----------------------------------------------------
+
+    /// One timed fault edge fired: mutate world state, bump the fault
+    /// counters, and emit the trace twin. Only reachable when a
+    /// non-empty plan seeded edges at world build.
+    fn on_fault_edge(&mut self, now: f64, idx: usize) {
+        let Some(frt) = self.faults.as_ref() else {
+            return;
+        };
+        let edge = frt.edges[idx];
+        let spec = self.scenario.faults.specs[edge.spec].clone();
+        {
+            let frt = self.faults.as_mut().expect("checked above");
+            if edge.inject {
+                frt.injected += 1;
+            } else {
+                frt.cleared += 1;
+            }
+        }
+        if let Some(rec) = self.recorder.as_mut() {
+            let (kind, subject) = (spec.kind_code(), spec.subject());
+            rec.emit(
+                now,
+                if edge.inject {
+                    TraceEvent::FaultInjected { kind, subject }
+                } else {
+                    TraceEvent::FaultCleared { kind, subject }
+                },
+            );
+            rec.metrics.inc(
+                if edge.inject { "faults.injected" } else { "faults.cleared" },
+                1,
+            );
+        }
+        match spec {
+            FaultSpec::LinkDegrade { link, factor, .. }
+            | FaultSpec::LinkFlap { link, factor, .. } => {
+                if link >= self.scenario.topo.num_links {
+                    return;
+                }
+                // Re-rate the shared link mid-flow: in-flight transfers
+                // keep their remaining bytes and finish at the new rate
+                // (the PS solve recomputes from the capacity change).
+                let lid = crate::topo::LinkId(link);
+                let base = self.scenario.topo.link_capacity(lid);
+                let cap = if edge.inject {
+                    (base * factor).max(1e-3)
+                } else {
+                    base
+                };
+                self.sync_fabric(now);
+                self.fabric.set_link_capacity(lid, cap);
+                self.reschedule_fabric(now);
+            }
+            FaultSpec::SliceFail {
+                tenant, recovery_s, ..
+            } => {
+                if tenant >= self.scenario.n_tenants()
+                    || self.scenario.tenants[tenant].kind() != TenantKind::LatencySensitive
+                {
+                    return;
+                }
+                // Xid-style device loss: the in-flight request fails and
+                // re-queues under a fresh id (so the stale `ComputeDone`
+                // no-ops instead of completing a dead request), then the
+                // tenant pauses for the driver-reset window. Latency
+                // keeps the original arrival — the re-run shows up in
+                // the tail, exactly like a real retried request.
+                let requeued = {
+                    let (_, ls) = self.ls_parts(tenant);
+                    match ls.computing.take() {
+                        Some(old) => match ls.reqs.remove(&old) {
+                            Some(mut r) => {
+                                r.phase = ReqPhase::Queued;
+                                let fresh = ls.next_req;
+                                ls.next_req += 1;
+                                ls.reqs.insert(fresh, r);
+                                ls.compute_queue.push_front(fresh);
+                                1
+                            }
+                            None => 0,
+                        },
+                        None => 0,
+                    }
+                };
+                if let Some(f) = self.faults.as_mut() {
+                    f.requests_requeued += requeued;
+                }
+                self.pause_tenant(now, tenant, recovery_s);
+            }
+            FaultSpec::ReconfigFlaky {
+                fail_prob,
+                latency_ms,
+                ..
+            } => {
+                let f = self.faults.as_mut().expect("checked above");
+                if edge.inject {
+                    f.flaky.push((fail_prob, latency_ms));
+                } else if let Some(pos) =
+                    f.flaky.iter().rposition(|&w| w == (fail_prob, latency_ms))
+                {
+                    f.flaky.remove(pos);
+                }
+            }
+            FaultSpec::SensorDropout { tenant, .. } => {
+                let f = self.faults.as_mut().expect("checked above");
+                if let Some(d) = f.dropout.get_mut(tenant) {
+                    if edge.inject {
+                        *d += 1;
+                    } else {
+                        *d = d.saturating_sub(1);
+                    }
+                }
+            }
+            // Cluster-level faults contribute no sim edges (`edges()`
+            // skips them), so this arm is unreachable; kept total.
+            FaultSpec::WorkerCrash { .. } => {}
+        }
     }
 
     // --- telemetry -----------------------------------------------------------
@@ -1549,6 +1816,19 @@ impl SimWorld {
 
         let mut tenants = Vec::new();
         for t in 0..n {
+            // Sensor dropout: serve the held-last signal flagged stale
+            // and skip the live sample entirely — the monitor window and
+            // traffic counters keep accumulating, so the first fresh
+            // sample after the dropout covers the whole gap.
+            let held = match self.faults.as_ref() {
+                Some(f) if f.dropout[t] > 0 => f.last_signals[t].clone(),
+                _ => None,
+            };
+            if let Some(mut sig) = held {
+                sig.stale = true;
+                tenants.push(sig);
+                continue;
+            }
             let gb = self.fabric.owner_gb(t);
             let gbps = (gb - self.last_owner_gb[t]) / dt;
             self.last_owner_gb[t] = gb;
@@ -1571,14 +1851,19 @@ impl SimWorld {
             } else {
                 0.0
             };
-            tenants.push(TenantSignal {
+            let sig = TenantSignal {
                 tenant: TenantId(t),
                 tails,
                 ttft,
                 pcie_gbps: gbps,
                 block_io_gbps: nvme_share,
                 active,
-            });
+                stale: false,
+            };
+            if let Some(f) = self.faults.as_mut() {
+                f.last_signals[t] = Some(sig.clone());
+            }
+            tenants.push(sig);
         }
 
         // SM utilization: time-weighted approximation via current state.
@@ -1711,7 +1996,45 @@ impl SimWorld {
                 .on_observation(&snap, &view);
             self.controller_wall_s += wall.elapsed().as_secs_f64();
             for a in actions {
-                self.apply_action(now, a);
+                let outcome = self.apply_action(now, a.clone());
+                // Close the loop: the control plane learns whether its
+                // disruptive change actually landed. `Applied` (and every
+                // non-disruptive action) is a no-op for the FSM beyond
+                // clearing retry state — legacy runs are byte-identical.
+                let fb = self
+                    .control
+                    .as_mut()
+                    .expect("control checked above")
+                    .on_action_outcome(now, &a, &outcome);
+                match fb {
+                    crate::controller::OutcomeFeedback::None => {}
+                    crate::controller::OutcomeFeedback::Retried { attempt } => {
+                        self.action_retries += 1;
+                        if let Some(rec) = self.recorder.as_mut() {
+                            let tenant = match &a {
+                                Action::ChangeIsolation { tenant, .. }
+                                | Action::Rollback { tenant }
+                                | Action::SetIoThrottle { tenant, .. }
+                                | Action::SetMpsQuota { tenant, .. }
+                                | Action::PinCpu { tenant, .. } => tenant.0 as u32,
+                            };
+                            rec.emit(
+                                now,
+                                TraceEvent::ActionRetry {
+                                    tenant,
+                                    attempt: attempt.min(u32::from(u8::MAX)) as u8,
+                                    kind: a.decision_kind(),
+                                },
+                            );
+                            rec.metrics.inc("ctl.action_retries", 1);
+                        }
+                    }
+                    crate::controller::OutcomeFeedback::Degraded => {
+                        // The degraded-mode audit entry is mirrored into
+                        // the trace like every other decision edge.
+                        self.action_retries += 1;
+                    }
+                }
             }
             self.mirror_control_trace(now);
         }
@@ -1856,6 +2179,7 @@ impl SimWorld {
             Event::Sample => self.on_sample(now),
             Event::PauseDone { tenant } => self.on_pause_done(now, tenant),
             Event::LlmStepDone { tenant } => self.on_llm_step_done(now, tenant),
+            Event::FaultEdge { idx } => self.on_fault_edge(now, idx),
             Event::ThrottleExpire {
                 tenant,
                 deadline_bits,
@@ -2028,7 +2352,13 @@ impl SimWorld {
                     let audit = c.audit();
                     let mut my_counts: BTreeMap<String, usize> = BTreeMap::new();
                     for e in audit.entries() {
-                        if e.edge != DecisionEdge::Defer {
+                        // Deferred proposals never executed; retry and
+                        // degraded entries are bookkeeping for an attempt
+                        // already counted on its trigger edge.
+                        if !matches!(
+                            e.edge,
+                            DecisionEdge::Defer | DecisionEdge::Retry | DecisionEdge::Degraded
+                        ) {
                             *counts.entry(e.action.as_str().to_string()).or_insert(0) += 1;
                             *my_counts.entry(e.action.as_str().to_string()).or_insert(0) += 1;
                         }
@@ -2119,6 +2449,16 @@ impl SimWorld {
             .collect();
         let (shards, per_shard_events, cross_shard_events, sync_windows) = self.q.shard_stats();
         let clamped_events = self.q.clamped_events();
+        let (faults_injected, faults_cleared, action_failures, requests_requeued) = self
+            .faults
+            .as_ref()
+            .map_or((0, 0, 0, 0), |f| {
+                (f.injected, f.cleared, f.action_failures, f.requests_requeued)
+            });
+        let degraded_controllers = self
+            .control
+            .as_ref()
+            .map_or(0, |p| p.degraded_controllers());
         RunResult {
             label,
             scenario: self.scenario.name.clone(),
@@ -2158,6 +2498,12 @@ impl SimWorld {
             sync_windows,
             // Filled in by `run_recorded` from the registry snapshot.
             metrics: Vec::new(),
+            faults_injected,
+            faults_cleared,
+            action_failures,
+            action_retries: self.action_retries,
+            requests_requeued,
+            degraded_controllers,
         }
     }
 }

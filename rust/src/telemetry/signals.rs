@@ -34,6 +34,11 @@ pub struct TenantSignal {
     pub block_io_gbps: f64,
     /// Is the tenant currently active (background tenants toggle)?
     pub active: bool,
+    /// True when this signal is a held-last copy: the tenant's sensor
+    /// dropped out (fault injection) and no fresh window backs these
+    /// numbers. Controllers hold conservative behavior within a TTL and
+    /// then stop proposing disruptive changes on stale data.
+    pub stale: bool,
 }
 
 /// Per shared-link view (PCIe switch uplinks + NVMe paths).

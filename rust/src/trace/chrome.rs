@@ -284,6 +284,43 @@ pub fn chrome_trace(events: &[(f64, TraceEvent)], tenant_names: &[String], horiz
                     Json::obj(vec![("value", Json::Num(total as f64))]),
                 ));
             }
+            TraceEvent::FaultInjected { kind, subject }
+            | TraceEvent::FaultCleared { kind, subject } => {
+                let cleared = matches!(ev, TraceEvent::FaultCleared { .. });
+                body.push(record(
+                    Json::Str(format!(
+                        "fault{}:{kind}",
+                        if cleared { "_cleared" } else { "" }
+                    )),
+                    "i",
+                    ts,
+                    TID_HOST,
+                    "fault",
+                    Json::obj(vec![
+                        ("kind", Json::Num(kind as f64)),
+                        ("subject", Json::Num(subject as f64)),
+                        ("cleared", Json::Bool(cleared)),
+                    ]),
+                ));
+            }
+            TraceEvent::ActionRetry {
+                tenant,
+                attempt,
+                kind,
+            } => {
+                let tid = controller_tid(tenant);
+                lanes
+                    .entry(tid)
+                    .or_insert_with(|| format!("ctl:{}", tenant_label(tenant)));
+                body.push(record(
+                    Json::Str(format!("retry:{}", kind.as_str())),
+                    "i",
+                    ts,
+                    tid,
+                    "fault",
+                    Json::obj(vec![("attempt", Json::Num(attempt as f64))]),
+                ));
+            }
         }
     }
 
@@ -476,6 +513,32 @@ fn event_json(t: f64, ev: TraceEvent) -> Json {
         TraceEvent::CrossShard { total } => {
             base("cross_shard", vec![("total", Json::Num(total as f64))])
         }
+        TraceEvent::FaultInjected { kind, subject } => base(
+            "fault_injected",
+            vec![
+                ("kind", Json::Num(kind as f64)),
+                ("subject", Json::Num(subject as f64)),
+            ],
+        ),
+        TraceEvent::FaultCleared { kind, subject } => base(
+            "fault_cleared",
+            vec![
+                ("kind", Json::Num(kind as f64)),
+                ("subject", Json::Num(subject as f64)),
+            ],
+        ),
+        TraceEvent::ActionRetry {
+            tenant,
+            attempt,
+            kind,
+        } => base(
+            "action_retry",
+            vec![
+                ("tenant", Json::Num(tenant as f64)),
+                ("attempt", Json::Num(attempt as f64)),
+                ("kind", Json::Str(kind.as_str().to_string())),
+            ],
+        ),
     }
 }
 

@@ -123,6 +123,13 @@ pub enum DecisionEdge {
     ValidateOk,
     /// Post-change validation window failed (mandatory rollback).
     ValidateFail,
+    /// A committed action failed at the platform (fault injection) and
+    /// the controller scheduled a backed-off retry. The dwell clock is
+    /// restored — a failed change never burns it.
+    Retry,
+    /// Retries exhausted: the controller fell back to guardrails-only
+    /// mode for the rest of the run.
+    Degraded,
 }
 
 impl DecisionEdge {
@@ -134,6 +141,8 @@ impl DecisionEdge {
             DecisionEdge::Defer => "defer",
             DecisionEdge::ValidateOk => "validate-ok",
             DecisionEdge::ValidateFail => "validate-fail",
+            DecisionEdge::Retry => "retry",
+            DecisionEdge::Degraded => "degraded",
         }
     }
 }
@@ -212,6 +221,19 @@ pub enum TraceEvent {
     ShardWindow { shard: u32, events: u64, begin: bool },
     /// Cumulative cross-shard deliveries at a window edge.
     CrossShard { total: u64 },
+    /// A fault from the run's `FaultPlan` began. `kind` is
+    /// `FaultSpec::kind_code`, `subject` the link/tenant it targets.
+    FaultInjected { kind: u8, subject: u32 },
+    /// A timed fault ended (capacity restored, window closed, sensor
+    /// back).
+    FaultCleared { kind: u8, subject: u32 },
+    /// A controller's committed action failed at the platform and a
+    /// backed-off retry was scheduled (`attempt` = failures so far).
+    ActionRetry {
+        tenant: u32,
+        attempt: u8,
+        kind: DecisionKind,
+    },
 }
 
 #[cfg(test)]
@@ -246,6 +268,8 @@ mod tests {
             (DecisionEdge::Defer, "defer"),
             (DecisionEdge::ValidateOk, "validate-ok"),
             (DecisionEdge::ValidateFail, "validate-fail"),
+            (DecisionEdge::Retry, "retry"),
+            (DecisionEdge::Degraded, "degraded"),
         ];
         for (edge, s) in expect {
             assert_eq!(edge.as_str(), s);

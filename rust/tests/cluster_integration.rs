@@ -1,14 +1,16 @@
 //! Cluster integration: leader/worker over real TCP sockets (E9).
 
-use predserve::cluster::{Leader, Msg};
 use predserve::cluster::worker::Worker;
+use predserve::cluster::{ClusterOpts, Leader, Msg, NodeReport};
+use predserve::faults::{FaultPlan, FaultSpec};
 
 #[test]
 fn two_node_cluster_static_vs_full() {
-    let stat = Leader::run_cluster(2, 31, "static", 240.0, "single").unwrap();
-    let full = Leader::run_cluster(2, 31, "full", 240.0, "single").unwrap();
+    let stat = Leader::run_cluster(2, 31, "static", 240.0, "single", 1).unwrap();
+    let full = Leader::run_cluster(2, 31, "full", 240.0, "single", 1).unwrap();
     assert_eq!(stat.per_node.len(), 2);
     assert_eq!(full.per_node.len(), 2);
+    assert_eq!(full.failed_nodes, 0);
     assert!(
         full.mean_p99_ms < stat.mean_p99_ms,
         "cluster: full {} !< static {}",
@@ -22,8 +24,10 @@ fn two_node_cluster_static_vs_full() {
 #[test]
 fn worker_runs_llm_workload() {
     let w = Worker::new("llm-node");
-    match w.run_scenario(5, "full", 120.0, "llm") {
-        Msg::RunDone { p99_ms, completed, .. } => {
+    match w.run_scenario(5, "full", 120.0, "llm", 1) {
+        Msg::RunDone {
+            p99_ms, completed, ..
+        } => {
             assert!(completed > 300); // 4 rps LLM workload x 120 s
             assert!(p99_ms > 0.0);
         }
@@ -33,19 +37,31 @@ fn worker_runs_llm_workload() {
 
 #[test]
 fn cluster_seeds_differ_per_node() {
-    let rep = Leader::run_cluster(2, 77, "static", 120.0, "single").unwrap();
+    let rep = Leader::run_cluster(2, 77, "static", 120.0, "single", 1).unwrap();
     // Different seeds per node: identical stats would be suspicious.
-    let n0 = &rep.per_node[0];
-    let n1 = &rep.per_node[1];
-    assert!(
-        n0.miss_rate != n1.miss_rate || n0.p99_ms != n1.p99_ms,
-        "nodes produced identical results"
-    );
+    match (&rep.per_node[0], &rep.per_node[1]) {
+        (
+            NodeReport::Ok {
+                miss_rate: m0,
+                p99_ms: p0,
+                ..
+            },
+            NodeReport::Ok {
+                miss_rate: m1,
+                p99_ms: p1,
+                ..
+            },
+        ) => assert!(
+            m0 != m1 || p0 != p1,
+            "nodes produced identical results"
+        ),
+        other => panic!("expected two Ok nodes, got {other:?}"),
+    }
 }
 
 #[test]
 fn four_node_scale_out() {
-    let rep = Leader::run_cluster(4, 41, "full", 120.0, "single").unwrap();
+    let rep = Leader::run_cluster(4, 41, "full", 120.0, "single", 1).unwrap();
     assert_eq!(rep.per_node.len(), 4);
     assert!(rep.total_rps > 200.0);
 }
@@ -59,12 +75,43 @@ fn fleet_dispatch_places_one_list_across_two_workers() {
     assert_eq!(rep.per_node.len(), 2);
     assert!(rep.queued.is_empty(), "queued: {:?}", rep.queued);
     assert!(rep.rejected.is_empty(), "rejected: {:?}", rep.rejected);
-    assert!(rep.total_completed > 5_000, "completed {}", rep.total_completed);
+    assert!(
+        rep.total_completed > 5_000,
+        "completed {}",
+        rep.total_completed
+    );
     // Both nodes actually served latency-sensitive traffic.
     for n in &rep.per_node {
-        assert!(n.rps > 1.0, "{}: rps {}", n.node, n.rps);
-        assert!(n.p99_ms > 0.0);
+        match n {
+            NodeReport::Ok { node, rps, p99_ms, .. } => {
+                assert!(*rps > 1.0, "{node}: rps {rps}");
+                assert!(*p99_ms > 0.0);
+            }
+            NodeReport::Failed { node, reason } => panic!("{node} failed: {reason}"),
+        }
     }
+}
+
+#[test]
+fn fleet_dispatch_survives_a_worker_crash() {
+    // FaultSpec::WorkerCrash acceptance: a fleet run with one crashed
+    // node completes, reports NodeReport::Failed for exactly that node,
+    // and still aggregates the survivor's work.
+    let plan = FaultPlan::new(vec![FaultSpec::WorkerCrash {
+        node: "node0".into(),
+    }]);
+    let opts = ClusterOpts::from_fault_plan(&plan).node_timeout(120.0);
+    let rep = Leader::run_fleet_opts(2, 31, "static", 120.0, 24, &opts).unwrap();
+    assert_eq!(rep.per_node.len(), 2);
+    assert_eq!(rep.failed_nodes, 1);
+    for n in &rep.per_node {
+        if n.node() == "node0" {
+            assert!(!n.is_ok(), "crashed node must be reported Failed");
+        } else {
+            assert!(n.is_ok(), "survivor degraded: {:?}", n.failure());
+        }
+    }
+    assert!(rep.total_completed > 1_000, "survivor did no work");
 }
 
 #[test]

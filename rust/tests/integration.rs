@@ -754,3 +754,64 @@ fn rollback_restores_on_regression() {
         base.p99_ms
     );
 }
+
+// --- chaos catalog acceptance ------------------------------------------------
+
+#[test]
+fn chaos_link_flap_recovery_completes_and_clears() {
+    // link_flap_recovery: the primary's PCIe link flaps to 25% capacity
+    // for 20 s every 120 s between t=600 and t=1200. Five down windows,
+    // each injected and cleared deterministically; the run completes and
+    // the system recovers between flaps.
+    let s = Scenario::link_flap_recovery(11, Levers::full());
+    let r = SimWorld::new(s).run();
+    assert_eq!(r.faults_injected, 5, "expected 5 flap-down edges");
+    assert_eq!(r.faults_cleared, 5, "every flap must clear in-horizon");
+    assert!(r.completed > 10_000, "completed {}", r.completed);
+    assert!(
+        r.miss_rate < 0.5,
+        "flaps should degrade, not destroy: miss {}",
+        r.miss_rate
+    );
+}
+
+#[test]
+fn chaos_mig_reconfig_flaky_retries_keep_slo_within_2x() {
+    // mig_reconfig_flaky acceptance: with reconfigs failing at p=0.5 all
+    // run long, the retry/backoff path must (a) keep the primary's SLO
+    // miss-rate within 2x the fault-free run, and (b) account for every
+    // failed action with a retry or a degraded controller — never a
+    // silent drop.
+    let seeds = [11u64, 13, 17, 23, 29];
+    let (mut fail_sum, mut retry_sum, mut degraded_sum) = (0u64, 0u64, 0u64);
+    let (mut flaky_miss, mut base_miss) = (0.0, 0.0);
+    for &seed in &seeds {
+        let mut flaky = Scenario::mig_reconfig_flaky(seed, Levers::full());
+        flaky.horizon = 900.0;
+        let primary = flaky.primary;
+        let rf = SimWorld::new(flaky).run();
+        let mut base = Scenario::paper_single_host(seed, Levers::full());
+        base.horizon = 900.0;
+        let rb = SimWorld::new(base).run();
+        fail_sum += rf.action_failures;
+        retry_sum += rf.action_retries;
+        degraded_sum += rf.degraded_controllers;
+        flaky_miss += rf.per_tenant[primary].miss_rate;
+        base_miss += rb.per_tenant[primary].miss_rate;
+    }
+    let n = seeds.len() as f64;
+    let (flaky_mean, base_mean) = (flaky_miss / n, base_miss / n);
+    assert!(
+        fail_sum > 0,
+        "flaky gate never fired across {} seeds — injection is dead",
+        seeds.len()
+    );
+    assert!(
+        retry_sum + degraded_sum > 0,
+        "{fail_sum} failed action(s) with no retry and no degraded controller: silent drop"
+    );
+    assert!(
+        flaky_mean <= 2.0 * base_mean + 0.01,
+        "flaky reconfigs blew the SLO: mean miss {flaky_mean} vs fault-free {base_mean}"
+    );
+}

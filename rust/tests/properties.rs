@@ -9,6 +9,7 @@
 use predserve::alloc::{AutoRequest, FleetAllocator, HostAllocator, SlotOutcome};
 use predserve::controller::{ControllerConfig, Levers};
 use predserve::fabric::ps::{ps_rates, FlowDemand};
+use predserve::faults::{FaultPlan, FaultSpec};
 use predserve::fabric::{Fabric, FabricKind, FlowId, ReferenceFabric};
 use predserve::gpu::{A100Gpu, MigProfile};
 use predserve::platform::{Scenario, ScenarioBuilder, SimWorld};
@@ -1391,6 +1392,187 @@ fn catalog_same_seed_identical_run_result() {
             b.fingerprint(),
             "{name}: same seed produced different runs"
         );
+    }
+}
+
+// --- fault-injection properties ---------------------------------------------
+
+/// A generated, always-valid fault plan whose edges land inside `horizon`.
+fn gen_fault_plan(rng: &mut Pcg64, horizon: f64) -> FaultPlan {
+    let n = 1 + rng.below(3) as usize;
+    let specs = (0..n)
+        .map(|_| {
+            let at = rng.range_f64(0.0, horizon * 0.8);
+            match rng.below(5) {
+                0 => FaultSpec::LinkDegrade {
+                    link: 0,
+                    factor: rng.range_f64(0.1, 0.9),
+                    at,
+                    duration: rng.range_f64(1.0, 15.0),
+                },
+                1 => FaultSpec::LinkFlap {
+                    link: 0,
+                    factor: 0.25,
+                    from: at,
+                    until: at + rng.range_f64(5.0, 20.0),
+                    period_s: 6.0,
+                    down_s: 2.0,
+                },
+                2 => FaultSpec::SliceFail {
+                    tenant: 0,
+                    at,
+                    recovery_s: rng.range_f64(1.0, 10.0),
+                },
+                3 => FaultSpec::ReconfigFlaky {
+                    fail_prob: rng.range_f64(0.1, 0.9),
+                    latency_ms: rng.range_f64(50.0, 500.0),
+                    at,
+                    duration: rng.range_f64(5.0, 30.0),
+                },
+                _ => FaultSpec::SensorDropout {
+                    tenant: 0,
+                    at,
+                    duration: rng.range_f64(1.0, 10.0),
+                },
+            }
+        })
+        .collect();
+    FaultPlan::new(specs)
+}
+
+#[test]
+fn prop_empty_fault_plan_is_byte_identical() {
+    // Bit-compat contract: a scenario with an explicitly-attached empty
+    // FaultPlan runs byte-identically to one that never mentions faults,
+    // on both the reference and the sharded engine — and performs zero
+    // fault bookkeeping.
+    check(
+        Config { cases: 8, seed: 0x1E },
+        "empty fault plan bit-compat",
+        gen_scenario,
+        |spec| {
+            for shards in [1usize, 4] {
+                let mk = |explicit: bool| {
+                    let mut s = build_gen(spec, levers_of(spec.levers));
+                    s.shards = shards;
+                    if explicit {
+                        s.faults = FaultPlan::new(Vec::new());
+                    }
+                    SimWorld::new(s).run()
+                };
+                let plain = mk(false);
+                let empty = mk(true);
+                if plain.fingerprint() != empty.fingerprint() {
+                    return Err(format!(
+                        "shards={shards}: empty fault plan perturbed the run:\n  {}\n  {}",
+                        plain.fingerprint(),
+                        empty.fingerprint()
+                    ));
+                }
+                if empty.faults_injected != 0 || empty.action_failures != 0 {
+                    return Err(format!(
+                        "shards={shards}: empty plan did fault bookkeeping (injected={}, failures={})",
+                        empty.faults_injected, empty.action_failures
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fault_runs_are_deterministic() {
+    // Same seed + same fault plan ⇒ identical fingerprint AND identical
+    // fault/retry counters — fault RNG rides its own stream, so a rerun
+    // replays the exact same failures.
+    check(
+        Config { cases: 8, seed: 0x1F },
+        "fault determinism",
+        |rng| {
+            let spec = gen_scenario(rng);
+            let plan_seed = rng.below(1_000_000);
+            (spec, plan_seed)
+        },
+        |(spec, plan_seed)| {
+            let mk = || {
+                let mut s = build_gen(spec, levers_of(spec.levers));
+                let mut prng = Pcg64::new(*plan_seed, 99);
+                let plan = gen_fault_plan(&mut prng, s.horizon);
+                plan.validate().map_err(|e| format!("generated invalid plan: {e}"))?;
+                s.faults = plan;
+                Ok::<_, String>(SimWorld::new(s).run())
+            };
+            let a = mk()?;
+            let b = mk()?;
+            if a.fingerprint() != b.fingerprint() {
+                return Err(format!(
+                    "same fault plan, different runs:\n  {}\n  {}",
+                    a.fingerprint(),
+                    b.fingerprint()
+                ));
+            }
+            let ca = (
+                a.faults_injected,
+                a.faults_cleared,
+                a.action_failures,
+                a.action_retries,
+                a.requests_requeued,
+                a.degraded_controllers,
+            );
+            let cb = (
+                b.faults_injected,
+                b.faults_cleared,
+                b.action_failures,
+                b.action_retries,
+                b.requests_requeued,
+                b.degraded_controllers,
+            );
+            if ca != cb {
+                return Err(format!("fault counters diverged: {ca:?} vs {cb:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn catalog_fingerprints_unchanged_by_empty_fault_plan() {
+    // Every catalog entry, run with its fault plan stripped, is
+    // byte-identical to the same entry with an explicitly-empty plan —
+    // on both engines. For the 13 legacy entries the stripped run IS the
+    // as-shipped run (their plans are empty), pinning pre-fault behavior.
+    for name in Scenario::CATALOG {
+        for shards in [1usize, 4] {
+            let mk = |strip: bool, explicit_empty: bool| {
+                let mut s = Scenario::by_name(name, 23, Levers::full()).unwrap();
+                s.horizon = 60.0;
+                s.shards = shards;
+                if strip {
+                    s.faults = FaultPlan::default();
+                }
+                if explicit_empty {
+                    s.faults = FaultPlan::new(Vec::new());
+                }
+                SimWorld::new(s).run()
+            };
+            let stripped = mk(true, false);
+            let explicit = mk(false, true);
+            assert_eq!(
+                stripped.fingerprint(),
+                explicit.fingerprint(),
+                "{name} shards={shards}: empty fault plan perturbed the run"
+            );
+            assert_eq!(stripped.faults_injected, 0, "{name}");
+            let as_shipped = mk(false, false);
+            if Scenario::by_name(name, 23, Levers::full()).unwrap().faults.is_empty() {
+                assert_eq!(
+                    as_shipped.fingerprint(),
+                    stripped.fingerprint(),
+                    "{name} shards={shards}: legacy entry changed by fault machinery"
+                );
+            }
+        }
     }
 }
 
