@@ -469,6 +469,19 @@ mod tests {
     }
 
     #[test]
+    fn cluster_dispatch_runs_cluster_fabric_scenarios() {
+        // Catalog entries carrying a ClusterTopology (cross-host ring
+        // trainers) dispatch through the same wire path as single-host
+        // ones; every node builds its own net fabric and completes.
+        let report =
+            Leader::run_cluster(2, 13, "static", 45.0, "fat_tree_allreduce_mix", 1).unwrap();
+        assert_eq!(report.per_node.len(), 2);
+        assert_eq!(report.failed_nodes, 0);
+        assert!(report.total_completed > 1_000);
+        assert!(report.mean_p99_ms > 0.0);
+    }
+
+    #[test]
     fn fleet_plan_covers_every_tenant_once() {
         let (tenants, plan) = Leader::plan_fleet(2, 11, 24);
         assert_eq!(tenants.len(), 24);

@@ -22,17 +22,31 @@
 //! [`FabricBackend`] lets the simulated world run on either engine
 //! (`SimWorld::new_with_fabric`); production paths always use the
 //! incremental one.
+//!
+//! The same split repeats one tier up for the **cluster network** (PR
+//! 10): [`netpath`] generalizes the PS allocation to flows that traverse
+//! a *sequence* of links (host uplink + NIC + leaf/spine trunks),
+//! [`net_reference::NetReferenceFabric`] defines the semantics, and
+//! [`netfabric::NetFabric`] is the incremental engine behind
+//! [`NetFabricBackend`]. Scenarios without a
+//! [`crate::topo::ClusterTopology`] build no net fabric at all.
 
 pub mod calendar;
+pub mod net_reference;
+pub mod netfabric;
+pub mod netpath;
 pub mod ps;
 pub mod reference;
 pub mod transfer;
 
+pub use net_reference::NetReferenceFabric;
+pub use netfabric::NetFabric;
+pub use netpath::{net_rates_into, NetFlowDemand, NetSolveScratch};
 pub use ps::{ps_rates, ps_rates_into, FlowDemand};
 pub use reference::ReferenceFabric;
 pub use transfer::{Fabric, FlowId, LinkCounters};
 
-use crate::topo::{HostTopology, LinkId};
+use crate::topo::{ClusterTopology, HostTopology, LinkId, NetLinkId};
 
 /// Which fluid-flow engine a world should run on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -173,6 +187,144 @@ impl FabricBackend {
         match self {
             FabricBackend::Incremental(f) => f.rate_recomputes(),
             FabricBackend::Reference(f) => f.rate_recomputes(),
+        }
+    }
+}
+
+/// The cluster-network twin of [`FabricBackend`]: one dispatch point so
+/// the world (and the differential oracles) can drive either net engine
+/// bit-identically. Built only when a scenario carries a
+/// [`ClusterTopology`].
+#[derive(Clone, Debug)]
+pub enum NetFabricBackend {
+    Incremental(NetFabric),
+    Reference(NetReferenceFabric),
+}
+
+impl NetFabricBackend {
+    pub fn new(cluster: &ClusterTopology, kind: FabricKind) -> NetFabricBackend {
+        match kind {
+            FabricKind::Incremental => NetFabricBackend::Incremental(NetFabric::new(cluster)),
+            FabricKind::Reference => NetFabricBackend::Reference(NetReferenceFabric::new(cluster)),
+        }
+    }
+
+    #[inline]
+    pub fn start(
+        &mut self,
+        path: &[NetLinkId],
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+        owner: usize,
+    ) -> FlowId {
+        match self {
+            NetFabricBackend::Incremental(f) => f.start(path, gb, weight, cap, owner),
+            NetFabricBackend::Reference(f) => f.start(path, gb, weight, cap, owner),
+        }
+    }
+
+    #[inline]
+    pub fn remove(&mut self, id: FlowId) {
+        match self {
+            NetFabricBackend::Incremental(f) => f.remove(id),
+            NetFabricBackend::Reference(f) => f.remove(id),
+        }
+    }
+
+    #[inline]
+    pub fn set_owner_cap(&mut self, owner: usize, cap: Option<f64>) {
+        match self {
+            NetFabricBackend::Incremental(f) => f.set_owner_cap(owner, cap),
+            NetFabricBackend::Reference(f) => f.set_owner_cap(owner, cap),
+        }
+    }
+
+    #[inline]
+    pub fn advance(&mut self, dt: f64) {
+        match self {
+            NetFabricBackend::Incremental(f) => f.advance(dt),
+            NetFabricBackend::Reference(f) => f.advance(dt),
+        }
+    }
+
+    #[inline]
+    pub fn next_completion(&mut self) -> Option<(f64, FlowId)> {
+        match self {
+            NetFabricBackend::Incremental(f) => f.next_completion(),
+            NetFabricBackend::Reference(f) => f.next_completion(),
+        }
+    }
+
+    #[inline]
+    pub fn remaining(&self, id: FlowId) -> Option<f64> {
+        match self {
+            NetFabricBackend::Incremental(f) => f.remaining(id),
+            NetFabricBackend::Reference(f) => f.remaining(id),
+        }
+    }
+
+    #[inline]
+    pub fn counters(&self, link: NetLinkId) -> LinkCounters {
+        match self {
+            NetFabricBackend::Incremental(f) => f.counters(link),
+            NetFabricBackend::Reference(f) => f.counters(link),
+        }
+    }
+
+    #[inline]
+    pub fn owner_gb(&self, owner: usize) -> f64 {
+        match self {
+            NetFabricBackend::Incremental(f) => f.owner_gb(owner),
+            NetFabricBackend::Reference(f) => f.owner_gb(owner),
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self, link: NetLinkId) -> f64 {
+        match self {
+            NetFabricBackend::Incremental(f) => f.capacity(link),
+            NetFabricBackend::Reference(f) => f.capacity(link),
+        }
+    }
+
+    #[inline]
+    pub fn set_link_capacity(&mut self, link: NetLinkId, gbps: f64) {
+        match self {
+            NetFabricBackend::Incremental(f) => f.set_link_capacity(link, gbps),
+            NetFabricBackend::Reference(f) => f.set_link_capacity(link, gbps),
+        }
+    }
+
+    #[inline]
+    pub fn flow_exists(&self, id: FlowId) -> bool {
+        match self {
+            NetFabricBackend::Incremental(f) => f.flow_exists(id),
+            NetFabricBackend::Reference(f) => f.flow_exists(id),
+        }
+    }
+
+    #[inline]
+    pub fn active_flows(&self) -> usize {
+        match self {
+            NetFabricBackend::Incremental(f) => f.active_flows(),
+            NetFabricBackend::Reference(f) => f.active_flows(),
+        }
+    }
+
+    #[inline]
+    pub fn num_links(&self) -> usize {
+        match self {
+            NetFabricBackend::Incremental(f) => f.num_links(),
+            NetFabricBackend::Reference(f) => f.num_links(),
+        }
+    }
+
+    #[inline]
+    pub fn rate_recomputes(&self) -> u64 {
+        match self {
+            NetFabricBackend::Incremental(f) => f.rate_recomputes(),
+            NetFabricBackend::Reference(f) => f.rate_recomputes(),
         }
     }
 }

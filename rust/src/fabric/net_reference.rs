@@ -1,0 +1,290 @@
+//! Reference cluster-network fabric: the semantics oracle for
+//! [`super::netfabric::NetFabric`].
+//!
+//! Deliberately naive — every query re-solves the *entire* flow set with
+//! the shared path solver ([`super::netpath::net_rates_into`]) and scans
+//! every flow for the next completion. O(flows · links) per query, no
+//! caching, no dirty tracking. Its job is to define what the incremental
+//! engine must compute, bit for bit; the differential oracle
+//! (`prop_net_fabric_incremental_matches_reference_bitwise`) holds the
+//! two together.
+//!
+//! Do not "fix" or speed this module up: its value is that the code is
+//! short enough to audit by eye against the model in §2.5.1 generalized
+//! to multi-link paths.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+
+use super::netpath::{net_rates_into, NetFlowDemand, NetSolveScratch};
+use super::transfer::{FlowId, LinkCounters};
+use crate::topo::{ClusterTopology, NetLinkId};
+
+#[derive(Clone, Debug)]
+struct NetFlow {
+    path: Vec<usize>,
+    weight: f64,
+    cap: Option<f64>,
+    remaining: f64,
+    owner: usize,
+}
+
+/// The straightforward net-fabric implementation.
+#[derive(Clone, Debug)]
+pub struct NetReferenceFabric {
+    capacities: Vec<f64>,
+    flows: BTreeMap<FlowId, NetFlow>,
+    next_id: u64,
+    counters: Vec<LinkCounters>,
+    owner_gb: BTreeMap<usize, f64>,
+    /// Full-solve count (telemetry; interior-mutable because `rates` is
+    /// conceptually a read).
+    solver_calls: Cell<u64>,
+}
+
+impl NetReferenceFabric {
+    pub fn new(cluster: &ClusterTopology) -> NetReferenceFabric {
+        let capacities: Vec<f64> = (0..cluster.num_net_links)
+            .map(|l| cluster.capacity(NetLinkId(l)))
+            .collect();
+        let n = capacities.len();
+        NetReferenceFabric {
+            capacities,
+            flows: BTreeMap::new(),
+            next_id: 1,
+            counters: vec![LinkCounters::default(); n],
+            owner_gb: BTreeMap::new(),
+            solver_calls: Cell::new(0),
+        }
+    }
+
+    /// Start a flow of `gb` gigabytes over `path` for tenant `owner`.
+    pub fn start(
+        &mut self,
+        path: &[NetLinkId],
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+        owner: usize,
+    ) -> FlowId {
+        assert!(!path.is_empty(), "a net flow needs a path");
+        assert!(gb > 0.0 && weight > 0.0);
+        for l in path {
+            assert!(l.0 < self.capacities.len(), "unknown net link {l:?}");
+        }
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.insert(
+            id,
+            NetFlow {
+                path: path.iter().map(|l| l.0).collect(),
+                weight,
+                cap,
+                remaining: gb,
+                owner,
+            },
+        );
+        id
+    }
+
+    pub fn remove(&mut self, id: FlowId) {
+        self.flows.remove(&id);
+    }
+
+    /// Throttle every flow owned by `owner` to `cap` GB/s end to end
+    /// (`None` lifts the throttle).
+    pub fn set_owner_cap(&mut self, owner: usize, cap: Option<f64>) {
+        for f in self.flows.values_mut() {
+            if f.owner == owner {
+                f.cap = cap;
+            }
+        }
+    }
+
+    pub fn set_link_capacity(&mut self, link: NetLinkId, gbps: f64) {
+        assert!(link.0 < self.capacities.len(), "unknown net link {link:?}");
+        self.capacities[link.0] = gbps;
+    }
+
+    pub fn flow_exists(&self, id: FlowId) -> bool {
+        self.flows.contains_key(&id)
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Current rate of every flow — one full solve over the whole fabric.
+    pub fn rates(&self) -> BTreeMap<FlowId, f64> {
+        if self.flows.is_empty() {
+            return BTreeMap::new();
+        }
+        self.solver_calls.set(self.solver_calls.get() + 1);
+        let demands: Vec<NetFlowDemand> = self
+            .flows
+            .values()
+            .map(|f| NetFlowDemand {
+                weight: f.weight,
+                cap: f.cap,
+                path: &f.path,
+            })
+            .collect();
+        let mut scratch = NetSolveScratch::default();
+        let mut rates = Vec::new();
+        net_rates_into(&self.capacities, &demands, &mut scratch, &mut rates);
+        self.flows.keys().copied().zip(rates).collect()
+    }
+
+    pub fn rate_of(&self, id: FlowId) -> Option<f64> {
+        self.rates().get(&id).copied()
+    }
+
+    /// Time until the next flow drains, with the flow that drains —
+    /// strict `<` scan in ascending id order, like the PCIe reference.
+    pub fn next_completion(&self) -> Option<(f64, FlowId)> {
+        let rates = self.rates();
+        let mut best: Option<(f64, FlowId)> = None;
+        for (id, f) in &self.flows {
+            let r = rates[id];
+            if r <= 0.0 {
+                continue;
+            }
+            let dt = f.remaining / r;
+            if best.map(|(b, _)| dt < b).unwrap_or(true) {
+                best = Some((dt, *id));
+            }
+        }
+        best
+    }
+
+    /// Move `dt` seconds of traffic at the current rates.
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0);
+        let rates = self.rates();
+        for (id, f) in self.flows.iter_mut() {
+            let moved = (rates[id] * dt).min(f.remaining);
+            f.remaining -= moved;
+            for &l in &f.path {
+                self.counters[l].gb_total += moved;
+            }
+            *self.owner_gb.entry(f.owner).or_insert(0.0) += moved;
+        }
+        for l in 0..self.capacities.len() {
+            let cap = self.capacities[l];
+            if cap <= 0.0 {
+                continue;
+            }
+            let link_rate: f64 = self
+                .flows
+                .iter()
+                .filter(|(_, f)| f.path.contains(&l))
+                .map(|(id, _)| rates[id])
+                .sum();
+            self.counters[l].util_integral += (link_rate / cap) * dt;
+        }
+    }
+
+    pub fn remaining(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.remaining)
+    }
+
+    pub fn counters(&self, link: NetLinkId) -> LinkCounters {
+        self.counters[link.0]
+    }
+
+    pub fn owner_gb(&self, owner: usize) -> f64 {
+        self.owner_gb.get(&owner).copied().unwrap_or(0.0)
+    }
+
+    pub fn capacity(&self, link: NetLinkId) -> f64 {
+        self.capacities[link.0]
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.capacities.len()
+    }
+
+    /// Full solves performed so far (telemetry only — not part of the
+    /// bit-compat surface; the incremental engine counts differently).
+    pub fn rate_recomputes(&self) -> u64 {
+        self.solver_calls.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_leaf() -> ClusterTopology {
+        ClusterTopology::leaf_spine(2, 2, 2)
+    }
+
+    #[test]
+    fn lone_flow_runs_at_nic_line_rate() {
+        let c = two_leaf();
+        let mut fab = NetReferenceFabric::new(&c);
+        let id = fab.start(&c.route(0, 2), 25.0, 1.0, None, 0);
+        assert_eq!(fab.rate_of(id).unwrap().to_bits(), 12.5f64.to_bits());
+        let (dt, done) = fab.next_completion().unwrap();
+        assert_eq!(done, id);
+        assert_eq!(dt.to_bits(), 2.0f64.to_bits());
+    }
+
+    #[test]
+    fn colliding_flows_split_the_shared_trunk() {
+        let c = two_leaf();
+        let mut fab = NetReferenceFabric::new(&c);
+        // 0→2 and 1→3 both pick spine 1, sharing up(0,1): 25 GB/s trunk
+        // isn't the bottleneck, the NICs are — so no contention here.
+        let a = fab.start(&c.route(0, 2), 10.0, 1.0, None, 0);
+        let b = fab.start(&c.route(1, 3), 10.0, 1.0, None, 1);
+        assert_eq!(c.spine_for(0, 1), 1);
+        let rates = fab.rates();
+        assert_eq!(rates[&a].to_bits(), 12.5f64.to_bits());
+        assert_eq!(rates[&b].to_bits(), 12.5f64.to_bits());
+        // Degrade the shared trunk below 2×NIC: now the two flows split it.
+        fab.set_link_capacity(c.up(0, 1), 10.0);
+        let rates = fab.rates();
+        assert!((rates[&a] - 5.0).abs() < 1e-12);
+        assert!((rates[&b] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_moves_bytes_and_counts_per_link() {
+        let c = two_leaf();
+        let mut fab = NetReferenceFabric::new(&c);
+        let id = fab.start(&c.route(0, 1), 5.0, 1.0, None, 3);
+        fab.advance(0.2);
+        let moved = 12.5 * 0.2;
+        assert!((fab.remaining(id).unwrap() - (5.0 - moved)).abs() < 1e-12);
+        // Every link on the path saw the same bytes.
+        for l in c.route(0, 1) {
+            assert!((fab.counters(l).gb_total - moved).abs() < 1e-12);
+        }
+        // Links off the path saw none.
+        assert_eq!(fab.counters(c.host_tx(2)).gb_total, 0.0);
+        assert!((fab.owner_gb(3) - moved).abs() < 1e-12);
+    }
+
+    #[test]
+    fn owner_cap_throttles_end_to_end() {
+        let c = two_leaf();
+        let mut fab = NetReferenceFabric::new(&c);
+        let id = fab.start(&c.route(0, 1), 5.0, 1.0, None, 0);
+        fab.set_owner_cap(0, Some(2.0));
+        assert_eq!(fab.rate_of(id).unwrap().to_bits(), 2.0f64.to_bits());
+        fab.set_owner_cap(0, None);
+        assert_eq!(fab.rate_of(id).unwrap().to_bits(), 12.5f64.to_bits());
+    }
+
+    #[test]
+    fn completion_drains_exactly() {
+        let c = two_leaf();
+        let mut fab = NetReferenceFabric::new(&c);
+        let id = fab.start(&c.route(0, 1), 2.5, 1.0, None, 0);
+        let (dt, _) = fab.next_completion().unwrap();
+        fab.advance(dt);
+        assert!(fab.remaining(id).unwrap() <= 1e-12);
+        assert!(fab.next_completion().is_none());
+    }
+}

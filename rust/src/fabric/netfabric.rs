@@ -1,0 +1,457 @@
+//! Incremental cluster-network fabric, bit-compatible with
+//! [`super::net_reference::NetReferenceFabric`].
+//!
+//! # Bit-compatibility contract
+//!
+//! Every query returns *exactly* the bits the reference returns on the
+//! same mutation history. The trick is the same as the PCIe engine's
+//! (PR 4), lifted from links to link *components*: a mutation dirties
+//! the links on the affected flow's path; a solve expands each dirty
+//! link to the transitively-connected component of links sharing flows
+//! and re-runs the shared path solver
+//! ([`super::netpath::net_rates_into`]) on just that component's flows,
+//! in ascending id order. Rate allocation in one component never reads
+//! state from another (fixing a flow only mutates its own path's
+//! books), so the per-flow arithmetic is bit-identical to a full solve
+//! — the solver module's `disjoint_components_solve_independently` test
+//! and the cross-engine differential oracle pin this down.
+//!
+//! Completions reuse the PCIe engine's [`super::calendar`]: a multi-link
+//! flow posts its candidate on every link it crosses; duplicates are
+//! harmless because the earliest entry carries the same `(dt, flow)`
+//! either way.
+
+use std::collections::BTreeMap;
+
+use super::calendar::CompletionCalendar;
+use super::netpath::{net_rates_into, NetFlowDemand, NetSolveScratch};
+use super::transfer::{FlowId, LinkCounters};
+use crate::topo::{ClusterTopology, NetLinkId};
+
+#[derive(Clone, Debug)]
+struct NetFlow {
+    path: Vec<usize>,
+    weight: f64,
+    cap: Option<f64>,
+    remaining: f64,
+    owner: usize,
+    /// Cached allocation from the last component solve.
+    rate: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct NetLinkState {
+    /// Flows crossing this link, ascending id (starts append monotone ids).
+    flow_ids: Vec<FlowId>,
+    dirty: bool,
+    /// Cached Σ rates over `flow_ids`, refreshed on component solves.
+    link_rate: f64,
+    counters: LinkCounters,
+}
+
+/// The production net-fabric engine.
+#[derive(Clone, Debug)]
+pub struct NetFabric {
+    capacities: Vec<f64>,
+    links: Vec<NetLinkState>,
+    flows: BTreeMap<FlowId, NetFlow>,
+    next_id: u64,
+    owner_gb: Vec<f64>,
+    calendar: CompletionCalendar,
+    any_dirty: bool,
+    rate_recomputes: u64,
+    // Reusable scratch.
+    scratch: NetSolveScratch,
+    rates_scratch: Vec<f64>,
+    comp_links: Vec<usize>,
+    comp_flows: Vec<FlowId>,
+    link_seen: Vec<bool>,
+    adv_best: Vec<Option<(f64, FlowId)>>,
+}
+
+impl NetFabric {
+    pub fn new(cluster: &ClusterTopology) -> NetFabric {
+        let capacities: Vec<f64> = (0..cluster.num_net_links)
+            .map(|l| cluster.capacity(NetLinkId(l)))
+            .collect();
+        let n = capacities.len();
+        NetFabric {
+            capacities,
+            links: vec![NetLinkState::default(); n],
+            flows: BTreeMap::new(),
+            next_id: 1,
+            owner_gb: Vec::new(),
+            calendar: CompletionCalendar::new(n),
+            any_dirty: false,
+            rate_recomputes: 0,
+            scratch: NetSolveScratch::default(),
+            rates_scratch: Vec::new(),
+            comp_links: Vec::new(),
+            comp_flows: Vec::new(),
+            link_seen: vec![false; n],
+            adv_best: Vec::new(),
+        }
+    }
+
+    pub fn start(
+        &mut self,
+        path: &[NetLinkId],
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+        owner: usize,
+    ) -> FlowId {
+        assert!(!path.is_empty(), "a net flow needs a path");
+        assert!(gb > 0.0 && weight > 0.0);
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        let path_idx: Vec<usize> = path
+            .iter()
+            .map(|l| {
+                assert!(l.0 < self.capacities.len(), "unknown net link {l:?}");
+                l.0
+            })
+            .collect();
+        for &l in &path_idx {
+            // Ids are monotone, so appending keeps the vec sorted.
+            self.links[l].flow_ids.push(id);
+            self.links[l].dirty = true;
+        }
+        self.any_dirty = true;
+        if owner >= self.owner_gb.len() {
+            self.owner_gb.resize(owner + 1, 0.0);
+        }
+        self.flows.insert(
+            id,
+            NetFlow {
+                path: path_idx,
+                weight,
+                cap,
+                remaining: gb,
+                owner,
+                rate: 0.0,
+            },
+        );
+        id
+    }
+
+    pub fn remove(&mut self, id: FlowId) {
+        let Some(f) = self.flows.remove(&id) else {
+            return;
+        };
+        for &l in &f.path {
+            let link = &mut self.links[l];
+            if let Ok(pos) = link.flow_ids.binary_search(&id) {
+                link.flow_ids.remove(pos);
+            }
+            link.dirty = true;
+        }
+        self.any_dirty = true;
+    }
+
+    pub fn set_owner_cap(&mut self, owner: usize, cap: Option<f64>) {
+        for f in self.flows.values_mut() {
+            if f.owner == owner {
+                f.cap = cap;
+                for &l in &f.path {
+                    self.links[l].dirty = true;
+                }
+                self.any_dirty = true;
+            }
+        }
+    }
+
+    pub fn set_link_capacity(&mut self, link: NetLinkId, gbps: f64) {
+        assert!(link.0 < self.capacities.len(), "unknown net link {link:?}");
+        self.capacities[link.0] = gbps;
+        self.links[link.0].dirty = true;
+        self.any_dirty = true;
+    }
+
+    pub fn flow_exists(&self, id: FlowId) -> bool {
+        self.flows.contains_key(&id)
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Re-solve every dirty connected component, refresh cached rates,
+    /// per-link rate sums, and calendar slots; clear the dirty flags.
+    fn solve_dirty(&mut self) {
+        if !self.any_dirty {
+            return;
+        }
+        for start in 0..self.links.len() {
+            if self.links[start].dirty {
+                self.solve_component(start);
+            }
+        }
+        self.any_dirty = false;
+    }
+
+    fn solve_component(&mut self, start: usize) {
+        // Expand `start` to its connected component: links joined by
+        // flows whose paths cross both.
+        self.comp_links.clear();
+        self.comp_flows.clear();
+        self.comp_links.push(start);
+        self.link_seen[start] = true;
+        let mut li = 0;
+        while li < self.comp_links.len() {
+            let l = self.comp_links[li];
+            li += 1;
+            for &fid in &self.links[l].flow_ids {
+                if self.comp_flows.contains(&fid) {
+                    continue;
+                }
+                self.comp_flows.push(fid);
+                for &pl in &self.flows[&fid].path {
+                    if !self.link_seen[pl] {
+                        self.link_seen[pl] = true;
+                        self.comp_links.push(pl);
+                    }
+                }
+            }
+        }
+        // Ascending flow order: required by the solver's determinism
+        // contract (matches the reference's BTreeMap iteration).
+        self.comp_flows.sort_unstable();
+
+        if !self.comp_flows.is_empty() {
+            let demands: Vec<NetFlowDemand> = self
+                .comp_flows
+                .iter()
+                .map(|id| {
+                    let f = &self.flows[id];
+                    NetFlowDemand {
+                        weight: f.weight,
+                        cap: f.cap,
+                        path: &f.path,
+                    }
+                })
+                .collect();
+            net_rates_into(
+                &self.capacities,
+                &demands,
+                &mut self.scratch,
+                &mut self.rates_scratch,
+            );
+            drop(demands);
+            for (k, id) in self.comp_flows.iter().enumerate() {
+                self.flows.get_mut(id).expect("component flow exists").rate =
+                    self.rates_scratch[k];
+            }
+            self.rate_recomputes += 1;
+        }
+
+        for k in 0..self.comp_links.len() {
+            let l = self.comp_links[k];
+            // Σ rates in ascending flow order — the same order the
+            // reference sums when it integrates utilization.
+            let mut rate = 0.0;
+            let mut best: Option<(f64, FlowId)> = None;
+            for &fid in &self.links[l].flow_ids {
+                let f = &self.flows[&fid];
+                rate += f.rate;
+                if f.rate > 0.0 {
+                    let dt = f.remaining / f.rate;
+                    if best.map(|(b, _)| dt < b).unwrap_or(true) {
+                        best = Some((dt, fid));
+                    }
+                }
+            }
+            self.links[l].link_rate = rate;
+            self.links[l].dirty = false;
+            self.link_seen[l] = false;
+            self.calendar.set(l, best);
+        }
+    }
+
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0);
+        self.solve_dirty();
+        self.adv_best.clear();
+        self.adv_best.resize(self.links.len(), None);
+        for (id, f) in self.flows.iter_mut() {
+            let moved = (f.rate * dt).min(f.remaining);
+            f.remaining -= moved;
+            for &l in &f.path {
+                self.links[l].counters.gb_total += moved;
+            }
+            self.owner_gb[f.owner] += moved;
+            if f.rate > 0.0 {
+                let cdt = f.remaining / f.rate;
+                for &l in &f.path {
+                    match self.adv_best[l] {
+                        Some((b, _)) if b <= cdt => {}
+                        _ => self.adv_best[l] = Some((cdt, *id)),
+                    }
+                }
+            }
+        }
+        for l in 0..self.links.len() {
+            let cap = self.capacities[l];
+            let link = &mut self.links[l];
+            if cap > 0.0 && !link.flow_ids.is_empty() {
+                link.counters.util_integral += (link.link_rate / cap) * dt;
+            }
+        }
+        for (l, best) in self.adv_best.iter().enumerate() {
+            self.calendar.set(l, *best);
+        }
+    }
+
+    pub fn next_completion(&mut self) -> Option<(f64, FlowId)> {
+        self.solve_dirty();
+        self.calendar.earliest()
+    }
+
+    pub fn remaining(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.remaining)
+    }
+
+    pub fn counters(&self, link: NetLinkId) -> LinkCounters {
+        self.links[link.0].counters
+    }
+
+    pub fn owner_gb(&self, owner: usize) -> f64 {
+        self.owner_gb.get(owner).copied().unwrap_or(0.0)
+    }
+
+    pub fn capacity(&self, link: NetLinkId) -> f64 {
+        self.capacities[link.0]
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.capacities.len()
+    }
+
+    /// Component solves performed (telemetry; counted per non-empty
+    /// component, so not comparable 1:1 with the reference's full-solve
+    /// count).
+    pub fn rate_recomputes(&self) -> u64 {
+        self.rate_recomputes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::net_reference::NetReferenceFabric;
+    use super::*;
+
+    fn two_leaf() -> ClusterTopology {
+        ClusterTopology::leaf_spine(2, 2, 2)
+    }
+
+    #[test]
+    fn matches_reference_on_a_small_history() {
+        let c = two_leaf();
+        let mut inc = NetFabric::new(&c);
+        let mut refr = NetReferenceFabric::new(&c);
+        let a_i = inc.start(&c.route(0, 2), 10.0, 1.0, None, 0);
+        let a_r = refr.start(&c.route(0, 2), 10.0, 1.0, None, 0);
+        assert_eq!(a_i, a_r);
+        let b_i = inc.start(&c.route(1, 3), 6.0, 2.0, Some(4.0), 1);
+        let b_r = refr.start(&c.route(1, 3), 6.0, 2.0, Some(4.0), 1);
+        assert_eq!(b_i, b_r);
+        for step in 0..6 {
+            let ni = inc.next_completion();
+            let nr = refr.next_completion();
+            match (ni, nr) {
+                (None, None) => break,
+                (Some((di, fi)), Some((dr, fr))) => {
+                    assert_eq!(di.to_bits(), dr.to_bits(), "step {step}");
+                    assert_eq!(fi, fr);
+                    let dt = di * 0.5;
+                    inc.advance(dt);
+                    refr.advance(dt);
+                    for id in [a_i, b_i] {
+                        match (inc.remaining(id), refr.remaining(id)) {
+                            (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits()),
+                            (None, None) => {}
+                            other => panic!("presence mismatch: {other:?}"),
+                        }
+                    }
+                }
+                other => panic!("completion mismatch: {other:?}"),
+            }
+        }
+        for l in 0..c.num_net_links {
+            let ci = inc.counters(NetLinkId(l));
+            let cr = refr.counters(NetLinkId(l));
+            assert_eq!(ci.gb_total.to_bits(), cr.gb_total.to_bits());
+            assert_eq!(ci.util_integral.to_bits(), cr.util_integral.to_bits());
+        }
+    }
+
+    #[test]
+    fn drained_flow_completes_exactly() {
+        let c = two_leaf();
+        let mut fab = NetFabric::new(&c);
+        let id = fab.start(&c.route(0, 1), 2.5, 1.0, None, 0);
+        let (dt, done) = fab.next_completion().unwrap();
+        assert_eq!(done, id);
+        assert_eq!(dt.to_bits(), 0.2f64.to_bits());
+        fab.advance(dt);
+        assert!(fab.remaining(id).unwrap() <= 1e-12);
+        fab.remove(id);
+        assert!(fab.next_completion().is_none());
+        assert_eq!(fab.active_flows(), 0);
+    }
+
+    #[test]
+    fn remove_dirties_and_respeeds_survivors() {
+        let c = two_leaf();
+        let mut fab = NetFabric::new(&c);
+        // Two flows sharing host 0's NIC egress: 6.25 each.
+        let a = fab.start(&c.route(0, 1), 10.0, 1.0, None, 0);
+        let b = fab.start(&c.route(0, 2), 10.0, 1.0, None, 1);
+        fab.advance(0.1);
+        let after_shared = fab.remaining(b).unwrap();
+        assert!((10.0 - after_shared - 0.625).abs() < 1e-12);
+        fab.remove(a);
+        fab.advance(0.1);
+        // Survivor now runs at full NIC rate.
+        assert!((after_shared - fab.remaining(b).unwrap() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn owner_cap_applies_and_lifts() {
+        let c = two_leaf();
+        let mut fab = NetFabric::new(&c);
+        let id = fab.start(&c.route(0, 1), 10.0, 1.0, None, 7);
+        fab.set_owner_cap(7, Some(2.5));
+        let (dt, _) = fab.next_completion().unwrap();
+        assert_eq!(dt.to_bits(), 4.0f64.to_bits());
+        fab.set_owner_cap(7, None);
+        let (dt, _) = fab.next_completion().unwrap();
+        assert_eq!(dt.to_bits(), 0.8f64.to_bits());
+        let _ = id;
+    }
+
+    #[test]
+    fn degraded_trunk_slows_cross_leaf_flows() {
+        let c = two_leaf();
+        let mut fab = NetFabric::new(&c);
+        let id = fab.start(&c.route(0, 2), 10.0, 1.0, None, 0);
+        fab.set_link_capacity(c.up(0, c.spine_for(0, 1)), 5.0);
+        let (dt, _) = fab.next_completion().unwrap();
+        assert_eq!(dt.to_bits(), 2.0f64.to_bits());
+        let _ = id;
+    }
+
+    #[test]
+    fn bytes_are_counted_on_every_path_link() {
+        let c = two_leaf();
+        let mut fab = NetFabric::new(&c);
+        let _ = fab.start(&c.route(0, 2), 100.0, 1.0, None, 2);
+        fab.advance(0.4);
+        let moved = 12.5 * 0.4;
+        for l in c.route(0, 2) {
+            assert!((fab.counters(l).gb_total - moved).abs() < 1e-12);
+        }
+        assert_eq!(fab.counters(c.host_tx(1)).gb_total, 0.0);
+        assert!((fab.owner_gb(2) - moved).abs() < 1e-12);
+    }
+}

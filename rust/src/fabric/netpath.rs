@@ -1,0 +1,330 @@
+//! Weighted max-min rate allocation for flows that traverse a *sequence*
+//! of links (the cluster-network generalization of [`super::ps`]).
+//!
+//! A net flow occupies every link on its path simultaneously; its rate is
+//! bounded by its bottleneck. The allocation is weighted max-min fairness
+//! via iterative water-filling (the classic bottleneck algorithm):
+//! repeatedly find the lowest saturation level θ — either a link's
+//! `cap_left / Σ unfixed weights` or a flow throttle's `g_i / w_i` — fix
+//! the flows it freezes at `w_i·θ` (or `g_i`), subtract them from every
+//! link they cross, and repeat. Each round fixes at least one flow, so
+//! the loop terminates in ≤ n rounds. A single-link flow set reduces to
+//! exactly the [`super::ps`] allocation.
+//!
+//! **Determinism contract.** Both net engines
+//! ([`super::net_reference::NetReferenceFabric`] and
+//! [`super::netfabric::NetFabric`]) call *this function* — the reference
+//! on the full flow set, the incremental engine per connected component
+//! of links sharing flows. Bottlenecks in disjoint components never
+//! interact (fixing a flow only mutates state on its own path), so the
+//! per-flow arithmetic is bit-identical either way as long as flows are
+//! presented in ascending id order and links are scanned in ascending
+//! index order — which this function requires and the differential
+//! oracle enforces. Do not reorder the scans.
+
+/// One path-flow's demand on the net fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct NetFlowDemand<'a> {
+    /// PS weight w_i (> 0).
+    pub weight: f64,
+    /// Optional end-to-end rate throttle g_i (same units as capacity).
+    pub cap: Option<f64>,
+    /// Link indices the flow traverses, pairwise distinct.
+    pub path: &'a [usize],
+}
+
+/// Reusable solver scratch, sized to the link-id space on first use.
+#[derive(Clone, Debug, Default)]
+pub struct NetSolveScratch {
+    cap_left: Vec<f64>,
+    w_sum: Vec<f64>,
+    active: Vec<bool>,
+    touched: Vec<usize>,
+    fixed: Vec<bool>,
+}
+
+/// Compute the weighted max-min rate vector for `flows` over links of
+/// `capacities`. `rates[i]` receives flow `i`'s rate; `scratch` is
+/// reusable working memory (allocation-free in steady state). Flows must
+/// be presented in ascending flow-id order for cross-engine bit identity.
+pub fn net_rates_into(
+    capacities: &[f64],
+    flows: &[NetFlowDemand<'_>],
+    scratch: &mut NetSolveScratch,
+    rates: &mut Vec<f64>,
+) {
+    let n = flows.len();
+    rates.clear();
+    rates.resize(n, 0.0);
+    if n == 0 {
+        return;
+    }
+    if scratch.active.len() < capacities.len() {
+        scratch.cap_left.resize(capacities.len(), 0.0);
+        scratch.w_sum.resize(capacities.len(), 0.0);
+        scratch.active.resize(capacities.len(), false);
+    }
+    scratch.touched.clear();
+    for f in flows {
+        debug_assert!(f.weight > 0.0 && !f.path.is_empty());
+        for &l in f.path {
+            if !scratch.active[l] {
+                scratch.active[l] = true;
+                scratch.touched.push(l);
+                scratch.cap_left[l] = capacities[l];
+                scratch.w_sum[l] = 0.0;
+            }
+        }
+    }
+    // Ascending link order: the scan order below is part of the
+    // determinism contract.
+    scratch.touched.sort_unstable();
+    // Weight sums accumulate in flow order (ascending id) per link.
+    for f in flows {
+        for &l in f.path {
+            scratch.w_sum[l] += f.weight;
+        }
+    }
+    scratch.fixed.clear();
+    scratch.fixed.resize(n, false);
+
+    let mut unfixed = n;
+    while unfixed > 0 {
+        // Lowest saturation level θ: links first (ascending index), then
+        // flow throttles (ascending flow order), strict `<` throughout —
+        // first minimum wins, exactly like the single-link solver's
+        // tie-breaks.
+        let mut best = f64::INFINITY;
+        let mut best_link: Option<usize> = None;
+        let mut best_flow: Option<usize> = None;
+        for &l in &scratch.touched {
+            if scratch.w_sum[l] > 0.0 {
+                let theta = scratch.cap_left[l] / scratch.w_sum[l];
+                if theta < best {
+                    best = theta;
+                    best_link = Some(l);
+                    best_flow = None;
+                }
+            }
+        }
+        for (i, f) in flows.iter().enumerate() {
+            if scratch.fixed[i] {
+                continue;
+            }
+            if let Some(cap) = f.cap {
+                let theta = cap / f.weight;
+                if theta < best {
+                    best = theta;
+                    best_link = None;
+                    best_flow = Some(i);
+                }
+            }
+        }
+        match (best_link, best_flow) {
+            (_, Some(i)) => {
+                // A throttle binds first: that flow freezes at its cap.
+                let r = flows[i].cap.expect("cap candidate carries a cap");
+                rates[i] = r;
+                scratch.fixed[i] = true;
+                unfixed -= 1;
+                for &l in flows[i].path {
+                    scratch.cap_left[l] -= r;
+                    scratch.w_sum[l] -= flows[i].weight;
+                }
+            }
+            (Some(bl), None) => {
+                // A link saturates: every unfixed flow crossing it
+                // freezes at its weighted share of the level.
+                for (i, f) in flows.iter().enumerate() {
+                    if scratch.fixed[i] || !f.path.contains(&bl) {
+                        continue;
+                    }
+                    let r = f.weight * best;
+                    rates[i] = r;
+                    scratch.fixed[i] = true;
+                    unfixed -= 1;
+                    for &l in f.path {
+                        scratch.cap_left[l] -= r;
+                        scratch.w_sum[l] -= f.weight;
+                    }
+                }
+            }
+            (None, None) => {
+                // Unreachable for well-formed flows (every unfixed flow
+                // keeps a positive weight on each of its links); kept
+                // total so a degenerate input cannot spin.
+                break;
+            }
+        }
+    }
+    for l in scratch.touched.drain(..) {
+        scratch.active[l] = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve(capacities: &[f64], flows: &[NetFlowDemand<'_>]) -> Vec<f64> {
+        let mut scratch = NetSolveScratch::default();
+        let mut rates = Vec::new();
+        net_rates_into(capacities, flows, &mut scratch, &mut rates);
+        rates
+    }
+
+    #[test]
+    fn single_flow_runs_at_its_bottleneck() {
+        let caps = [25.0, 12.5, 25.0];
+        let path = [0usize, 1, 2];
+        let r = solve(
+            &caps,
+            &[NetFlowDemand {
+                weight: 1.0,
+                cap: None,
+                path: &path,
+            }],
+        );
+        assert_eq!(r[0].to_bits(), 12.5f64.to_bits());
+    }
+
+    #[test]
+    fn single_link_reduces_to_ps() {
+        // Two equal flows on one shared link: equal split, like ps_rates.
+        let caps = [24.0];
+        let p = [0usize];
+        let flows = [
+            NetFlowDemand { weight: 1.0, cap: None, path: &p },
+            NetFlowDemand { weight: 1.0, cap: None, path: &p },
+            NetFlowDemand { weight: 1.0, cap: None, path: &p },
+        ];
+        let r = solve(&caps, &flows);
+        for x in &r {
+            assert!((x - 8.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn bottleneck_share_redistributes_elsewhere() {
+        // Flow A crosses links 0→1, flow B crosses link 1 only, flow C
+        // crosses link 0 only. Link 1 (10) is the tight one: A and B get
+        // 5 each; C then soaks up the rest of link 0 (25 - 5 = 20).
+        let caps = [25.0, 10.0];
+        let (pa, pb, pc) = ([0usize, 1], [1usize], [0usize]);
+        let flows = [
+            NetFlowDemand { weight: 1.0, cap: None, path: &pa },
+            NetFlowDemand { weight: 1.0, cap: None, path: &pb },
+            NetFlowDemand { weight: 1.0, cap: None, path: &pc },
+        ];
+        let r = solve(&caps, &flows);
+        assert!((r[0] - 5.0).abs() < 1e-12);
+        assert!((r[1] - 5.0).abs() < 1e-12);
+        assert!((r[2] - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throttle_binds_and_redistributes() {
+        let caps = [20.0];
+        let p = [0usize];
+        let flows = [
+            NetFlowDemand { weight: 1.0, cap: Some(4.0), path: &p },
+            NetFlowDemand { weight: 1.0, cap: None, path: &p },
+        ];
+        let r = solve(&caps, &flows);
+        assert!((r[0] - 4.0).abs() < 1e-12);
+        assert!((r[1] - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_share_on_the_bottleneck() {
+        let caps = [30.0];
+        let p = [0usize];
+        let flows = [
+            NetFlowDemand { weight: 2.0, cap: None, path: &p },
+            NetFlowDemand { weight: 1.0, cap: None, path: &p },
+        ];
+        let r = solve(&caps, &flows);
+        assert!((r[0] - 20.0).abs() < 1e-12);
+        assert!((r[1] - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_components_solve_independently() {
+        // The property the incremental engine's per-component solve rests
+        // on: rates in one component are bit-identical whether or not the
+        // other component's flows are present.
+        let caps = [25.0, 10.0, 12.5, 8.0];
+        let (pa, pb) = ([0usize, 1], [2usize, 3]);
+        let both = [
+            NetFlowDemand { weight: 1.0, cap: None, path: &pa },
+            NetFlowDemand { weight: 1.5, cap: Some(6.0), path: &pb },
+        ];
+        let r_both = solve(&caps, &both);
+        let r_a = solve(&caps, &both[..1]);
+        let r_b = solve(&caps, &both[1..]);
+        assert_eq!(r_both[0].to_bits(), r_a[0].to_bits());
+        assert_eq!(r_both[1].to_bits(), r_b[0].to_bits());
+    }
+
+    #[test]
+    fn conservation_under_random_paths() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(41);
+        let mut scratch = NetSolveScratch::default();
+        let mut rates = Vec::new();
+        for _ in 0..300 {
+            let n_links = 2 + rng.below(6) as usize;
+            let caps: Vec<f64> = (0..n_links).map(|_| rng.range_f64(1.0, 30.0)).collect();
+            let n_flows = 1 + rng.below(8) as usize;
+            let paths: Vec<Vec<usize>> = (0..n_flows)
+                .map(|_| {
+                    let len = 1 + rng.below(n_links as u64) as usize;
+                    let mut p: Vec<usize> = (0..n_links).collect();
+                    // Deterministic shuffle-by-draw: pick `len` distinct links.
+                    let mut out = Vec::new();
+                    for _ in 0..len {
+                        let k = rng.below(p.len() as u64) as usize;
+                        out.push(p.remove(k));
+                    }
+                    out
+                })
+                .collect();
+            let flows: Vec<NetFlowDemand> = paths
+                .iter()
+                .map(|p| NetFlowDemand {
+                    weight: rng.range_f64(0.1, 4.0),
+                    cap: rng.chance(0.4).then(|| rng.range_f64(0.5, 10.0)),
+                    path: p,
+                })
+                .collect();
+            net_rates_into(&caps, &flows, &mut scratch, &mut rates);
+            // No link over capacity; no flow negative or over its cap.
+            for (l, &c) in caps.iter().enumerate() {
+                let total: f64 = flows
+                    .iter()
+                    .zip(&rates)
+                    .filter(|(f, _)| f.path.contains(&l))
+                    .map(|(_, r)| *r)
+                    .sum();
+                assert!(total <= c + 1e-9, "link {l}: {total} > {c}");
+            }
+            for (f, r) in flows.iter().zip(&rates) {
+                assert!(*r >= -1e-12);
+                if let Some(g) = f.cap {
+                    assert!(*r <= g + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        assert!(solve(&[10.0], &[]).is_empty());
+        let p = [0usize];
+        let r = solve(
+            &[0.0],
+            &[NetFlowDemand { weight: 1.0, cap: None, path: &p }],
+        );
+        assert_eq!(r, vec![0.0]);
+    }
+}

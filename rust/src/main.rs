@@ -286,6 +286,37 @@ fn main() -> Result<()> {
                     );
                 }
             }
+            if !r.net_link_gb.is_empty() {
+                // Cluster net fabric: top links by traffic (the busiest
+                // trunks expose ECMP hotspots at a glance).
+                let total: f64 = r.net_link_gb.iter().sum();
+                let busy = r
+                    .net_link_gb
+                    .iter()
+                    .zip(&r.net_link_util)
+                    .enumerate()
+                    .filter(|(_, (gb, _))| **gb > 0.0)
+                    .count();
+                println!(
+                    "cluster net fabric: {} links ({} carried traffic), total={:.1} GB",
+                    r.net_link_gb.len(),
+                    busy,
+                    total
+                );
+                let mut ranked: Vec<(usize, f64, f64)> = r
+                    .net_link_gb
+                    .iter()
+                    .zip(&r.net_link_util)
+                    .enumerate()
+                    .map(|(l, (gb, u))| (l, *gb, *u))
+                    .collect();
+                ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+                for (l, gb, u) in ranked.iter().take(4) {
+                    if *gb > 0.0 {
+                        println!("  netlink{l:<4} gb={gb:8.1} mean_util={:5.1}%", u * 100.0);
+                    }
+                }
+            }
             if r.faults_injected > 0 || r.action_failures > 0 || r.action_retries > 0 {
                 println!(
                     "faults: injected={} cleared={} action_failures={} retries={} requeued={} degraded_controllers={}",

@@ -97,6 +97,17 @@ pub struct RunResult {
     pub per_tenant: Vec<TenantRunStats>,
     /// Total GB through each shared link (PS conservation checks).
     pub link_gb: Vec<f64>,
+    /// Total GB through each cluster net link, indexed by
+    /// `NetLinkId.0` (empty for single-host scenarios without a
+    /// `ClusterTopology`). Deterministic, but excluded from
+    /// `fingerprint()` so cluster-free fingerprints stay
+    /// byte-identical — and because the controller cannot see (let
+    /// alone actuate on) this contention domain yet.
+    pub net_link_gb: Vec<f64>,
+    /// Mean utilization of each cluster net link over the horizon
+    /// (util-integral / horizon). Empty and excluded from the
+    /// fingerprint like `net_link_gb`.
+    pub net_link_util: Vec<f64>,
     /// Controller action counts by kind.
     pub actions: Vec<(String, usize)>,
     /// Disruptive moves per hour (Table 4).

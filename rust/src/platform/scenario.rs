@@ -18,10 +18,10 @@ use crate::controller::{ControllerConfig, Levers, SloKind};
 use crate::faults::{FaultPlan, FaultSpec};
 use crate::gpu::MigProfile;
 use crate::tenants::{
-    ArrivalProcess, BwSpec, CompSpec, Envelope, InterferenceSchedule, LlmWorkloadSpec, LsSpec,
-    PlacementSpec, TenantKind, TenantWorkload, TraceSpec, WorkloadSpec,
+    ArrivalProcess, BwSpec, CollectiveSpec, CompSpec, Envelope, InterferenceSchedule,
+    LlmWorkloadSpec, LsSpec, PlacementSpec, TenantKind, TenantWorkload, TraceSpec, WorkloadSpec,
 };
-use crate::topo::HostTopology;
+use crate::topo::{ClusterTopology, HostTopology};
 use crate::util::rng::Pcg64;
 
 /// Everything one run needs.
@@ -74,6 +74,14 @@ pub struct Scenario {
     /// fault support: no extra events, no extra RNG draws, same
     /// fingerprint.
     pub faults: FaultPlan,
+    /// Multi-host cluster network (`crate::topo::ClusterTopology`).
+    /// Structural option: `None` (the default, and every pre-cluster
+    /// catalog entry) builds **no net fabric at all** — zero extra
+    /// events, zero extra RNG draws, byte-identical fingerprints. The
+    /// simulated host is cluster host 0; ring-collective trainers
+    /// ([`crate::tenants::CollectiveSpec`]) span the other hosts'
+    /// NIC/leaf/spine links.
+    pub cluster: Option<ClusterTopology>,
 }
 
 impl Scenario {
@@ -186,7 +194,7 @@ impl Scenario {
     // --- named catalog ----------------------------------------------------
 
     /// Catalog names accepted by [`Scenario::by_name`].
-    pub const CATALOG: [&'static str; 15] = [
+    pub const CATALOG: [&'static str; 17] = [
         "paper_single_host",
         "paper_llm_case",
         "steady_contention",
@@ -202,6 +210,8 @@ impl Scenario {
         "llm_burst_ttft",
         "link_flap_recovery",
         "mig_reconfig_flaky",
+        "fat_tree_allreduce_mix",
+        "spine_hotspot",
     ];
 
     /// Look a scenario up by catalog name ("single" and "llm" are accepted
@@ -228,6 +238,8 @@ impl Scenario {
             "llm_burst_ttft" => Scenario::llm_burst_ttft(seed, levers),
             "link_flap_recovery" => Scenario::link_flap_recovery(seed, levers),
             "mig_reconfig_flaky" => Scenario::mig_reconfig_flaky(seed, levers),
+            "fat_tree_allreduce_mix" => Scenario::fat_tree_allreduce_mix(seed, levers),
+            "spine_hotspot" => Scenario::spine_hotspot(seed, levers),
             _ => return None,
         })
     }
@@ -993,6 +1005,75 @@ impl Scenario {
         s.controller.tau_ms = ttft_slo_ms;
         s
     }
+
+    /// Cluster catalog: the paper's serving + ETL mix sharing host 0 of
+    /// a degree-4 fat-tree with a **4-host ring trainer** (hosts 0-3,
+    /// two leaves — segments 1→2 and 3→0 cross the spine tier). Every
+    /// training step ends in a ring allreduce chained through the net
+    /// fabric, so trainer cadence now depends on a contention domain the
+    /// controller's placement lever cannot see.
+    pub fn fat_tree_allreduce_mix(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        let (etl_schedule, train_schedule) = Scenario::paper_interference_schedules(seed, horizon);
+        ScenarioBuilder::new("fat_tree_allreduce_mix", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .cluster(ClusterTopology::fat_tree(4))
+            .tenant(TenantWorkload::latency_sensitive(
+                "serving",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::bandwidth_heavy(
+                "etl",
+                BwSpec::default(),
+                etl_schedule,
+                PlacementSpec::dedicated_at(0, MigProfile::P3g40gb, 4),
+            ))
+            .tenant(TenantWorkload::collective(
+                "ring-train",
+                CompSpec::default(),
+                CollectiveSpec::ring(vec![0, 1, 2, 3], 0.5, 1),
+                train_schedule,
+                PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build()
+    }
+
+    /// Cluster catalog: two always-on 2-host ring trainers on a 2×2
+    /// leaf/spine fabric whose rings (hosts 0↔2 and 1↔3) both cross
+    /// leaves — deterministic ECMP hashes both onto **spine 1**, so the
+    /// two collectives contend for the same trunk pair for the whole
+    /// run while the serving tenant rides host 0's PCIe fabric.
+    pub fn spine_hotspot(seed: u64, levers: Levers) -> Scenario {
+        let horizon = 1800.0;
+        ScenarioBuilder::new("spine_hotspot", seed)
+            .levers(levers)
+            .horizon(horizon)
+            .cluster(ClusterTopology::leaf_spine(2, 2, 2))
+            .tenant(TenantWorkload::latency_sensitive(
+                "serving",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::collective(
+                "ring-even",
+                CompSpec::default(),
+                CollectiveSpec::ring(vec![0, 2], 0.5, 1),
+                InterferenceSchedule::always_on(horizon),
+                PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+            ))
+            .tenant(TenantWorkload::collective(
+                "ring-odd",
+                CompSpec::default(),
+                CollectiveSpec::ring(vec![1, 3], 0.5, 1),
+                InterferenceSchedule::always_on(horizon),
+                PlacementSpec::dedicated_at(3, MigProfile::P3g40gb, 0),
+            ))
+            .spare(1, MigProfile::P3g40gb, 0)
+            .build()
+    }
 }
 
 /// Composable scenario construction; see the README's "Defining a
@@ -1050,6 +1131,7 @@ pub struct ScenarioBuilder {
     epsilon_sigma: f64,
     shards: usize,
     faults: FaultPlan,
+    cluster: Option<ClusterTopology>,
 }
 
 impl ScenarioBuilder {
@@ -1070,6 +1152,7 @@ impl ScenarioBuilder {
             epsilon_sigma: 0.32,
             shards: 1,
             faults: FaultPlan::default(),
+            cluster: None,
         }
     }
 
@@ -1215,6 +1298,15 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach a multi-host cluster network. Without one (the default)
+    /// the built scenario carries no net fabric and is byte-identical
+    /// to a pre-cluster world; with one, ring-collective trainers
+    /// ([`CollectiveSpec`]) may span its hosts. Validated in `build()`.
+    pub fn cluster(mut self, cluster: ClusterTopology) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
     pub fn build(self) -> Scenario {
         assert!(!self.tenants.is_empty(), "scenario needs at least one tenant");
         // Validate MPS-shared placements; the actual gpu/profile/instance
@@ -1266,6 +1358,23 @@ impl ScenarioBuilder {
         self.faults
             .validate()
             .unwrap_or_else(|e| panic!("scenario '{}': invalid fault plan: {e}", self.name));
+        // Ring collectives need a cluster to route over, and the ring
+        // must fit it — both fail here, never as a mid-sim panic.
+        for (i, t) in self.tenants.iter().enumerate() {
+            let Some(ring) = t.spec.as_comp().and_then(|c| c.collective.as_ref()) else {
+                continue;
+            };
+            let cluster = self.cluster.as_ref().unwrap_or_else(|| {
+                panic!(
+                    "tenant {i} ({}) runs a ring collective but the scenario \
+                     has no cluster topology (ScenarioBuilder::cluster)",
+                    t.name
+                )
+            });
+            ring.validate(cluster).unwrap_or_else(|e| {
+                panic!("tenant {i} ({}): invalid ring collective: {e}", t.name)
+            });
+        }
         if let Some(p) = self.primary {
             assert!(
                 p < self.tenants.len(),
@@ -1332,6 +1441,7 @@ impl ScenarioBuilder {
             shards: self.shards,
             layout,
             faults: self.faults,
+            cluster: self.cluster,
         }
     }
 
@@ -1515,6 +1625,83 @@ mod tests {
         // Every pre-existing entry keeps the bit-compat empty plan.
         assert!(Scenario::paper_single_host(5, Levers::full()).faults.is_empty());
         assert!(Scenario::llm_serving_mix(5, Levers::full()).faults.is_empty());
+    }
+
+    #[test]
+    fn cluster_catalog_entries_carry_rings_and_topologies() {
+        let ft = Scenario::fat_tree_allreduce_mix(5, Levers::full());
+        let cluster = ft.cluster.as_ref().expect("fat-tree entry has a cluster");
+        assert_eq!(cluster.num_hosts(), 8);
+        let ring = ft.tenants[2]
+            .spec
+            .as_comp()
+            .and_then(|c| c.collective.as_ref())
+            .expect("trainer carries a ring");
+        assert_eq!(ring.participants, vec![0, 1, 2, 3]);
+        assert!(ring.validate(cluster).is_ok());
+
+        let sh = Scenario::spine_hotspot(5, Levers::full());
+        let cluster = sh.cluster.as_ref().expect("spine entry has a cluster");
+        assert_eq!(cluster.num_hosts(), 4);
+        // Both rings cross leaves and ECMP-hash onto the same spine —
+        // the contention story is one shared trunk pair.
+        for idx in [1usize, 2] {
+            let ring = sh.tenants[idx]
+                .spec
+                .as_comp()
+                .and_then(|c| c.collective.as_ref())
+                .expect("trainer carries a ring");
+            assert!(ring.validate(cluster).is_ok());
+            let (a, b) = (ring.participants[0], ring.participants[1]);
+            assert_ne!(cluster.leaf_of_host(a), cluster.leaf_of_host(b));
+            assert_eq!(
+                cluster.spine_for(cluster.leaf_of_host(a), cluster.leaf_of_host(b)),
+                1
+            );
+        }
+        // Every pre-cluster entry stays structurally cluster-free (the
+        // byte-identical legacy path).
+        assert!(Scenario::paper_single_host(5, Levers::full()).cluster.is_none());
+        assert!(Scenario::hotspot_64(5, Levers::full()).cluster.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "no cluster topology")]
+    fn build_rejects_rings_without_a_cluster() {
+        ScenarioBuilder::new("ringless", 1)
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::collective(
+                "train",
+                CompSpec::default(),
+                CollectiveSpec::ring(vec![0, 1], 0.5, 1),
+                InterferenceSchedule::always_on(100.0),
+                PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+            ))
+            .build();
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid ring collective")]
+    fn build_rejects_rings_that_do_not_fit_the_cluster() {
+        ScenarioBuilder::new("bad-ring", 1)
+            .cluster(ClusterTopology::leaf_spine(2, 2, 2))
+            .tenant(TenantWorkload::latency_sensitive(
+                "svc",
+                LsSpec::default(),
+                PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+            ))
+            .tenant(TenantWorkload::collective(
+                "train",
+                CompSpec::default(),
+                CollectiveSpec::ring(vec![0, 99], 0.5, 1),
+                InterferenceSchedule::always_on(100.0),
+                PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+            ))
+            .build();
     }
 
     #[test]

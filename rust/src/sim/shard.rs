@@ -136,4 +136,41 @@ mod tests {
     fn zero_shards_rejected() {
         ShardMap::new(&[0], 0);
     }
+
+    #[test]
+    fn coordinator_shard_is_shard_zero() {
+        // The event router pins Sample / FlowsDone / NetFlowsDone /
+        // FaultEdge to this constant; it is part of the bit-identity
+        // contract and must never drift.
+        assert_eq!(COORD_SHARD, 0);
+    }
+
+    #[test]
+    fn greedy_packing_visits_keys_ascending_onto_least_loaded() {
+        // Keys in ascending order: key 0 (3 tenants) fills shard 0,
+        // then keys 1 and 2 both land on the lighter shard 1.
+        let m = ShardMap::new(&[0, 0, 0, 1, 2], 2);
+        assert_eq!(m.shard_of(0), 0);
+        assert_eq!(m.shard_of(1), 0);
+        assert_eq!(m.shard_of(2), 0);
+        assert_eq!(m.shard_of(3), 1);
+        assert_eq!(m.shard_of(4), 1);
+        assert_eq!(m.tenants_on(0), 3);
+        assert_eq!(m.tenants_on(1), 2);
+    }
+
+    #[test]
+    fn loads_account_for_every_tenant_with_bounded_spread() {
+        let locality = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5];
+        let m = ShardMap::new(&locality, 3);
+        let loads: Vec<usize> = (0..3).map(|s| m.tenants_on(s)).collect();
+        assert_eq!(loads.iter().sum::<usize>(), locality.len());
+        // Greedy least-loaded packing: the spread is bounded by the
+        // largest key group (key 5 appears three times here).
+        assert!(loads.iter().max().unwrap() - loads.iter().min().unwrap() <= 3);
+        // Per-tenant routing stays consistent with the load table.
+        for t in 0..locality.len() {
+            assert!(m.shard_of(t) < m.shards());
+        }
+    }
 }

@@ -1,0 +1,137 @@
+//! Ring-collective traffic for cross-host trainers.
+//!
+//! A distributed data-parallel trainer ends every step with an
+//! allreduce over its participants. We model the classic **ring**
+//! algorithm: for `N` participants, each allreduce is `2·(N−1)` ring
+//! steps (reduce-scatter then allgather), and each ring step moves one
+//! `bytes/N` segment from every participant to its successor on the
+//! ring — `N` simultaneous segment flows per step, link-disjoint on a
+//! directional fabric ([`crate::topo::ClusterTopology`]), chained
+//! deterministically through the event queue: the next ring step starts
+//! only when all `N` segments of the current one drain.
+//!
+//! On an otherwise-idle fabric this yields the textbook completion time
+//! `2·(N−1)/N · bytes / bottleneck_gbps`, which the integration suite
+//! asserts *bitwise* against the simulated trainer — the closed form is
+//! the oracle for the whole net-fabric stack.
+
+use crate::topo::ClusterTopology;
+
+/// One trainer's cross-host allreduce shape. Attached to a
+/// compute-heavy spec ([`super::spec::CompSpec::collective`]); `None`
+/// there (the default, and every pre-cluster scenario) keeps the
+/// trainer host-local and the legacy event stream byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectiveSpec {
+    /// Host indices on the ring, in ring order. Segment `i` flows
+    /// `participants[i] → participants[(i+1) % N]`.
+    pub participants: Vec<usize>,
+    /// Gradient payload per allreduce (GB). Each ring step moves a
+    /// `bytes / N` segment per participant.
+    pub bytes: f64,
+    /// Allreduces per training step (e.g. one per gradient bucket).
+    pub rounds: u32,
+}
+
+impl CollectiveSpec {
+    pub fn ring(participants: Vec<usize>, bytes: f64, rounds: u32) -> CollectiveSpec {
+        CollectiveSpec {
+            participants,
+            bytes,
+            rounds,
+        }
+    }
+
+    pub fn num_participants(&self) -> usize {
+        self.participants.len()
+    }
+
+    /// Ring steps per allreduce: reduce-scatter + allgather.
+    pub fn ring_steps(&self) -> u32 {
+        2 * (self.num_participants() as u32 - 1)
+    }
+
+    /// Segment size per ring step per participant (GB).
+    pub fn segment_gb(&self) -> f64 {
+        self.bytes / self.num_participants() as f64
+    }
+
+    /// Validate against a cluster: ≥ 2 distinct in-range participants,
+    /// positive payload, ≥ 1 round. Returns a human-readable complaint.
+    pub fn validate(&self, cluster: &ClusterTopology) -> Result<(), String> {
+        if self.participants.len() < 2 {
+            return Err(format!(
+                "a ring needs >= 2 participants, got {}",
+                self.participants.len()
+            ));
+        }
+        for &h in &self.participants {
+            if h >= cluster.num_hosts() {
+                return Err(format!(
+                    "participant host {h} out of range (cluster has {} hosts)",
+                    cluster.num_hosts()
+                ));
+            }
+        }
+        let mut sorted = self.participants.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != self.participants.len() {
+            return Err("ring participants must be distinct hosts".to_string());
+        }
+        if !(self.bytes > 0.0) {
+            return Err(format!("allreduce payload must be > 0 GB, got {}", self.bytes));
+        }
+        if self.rounds == 0 {
+            return Err("a collective trainer needs >= 1 round per step".to_string());
+        }
+        Ok(())
+    }
+
+    /// Closed-form completion time (s) of one allreduce on an
+    /// otherwise-idle fabric whose bottleneck runs at `bottleneck_gbps`,
+    /// accumulated ring step by ring step with the *same* float
+    /// arithmetic the simulator performs (one addition per ring step),
+    /// so oracle tests can assert bitwise equality. Algebraically this
+    /// is `2·(N−1)/N · bytes / bottleneck_gbps`.
+    pub fn ideal_allreduce_s(&self, bottleneck_gbps: f64) -> f64 {
+        let seg_s = self.segment_gb() / bottleneck_gbps;
+        let mut t = 0.0;
+        for _ in 0..self.ring_steps() {
+            t += seg_s;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_shape_arithmetic() {
+        let s = CollectiveSpec::ring(vec![0, 1, 2, 3], 4.0, 2);
+        assert_eq!(s.num_participants(), 4);
+        assert_eq!(s.ring_steps(), 6);
+        assert_eq!(s.segment_gb(), 1.0);
+    }
+
+    #[test]
+    fn closed_form_matches_algebra() {
+        let s = CollectiveSpec::ring(vec![0, 1, 2, 3], 4.0, 1);
+        let got = s.ideal_allreduce_s(12.5);
+        let algebra = 2.0 * 3.0 / 4.0 * 4.0 / 12.5;
+        assert!((got - algebra).abs() < 1e-12, "{got} vs {algebra}");
+    }
+
+    #[test]
+    fn validation_catches_bad_rings() {
+        let c = ClusterTopology::leaf_spine(2, 2, 2);
+        assert!(CollectiveSpec::ring(vec![0, 2], 1.0, 1).validate(&c).is_ok());
+        assert!(CollectiveSpec::ring(vec![0], 1.0, 1).validate(&c).is_err());
+        assert!(CollectiveSpec::ring(vec![0, 9], 1.0, 1).validate(&c).is_err());
+        assert!(CollectiveSpec::ring(vec![0, 0], 1.0, 1).validate(&c).is_err());
+        assert!(CollectiveSpec::ring(vec![0, 1], 0.0, 1).validate(&c).is_err());
+        assert!(CollectiveSpec::ring(vec![0, 1], 1.0, 0).validate(&c).is_err());
+    }
+}

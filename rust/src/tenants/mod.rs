@@ -20,12 +20,14 @@
 //! [`Envelope`]-modulated Poisson for diurnal/burst synthetic traffic.
 
 pub mod arrivals;
+pub mod collective;
 pub mod llm;
 pub mod schedule;
 pub mod spec;
 pub mod workload;
 
 pub use arrivals::{ArrivalError, ArrivalProcess, ArrivalState, Envelope, TraceSpec};
+pub use collective::CollectiveSpec;
 pub use llm::{LlmRequestDims, LlmWorkloadSpec, TokenDist};
 pub use schedule::{InterferenceSchedule, Phase};
 pub use spec::{

@@ -251,6 +251,13 @@ pub struct CompSpec {
     /// compute inflated by `1 + β·(quota/100)` while this tenant is
     /// active.
     pub contention_beta: f64,
+    /// Optional cross-host ring-allreduce shape
+    /// ([`crate::tenants::collective::CollectiveSpec`]). `None` (the
+    /// default, and every pre-cluster scenario) keeps the trainer
+    /// host-local — gradient sync stays a single PCIe flow and the
+    /// legacy event stream is byte-identical. `Some` chains each step
+    /// into ring-segment flows over the scenario's cluster fabric.
+    pub collective: Option<crate::tenants::collective::CollectiveSpec>,
 }
 
 /// Back-compat alias: the paper's T3 slot.
@@ -263,6 +270,7 @@ impl Default for CompSpec {
             sync_gb: 0.10,
             mps_quota: 100.0,
             contention_beta: 1.6,
+            collective: None,
         }
     }
 }

@@ -303,6 +303,24 @@ impl TenantWorkload {
         }
     }
 
+    /// A compute-heavy trainer whose steps end in a cross-host ring
+    /// allreduce: `collective` names the ring (host indices on the
+    /// scenario's cluster fabric), the payload per allreduce, and the
+    /// allreduces per step. The scenario must carry a
+    /// [`crate::topo::ClusterTopology`] — `ScenarioBuilder::build`
+    /// validates the ring against it.
+    pub fn collective(
+        name: impl Into<String>,
+        spec: CompSpec,
+        collective: crate::tenants::collective::CollectiveSpec,
+        schedule: InterferenceSchedule,
+        placement: PlacementSpec,
+    ) -> TenantWorkload {
+        let mut spec = spec;
+        spec.collective = Some(collective);
+        TenantWorkload::compute_heavy(name, spec, schedule, placement)
+    }
+
     pub fn kind(&self) -> TenantKind {
         self.spec.kind()
     }
@@ -380,6 +398,24 @@ mod tests {
         assert_eq!(t.spec.expected_pcie_gbps(), want);
         // Plain LS tenants keep the flat-mixture estimate.
         assert!(LsSpec::default().llm.is_none());
+    }
+
+    #[test]
+    fn collective_constructor_attaches_the_ring() {
+        use crate::tenants::collective::CollectiveSpec;
+        let t = TenantWorkload::collective(
+            "ddp",
+            CompSpec::default(),
+            CollectiveSpec::ring(vec![0, 1, 2, 3], 2.0, 1),
+            InterferenceSchedule::always_on(100.0),
+            PlacementSpec::dedicated(0, MigProfile::P3g40gb),
+        );
+        assert_eq!(t.kind(), TenantKind::ComputeHeavy);
+        let c = t.spec.as_comp().unwrap().collective.as_ref().unwrap();
+        assert_eq!(c.num_participants(), 4);
+        assert_eq!(c.ring_steps(), 6);
+        // Plain trainers stay host-local.
+        assert!(CompSpec::default().collective.is_none());
     }
 
     #[test]

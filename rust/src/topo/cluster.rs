@@ -1,0 +1,286 @@
+//! Multi-host cluster topology: hosts hanging off a leaf/spine or
+//! folded-Clos (fat-tree) network fabric.
+//!
+//! The paper stops at the PCIe host fabric; production noisy-neighbor
+//! contention also lives on the inter-host network (ring-allreduce
+//! trainer traffic colliding with cross-host serving replication on
+//! leaf/spine trunks). This module models that second contention domain
+//! with the same vocabulary as [`super::host`]: typed link ids naming
+//! shared-bandwidth domains, consumed by a processor-sharing fabric
+//! ([`crate::fabric::NetFabricBackend`]).
+//!
+//! Links are **directional** — each host has separate TX and RX legs for
+//! its PCIe uplink and its NIC, and each (leaf, spine) pair has separate
+//! up and down trunks. Directionality is what makes ring collectives
+//! analyzable: the N simultaneous segments of a ring step are pairwise
+//! link-disjoint, so an otherwise-idle ring runs at exactly the
+//! bottleneck line rate (the closed-form oracle in the test suite
+//! asserts this bitwise).
+//!
+//! Net link numbering is deterministic and dense (`0..num_net_links`):
+//! 4 links per host (`host_tx, host_rx, nic_tx, nic_rx`), then 2 trunks
+//! per (leaf, spine) pair (`up, down`) in `leaf-major` order.
+
+use super::host::HostTopology;
+
+/// Identifies one directional shared-bandwidth domain on the cluster
+/// network (a net-fabric server). Disjoint from [`super::LinkId`], which
+/// names intra-host PCIe/NVMe domains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NetLinkId(pub usize);
+
+/// Immutable cluster topology: `hosts.len()` hosts spread evenly across
+/// `leaves` leaf switches, every leaf wired to every spine.
+#[derive(Clone, Debug)]
+pub struct ClusterTopology {
+    /// Per-host intra-host topology (PCIe/NUMA/NVMe). The simulated
+    /// world's own host is index 0; the rest shape the fleet.
+    pub hosts: Vec<HostTopology>,
+    pub leaves: usize,
+    pub spines: usize,
+    pub hosts_per_leaf: usize,
+    /// Host PCIe-uplink leg feeding the NIC, GB/s per direction.
+    pub host_uplink_gbps: f64,
+    /// NIC line rate, GB/s per direction (100 GbE ≈ 12.5 GB/s).
+    pub nic_gbps: f64,
+    /// Leaf↔spine trunk rate, GB/s per direction.
+    pub trunk_gbps: f64,
+    /// Total directional net links (`4·hosts + 2·leaves·spines`).
+    pub num_net_links: usize,
+}
+
+impl ClusterTopology {
+    /// A leaf/spine fabric: `leaves × hosts_per_leaf` hosts, every leaf
+    /// wired to every one of `spines` spines. Hosts are p4d-class
+    /// (25 GB/s PCIe uplink legs) with 100 GbE NICs (12.5 GB/s) and
+    /// 200 GbE-class trunks (25 GB/s per direction).
+    pub fn leaf_spine(leaves: usize, spines: usize, hosts_per_leaf: usize) -> ClusterTopology {
+        assert!(leaves > 0 && spines > 0 && hosts_per_leaf > 0);
+        Self::build(leaves, spines, hosts_per_leaf, 25.0, 12.5, 25.0)
+    }
+
+    /// A folded-Clos fat-tree of degree `k` (even, ≥ 2), flattened to
+    /// two tiers: `k` leaves of `k/2` hosts each, `k/2` spines. Trunks
+    /// run at NIC line rate — full bisection bandwidth per pod, the
+    /// standard fat-tree property this simplification preserves.
+    pub fn fat_tree(k: usize) -> ClusterTopology {
+        assert!(k >= 2 && k % 2 == 0, "fat-tree degree must be even and >= 2");
+        Self::build(k, k / 2, k / 2, 25.0, 12.5, 12.5)
+    }
+
+    fn build(
+        leaves: usize,
+        spines: usize,
+        hosts_per_leaf: usize,
+        host_uplink_gbps: f64,
+        nic_gbps: f64,
+        trunk_gbps: f64,
+    ) -> ClusterTopology {
+        let n = leaves * hosts_per_leaf;
+        ClusterTopology {
+            hosts: vec![HostTopology::p4d(); n],
+            leaves,
+            spines,
+            hosts_per_leaf,
+            host_uplink_gbps,
+            nic_gbps,
+            trunk_gbps,
+            num_net_links: 4 * n + 2 * leaves * spines,
+        }
+    }
+
+    pub fn num_hosts(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// Leaf switch a host hangs off (hosts fill leaves in index order).
+    pub fn leaf_of_host(&self, host: usize) -> usize {
+        assert!(host < self.num_hosts(), "unknown host {host}");
+        host / self.hosts_per_leaf
+    }
+
+    // -- directional link ids -------------------------------------------------
+
+    /// Host `h`'s PCIe-uplink TX leg (host memory → NIC).
+    pub fn host_tx(&self, h: usize) -> NetLinkId {
+        NetLinkId(4 * h)
+    }
+
+    /// Host `h`'s PCIe-uplink RX leg (NIC → host memory).
+    pub fn host_rx(&self, h: usize) -> NetLinkId {
+        NetLinkId(4 * h + 1)
+    }
+
+    /// Host `h`'s NIC egress.
+    pub fn nic_tx(&self, h: usize) -> NetLinkId {
+        NetLinkId(4 * h + 2)
+    }
+
+    /// Host `h`'s NIC ingress.
+    pub fn nic_rx(&self, h: usize) -> NetLinkId {
+        NetLinkId(4 * h + 3)
+    }
+
+    /// Upstream trunk leaf `l` → spine `s`.
+    pub fn up(&self, l: usize, s: usize) -> NetLinkId {
+        NetLinkId(4 * self.num_hosts() + 2 * (l * self.spines + s))
+    }
+
+    /// Downstream trunk spine `s` → leaf `l`.
+    pub fn down(&self, s: usize, l: usize) -> NetLinkId {
+        NetLinkId(4 * self.num_hosts() + 2 * (l * self.spines + s) + 1)
+    }
+
+    /// Capacity of a directional net link in GB/s.
+    pub fn capacity(&self, link: NetLinkId) -> f64 {
+        let hosts4 = 4 * self.num_hosts();
+        if link.0 < hosts4 {
+            match link.0 % 4 {
+                0 | 1 => self.host_uplink_gbps,
+                _ => self.nic_gbps,
+            }
+        } else if link.0 < self.num_net_links {
+            self.trunk_gbps
+        } else {
+            panic!("unknown net link {link:?}");
+        }
+    }
+
+    /// Deterministic ECMP spine pick for a (src-leaf, dst-leaf) pair —
+    /// a pure function of the leaves, so repeat runs hash identically.
+    pub fn spine_for(&self, leaf_a: usize, leaf_b: usize) -> usize {
+        (leaf_a + leaf_b) % self.spines
+    }
+
+    /// The directional link sequence a host-to-host flow traverses:
+    /// source PCIe-uplink TX + NIC egress, the leaf/spine trunks when the
+    /// hosts sit under different leaves, then NIC ingress + PCIe-uplink
+    /// RX at the destination. Same-leaf pairs turn around at the leaf.
+    pub fn route(&self, from: usize, to: usize) -> Vec<NetLinkId> {
+        assert!(from < self.num_hosts(), "unknown host {from}");
+        assert!(to < self.num_hosts(), "unknown host {to}");
+        assert_ne!(from, to, "a net flow needs two distinct hosts");
+        let (la, lb) = (self.leaf_of_host(from), self.leaf_of_host(to));
+        let mut path = vec![self.host_tx(from), self.nic_tx(from)];
+        if la != lb {
+            let s = self.spine_for(la, lb);
+            path.push(self.up(la, s));
+            path.push(self.down(s, lb));
+        }
+        path.push(self.nic_rx(to));
+        path.push(self.host_rx(to));
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_spine_shape() {
+        let c = ClusterTopology::leaf_spine(2, 2, 2);
+        assert_eq!(c.num_hosts(), 4);
+        assert_eq!(c.num_net_links, 4 * 4 + 2 * 2 * 2);
+        assert_eq!(c.leaf_of_host(0), 0);
+        assert_eq!(c.leaf_of_host(3), 1);
+        assert_eq!(c.capacity(c.host_tx(0)), 25.0);
+        assert_eq!(c.capacity(c.nic_rx(3)), 12.5);
+        assert_eq!(c.capacity(c.up(0, 1)), 25.0);
+    }
+
+    #[test]
+    fn fat_tree_shape() {
+        let c = ClusterTopology::fat_tree(4);
+        assert_eq!(c.leaves, 4);
+        assert_eq!(c.spines, 2);
+        assert_eq!(c.hosts_per_leaf, 2);
+        assert_eq!(c.num_hosts(), 8);
+        // Fat-tree trunks run at NIC line rate (full bisection).
+        assert_eq!(c.capacity(c.up(0, 0)), c.nic_gbps);
+        assert_eq!(c.num_net_links, 4 * 8 + 2 * 4 * 2);
+    }
+
+    #[test]
+    fn link_ids_are_dense_and_disjoint() {
+        let c = ClusterTopology::leaf_spine(3, 2, 2);
+        let mut seen = vec![false; c.num_net_links];
+        for h in 0..c.num_hosts() {
+            for id in [c.host_tx(h), c.host_rx(h), c.nic_tx(h), c.nic_rx(h)] {
+                assert!(!seen[id.0], "duplicate link id {id:?}");
+                seen[id.0] = true;
+            }
+        }
+        for l in 0..c.leaves {
+            for s in 0..c.spines {
+                for id in [c.up(l, s), c.down(s, l)] {
+                    assert!(!seen[id.0], "duplicate link id {id:?}");
+                    seen[id.0] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "net link numbering has holes");
+        // Every link has a capacity.
+        for i in 0..c.num_net_links {
+            assert!(c.capacity(NetLinkId(i)) > 0.0);
+        }
+    }
+
+    #[test]
+    fn same_leaf_route_skips_the_spine() {
+        let c = ClusterTopology::leaf_spine(2, 2, 2);
+        let path = c.route(0, 1);
+        assert_eq!(
+            path,
+            vec![c.host_tx(0), c.nic_tx(0), c.nic_rx(1), c.host_rx(1)]
+        );
+    }
+
+    #[test]
+    fn cross_leaf_route_crosses_one_spine() {
+        let c = ClusterTopology::leaf_spine(2, 2, 2);
+        let path = c.route(0, 2);
+        let s = c.spine_for(0, 1);
+        assert_eq!(
+            path,
+            vec![
+                c.host_tx(0),
+                c.nic_tx(0),
+                c.up(0, s),
+                c.down(s, 1),
+                c.nic_rx(2),
+                c.host_rx(2)
+            ]
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_net_link_panics() {
+        let c = ClusterTopology::leaf_spine(2, 2, 2);
+        c.capacity(NetLinkId(999));
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_route_panics() {
+        ClusterTopology::leaf_spine(2, 2, 2).route(1, 1);
+    }
+
+    #[test]
+    fn ring_steps_are_link_disjoint() {
+        // The property the closed-form allreduce oracle rests on: the N
+        // simultaneous segments of one ring step share no directional
+        // link, so each runs at the bottleneck line rate.
+        let c = ClusterTopology::fat_tree(4);
+        let ring = [0usize, 2, 4, 6];
+        let mut used = std::collections::BTreeSet::new();
+        for i in 0..ring.len() {
+            let from = ring[i];
+            let to = ring[(i + 1) % ring.len()];
+            for l in c.route(from, to) {
+                assert!(used.insert(l), "link {l:?} shared between segments");
+            }
+        }
+    }
+}

@@ -218,6 +218,60 @@ mod tests {
     }
 
     #[test]
+    fn switch_of_gpu_owns_the_gpu_and_its_link() {
+        // For every shipped topology flavor: the switch returned for a
+        // GPU actually lists it, the GPU's uplink is that switch's link,
+        // and the link resolves to the switch's bandwidth.
+        for topo in [
+            HostTopology::p4d(),
+            HostTopology::dense(4, 4, 50.0, 12.0),
+            HostTopology::single_gpu(),
+        ] {
+            for g in 0..topo.num_gpus {
+                let sw = topo.switch_of_gpu(g);
+                assert!(sw.hosts_gpu(g), "switch {:?} does not host gpu {g}", sw.id);
+                assert_eq!(topo.link_of_gpu(g), sw.link);
+                assert_eq!(topo.link_capacity(sw.link), sw.bandwidth_gbps);
+                assert!(topo.share_switch(g, g), "share_switch not reflexive");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not attached")]
+    fn switch_of_unknown_gpu_panics() {
+        HostTopology::p4d().switch_of_gpu(8);
+    }
+
+    #[test]
+    fn single_gpu_shape() {
+        let t = HostTopology::single_gpu();
+        assert_eq!(t.num_gpus, 1);
+        assert_eq!(t.switches.len(), 1);
+        assert_eq!(t.numa_nodes.len(), 1);
+        assert_eq!(t.num_links, 2);
+        assert_eq!(t.link_capacity(LinkId(0)), 25.0);
+        assert_eq!(t.link_capacity(LinkId(1)), 8.0);
+        assert_eq!(t.gpus_in_numa(0), vec![0]);
+    }
+
+    #[test]
+    fn dense_links_partition_into_pcie_and_nvme() {
+        // dense(s, g, ..) lays out s PCIe uplinks then s NVMe links;
+        // every id below num_links resolves, and the NUMA GPU sets
+        // partition the GPUs exactly once.
+        let t = HostTopology::dense(3, 4, 40.0, 10.0);
+        assert_eq!(t.num_links, 6);
+        for s in 0..3 {
+            assert_eq!(t.link_capacity(LinkId(s)), 40.0);
+            assert_eq!(t.link_capacity(LinkId(3 + s)), 10.0);
+        }
+        let mut all: Vec<usize> = (0..3).flat_map(|n| t.gpus_in_numa(n)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn dense_shape() {
         let t = HostTopology::dense(2, 8, 64.0, 16.0);
         assert_eq!(t.num_gpus, 16);

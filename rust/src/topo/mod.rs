@@ -5,8 +5,10 @@
 //! domain. The controller's placement heuristic (§2.2.1) queries this
 //! model the way the real controller queries DCGM/NVML/`lspci`/NUMA maps.
 
+pub mod cluster;
 pub mod pcie;
 pub mod host;
 
+pub use cluster::{ClusterTopology, NetLinkId};
 pub use host::{HostTopology, NumaNodeId};
 pub use pcie::{LinkId, PcieSwitch, SwitchId};

@@ -321,6 +321,50 @@ pub fn chrome_trace(events: &[(f64, TraceEvent)], tenant_names: &[String], horiz
                     Json::obj(vec![("attempt", Json::Num(attempt as f64))]),
                 ));
             }
+            TraceEvent::Collective {
+                tenant,
+                round,
+                begin,
+            } => {
+                let tid = tenant_tid(tenant);
+                lanes.entry(tid).or_insert_with(|| tenant_label(tenant));
+                if begin {
+                    open.entry(tid).or_default().push("allreduce");
+                    body.push(record(
+                        Json::Str("allreduce".to_string()),
+                        "B",
+                        ts,
+                        tid,
+                        "collective",
+                        Json::obj(vec![("round", Json::Num(round as f64))]),
+                    ));
+                } else if pop_span(&mut open, tid, "allreduce") {
+                    body.push(record(
+                        Json::Str("allreduce".to_string()),
+                        "E",
+                        ts,
+                        tid,
+                        "collective",
+                        Json::obj(vec![("round", Json::Num(round as f64))]),
+                    ));
+                }
+            }
+            TraceEvent::NetLinkSignal {
+                link,
+                gbps,
+                utilization,
+            } => {
+                lanes.entry(TID_FABRIC).or_insert_with(|| "fabric".to_string());
+                body.push(counter(
+                    &format!("netlink{link}"),
+                    ts,
+                    TID_FABRIC,
+                    Json::obj(vec![
+                        ("gbps", Json::Num(gbps)),
+                        ("util", Json::Num(utilization)),
+                    ]),
+                ));
+            }
         }
     }
 
@@ -539,6 +583,30 @@ fn event_json(t: f64, ev: TraceEvent) -> Json {
                 ("kind", Json::Str(kind.as_str().to_string())),
             ],
         ),
+        TraceEvent::Collective {
+            tenant,
+            round,
+            begin,
+        } => base(
+            "collective",
+            vec![
+                ("tenant", Json::Num(tenant as f64)),
+                ("round", Json::Num(round as f64)),
+                ("begin", Json::Bool(begin)),
+            ],
+        ),
+        TraceEvent::NetLinkSignal {
+            link,
+            gbps,
+            utilization,
+        } => base(
+            "net_link_signal",
+            vec![
+                ("link", Json::Num(link as f64)),
+                ("gbps", Json::Num(gbps)),
+                ("util", Json::Num(utilization)),
+            ],
+        ),
     }
 }
 
@@ -661,6 +729,48 @@ mod tests {
         assert_eq!(p99.at(&["args", "value"]).as_f64(), Some(12.0));
         // µs timestamps.
         assert_eq!(p99.get("ts").as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn collective_spans_balance_and_net_links_render_as_counters() {
+        let events = vec![
+            (1.0, TraceEvent::Collective { tenant: 2, round: 0, begin: true }),
+            (
+                1.5,
+                TraceEvent::NetLinkSignal { link: 7, gbps: 12.5, utilization: 1.0 },
+            ),
+            (2.0, TraceEvent::Collective { tenant: 2, round: 0, begin: false }),
+        ];
+        let doc = chrome_trace(&events, &[], 10.0);
+        let mut depth = 0i64;
+        for (ph, tid, _) in shape(&doc) {
+            if tid == tenant_tid(2) {
+                match ph.as_str() {
+                    "B" => depth += 1,
+                    "E" => depth -= 1,
+                    _ => {}
+                }
+                assert!(depth >= 0);
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced allreduce span");
+        let evs = doc.get("traceEvents").as_arr().unwrap();
+        let net = evs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("netlink7"))
+            .expect("net link counter rendered");
+        assert_eq!(net.at(&["args", "gbps"]).as_f64(), Some(12.5));
+        // JSONL keeps full fidelity for both variants.
+        let lines: Vec<Json> = jsonl(&events)
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert!(lines
+            .iter()
+            .any(|j| j.get("event").as_str() == Some("collective")));
+        assert!(lines
+            .iter()
+            .any(|j| j.get("event").as_str() == Some("net_link_signal")));
     }
 
     #[test]

@@ -234,6 +234,16 @@ pub enum TraceEvent {
         attempt: u8,
         kind: DecisionKind,
     },
+    /// Ring-allreduce round span edge for a cross-host trainer: `begin`
+    /// when round `round` launches its first ring step, `!begin` when
+    /// its last segment drains. The differential oracle measures
+    /// allreduce wall time from these spans.
+    Collective { tenant: u32, round: u32, begin: bool },
+    /// Per-Δ throughput/utilization sample for one cluster net link —
+    /// the net twin of [`TraceEvent::LinkSignal`]. Observability only:
+    /// these never enter `SignalSnapshot`, so the controller cannot see
+    /// this contention domain.
+    NetLinkSignal { link: u32, gbps: f64, utilization: f64 },
 }
 
 #[cfg(test)]

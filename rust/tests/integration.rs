@@ -732,6 +732,145 @@ fn ttft_objective_controller_holds_the_ttft_tail() {
     assert!(fp > 0.0 && np > 0.0);
 }
 
+// --- cluster fabric acceptance ------------------------------------------------
+
+/// The headline differential oracle for the cluster-fabric tentpole: a
+/// lone 4-host ring trainer on an otherwise-idle fat-tree. Every ring
+/// step's four segments are link-disjoint (deterministic ECMP hashes
+/// all four cross-leaf hops onto spine 1), so each segment water-fills
+/// to exactly the 12.5 GB/s NIC/trunk bottleneck and every ring step
+/// lasts exactly `segment_gb / 12.5` seconds. The simulated allreduce
+/// end time must match the closed form **bitwise**: folding
+/// `t += seg_s` from the recorded begin timestamp — one addition per
+/// ring step, the same arithmetic the event loop performs — lands on
+/// the recorded end timestamp's exact bits.
+#[test]
+fn ring_allreduce_matches_closed_form_bitwise() {
+    use predserve::gpu::MigProfile;
+    use predserve::platform::ScenarioBuilder;
+    use predserve::tenants::{
+        CollectiveSpec, CompSpec, InterferenceSchedule, LsSpec, PlacementSpec, TenantWorkload,
+    };
+    use predserve::topo::ClusterTopology;
+    use predserve::trace::TraceEvent;
+
+    let horizon = 60.0;
+    let ring = CollectiveSpec::ring(vec![0, 2, 4, 6], 2.0, 1);
+    let sc = ScenarioBuilder::new("allreduce_oracle", 5)
+        .levers(Levers::none())
+        .horizon(horizon)
+        .sample_dt(1e9) // no mid-run sampling: nothing chunks the drain
+        .epsilon_sigma(0.0)
+        .cluster(ClusterTopology::fat_tree(4))
+        .tenant(TenantWorkload::latency_sensitive(
+            "oracle-ls",
+            LsSpec::default(),
+            PlacementSpec::dedicated_at(0, MigProfile::P4g40gb, 0),
+        ))
+        .tenant(TenantWorkload::collective(
+            "oracle-ring",
+            CompSpec::default(),
+            ring.clone(),
+            InterferenceSchedule::always_on(horizon),
+            PlacementSpec::dedicated_at(2, MigProfile::P3g40gb, 0),
+        ))
+        .build();
+    let mut w = SimWorld::new(sc);
+    w.enable_recording(predserve::trace::recorder::DEFAULT_CAPACITY);
+    let (r, rec) = w.run_recorded();
+    let rec = rec.expect("recording was enabled");
+
+    // The idle-fabric bottleneck: NIC and fat-tree trunk both run at
+    // 12.5 GB/s; host uplinks at 25 never bind.
+    let bottleneck = 12.5;
+    let seg_s = ring.segment_gb() / bottleneck;
+    let ideal = ring.ideal_allreduce_s(bottleneck);
+    let mut begun: Option<f64> = None;
+    let mut spans = 0usize;
+    for &(t, e) in rec.events() {
+        let TraceEvent::Collective { begin, .. } = e else { continue };
+        if begin {
+            assert!(begun.is_none(), "nested allreduce spans for one trainer");
+            begun = Some(t);
+        } else {
+            let t0 = begun.take().expect("end span without a begin");
+            // Fold the expected end from the begin timestamp with the
+            // event loop's own arithmetic: each ring step completes at
+            // `prev + seg_s`, one f64 addition per step. (Comparing
+            // durations would NOT be bitwise: (t0+s)+s-t0 != s+s.)
+            let mut expect = t0;
+            for _ in 0..ring.ring_steps() {
+                expect += seg_s;
+            }
+            assert_eq!(
+                t.to_bits(),
+                expect.to_bits(),
+                "allreduce end {t} != closed form {expect} (begin {t0})"
+            );
+            // And the algebraic sanity check: 2(N-1)/N * bytes / rate.
+            assert!(
+                ((t - t0) - ideal).abs() < 1e-9,
+                "allreduce took {} s, closed form says {ideal} s",
+                t - t0
+            );
+            spans += 1;
+        }
+    }
+    assert!(
+        spans >= 3,
+        "only {spans} completed allreduces in {horizon} s — oracle is vacuous"
+    );
+    // The trainer made progress and the fabric banked its bytes.
+    let trainer = r.per_tenant.iter().find(|t| t.name == "oracle-ring").unwrap();
+    assert!(trainer.completed > 0, "trainer finished no steps");
+    assert!(r.net_link_gb.iter().sum::<f64>() > 0.0, "no net bytes moved");
+}
+
+/// Acceptance for the two cluster catalog entries: both run end to end
+/// at a real horizon, their ring trainers make progress, and the whole
+/// run — including the per-net-link ledger — replays bit-identically
+/// across repeats and across engine shard counts.
+#[test]
+fn cluster_catalog_entries_run_end_to_end_deterministically() {
+    use predserve::tenants::TenantKind;
+    for name in ["fat_tree_allreduce_mix", "spine_hotspot"] {
+        let mk = |shards: usize| {
+            let mut s = Scenario::by_name(name, 7, Levers::full()).unwrap();
+            s.horizon = 150.0;
+            s.shards = shards;
+            SimWorld::new(s).run()
+        };
+        let r = mk(1);
+        assert!(r.completed > 1_000, "{name}: only {} completed", r.completed);
+        assert!(!r.net_link_gb.is_empty(), "{name}: no net-link ledger");
+        assert!(
+            r.net_link_gb.iter().sum::<f64>() > 0.0,
+            "{name}: rings moved no net bytes"
+        );
+        for t in &r.per_tenant {
+            if t.kind == TenantKind::ComputeHeavy && t.name.starts_with("ring") {
+                assert!(t.completed > 0, "{name}/{}: ring trainer stalled", t.name);
+                assert!(t.gb_moved > 0.0, "{name}/{}: no sync traffic", t.name);
+            }
+        }
+        // Bitwise-stable across repeats, net ledger included.
+        let r2 = mk(1);
+        assert_eq!(r.fingerprint(), r2.fingerprint(), "{name}: nondeterministic");
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&r.net_link_gb), bits(&r2.net_link_gb), "{name}: net GB drifted");
+        assert_eq!(bits(&r.net_link_util), bits(&r2.net_link_util), "{name}");
+        // And across engines: the sharded run (net events ride the
+        // coordinator shard) is byte-identical to the single queue.
+        let sharded = mk(4);
+        assert_eq!(
+            r.fingerprint(),
+            sharded.fingerprint(),
+            "{name}: 4 shards changed observable behavior"
+        );
+        assert_eq!(bits(&r.net_link_gb), bits(&sharded.net_link_gb), "{name}");
+    }
+}
+
 #[test]
 fn rollback_restores_on_regression() {
     // Force a pathological placement weight so the first move is bad:

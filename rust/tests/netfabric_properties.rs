@@ -1,0 +1,281 @@
+//! Conservation properties of the cluster net fabric: the water-filled
+//! rate vector never over-subscribes a link, bytes drained by `advance`
+//! land in the per-link counters exactly once, and a simulated ring
+//! allreduce moves byte-for-byte symmetric traffic through every
+//! participant's NIC (what a host sends around the ring it also
+//! receives).
+
+use predserve::controller::Levers;
+use predserve::fabric::{FlowId, NetReferenceFabric};
+use predserve::platform::{Scenario, SimWorld};
+use predserve::topo::{ClusterTopology, NetLinkId};
+use predserve::util::proptest_lite::{check, Config};
+use predserve::util::rng::Pcg64;
+
+/// A generated multi-hop flow schedule: starts, removals and advances
+/// over one of the two shipped topologies.
+#[derive(Clone, Debug)]
+enum Op {
+    Start {
+        from: usize,
+        to: usize,
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+    },
+    Remove { pick: usize },
+    Advance { dt: f64 },
+}
+
+fn gen_schedule(rng: &mut Pcg64) -> (bool, Vec<Op>) {
+    let fat = rng.chance(0.5);
+    let hosts = if fat { 8u64 } else { 4 };
+    let n = 15 + rng.below(80) as usize;
+    let ops = (0..n)
+        .map(|_| match rng.below(10) {
+            0..=4 => {
+                let from = rng.below(hosts) as usize;
+                let mut to = rng.below(hosts) as usize;
+                if to == from {
+                    to = (to + 1) % hosts as usize;
+                }
+                Op::Start {
+                    from,
+                    to,
+                    gb: rng.range_f64(0.05, 10.0),
+                    weight: rng.range_f64(0.1, 4.0),
+                    cap: rng.chance(0.3).then(|| rng.range_f64(0.2, 8.0)),
+                }
+            }
+            5 | 6 => Op::Remove {
+                pick: rng.below(1 << 16) as usize,
+            },
+            _ => Op::Advance {
+                dt: rng.range_f64(1e-3, 1.5),
+            },
+        })
+        .collect();
+    (fat, ops)
+}
+
+fn topology(fat: bool) -> ClusterTopology {
+    if fat {
+        ClusterTopology::fat_tree(4)
+    } else {
+        ClusterTopology::leaf_spine(2, 2, 2)
+    }
+}
+
+#[test]
+fn prop_net_rates_never_oversubscribe_a_link() {
+    // At every point of a random schedule: each flow's water-filled rate
+    // is non-negative and within its cap, and the rates of the flows
+    // crossing any one link sum to at most that link's capacity.
+    check(
+        Config { cases: 128, seed: 0x72 },
+        "net link conservation",
+        gen_schedule,
+        |(fat, schedule)| {
+            let cluster = topology(*fat);
+            let mut fab = NetReferenceFabric::new(&cluster);
+            // Paths by flow id, tracked test-side (the fabric keeps its
+            // representation private).
+            let mut paths: std::collections::BTreeMap<FlowId, Vec<NetLinkId>> =
+                std::collections::BTreeMap::new();
+            let mut caps: std::collections::BTreeMap<FlowId, Option<f64>> =
+                std::collections::BTreeMap::new();
+            let mut live: Vec<FlowId> = Vec::new();
+            for (step, op) in schedule.iter().enumerate() {
+                match *op {
+                    Op::Start {
+                        from,
+                        to,
+                        gb,
+                        weight,
+                        cap,
+                    } => {
+                        let path = cluster.route(from, to);
+                        let id = fab.start(&path, gb, weight, cap, 0);
+                        paths.insert(id, path);
+                        caps.insert(id, cap);
+                        live.push(id);
+                    }
+                    Op::Remove { pick } => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let id = live.swap_remove(pick % live.len());
+                        fab.remove(id);
+                        paths.remove(&id);
+                        caps.remove(&id);
+                    }
+                    Op::Advance { dt } => fab.advance(dt),
+                }
+                let rates = fab.rates();
+                let mut per_link = vec![0.0f64; cluster.num_net_links];
+                for (id, r) in &rates {
+                    if *r < -1e-12 {
+                        return Err(format!("step {step}: negative rate {r}"));
+                    }
+                    if let Some(Some(c)) = caps.get(id) {
+                        if *r > c + 1e-9 {
+                            return Err(format!("step {step}: rate {r} > cap {c}"));
+                        }
+                    }
+                    for l in &paths[id] {
+                        per_link[l.0] += r;
+                    }
+                }
+                for (l, total) in per_link.iter().enumerate() {
+                    let capacity = fab.capacity(NetLinkId(l));
+                    if *total > capacity + 1e-9 {
+                        return Err(format!(
+                            "step {step}: net link {l} carries {total} > capacity {capacity}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_net_advance_banks_drained_bytes_exactly_once() {
+    // Byte conservation across `advance`: for every link, the counter's
+    // `gb_total` equals the sum over flows that crossed it of the bytes
+    // that flow has drained (initial GB minus remaining, with removed
+    // flows contributing their final drained total). A flow crossing k
+    // links banks its bytes on all k — never twice on one.
+    check(
+        Config { cases: 96, seed: 0x73 },
+        "net byte conservation",
+        gen_schedule,
+        |(fat, schedule)| {
+            let cluster = topology(*fat);
+            let mut fab = NetReferenceFabric::new(&cluster);
+            let mut flows: std::collections::BTreeMap<FlowId, (Vec<NetLinkId>, f64)> =
+                std::collections::BTreeMap::new();
+            let mut retired: Vec<(Vec<NetLinkId>, f64)> = Vec::new();
+            let mut live: Vec<FlowId> = Vec::new();
+            for op in schedule {
+                match *op {
+                    Op::Start {
+                        from,
+                        to,
+                        gb,
+                        weight,
+                        cap,
+                    } => {
+                        let path = cluster.route(from, to);
+                        let id = fab.start(&path, gb, weight, cap, 0);
+                        flows.insert(id, (path, gb));
+                        live.push(id);
+                    }
+                    Op::Remove { pick } => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let id = live.swap_remove(pick % live.len());
+                        let (path, gb) = flows.remove(&id).expect("tracked flow");
+                        let moved = gb - fab.remaining(id).expect("live flow");
+                        fab.remove(id);
+                        retired.push((path, moved));
+                    }
+                    Op::Advance { dt } => fab.advance(dt),
+                }
+            }
+            let mut expected = vec![0.0f64; cluster.num_net_links];
+            for (path, moved) in &retired {
+                for l in path {
+                    expected[l.0] += moved;
+                }
+            }
+            for (id, (path, gb)) in &flows {
+                let moved = gb - fab.remaining(*id).expect("live flow");
+                for l in path {
+                    expected[l.0] += moved;
+                }
+            }
+            for l in 0..cluster.num_net_links {
+                let got = fab.counters(NetLinkId(l)).gb_total;
+                if (got - expected[l]).abs() > 1e-6 {
+                    return Err(format!(
+                        "net link {l}: counter {got} GB != drained {} GB",
+                        expected[l]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simulated_runs_keep_net_links_within_capacity() {
+    // End-to-end conservation: over a full simulated run of both cluster
+    // catalog entries, no net link's mean utilization exceeds 1 and no
+    // link carries more than capacity x horizon bytes.
+    for name in ["fat_tree_allreduce_mix", "spine_hotspot"] {
+        let mut s = Scenario::by_name(name, 11, Levers::full()).unwrap();
+        s.horizon = 150.0;
+        let cluster = s.cluster.clone().expect("cluster scenario");
+        let r = SimWorld::new(s).run();
+        assert_eq!(r.net_link_gb.len(), cluster.num_net_links, "{name}");
+        for l in 0..cluster.num_net_links {
+            let util = r.net_link_util[l];
+            assert!(
+                (0.0..=1.0 + 1e-9).contains(&util),
+                "{name}: net link {l} mean utilization {util} out of range"
+            );
+            let ceiling = cluster.capacity(NetLinkId(l)) * r.horizon_s;
+            assert!(
+                r.net_link_gb[l] <= ceiling * (1.0 + 1e-9),
+                "{name}: net link {l} moved {} GB > {ceiling} GB ceiling",
+                r.net_link_gb[l]
+            );
+        }
+    }
+}
+
+#[test]
+fn ring_participants_send_and_receive_the_same_bytes() {
+    // Ring-segment byte conservation: in a ring allreduce every
+    // participant forwards exactly one segment per ring step and
+    // receives exactly one, so over any run each participant's NIC
+    // egress total equals its NIC ingress total — and both are strictly
+    // positive for an always-on trainer. Non-participant hosts stay
+    // silent.
+    let mut s = Scenario::by_name("spine_hotspot", 11, Levers::full()).unwrap();
+    s.horizon = 150.0;
+    let cluster = s.cluster.clone().expect("cluster scenario");
+    let r = SimWorld::new(s).run();
+    let participants = [0usize, 1, 2, 3]; // ring-even: 0<->2, ring-odd: 1<->3
+    for h in participants {
+        let tx = r.net_link_gb[cluster.nic_tx(h).0];
+        let rx = r.net_link_gb[cluster.nic_rx(h).0];
+        assert!(tx > 0.0, "host {h} sent nothing around its ring");
+        assert!(
+            (tx - rx).abs() <= 1e-6 * tx.max(1.0),
+            "host {h}: NIC egress {tx} GB != ingress {rx} GB"
+        );
+    }
+    // Trunk conservation: everything the participants pushed cross-leaf
+    // went through spine 1's four trunks (deterministic ECMP hashes both
+    // rings there), and spine 0 carried nothing.
+    let spine_gb = |sp: usize| -> f64 {
+        (0..cluster.leaves)
+            .map(|l| r.net_link_gb[cluster.up(l, sp).0] + r.net_link_gb[cluster.down(sp, l).0])
+            .sum()
+    };
+    assert_eq!(spine_gb(0), 0.0, "spine 0 should be idle under ECMP");
+    let tx_total: f64 = participants.iter().map(|&h| r.net_link_gb[cluster.nic_tx(h).0]).sum();
+    // Every segment here is cross-leaf, so each NIC byte crosses one up
+    // trunk and one down trunk: the spine total is exactly twice the
+    // NIC egress total.
+    assert!(
+        (spine_gb(1) - 2.0 * tx_total).abs() <= 1e-6 * tx_total.max(1.0),
+        "spine 1 carried {} GB but NICs sent {tx_total} GB",
+        spine_gb(1)
+    );
+}

@@ -2,9 +2,11 @@
 //! invariants: PS conservation, KV-cache state, batcher bookkeeping,
 //! MIG legality, upgrade-chain termination, event ordering, the
 //! N-tenant scenario engine (same seed ⇒ identical `RunResult`;
-//! identical interference schedules across lever settings), and the
+//! identical interference schedules across lever settings), the
 //! auto-placement allocator (deterministic layouts, no double-booked
-//! slices, link-headroom admission respected).
+//! slices, link-headroom admission respected), and the cluster net
+//! fabric (idle-topology bit-compat; incremental-vs-reference
+//! differential, bitwise).
 
 use predserve::alloc::{AutoRequest, FleetAllocator, HostAllocator, SlotOutcome};
 use predserve::controller::{ControllerConfig, Levers};
@@ -1574,6 +1576,321 @@ fn catalog_fingerprints_unchanged_by_empty_fault_plan() {
             }
         }
     }
+}
+
+// --- cluster net fabric properties -------------------------------------------
+
+/// Pre-cluster catalog entries: everything except the two new
+/// cluster-fabric scenarios (which are the only entries that attach a
+/// `ClusterTopology`).
+fn pre_cluster_catalog() -> Vec<&'static str> {
+    Scenario::CATALOG
+        .iter()
+        .copied()
+        .filter(|n| *n != "fat_tree_allreduce_mix" && *n != "spine_hotspot")
+        .collect()
+}
+
+#[test]
+fn catalog_fingerprints_unchanged_by_cluster_fabric() {
+    // Bit-compat contract of the cluster-fabric integration: every
+    // pre-existing catalog entry ships with `cluster: None` and runs
+    // byte-identically whether or not a `ClusterTopology` is bolted on
+    // after the fact (no tenant carries a `CollectiveSpec`, so the net
+    // fabric exists but never sees a flow) — on both the single-queue
+    // and the 4-shard engine. The attached run must also report an
+    // all-zero net-link ledger of the topology's exact size.
+    use predserve::topo::ClusterTopology;
+    for name in pre_cluster_catalog() {
+        for shards in [1usize, 4] {
+            let mk = |attach: bool| {
+                let mut s = Scenario::by_name(name, 23, Levers::full()).unwrap();
+                assert!(s.cluster.is_none(), "{name}: pre-cluster entry grew a topology");
+                s.horizon = 60.0;
+                s.shards = shards;
+                if attach {
+                    s.cluster = Some(ClusterTopology::fat_tree(4));
+                }
+                SimWorld::new(s).run()
+            };
+            let plain = mk(false);
+            let attached = mk(true);
+            assert_eq!(
+                plain.fingerprint(),
+                attached.fingerprint(),
+                "{name} shards={shards}: an idle cluster fabric perturbed the run"
+            );
+            assert_eq!(
+                plain.sim_events, attached.sim_events,
+                "{name} shards={shards}: the net fabric changed the event stream"
+            );
+            assert!(plain.net_link_gb.is_empty(), "{name}: cluster-free run has net links");
+            assert!(plain.net_link_util.is_empty(), "{name}");
+            let n_links = ClusterTopology::fat_tree(4).num_net_links;
+            assert_eq!(attached.net_link_gb.len(), n_links, "{name}");
+            assert!(
+                attached.net_link_gb.iter().all(|&gb| gb == 0.0),
+                "{name}: ringless tenants moved bytes over the net fabric"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_no_cluster_topology_is_byte_identical() {
+    // The randomized twin of the catalog regression: for arbitrary
+    // generated scenarios (none of which carry ring trainers), attaching
+    // a cluster topology never perturbs the run — the legacy path takes
+    // zero new branches when `cluster` is `None`, and an idle net fabric
+    // consumes no RNG and schedules no events when it is `Some`.
+    use predserve::topo::ClusterTopology;
+    check(
+        Config { cases: 8, seed: 0x70 },
+        "idle cluster bit-compat",
+        gen_scenario,
+        |spec| {
+            let lv = levers_of(spec.levers);
+            for shards in [1usize, 4] {
+                let mk = |attach: bool| {
+                    let mut s = build_gen(spec, lv);
+                    s.shards = shards;
+                    if attach {
+                        s.cluster = Some(ClusterTopology::leaf_spine(2, 2, 2));
+                    }
+                    SimWorld::new(s).run()
+                };
+                let plain = mk(false);
+                let attached = mk(true);
+                if plain.fingerprint() != attached.fingerprint() {
+                    return Err(format!(
+                        "shards={shards}: idle cluster fabric perturbed the run:\n  {}\n  {}",
+                        plain.fingerprint(),
+                        attached.fingerprint()
+                    ));
+                }
+                if plain.sim_events != attached.sim_events {
+                    return Err(format!(
+                        "shards={shards}: event counts {} vs {}",
+                        plain.sim_events, attached.sim_events
+                    ));
+                }
+                if !attached.net_link_gb.iter().all(|&gb| gb == 0.0) {
+                    return Err("ringless run moved net bytes".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One mutation/query step of a generated multi-hop net-flow schedule.
+#[derive(Clone, Debug)]
+enum NetOp {
+    Start {
+        from: usize,
+        to: usize,
+        gb: f64,
+        weight: f64,
+        cap: Option<f64>,
+        owner: usize,
+    },
+    Remove { pick: usize },
+    SetOwnerCap { owner: usize, cap: Option<f64> },
+    SetLinkCapacity { link: usize, gbps: f64 },
+    Advance { dt: f64 },
+    CompleteEarliest,
+}
+
+fn gen_net_schedule(rng: &mut Pcg64) -> (bool, Vec<NetOp>) {
+    let fat = rng.chance(0.5); // fat_tree(4) vs leaf_spine(2,2,2)
+    let hosts = if fat { 8 } else { 4 };
+    let links = if fat { 48 } else { 24 };
+    let n = 20 + rng.below(100) as usize;
+    let ops = (0..n)
+        .map(|_| match rng.below(12) {
+            0..=4 => {
+                let from = rng.below(hosts) as usize;
+                let mut to = rng.below(hosts) as usize;
+                if to == from {
+                    to = (to + 1) % hosts as usize;
+                }
+                NetOp::Start {
+                    from,
+                    to,
+                    gb: rng.range_f64(0.01, 20.0),
+                    weight: rng.range_f64(0.1, 4.0),
+                    cap: rng.chance(0.4).then(|| rng.range_f64(0.2, 12.0)),
+                    owner: rng.below(6) as usize,
+                }
+            }
+            5 | 6 => NetOp::Remove {
+                pick: rng.below(1 << 16) as usize,
+            },
+            7 => NetOp::SetOwnerCap {
+                owner: rng.below(6) as usize,
+                cap: rng.chance(0.6).then(|| rng.range_f64(0.2, 10.0)),
+            },
+            8 => NetOp::SetLinkCapacity {
+                link: rng.below(links) as usize,
+                gbps: rng.range_f64(1.0, 30.0),
+            },
+            9 | 10 => NetOp::Advance {
+                dt: rng.range_f64(1e-4, 2.0),
+            },
+            _ => NetOp::CompleteEarliest,
+        })
+        .collect();
+    (fat, ops)
+}
+
+/// Bit-exact comparison of every observable the two net engines share.
+/// `rate_recomputes` is deliberately NOT compared: the incremental
+/// engine re-solves dirty connected components, the reference re-solves
+/// the world — the counters measure different work by design.
+fn assert_net_fabrics_identical(
+    inc: &mut predserve::fabric::NetFabric,
+    refr: &predserve::fabric::NetReferenceFabric,
+    live: &[FlowId],
+    step: usize,
+) -> Result<(), String> {
+    use predserve::topo::NetLinkId;
+    if inc.active_flows() != refr.active_flows() {
+        return Err(format!(
+            "step {step}: flow counts {} vs {}",
+            inc.active_flows(),
+            refr.active_flows()
+        ));
+    }
+    match (inc.next_completion(), refr.next_completion()) {
+        (None, None) => {}
+        (Some((da, ia)), Some((db, ib))) => {
+            if da.to_bits() != db.to_bits() || ia != ib {
+                return Err(format!(
+                    "step {step}: completion ({da}, {ia:?}) vs ({db}, {ib:?})"
+                ));
+            }
+        }
+        (a, b) => return Err(format!("step {step}: completion {a:?} vs {b:?}")),
+    }
+    for l in 0..inc.num_links() {
+        let link = NetLinkId(l);
+        let (ca, cb) = (inc.counters(link), refr.counters(link));
+        if ca.gb_total.to_bits() != cb.gb_total.to_bits()
+            || ca.util_integral.to_bits() != cb.util_integral.to_bits()
+        {
+            return Err(format!("step {step}: counters on net link {l} diverged"));
+        }
+        if inc.capacity(link).to_bits() != refr.capacity(link).to_bits() {
+            return Err(format!("step {step}: capacity of net link {l} diverged"));
+        }
+    }
+    for owner in 0..8 {
+        if inc.owner_gb(owner).to_bits() != refr.owner_gb(owner).to_bits() {
+            return Err(format!("step {step}: owner_gb({owner}) diverged"));
+        }
+    }
+    for id in live {
+        if inc.remaining(*id).map(f64::to_bits) != refr.remaining(*id).map(f64::to_bits) {
+            return Err(format!("step {step}: remaining({id:?}) diverged"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_net_fabric_incremental_matches_reference_bitwise() {
+    // The cluster tentpole's core contract, mirroring the PCIe fabric
+    // oracle above: over random multi-hop start/remove/cap/advance
+    // schedules on both shipped topologies, the incremental
+    // per-component net engine and the from-scratch reference solver
+    // expose identical completion picks, per-link counters, capacities,
+    // owner attribution, and remaining bytes — to the bit.
+    use predserve::fabric::{NetFabric, NetReferenceFabric};
+    use predserve::topo::ClusterTopology;
+    check(
+        Config { cases: 128, seed: 0x71 },
+        "net fabric differential",
+        gen_net_schedule,
+        |(fat, schedule)| {
+            let cluster = if *fat {
+                ClusterTopology::fat_tree(4)
+            } else {
+                ClusterTopology::leaf_spine(2, 2, 2)
+            };
+            let mut inc = NetFabric::new(&cluster);
+            let mut refr = NetReferenceFabric::new(&cluster);
+            let mut live: Vec<FlowId> = Vec::new();
+            for (step, op) in schedule.iter().enumerate() {
+                match *op {
+                    NetOp::Start {
+                        from,
+                        to,
+                        gb,
+                        weight,
+                        cap,
+                        owner,
+                    } => {
+                        let path = cluster.route(from, to);
+                        let a = inc.start(&path, gb, weight, cap, owner);
+                        let b = refr.start(&path, gb, weight, cap, owner);
+                        if a != b {
+                            return Err(format!("step {step}: ids diverged {a:?} vs {b:?}"));
+                        }
+                        live.push(a);
+                    }
+                    NetOp::Remove { pick } => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let id = live.swap_remove(pick % live.len());
+                        inc.remove(id);
+                        refr.remove(id);
+                    }
+                    NetOp::SetOwnerCap { owner, cap } => {
+                        inc.set_owner_cap(owner, cap);
+                        refr.set_owner_cap(owner, cap);
+                    }
+                    NetOp::SetLinkCapacity { link, gbps } => {
+                        let l = predserve::topo::NetLinkId(link);
+                        inc.set_link_capacity(l, gbps);
+                        refr.set_link_capacity(l, gbps);
+                    }
+                    NetOp::Advance { dt } => {
+                        inc.advance(dt);
+                        refr.advance(dt);
+                    }
+                    NetOp::CompleteEarliest => {
+                        let a = inc.next_completion();
+                        let b = refr.next_completion();
+                        let same = match (a, b) {
+                            (None, None) => true,
+                            (Some((da, ia)), Some((db, ib))) => {
+                                da.to_bits() == db.to_bits() && ia == ib
+                            }
+                            _ => false,
+                        };
+                        if !same {
+                            return Err(format!("step {step}: completion {a:?} vs {b:?}"));
+                        }
+                        let Some((dt, id)) = a else { continue };
+                        inc.advance(dt);
+                        refr.advance(dt);
+                        inc.remove(id);
+                        refr.remove(id);
+                        live.retain(|&x| x != id);
+                    }
+                }
+                // Checkpoint every third step (plus the last) so the
+                // incremental engine's internal dirty-component solve
+                // path actually runs between checks — same rationale as
+                // the PCIe differential above.
+                if step % 3 == 2 || step + 1 == schedule.len() {
+                    assert_net_fabrics_identical(&mut inc, &refr, &live, step)?;
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
